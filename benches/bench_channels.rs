@@ -1,0 +1,56 @@
+//! Table 1 + channel-simulator microbench: prints the energy table, verifies
+//! sampled means, and times the hot channel-simulation operations.
+
+use lgc::bench::{bench_auto, Table};
+use lgc::channels::{ChannelType, DeviceChannels, Link};
+use lgc::util::Rng;
+
+fn main() {
+    println!("== Table 1: energy consumption per communication channel ==\n");
+    let mut table = Table::new(&[
+        "Channel Type",
+        "Mean (J/MB)",
+        "Std Dev",
+        "sampled mean (J/MB, n=20k)",
+        "$/MB",
+        "MB/s (good)",
+    ]);
+    for ty in [ChannelType::G3, ChannelType::G4, ChannelType::G5] {
+        let rng = Rng::new(42);
+        let mut link = Link::new(ty, &rng, ty as u64);
+        let n = 20_000;
+        let mb = 1024 * 1024;
+        let mean = (0..n).map(|_| link.transfer(mb).energy_j).sum::<f64>() / n as f64;
+        table.row(&[
+            ty.name().to_string(),
+            format!("{:.1}", ty.energy_mean_j_per_mb()),
+            format!("{}", lgc::channels::ENERGY_SIGMA),
+            format!("{mean:.2}"),
+            format!("{:.3}", ty.money_per_mb()),
+            format!("{:.2}", ty.bandwidth_mb_s()),
+        ]);
+    }
+    table.print();
+
+    println!("\n== channel simulator microbenches ==");
+    let rng = Rng::new(1);
+    let mut ch = DeviceChannels::new(
+        &[ChannelType::G5, ChannelType::G4, ChannelType::G3],
+        &rng,
+        0,
+    );
+    let r = bench_auto("parallel_upload (3 channels, 1MB each)", 50.0, || {
+        std::hint::black_box(ch.parallel_upload(&[1 << 20, 1 << 20, 1 << 20]));
+    });
+    r.report("");
+    let mut ch2 = ch.clone();
+    let r = bench_auto("fading step_round (3 links)", 50.0, || {
+        ch2.step_round();
+    });
+    r.report("");
+    let link = ch.links[0].clone();
+    let r = bench_auto("expected_cost", 50.0, || {
+        std::hint::black_box(link.expected_cost(1 << 20));
+    });
+    r.report("");
+}

@@ -1,0 +1,96 @@
+//! Compression microbenches (ablation A2 + perf targets):
+//! - Rust-native `lgc_compress` throughput across D (the L3 hot path);
+//! - sort-based selection baseline (what `select_nth_unstable` replaces);
+//! - wire encode/decode;
+//! - the AOT `lgc_compress` PJRT artifact vs the native path (A2).
+
+use std::path::Path;
+
+use lgc::bench::{bench_auto, Table};
+use lgc::compression::{lgc_compress, lgc_compress_radix, wire, CompressScratch};
+use lgc::runtime::Runtime;
+use lgc::util::Rng;
+
+fn sort_based_topk(u: &[f32], k: usize) -> Vec<(u32, f32)> {
+    // The naive O(D log D) baseline.
+    let mut idx: Vec<u32> = (0..u.len() as u32).collect();
+    idx.sort_by(|&a, &b| u[b as usize].abs().total_cmp(&u[a as usize].abs()));
+    idx[..k].iter().map(|&i| (i, u[i as usize])).collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(7);
+    println!("== compression hot path: native lgc_compress (ks = 1/4/15% of D) ==\n");
+    let mut table = Table::new(&[
+        "D",
+        "hot-path us",
+        "GB/s",
+        "radix-variant us",
+        "sort-baseline us",
+        "speedup",
+    ]);
+    for &d in &[16_384usize, 65_536, 262_144, 1_048_576] {
+        let u: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let ks = [d / 100, d * 4 / 100, d * 15 / 100];
+        let mut scratch = CompressScratch::default();
+        let r = bench_auto(&format!("lgc_compress D={d}"), 120.0, || {
+            std::hint::black_box(lgc_compress(&u, &ks, &mut scratch));
+        });
+        let rp = bench_auto(&format!("radix D={d}"), 120.0, || {
+            std::hint::black_box(lgc_compress_radix(&u, &ks, &mut scratch));
+        });
+        let k_total = ks.iter().sum::<usize>();
+        let rs = bench_auto(&format!("sort-topk D={d}"), 120.0, || {
+            std::hint::black_box(sort_based_topk(&u, k_total));
+        });
+        table.row(&[
+            d.to_string(),
+            format!("{:.1}", r.mean_us()),
+            format!("{:.2}", r.gib_per_s(4 * d)),
+            format!("{:.1}", rp.mean_us()),
+            format!("{:.1}", rs.mean_us()),
+            format!("{:.2}x vs radix, {:.2}x vs sort", rp.mean_ns / r.mean_ns, rs.mean_ns / r.mean_ns),
+        ]);
+    }
+    table.print();
+
+    println!("\n== wire encode/decode ==");
+    let d = 262_144;
+    let u: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+    let upd = lgc_compress(&u, &[d / 20], &mut CompressScratch::default());
+    let r = bench_auto("wire encode (13k entries)", 80.0, || {
+        std::hint::black_box(wire::encode(d, &upd.layers[0]));
+    });
+    r.report(&format!("{:.2} GB/s", r.gib_per_s(upd.layers[0].wire_bytes() as usize)));
+    let chunk = wire::encode(d, &upd.layers[0]);
+    let r = bench_auto("wire decode (13k entries)", 80.0, || {
+        std::hint::black_box(wire::decode(&chunk).unwrap());
+    });
+    r.report(&format!("{:.2} GB/s", r.gib_per_s(chunk.bytes.len())));
+
+    // A2: artifact path vs native path at the artifact's D.
+    if Path::new("artifacts/manifest.toml").exists() {
+        println!("\n== A2 ablation: AOT lgc_compress artifact vs rust-native ==");
+        let rt = Runtime::new(Path::new("artifacts"))?;
+        let exe = rt.load_compress()?;
+        let d = exe.d;
+        let ks = rt.manifest.compress_ks.clone();
+        let u: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let ra = bench_auto(&format!("PJRT artifact D={d}"), 300.0, || {
+            std::hint::black_box(exe.compress(&u).unwrap());
+        });
+        ra.report("");
+        let mut scratch = CompressScratch::default();
+        let rn = bench_auto(&format!("rust native D={d}"), 300.0, || {
+            std::hint::black_box(lgc_compress(&u, &ks, &mut scratch));
+        });
+        rn.report(&format!("native is {:.1}x faster", ra.mean_ns / rn.mean_ns));
+        println!(
+            "\n(the round loop uses the native path; the artifact proves the\n\
+             L1 Pallas kernel semantics match bit-for-bit — see runtime_pjrt tests)"
+        );
+    } else {
+        println!("\n(artifacts not built; skipping the A2 PJRT comparison)");
+    }
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Figure 3 reproduction: LR on MNIST-class data — four panels (eval loss
+//! vs round, accuracy vs round, accuracy under energy budgets, accuracy
+//! under money budgets) for FedAvg vs LGC-without-DRL vs LGC(+DDPG).
+//!
+//! Expected shape (paper Fig. 3): all three track similar accuracy per
+//! round; under energy/money budgets both LGC variants dominate FedAvg, and
+//! LGC+DRL dominates LGC-static.
+//!
+//! `cargo bench --bench bench_fig3_lr_mnist` — uses the PJRT artifacts when
+//! present, otherwise the native LR path (set LGC_FAST=1 to force native).
+
+use std::path::Path;
+
+use lgc::bench::figures;
+use lgc::config::{ExperimentConfig, Mechanism, Workload};
+use lgc::coordinator::{Experiment, LocalTrainer, NativeLrTrainer, PjrtTrainer};
+use lgc::metrics::RunLog;
+use lgc::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Path::new("artifacts/manifest.toml").exists()
+        && std::env::var("LGC_FAST").is_err();
+    let rounds = std::env::var("LGC_ROUNDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60);
+    println!(
+        "== Figure 3: LR on MNIST-class data ({} path, {rounds} rounds, M=3, N=3) ==",
+        if artifacts { "PJRT" } else { "native" }
+    );
+
+    let mut logs: Vec<RunLog> = Vec::new();
+    for mech in [Mechanism::FedAvg, Mechanism::LgcStatic, Mechanism::LgcDrl] {
+        let cfg = ExperimentConfig {
+            mechanism: mech,
+            workload: Workload::LrMnist,
+            rounds,
+            devices: 3,
+            samples_per_device: 1024,
+            eval_samples: 512,
+            eval_every: 5,
+            lr: 0.05,
+            h_fixed: 3,
+            h_max: 6,
+            use_runtime: artifacts,
+            ..ExperimentConfig::default()
+        };
+        let mut trainer: Box<dyn LocalTrainer> = if artifacts {
+            let rt = Runtime::new(Path::new(&cfg.artifacts_dir))?;
+            Box::new(PjrtTrainer::new(&rt, &cfg)?)
+        } else {
+            Box::new(NativeLrTrainer::new(&cfg))
+        };
+        let mut exp = Experiment::new(cfg, trainer.as_ref());
+        let log = exp.run(trainer.as_mut())?;
+        log.write_csv(Path::new(&format!("results/fig3_{}.csv", mech.name())))?;
+        logs.push(log);
+    }
+
+    figures::print_convergence(&logs);
+    figures::print_budget_panel(&logs, 0, &figures::budget_grid(&logs, 0, 8), "J");
+    figures::print_budget_panel(&logs, 1, &figures::budget_grid(&logs, 1, 8), "$");
+    figures::print_cost_to_target(&logs, 0.60);
+    println!("\nCSV series in results/fig3_*.csv");
+    Ok(())
+}

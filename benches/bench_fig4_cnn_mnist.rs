@@ -1,0 +1,55 @@
+//! Figure 4 reproduction: CNN (~207k params) on MNIST-class data — same
+//! four panels as Fig. 3, PJRT path (requires `make artifacts`).
+//!
+//! `cargo bench --bench bench_fig4_cnn_mnist` (LGC_ROUNDS=n to resize).
+
+use std::path::Path;
+
+use lgc::bench::figures;
+use lgc::config::{ExperimentConfig, Mechanism, Workload};
+use lgc::coordinator::{Experiment, PjrtTrainer};
+use lgc::metrics::RunLog;
+use lgc::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    if !Path::new("artifacts/manifest.toml").exists() {
+        println!("Figure 4 needs the CNN artifacts — run `make artifacts` first. Skipping.");
+        return Ok(());
+    }
+    let rounds = std::env::var("LGC_ROUNDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(40);
+    println!("== Figure 4: CNN on MNIST-class data (PJRT, {rounds} rounds, M=3, N=3) ==");
+
+    let mut logs: Vec<RunLog> = Vec::new();
+    for mech in [Mechanism::FedAvg, Mechanism::LgcStatic, Mechanism::LgcDrl] {
+        let cfg = ExperimentConfig {
+            mechanism: mech,
+            workload: Workload::CnnMnist,
+            rounds,
+            devices: 3,
+            samples_per_device: 1024,
+            eval_samples: 256,
+            eval_every: 5,
+            lr: 0.05,
+            h_fixed: 3,
+            h_max: 6,
+            ..ExperimentConfig::default()
+        };
+        let rt = Runtime::new(Path::new(&cfg.artifacts_dir))?;
+        let mut trainer = PjrtTrainer::new(&rt, &cfg)?;
+        let mut exp = Experiment::new(cfg, &trainer);
+        let log = exp.run(&mut trainer)?;
+        log.write_csv(Path::new(&format!("results/fig4_{}.csv", mech.name())))?;
+        println!("  {} done: final acc {:.4}", mech.name(), log.final_acc());
+        logs.push(log);
+    }
+
+    figures::print_convergence(&logs);
+    figures::print_budget_panel(&logs, 0, &figures::budget_grid(&logs, 0, 8), "J");
+    figures::print_budget_panel(&logs, 1, &figures::budget_grid(&logs, 1, 8), "$");
+    figures::print_cost_to_target(&logs, 0.60);
+    println!("\nCSV series in results/fig4_*.csv");
+    Ok(())
+}

@@ -1,0 +1,129 @@
+//! Figure 5 reproduction: DRL training curves — (a) critic loss vs episode,
+//! (b) reward vs episode — while the DDPG agents control LGC on the LR
+//! workload (native path, no artifacts needed).
+//!
+//! Expected shape (paper Fig. 5): loss falls quickly in early episodes;
+//! reward trends upward as the policy improves.
+
+use std::path::Path;
+
+use lgc::bench::Table;
+use lgc::config::{ExperimentConfig, Mechanism, Workload};
+use lgc::coordinator::{Experiment, NativeLrTrainer};
+use lgc::drl::Transition;
+
+fn main() -> anyhow::Result<()> {
+    let episodes: usize = std::env::var("LGC_EPISODES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(12);
+    let rounds_per_episode = 20;
+    println!("== Figure 5: DDPG training ({episodes} episodes x {rounds_per_episode} rounds) ==");
+
+    let cfg = ExperimentConfig {
+        mechanism: Mechanism::LgcDrl,
+        workload: Workload::LrMnist,
+        rounds: episodes * rounds_per_episode,
+        devices: 3,
+        samples_per_device: 1024,
+        eval_samples: 256,
+        eval_every: 10,
+        lr: 0.05,
+        h_fixed: 3,
+        h_max: 8,
+        use_runtime: false,
+        ..ExperimentConfig::default()
+    };
+    let mut trainer = NativeLrTrainer::new(&cfg);
+    let mut exp = Experiment::new(cfg, &trainer);
+
+    let mut table = Table::new(&["episode", "mean reward", "critic loss", "actor Q", "episode energy (J)"]);
+    let mut csv = String::from("episode,mean_reward,critic_loss,actor_q,episode_energy_j\n");
+    for ep in 0..episodes {
+        // Fresh FL problem each episode; the DDPG agents persist (Fig. 5).
+        exp.reset_episode(&trainer);
+        let mut reward = 0.0;
+        let mut nr = 0usize;
+        let mut energy = 0.0;
+        for round in 0..rounds_per_episode {
+            if let Some(rec) = exp.step_round(round, &mut trainer)? {
+                if rec.drl_reward.is_finite() {
+                    reward += rec.drl_reward;
+                    nr += 1;
+                }
+                energy = rec.energy_j;
+            }
+        }
+        // Read out the critic by one offline learn step per agent.
+        let mut closs = 0.0;
+        let mut aq = 0.0;
+        let mut na = 0usize;
+        for agent in exp.agents.iter_mut().flatten() {
+            if agent.ddpg.replay.len() >= 64 {
+                let stats = agent.ddpg.learn();
+                closs += stats.critic_loss;
+                aq += stats.actor_q;
+                na += 1;
+            }
+        }
+        let (closs, aq) = if na > 0 {
+            (closs / na as f64, aq / na as f64)
+        } else {
+            (f64::NAN, f64::NAN)
+        };
+        let mr = reward / nr.max(1) as f64;
+        table.row(&[
+            ep.to_string(),
+            format!("{mr:.4}"),
+            format!("{closs:.5}"),
+            format!("{aq:.4}"),
+            format!("{energy:.1}"),
+        ]);
+        csv.push_str(&format!("{ep},{mr:.6},{closs:.6},{aq:.6},{energy:.1}\n"));
+    }
+    table.print();
+    std::fs::create_dir_all("results")?;
+    std::fs::write(Path::new("results/fig5_drl.csv"), csv)?;
+    println!("\nCSV series in results/fig5_drl.csv");
+
+    // Also exercise the raw DDPG learning curve on a stationary toy problem
+    // (pure Fig. 5(a) shape, decoupled from FL noise).
+    println!("\n-- critic loss on stationary toy control (sanity curve) --");
+    let mut agent = lgc::drl::Ddpg::new(
+        1,
+        1,
+        lgc::config::DrlConfig { warmup: 32, batch: 32, hidden: 32, gamma: 0.0, ..Default::default() },
+        lgc::util::Rng::new(1),
+    );
+    let mut env = lgc::util::Rng::new(2);
+    let mut first = f64::NAN;
+    let mut last = f64::NAN;
+    for step in 0..2000 {
+        let s = vec![env.range(-1.0, 1.0) as f32];
+        let a = agent.act_explore(&s);
+        let r = -((a[0] - s[0]) * (a[0] - s[0]));
+        if let Some(stats) = agent.observe(Transition {
+            state: s.clone(),
+            action: a,
+            reward: r,
+            next_state: s,
+            done: true,
+        }) {
+            if first.is_nan() {
+                first = stats.critic_loss;
+            }
+            last = stats.critic_loss;
+            if step % 400 == 0 {
+                println!("step {step:>5}: critic loss {:.5}", stats.critic_loss);
+            }
+        }
+    }
+    println!("critic loss {first:.5} -> {last:.5} (should fall)");
+
+    // §Perf: one DDPG learn step (batch 32, hidden 32) — target < 200 us.
+    let r = lgc::bench::bench_auto("ddpg learn step", 100.0, || {
+        std::hint::black_box(agent.learn());
+    });
+    r.report("(target < 200 us)");
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Figure 6 reproduction: char-GRU on Shakespeare — same four panels as
+//! Fig. 3, PJRT path (requires `make artifacts`).
+//!
+//! `cargo bench --bench bench_fig6_rnn_shakespeare` (LGC_ROUNDS=n to resize).
+
+use std::path::Path;
+
+use lgc::bench::figures;
+use lgc::config::{ExperimentConfig, Mechanism, Workload};
+use lgc::coordinator::{Experiment, PjrtTrainer};
+use lgc::metrics::RunLog;
+use lgc::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    if !Path::new("artifacts/manifest.toml").exists() {
+        println!("Figure 6 needs the RNN artifacts — run `make artifacts` first. Skipping.");
+        return Ok(());
+    }
+    let rounds = std::env::var("LGC_ROUNDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(30);
+    println!("== Figure 6: char-GRU on Shakespeare (PJRT, {rounds} rounds, M=3, N=3) ==");
+
+    let mut logs: Vec<RunLog> = Vec::new();
+    for mech in [Mechanism::FedAvg, Mechanism::LgcStatic, Mechanism::LgcDrl] {
+        let cfg = ExperimentConfig {
+            mechanism: mech,
+            workload: Workload::RnnShakespeare,
+            rounds,
+            devices: 3,
+            eval_samples: 256,
+            eval_every: 5,
+            lr: 0.5,
+            h_fixed: 2,
+            h_max: 4,
+            ..ExperimentConfig::default()
+        };
+        let rt = Runtime::new(Path::new(&cfg.artifacts_dir))?;
+        let mut trainer = PjrtTrainer::new(&rt, &cfg)?;
+        let mut exp = Experiment::new(cfg, &trainer);
+        let log = exp.run(&mut trainer)?;
+        log.write_csv(Path::new(&format!("results/fig6_{}.csv", mech.name())))?;
+        println!("  {} done: final next-char acc {:.4}", mech.name(), log.final_acc());
+        logs.push(log);
+    }
+
+    figures::print_convergence(&logs);
+    figures::print_budget_panel(&logs, 0, &figures::budget_grid(&logs, 0, 8), "J");
+    figures::print_budget_panel(&logs, 1, &figures::budget_grid(&logs, 1, 8), "$");
+    figures::print_cost_to_target(&logs, 0.20);
+    println!("\nCSV series in results/fig6_*.csv");
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! **End-to-end driver** (the EXPERIMENTS.md §E2E run): train the CNN
+//! (~207k params) on the MNIST-class workload through the FULL three-layer
+//! stack — Rust coordinator -> PJRT -> AOT HLO containing the JAX fwd/bwd
+//! and the Pallas fused-SGD kernel — for a few hundred rounds with LGC
+//! compression and the DDPG controller, logging the loss curve.
+//!
+//! Requires artifacts: `make artifacts && cargo run --release --example
+//! mnist_cnn_lgc [rounds] [mechanism]`.
+
+use std::path::Path;
+
+use lgc::config::{ExperimentConfig, Mechanism, Workload};
+use lgc::coordinator::{Experiment, PjrtTrainer};
+use lgc::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let rounds: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(200);
+    let mechanism = args
+        .get(1)
+        .map(|s| Mechanism::parse(s).unwrap())
+        .unwrap_or(Mechanism::LgcDrl);
+
+    let cfg = ExperimentConfig {
+        mechanism,
+        workload: Workload::CnnMnist,
+        rounds,
+        devices: 3,
+        samples_per_device: 2048,
+        eval_samples: 512,
+        eval_every: 10,
+        lr: 0.05,
+        h_fixed: 4,
+        h_max: 8,
+        ..ExperimentConfig::default()
+    };
+
+    let rt = Runtime::new(Path::new(&cfg.artifacts_dir))?;
+    println!(
+        "E2E: CNN ({} params) x {} devices x {} rounds, mechanism={}, platform={}",
+        rt.manifest.models["cnn"].params,
+        cfg.devices,
+        cfg.rounds,
+        cfg.mechanism.name(),
+        rt.platform()
+    );
+    let mut trainer = PjrtTrainer::new(&rt, &cfg)?;
+    let mut exp = Experiment::new(cfg, &trainer);
+
+    let t0 = std::time::Instant::now();
+    let mut log = lgc::metrics::RunLog::new("e2e-cnn");
+    for round in 0..exp.cfg.rounds {
+        match exp.step_round(round, &mut trainer)? {
+            Some(rec) => {
+                if !rec.eval_acc.is_nan() {
+                    println!(
+                        "round {:>4}  train_loss {:.4}  eval_loss {:.4}  eval_acc {:.4}  energy {:>9.1} J  money {:.4}  sim_time {:>7.1}s  wall {:>6.1}s",
+                        rec.round,
+                        rec.train_loss,
+                        rec.eval_loss,
+                        rec.eval_acc,
+                        rec.energy_j,
+                        rec.money,
+                        rec.total_time_s,
+                        t0.elapsed().as_secs_f64()
+                    );
+                }
+                log.push(rec);
+            }
+            None => {
+                println!("all devices out of budget at round {round}");
+                break;
+            }
+        }
+    }
+    let csv = Path::new("results/e2e_cnn.csv");
+    log.write_csv(csv)?;
+    println!(
+        "\nfinal acc {:.4} (best {:.4}); loss curve written to {}",
+        log.final_acc(),
+        log.best_acc(),
+        csv.display()
+    );
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! The multi-channel tradeoff the paper motivates (Sec. 1): sending copies
+//! on every channel is wasteful; one channel leaves capacity unused; LGC's
+//! layered split uses all channels without redundancy.
+//!
+//! This example sweeps layer-to-channel strategies at a fixed coordinate
+//! budget on the native LR path and reports time / energy / money / accuracy.
+
+use lgc::config::{ExperimentConfig, Mechanism, Workload};
+use lgc::coordinator::{Experiment, NativeLrTrainer};
+
+fn run(name: &str, fracs: Vec<f64>, mech: Mechanism) -> anyhow::Result<()> {
+    let cfg = ExperimentConfig {
+        mechanism: mech,
+        workload: Workload::LrMnist,
+        rounds: 40,
+        devices: 3,
+        samples_per_device: 1024,
+        eval_samples: 256,
+        eval_every: 5,
+        lr: 0.05,
+        h_fixed: 3,
+        h_max: 6,
+        layer_fracs: fracs,
+        use_runtime: false,
+        ..ExperimentConfig::default()
+    };
+    let mut trainer = NativeLrTrainer::new(&cfg);
+    let mut exp = Experiment::new(cfg, &trainer);
+    let log = exp.run(&mut trainer)?;
+    let last = log.last().unwrap();
+    let mb = log.records.iter().map(|r| r.bytes_up).sum::<u64>() as f64 / (1024.0 * 1024.0);
+    println!(
+        "{:<28} acc {:.4}   time {:>7.1}s   energy {:>9.1}J   money {:>7.4}   {:>7.3} MB",
+        name,
+        log.final_acc(),
+        last.total_time_s,
+        last.energy_j,
+        last.money,
+        mb
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("strategy                      (same 20% coordinate budget, 40 rounds)\n");
+    // all coordinates through one channel (the fastest)
+    run("single-channel top-k", vec![0.20], Mechanism::TopK)?;
+    // layered across 3 channels, base layer on 5G
+    run("LGC layered 1/4/15%", vec![0.01, 0.04, 0.15], Mechanism::LgcStatic)?;
+    // balanced split
+    run("LGC layered equal thirds", vec![0.066, 0.066, 0.068], Mechanism::LgcStatic)?;
+    // DRL-adapted split
+    run("LGC + DDPG control", vec![0.01, 0.04, 0.15], Mechanism::LgcDrl)?;
+    println!("\nFedAvg reference (dense):");
+    run("fedavg dense", vec![0.01], Mechanism::FedAvg)?;
+    Ok(())
+}

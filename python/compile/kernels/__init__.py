@@ -1,0 +1,2 @@
+"""L1 Pallas kernels (lgc) and their pure-jnp oracles (ref)."""
+from . import lgc, ref  # noqa: F401

@@ -1,0 +1,190 @@
+"""L1 — Pallas kernels for the LGC hot paths.
+
+Three kernels, all elementwise/bandwidth-bound, all tiled with ``BlockSpec``
+so each tile streams HBM->VMEM once:
+
+- ``band_sparsify``:  the paper's Top_{alpha,beta} *apply* step (Eq. 1).
+  Given the two magnitude thresholds of a layer band, keep ``x_i`` iff
+  ``thr_hi >= |x_i| > thr_lo``.  Threshold *selection* (a global order
+  statistic) lives in L2 (`lax.top_k`), mirroring the global-select /
+  local-apply split of GPU top-k sparsifiers.
+- ``ef_update``:      fused error-feedback memory update (Alg. 1 line 11):
+  ``e' = u - g`` where ``u = e + w - w_hat`` and ``g`` is the shipped update.
+- ``sgd_step``:       fused local SGD update ``p' = p - lr * g`` (Alg. 1
+  line 6), called from every L2 local-step graph so it lowers into the same
+  HLO the Rust runtime executes.
+
+All kernels run ``interpret=True``: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret mode lowers to plain HLO ops that any backend
+runs.  On a real TPU the same kernels compile as written; the BlockSpec
+tiling below is the HBM<->VMEM schedule (see DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile size for 1-D parameter/gradient streams.  8 * 128 = one float32
+# (sublane, lane) VMEM tile on TPU; on CPU-interpret it is just the block
+# length.  All public wrappers pad to a multiple of this.
+TILE = 1024
+
+
+def _pad_to_tile(x: jax.Array) -> tuple[jax.Array, int]:
+    """Pad a 1-D array with zeros to a multiple of TILE. Returns (padded, n)."""
+    n = x.shape[0]
+    rem = (-n) % TILE
+    if rem:
+        x = jnp.concatenate([x, jnp.zeros((rem,), x.dtype)])
+    return x, n
+
+
+# ---------------------------------------------------------------------------
+# band_sparsify — Top_{alpha,beta} apply (paper Eq. 1)
+# ---------------------------------------------------------------------------
+
+
+def _band_kernel(thr_ref, x_ref, o_ref):
+    """Keep x where thr_hi >= |x| > thr_lo; zero elsewhere.
+
+    ``thr_ref`` is a 2-element SMEM-like block broadcast to every grid point:
+    ``thr_ref[0] = thr_hi`` (the alpha-th largest magnitude),
+    ``thr_ref[1] = thr_lo`` (the beta-th largest magnitude).
+    """
+    x = x_ref[...]
+    a = jnp.abs(x)
+    keep = jnp.logical_and(a <= thr_ref[0], a > thr_ref[1])
+    o_ref[...] = jnp.where(keep, x, jnp.zeros_like(x))
+
+
+@functools.partial(jax.jit, static_argnames=())
+def band_sparsify(x: jax.Array, thr_hi: jax.Array, thr_lo: jax.Array) -> jax.Array:
+    """Pallas Top_{alpha,beta} band mask over a 1-D vector.
+
+    ``thr_hi``/``thr_lo`` are scalars (0-d or 1-element arrays): the
+    magnitudes of the alpha-th and beta-th largest |x|.  Elements with
+    ``thr_hi >= |x| > thr_lo`` are kept.  ``thr_hi = +inf`` gives a plain
+    Top_beta complement band; ``thr_lo = -inf``/0-with-care keeps ties.
+    """
+    xp, n = _pad_to_tile(x.astype(jnp.float32))
+    thr = jnp.stack([jnp.asarray(thr_hi, jnp.float32).reshape(()),
+                     jnp.asarray(thr_lo, jnp.float32).reshape(())])
+    grid = (xp.shape[0] // TILE,)
+    out = pl.pallas_call(
+        _band_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),        # thresholds: broadcast
+            pl.BlockSpec((TILE,), lambda i: (i,)),     # x: one tile per step
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, jnp.float32),
+        interpret=True,
+    )(thr, xp)
+    return out[:n]
+
+
+# ---------------------------------------------------------------------------
+# ef_update — fused error-feedback memory update (Alg. 1 line 11)
+# ---------------------------------------------------------------------------
+
+
+def _ef_kernel(u_ref, g_ref, o_ref):
+    o_ref[...] = u_ref[...] - g_ref[...]
+
+
+def ef_update(u: jax.Array, g: jax.Array) -> jax.Array:
+    """e' = u - g, elementwise, tiled.  u is the error-compensated update
+    (e + w - w_hat), g the compressed update actually shipped."""
+    up, n = _pad_to_tile(u.astype(jnp.float32))
+    gp, _ = _pad_to_tile(g.astype(jnp.float32))
+    grid = (up.shape[0] // TILE,)
+    out = pl.pallas_call(
+        _ef_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(up.shape, jnp.float32),
+        interpret=True,
+    )(up, gp)
+    return out[:n]
+
+
+# ---------------------------------------------------------------------------
+# sgd_step — fused p' = p - lr * g (Alg. 1 line 6)
+# ---------------------------------------------------------------------------
+
+
+def _sgd_kernel(lr_ref, p_ref, g_ref, o_ref):
+    o_ref[...] = p_ref[...] - lr_ref[0] * g_ref[...]
+
+
+def sgd_step(params: jax.Array, grads: jax.Array, lr: jax.Array) -> jax.Array:
+    """One fused SGD update over a flat f32[P] parameter vector."""
+    pp, n = _pad_to_tile(params.astype(jnp.float32))
+    gp, _ = _pad_to_tile(grads.astype(jnp.float32))
+    lr1 = jnp.asarray(lr, jnp.float32).reshape((1,))
+    grid = (pp.shape[0] // TILE,)
+    out = pl.pallas_call(
+        _sgd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),        # lr: broadcast scalar
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(pp.shape, jnp.float32),
+        interpret=True,
+    )(lr1, pp, gp)
+    return out[:n]
+
+
+# ---------------------------------------------------------------------------
+# lgc_layers — full LGC_k encoder (paper Eq. 2), C banded layers
+# ---------------------------------------------------------------------------
+
+
+def lgc_layers(u: jax.Array, ks: tuple[int, ...]) -> tuple[jax.Array, jax.Array]:
+    """Split ``u`` into ``C = len(ks)`` magnitude-banded layers (Eq. 2).
+
+    Layer ``c`` keeps the coordinates ranked ``(K_{c-1}, K_c]`` by |u|,
+    with ``K_c = ks[0] + ... + ks[c]``.  Returns ``(layers, thresholds)``
+    where ``layers`` is ``f32[C, D]`` (dense, zero off-band) and
+    ``thresholds`` is ``f32[C + 1]`` (``+inf`` sentinel first).
+
+    Threshold selection is a single global ``lax.top_k`` over |u| (L2);
+    the per-layer banding is the Pallas ``band_sparsify`` kernel (L1).
+    ``sum(layers, axis=0) == LGC_k(u)`` by the partition invariant.
+    """
+    d = u.shape[0]
+    ktot = int(sum(ks))
+    if not (0 < ktot <= d):
+        raise ValueError(f"sum(ks)={ktot} out of range for D={d}")
+    mags = jnp.abs(u.astype(jnp.float32))
+    # Fetch one extra order statistic: Eq. 1's strict `> thr_beta` would drop
+    # the K-th ranked element itself, so the bottom sentinel is the
+    # (K+1)-th largest magnitude (or -1 when K == D, keeping everything).
+    # NOTE: a full descending sort, not `lax.top_k` — top_k lowers to the
+    # `topk(..., largest=true)` HLO op which xla_extension 0.5.1's text
+    # parser rejects; `sort` round-trips cleanly.
+    top_vals = -jnp.sort(-mags)
+    cum = []
+    acc = 0
+    for k in ks:
+        acc += int(k)
+        cum.append(acc - 1)
+    inner = top_vals[jnp.asarray(cum[:-1])] if len(ks) > 1 else jnp.zeros((0,), jnp.float32)
+    bottom = top_vals[ktot] if ktot < d else jnp.float32(-1.0)
+    thr = jnp.concatenate(
+        [jnp.full((1,), jnp.inf, jnp.float32), inner, bottom.reshape((1,))]
+    )
+    layers = [band_sparsify(u, thr[c], thr[c + 1]) for c in range(len(ks))]
+    return jnp.stack(layers), thr

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+Every kernel in ``lgc.py`` has an exact reference here, written with plain
+``jnp`` ops and no Pallas.  pytest + hypothesis assert ``assert_allclose``
+between kernel and oracle across shapes and magnitudes (python/tests).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def band_sparsify_ref(x: jax.Array, thr_hi, thr_lo) -> jax.Array:
+    """Eq. 1: keep x_i iff thr_hi >= |x_i| > thr_lo."""
+    x = x.astype(jnp.float32)
+    a = jnp.abs(x)
+    keep = jnp.logical_and(a <= jnp.float32(thr_hi), a > jnp.float32(thr_lo))
+    return jnp.where(keep, x, jnp.zeros_like(x))
+
+
+def ef_update_ref(u: jax.Array, g: jax.Array) -> jax.Array:
+    """Alg. 1 line 11: e' = u - g."""
+    return u.astype(jnp.float32) - g.astype(jnp.float32)
+
+
+def sgd_step_ref(params: jax.Array, grads: jax.Array, lr) -> jax.Array:
+    """Alg. 1 line 6: p' = p - lr * g."""
+    return params.astype(jnp.float32) - jnp.float32(lr) * grads.astype(jnp.float32)
+
+
+def topk_ref(x: jax.Array, k: int) -> jax.Array:
+    """Dense Top_k: zero all but the k largest-|.| coordinates."""
+    x = x.astype(jnp.float32)
+    d = x.shape[0]
+    if k >= d:
+        return x
+    thr = (-jnp.sort(-jnp.abs(x)))[k]
+    return jnp.where(jnp.abs(x) > thr, x, jnp.zeros_like(x))
+
+
+def lgc_layers_ref(u: jax.Array, ks: tuple[int, ...]) -> tuple[jax.Array, jax.Array]:
+    """Reference LGC_k encoder (Eq. 2) with the same threshold convention as
+    ``lgc.lgc_layers`` (bottom sentinel = (K+1)-th magnitude)."""
+    u = u.astype(jnp.float32)
+    d = u.shape[0]
+    ktot = int(sum(ks))
+    mags = jnp.abs(u)
+    top_vals = -jnp.sort(-mags)
+    cum = []
+    acc = 0
+    for k in ks:
+        acc += int(k)
+        cum.append(acc - 1)
+    inner = top_vals[jnp.asarray(cum[:-1])] if len(ks) > 1 else jnp.zeros((0,), jnp.float32)
+    bottom = top_vals[ktot] if ktot < d else jnp.float32(-1.0)
+    thr = jnp.concatenate(
+        [jnp.full((1,), jnp.inf, jnp.float32), inner, bottom.reshape((1,))]
+    )
+    layers = [band_sparsify_ref(u, thr[c], thr[c + 1]) for c in range(len(ks))]
+    return jnp.stack(layers), thr
+
+
+def lgc_decode_ref(layers: jax.Array) -> jax.Array:
+    """Server-side decode: LGC_k(u) = sum of the received layers (Eq. 2)."""
+    return jnp.sum(layers, axis=0)

@@ -1,0 +1,272 @@
+"""L2 — the paper's training workloads as JAX graphs with a flat-param ABI.
+
+Three models, matching Sec. 4.1 of the paper:
+
+- ``lr``  — logistic regression, 784 -> 10 softmax         (MNIST-class data)
+- ``cnn`` — 2x(conv3x3 + relu + maxpool2) -> fc128 -> 10   (MNIST-class data)
+- ``rnn`` — char-level GRU, vocab 64, embed 32, hidden 128 (Shakespeare)
+
+Every graph works on a single flat ``f32[P]`` parameter vector owned by the
+Rust coordinator; (un)flattening happens inside the jitted function so the
+PJRT ABI is a handful of dense buffers.  The fused local SGD update is the
+L1 Pallas ``sgd_step`` kernel, so the Pallas kernel lowers into the same HLO
+the Rust runtime executes on every local step (Alg. 1 line 6).
+
+Exported graphs per model (lowered by ``aot.py``):
+
+- ``local``: (params, x, y, lr) -> (params', loss)   one local SGD step
+- ``grad`` : (params, x, y)     -> (grads,  loss)    raw gradient (tests, FedAvg)
+- ``eval`` : (params, x, y)     -> (loss_sum, correct_count)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import lgc
+
+# ---------------------------------------------------------------------------
+# Shapes / hyperparameters (paper Sec. 4.1: batch 64, lr 0.01)
+# ---------------------------------------------------------------------------
+
+BATCH = 64
+IMG = 784          # 28 * 28
+NCLASS = 10
+VOCAB = 64         # char vocab for the Shakespeare corpus (Rust maps chars)
+EMBED = 32
+HIDDEN = 128
+SEQ = 24           # positions per example; artifact input is SEQ + 1 chars
+
+
+@dataclass(frozen=True)
+class Spec:
+    """Static description of one model's flat-parameter layout."""
+
+    name: str
+    shapes: tuple[tuple[str, tuple[int, ...]], ...]
+    x_shape: tuple[int, ...] = ()
+    x_dtype: str = "f32"
+
+    @property
+    def sizes(self) -> list[int]:
+        return [int(np.prod(s)) for _, s in self.shapes]
+
+    @property
+    def nparams(self) -> int:
+        return sum(self.sizes)
+
+    def unflatten(self, flat: jax.Array) -> dict[str, jax.Array]:
+        out = {}
+        off = 0
+        for (name, shape), size in zip(self.shapes, self.sizes):
+            out[name] = jax.lax.slice(flat, (off,), (off + size,)).reshape(shape)
+            off += size
+        return out
+
+
+LR_SPEC = Spec(
+    "lr",
+    (("w", (IMG, NCLASS)), ("b", (NCLASS,))),
+    x_shape=(BATCH, IMG),
+)
+
+CNN_SPEC = Spec(
+    "cnn",
+    (
+        ("c1w", (3, 3, 1, 16)), ("c1b", (16,)),
+        ("c2w", (3, 3, 16, 32)), ("c2b", (32,)),
+        ("f1w", (7 * 7 * 32, 128)), ("f1b", (128,)),
+        ("f2w", (128, NCLASS)), ("f2b", (NCLASS,)),
+    ),
+    x_shape=(BATCH, IMG),
+)
+
+RNN_SPEC = Spec(
+    "rnn",
+    (
+        ("emb", (VOCAB, EMBED)),
+        ("wz", (EMBED + HIDDEN, HIDDEN)), ("bz", (HIDDEN,)),
+        ("wr", (EMBED + HIDDEN, HIDDEN)), ("br", (HIDDEN,)),
+        ("wh", (EMBED + HIDDEN, HIDDEN)), ("bh", (HIDDEN,)),
+        ("wo", (HIDDEN, VOCAB)), ("bo", (VOCAB,)),
+    ),
+    x_shape=(BATCH, SEQ + 1),
+    x_dtype="i32",
+)
+
+SPECS = {"lr": LR_SPEC, "cnn": CNN_SPEC, "rnn": RNN_SPEC}
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean softmax cross-entropy. logits [N, C], labels int32 [N]."""
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logz, labels[:, None].astype(jnp.int32), axis=-1)
+    return -jnp.mean(ll)
+
+
+def lr_logits(p: dict, x: jax.Array) -> jax.Array:
+    return x @ p["w"] + p["b"]
+
+
+def cnn_logits(p: dict, x: jax.Array) -> jax.Array:
+    img = x.reshape(-1, 28, 28, 1)
+    z = jax.lax.conv_general_dilated(
+        img, p["c1w"], (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    ) + p["c1b"]
+    z = jax.nn.relu(z)
+    z = jax.lax.reduce_window(z, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    z = jax.lax.conv_general_dilated(
+        z, p["c2w"], (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    ) + p["c2b"]
+    z = jax.nn.relu(z)
+    z = jax.lax.reduce_window(z, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    z = z.reshape(z.shape[0], -1)
+    z = jax.nn.relu(z @ p["f1w"] + p["f1b"])
+    return z @ p["f2w"] + p["f2b"]
+
+
+def _gru_cell(p: dict, h: jax.Array, e: jax.Array) -> jax.Array:
+    xh = jnp.concatenate([e, h], axis=-1)
+    z = jax.nn.sigmoid(xh @ p["wz"] + p["bz"])
+    r = jax.nn.sigmoid(xh @ p["wr"] + p["br"])
+    xrh = jnp.concatenate([e, r * h], axis=-1)
+    hbar = jnp.tanh(xrh @ p["wh"] + p["bh"])
+    return (1.0 - z) * h + z * hbar
+
+
+def rnn_logits(p: dict, x: jax.Array) -> jax.Array:
+    """x int32 [B, SEQ+1]; returns logits [B, SEQ, VOCAB] for next-char."""
+    emb = p["emb"][x]  # [B, SEQ+1, EMBED]
+    h = jnp.zeros((x.shape[0], HIDDEN), jnp.float32)
+    outs = []
+    for t in range(SEQ):
+        h = _gru_cell(p, h, emb[:, t, :])
+        outs.append(h @ p["wo"] + p["bo"])
+    return jnp.stack(outs, axis=1)
+
+
+def model_loss(name: str, flat: jax.Array, x: jax.Array, y: jax.Array) -> jax.Array:
+    spec = SPECS[name]
+    p = spec.unflatten(flat)
+    if name == "lr":
+        return _xent(lr_logits(p, x), y)
+    if name == "cnn":
+        return _xent(cnn_logits(p, x), y)
+    if name == "rnn":
+        logits = rnn_logits(p, x)  # targets are x shifted by one
+        tgt = x[:, 1:].reshape(-1)
+        return _xent(logits.reshape(-1, VOCAB), tgt)
+    raise ValueError(name)
+
+
+def model_logits_labels(name: str, flat: jax.Array, x: jax.Array, y: jax.Array):
+    spec = SPECS[name]
+    p = spec.unflatten(flat)
+    if name == "lr":
+        return lr_logits(p, x), y
+    if name == "cnn":
+        return cnn_logits(p, x), y
+    if name == "rnn":
+        return rnn_logits(p, x).reshape(-1, VOCAB), x[:, 1:].reshape(-1)
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# Exported graphs
+# ---------------------------------------------------------------------------
+
+
+def local_step(name: str):
+    """(params, x, y, lr) -> (params', loss): one local SGD step, with the
+    parameter update fused through the L1 Pallas kernel."""
+
+    def fn(flat, x, y, lr):
+        loss, grads = jax.value_and_grad(lambda f: model_loss(name, f, x, y))(flat)
+        new = lgc.sgd_step(flat, grads, lr)
+        return (new, loss)
+
+    return fn
+
+
+def grad_graph(name: str):
+    """(params, x, y) -> (grads, loss)."""
+
+    def fn(flat, x, y):
+        loss, grads = jax.value_and_grad(lambda f: model_loss(name, f, x, y))(flat)
+        return (grads, loss)
+
+    return fn
+
+
+def eval_graph(name: str):
+    """(params, x, y) -> (loss_sum, correct_count) over one batch, both f32.
+    loss_sum = mean-loss * positions so Rust can aggregate exactly."""
+
+    def fn(flat, x, y):
+        logits, labels = model_logits_labels(name, flat, x, y)
+        loss = _xent(logits, labels)
+        pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        correct = jnp.sum((pred == labels.astype(jnp.int32)).astype(jnp.float32))
+        n = jnp.float32(logits.shape[0])
+        return (loss * n, correct)
+
+    return fn
+
+
+def lgc_compress_graph(d: int, ks: tuple[int, ...]):
+    """(u f32[d]) -> (layers f32[C,d], thr f32[C+1]): the full LGC_k encoder
+    (global top-k select in XLA + Pallas band kernels), exported for the
+    artifact-compression ablation (DESIGN.md A2)."""
+
+    def fn(u):
+        layers, thr = lgc.lgc_layers(u, ks)
+        return (layers, thr)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Initialization (build-time; exported to artifacts/<model>_init.bin)
+# ---------------------------------------------------------------------------
+
+
+def init_params(name: str, seed: int = 42) -> np.ndarray:
+    """He-style init, deterministic; returned as a flat f32 numpy vector."""
+    spec = SPECS[name]
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for pname, shape in spec.shapes:
+        key, sub = jax.random.split(key)
+        if pname.endswith("b") and len(shape) == 1:
+            chunks.append(np.zeros(shape, np.float32).ravel())
+        else:
+            fan_in = int(np.prod(shape[:-1])) if len(shape) > 1 else shape[0]
+            scale = np.sqrt(2.0 / max(fan_in, 1)).astype(np.float32)
+            w = jax.random.normal(sub, shape, jnp.float32) * scale
+            chunks.append(np.asarray(w, np.float32).ravel())
+    return np.concatenate(chunks)
+
+
+def example_args(name: str, graph: str):
+    """ShapeDtypeStructs for lowering the given graph of the given model."""
+    spec = SPECS[name]
+    p = jax.ShapeDtypeStruct((spec.nparams,), jnp.float32)
+    xd = jnp.int32 if spec.x_dtype == "i32" else jnp.float32
+    x = jax.ShapeDtypeStruct(spec.x_shape, xd)
+    # y is ignored by the rnn graphs but kept in the ABI for uniformity.
+    y = jax.ShapeDtypeStruct((BATCH,), jnp.int32)
+    lr = jax.ShapeDtypeStruct((), jnp.float32)
+    if graph == "local":
+        return (p, x, y, lr)
+    if graph in ("grad", "eval"):
+        return (p, x, y)
+    raise ValueError(graph)

@@ -1,0 +1,188 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle, hypothesis-swept."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lgc, ref
+
+settings.register_profile("ci", max_examples=30, deadline=None)
+settings.load_profile("ci")
+
+
+def _rand(n, seed=0, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n,)) * scale
+
+
+# ---------------------------------------------------------------------------
+# band_sparsify
+# ---------------------------------------------------------------------------
+
+
+@given(
+    n=st.integers(min_value=1, max_value=5000),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    hi=st.floats(min_value=0.0, max_value=4.0),
+    width=st.floats(min_value=0.0, max_value=2.0),
+)
+def test_band_sparsify_matches_ref(n, seed, hi, width):
+    x = _rand(n, seed)
+    lo = max(hi - width, 0.0)
+    out = lgc.band_sparsify(x, hi, lo)
+    exp = ref.band_sparsify_ref(x, hi, lo)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_band_sparsify_keeps_band_only():
+    x = jnp.asarray([0.1, -0.5, 2.0, -3.0, 0.9])
+    out = np.asarray(lgc.band_sparsify(x, 2.0, 0.5))
+    np.testing.assert_array_equal(out, np.asarray([0.0, 0.0, 2.0, 0.0, 0.9], np.float32))
+
+
+def test_band_sparsify_inf_top_keeps_everything_above_lo():
+    x = _rand(3000, 7)
+    out = np.asarray(lgc.band_sparsify(x, np.inf, 0.0))
+    exp = np.where(np.abs(np.asarray(x)) > 0.0, np.asarray(x), 0.0)
+    np.testing.assert_array_equal(out, exp)
+
+
+@pytest.mark.parametrize("n", [1, 1023, 1024, 1025, 4096, 10000])
+def test_band_sparsify_padding_boundaries(n):
+    """Exercise the tile-padding wrapper at and around TILE multiples."""
+    x = _rand(n, n)
+    out = lgc.band_sparsify(x, 1.0, 0.3)
+    exp = ref.band_sparsify_ref(x, 1.0, 0.3)
+    assert out.shape == (n,)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+def test_band_sparsify_dtypes(dtype):
+    x = _rand(512, 3).astype(dtype)
+    out = lgc.band_sparsify(x, 1.0, 0.2)
+    exp = ref.band_sparsify_ref(x, 1.0, 0.2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=0)
+
+
+# ---------------------------------------------------------------------------
+# ef_update / sgd_step
+# ---------------------------------------------------------------------------
+
+
+@given(
+    n=st.integers(min_value=1, max_value=8000),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_ef_update_matches_ref(n, seed):
+    u = _rand(n, seed)
+    g = _rand(n, seed + 1)
+    np.testing.assert_array_equal(
+        np.asarray(lgc.ef_update(u, g)), np.asarray(ref.ef_update_ref(u, g))
+    )
+
+
+@given(
+    n=st.integers(min_value=1, max_value=8000),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    lr=st.floats(min_value=1e-4, max_value=1.0),
+)
+def test_sgd_step_matches_ref(n, seed, lr):
+    p = _rand(n, seed)
+    g = _rand(n, seed + 1)
+    np.testing.assert_allclose(
+        np.asarray(lgc.sgd_step(p, g, lr)),
+        np.asarray(ref.sgd_step_ref(p, g, lr)),
+        rtol=1e-6, atol=1e-7,
+    )
+
+
+def test_ef_update_telescopes():
+    """Alg. 1 line 11: the memory absorbs exactly what compression dropped."""
+    u = _rand(4096, 11)
+    layers, _ = lgc.lgc_layers(u, (40, 160, 600))
+    g = jnp.sum(layers, axis=0)
+    e = lgc.ef_update(u, g)
+    np.testing.assert_allclose(np.asarray(e + g), np.asarray(u), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# lgc_layers (LGC_k encoder, Eq. 2)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    n=st.integers(min_value=16, max_value=4096),
+    fracs=st.lists(
+        st.floats(min_value=0.01, max_value=0.3), min_size=1, max_size=4
+    ),
+)
+def test_lgc_layers_matches_ref(seed, n, fracs):
+    u = _rand(n, seed)
+    ks = tuple(max(1, int(f * n)) for f in fracs)
+    if sum(ks) > n:
+        ks = (max(1, n // (2 * len(ks))),) * len(ks)
+    layers, thr = lgc.lgc_layers(u, ks)
+    layers_r, thr_r = ref.lgc_layers_ref(u, ks)
+    np.testing.assert_array_equal(np.asarray(layers), np.asarray(layers_r))
+    np.testing.assert_array_equal(np.asarray(thr), np.asarray(thr_r))
+
+
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    n=st.integers(min_value=32, max_value=4096),
+)
+def test_lgc_layers_partition_invariant(seed, n):
+    """Layers are pairwise disjoint and their union is the top-K support."""
+    u = _rand(n, seed)
+    ks = (max(1, n // 32), max(1, n // 16), max(1, n // 8))
+    layers, _ = lgc.lgc_layers(u, ks)
+    L = np.asarray(layers)
+    supports = L != 0.0
+    # pairwise disjoint
+    assert (supports.sum(axis=0) <= 1).all()
+    # union size == sum(ks) when magnitudes are distinct (generic case)
+    mags = np.abs(np.asarray(u))
+    if len(np.unique(mags)) == n:
+        assert supports.any(axis=0).sum() == sum(ks)
+        # union support == the sum(ks) largest |u|
+        dec = L.sum(axis=0)
+        topk_exp = np.asarray(ref.topk_ref(u, sum(ks)))
+        np.testing.assert_array_equal(dec, topk_exp)
+
+
+def test_lgc_layers_ordered_by_magnitude():
+    """Every element of layer c dominates every element of layer c+1."""
+    u = _rand(2048, 5)
+    layers, _ = lgc.lgc_layers(u, (20, 80, 300))
+    L = np.abs(np.asarray(layers))
+    for c in range(L.shape[0] - 1):
+        lo_c = L[c][L[c] > 0].min()
+        hi_next = L[c + 1].max()
+        assert lo_c >= hi_next
+
+
+def test_lgc_layers_k_equals_d():
+    u = _rand(1024, 9)
+    layers, _ = lgc.lgc_layers(u, (512, 512))
+    dec = np.asarray(layers).sum(axis=0)
+    np.testing.assert_allclose(dec, np.asarray(u), atol=0)
+
+
+def test_lgc_layers_contraction():
+    """gamma-contraction: ||u - LGC_k(u)||^2 <= (1 - K/D) ||u||^2."""
+    for seed in range(5):
+        u = _rand(4096, seed)
+        ks = (40, 160, 600)
+        layers, _ = lgc.lgc_layers(u, ks)
+        res = np.asarray(u - jnp.sum(layers, axis=0))
+        lhs = (res ** 2).sum()
+        rhs = (1 - sum(ks) / 4096) * (np.asarray(u) ** 2).sum()
+        assert lhs <= rhs * (1 + 1e-6)
+
+
+def test_lgc_layers_rejects_bad_k():
+    with pytest.raises(ValueError):
+        lgc.lgc_layers(_rand(64, 0), (65,))

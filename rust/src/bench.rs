@@ -1,0 +1,266 @@
+//! Bench harness (no `criterion` offline): warmup + timed iterations with
+//! mean / p50 / p99 and throughput reporting, and a tiny table printer used
+//! by the figure benches to emit paper-style rows.
+
+use std::time::Instant;
+
+/// Timing summary of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    /// Throughput given per-iteration work in bytes.
+    pub fn gib_per_s(&self, bytes_per_iter: usize) -> f64 {
+        bytes_per_iter as f64 / (self.mean_ns / 1e9) / (1024.0 * 1024.0 * 1024.0)
+    }
+
+    pub fn report(&self, extra: &str) {
+        println!(
+            "{:<44} {:>10.2} us/iter  p50 {:>9.2}  p99 {:>9.2}  ({} iters){}{}",
+            self.name,
+            self.mean_us(),
+            self.p50_ns / 1e3,
+            self.p99_ns / 1e3,
+            self.iters,
+            if extra.is_empty() { "" } else { "  " },
+            extra
+        );
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed ones.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / iters as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        p50_ns: samples[iters / 2],
+        p99_ns: samples[(iters * 99 / 100).min(iters - 1)],
+        min_ns: samples[0],
+    }
+}
+
+/// Auto-calibrating variant: picks an iteration count that takes roughly
+/// `target_ms` total.
+pub fn bench_auto<F: FnMut()>(name: &str, target_ms: f64, mut f: F) -> BenchResult {
+    // measure one call
+    let t0 = Instant::now();
+    f();
+    let once_ns = t0.elapsed().as_nanos().max(1) as f64;
+    let iters = ((target_ms * 1e6 / once_ns).ceil() as usize).clamp(3, 10_000);
+    bench(name, (iters / 10).max(1), iters, f)
+}
+
+/// Simple fixed-width table printer for figure benches.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!("{:<width$}  ", c, width = w));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        let total: usize = widths.iter().sum::<usize>() + 2 * widths.len();
+        println!("{}", "-".repeat(total));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Shared rendering for the figure benches: given one [`RunLog`] per
+/// mechanism, print the paper's four panels (loss vs round, accuracy vs
+/// round, accuracy under energy budgets, accuracy under money budgets).
+pub mod figures {
+    use super::Table;
+    use crate::metrics::RunLog;
+
+    /// Panels 1+2: loss / accuracy convergence curves, sampled at the
+    /// evaluated rounds.
+    pub fn print_convergence(logs: &[RunLog]) {
+        let mut headers = vec!["round".to_string()];
+        for log in logs {
+            headers.push(format!("{} loss", log.name));
+            headers.push(format!("{} acc", log.name));
+        }
+        let hdr_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+        let mut table = Table::new(&hdr_refs);
+        let rounds: Vec<usize> = logs[0]
+            .records
+            .iter()
+            .filter(|r| !r.eval_acc.is_nan())
+            .map(|r| r.round)
+            .collect();
+        for &round in &rounds {
+            let mut cells = vec![round.to_string()];
+            for log in logs {
+                match log.records.iter().find(|r| r.round == round && !r.eval_acc.is_nan()) {
+                    Some(r) => {
+                        cells.push(format!("{:.4}", r.eval_loss));
+                        cells.push(format!("{:.4}", r.eval_acc));
+                    }
+                    None => {
+                        cells.push("-".into());
+                        cells.push("-".into());
+                    }
+                }
+            }
+            table.row(&cells);
+        }
+        println!("\n-- convergence: eval loss / accuracy vs round --");
+        table.print();
+    }
+
+    /// Panels 3+4: best accuracy under increasing resource budgets
+    /// (`resource`: 0 = energy J, 1 = money).
+    pub fn print_budget_panel(logs: &[RunLog], resource: usize, budgets: &[f64], unit: &str) {
+        let mut headers = vec![format!("budget ({unit})")];
+        for log in logs {
+            headers.push(log.name.clone());
+        }
+        let hdr_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+        let mut table = Table::new(&hdr_refs);
+        for &b in budgets {
+            let mut cells = vec![format!("{b:.2}")];
+            for log in logs {
+                let acc = log.acc_under_budget(resource, b);
+                cells.push(if acc.is_nan() { "-".into() } else { format!("{acc:.4}") });
+            }
+            table.row(&cells);
+        }
+        println!(
+            "\n-- best accuracy within {} budget --",
+            if resource == 0 { "energy" } else { "money" }
+        );
+        table.print();
+    }
+
+    /// Budget grids spanning the observed cost range across all logs.
+    pub fn budget_grid(logs: &[RunLog], resource: usize, points: usize) -> Vec<f64> {
+        let max = logs
+            .iter()
+            .filter_map(|l| l.records.last())
+            .map(|r| if resource == 0 { r.energy_j } else { r.money })
+            .fold(0.0, f64::max);
+        (1..=points).map(|i| max * i as f64 / points as f64).collect()
+    }
+
+    /// Print the headline table: resources to reach a target accuracy.
+    pub fn print_cost_to_target(logs: &[RunLog], target: f64) {
+        let mut table = Table::new(&[
+            "mechanism",
+            "rounds to target",
+            "energy (J)",
+            "money",
+            "sim time (s)",
+        ]);
+        for log in logs {
+            match log.cost_to_accuracy(target) {
+                Some((round, e, m, t)) => table.row(&[
+                    log.name.clone(),
+                    round.to_string(),
+                    format!("{e:.1}"),
+                    format!("{m:.4}"),
+                    format!("{t:.1}"),
+                ]),
+                None => table.row(&[
+                    log.name.clone(),
+                    "never".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]),
+            }
+        }
+        println!("\n-- resources to reach {:.0}% accuracy --", target * 100.0);
+        table.print();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut acc = 0u64;
+        let r = bench("spin", 2, 50, || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns <= r.p99_ns);
+        assert!(r.min_ns <= r.p50_ns);
+        assert!(acc != 1); // keep the work alive
+    }
+
+    #[test]
+    fn bench_auto_calibrates() {
+        let r = bench_auto("noop-ish", 5.0, || {
+            std::hint::black_box(42u64.wrapping_mul(7));
+        });
+        assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1e9, // 1 s
+            p50_ns: 1e9,
+            p99_ns: 1e9,
+            min_ns: 1e9,
+        };
+        assert!((r.gib_per_s(1 << 30) - 1.0).abs() < 1e-9);
+    }
+}

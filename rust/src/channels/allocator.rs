@@ -1,0 +1,137 @@
+//! Layer-to-channel traffic allocation (the `D_{m,n}` action, Eq. 13).
+//!
+//! Given a total coordinate budget `D` and the current per-channel state, an
+//! [`AllocationPlan`] decides how many gradient entries each channel carries
+//! this round. The DRL agent emits raw fractions; [`allocate_budget`]
+//! projects them onto the feasible set (non-negative, sums to `<= D`,
+//! Eq. 10b) and orders layers so that **the most important layer (largest
+//! magnitudes, layer 0) rides the most reliable channel** — the layered-
+//! coding analogy of the paper: base layer on the best link, enhancement
+//! layers on the rest.
+
+use crate::util::clamp;
+
+/// Concrete per-channel coordinate counts for one round.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AllocationPlan {
+    /// `counts[n]` = number of gradient entries shipped on channel `n`.
+    /// Index order matches `DeviceChannels::links`.
+    pub counts: Vec<usize>,
+}
+
+impl AllocationPlan {
+    pub fn total(&self) -> usize {
+        self.counts.iter().sum()
+    }
+
+    /// Layer budgets `ks` for the LGC encoder: drop zero-count channels and
+    /// keep channel order (channel list is fastest-first by construction, so
+    /// layer 0 = base layer = most reliable channel).
+    pub fn layer_budgets(&self) -> Vec<usize> {
+        self.counts.iter().copied().filter(|&c| c > 0).collect()
+    }
+
+    /// Maps layer index (in `layer_budgets` order) back to channel index.
+    pub fn layer_channels(&self) -> Vec<usize> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+/// Project raw per-channel fractions (any reals, e.g. raw DDPG actor output
+/// in [-1, 1]) onto a feasible allocation of at most `d_total` coordinates,
+/// with at least `min_total` coordinates overall so the update never
+/// degenerates to zero traffic.
+pub fn allocate_budget(
+    raw_fracs: &[f64],
+    d_total: usize,
+    min_total: usize,
+) -> AllocationPlan {
+    assert!(!raw_fracs.is_empty());
+    let n = raw_fracs.len();
+    // Map raw in [-1,1] (or anything) to [0,1] shares.
+    let shares: Vec<f64> = raw_fracs.iter().map(|&r| clamp(0.5 * (r + 1.0), 0.0, 1.0)).collect();
+    let sum: f64 = shares.iter().sum();
+    let mut counts: Vec<usize> = if sum <= 1e-12 {
+        // Degenerate action: fall back to uniform minimal traffic.
+        vec![min_total.max(n) / n; n]
+    } else {
+        // Interpret each share as a fraction of d_total, then rescale if the
+        // total exceeds the Eq. 10b cap.
+        let desired: Vec<f64> = shares.iter().map(|&s| s * d_total as f64).collect();
+        let total: f64 = desired.iter().sum();
+        let scale = if total > d_total as f64 { d_total as f64 / total } else { 1.0 };
+        desired.iter().map(|&x| (x * scale).floor() as usize).collect()
+    };
+    // Enforce the floor so at least `min_total` coordinates flow.
+    let mut total: usize = counts.iter().sum();
+    if total < min_total {
+        // Put the deficit on the first (most reliable) channel.
+        counts[0] += min_total - total;
+        total = min_total;
+    }
+    // Cap (flooring can't exceed, but the fallback path might).
+    if total > d_total {
+        let mut excess = total - d_total;
+        for c in counts.iter_mut().rev() {
+            let take = (*c).min(excess);
+            *c -= take;
+            excess -= take;
+            if excess == 0 {
+                break;
+            }
+        }
+    }
+    AllocationPlan { counts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn respects_total_cap() {
+        let plan = allocate_budget(&[1.0, 1.0, 1.0], 1000, 10);
+        assert!(plan.total() <= 1000, "{plan:?}");
+    }
+
+    #[test]
+    fn enforces_min_total() {
+        let plan = allocate_budget(&[-1.0, -1.0, -1.0], 1000, 64);
+        assert!(plan.total() >= 64, "{plan:?}");
+        assert!(plan.total() <= 1000);
+    }
+
+    #[test]
+    fn proportional_to_shares() {
+        let plan = allocate_budget(&[0.0, -0.5, -1.0], 4000, 1);
+        // shares 0.5, 0.25, 0.0 -> counts ~2000, 1000, 0 (< cap, no rescale)
+        assert!((plan.counts[0] as i64 - 2000).abs() <= 1, "{plan:?}");
+        assert!((plan.counts[1] as i64 - 1000).abs() <= 1, "{plan:?}");
+        assert_eq!(plan.counts[2], 0);
+    }
+
+    #[test]
+    fn layer_budgets_skip_silent_channels() {
+        let plan = AllocationPlan { counts: vec![100, 0, 50] };
+        assert_eq!(plan.layer_budgets(), vec![100, 50]);
+        assert_eq!(plan.layer_channels(), vec![0, 2]);
+    }
+
+    #[test]
+    fn never_negative_and_never_empty() {
+        for raw in [
+            vec![-1.0; 3],
+            vec![1.0; 3],
+            vec![0.3, -0.9, 0.9],
+            vec![f64::NAN.min(0.0); 3], // guarded by clamp
+        ] {
+            let plan = allocate_budget(&raw, 500, 16);
+            assert!(plan.total() >= 16 && plan.total() <= 500, "{raw:?} -> {plan:?}");
+        }
+    }
+}

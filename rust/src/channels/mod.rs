@@ -1,0 +1,423 @@
+//! Multi-channel mobile-edge network simulator (paper Sec. 1, 4.1).
+//!
+//! Each device owns several uplink channels (3G / 4G / 5G). Per channel we
+//! model:
+//!
+//! - **energy** (J/MB): Gaussian with the Table-1 parameters
+//!   (3G mean 1296, 4G 2.2x, 5G 2.5x2.2x; sigma 3.3e-4), following
+//!   Wang et al. 2019 as the paper does;
+//! - **money** ($/MB): flat per-MB tariff per technology (5G data is the
+//!   most expensive, 3G the cheapest — standard mobile pricing shape);
+//! - **bandwidth** (MB/s): a 3-state Markov fading chain (Good / Mid / Bad)
+//!   so conditions are *dynamic*, which is the premise of the DRL controller;
+//! - **latency** (s): per-transfer setup time.
+//!
+//! [`Link`] samples a concrete `(time, energy, money)` for a transfer of a
+//! given byte size; [`DeviceChannels`] is the per-device bundle the
+//! coordinator and the DRL agent observe.
+
+pub mod allocator;
+
+pub use allocator::{allocate_budget, AllocationPlan};
+
+use crate::util::Rng;
+
+/// Channel technology, with Table-1 energy parameters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ChannelType {
+    G3,
+    G4,
+    G5,
+}
+
+/// Base energy cost of 3G in J/MB (paper Table 1).
+pub const ENERGY_3G_J_PER_MB: f64 = 1296.0;
+/// Table 1: sigma of the Gaussian energy model.
+pub const ENERGY_SIGMA: f64 = 0.00033;
+
+impl ChannelType {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "3g" | "g3" => Ok(ChannelType::G3),
+            "4g" | "g4" | "lte" => Ok(ChannelType::G4),
+            "5g" | "g5" => Ok(ChannelType::G5),
+            other => Err(format!("unknown channel type `{other}`")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ChannelType::G3 => "3G",
+            ChannelType::G4 => "4G",
+            ChannelType::G5 => "5G",
+        }
+    }
+
+    /// Mean energy per MB uploaded (Table 1).
+    pub fn energy_mean_j_per_mb(&self) -> f64 {
+        match self {
+            ChannelType::G3 => ENERGY_3G_J_PER_MB,
+            ChannelType::G4 => 2.2 * ENERGY_3G_J_PER_MB,
+            ChannelType::G5 => 2.5 * 2.2 * ENERGY_3G_J_PER_MB,
+        }
+    }
+
+    /// Money tariff per MB (currency units). The paper reports money cost but
+    /// not the tariff table; we use a typical monotone-in-speed pricing.
+    pub fn money_per_mb(&self) -> f64 {
+        match self {
+            ChannelType::G3 => 0.01,
+            ChannelType::G4 => 0.02,
+            ChannelType::G5 => 0.05,
+        }
+    }
+
+    /// Nominal (good-state) uplink bandwidth in MB/s.
+    pub fn bandwidth_mb_s(&self) -> f64 {
+        match self {
+            ChannelType::G3 => 0.25,  // ~2 Mbps
+            ChannelType::G4 => 1.5,   // ~12 Mbps
+            ChannelType::G5 => 12.0,  // ~100 Mbps
+        }
+    }
+
+    /// Per-transfer latency (radio setup + RTT) in seconds.
+    pub fn latency_s(&self) -> f64 {
+        match self {
+            ChannelType::G3 => 0.30,
+            ChannelType::G4 => 0.08,
+            ChannelType::G5 => 0.02,
+        }
+    }
+}
+
+/// Markov fading state of a link.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fading {
+    Good,
+    Mid,
+    Bad,
+}
+
+impl Fading {
+    /// Bandwidth multiplier for the state.
+    pub fn gain(&self) -> f64 {
+        match self {
+            Fading::Good => 1.0,
+            Fading::Mid => 0.45,
+            Fading::Bad => 0.12,
+        }
+    }
+
+    /// Probability that a whole transfer is lost in this state (layer-level
+    /// erasure — the premise of layered coding: enhancement layers on shaky
+    /// channels may vanish, the base layer on a good channel survives).
+    pub fn loss_prob(&self) -> f64 {
+        match self {
+            Fading::Good => 0.0,
+            Fading::Mid => 0.03,
+            Fading::Bad => 0.20,
+        }
+    }
+
+    /// Row-stochastic transition matrix (sticky chain; dwell ~5 rounds).
+    fn transition(&self, rng: &mut Rng) -> Fading {
+        let rows = match self {
+            Fading::Good => [0.80, 0.15, 0.05],
+            Fading::Mid => [0.20, 0.65, 0.15],
+            Fading::Bad => [0.10, 0.30, 0.60],
+        };
+        match rng.choice_weighted(&rows.map(|x| x)) {
+            0 => Fading::Good,
+            1 => Fading::Mid,
+            _ => Fading::Bad,
+        }
+    }
+}
+
+/// Cost sample for one transfer over one channel.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TransferCost {
+    /// Wall-clock seconds (latency + bytes / effective bandwidth).
+    pub time_s: f64,
+    /// Joules consumed (Table-1 Gaussian x MB).
+    pub energy_j: f64,
+    /// Currency units.
+    pub money: f64,
+    /// Bytes moved.
+    pub bytes: u64,
+}
+
+impl TransferCost {
+    pub fn zero() -> Self {
+        Self::default()
+    }
+
+    pub fn accumulate(&mut self, other: &TransferCost) {
+        // Time accumulates as max elsewhere (parallel channels); here plain sum
+        // is for per-channel totals.
+        self.time_s += other.time_s;
+        self.energy_j += other.energy_j;
+        self.money += other.money;
+        self.bytes += other.bytes;
+    }
+}
+
+/// One uplink channel instance of a device, with dynamic fading state.
+#[derive(Clone, Debug)]
+pub struct Link {
+    pub ty: ChannelType,
+    pub fading: Fading,
+    rng: Rng,
+}
+
+impl Link {
+    pub fn new(ty: ChannelType, seed_rng: &Rng, tag: u64) -> Self {
+        Link { ty, fading: Fading::Good, rng: seed_rng.fork(tag) }
+    }
+
+    /// Advance fading by one round (call once per FL round).
+    pub fn step_round(&mut self) {
+        self.fading = self.fading.transition(&mut self.rng);
+    }
+
+    /// Effective bandwidth right now (MB/s).
+    pub fn effective_bandwidth(&self) -> f64 {
+        self.ty.bandwidth_mb_s() * self.fading.gain()
+    }
+
+    /// Sample the cost of uploading `bytes` over this link now.
+    /// Zero-byte transfers cost nothing (channel stays silent).
+    pub fn transfer(&mut self, bytes: u64) -> TransferCost {
+        if bytes == 0 {
+            return TransferCost::zero();
+        }
+        let mb = bytes as f64 / (1024.0 * 1024.0);
+        let e_per_mb = self
+            .rng
+            .gaussian(self.ty.energy_mean_j_per_mb(), ENERGY_SIGMA)
+            .max(0.0);
+        TransferCost {
+            time_s: self.ty.latency_s() + mb / self.effective_bandwidth(),
+            energy_j: e_per_mb * mb,
+            money: self.ty.money_per_mb() * mb,
+            bytes,
+        }
+    }
+
+    /// Like [`Link::transfer`], but the payload may be erased: returns the
+    /// cost (energy/money/airtime are spent either way — the radio
+    /// transmitted) plus a delivery flag drawn from the fading state's
+    /// erasure probability.
+    pub fn transfer_lossy(&mut self, bytes: u64) -> (TransferCost, bool) {
+        let cost = self.transfer(bytes);
+        if bytes == 0 {
+            return (cost, true);
+        }
+        let delivered = self.rng.uniform() >= self.fading.loss_prob();
+        (cost, delivered)
+    }
+
+    /// Deterministic expected cost (for planners / the DRL state).
+    pub fn expected_cost(&self, bytes: u64) -> TransferCost {
+        if bytes == 0 {
+            return TransferCost::zero();
+        }
+        let mb = bytes as f64 / (1024.0 * 1024.0);
+        TransferCost {
+            time_s: self.ty.latency_s() + mb / self.effective_bandwidth(),
+            energy_j: self.ty.energy_mean_j_per_mb() * mb,
+            money: self.ty.money_per_mb() * mb,
+            bytes,
+        }
+    }
+}
+
+/// All uplink channels of one device.
+#[derive(Clone, Debug)]
+pub struct DeviceChannels {
+    pub links: Vec<Link>,
+}
+
+impl DeviceChannels {
+    pub fn new(types: &[ChannelType], rng: &Rng, device_id: usize) -> Self {
+        let links = types
+            .iter()
+            .enumerate()
+            .map(|(i, &ty)| Link::new(ty, rng, (device_id as u64) << 16 | i as u64))
+            .collect();
+        DeviceChannels { links }
+    }
+
+    pub fn len(&self) -> usize {
+        self.links.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.links.is_empty()
+    }
+
+    /// Advance every link's fading chain by one round.
+    pub fn step_round(&mut self) {
+        for l in &mut self.links {
+            l.step_round();
+        }
+    }
+
+    /// Upload `sizes[i]` bytes over link i **in parallel** (the paper's
+    /// multi-channel upload): wall time is the max over channels, energy and
+    /// money are sums. Returns (wall_time, per-channel costs).
+    pub fn parallel_upload(&mut self, sizes: &[u64]) -> (f64, Vec<TransferCost>) {
+        assert_eq!(sizes.len(), self.links.len(), "one size per channel");
+        let costs: Vec<TransferCost> = self
+            .links
+            .iter_mut()
+            .zip(sizes)
+            .map(|(l, &b)| l.transfer(b))
+            .collect();
+        let wall = costs.iter().map(|c| c.time_s).fold(0.0, f64::max);
+        (wall, costs)
+    }
+
+    /// Lossy variant of [`DeviceChannels::parallel_upload`]: per-channel
+    /// costs plus delivery flags.
+    pub fn parallel_upload_lossy(&mut self, sizes: &[u64]) -> (f64, Vec<(TransferCost, bool)>) {
+        assert_eq!(sizes.len(), self.links.len(), "one size per channel");
+        let costs: Vec<(TransferCost, bool)> = self
+            .links
+            .iter_mut()
+            .zip(sizes)
+            .map(|(l, &b)| l.transfer_lossy(b))
+            .collect();
+        let wall = costs.iter().map(|(c, _)| c.time_s).fold(0.0, f64::max);
+        (wall, costs)
+    }
+
+    /// Index of the currently fastest link.
+    pub fn fastest(&self) -> usize {
+        let mut best = 0;
+        for (i, l) in self.links.iter().enumerate() {
+            if l.effective_bandwidth() > self.links[best].effective_bandwidth() {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_energy_means() {
+        assert_eq!(ChannelType::G3.energy_mean_j_per_mb(), 1296.0);
+        assert!((ChannelType::G4.energy_mean_j_per_mb() - 2851.2).abs() < 1e-9);
+        assert!((ChannelType::G5.energy_mean_j_per_mb() - 7128.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sampled_energy_matches_table1_mean() {
+        let rng = Rng::new(1);
+        let mut link = Link::new(ChannelType::G3, &rng, 0);
+        let mb = 1024 * 1024; // 1 MB
+        let n = 2000;
+        let mean = (0..n)
+            .map(|_| link.transfer(mb).energy_j)
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean - 1296.0).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn transfer_cost_scales_linearly_in_bytes() {
+        let rng = Rng::new(2);
+        let link = Link::new(ChannelType::G4, &rng, 0);
+        let c1 = link.expected_cost(1024 * 1024);
+        let c4 = link.expected_cost(4 * 1024 * 1024);
+        assert!((c4.energy_j / c1.energy_j - 4.0).abs() < 1e-9);
+        assert!((c4.money / c1.money - 4.0).abs() < 1e-9);
+        let t1 = c1.time_s - ChannelType::G4.latency_s();
+        let t4 = c4.time_s - ChannelType::G4.latency_s();
+        assert!((t4 / t1 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_bytes_is_free() {
+        let rng = Rng::new(3);
+        let mut link = Link::new(ChannelType::G5, &rng, 0);
+        assert_eq!(link.transfer(0), TransferCost::zero());
+    }
+
+    #[test]
+    fn fading_changes_bandwidth_over_time() {
+        let rng = Rng::new(4);
+        let mut link = Link::new(ChannelType::G4, &rng, 0);
+        let mut states = std::collections::HashSet::new();
+        for _ in 0..200 {
+            link.step_round();
+            states.insert(format!("{:?}", link.fading));
+        }
+        assert!(states.len() >= 2, "fading chain never moved: {states:?}");
+        assert!(link.effective_bandwidth() <= link.ty.bandwidth_mb_s());
+    }
+
+    #[test]
+    fn parallel_upload_wall_time_is_max() {
+        let rng = Rng::new(5);
+        let mut ch = DeviceChannels::new(
+            &[ChannelType::G5, ChannelType::G4, ChannelType::G3],
+            &rng,
+            0,
+        );
+        let (wall, costs) = ch.parallel_upload(&[1 << 20, 1 << 20, 1 << 20]);
+        let max = costs.iter().map(|c| c.time_s).fold(0.0, f64::max);
+        assert_eq!(wall, max);
+        // the 3G leg should dominate
+        assert_eq!(
+            costs.iter().enumerate().max_by(|a, b| a.1.time_s.total_cmp(&b.1.time_s)).unwrap().0,
+            2
+        );
+    }
+
+    #[test]
+    fn fastest_tracks_fading() {
+        let rng = Rng::new(6);
+        let ch = DeviceChannels::new(&[ChannelType::G3, ChannelType::G5], &rng, 1);
+        assert_eq!(ch.fastest(), 1);
+    }
+
+    #[test]
+    fn lossy_transfer_charges_even_when_lost() {
+        let rng = Rng::new(9);
+        let mut link = Link::new(ChannelType::G4, &rng, 0);
+        link.fading = Fading::Bad;
+        let mut lost = 0;
+        let mut spent = 0.0;
+        for _ in 0..2000 {
+            let (cost, delivered) = link.transfer_lossy(1 << 20);
+            spent += cost.energy_j;
+            if !delivered {
+                lost += 1;
+            }
+        }
+        // ~20% loss in Bad fading, full energy charged regardless.
+        assert!((lost as f64 / 2000.0 - 0.20).abs() < 0.04, "lost {lost}/2000");
+        assert!(spent > 0.0);
+    }
+
+    #[test]
+    fn good_fading_never_loses() {
+        let rng = Rng::new(10);
+        let mut link = Link::new(ChannelType::G5, &rng, 0);
+        for _ in 0..500 {
+            assert!(link.transfer_lossy(1024).1);
+        }
+    }
+
+    #[test]
+    fn money_ordering() {
+        assert!(ChannelType::G5.money_per_mb() > ChannelType::G4.money_per_mb());
+        assert!(ChannelType::G4.money_per_mb() > ChannelType::G3.money_per_mb());
+    }
+}

@@ -1,0 +1,144 @@
+//! Error-feedback memory `e_m` (Alg. 1 lines 8 & 11).
+//!
+//! The device accumulates everything compression dropped:
+//!
+//! ```text
+//! u^(t)     = e^(t) + (w^(t) − ŵ^(t+1/2))          (line 8)
+//! g^(t)     = LGC(u^(t))                            (line 9)
+//! e^(t+1)   = u^(t) − g^(t)                         (line 11)
+//! ```
+//!
+//! The telescoping invariant `e^(t+1) + g^(t) == u^(t)` holds exactly in
+//! floating point because we compute `e` by zeroing the shipped coordinates
+//! of `u` (not by subtraction): gradient mass is never lost or duplicated.
+
+use super::LgcUpdate;
+
+/// Per-device error-feedback state.
+#[derive(Clone, Debug)]
+pub struct ErrorFeedback {
+    e: Vec<f32>,
+}
+
+impl ErrorFeedback {
+    pub fn new(dim: usize) -> Self {
+        ErrorFeedback { e: vec![0.0; dim] }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.e.len()
+    }
+
+    pub fn memory(&self) -> &[f32] {
+        &self.e
+    }
+
+    /// Squared norm of the memory (Lemma 1 diagnostics).
+    pub fn norm2(&self) -> f64 {
+        crate::util::norm2(&self.e)
+    }
+
+    /// Build the error-compensated update `u = e + progress` in-place into
+    /// `u_buf` (line 8). `progress = w^(t) − ŵ^(t+1/2)` is the net local
+    /// descent since the last sync.
+    pub fn compensate(&self, progress: &[f32], u_buf: &mut Vec<f32>) {
+        assert_eq!(progress.len(), self.e.len());
+        u_buf.clear();
+        u_buf.extend(self.e.iter().zip(progress).map(|(&e, &p)| e + p));
+    }
+
+    /// Absorb what the compressor dropped (line 11): `e' = u − decode(g)`,
+    /// computed exactly by copying `u` and zeroing the shipped coordinates.
+    pub fn absorb(&mut self, u: &[f32], shipped: &LgcUpdate) {
+        assert_eq!(u.len(), self.e.len());
+        assert_eq!(shipped.dim, self.e.len());
+        self.e.copy_from_slice(u);
+        for layer in &shipped.layers {
+            for &i in &layer.indices {
+                self.e[i as usize] = 0.0;
+            }
+        }
+    }
+
+    /// Put a coordinate's mass back into the memory — used when a shipped
+    /// layer is lost in transit (the erasure-channel path): `absorb` zeroed
+    /// it as delivered, restitution undoes that so nothing is destroyed.
+    pub fn restitute(&mut self, i: usize, value: f32) {
+        self.e[i] = value;
+    }
+
+    /// Reset (e.g., FedAvg has no memory).
+    pub fn reset(&mut self) {
+        self.e.iter_mut().for_each(|x| *x = 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::{lgc_compress, CompressScratch};
+    use crate::util::Rng;
+
+    fn randu(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn telescoping_exact() {
+        let mut ef = ErrorFeedback::new(256);
+        let mut scratch = CompressScratch::default();
+        let mut u = Vec::new();
+        for round in 0..10 {
+            let progress = randu(256, round);
+            ef.compensate(&progress, &mut u);
+            let g = lgc_compress(&u, &[8, 24], &mut scratch);
+            let dec = g.decode();
+            ef.absorb(&u, &g);
+            // e' + decode(g) == u exactly (bitwise)
+            for i in 0..256 {
+                assert_eq!(ef.memory()[i] + dec[i], u[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn memory_zero_when_no_compression() {
+        let mut ef = ErrorFeedback::new(64);
+        let mut scratch = CompressScratch::default();
+        let mut u = Vec::new();
+        let progress = randu(64, 5);
+        ef.compensate(&progress, &mut u);
+        let g = lgc_compress(&u, &[64], &mut scratch);
+        ef.absorb(&u, &g);
+        assert_eq!(ef.norm2(), 0.0);
+    }
+
+    #[test]
+    fn memory_accumulates_dropped_mass() {
+        let mut ef = ErrorFeedback::new(128);
+        let mut scratch = CompressScratch::default();
+        let mut u = Vec::new();
+        let progress = vec![1.0f32; 128];
+        ef.compensate(&progress, &mut u);
+        let g = lgc_compress(&u, &[16], &mut scratch);
+        ef.absorb(&u, &g);
+        // 112 coordinates of magnitude 1 dropped
+        assert_eq!(ef.norm2(), 112.0);
+        // next round the dropped coordinates are compensated
+        ef.compensate(&vec![0.0; 128], &mut u);
+        assert_eq!(u.iter().filter(|&&x| x == 1.0).count(), 112);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut ef = ErrorFeedback::new(8);
+        let mut u = Vec::new();
+        ef.compensate(&vec![1.0; 8], &mut u);
+        let g = crate::compression::lgc_compress(&u, &[1], &mut CompressScratch::default());
+        ef.absorb(&u, &g);
+        assert!(ef.norm2() > 0.0);
+        ef.reset();
+        assert_eq!(ef.norm2(), 0.0);
+    }
+}

@@ -1,0 +1,504 @@
+//! Gradient compression: `Top_k`, banded `Top_{α,β}` (Eq. 1), the layered
+//! `LGC_k` encoder/decoder (Eq. 2), error-feedback memory (Alg. 1), a sparse
+//! wire format, and a QSGD-style quantizer baseline.
+//!
+//! This is the Rust-native hot path used by the round loop (A2 in DESIGN.md
+//! benches it against the AOT `lgc_compress` artifact). Selection is a
+//! single O(D) `select_nth_unstable` pass over |u| with reusable scratch —
+//! no allocation at steady state.
+
+pub mod error_feedback;
+pub mod quantize;
+pub mod rand_k;
+pub mod wire;
+
+pub use error_feedback::ErrorFeedback;
+pub use rand_k::RandK;
+pub use wire::{SparseChunk, WIRE_BYTES_PER_ENTRY};
+
+/// One magnitude-banded layer of a compressed update.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Layer {
+    /// Coordinate indices (ascending).
+    pub indices: Vec<u32>,
+    /// Values at those coordinates.
+    pub values: Vec<f32>,
+}
+
+impl Layer {
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+    /// Wire size in bytes (delta-encoded index + value per entry).
+    pub fn wire_bytes(&self) -> u64 {
+        wire::encoded_len(self.len()) as u64
+    }
+}
+
+/// Layered compressed update: `layers[0]` is the base layer (largest
+/// magnitudes), `layers[c]` the c-th enhancement layer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LgcUpdate {
+    pub dim: usize,
+    pub layers: Vec<Layer>,
+}
+
+impl LgcUpdate {
+    pub fn total_nnz(&self) -> usize {
+        self.layers.iter().map(Layer::len).sum()
+    }
+
+    /// Dense decode: `LGC_k(u) = Σ_c layer_c` (Eq. 2). Any subset of layers
+    /// decodes (graceful degradation when a channel drops).
+    pub fn decode(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.dim];
+        self.add_into(&mut out, 1.0);
+        out
+    }
+
+    /// Accumulate `scale * decode(self)` into `out` without allocating.
+    pub fn add_into(&self, out: &mut [f32], scale: f32) {
+        assert_eq!(out.len(), self.dim);
+        for layer in &self.layers {
+            for (&i, &v) in layer.indices.iter().zip(&layer.values) {
+                out[i as usize] += scale * v;
+            }
+        }
+    }
+}
+
+/// Reusable scratch for compression so the round loop never allocates.
+#[derive(Default, Clone)]
+pub struct CompressScratch {
+    /// Packed sort keys: `(|u_i| bit pattern) << 32 | i`.
+    keys: Vec<u64>,
+    /// Top-byte histogram for the radix-select fast path.
+    hist: Vec<u32>,
+    /// Gathered boundary-bucket keys (one vec per distinct boundary bucket).
+    buckets: Vec<(u8, Vec<u64>)>,
+}
+
+/// Pack `(magnitude, index)` into one u64 key. For non-NaN f32, the ordering
+/// of `bits & 0x7FFF_FFFF` equals the ordering of `|x|`, so comparing keys
+/// compares magnitudes first and breaks ties by coordinate index — a single
+/// primitive `u64` comparison instead of two indirect float loads — the
+/// §Perf optimization that halved `lgc_compress` time vs the indirect
+/// `total_cmp` version (see EXPERIMENTS.md §Perf iteration log).
+#[inline]
+fn pack_key(x: f32, i: usize) -> u64 {
+    (((x.to_bits() & 0x7FFF_FFFF) as u64) << 32) | i as u64
+}
+
+#[inline]
+fn key_index(k: u64) -> usize {
+    (k & 0xFFFF_FFFF) as usize
+}
+
+/// Radix-select variant of [`lgc_compress`] — kept as a documented §Perf
+/// iteration (measured ~2x slower than the partition path on gradient-like
+/// data because float exponent buckets are massively non-uniform; see
+/// EXPERIMENTS.md §Perf). Because every packed key is unique
+/// (index in the low bits), band membership is a total order with no ties:
+///
+/// 1. one pass histograms the top magnitude byte (`bits >> 23`),
+/// 2. each cumulative boundary `K_c` resolves to a bucket; one gather pass
+///    collects only the boundary buckets' keys (≈ D/256 each), which are
+///    sorted to read off the *exact* K_c-th largest key as the threshold,
+/// 3. one final pass assigns every element to its band by comparing its key
+///    against the C thresholds — emitting indices already in ascending
+///    order, so no per-band sort is needed.
+///
+/// Three linear passes + tiny sorts ≈ memory-bound; see EXPERIMENTS.md
+/// §Perf for the measured before/after vs the partition-based variant.
+pub fn lgc_compress_radix(u: &[f32], ks: &[usize], scratch: &mut CompressScratch) -> LgcUpdate {
+    let d = u.len();
+    let ktot: usize = ks.iter().sum();
+    assert!(ktot <= d, "sum(ks)={ktot} > D={d}");
+    assert!(!ks.is_empty());
+    if ktot == 0 {
+        return LgcUpdate {
+            dim: d,
+            layers: ks.iter().map(|_| Layer { indices: vec![], values: vec![] }).collect(),
+        };
+    }
+
+    // Pass 1: histogram of the top magnitude byte.
+    scratch.hist.clear();
+    scratch.hist.resize(256, 0);
+    for &x in u {
+        scratch.hist[((x.to_bits() & 0x7FFF_FFFF) >> 23) as usize] += 1;
+    }
+    // above[b] = #elements in buckets strictly greater than b.
+    let mut above = [0u64; 256];
+    let mut acc = 0u64;
+    for b in (0..256).rev() {
+        above[b] = acc;
+        acc += scratch.hist[b] as u64;
+    }
+
+    // Locate each cumulative boundary K_c's bucket and within-bucket rank.
+    // rank == 0 marks a degenerate K_c == 0 boundary (empty leading band).
+    let mut cum = 0usize;
+    let mut boundaries: Vec<(u8, usize)> = Vec::with_capacity(ks.len()); // (bucket, rank)
+    for &k in ks {
+        cum += k;
+        let kc = cum as u64;
+        if kc == 0 {
+            boundaries.push((0, 0));
+            continue;
+        }
+        let mut b = 255usize;
+        loop {
+            if above[b] < kc && kc <= above[b] + scratch.hist[b] as u64 {
+                break;
+            }
+            debug_assert!(b > 0, "boundary bucket not found for K={kc}");
+            b -= 1;
+        }
+        boundaries.push((b as u8, (kc - above[b]) as usize));
+    }
+
+    // Pass 2: gather keys of the distinct boundary buckets, sort descending.
+    for (_, v) in scratch.buckets.iter_mut() {
+        v.clear();
+    }
+    let mut distinct: Vec<u8> = boundaries
+        .iter()
+        .filter(|&&(_, rank)| rank > 0)
+        .map(|&(b, _)| b)
+        .collect();
+    distinct.sort_unstable();
+    distinct.dedup();
+    // Keep scratch.buckets aligned with the distinct set (reuse allocations).
+    while scratch.buckets.len() < distinct.len() {
+        scratch.buckets.push((0, Vec::new()));
+    }
+    for (slot, &b) in distinct.iter().enumerate() {
+        scratch.buckets[slot].0 = b;
+    }
+    let nslots = distinct.len();
+    // Single gather pass: small linear scan over <=C slots per element whose
+    // top byte matches a boundary bucket.
+    for (i, &x) in u.iter().enumerate() {
+        let bits = x.to_bits() & 0x7FFF_FFFF;
+        let tb = (bits >> 23) as u8;
+        for slot in 0..nslots {
+            if scratch.buckets[slot].0 == tb {
+                scratch.buckets[slot].1.push(((bits as u64) << 32) | i as u64);
+                break;
+            }
+        }
+    }
+    // Exact per-boundary threshold keys (the K_c-th largest key overall).
+    // Float exponent buckets are highly non-uniform (half of all
+    // normal-magnitude values share one exponent), so a boundary bucket can
+    // hold a large fraction of D — never sort it; `select_nth_unstable` each
+    // needed rank, processing ranks largest-first on a shrinking prefix so a
+    // bucket shared by several boundaries costs one partition per boundary.
+    let mut thr: Vec<u64> = vec![u64::MAX; ks.len()]; // MAX = degenerate K_c == 0
+    for (slot, &b) in distinct.iter().enumerate() {
+        let mut ranks: Vec<(usize, usize)> = boundaries
+            .iter()
+            .enumerate()
+            .filter(|(_, &(bb, rank))| bb == b && rank > 0)
+            .map(|(bi, &(_, rank))| (bi, rank))
+            .collect();
+        ranks.sort_unstable_by(|a, b| b.1.cmp(&a.1)); // largest rank first
+        let keys = &mut scratch.buckets[slot].1;
+        let mut hi = keys.len();
+        let mut prev_rank = usize::MAX;
+        let mut prev_thr = u64::MAX;
+        for (bi, rank) in ranks {
+            if rank == prev_rank {
+                thr[bi] = prev_thr; // duplicate cumulative boundary
+                continue;
+            }
+            let slice = &mut keys[..hi];
+            slice.select_nth_unstable_by(rank - 1, |a, b| b.cmp(a));
+            thr[bi] = slice[rank - 1];
+            prev_rank = rank;
+            prev_thr = thr[bi];
+            // The next (strictly smaller) rank lies within the top rank-1
+            // prefix left by the partition; rank == 1 has no smaller rank.
+            hi = (rank - 1).max(1);
+        }
+    }
+
+    // Pass 3: band assignment. Keys are unique, so `key >= thr[c]` <=>
+    // rank(key) <= K_c; the first matching band wins. Scan order emits
+    // ascending indices for free.
+    let mut layers: Vec<Layer> = ks
+        .iter()
+        .map(|&k| Layer {
+            indices: Vec::with_capacity(k),
+            values: Vec::with_capacity(k),
+        })
+        .collect();
+    let nb = thr.len();
+    for (i, &x) in u.iter().enumerate() {
+        let key = pack_key(x, i);
+        if key < thr[nb - 1] {
+            continue; // dropped coordinate (the common case)
+        }
+        for c in 0..nb {
+            if key >= thr[c] {
+                layers[c].indices.push(i as u32);
+                layers[c].values.push(x);
+                break;
+            }
+        }
+    }
+    debug_assert_eq!(layers.iter().map(Layer::len).sum::<usize>(), ktot);
+    LgcUpdate { dim: d, layers }
+}
+
+/// Compress `u` into `C = ks.len()` magnitude-banded layers (Eq. 2) — the
+/// production hot path: one `select_nth_unstable` partition over packed
+/// `u64` keys per band boundary, O(D + Σ K_c log k_c), zero steady-state
+/// allocation beyond the output layers. Cross-checked against
+/// [`lgc_compress_radix`] (an independent implementation) in tests.
+pub fn lgc_compress(u: &[f32], ks: &[usize], scratch: &mut CompressScratch) -> LgcUpdate {
+    let d = u.len();
+    let ktot: usize = ks.iter().sum();
+    assert!(ktot <= d, "sum(ks)={ktot} > D={d}");
+    assert!(!ks.is_empty());
+
+    scratch.keys.clear();
+    scratch.keys.reserve(d);
+    for (i, &x) in u.iter().enumerate() {
+        scratch.keys.push(pack_key(x, i));
+    }
+
+    // Partition so the first ktot keys are the top-K by magnitude
+    // (descending => compare reversed).
+    if ktot < d {
+        scratch.keys.select_nth_unstable_by(ktot, |a, b| b.cmp(a));
+    }
+    let top = &mut scratch.keys[..ktot];
+
+    // Carve the top-K region into bands at each cumulative boundary.
+    let mut layers = Vec::with_capacity(ks.len());
+    let mut start = 0usize;
+    let mut acc = 0usize;
+    for (c, &k) in ks.iter().enumerate() {
+        acc += k;
+        if k > 0 && acc < ktot && c + 1 < ks.len() {
+            top[start..].select_nth_unstable_by(k, |a, b| b.cmp(a));
+        }
+        let band = &mut top[start..acc];
+        // Ascending index order == ascending low-32-bits; a band never holds
+        // duplicate indices, and index order is what the wire format wants.
+        let mut indices: Vec<u32> = band.iter().map(|&k| key_index(k) as u32).collect();
+        indices.sort_unstable();
+        let values: Vec<f32> = indices.iter().map(|&i| u[i as usize]).collect();
+        layers.push(Layer { indices, values });
+        start = acc;
+    }
+    LgcUpdate { dim: d, layers }
+}
+
+/// Plain dense `Top_k` (single layer). Used by the Top-k baseline (A1).
+pub fn top_k(u: &[f32], k: usize, scratch: &mut CompressScratch) -> LgcUpdate {
+    lgc_compress(u, &[k.min(u.len())], scratch)
+}
+
+/// Banded `Top_{α,β}` by explicit thresholds (Eq. 1): keep
+/// `thr_hi >= |x| > thr_lo`. Mirrors the L1 Pallas kernel semantics exactly;
+/// used to cross-check the artifact path.
+pub fn band_by_threshold(u: &[f32], thr_hi: f32, thr_lo: f32) -> Layer {
+    let mut indices = Vec::new();
+    let mut values = Vec::new();
+    for (i, &x) in u.iter().enumerate() {
+        let a = x.abs();
+        if a <= thr_hi && a > thr_lo {
+            indices.push(i as u32);
+            values.push(x);
+        }
+    }
+    Layer { indices, values }
+}
+
+/// Compression contraction factor `γ = K/D` for the constants of Theorem 1:
+/// `E‖u − C(u)‖² ≤ (1 − γ)‖u‖²` for Top-K-type compressors.
+pub fn gamma(ks: &[usize], d: usize) -> f64 {
+    (ks.iter().sum::<usize>() as f64 / d as f64).min(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{norm2, Rng};
+
+    fn randu(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn decode_recovers_topk_support() {
+        let u = randu(512, 1);
+        let mut s = CompressScratch::default();
+        let upd = lgc_compress(&u, &[8, 24, 96], &mut s);
+        assert_eq!(upd.total_nnz(), 128);
+        let dec = upd.decode();
+        // Each nonzero of dec equals u there; count matches.
+        let nnz = dec.iter().filter(|&&x| x != 0.0).count();
+        assert_eq!(nnz, 128);
+        for (i, &x) in dec.iter().enumerate() {
+            if x != 0.0 {
+                assert_eq!(x, u[i]);
+            }
+        }
+        // The kept coordinates are exactly the 128 largest by |.|
+        let mut mags: Vec<(usize, f32)> = u.iter().cloned().enumerate().map(|(i, x)| (i, x.abs())).collect();
+        mags.sort_by(|a, b| b.1.total_cmp(&a.1));
+        for (i, _) in mags[..128].iter() {
+            assert_ne!(dec[*i], 0.0, "coordinate {i} should be kept");
+        }
+    }
+
+    #[test]
+    fn layers_are_disjoint_and_ordered() {
+        let u = randu(2048, 2);
+        let mut s = CompressScratch::default();
+        let upd = lgc_compress(&u, &[20, 80, 300], &mut s);
+        let mut seen = std::collections::HashSet::new();
+        for layer in &upd.layers {
+            for &i in &layer.indices {
+                assert!(seen.insert(i), "index {i} appears in two layers");
+            }
+        }
+        // min |value| of layer c >= max |value| of layer c+1
+        for c in 0..upd.layers.len() - 1 {
+            let lo_c = upd.layers[c].values.iter().map(|v| v.abs()).fold(f32::INFINITY, f32::min);
+            let hi_n = upd.layers[c + 1].values.iter().map(|v| v.abs()).fold(0.0, f32::max);
+            assert!(lo_c >= hi_n, "band ordering violated at layer {c}");
+        }
+    }
+
+    #[test]
+    fn k_equals_d_is_identity() {
+        let u = randu(100, 3);
+        let mut s = CompressScratch::default();
+        let upd = lgc_compress(&u, &[40, 60], &mut s);
+        assert_eq!(upd.decode(), u);
+    }
+
+    #[test]
+    fn contraction_property() {
+        // ‖u − LGC_k(u)‖² ≤ (1 − K/D)‖u‖² — Top-K is the best K-sparse
+        // approximation, so this holds deterministically in expectation form.
+        for seed in 0..5 {
+            let u = randu(1000, seed);
+            let mut s = CompressScratch::default();
+            let ks = [10, 40, 150];
+            let upd = lgc_compress(&u, &ks, &mut s);
+            let dec = upd.decode();
+            let res: Vec<f32> = u.iter().zip(&dec).map(|(a, b)| a - b).collect();
+            let g = gamma(&ks, 1000);
+            assert!(norm2(&res) <= (1.0 - g) * norm2(&u) + 1e-6);
+        }
+    }
+
+    #[test]
+    fn single_layer_equals_topk() {
+        let u = randu(256, 7);
+        let mut s = CompressScratch::default();
+        let a = lgc_compress(&u, &[32], &mut s);
+        let b = top_k(&u, 32, &mut s);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn band_by_threshold_matches_kernel_semantics() {
+        let u = [0.1f32, -0.5, 2.0, -3.0, 0.9];
+        let layer = band_by_threshold(&u, 2.0, 0.5);
+        assert_eq!(layer.indices, vec![2, 4]);
+        assert_eq!(layer.values, vec![2.0, 0.9]);
+    }
+
+    #[test]
+    fn decode_partial_layers_degrades_gracefully() {
+        let u = randu(512, 9);
+        let mut s = CompressScratch::default();
+        let mut upd = lgc_compress(&u, &[16, 64], &mut s);
+        let full = upd.decode();
+        upd.layers.pop(); // drop the enhancement layer (channel failure)
+        let base = upd.decode();
+        // base-only is still the best-16 approximation: closer to u than zero
+        assert!(norm2(&base.iter().zip(&u).map(|(a, b)| a - b).collect::<Vec<_>>())
+            >= norm2(&full.iter().zip(&u).map(|(a, b)| a - b).collect::<Vec<_>>()));
+        assert!(norm2(&base) > 0.0);
+    }
+
+    #[test]
+    fn indices_sorted_ascending() {
+        let u = randu(300, 11);
+        let mut s = CompressScratch::default();
+        let upd = lgc_compress(&u, &[10, 30], &mut s);
+        for layer in &upd.layers {
+            assert!(layer.indices.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "sum(ks)")]
+    fn rejects_oversized_budget() {
+        let u = randu(10, 0);
+        let mut s = CompressScratch::default();
+        lgc_compress(&u, &[11], &mut s);
+    }
+
+    #[test]
+    fn ties_are_stable_total_count() {
+        // All-equal magnitudes: still returns exactly K entries.
+        let u = vec![1.0f32; 64];
+        let mut s = CompressScratch::default();
+        let upd = lgc_compress(&u, &[5, 10], &mut s);
+        assert_eq!(upd.total_nnz(), 15);
+    }
+
+    #[test]
+    fn radix_and_partition_paths_agree_exactly() {
+        // The radix fast path and the select_nth partition oracle must emit
+        // identical layers (keys are unique, so there is one right answer).
+        let mut s1 = CompressScratch::default();
+        let mut s2 = CompressScratch::default();
+        for seed in 0..10 {
+            let mut rng = Rng::new(seed);
+            let d = 64 + rng.index(4000);
+            let u: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let ks = [
+                1 + rng.index(d / 8),
+                rng.index(d / 8),
+                1 + rng.index(d / 8),
+            ];
+            let a = lgc_compress(&u, &ks, &mut s1);
+            let b = lgc_compress_radix(&u, &ks, &mut s2);
+            assert_eq!(a, b, "seed {seed} d {d} ks {ks:?}");
+        }
+    }
+
+    #[test]
+    fn radix_handles_duplicates_zeros_and_extremes() {
+        let mut s = CompressScratch::default();
+        // duplicates + zeros
+        let u = [0.0f32, 1.0, -1.0, 1.0, 0.0, 2.0, -2.0, 2.0];
+        let upd = lgc_compress(&u, &[2, 3], &mut s);
+        assert_eq!(upd.total_nnz(), 5);
+        let mut s2 = CompressScratch::default();
+        assert_eq!(upd, lgc_compress_radix(&u, &[2, 3], &mut s2));
+        // subnormals and huge values
+        let u = [f32::MIN_POSITIVE / 2.0, 1e38, -1e-38, 3.0];
+        let upd = lgc_compress(&u, &[1, 2], &mut s);
+        assert_eq!(upd.layers[0].indices, vec![1]);
+        assert_eq!(upd.total_nnz(), 3);
+        // leading zero-width band
+        let upd = lgc_compress(&u, &[0, 2], &mut s);
+        assert!(upd.layers[0].is_empty());
+        assert_eq!(upd.layers[1].len(), 2);
+    }
+}

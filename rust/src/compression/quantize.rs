@@ -1,0 +1,118 @@
+//! QSGD-style stochastic quantizer (Alistarh et al. 2017) — a *quantization*
+//! baseline next to the paper's sparsification lineage. Used by ablation
+//! benches to place LGC on the quantize-vs-sparsify tradeoff curve.
+//!
+//! `QsgdQuantizer { levels }` maps each coordinate to
+//! `‖u‖₂ · sign(u_i) · ξ_i(u, s)` where `ξ_i` is one of `s` levels chosen
+//! stochastically so the estimate is unbiased.
+
+use crate::util::Rng;
+
+/// Quantized vector: norm + per-coordinate (sign, level) pairs.
+#[derive(Clone, Debug)]
+pub struct QuantizedVec {
+    pub norm: f32,
+    pub levels: u8,
+    /// Per-coordinate signed level in [-levels, levels].
+    pub q: Vec<i8>,
+}
+
+impl QuantizedVec {
+    /// Wire bytes: norm + ceil(log2(2s+1)) bits/coord, byte-packed here.
+    pub fn wire_bytes(&self) -> u64 {
+        let bits = (2 * self.levels as u32 + 1).next_power_of_two().trailing_zeros().max(1);
+        4 + (self.q.len() as u64 * bits as u64).div_ceil(8)
+    }
+
+    pub fn dequantize(&self) -> Vec<f32> {
+        let s = self.levels as f32;
+        self.q
+            .iter()
+            .map(|&qi| self.norm * (qi as f32) / s)
+            .collect()
+    }
+}
+
+/// Stochastic uniform quantizer with `levels` positive levels.
+#[derive(Clone, Debug)]
+pub struct QsgdQuantizer {
+    pub levels: u8,
+    rng: Rng,
+}
+
+impl QsgdQuantizer {
+    pub fn new(levels: u8, rng: Rng) -> Self {
+        assert!(levels >= 1);
+        QsgdQuantizer { levels, rng }
+    }
+
+    pub fn quantize(&mut self, u: &[f32]) -> QuantizedVec {
+        let norm = (crate::util::norm2(u) as f32).sqrt();
+        let s = self.levels as f32;
+        let q = u
+            .iter()
+            .map(|&x| {
+                if norm == 0.0 {
+                    return 0i8;
+                }
+                let a = x.abs() / norm * s; // in [0, s]
+                let lo = a.floor();
+                let p = a - lo; // probability of rounding up
+                let level = lo + if (self.rng.uniform() as f32) < p { 1.0 } else { 0.0 };
+                (level as i8) * x.signum() as i8
+            })
+            .collect();
+        QuantizedVec { norm, levels: self.levels, q }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unbiased_in_expectation() {
+        let u: Vec<f32> = vec![0.5, -0.25, 0.1, -0.05, 0.0];
+        let mut qz = QsgdQuantizer::new(4, Rng::new(1));
+        let n = 4000;
+        let mut acc = vec![0f64; u.len()];
+        for _ in 0..n {
+            let dq = qz.quantize(&u).dequantize();
+            for (a, &x) in acc.iter_mut().zip(&dq) {
+                *a += x as f64;
+            }
+        }
+        for (i, a) in acc.iter().enumerate() {
+            let mean = a / n as f64;
+            assert!(
+                (mean - u[i] as f64).abs() < 0.01,
+                "coord {i}: mean {mean} vs {}",
+                u[i]
+            );
+        }
+    }
+
+    #[test]
+    fn zero_vector_quantizes_to_zero() {
+        let mut qz = QsgdQuantizer::new(4, Rng::new(2));
+        let q = qz.quantize(&[0.0; 16]);
+        assert!(q.dequantize().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn wire_bytes_smaller_than_dense() {
+        let u = vec![0.1f32; 1000];
+        let mut qz = QsgdQuantizer::new(4, Rng::new(3));
+        let q = qz.quantize(&u);
+        assert!(q.wire_bytes() < 4 * 1000, "{}", q.wire_bytes());
+    }
+
+    #[test]
+    fn levels_bounded() {
+        let mut rng = Rng::new(4);
+        let u: Vec<f32> = (0..512).map(|_| rng.normal() as f32).collect();
+        let mut qz = QsgdQuantizer::new(2, Rng::new(5));
+        let q = qz.quantize(&u);
+        assert!(q.q.iter().all(|&l| l.abs() <= 2));
+    }
+}

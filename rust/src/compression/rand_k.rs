@@ -1,0 +1,112 @@
+//! Random-K sparsification baseline (Wangni et al. 2017, cited in the
+//! paper's related work): keep K uniformly random coordinates, scaled by
+//! D/K so the estimate is unbiased. Contrasts with Top-K/LGC in the
+//! ablation benches: unbiased but much higher variance at equal K.
+
+use super::{Layer, LgcUpdate};
+use crate::util::Rng;
+
+/// Random-K sparsifier with its own RNG stream.
+#[derive(Clone, Debug)]
+pub struct RandK {
+    rng: Rng,
+    /// If true, scale kept values by D/K (unbiased); plain masking otherwise.
+    pub unbiased: bool,
+    perm: Vec<u32>,
+}
+
+impl RandK {
+    pub fn new(rng: Rng, unbiased: bool) -> Self {
+        RandK { rng, unbiased, perm: Vec::new() }
+    }
+
+    /// Sparsify `u` to `k` random coordinates (single layer).
+    pub fn compress(&mut self, u: &[f32], k: usize) -> LgcUpdate {
+        let d = u.len();
+        let k = k.min(d);
+        // Partial Fisher-Yates: first k entries of a fresh permutation.
+        if self.perm.len() != d {
+            self.perm.clear();
+            self.perm.extend(0..d as u32);
+        }
+        for i in 0..k {
+            let j = i + self.rng.index(d - i);
+            self.perm.swap(i, j);
+        }
+        let mut indices: Vec<u32> = self.perm[..k].to_vec();
+        indices.sort_unstable();
+        let scale = if self.unbiased { d as f32 / k as f32 } else { 1.0 };
+        let values: Vec<f32> = indices.iter().map(|&i| u[i as usize] * scale).collect();
+        LgcUpdate { dim: d, layers: vec![Layer { indices, values }] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::norm2;
+
+    #[test]
+    fn keeps_exactly_k_random_coordinates() {
+        let mut rk = RandK::new(Rng::new(1), false);
+        let u: Vec<f32> = (1..=100).map(|i| i as f32).collect();
+        let a = rk.compress(&u, 10);
+        let b = rk.compress(&u, 10);
+        assert_eq!(a.total_nnz(), 10);
+        assert_eq!(b.total_nnz(), 10);
+        assert_ne!(a, b, "two draws should differ");
+        // kept values match u (no scaling)
+        for (i, v) in a.layers[0].indices.iter().zip(&a.layers[0].values) {
+            assert_eq!(*v, u[*i as usize]);
+        }
+    }
+
+    #[test]
+    fn unbiased_in_expectation() {
+        let u: Vec<f32> = vec![2.0, -1.0, 0.5, 3.0, -0.25, 1.5, 0.0, -2.5];
+        let mut rk = RandK::new(Rng::new(2), true);
+        let n = 20_000;
+        let mut acc = vec![0f64; u.len()];
+        for _ in 0..n {
+            let dec = rk.compress(&u, 3).decode();
+            for (a, &x) in acc.iter_mut().zip(&dec) {
+                *a += x as f64;
+            }
+        }
+        for (i, a) in acc.iter().enumerate() {
+            let mean = a / n as f64;
+            assert!(
+                (mean - u[i] as f64).abs() < 0.05,
+                "coord {i}: {mean} vs {}",
+                u[i]
+            );
+        }
+    }
+
+    #[test]
+    fn higher_variance_than_topk_at_equal_k() {
+        // Residual energy of rand-k (biased mask form) exceeds top-k's.
+        let mut rng = Rng::new(3);
+        let u: Vec<f32> = (0..512).map(|_| rng.normal() as f32).collect();
+        let mut rk = RandK::new(Rng::new(4), false);
+        let mut scratch = super::super::CompressScratch::default();
+        let topk = super::super::top_k(&u, 64, &mut scratch).decode();
+        let res_top: Vec<f32> = u.iter().zip(&topk).map(|(a, b)| a - b).collect();
+        let mut worse = 0;
+        for _ in 0..20 {
+            let dec = rk.compress(&u, 64).decode();
+            let res: Vec<f32> = u.iter().zip(&dec).map(|(a, b)| a - b).collect();
+            if norm2(&res) > norm2(&res_top) {
+                worse += 1;
+            }
+        }
+        assert!(worse >= 19, "rand-k beat top-k {}/20 times", 20 - worse);
+    }
+
+    #[test]
+    fn k_equals_d_identity_when_biased() {
+        let u: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        let mut rk = RandK::new(Rng::new(5), false);
+        assert_eq!(rk.compress(&u, 32).decode(), u);
+    }
+}

@@ -1,0 +1,163 @@
+//! Sparse wire format for one layer of an `LgcUpdate`.
+//!
+//! Layout (little-endian, single contiguous buffer):
+//!
+//! ```text
+//! [u32 dim] [u32 nnz] [u32 delta_0 .. delta_{nnz-1}] [f32 v_0 .. v_{nnz-1}]
+//! ```
+//!
+//! Indices are delta-encoded (ascending input order) — with 4-byte deltas
+//! this does not shrink the payload by itself, but it keeps decode branch-
+//! free and makes the format trivially splittable; the byte accounting the
+//! channel simulator charges is `encoded_len(nnz)`. (The paper charges
+//! 8 B/coordinate for sparsified gradients, same as index+value here.)
+
+use super::Layer;
+
+/// Bytes per (index, value) entry on the wire.
+pub const WIRE_BYTES_PER_ENTRY: usize = 8;
+/// Header bytes (dim + nnz).
+pub const WIRE_HEADER: usize = 8;
+
+/// Encoded size in bytes for `nnz` entries.
+pub fn encoded_len(nnz: usize) -> usize {
+    WIRE_HEADER + nnz * WIRE_BYTES_PER_ENTRY
+}
+
+/// A serialized layer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseChunk {
+    pub bytes: Vec<u8>,
+}
+
+/// Encode one layer (indices must be ascending — `lgc_compress` guarantees).
+pub fn encode(dim: usize, layer: &Layer) -> SparseChunk {
+    debug_assert!(layer.indices.windows(2).all(|w| w[0] < w[1]));
+    let nnz = layer.len();
+    let mut bytes = Vec::with_capacity(encoded_len(nnz));
+    bytes.extend_from_slice(&(dim as u32).to_le_bytes());
+    bytes.extend_from_slice(&(nnz as u32).to_le_bytes());
+    let mut prev = 0u32;
+    for &i in &layer.indices {
+        bytes.extend_from_slice(&(i - prev).to_le_bytes());
+        prev = i;
+    }
+    for &v in &layer.values {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    SparseChunk { bytes }
+}
+
+/// Decode error.
+#[derive(Debug, PartialEq, Eq)]
+pub enum DecodeError {
+    Truncated,
+    IndexOutOfRange { index: u32, dim: u32 },
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::Truncated => write!(f, "truncated sparse chunk"),
+            DecodeError::IndexOutOfRange { index, dim } => {
+                write!(f, "index {index} out of range for dim {dim}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+/// Decode a chunk back into `(dim, Layer)`.
+pub fn decode(chunk: &SparseChunk) -> Result<(usize, Layer), DecodeError> {
+    let b = &chunk.bytes;
+    if b.len() < WIRE_HEADER {
+        return Err(DecodeError::Truncated);
+    }
+    let dim = u32::from_le_bytes(b[0..4].try_into().unwrap());
+    let nnz = u32::from_le_bytes(b[4..8].try_into().unwrap()) as usize;
+    if b.len() != encoded_len(nnz) {
+        return Err(DecodeError::Truncated);
+    }
+    let mut indices = Vec::with_capacity(nnz);
+    let mut prev = 0u32;
+    for e in 0..nnz {
+        let off = WIRE_HEADER + 4 * e;
+        let delta = u32::from_le_bytes(b[off..off + 4].try_into().unwrap());
+        let idx = prev + delta;
+        if idx >= dim {
+            return Err(DecodeError::IndexOutOfRange { index: idx, dim });
+        }
+        indices.push(idx);
+        prev = idx;
+    }
+    let vbase = WIRE_HEADER + 4 * nnz;
+    let mut values = Vec::with_capacity(nnz);
+    for e in 0..nnz {
+        let off = vbase + 4 * e;
+        values.push(f32::from_le_bytes(b[off..off + 4].try_into().unwrap()));
+    }
+    Ok((dim as usize, Layer { indices, values }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::{lgc_compress, CompressScratch};
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_random_layers() {
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let d = 64 + rng.index(2000);
+            let u: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let k = 1 + rng.index(d / 2);
+            let upd = lgc_compress(&u, &[k], &mut CompressScratch::default());
+            let chunk = encode(d, &upd.layers[0]);
+            assert_eq!(chunk.bytes.len(), encoded_len(k));
+            let (dim, layer) = decode(&chunk).unwrap();
+            assert_eq!(dim, d);
+            assert_eq!(layer, upd.layers[0]);
+        }
+    }
+
+    #[test]
+    fn empty_layer_roundtrips() {
+        let layer = Layer { indices: vec![], values: vec![] };
+        let chunk = encode(100, &layer);
+        assert_eq!(chunk.bytes.len(), WIRE_HEADER);
+        let (dim, out) = decode(&chunk).unwrap();
+        assert_eq!(dim, 100);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let layer = Layer { indices: vec![1, 5], values: vec![0.5, -0.5] };
+        let mut chunk = encode(10, &layer);
+        chunk.bytes.pop();
+        assert_eq!(decode(&chunk), Err(DecodeError::Truncated));
+        assert_eq!(
+            decode(&SparseChunk { bytes: vec![0, 1, 2] }),
+            Err(DecodeError::Truncated)
+        );
+    }
+
+    #[test]
+    fn out_of_range_detected() {
+        // dim=4 but index 7 encoded
+        let layer = Layer { indices: vec![7], values: vec![1.0] };
+        let chunk = encode(4, &layer);
+        assert!(matches!(
+            decode(&chunk),
+            Err(DecodeError::IndexOutOfRange { index: 7, dim: 4 })
+        ));
+    }
+
+    #[test]
+    fn wire_accounting_matches_paper_8_bytes_per_entry() {
+        assert_eq!(WIRE_BYTES_PER_ENTRY, 8);
+        assert_eq!(encoded_len(1000) - WIRE_HEADER, 8000);
+    }
+}

@@ -1,0 +1,415 @@
+//! Config system: TOML-subset files + `--key=value` CLI overrides -> typed
+//! [`ExperimentConfig`]. This is the launcher's single source of truth; every
+//! example and bench builds its runs from one of these.
+
+pub mod toml;
+
+use std::path::Path;
+
+pub use toml::{Document, Value};
+
+use crate::channels::ChannelType;
+
+/// Which FL mechanism to run (paper Sec. 4.1 baselines + LGC).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mechanism {
+    /// FedAvg (McMahan et al. 2017): fixed H, full dense model upload on the
+    /// single fastest channel.
+    FedAvg,
+    /// LGC with fixed local computation and fixed layer allocation.
+    LgcStatic,
+    /// LGC with the per-device DDPG controller choosing (H_m, D_{m,n}).
+    LgcDrl,
+    /// Single-channel Top-k with error feedback (ablation A1).
+    TopK,
+}
+
+impl Mechanism {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "fedavg" => Ok(Mechanism::FedAvg),
+            "lgc-static" | "lgc_static" | "lgcstatic" | "lgc-nodrl" => Ok(Mechanism::LgcStatic),
+            "lgc" | "lgc-drl" | "lgc_drl" => Ok(Mechanism::LgcDrl),
+            "topk" | "top-k" => Ok(Mechanism::TopK),
+            other => Err(format!("unknown mechanism `{other}`")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mechanism::FedAvg => "fedavg",
+            Mechanism::LgcStatic => "lgc-static",
+            Mechanism::LgcDrl => "lgc-drl",
+            Mechanism::TopK => "topk",
+        }
+    }
+}
+
+/// Which model/dataset workload (paper Sec. 4.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Workload {
+    /// Logistic regression on MNIST-class data.
+    LrMnist,
+    /// CNN on MNIST-class data.
+    CnnMnist,
+    /// Char-GRU on Shakespeare.
+    RnnShakespeare,
+}
+
+impl Workload {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "lr" | "lr-mnist" => Ok(Workload::LrMnist),
+            "cnn" | "cnn-mnist" => Ok(Workload::CnnMnist),
+            "rnn" | "rnn-shakespeare" | "shakespeare" => Ok(Workload::RnnShakespeare),
+            other => Err(format!("unknown workload `{other}`")),
+        }
+    }
+
+    /// The model name used in artifact file names.
+    pub fn model_name(&self) -> &'static str {
+        match self {
+            Workload::LrMnist => "lr",
+            Workload::CnnMnist => "cnn",
+            Workload::RnnShakespeare => "rnn",
+        }
+    }
+}
+
+/// Full experiment configuration with paper-default values.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub mechanism: Mechanism,
+    pub workload: Workload,
+    /// Number of devices M (paper default 3).
+    pub devices: usize,
+    /// Communication rounds T.
+    pub rounds: usize,
+    /// Learning rate (paper: 0.01).
+    pub lr: f32,
+    /// Mini-batch size b (paper: 64).
+    pub batch: usize,
+    /// Max local steps H (Alg. 1 gap bound).
+    pub h_max: usize,
+    /// Default/fixed local steps for non-DRL mechanisms.
+    pub h_fixed: usize,
+    /// Per-layer coordinate budgets as fractions of D (static LGC).
+    pub layer_fracs: Vec<f64>,
+    /// Channel types available at each device, fastest-first.
+    pub channel_types: Vec<ChannelType>,
+    /// Per-device energy budget in joules (Eq. 10a); f64::INFINITY = none.
+    pub energy_budget: f64,
+    /// Per-device money budget in currency units; f64::INFINITY = none.
+    pub money_budget: f64,
+    /// Non-IID Dirichlet alpha for partitioning (inf => IID).
+    pub dirichlet_alpha: f64,
+    /// Training examples per device.
+    pub samples_per_device: usize,
+    /// Held-out eval examples.
+    pub eval_samples: usize,
+    /// Base RNG seed.
+    pub seed: u64,
+    /// Evaluate every `eval_every` rounds.
+    pub eval_every: usize,
+    /// Use the PJRT runtime (false => pure-Rust LR path, tests only).
+    pub use_runtime: bool,
+    /// Directory with AOT artifacts.
+    pub artifacts_dir: String,
+    /// DRL hyperparameters.
+    pub drl: DrlConfig,
+}
+
+/// DDPG hyperparameters (Sec. 3.3; Lillicrap et al. 2015 defaults scaled
+/// down to the simulator's episode length).
+#[derive(Clone, Debug)]
+pub struct DrlConfig {
+    pub actor_lr: f64,
+    pub critic_lr: f64,
+    pub gamma: f64,
+    pub tau: f64,
+    pub replay_capacity: usize,
+    pub batch: usize,
+    pub hidden: usize,
+    pub noise_sigma: f64,
+    pub noise_theta: f64,
+    /// Steps of pure exploration before the actor drives.
+    pub warmup: usize,
+}
+
+impl Default for DrlConfig {
+    fn default() -> Self {
+        DrlConfig {
+            actor_lr: 1e-3,
+            critic_lr: 1e-2,
+            gamma: 0.95,
+            tau: 0.01,
+            replay_capacity: 10_000,
+            batch: 64,
+            hidden: 64,
+            noise_sigma: 0.2,
+            noise_theta: 0.15,
+            warmup: 32,
+        }
+    }
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            mechanism: Mechanism::LgcDrl,
+            workload: Workload::LrMnist,
+            devices: 3,
+            rounds: 100,
+            lr: 0.01,
+            batch: 64,
+            h_max: 8,
+            h_fixed: 4,
+            layer_fracs: vec![0.01, 0.04, 0.15],
+            channel_types: vec![ChannelType::G5, ChannelType::G4, ChannelType::G3],
+            energy_budget: f64::INFINITY,
+            money_budget: f64::INFINITY,
+            dirichlet_alpha: 0.5,
+            samples_per_device: 2048,
+            eval_samples: 1024,
+            seed: 42,
+            eval_every: 5,
+            use_runtime: true,
+            artifacts_dir: "artifacts".to_string(),
+            drl: DrlConfig::default(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a TOML-subset file, then apply `--key=value` overrides.
+    pub fn load(path: Option<&Path>, overrides: &[String]) -> Result<Self, String> {
+        let mut doc = match path {
+            Some(p) => {
+                let text = std::fs::read_to_string(p)
+                    .map_err(|e| format!("read {}: {e}", p.display()))?;
+                Document::parse(&text).map_err(|e| e.to_string())?
+            }
+            None => Document::new(),
+        };
+        apply_overrides(&mut doc, overrides)?;
+        Self::from_document(&doc)
+    }
+
+    /// Build from a parsed document; unset keys keep defaults.
+    pub fn from_document(doc: &Document) -> Result<Self, String> {
+        let mut cfg = ExperimentConfig::default();
+        if let Some(s) = doc.get_str("", "mechanism") {
+            cfg.mechanism = Mechanism::parse(s)?;
+        }
+        if let Some(s) = doc.get_str("", "workload") {
+            cfg.workload = Workload::parse(s)?;
+        }
+        if let Some(v) = doc.get_i64("", "devices") {
+            cfg.devices = v as usize;
+        }
+        if let Some(v) = doc.get_i64("", "rounds") {
+            cfg.rounds = v as usize;
+        }
+        if let Some(v) = doc.get_f64("", "lr") {
+            cfg.lr = v as f32;
+        }
+        if let Some(v) = doc.get_i64("", "batch") {
+            cfg.batch = v as usize;
+        }
+        if let Some(v) = doc.get_i64("", "h_max") {
+            cfg.h_max = v as usize;
+        }
+        if let Some(v) = doc.get_i64("", "h_fixed") {
+            cfg.h_fixed = v as usize;
+        }
+        if let Some(v) = doc.get_vec_f64("", "layer_fracs") {
+            cfg.layer_fracs = v;
+        }
+        if let Some(v) = doc.get("", "channels").and_then(Value::as_array) {
+            let mut types = Vec::new();
+            for item in v {
+                let s = item.as_str().ok_or("channels must be strings")?;
+                types.push(ChannelType::parse(s)?);
+            }
+            cfg.channel_types = types;
+        }
+        if let Some(v) = doc.get_f64("", "energy_budget") {
+            cfg.energy_budget = v;
+        }
+        if let Some(v) = doc.get_f64("", "money_budget") {
+            cfg.money_budget = v;
+        }
+        if let Some(v) = doc.get_f64("", "dirichlet_alpha") {
+            cfg.dirichlet_alpha = v;
+        }
+        if let Some(v) = doc.get_i64("", "samples_per_device") {
+            cfg.samples_per_device = v as usize;
+        }
+        if let Some(v) = doc.get_i64("", "eval_samples") {
+            cfg.eval_samples = v as usize;
+        }
+        if let Some(v) = doc.get_i64("", "seed") {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = doc.get_i64("", "eval_every") {
+            cfg.eval_every = (v as usize).max(1);
+        }
+        if let Some(v) = doc.get_bool("", "use_runtime") {
+            cfg.use_runtime = v;
+        }
+        if let Some(v) = doc.get_str("", "artifacts_dir") {
+            cfg.artifacts_dir = v.to_string();
+        }
+        // [drl]
+        if let Some(v) = doc.get_f64("drl", "actor_lr") {
+            cfg.drl.actor_lr = v;
+        }
+        if let Some(v) = doc.get_f64("drl", "critic_lr") {
+            cfg.drl.critic_lr = v;
+        }
+        if let Some(v) = doc.get_f64("drl", "gamma") {
+            cfg.drl.gamma = v;
+        }
+        if let Some(v) = doc.get_f64("drl", "tau") {
+            cfg.drl.tau = v;
+        }
+        if let Some(v) = doc.get_i64("drl", "replay_capacity") {
+            cfg.drl.replay_capacity = v as usize;
+        }
+        if let Some(v) = doc.get_i64("drl", "batch") {
+            cfg.drl.batch = v as usize;
+        }
+        if let Some(v) = doc.get_i64("drl", "hidden") {
+            cfg.drl.hidden = v as usize;
+        }
+        if let Some(v) = doc.get_f64("drl", "noise_sigma") {
+            cfg.drl.noise_sigma = v;
+        }
+        if let Some(v) = doc.get_i64("drl", "warmup") {
+            cfg.drl.warmup = v as usize;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.devices == 0 {
+            return Err("devices must be >= 1".into());
+        }
+        if self.rounds == 0 {
+            return Err("rounds must be >= 1".into());
+        }
+        if !(self.lr > 0.0) {
+            return Err("lr must be > 0".into());
+        }
+        if self.h_fixed == 0 || self.h_max == 0 || self.h_fixed > self.h_max {
+            return Err(format!(
+                "invalid local step bounds: h_fixed={} h_max={}",
+                self.h_fixed, self.h_max
+            ));
+        }
+        if self.layer_fracs.is_empty() {
+            return Err("layer_fracs must be non-empty".into());
+        }
+        let total: f64 = self.layer_fracs.iter().sum();
+        if self.layer_fracs.iter().any(|&f| f <= 0.0) || total > 1.0 {
+            return Err(format!("layer_fracs must be positive and sum <= 1, got {total}"));
+        }
+        if self.channel_types.is_empty() {
+            return Err("at least one channel required".into());
+        }
+        if self.layer_fracs.len() > self.channel_types.len() {
+            return Err(format!(
+                "{} layers but only {} channels (one layer per channel, Eq. 2)",
+                self.layer_fracs.len(),
+                self.channel_types.len()
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Apply `--key=value` / `--section.key=value` overrides onto a document.
+pub fn apply_overrides(doc: &mut Document, overrides: &[String]) -> Result<(), String> {
+    for ov in overrides {
+        let ov = ov.strip_prefix("--").unwrap_or(ov);
+        let (key, val) = ov
+            .split_once('=')
+            .ok_or_else(|| format!("override `{ov}` must be key=value"))?;
+        let val = toml::parse_value(val)
+            .or_else(|_| toml::parse_value(&format!("\"{val}\"")))
+            .map_err(|e| format!("override `{ov}`: {e}"))?;
+        match key.split_once('.') {
+            Some((sec, k)) => doc.set(sec, k, val),
+            None => doc.set("", key, val),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn from_document_overrides_defaults() {
+        let doc = Document::parse(
+            "mechanism = \"fedavg\"\nworkload = \"cnn\"\nrounds = 7\nlr = 0.1\n[drl]\ngamma = 0.9\n",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.mechanism, Mechanism::FedAvg);
+        assert_eq!(cfg.workload, Workload::CnnMnist);
+        assert_eq!(cfg.rounds, 7);
+        assert!((cfg.lr - 0.1).abs() < 1e-9);
+        assert!((cfg.drl.gamma - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut doc = Document::new();
+        apply_overrides(
+            &mut doc,
+            &[
+                "--rounds=5".to_string(),
+                "--mechanism=lgc".to_string(),
+                "drl.tau=0.5".to_string(),
+            ],
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.rounds, 5);
+        assert_eq!(cfg.mechanism, Mechanism::LgcDrl);
+        assert!((cfg.drl.tau - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let bad = [
+            "devices = 0",
+            "rounds = 0",
+            "h_fixed = 9\nh_max = 4",
+            "layer_fracs = [0.9, 0.9]",
+            "layer_fracs = [0.1, 0.1, 0.1, 0.1]\nchannels = [\"5g\"]",
+        ];
+        for text in bad {
+            let doc = Document::parse(text).unwrap();
+            assert!(ExperimentConfig::from_document(&doc).is_err(), "{text}");
+        }
+    }
+
+    #[test]
+    fn mechanism_and_workload_names_roundtrip() {
+        for m in [Mechanism::FedAvg, Mechanism::LgcStatic, Mechanism::LgcDrl, Mechanism::TopK] {
+            assert_eq!(Mechanism::parse(m.name()).unwrap(), m);
+        }
+        for w in [Workload::LrMnist, Workload::CnnMnist, Workload::RnnShakespeare] {
+            assert_eq!(Workload::parse(w.model_name()).unwrap(), w);
+        }
+    }
+}

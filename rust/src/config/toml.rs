@@ -1,0 +1,388 @@
+//! Minimal TOML-subset parser (no `serde`/`toml` available offline).
+//!
+//! Supported grammar — exactly what this repo's config files and the AOT
+//! manifest use:
+//!
+//! ```text
+//! # comment
+//! key = 42 | 3.14 | true | "string" | [1, 2, 3] | ["a", "b"]
+//! [section]
+//! key = ...
+//! ```
+//!
+//! Values are typed (`Value`); documents preserve insertion order and
+//! round-trip through `Document::to_string`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed scalar or array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => {
+                if x.fract() == 0.0 && x.abs() < 1e15 {
+                    write!(f, "{x:.1}")
+                } else {
+                    write!(f, "{x}")
+                }
+            }
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Str(s) => write!(f, "\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\"")),
+            Value::Array(v) => {
+                write!(f, "[")?;
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// Parse error with 1-based line number.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// A parsed document: `sections[""]` holds top-level keys.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Document {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+    /// Section order as encountered (for stable printing).
+    order: Vec<String>,
+}
+
+impl Document {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn parse(text: &str) -> Result<Document, ParseError> {
+        let mut doc = Document::new();
+        let mut section = String::new();
+        doc.touch_section("");
+        for (lineno, raw) in text.lines().enumerate() {
+            let lineno = lineno + 1;
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name.strip_suffix(']').ok_or_else(|| ParseError {
+                    line: lineno,
+                    msg: "unterminated section header".into(),
+                })?;
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    return Err(ParseError { line: lineno, msg: "empty section name".into() });
+                }
+                doc.touch_section(&section);
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| ParseError {
+                line: lineno,
+                msg: format!("expected `key = value`, got `{line}`"),
+            })?;
+            let key = line[..eq].trim().to_string();
+            if key.is_empty() {
+                return Err(ParseError { line: lineno, msg: "empty key".into() });
+            }
+            let val = parse_value(line[eq + 1..].trim())
+                .map_err(|msg| ParseError { line: lineno, msg })?;
+            doc.set(&section, &key, val);
+        }
+        Ok(doc)
+    }
+
+    fn touch_section(&mut self, name: &str) {
+        if !self.sections.contains_key(name) {
+            self.sections.insert(name.to_string(), BTreeMap::new());
+            self.order.push(name.to_string());
+        }
+    }
+
+    pub fn set(&mut self, section: &str, key: &str, val: Value) {
+        self.touch_section(section);
+        self.sections
+            .get_mut(section)
+            .unwrap()
+            .insert(key.to_string(), val);
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn get_i64(&self, section: &str, key: &str) -> Option<i64> {
+        self.get(section, key).and_then(Value::as_i64)
+    }
+    pub fn get_f64(&self, section: &str, key: &str) -> Option<f64> {
+        self.get(section, key).and_then(Value::as_f64)
+    }
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        self.get(section, key).and_then(Value::as_bool)
+    }
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        self.get(section, key).and_then(Value::as_str)
+    }
+    pub fn get_vec_i64(&self, section: &str, key: &str) -> Option<Vec<i64>> {
+        self.get(section, key)
+            .and_then(Value::as_array)
+            .map(|a| a.iter().filter_map(Value::as_i64).collect())
+    }
+    pub fn get_vec_f64(&self, section: &str, key: &str) -> Option<Vec<f64>> {
+        self.get(section, key)
+            .and_then(Value::as_array)
+            .map(|a| a.iter().filter_map(Value::as_f64).collect())
+    }
+
+    pub fn sections_in_order(&self) -> impl Iterator<Item = (&str, &BTreeMap<String, Value>)> {
+        self.order
+            .iter()
+            .filter_map(|n| self.sections.get(n).map(|s| (n.as_str(), s)))
+    }
+}
+
+impl fmt::Display for Document {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (name, kvs) in self.sections_in_order() {
+            if kvs.is_empty() && name.is_empty() {
+                continue;
+            }
+            if !name.is_empty() {
+                writeln!(f, "[{name}]")?;
+            }
+            for (k, v) in kvs {
+                writeln!(f, "{k} = {v}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Parse a single scalar or array value.
+pub fn parse_value(s: &str) -> Result<Value, String> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(unescape(inner)));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            items.push(parse_value(part)?);
+        }
+        return Ok(Value::Array(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(x) = s.parse::<f64>() {
+        return Ok(Value::Float(x));
+    }
+    Err(format!("cannot parse value `{s}`"))
+}
+
+fn unescape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some(other) => out.push(other),
+                None => out.push('\\'),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(parse_value("42").unwrap(), Value::Int(42));
+        assert_eq!(parse_value("-3").unwrap(), Value::Int(-3));
+        assert_eq!(parse_value("3.5").unwrap(), Value::Float(3.5));
+        assert_eq!(parse_value("1e-3").unwrap(), Value::Float(1e-3));
+        assert_eq!(parse_value("true").unwrap(), Value::Bool(true));
+        assert_eq!(parse_value("\"hi\"").unwrap(), Value::Str("hi".into()));
+    }
+
+    #[test]
+    fn parse_arrays() {
+        assert_eq!(
+            parse_value("[1, 2, 3]").unwrap(),
+            Value::Array(vec![Value::Int(1), Value::Int(2), Value::Int(3)])
+        );
+        assert_eq!(
+            parse_value("[\"a\", \"b,c\"]").unwrap(),
+            Value::Array(vec![Value::Str("a".into()), Value::Str("b,c".into())])
+        );
+    }
+
+    #[test]
+    fn parse_document_with_sections_and_comments() {
+        let text = r#"
+# top comment
+rounds = 100            # trailing comment
+lr = 0.01
+name = "lgc # not a comment"
+
+[server]
+aggregate = "mean"
+layers = [655, 2621, 9830]
+"#;
+        let doc = Document::parse(text).unwrap();
+        assert_eq!(doc.get_i64("", "rounds"), Some(100));
+        assert_eq!(doc.get_f64("", "lr"), Some(0.01));
+        assert_eq!(doc.get_str("", "name"), Some("lgc # not a comment"));
+        assert_eq!(doc.get_str("server", "aggregate"), Some("mean"));
+        assert_eq!(doc.get_vec_i64("server", "layers"), Some(vec![655, 2621, 9830]));
+    }
+
+    #[test]
+    fn int_coerces_to_f64() {
+        let doc = Document::parse("x = 5").unwrap();
+        assert_eq!(doc.get_f64("", "x"), Some(5.0));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = Document::parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = Document::parse("[unterminated").unwrap_err();
+        assert_eq!(err.line, 1);
+        let err = Document::parse("x = ").unwrap_err();
+        assert_eq!(err.line, 1);
+    }
+
+    #[test]
+    fn roundtrip_print_parse() {
+        let text = "a = 1\nb = 2.5\n[s]\nc = \"x\"\nd = [1, 2]\n";
+        let doc = Document::parse(text).unwrap();
+        let printed = doc.to_string();
+        let doc2 = Document::parse(&printed).unwrap();
+        assert_eq!(doc, doc2);
+    }
+
+    #[test]
+    fn parses_aot_manifest_format() {
+        let text = "batch = 64\ncompress_ks = [655, 2621, 9830]\n\n[lr]\nparams = 7850\nx_shape = \"64x784\"\nx_dtype = \"f32\"\n";
+        let doc = Document::parse(text).unwrap();
+        assert_eq!(doc.get_i64("lr", "params"), Some(7850));
+        assert_eq!(doc.get_str("lr", "x_dtype"), Some("f32"));
+    }
+}

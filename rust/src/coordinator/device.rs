@@ -1,0 +1,323 @@
+//! Edge-device state and the per-round device procedure (Alg. 1, lines
+//! 4–17): local SGD, error-compensated layered compression, and the
+//! multi-channel upload.
+
+use anyhow::Result;
+
+use super::trainer::LocalTrainer;
+use crate::channels::{AllocationPlan, DeviceChannels, TransferCost};
+use crate::compression::{lgc_compress, CompressScratch, ErrorFeedback, LgcUpdate};
+use crate::resources::{ComputeCostModel, ResourceMeter};
+
+/// What a device hands the server after its round.
+#[derive(Clone, Debug)]
+pub struct DeviceUpload {
+    pub device: usize,
+    /// The layered update g_m (already "received": the simulator charges the
+    /// channels and the server decodes from the wire bytes).
+    pub update: LgcUpdate,
+    /// Simulated wall time of this device's round (compute + slowest layer).
+    pub wall_time_s: f64,
+    /// Mean training loss over the local steps.
+    pub train_loss: f64,
+    /// Per-resource round consumption [energy, money] (Eq. 15b).
+    pub eps: [f64; 2],
+    /// Total bytes pushed across all channels.
+    pub bytes_up: u64,
+    /// Local steps actually run.
+    pub local_steps: usize,
+}
+
+/// Persistent device state across rounds.
+pub struct Device {
+    pub id: usize,
+    /// ŵ_m — the local model being descended.
+    pub params_hat: Vec<f32>,
+    /// w_m — snapshot at the last synchronization.
+    pub params_sync: Vec<f32>,
+    pub error: ErrorFeedback,
+    pub channels: DeviceChannels,
+    pub meter: ResourceMeter,
+    pub compute: ComputeCostModel,
+    /// Training-loss of the previous round (for the DRL δ).
+    pub prev_loss: f64,
+    /// Last round's loss improvement δ (DRL state feature).
+    pub last_delta: f64,
+    scratch: CompressScratch,
+    u_buf: Vec<f32>,
+    progress_buf: Vec<f32>,
+}
+
+impl Device {
+    pub fn new(
+        id: usize,
+        init_params: Vec<f32>,
+        channels: DeviceChannels,
+        meter: ResourceMeter,
+        compute: ComputeCostModel,
+    ) -> Self {
+        let dim = init_params.len();
+        Device {
+            id,
+            params_hat: init_params.clone(),
+            params_sync: init_params,
+            error: ErrorFeedback::new(dim),
+            channels,
+            meter,
+            compute,
+            prev_loss: f64::NAN,
+            last_delta: 0.0,
+            scratch: CompressScratch::default(),
+            u_buf: Vec::new(),
+            progress_buf: Vec::new(),
+        }
+    }
+
+    /// Run `h` local SGD steps (Alg. 1 lines 5–7). Returns mean step loss.
+    pub fn local_steps(
+        &mut self,
+        trainer: &mut dyn LocalTrainer,
+        h: usize,
+        lr: f32,
+    ) -> Result<f64> {
+        let mut acc = 0.0;
+        for _ in 0..h {
+            acc += trainer.local_step(self.id, &mut self.params_hat, lr)?;
+        }
+        Ok(acc / h.max(1) as f64)
+    }
+
+    /// Compress the error-compensated net progress into layers (lines 8–11)
+    /// and charge the channels for the upload (line 10). `plan` maps layer
+    /// budgets to channels; layer c rides channel `plan.layer_channels()[c]`.
+    pub fn compress_and_upload(&mut self, plan: &AllocationPlan) -> (LgcUpdate, f64, Vec<TransferCost>) {
+        let dim = self.params_hat.len();
+        // progress = w_m − ŵ^{t+1/2}
+        self.progress_buf.clear();
+        self.progress_buf.extend(
+            self.params_sync
+                .iter()
+                .zip(&self.params_hat)
+                .map(|(&w, &wh)| w - wh),
+        );
+        // u = e + progress (line 8)
+        let (error, progress_buf, u_buf) = (&self.error, &self.progress_buf, &mut self.u_buf);
+        error.compensate(progress_buf, u_buf);
+        // g = LGC(u) (line 9)
+        let ks = plan.layer_budgets();
+        let ks: Vec<usize> = ks.iter().map(|&k| k.min(dim)).collect();
+        let total: usize = ks.iter().sum();
+        let ks = if total > dim {
+            // Rescale proportionally if the plan exceeds P.
+            let mut scaled: Vec<usize> =
+                ks.iter().map(|&k| (k * dim) / total.max(1)).collect();
+            if scaled.iter().sum::<usize>() == 0 {
+                scaled[0] = 1;
+            }
+            scaled
+        } else {
+            ks
+        };
+        let update = lgc_compress(&self.u_buf, &ks, &mut self.scratch);
+        // e' = u − g (line 11)
+        self.error.absorb(&self.u_buf, &update);
+        // Upload layer c on its assigned channel, others silent.
+        let mut sizes = vec![0u64; self.channels.len()];
+        for (layer, &ch) in update.layers.iter().zip(&plan.layer_channels()) {
+            sizes[ch] += layer.wire_bytes();
+        }
+        let (wall, costs) = self.channels.parallel_upload(&sizes);
+        (update, wall, costs)
+    }
+
+    /// Lossy variant of [`Device::compress_and_upload`]: layers ride erasure
+    /// channels; a lost layer's coordinates are **restituted into the error
+    /// memory** (the device learns of the loss via the missing server ACK),
+    /// so gradient mass is never destroyed — only delayed. Returns the
+    /// *delivered* update (what the server sees), the wall time, per-channel
+    /// costs, and the number of lost layers.
+    pub fn compress_and_upload_lossy(
+        &mut self,
+        plan: &AllocationPlan,
+    ) -> (LgcUpdate, f64, Vec<TransferCost>, usize) {
+        // Encode exactly as the lossless path (shares its rescaling logic).
+        let dim = self.params_hat.len();
+        self.progress_buf.clear();
+        self.progress_buf.extend(
+            self.params_sync
+                .iter()
+                .zip(&self.params_hat)
+                .map(|(&w, &wh)| w - wh),
+        );
+        let (error, progress_buf, u_buf) = (&self.error, &self.progress_buf, &mut self.u_buf);
+        error.compensate(progress_buf, u_buf);
+        let ks: Vec<usize> = plan.layer_budgets().iter().map(|&k| k.min(dim)).collect();
+        let update = lgc_compress(&self.u_buf, &ks, &mut self.scratch);
+        self.error.absorb(&self.u_buf, &update);
+
+        let mut sizes = vec![0u64; self.channels.len()];
+        for (layer, &ch) in update.layers.iter().zip(&plan.layer_channels()) {
+            sizes[ch] += layer.wire_bytes();
+        }
+        let (wall, lossy_costs) = self.channels.parallel_upload_lossy(&sizes);
+        // Split delivered vs lost layers by their channel's delivery flag.
+        let channels = plan.layer_channels();
+        let mut delivered = Vec::new();
+        let mut lost = 0usize;
+        for (layer, &ch) in update.layers.into_iter().zip(&channels) {
+            if lossy_costs[ch].1 {
+                delivered.push(layer);
+            } else {
+                // Restitute: these coordinates were zeroed by absorb() as if
+                // shipped; put them back so e' + delivered == u exactly.
+                for (&i, &v) in layer.indices.iter().zip(&layer.values) {
+                    self.error.restitute(i as usize, v);
+                }
+                lost += 1;
+            }
+        }
+        let costs = lossy_costs.into_iter().map(|(c, _)| c).collect();
+        (LgcUpdate { dim, layers: delivered }, wall, costs, lost)
+    }
+
+    /// Dense upload (FedAvg baseline): the full model on one channel.
+    pub fn dense_upload(&mut self, channel: usize) -> (f64, Vec<TransferCost>) {
+        let mut sizes = vec![0u64; self.channels.len()];
+        sizes[channel] = (self.params_hat.len() * 4) as u64;
+        self.channels.parallel_upload(&sizes)
+    }
+
+    /// Receive the new global model (Alg. 1 lines 12–13).
+    pub fn sync(&mut self, global: &[f32]) {
+        self.params_hat.copy_from_slice(global);
+        self.params_sync.copy_from_slice(global);
+    }
+
+    /// Compute-side cost of `h` local steps.
+    pub fn compute_cost(&self, h: usize) -> (f64, f64) {
+        (
+            self.compute.joules_per_step * h as f64,
+            self.compute.seconds_per_step * h as f64,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channels::{allocate_budget, ChannelType};
+    use crate::config::ExperimentConfig;
+    use crate::coordinator::trainer::{LocalTrainer, NativeLrTrainer};
+    use crate::util::Rng;
+
+    fn mk_device(dim: usize) -> Device {
+        let rng = Rng::new(1);
+        Device::new(
+            0,
+            vec![0f32; dim],
+            DeviceChannels::new(
+                &[ChannelType::G5, ChannelType::G4, ChannelType::G3],
+                &rng,
+                0,
+            ),
+            ResourceMeter::new(f64::INFINITY, f64::INFINITY),
+            ComputeCostModel::for_params(dim),
+        )
+    }
+
+    #[test]
+    fn upload_charges_only_assigned_channels() {
+        let mut dev = mk_device(1000);
+        // make some progress so u != 0
+        for (i, p) in dev.params_hat.iter_mut().enumerate() {
+            *p = (i as f32) * 1e-3;
+        }
+        let plan = AllocationPlan { counts: vec![10, 0, 40] };
+        let (update, wall, costs) = dev.compress_and_upload(&plan);
+        assert_eq!(update.layers.len(), 2); // silent channel dropped
+        assert_eq!(update.total_nnz(), 50);
+        assert!(wall > 0.0);
+        assert!(costs[0].bytes > 0);
+        assert_eq!(costs[1].bytes, 0);
+        assert!(costs[2].bytes > 0);
+    }
+
+    #[test]
+    fn error_feedback_carries_over_rounds() {
+        let cfg = ExperimentConfig {
+            samples_per_device: 64,
+            eval_samples: 64,
+            ..ExperimentConfig::default()
+        };
+        let mut tr = NativeLrTrainer::new(&cfg);
+        let mut dev = mk_device(tr.nparams());
+        dev.local_steps(&mut tr, 2, 0.1).unwrap();
+        let plan = allocate_budget(&[0.0, 0.0, 0.0], 200, 50);
+        let (_, _, _) = dev.compress_and_upload(&plan);
+        assert!(dev.error.norm2() > 0.0, "memory should hold dropped mass");
+    }
+
+    #[test]
+    fn sync_resets_local_state() {
+        let mut dev = mk_device(100);
+        dev.params_hat.iter_mut().for_each(|p| *p = 1.0);
+        let global = vec![0.5f32; 100];
+        dev.sync(&global);
+        assert_eq!(dev.params_hat, global);
+        assert_eq!(dev.params_sync, global);
+    }
+
+    #[test]
+    fn oversized_plan_rescaled_to_dim() {
+        let mut dev = mk_device(100);
+        dev.params_hat.iter_mut().enumerate().for_each(|(i, p)| *p = i as f32);
+        let plan = AllocationPlan { counts: vec![80, 80, 80] };
+        let (update, _, _) = dev.compress_and_upload(&plan);
+        assert!(update.total_nnz() <= 100);
+        assert!(update.total_nnz() > 0);
+    }
+
+    #[test]
+    fn lossy_upload_restitutes_lost_layers() {
+        // Force all channels into Bad fading so losses occur, then verify
+        // e' + delivered == u (mass conservation under erasure).
+        let mut dev = mk_device(500);
+        for l in dev.channels.links.iter_mut() {
+            l.fading = crate::channels::Fading::Bad;
+        }
+        for (i, p) in dev.params_hat.iter_mut().enumerate() {
+            *p = (i as f32 + 1.0) * 1e-3;
+        }
+        let u_expected: Vec<f32> = dev
+            .params_sync
+            .iter()
+            .zip(&dev.params_hat)
+            .map(|(&w, &wh)| w - wh)
+            .collect(); // error memory starts at zero
+        let plan = AllocationPlan { counts: vec![20, 30, 50] };
+        let mut saw_loss = false;
+        for trial in 0..40 {
+            // reset memory each trial so u is identical every time
+            dev.error.reset();
+            let (delivered, _, _, lost) = dev.compress_and_upload_lossy(&plan);
+            saw_loss |= lost > 0;
+            let dec = delivered.decode();
+            for i in 0..500 {
+                let total = dev.error.memory()[i] + dec[i];
+                assert!(
+                    (total - u_expected[i]).abs() < 1e-7,
+                    "mass not conserved at {i} (trial {trial})"
+                );
+            }
+        }
+        assert!(saw_loss, "40 trials in Bad fading should lose something");
+    }
+
+    #[test]
+    fn dense_upload_full_model_bytes() {
+        let mut dev = mk_device(1000);
+        let (_, costs) = dev.dense_upload(0);
+        assert_eq!(costs[0].bytes, 4000);
+        assert_eq!(costs[1].bytes, 0);
+    }
+}

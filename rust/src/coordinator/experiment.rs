@@ -1,0 +1,450 @@
+//! The experiment orchestrator: wires server, devices, channels, budgets,
+//! and (for LGC-DRL) the per-device DDPG controllers into the full training
+//! loop of Algorithm 1, for every mechanism of Sec. 4.1.
+
+use anyhow::Result;
+
+use super::device::Device;
+use super::server::Server;
+use super::trainer::LocalTrainer;
+use crate::channels::{AllocationPlan, DeviceChannels};
+use crate::config::{ExperimentConfig, Mechanism};
+use crate::drl::DeviceAgent;
+use crate::metrics::{RoundRecord, RunLog};
+use crate::resources::{ComputeCostModel, ResourceMeter};
+use crate::util::Rng;
+
+/// A full FL experiment (one mechanism, one workload).
+pub struct Experiment {
+    pub cfg: ExperimentConfig,
+    pub server: Server,
+    pub devices: Vec<Device>,
+    pub agents: Vec<Option<DeviceAgent>>,
+    /// Device m synchronizes when `round % sync_gap[m] == 0` (gap(I_m) ≤ H).
+    pub sync_gap: Vec<usize>,
+    rng: Rng,
+    total_time_s: f64,
+    /// Per-device static layer budgets (ks) for non-DRL mechanisms.
+    static_ks: Vec<usize>,
+    d_total: usize,
+    d_min: usize,
+}
+
+impl Experiment {
+    pub fn new(cfg: ExperimentConfig, trainer: &dyn LocalTrainer) -> Self {
+        let rng = Rng::new(cfg.seed);
+        let init = trainer.init_params();
+        let nparams = trainer.nparams();
+        let compute = ComputeCostModel::for_params(nparams);
+        let devices: Vec<Device> = (0..cfg.devices)
+            .map(|id| {
+                Device::new(
+                    id,
+                    init.clone(),
+                    DeviceChannels::new(&cfg.channel_types, &rng, id),
+                    ResourceMeter::new(cfg.energy_budget, cfg.money_budget),
+                    compute,
+                )
+            })
+            .collect();
+        let static_ks: Vec<usize> = cfg
+            .layer_fracs
+            .iter()
+            .map(|&f| ((f * nparams as f64).round() as usize).max(1))
+            .collect();
+        // DRL action space: up to 2x the static total traffic, floor of 64.
+        let d_total = (2 * static_ks.iter().sum::<usize>()).min(nparams);
+        let d_min = 64.min(nparams);
+        let agents: Vec<Option<DeviceAgent>> = (0..cfg.devices)
+            .map(|id| {
+                if cfg.mechanism == Mechanism::LgcDrl {
+                    Some(DeviceAgent::new(
+                        cfg.channel_types.len(),
+                        cfg.h_max,
+                        d_total,
+                        d_min,
+                        cfg.drl.clone(),
+                        rng.fork(0xD_00 + id as u64),
+                    ))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        Experiment {
+            server: Server::new(init),
+            sync_gap: vec![1; cfg.devices],
+            rng,
+            total_time_s: 0.0,
+            static_ks,
+            d_total,
+            d_min,
+            devices,
+            agents,
+            cfg,
+        }
+    }
+
+    /// Configure asynchronous sync sets I_m: device m syncs every `gap[m]`
+    /// rounds (must be in [1, h_max] to respect gap(I_m) ≤ H).
+    pub fn with_sync_gaps(mut self, gaps: Vec<usize>) -> Self {
+        assert_eq!(gaps.len(), self.devices.len());
+        assert!(gaps.iter().all(|&g| g >= 1 && g <= self.cfg.h_max));
+        self.sync_gap = gaps;
+        self
+    }
+
+    /// The fixed layer-to-channel plan for non-DRL LGC: layer c on channel c.
+    fn static_plan(&self) -> AllocationPlan {
+        let mut counts = vec![0usize; self.cfg.channel_types.len()];
+        for (c, &k) in self.static_ks.iter().enumerate() {
+            counts[c] = k;
+        }
+        AllocationPlan { counts }
+    }
+
+    /// Single-channel Top-k plan (ablation baseline): everything on the
+    /// currently fastest channel.
+    fn topk_plan(&self, device: usize) -> AllocationPlan {
+        let mut counts = vec![0usize; self.cfg.channel_types.len()];
+        counts[self.devices[device].channels.fastest()] = self.static_ks.iter().sum();
+        AllocationPlan { counts }
+    }
+
+    /// Run the full experiment; returns the per-round log.
+    pub fn run(&mut self, trainer: &mut dyn LocalTrainer) -> Result<RunLog> {
+        let mut log = RunLog::new(&format!(
+            "{}-{}",
+            self.cfg.mechanism.name(),
+            self.cfg.workload.model_name()
+        ));
+        for round in 0..self.cfg.rounds {
+            if let Some(rec) = self.step_round(round, trainer)? {
+                log.push(rec);
+            } else {
+                break; // all devices out of budget
+            }
+        }
+        Ok(log)
+    }
+
+    /// Execute one round. Returns None when every device is out of budget.
+    pub fn step_round(
+        &mut self,
+        round: usize,
+        trainer: &mut dyn LocalTrainer,
+    ) -> Result<Option<RoundRecord>> {
+        let m = self.devices.len();
+        // 1. Network dynamics advance.
+        for dev in &mut self.devices {
+            dev.channels.step_round();
+        }
+        // 2. Which devices participate (budget) and which sync this round.
+        let active: Vec<bool> = self.devices.iter().map(|d| d.meter.within_budget()).collect();
+        if active.iter().all(|&a| !a) {
+            return Ok(None);
+        }
+        let syncs: Vec<bool> = (0..m)
+            .map(|i| active[i] && (round + 1) % self.sync_gap[i] == 0)
+            .collect();
+
+        // 3. Per-device local work + upload.
+        let mut uploads: Vec<Option<crate::compression::LgcUpdate>> = vec![None; m];
+        let mut round_wall = 0.0f64;
+        let mut loss_sum = 0.0f64;
+        let mut loss_n = 0usize;
+        let mut energy_round = 0.0f64;
+        let mut money_round = 0.0f64;
+        let mut bytes_up = 0u64;
+        let mut drl_pre: Vec<Option<(Vec<f32>, usize)>> = vec![None; m]; // (state, H)
+        let mut reward_acc = 0.0f64;
+        let mut reward_n = 0usize;
+
+        for i in 0..m {
+            if !active[i] {
+                continue;
+            }
+            // --- decide (H, plan) --------------------------------------
+            let (h, plan, dense) = match self.cfg.mechanism {
+                Mechanism::FedAvg => (self.cfg.h_fixed, None, true),
+                Mechanism::LgcStatic => (self.cfg.h_fixed, Some(self.static_plan()), false),
+                Mechanism::TopK => (self.cfg.h_fixed, Some(self.topk_plan(i)), false),
+                Mechanism::LgcDrl => {
+                    let agent = self.agents[i].as_mut().unwrap();
+                    let dev = &self.devices[i];
+                    let state = agent.observe_state(&dev.meter, &dev.channels, dev.last_delta);
+                    let decision = agent.decide(&state, true);
+                    drl_pre[i] = Some((state, decision.local_steps));
+                    (decision.local_steps, Some(decision.plan), false)
+                }
+            };
+
+            let dev = &mut self.devices[i];
+            // --- local computation (lines 5-7) --------------------------
+            let loss = dev.local_steps(trainer, h, self.cfg.lr)?;
+            loss_sum += loss;
+            loss_n += 1;
+            let (comp_j, comp_s) = dev.compute_cost(h);
+
+            // --- communication (lines 8-11) ------------------------------
+            let (mut wall, comm_j, comm_money, bytes) = if syncs[i] {
+                if dense {
+                    // FedAvg: full dense model on the fastest channel.
+                    let ch = dev.channels.fastest();
+                    let (wall, costs) = dev.dense_upload(ch);
+                    // The "update" is w_m − ŵ_m dense.
+                    let g: Vec<f32> = dev
+                        .params_sync
+                        .iter()
+                        .zip(&dev.params_hat)
+                        .map(|(&w, &wh)| w - wh)
+                        .collect();
+                    let dim = g.len();
+                    let layer = crate::compression::Layer {
+                        indices: (0..dim as u32).collect(),
+                        values: g,
+                    };
+                    uploads[i] = Some(crate::compression::LgcUpdate { dim, layers: vec![layer] });
+                    let (j, mo, by) = costs.iter().fold((0.0, 0.0, 0u64), |acc, c| {
+                        (acc.0 + c.energy_j, acc.1 + c.money, acc.2 + c.bytes)
+                    });
+                    (wall, j, mo, by)
+                } else {
+                    let plan = plan.expect("sparse mechanisms have a plan");
+                    let (update, wall, costs) = dev.compress_and_upload(&plan);
+                    // Round-trip through the wire format, as the server sees it.
+                    uploads[i] = Some(Server::decode_from_wire(&update)?);
+                    let (j, mo, by) = costs.iter().fold((0.0, 0.0, 0u64), |acc, c| {
+                        (acc.0 + c.energy_j, acc.1 + c.money, acc.2 + c.bytes)
+                    });
+                    (wall, j, mo, by)
+                }
+            } else {
+                (0.0, 0.0, 0.0, 0) // no sync this round (Alg. 1 lines 14-17)
+            };
+            wall += comp_s;
+            round_wall = round_wall.max(wall);
+            dev.meter.record_round(comp_j, comm_j, comm_money, wall);
+            if dev.prev_loss.is_nan() {
+                dev.prev_loss = loss;
+            }
+            energy_round += comp_j + comm_j;
+            money_round += comm_money;
+            bytes_up += bytes;
+
+            // δ = loss improvement this round (Eq. 15a, sign flipped so
+            // positive = better), feeding the Eq. 16 reward.
+            let delta = dev.prev_loss - loss;
+            dev.prev_loss = loss;
+            dev.last_delta = delta;
+            if let Some((_, _h)) = &drl_pre[i] {
+                let agent = self.agents[i].as_mut().unwrap();
+                let eps = [
+                    dev.meter.last_round[0].total().max(1e-9),
+                    dev.meter.last_round[1].total().max(1e-9),
+                ];
+                let next_state = agent.observe_state(&dev.meter, &dev.channels, delta);
+                let done = round + 1 == self.cfg.rounds;
+                let (r, _) = agent.feedback(delta, &eps, next_state, done);
+                reward_acc += r;
+                reward_n += 1;
+            }
+        }
+
+        // 4. Server aggregation + broadcast (lines 18-22).
+        let received: Vec<&crate::compression::LgcUpdate> =
+            uploads.iter().flatten().collect();
+        if !received.is_empty() {
+            self.server.aggregate_and_apply(&received);
+            for i in 0..m {
+                if syncs[i] && uploads[i].is_some() {
+                    self.devices[i].sync(&self.server.params);
+                }
+            }
+        }
+
+        // 5. Evaluate + record.
+        self.total_time_s += round_wall;
+        let (eval_loss, eval_acc) = if round % self.cfg.eval_every == 0
+            || round + 1 == self.cfg.rounds
+        {
+            trainer.eval(&self.server.params)?
+        } else {
+            (f64::NAN, f64::NAN)
+        };
+        let (tot_energy, tot_money) = self.devices.iter().fold((0.0, 0.0), |acc, d| {
+            (acc.0 + d.meter.energy_used, acc.1 + d.meter.money_used)
+        });
+        let _ = (energy_round, money_round);
+        Ok(Some(RoundRecord {
+            round,
+            train_loss: loss_sum / loss_n.max(1) as f64,
+            eval_loss,
+            eval_acc,
+            energy_j: tot_energy,
+            money: tot_money,
+            round_time_s: round_wall,
+            total_time_s: self.total_time_s,
+            bytes_up,
+            drl_reward: if reward_n > 0 {
+                reward_acc / reward_n as f64
+            } else {
+                f64::NAN
+            },
+        }))
+    }
+
+    /// Reset the FL problem for a new DRL episode (paper Fig. 5: the DRL
+    /// agents persist and keep learning across episodes, while the FL model,
+    /// error memories, meters and reward trackers restart).
+    pub fn reset_episode(&mut self, trainer: &dyn LocalTrainer) {
+        let init = trainer.init_params();
+        self.server = Server::new(init.clone());
+        for dev in &mut self.devices {
+            dev.sync(&init);
+            dev.error.reset();
+            dev.prev_loss = f64::NAN;
+            dev.last_delta = 0.0;
+            dev.meter = ResourceMeter::new(self.cfg.energy_budget, self.cfg.money_budget);
+        }
+        for agent in self.agents.iter_mut().flatten() {
+            agent.tracker = Default::default();
+            agent.ddpg.reset_noise();
+        }
+        self.total_time_s = 0.0;
+    }
+
+    /// Exploration RNG access for deterministic test setups.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    pub fn d_bounds(&self) -> (usize, usize) {
+        (self.d_min, self.d_total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, Mechanism, Workload};
+    use crate::coordinator::trainer::NativeLrTrainer;
+
+    fn cfg(mechanism: Mechanism, rounds: usize) -> ExperimentConfig {
+        ExperimentConfig {
+            mechanism,
+            workload: Workload::LrMnist,
+            rounds,
+            devices: 3,
+            samples_per_device: 256,
+            eval_samples: 256,
+            eval_every: 2,
+            lr: 0.05,
+            h_fixed: 2,
+            h_max: 4,
+            use_runtime: false,
+            ..ExperimentConfig::default()
+        }
+    }
+
+    fn run(mechanism: Mechanism, rounds: usize) -> crate::metrics::RunLog {
+        let cfg = cfg(mechanism, rounds);
+        let mut trainer = NativeLrTrainer::new(&cfg);
+        let mut exp = Experiment::new(cfg, &trainer);
+        exp.run(&mut trainer).unwrap()
+    }
+
+    #[test]
+    fn fedavg_learns() {
+        let log = run(Mechanism::FedAvg, 30);
+        assert_eq!(log.records.len(), 30);
+        assert!(log.final_acc() > 0.5, "acc={}", log.final_acc());
+        let first = log.records.first().unwrap().train_loss;
+        let last = log.records.last().unwrap().train_loss;
+        assert!(last < first);
+    }
+
+    #[test]
+    fn lgc_static_learns_with_fewer_bytes_than_fedavg() {
+        let lgc = run(Mechanism::LgcStatic, 30);
+        let fed = run(Mechanism::FedAvg, 30);
+        assert!(lgc.final_acc() > 0.5, "lgc acc={}", lgc.final_acc());
+        let lgc_bytes: u64 = lgc.records.iter().map(|r| r.bytes_up).sum();
+        let fed_bytes: u64 = fed.records.iter().map(|r| r.bytes_up).sum();
+        assert!(
+            (lgc_bytes as f64) < 0.5 * fed_bytes as f64,
+            "lgc {lgc_bytes} vs fedavg {fed_bytes}"
+        );
+    }
+
+    #[test]
+    fn lgc_drl_runs_and_rewards_finite() {
+        let log = run(Mechanism::LgcDrl, 16);
+        assert_eq!(log.records.len(), 16);
+        assert!(log.records.iter().all(|r| r.drl_reward.is_finite()));
+        assert!(log.final_acc() > 0.3, "acc={}", log.final_acc());
+    }
+
+    #[test]
+    fn topk_baseline_runs() {
+        let log = run(Mechanism::TopK, 12);
+        assert!(log.final_acc() > 0.4, "acc={}", log.final_acc());
+    }
+
+    #[test]
+    fn energy_and_money_monotone() {
+        let log = run(Mechanism::LgcStatic, 10);
+        for w in log.records.windows(2) {
+            assert!(w[1].energy_j >= w[0].energy_j);
+            assert!(w[1].money >= w[0].money);
+            assert!(w[1].total_time_s >= w[0].total_time_s);
+        }
+    }
+
+    #[test]
+    fn budget_stops_training() {
+        let mut c = cfg(Mechanism::LgcStatic, 50);
+        c.energy_budget = 40.0; // tiny: a few rounds of compute+comm
+        let mut trainer = NativeLrTrainer::new(&c);
+        let mut exp = Experiment::new(c, &trainer);
+        let log = exp.run(&mut trainer).unwrap();
+        assert!(log.records.len() < 50, "should stop early, ran {}", log.records.len());
+    }
+
+    #[test]
+    fn async_gaps_respected() {
+        let c = cfg(Mechanism::LgcStatic, 12);
+        let mut trainer = NativeLrTrainer::new(&c);
+        let mut exp = Experiment::new(c, &trainer).with_sync_gaps(vec![1, 2, 3]);
+        let log = exp.run(&mut trainer).unwrap();
+        assert_eq!(log.records.len(), 12);
+        // device 2 uploads only every 3rd round; total bytes lower than all-sync
+        assert!(log.final_acc() > 0.4, "acc={}", log.final_acc());
+    }
+
+    #[test]
+    fn fedavg_equals_centralized_sgd_when_single_device_h1() {
+        // M=1, H=1 FedAvg is plain SGD on the global model: loss must drop
+        // monotonically-ish and match a hand-rolled loop on the same data.
+        let mut c = cfg(Mechanism::FedAvg, 8);
+        c.devices = 1;
+        c.h_fixed = 1;
+        c.h_max = 1;
+        let mut trainer = NativeLrTrainer::new(&c);
+        let mut exp = Experiment::new(c, &trainer);
+        let log = exp.run(&mut trainer).unwrap();
+        let first = log.records.first().unwrap().train_loss;
+        let last = log.records.last().unwrap().train_loss;
+        assert!(last < first, "{first} -> {last}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run(Mechanism::LgcStatic, 6);
+        let b = run(Mechanism::LgcStatic, 6);
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x.train_loss, y.train_loss);
+            assert_eq!(x.bytes_up, y.bytes_up);
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! - [`server`]: the FL edge server (aggregate + broadcast, Alg. 1 18–22)
+//! - [`device`]: the edge device round procedure (Alg. 1 4–17)
+//! - [`trainer`]: local-training backends (PJRT artifacts / native LR)
+//! - [`experiment`]: the full orchestrated loop for every mechanism
+//!   (FedAvg, LGC-static, LGC-DRL, single-channel Top-k)
+
+pub mod device;
+pub mod experiment;
+pub mod server;
+pub mod trainer;
+
+pub use device::{Device, DeviceUpload};
+pub use experiment::Experiment;
+pub use server::Server;
+pub use trainer::{LocalTrainer, NativeLrTrainer, PjrtTrainer, WorkloadData};

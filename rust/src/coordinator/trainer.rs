@@ -1,0 +1,339 @@
+//! Local-training abstraction: the device round loop calls a [`LocalTrainer`]
+//! for gradient compute, which is either the PJRT runtime executing the AOT
+//! artifacts (production path) or the pure-Rust LR reference (test path —
+//! no artifacts needed, exact same interface).
+
+use anyhow::Result;
+
+use crate::config::{ExperimentConfig, Workload};
+use crate::data::{partition_dirichlet, BatchSampler, CharCorpus, Dataset, MnistGen};
+use crate::models::NativeLr;
+use crate::runtime::{BatchX, ModelExecutable, Runtime};
+use crate::util::Rng;
+
+/// Per-device mini-batch + held-out evaluation over one workload.
+pub trait LocalTrainer {
+    /// Flat parameter count P.
+    fn nparams(&self) -> usize;
+    /// Initial global parameters.
+    fn init_params(&self) -> Vec<f32>;
+    /// Run ONE local SGD step for `device` on a fresh mini-batch, updating
+    /// `params` in place. Returns the step's training loss.
+    fn local_step(&mut self, device: usize, params: &mut Vec<f32>, lr: f32) -> Result<f64>;
+    /// Evaluate on the held-out set: (mean loss, accuracy in [0,1]).
+    fn eval(&mut self, params: &[f32]) -> Result<(f64, f64)>;
+}
+
+// ---------------------------------------------------------------------------
+// Workload data (shared by both trainer impls)
+// ---------------------------------------------------------------------------
+
+/// Materialized per-device training data + held-out eval batches.
+pub enum WorkloadData {
+    Mnist {
+        train: Dataset,
+        shards: Vec<BatchSampler>,
+        eval_x: Vec<f32>,
+        eval_y: Vec<i32>,
+        batch: usize,
+        idx_buf: Vec<usize>,
+        xb: Vec<f32>,
+        yb: Vec<i32>,
+    },
+    Shakespeare {
+        corpus: CharCorpus,
+        spans: Vec<(usize, usize)>,
+        rngs: Vec<Rng>,
+        eval_batches: Vec<Vec<i32>>,
+        batch: usize,
+        seq: usize,
+        buf: Vec<i32>,
+    },
+}
+
+impl WorkloadData {
+    pub fn build(cfg: &ExperimentConfig, batch: usize, seq: usize) -> Self {
+        let mut rng = Rng::new(cfg.seed ^ 0xDA7A);
+        match cfg.workload {
+            Workload::LrMnist | Workload::CnnMnist => {
+                let gen = MnistGen::new(cfg.seed);
+                let total = cfg.samples_per_device * cfg.devices;
+                let train = gen.dataset(0, total);
+                let parts = partition_dirichlet(
+                    &train,
+                    cfg.devices,
+                    cfg.dirichlet_alpha,
+                    crate::data::mnist::CLASSES,
+                    &mut rng,
+                );
+                let shards = parts
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, idxs)| BatchSampler::new(idxs, rng.fork(i as u64)))
+                    .collect();
+                let eval = gen.dataset(total as u64 + 10_000, cfg.eval_samples);
+                WorkloadData::Mnist {
+                    eval_x: eval.x,
+                    eval_y: eval.y,
+                    train,
+                    shards,
+                    batch,
+                    idx_buf: Vec::new(),
+                    xb: Vec::new(),
+                    yb: Vec::new(),
+                }
+            }
+            Workload::RnnShakespeare => {
+                let corpus = CharCorpus::embedded(seq);
+                let spans = corpus.device_spans(cfg.devices);
+                let rngs = (0..cfg.devices).map(|i| rng.fork(100 + i as u64)).collect();
+                // Fixed eval batches drawn across the whole corpus.
+                let mut eval_rng = rng.fork(999);
+                let n_eval = (cfg.eval_samples / batch).max(1);
+                let mut eval_batches = Vec::with_capacity(n_eval);
+                let full = (0, corpus.num_positions());
+                for _ in 0..n_eval {
+                    let mut b = Vec::new();
+                    corpus.fill_batch(&mut eval_rng, full, batch, &mut b);
+                    eval_batches.push(b);
+                }
+                WorkloadData::Shakespeare {
+                    corpus,
+                    spans,
+                    rngs,
+                    eval_batches,
+                    batch,
+                    seq,
+                    buf: Vec::new(),
+                }
+            }
+        }
+    }
+
+    /// Fill the next training batch for `device`. Returns (x, y).
+    pub fn next_batch(&mut self, device: usize) -> (BatchX, Vec<i32>) {
+        match self {
+            WorkloadData::Mnist { train, shards, batch, idx_buf, xb, yb, .. } => {
+                shards[device].next_batch(*batch, idx_buf);
+                train.gather(idx_buf, xb, yb);
+                (BatchX::F32(xb.clone()), yb.clone())
+            }
+            WorkloadData::Shakespeare { corpus, spans, rngs, batch, buf, .. } => {
+                corpus.fill_batch(&mut rngs[device], spans[device], *batch, buf);
+                // y unused by the rnn graphs; keep the ABI's int32[batch].
+                (BatchX::I32(buf.clone()), vec![0i32; *batch])
+            }
+        }
+    }
+
+    /// Iterate eval batches.
+    pub fn eval_batches(&self) -> Vec<(BatchX, Vec<i32>, usize)> {
+        match self {
+            WorkloadData::Mnist { eval_x, eval_y, batch, train, .. } => {
+                let feat = train.features;
+                let n = eval_y.len() / batch;
+                (0..n)
+                    .map(|i| {
+                        let x = eval_x[i * batch * feat..(i + 1) * batch * feat].to_vec();
+                        let y = eval_y[i * batch..(i + 1) * batch].to_vec();
+                        (BatchX::F32(x), y, *batch)
+                    })
+                    .collect()
+            }
+            WorkloadData::Shakespeare { eval_batches, batch, seq, .. } => eval_batches
+                .iter()
+                .map(|b| (BatchX::I32(b.clone()), vec![0i32; *batch], *batch * *seq))
+                .collect(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT-backed trainer (production path)
+// ---------------------------------------------------------------------------
+
+pub struct PjrtTrainer {
+    exe: ModelExecutable,
+    data: WorkloadData,
+    init: Vec<f32>,
+}
+
+impl PjrtTrainer {
+    pub fn new(rt: &Runtime, cfg: &ExperimentConfig) -> Result<Self> {
+        let model = cfg.workload.model_name();
+        let exe = rt.load_model(model)?;
+        let init = rt.load_init_params(model)?;
+        let data = WorkloadData::build(cfg, rt.manifest.batch, rt.manifest.seq);
+        Ok(PjrtTrainer { exe, data, init })
+    }
+}
+
+impl LocalTrainer for PjrtTrainer {
+    fn nparams(&self) -> usize {
+        self.exe.meta.params
+    }
+
+    fn init_params(&self) -> Vec<f32> {
+        self.init.clone()
+    }
+
+    fn local_step(&mut self, device: usize, params: &mut Vec<f32>, lr: f32) -> Result<f64> {
+        let (x, y) = self.data.next_batch(device);
+        self.exe.local_step(params, &x, &y, lr)
+    }
+
+    fn eval(&mut self, params: &[f32]) -> Result<(f64, f64)> {
+        let mut loss_sum = 0.0;
+        let mut correct = 0.0;
+        let mut positions = 0usize;
+        for (x, y, npos) in self.data.eval_batches() {
+            let (ls, c) = self.exe.eval_batch(params, &x, &y)?;
+            loss_sum += ls;
+            correct += c;
+            positions += npos;
+        }
+        anyhow::ensure!(positions > 0, "empty eval set");
+        Ok((loss_sum / positions as f64, correct / positions as f64))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Native LR trainer (test path — no artifacts required)
+// ---------------------------------------------------------------------------
+
+pub struct NativeLrTrainer {
+    model: NativeLr,
+    data: WorkloadData,
+    grad_buf: Vec<f32>,
+}
+
+impl NativeLrTrainer {
+    pub fn new(cfg: &ExperimentConfig) -> Self {
+        assert!(
+            matches!(cfg.workload, Workload::LrMnist),
+            "NativeLrTrainer only supports the LR workload"
+        );
+        let data = WorkloadData::build(cfg, cfg.batch, 0);
+        NativeLrTrainer {
+            model: NativeLr::new(),
+            data,
+            grad_buf: vec![0f32; crate::models::LR_PARAMS],
+        }
+    }
+}
+
+impl LocalTrainer for NativeLrTrainer {
+    fn nparams(&self) -> usize {
+        crate::models::LR_PARAMS
+    }
+
+    fn init_params(&self) -> Vec<f32> {
+        vec![0f32; crate::models::LR_PARAMS]
+    }
+
+    fn local_step(&mut self, device: usize, params: &mut Vec<f32>, lr: f32) -> Result<f64> {
+        let (x, y) = self.data.next_batch(device);
+        let x = match x {
+            BatchX::F32(v) => v,
+            _ => unreachable!(),
+        };
+        let loss = self.model.loss_grad(params, &x, &y, &mut self.grad_buf);
+        for (p, &g) in params.iter_mut().zip(&self.grad_buf) {
+            *p -= lr * g;
+        }
+        Ok(loss)
+    }
+
+    fn eval(&mut self, params: &[f32]) -> Result<(f64, f64)> {
+        let mut loss_sum = 0.0;
+        let mut correct = 0.0;
+        let mut n = 0usize;
+        for (x, y, npos) in self.data.eval_batches() {
+            let x = match x {
+                BatchX::F32(v) => v,
+                _ => unreachable!(),
+            };
+            let (ls, c) = self.model.eval(params, &x, &y);
+            loss_sum += ls;
+            correct += c;
+            n += npos;
+        }
+        anyhow::ensure!(n > 0, "empty eval set");
+        Ok((loss_sum / n as f64, correct / n as f64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    fn small_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            samples_per_device: 128,
+            eval_samples: 128,
+            devices: 3,
+            ..ExperimentConfig::default()
+        }
+    }
+
+    #[test]
+    fn native_lr_trainer_descends() {
+        let cfg = small_cfg();
+        let mut tr = NativeLrTrainer::new(&cfg);
+        let mut params = tr.init_params();
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for i in 0..30 {
+            let loss = tr.local_step(0, &mut params, 0.1).unwrap();
+            if i == 0 {
+                first = loss;
+            }
+            last = loss;
+        }
+        assert!(last < first, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn eval_improves_with_training() {
+        let cfg = small_cfg();
+        let mut tr = NativeLrTrainer::new(&cfg);
+        let mut params = tr.init_params();
+        let (_, acc0) = tr.eval(&params).unwrap();
+        for _ in 0..150 {
+            for dev in 0..3 {
+                tr.local_step(dev, &mut params, 0.1).unwrap();
+            }
+        }
+        let (_, acc1) = tr.eval(&params).unwrap();
+        assert!(acc1 > acc0 + 0.2, "acc {acc0} -> {acc1}");
+    }
+
+    #[test]
+    fn devices_get_different_batches() {
+        let cfg = small_cfg();
+        let mut data = WorkloadData::build(&cfg, 8, 0);
+        let (x0, _) = data.next_batch(0);
+        let (x1, _) = data.next_batch(1);
+        match (x0, x1) {
+            (BatchX::F32(a), BatchX::F32(b)) => assert_ne!(a, b),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn shakespeare_data_shapes() {
+        let cfg = ExperimentConfig {
+            workload: Workload::RnnShakespeare,
+            eval_samples: 128,
+            ..ExperimentConfig::default()
+        };
+        let mut data = WorkloadData::build(&cfg, 64, 24);
+        let (x, y) = data.next_batch(2);
+        assert_eq!(x.len(), 64 * 25);
+        assert_eq!(y.len(), 64);
+        let evals = data.eval_batches();
+        assert!(!evals.is_empty());
+        assert_eq!(evals[0].2, 64 * 24);
+    }
+}

@@ -1,0 +1,270 @@
+//! Synthetic MNIST-class generator (28x28, 10 classes).
+//!
+//! Each class has a deterministic stroke-based prototype glyph (digit-like
+//! line/arc patterns on the 28x28 grid). A sample is its class prototype
+//! after (1) a random sub-pixel translation, (2) per-stroke intensity
+//! jitter, (3) a light box blur, and (4) additive pixel noise — so samples
+//! within a class vary and the Bayes classifier is not a lookup table.
+//! Deterministic given (seed, sample index).
+
+use super::Dataset;
+use crate::util::Rng;
+
+pub const SIDE: usize = 28;
+pub const FEATURES: usize = SIDE * SIDE;
+pub const CLASSES: usize = 10;
+
+/// One generated sample.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub x: Vec<f32>,
+    pub y: i32,
+}
+
+/// Stroke primitive in glyph space: line segment with thickness.
+#[derive(Clone, Copy)]
+struct Stroke {
+    x0: f32,
+    y0: f32,
+    x1: f32,
+    y1: f32,
+    w: f32,
+}
+
+fn seg(x0: f32, y0: f32, x1: f32, y1: f32, w: f32) -> Stroke {
+    Stroke { x0, y0, x1, y1, w }
+}
+
+/// Digit-like prototypes: rough stroke skeletons of 0..9 on a [4,24]^2 box.
+fn prototype(class: usize) -> Vec<Stroke> {
+    match class {
+        0 => vec![
+            seg(9.0, 6.0, 19.0, 6.0, 1.6),
+            seg(19.0, 6.0, 19.0, 22.0, 1.6),
+            seg(19.0, 22.0, 9.0, 22.0, 1.6),
+            seg(9.0, 22.0, 9.0, 6.0, 1.6),
+        ],
+        1 => vec![seg(14.0, 5.0, 14.0, 23.0, 1.8), seg(11.0, 8.0, 14.0, 5.0, 1.4)],
+        2 => vec![
+            seg(9.0, 7.0, 18.0, 6.0, 1.6),
+            seg(18.0, 6.0, 18.0, 13.0, 1.6),
+            seg(18.0, 13.0, 9.0, 22.0, 1.6),
+            seg(9.0, 22.0, 19.0, 22.0, 1.6),
+        ],
+        3 => vec![
+            seg(9.0, 6.0, 18.0, 6.0, 1.5),
+            seg(18.0, 6.0, 13.0, 13.0, 1.5),
+            seg(13.0, 13.0, 18.0, 14.0, 1.5),
+            seg(18.0, 14.0, 18.0, 21.0, 1.5),
+            seg(18.0, 21.0, 9.0, 22.0, 1.5),
+        ],
+        4 => vec![
+            seg(16.0, 5.0, 8.0, 16.0, 1.6),
+            seg(8.0, 16.0, 20.0, 16.0, 1.6),
+            seg(16.0, 5.0, 16.0, 23.0, 1.6),
+        ],
+        5 => vec![
+            seg(19.0, 6.0, 9.0, 6.0, 1.6),
+            seg(9.0, 6.0, 9.0, 13.0, 1.6),
+            seg(9.0, 13.0, 18.0, 14.0, 1.6),
+            seg(18.0, 14.0, 18.0, 21.0, 1.6),
+            seg(18.0, 21.0, 9.0, 22.0, 1.6),
+        ],
+        6 => vec![
+            seg(17.0, 5.0, 10.0, 12.0, 1.6),
+            seg(10.0, 12.0, 9.0, 20.0, 1.6),
+            seg(9.0, 20.0, 14.0, 23.0, 1.6),
+            seg(14.0, 23.0, 18.0, 20.0, 1.6),
+            seg(18.0, 20.0, 17.0, 15.0, 1.6),
+            seg(17.0, 15.0, 10.0, 15.0, 1.6),
+        ],
+        7 => vec![seg(8.0, 6.0, 20.0, 6.0, 1.7), seg(20.0, 6.0, 12.0, 23.0, 1.7)],
+        8 => vec![
+            seg(13.5, 6.0, 9.5, 10.0, 1.5),
+            seg(9.5, 10.0, 13.5, 14.0, 1.5),
+            seg(13.5, 6.0, 17.5, 10.0, 1.5),
+            seg(17.5, 10.0, 13.5, 14.0, 1.5),
+            seg(13.5, 14.0, 9.0, 18.5, 1.5),
+            seg(9.0, 18.5, 13.5, 23.0, 1.5),
+            seg(13.5, 14.0, 18.0, 18.5, 1.5),
+            seg(18.0, 18.5, 13.5, 23.0, 1.5),
+        ],
+        9 => vec![
+            seg(17.0, 11.0, 13.0, 6.0, 1.6),
+            seg(13.0, 6.0, 9.5, 10.0, 1.6),
+            seg(9.5, 10.0, 13.0, 14.0, 1.6),
+            seg(13.0, 14.0, 17.0, 11.0, 1.6),
+            seg(17.0, 11.0, 17.0, 19.0, 1.6),
+            seg(17.0, 19.0, 12.0, 23.0, 1.6),
+        ],
+        _ => panic!("class out of range"),
+    }
+}
+
+/// Distance from point to segment.
+fn seg_dist(px: f32, py: f32, s: &Stroke) -> f32 {
+    let (dx, dy) = (s.x1 - s.x0, s.y1 - s.y0);
+    let len2 = dx * dx + dy * dy;
+    let t = if len2 == 0.0 {
+        0.0
+    } else {
+        (((px - s.x0) * dx + (py - s.y0) * dy) / len2).clamp(0.0, 1.0)
+    };
+    let (cx, cy) = (s.x0 + t * dx, s.y0 + t * dy);
+    ((px - cx).powi(2) + (py - cy).powi(2)).sqrt()
+}
+
+/// Deterministic generator.
+#[derive(Clone, Debug)]
+pub struct MnistGen {
+    seed: u64,
+}
+
+impl MnistGen {
+    pub fn new(seed: u64) -> Self {
+        MnistGen { seed }
+    }
+
+    /// Render sample `index` (label chosen uniformly from the index stream).
+    pub fn sample(&self, index: u64) -> Sample {
+        let mut rng = Rng::new(self.seed ^ 0x5EED_BA5E).fork(index);
+        let y = rng.index(CLASSES);
+        let strokes = prototype(y);
+        // Per-sample distortions.
+        let tx = rng.range(-1.8, 1.8) as f32;
+        let ty = rng.range(-1.8, 1.8) as f32;
+        let rot = rng.range(-0.12, 0.12) as f32; // radians, about center
+        let gain: Vec<f32> = strokes.iter().map(|_| rng.range(0.75, 1.0) as f32).collect();
+        let (sin, cos) = (rot.sin(), rot.cos());
+        let c = 14.0f32;
+
+        let mut img = vec![0f32; FEATURES];
+        for py in 0..SIDE {
+            for px in 0..SIDE {
+                // Inverse-transform the pixel into glyph space.
+                let fx = px as f32 - tx - c;
+                let fy = py as f32 - ty - c;
+                let gx = cos * fx + sin * fy + c;
+                let gy = -sin * fx + cos * fy + c;
+                let mut v = 0f32;
+                for (s, &g) in strokes.iter().zip(&gain) {
+                    let d = seg_dist(gx, gy, s);
+                    if d < s.w + 1.0 {
+                        // Soft pen profile.
+                        let a = (1.0 - (d / (s.w + 1.0)).powi(2)).max(0.0);
+                        v = v.max(g * a);
+                    }
+                }
+                img[py * SIDE + px] = v;
+            }
+        }
+        // Light 3x3 box blur.
+        let mut blurred = vec![0f32; FEATURES];
+        for py in 0..SIDE {
+            for px in 0..SIDE {
+                let mut acc = 0f32;
+                let mut n = 0f32;
+                for dy in -1i32..=1 {
+                    for dx in -1i32..=1 {
+                        let (qx, qy) = (px as i32 + dx, py as i32 + dy);
+                        if (0..SIDE as i32).contains(&qx) && (0..SIDE as i32).contains(&qy) {
+                            acc += img[qy as usize * SIDE + qx as usize];
+                            n += 1.0;
+                        }
+                    }
+                }
+                blurred[py * SIDE + px] = acc / n;
+            }
+        }
+        // Pixel noise, clamp to [0,1].
+        for v in &mut blurred {
+            *v = (*v + rng.gaussian(0.0, 0.05) as f32).clamp(0.0, 1.0);
+        }
+        Sample { x: blurred, y: y as i32 }
+    }
+
+    /// Materialize `n` samples starting at `start` into a Dataset.
+    pub fn dataset(&self, start: u64, n: usize) -> Dataset {
+        let mut x = Vec::with_capacity(n * FEATURES);
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let s = self.sample(start + i as u64);
+            x.extend_from_slice(&s.x);
+            y.push(s.y);
+        }
+        Dataset { x, y, features: FEATURES }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let g = MnistGen::new(7);
+        let a = g.sample(123);
+        let b = g.sample(123);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        assert_ne!(g.sample(124).x, a.x);
+    }
+
+    #[test]
+    fn pixels_in_unit_range_and_nontrivial() {
+        let g = MnistGen::new(1);
+        for i in 0..20 {
+            let s = g.sample(i);
+            assert!(s.x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            let ink: f32 = s.x.iter().sum();
+            assert!(ink > 10.0, "sample {i} almost blank: ink={ink}");
+            assert!(ink < 500.0, "sample {i} almost full: ink={ink}");
+        }
+    }
+
+    #[test]
+    fn labels_roughly_uniform() {
+        let g = MnistGen::new(2);
+        let ds = g.dataset(0, 2000);
+        let mut counts = [0usize; CLASSES];
+        for &y in &ds.y {
+            counts[y as usize] += 1;
+        }
+        for (c, &n) in counts.iter().enumerate() {
+            assert!(n > 120 && n < 280, "class {c}: {n}");
+        }
+    }
+
+    #[test]
+    fn within_class_variation_and_between_class_separation() {
+        let g = MnistGen::new(3);
+        // Collect a few samples of two classes.
+        let mut by_class: std::collections::HashMap<i32, Vec<Vec<f32>>> = Default::default();
+        let mut i = 0u64;
+        while by_class.get(&0).map_or(0, |v| v.len()) < 5
+            || by_class.get(&1).map_or(0, |v| v.len()) < 5
+        {
+            let s = g.sample(i);
+            by_class.entry(s.y).or_default().push(s.x);
+            i += 1;
+        }
+        let d = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum::<f32>().sqrt()
+        };
+        let c0 = &by_class[&0];
+        let c1 = &by_class[&1];
+        let within = d(&c0[0], &c0[1]);
+        let between = d(&c0[0], &c1[0]);
+        assert!(within > 0.1, "no within-class variation");
+        assert!(between > within, "classes not separated: within={within} between={between}");
+    }
+
+    #[test]
+    fn dataset_shapes() {
+        let g = MnistGen::new(4);
+        let ds = g.dataset(100, 32);
+        assert_eq!(ds.len(), 32);
+        assert_eq!(ds.x.len(), 32 * FEATURES);
+        assert_eq!(ds.row(5).len(), FEATURES);
+    }
+}

@@ -1,0 +1,127 @@
+//! Data substrate: synthetic MNIST-class images, the Shakespeare char
+//! corpus, and IID / Dirichlet non-IID partitioning across devices.
+//!
+//! No network access is available in this environment, so MNIST is replaced
+//! by a deterministic class-conditional generator with the same shapes and
+//! splits (see DESIGN.md §Substitutions): 10 structured 28x28 prototype
+//! glyphs + per-sample jitter, elastic shift, and pixel noise. It is
+//! learnable-but-not-trivial: LR plateaus below CNN, mirroring MNIST.
+
+pub mod mnist;
+pub mod partition;
+pub mod shakespeare;
+
+pub use mnist::{MnistGen, Sample};
+pub use partition::{partition_dirichlet, partition_iid};
+pub use shakespeare::{CharCorpus, VOCAB};
+
+/// A classification dataset in flat-f32 form (x: n x 784, y: n).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub features: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.features..(i + 1) * self.features]
+    }
+
+    /// Gather a batch by indices into caller-provided buffers.
+    pub fn gather(&self, idxs: &[usize], xb: &mut Vec<f32>, yb: &mut Vec<i32>) {
+        xb.clear();
+        yb.clear();
+        for &i in idxs {
+            xb.extend_from_slice(self.row(i));
+            yb.push(self.y[i]);
+        }
+    }
+}
+
+/// Cycling mini-batch sampler over a fixed index set (one per device).
+#[derive(Clone, Debug)]
+pub struct BatchSampler {
+    indices: Vec<usize>,
+    cursor: usize,
+    rng: crate::util::Rng,
+}
+
+impl BatchSampler {
+    pub fn new(indices: Vec<usize>, rng: crate::util::Rng) -> Self {
+        assert!(!indices.is_empty());
+        let mut s = BatchSampler { indices, cursor: 0, rng };
+        s.reshuffle();
+        s
+    }
+
+    fn reshuffle(&mut self) {
+        let mut idx = std::mem::take(&mut self.indices);
+        self.rng.shuffle(&mut idx);
+        self.indices = idx;
+        self.cursor = 0;
+    }
+
+    /// Next `b` indices, reshuffling at epoch boundaries (with replacement
+    /// across the boundary so batches are always full).
+    pub fn next_batch(&mut self, b: usize, out: &mut Vec<usize>) {
+        out.clear();
+        while out.len() < b {
+            if self.cursor >= self.indices.len() {
+                self.reshuffle();
+            }
+            out.push(self.indices[self.cursor]);
+            self.cursor += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn sampler_covers_all_indices_each_epoch() {
+        let mut s = BatchSampler::new((0..10).collect(), Rng::new(1));
+        let mut seen = std::collections::HashSet::new();
+        let mut batch = Vec::new();
+        for _ in 0..5 {
+            s.next_batch(2, &mut batch);
+            seen.extend(batch.iter().copied());
+        }
+        assert_eq!(seen.len(), 10);
+    }
+
+    #[test]
+    fn sampler_always_full_batches() {
+        let mut s = BatchSampler::new((0..7).collect(), Rng::new(2));
+        let mut batch = Vec::new();
+        for _ in 0..10 {
+            s.next_batch(3, &mut batch);
+            assert_eq!(batch.len(), 3);
+        }
+    }
+
+    #[test]
+    fn dataset_gather() {
+        let ds = Dataset {
+            x: (0..12).map(|i| i as f32).collect(),
+            y: vec![0, 1, 2],
+            features: 4,
+        };
+        let mut xb = Vec::new();
+        let mut yb = Vec::new();
+        ds.gather(&[2, 0], &mut xb, &mut yb);
+        assert_eq!(yb, vec![2, 0]);
+        assert_eq!(xb, vec![8.0, 9.0, 10.0, 11.0, 0.0, 1.0, 2.0, 3.0]);
+    }
+}

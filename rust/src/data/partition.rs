@@ -1,0 +1,159 @@
+//! Federated data partitioning: IID and Dirichlet non-IID splits.
+//!
+//! `partition_dirichlet(alpha)` draws per-class device proportions from a
+//! symmetric Dirichlet — the standard FL non-IID benchmark protocol
+//! (smaller alpha = more skewed label distributions per device).
+
+use super::Dataset;
+use crate::util::Rng;
+
+/// Split `ds` indices into `m` IID shards (random permutation, equal sizes).
+pub fn partition_iid(ds: &Dataset, m: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    let mut idx: Vec<usize> = (0..ds.len()).collect();
+    rng.shuffle(&mut idx);
+    let chunk = ds.len() / m;
+    (0..m)
+        .map(|i| {
+            let lo = i * chunk;
+            let hi = if i + 1 == m { ds.len() } else { lo + chunk };
+            idx[lo..hi].to_vec()
+        })
+        .collect()
+}
+
+/// Dirichlet non-IID partition: for each class, device shares ~ Dir(alpha).
+/// Guarantees every device receives at least one sample (re-assigning from
+/// the largest shard if needed).
+pub fn partition_dirichlet(
+    ds: &Dataset,
+    m: usize,
+    alpha: f64,
+    nclasses: usize,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    if !alpha.is_finite() {
+        return partition_iid(ds, m, rng);
+    }
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); nclasses];
+    for (i, &y) in ds.y.iter().enumerate() {
+        by_class[y as usize].push(i);
+    }
+    let mut shards: Vec<Vec<usize>> = vec![Vec::new(); m];
+    for class_idx in by_class.into_iter() {
+        if class_idx.is_empty() {
+            continue;
+        }
+        let props = rng.dirichlet(alpha, m);
+        // Convert proportions to counts that sum to the class size.
+        let n = class_idx.len();
+        let mut counts: Vec<usize> = props.iter().map(|&p| (p * n as f64).floor() as usize).collect();
+        let mut assigned: usize = counts.iter().sum();
+        while assigned < n {
+            let i = rng.choice_weighted(&props);
+            counts[i] += 1;
+            assigned += 1;
+        }
+        let mut cursor = 0;
+        let mut order = class_idx;
+        rng.shuffle(&mut order);
+        for (dev, &c) in counts.iter().enumerate() {
+            shards[dev].extend_from_slice(&order[cursor..cursor + c]);
+            cursor += c;
+        }
+    }
+    // No empty shards: steal from the largest.
+    for dev in 0..m {
+        if shards[dev].is_empty() {
+            let largest = (0..m).max_by_key(|&i| shards[i].len()).unwrap();
+            let take = shards[largest].pop().expect("dataset too small to partition");
+            shards[dev].push(take);
+        }
+    }
+    shards
+}
+
+/// Label-distribution skew diagnostic: mean total-variation distance between
+/// per-device label histograms and the global histogram. 0 = IID.
+pub fn label_skew(ds: &Dataset, shards: &[Vec<usize>], nclasses: usize) -> f64 {
+    let hist = |idxs: &[usize]| -> Vec<f64> {
+        let mut h = vec![0f64; nclasses];
+        for &i in idxs {
+            h[ds.y[i] as usize] += 1.0;
+        }
+        let s: f64 = h.iter().sum();
+        if s > 0.0 {
+            for x in &mut h {
+                *x /= s;
+            }
+        }
+        h
+    };
+    let all: Vec<usize> = (0..ds.len()).collect();
+    let global = hist(&all);
+    let mut tv = 0.0;
+    for shard in shards {
+        let h = hist(shard);
+        tv += h.iter().zip(&global).map(|(a, b)| (a - b).abs()).sum::<f64>() / 2.0;
+    }
+    tv / shards.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::mnist::MnistGen;
+
+    fn toy(n: usize) -> Dataset {
+        MnistGen::new(1).dataset(0, n)
+    }
+
+    #[test]
+    fn iid_covers_everything_disjointly() {
+        let ds = toy(300);
+        let mut rng = Rng::new(1);
+        let shards = partition_iid(&ds, 3, &mut rng);
+        let mut seen = std::collections::HashSet::new();
+        for s in &shards {
+            for &i in s {
+                assert!(seen.insert(i));
+            }
+        }
+        assert_eq!(seen.len(), 300);
+    }
+
+    #[test]
+    fn dirichlet_covers_everything_disjointly() {
+        let ds = toy(400);
+        let mut rng = Rng::new(2);
+        let shards = partition_dirichlet(&ds, 4, 0.3, 10, &mut rng);
+        let total: usize = shards.iter().map(Vec::len).sum();
+        assert_eq!(total, 400);
+        let mut seen = std::collections::HashSet::new();
+        for s in &shards {
+            assert!(!s.is_empty());
+            for &i in s {
+                assert!(seen.insert(i));
+            }
+        }
+    }
+
+    #[test]
+    fn smaller_alpha_is_more_skewed() {
+        let ds = toy(3000);
+        let mut rng = Rng::new(3);
+        let skew_small = label_skew(&ds, &partition_dirichlet(&ds, 5, 0.1, 10, &mut rng), 10);
+        let skew_large = label_skew(&ds, &partition_dirichlet(&ds, 5, 100.0, 10, &mut rng), 10);
+        assert!(
+            skew_small > skew_large + 0.05,
+            "alpha=0.1 skew {skew_small} should exceed alpha=100 skew {skew_large}"
+        );
+    }
+
+    #[test]
+    fn infinite_alpha_is_iid() {
+        let ds = toy(200);
+        let mut rng = Rng::new(4);
+        let shards = partition_dirichlet(&ds, 2, f64::INFINITY, 10, &mut rng);
+        assert_eq!(shards.iter().map(Vec::len).sum::<usize>(), 200);
+    }
+}

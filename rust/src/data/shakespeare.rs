@@ -1,0 +1,279 @@
+//! Shakespeare character corpus for the RNN workload (paper Sec. 4.1).
+//!
+//! The paper uses the LEAF Shakespeare split (40k lines). With no network
+//! access we embed a public-domain excerpt (several famous passages) and
+//! tile batching over it; same task (next-char prediction), same vocabulary
+//! pipeline. Characters are mapped into a fixed 64-symbol vocabulary
+//! matching the AOT RNN artifact (`VOCAB` in python/compile/model.py).
+
+use crate::util::Rng;
+
+/// Vocabulary size — must equal `model.VOCAB` on the python side.
+pub const VOCAB: usize = 64;
+
+/// Embedded public-domain excerpt (~6 KB).
+pub const CORPUS: &str = r#"to be, or not to be, that is the question:
+whether 'tis nobler in the mind to suffer
+the slings and arrows of outrageous fortune,
+or to take arms against a sea of troubles
+and by opposing end them. to die, to sleep;
+no more; and by a sleep to say we end
+the heart-ache and the thousand natural shocks
+that flesh is heir to: 'tis a consummation
+devoutly to be wish'd. to die, to sleep;
+to sleep, perchance to dream. ay, there's the rub,
+for in that sleep of death what dreams may come,
+when we have shuffled off this mortal coil,
+must give us pause. there's the respect
+that makes calamity of so long life.
+
+tomorrow, and tomorrow, and tomorrow,
+creeps in this petty pace from day to day,
+to the last syllable of recorded time;
+and all our yesterdays have lighted fools
+the way to dusty death. out, out, brief candle!
+life's but a walking shadow, a poor player,
+that struts and frets his hour upon the stage,
+and then is heard no more. it is a tale
+told by an idiot, full of sound and fury,
+signifying nothing.
+
+now is the winter of our discontent
+made glorious summer by this sun of york;
+and all the clouds that lour'd upon our house
+in the deep bosom of the ocean buried.
+now are our brows bound with victorious wreaths;
+our bruised arms hung up for monuments;
+our stern alarums changed to merry meetings,
+our dreadful marches to delightful measures.
+
+friends, romans, countrymen, lend me your ears;
+i come to bury caesar, not to praise him.
+the evil that men do lives after them;
+the good is oft interred with their bones;
+so let it be with caesar. the noble brutus
+hath told you caesar was ambitious:
+if it were so, it was a grievous fault,
+and grievously hath caesar answer'd it.
+
+two households, both alike in dignity,
+in fair verona, where we lay our scene,
+from ancient grudge break to new mutiny,
+where civil blood makes civil hands unclean.
+from forth the fatal loins of these two foes
+a pair of star-cross'd lovers take their life;
+whose misadventured piteous overthrows
+do with their death bury their parents' strife.
+
+shall i compare thee to a summer's day?
+thou art more lovely and more temperate:
+rough winds do shake the darling buds of may,
+and summer's lease hath all too short a date;
+sometime too hot the eye of heaven shines,
+and often is his gold complexion dimm'd;
+and every fair from fair sometime declines,
+by chance or nature's changing course untrimm'd;
+but thy eternal summer shall not fade,
+nor lose possession of that fair thou ow'st;
+nor shall death brag thou wander'st in his shade,
+when in eternal lines to time thou grow'st:
+so long as men can breathe or eyes can see,
+so long lives this, and this gives life to thee.
+
+once more unto the breach, dear friends, once more;
+or close the wall up with our english dead.
+in peace there's nothing so becomes a man
+as modest stillness and humility:
+but when the blast of war blows in our ears,
+then imitate the action of the tiger;
+stiffen the sinews, summon up the blood,
+disguise fair nature with hard-favour'd rage.
+
+all the world's a stage,
+and all the men and women merely players:
+they have their exits and their entrances;
+and one man in his time plays many parts,
+his acts being seven ages. at first the infant,
+mewling and puking in the nurse's arms.
+and then the whining school-boy, with his satchel
+and shining morning face, creeping like snail
+unwillingly to school.
+
+the quality of mercy is not strain'd,
+it droppeth as the gentle rain from heaven
+upon the place beneath: it is twice blest;
+it blesseth him that gives and him that takes:
+'tis mightiest in the mightiest: it becomes
+the throned monarch better than his crown;
+his sceptre shows the force of temporal power,
+the attribute to awe and majesty,
+wherein doth sit the dread and fear of kings;
+but mercy is above this sceptred sway;
+it is enthroned in the hearts of kings,
+it is an attribute to god himself.
+
+if music be the food of love, play on;
+give me excess of it, that, surfeiting,
+the appetite may sicken, and so die.
+that strain again! it had a dying fall:
+o, it came o'er my ear like the sweet sound,
+that breathes upon a bank of violets,
+stealing and giving odour!
+
+is this a dagger which i see before me,
+the handle toward my hand? come, let me clutch thee.
+i have thee not, and yet i see thee still.
+art thou not, fatal vision, sensible
+to feeling as to sight? or art thou but
+a dagger of the mind, a false creation,
+proceeding from the heat-oppressed brain?
+
+our revels now are ended. these our actors,
+as i foretold you, were all spirits and
+are melted into air, into thin air:
+and, like the baseless fabric of this vision,
+the cloud-capp'd towers, the gorgeous palaces,
+the solemn temples, the great globe itself,
+yea, all which it inherit, shall dissolve
+and, like this insubstantial pageant faded,
+leave not a rack behind. we are such stuff
+as dreams are made on, and our little life
+is rounded with a sleep.
+"#;
+
+/// Char -> vocab id. Lowercase letters, digits, common punctuation; id 0 is
+/// the catch-all/unknown symbol (also space's neighbor class).
+pub fn char_to_id(c: char) -> i32 {
+    let c = c.to_ascii_lowercase();
+    match c {
+        'a'..='z' => 1 + (c as u8 - b'a') as i32, // 1..=26
+        '0'..='9' => 27 + (c as u8 - b'0') as i32, // 27..=36
+        ' ' => 37,
+        '\n' => 38,
+        '.' => 39,
+        ',' => 40,
+        ';' => 41,
+        ':' => 42,
+        '\'' => 43,
+        '!' => 44,
+        '?' => 45,
+        '-' => 46,
+        '"' => 47,
+        '(' => 48,
+        ')' => 49,
+        _ => 0,
+    }
+}
+
+/// Tokenized corpus with sequence batching for the RNN artifact.
+#[derive(Clone, Debug)]
+pub struct CharCorpus {
+    pub ids: Vec<i32>,
+    pub seq: usize,
+}
+
+impl CharCorpus {
+    /// Tokenize the embedded corpus (or any text) for sequences of length
+    /// `seq + 1` (inputs + next-char targets).
+    pub fn new(text: &str, seq: usize) -> Self {
+        let ids: Vec<i32> = text.chars().map(char_to_id).collect();
+        assert!(ids.len() > seq + 1, "corpus shorter than one sequence");
+        CharCorpus { ids, seq }
+    }
+
+    pub fn embedded(seq: usize) -> Self {
+        Self::new(CORPUS, seq)
+    }
+
+    /// Number of distinct sequence start positions.
+    pub fn num_positions(&self) -> usize {
+        self.ids.len() - (self.seq + 1)
+    }
+
+    /// Fill a batch of `b` sequences (each `seq + 1` ids) chosen from the
+    /// device's assigned span, deterministic in `rng`.
+    pub fn fill_batch(
+        &self,
+        rng: &mut Rng,
+        span: (usize, usize),
+        b: usize,
+        out: &mut Vec<i32>,
+    ) {
+        let (lo, hi) = span;
+        let hi = hi.min(self.num_positions());
+        assert!(lo < hi, "empty span {span:?}");
+        out.clear();
+        for _ in 0..b {
+            let start = lo + rng.index(hi - lo);
+            out.extend_from_slice(&self.ids[start..start + self.seq + 1]);
+        }
+    }
+
+    /// Split positions into `m` contiguous device spans (non-IID by locality:
+    /// different devices hold different plays/passages).
+    pub fn device_spans(&self, m: usize) -> Vec<(usize, usize)> {
+        let n = self.num_positions();
+        let chunk = n / m;
+        (0..m)
+            .map(|i| (i * chunk, if i + 1 == m { n } else { (i + 1) * chunk }))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_ids_in_range() {
+        for c in CORPUS.chars() {
+            let id = char_to_id(c);
+            assert!((0..VOCAB as i32).contains(&id), "{c:?} -> {id}");
+        }
+    }
+
+    #[test]
+    fn corpus_is_substantial() {
+        assert!(CORPUS.len() > 4000, "corpus too small: {}", CORPUS.len());
+        let distinct: std::collections::HashSet<i32> =
+            CORPUS.chars().map(char_to_id).collect();
+        assert!(distinct.len() > 25, "vocab coverage too small: {}", distinct.len());
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let corpus = CharCorpus::embedded(24);
+        let mut rng = Rng::new(1);
+        let mut batch = Vec::new();
+        let spans = corpus.device_spans(3);
+        corpus.fill_batch(&mut rng, spans[1], 64, &mut batch);
+        assert_eq!(batch.len(), 64 * 25);
+        assert!(batch.iter().all(|&i| (0..VOCAB as i32).contains(&i)));
+    }
+
+    #[test]
+    fn device_spans_cover_disjointly() {
+        let corpus = CharCorpus::embedded(24);
+        let spans = corpus.device_spans(3);
+        assert_eq!(spans.len(), 3);
+        assert_eq!(spans[0].0, 0);
+        assert_eq!(spans[2].1, corpus.num_positions());
+        for w in spans.windows(2) {
+            assert_eq!(w[0].1, w[1].0);
+        }
+    }
+
+    #[test]
+    fn batches_from_span_stay_in_span() {
+        let corpus = CharCorpus::embedded(8);
+        let mut rng = Rng::new(2);
+        let mut batch = Vec::new();
+        // Span over a known region; check sequences match corpus content.
+        corpus.fill_batch(&mut rng, (0, 10), 4, &mut batch);
+        for s in batch.chunks(9) {
+            // each sequence must appear verbatim in the first 19 ids
+            let found = (0..10).any(|st| &corpus.ids[st..st + 9] == s);
+            assert!(found);
+        }
+    }
+}

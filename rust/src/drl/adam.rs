@@ -1,0 +1,108 @@
+//! Adam optimizer over an [`Mlp`]'s parameters (Kingma & Ba 2015).
+
+use super::mlp::{Grads, Mlp};
+
+/// Adam state: first/second moments per parameter tensor.
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    t: u64,
+    mw: Vec<Vec<f32>>,
+    vw: Vec<Vec<f32>>,
+    mb: Vec<Vec<f32>>,
+    vb: Vec<Vec<f32>>,
+}
+
+impl Adam {
+    pub fn new(mlp: &Mlp, lr: f32) -> Self {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            t: 0,
+            mw: mlp.layers.iter().map(|l| vec![0.0; l.w.len()]).collect(),
+            vw: mlp.layers.iter().map(|l| vec![0.0; l.w.len()]).collect(),
+            mb: mlp.layers.iter().map(|l| vec![0.0; l.b.len()]).collect(),
+            vb: mlp.layers.iter().map(|l| vec![0.0; l.b.len()]).collect(),
+        }
+    }
+
+    /// Apply one descent step with gradients `g` (descend; negate `g`
+    /// beforehand for ascent).
+    pub fn step(&mut self, mlp: &mut Mlp, g: &Grads) {
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for (l, layer) in mlp.layers.iter_mut().enumerate() {
+            Self::step_tensor(
+                &mut layer.w, &g.dw[l], &mut self.mw[l], &mut self.vw[l],
+                self.lr, self.beta1, self.beta2, self.eps, b1t, b2t,
+            );
+            Self::step_tensor(
+                &mut layer.b, &g.db[l], &mut self.mb[l], &mut self.vb[l],
+                self.lr, self.beta1, self.beta2, self.eps, b1t, b2t,
+            );
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn step_tensor(
+        p: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32],
+        lr: f32, beta1: f32, beta2: f32, eps: f32, b1t: f32, b2t: f32,
+    ) {
+        for i in 0..p.len() {
+            m[i] = beta1 * m[i] + (1.0 - beta1) * g[i];
+            v[i] = beta2 * v[i] + (1.0 - beta2) * g[i] * g[i];
+            let mhat = m[i] / b1t;
+            let vhat = v[i] / b2t;
+            p[i] -= lr * mhat / (vhat.sqrt() + eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::drl::mlp::{Act, Cache};
+    use crate::util::Rng;
+
+    #[test]
+    fn adam_fits_linear_regression() {
+        let mut rng = Rng::new(1);
+        let mut mlp = Mlp::new(&[2, 1], &[Act::Linear], &mut rng);
+        let mut adam = Adam::new(&mlp, 0.05);
+        // target: y = 3x0 - 2x1 + 0.5
+        let mut cache = Cache::default();
+        for _ in 0..800 {
+            let x: Vec<f32> = (0..2).map(|_| rng.normal() as f32).collect();
+            let target = 3.0 * x[0] - 2.0 * x[1] + 0.5;
+            let out = mlp.forward(&x, &mut cache);
+            let err = out[0] - target;
+            let mut g = Grads::zeros_like(&mlp);
+            mlp.backward(&cache, &[err], &mut g);
+            adam.step(&mut mlp, &g);
+        }
+        let w = &mlp.layers[0].w;
+        let b = mlp.layers[0].b[0];
+        assert!((w[0] - 3.0).abs() < 0.1, "w0={}", w[0]);
+        assert!((w[1] + 2.0).abs() < 0.1, "w1={}", w[1]);
+        assert!((b - 0.5).abs() < 0.1, "b={b}");
+    }
+
+    #[test]
+    fn step_count_bias_correction() {
+        let mut rng = Rng::new(2);
+        let mut mlp = Mlp::new(&[1, 1], &[Act::Linear], &mut rng);
+        let mut adam = Adam::new(&mlp, 0.1);
+        let w0 = mlp.layers[0].w[0];
+        let mut g = Grads::zeros_like(&mlp);
+        g.dw[0][0] = 1.0;
+        adam.step(&mut mlp, &g);
+        // First step with bias correction moves by ~lr exactly.
+        assert!((w0 - mlp.layers[0].w[0] - 0.1).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,300 @@
+//! Per-device FL control agent: maps the paper's state / action / reward
+//! (Sec. 3.2, Eq. 11–16) onto the DDPG core.
+//!
+//! - **State** (Eq. 11–12): per-resource communication and computation
+//!   consumption of the last round, remaining budget fractions, current
+//!   per-channel effective bandwidth, and the last loss delta.
+//! - **Action** (Eq. 13): `(H_m, D_{m,1..N})` — local step count and
+//!   per-channel coordinate allocation, decoded from the actor's
+//!   `[-1,1]^{1+N}` output.
+//! - **Reward** (Eq. 14–16): weighted ratio of consecutive utilities
+//!   `U_{m,r} = δ / ε_{m,r}` (loss improvement per unit of resource).
+
+use super::ddpg::{Ddpg, StepStats};
+use super::replay::Transition;
+use crate::channels::{allocate_budget, AllocationPlan, DeviceChannels};
+use crate::config::DrlConfig;
+use crate::resources::{ResourceMeter, RESOURCES};
+use crate::util::Rng;
+
+/// Decoded action for the round loop.
+#[derive(Clone, Debug)]
+pub struct ControlDecision {
+    /// Local SGD steps H_m^(t) in [1, h_max].
+    pub local_steps: usize,
+    /// Per-channel coordinate allocation (layer-to-channel mapping).
+    pub plan: AllocationPlan,
+    /// Raw actor output (stored in the replay transition).
+    pub raw: Vec<f32>,
+}
+
+/// Normalization constants so state features are O(1).
+#[derive(Clone, Copy, Debug)]
+pub struct StateScales {
+    pub energy: f64,
+    pub money: f64,
+    pub bandwidth: f64,
+    pub loss: f64,
+}
+
+impl Default for StateScales {
+    fn default() -> Self {
+        StateScales { energy: 500.0, money: 0.05, bandwidth: 12.0, loss: 2.5 }
+    }
+}
+
+/// Utility tracker for the Eq. 16 reward.
+#[derive(Clone, Debug, Default)]
+pub struct RewardTracker {
+    prev_utility: Option<Vec<f64>>,
+    pub last_reward: f64,
+}
+
+impl RewardTracker {
+    /// Utilities `U_{m,r} = δ / ε_r` (Eq. 14); `δ = loss_prev − loss_cur`
+    /// (positive = improvement), `ε_r` the round's consumption (Eq. 15b).
+    fn utilities(delta: f64, eps: &[f64]) -> Vec<f64> {
+        eps.iter().map(|&e| delta / e.max(1e-9)).collect()
+    }
+
+    /// Eq. 16 with uniform weights α_r = 1/R, ratio-clamped for stability
+    /// (consecutive-utility ratios blow up when U^t ≈ 0).
+    pub fn reward(&mut self, delta: f64, eps: &[f64]) -> f64 {
+        let u = Self::utilities(delta, eps);
+        let r = match &self.prev_utility {
+            Some(prev) => {
+                let mut acc = 0.0;
+                for (un, up) in u.iter().zip(prev) {
+                    let ratio = if up.abs() > 1e-9 {
+                        (un / up).clamp(-5.0, 5.0)
+                    } else {
+                        un.clamp(-5.0, 5.0)
+                    };
+                    acc += ratio / u.len() as f64;
+                }
+                acc
+            }
+            // First round: reward the raw utility (scaled, clamped).
+            None => u.iter().map(|x| x.clamp(-5.0, 5.0)).sum::<f64>() / u.len() as f64,
+        };
+        self.prev_utility = Some(u);
+        self.last_reward = r;
+        r
+    }
+}
+
+/// The per-device controller (one DDPG agent per device, as in the paper).
+pub struct DeviceAgent {
+    pub ddpg: Ddpg,
+    pub scales: StateScales,
+    pub h_max: usize,
+    /// Total coordinate cap D (Eq. 10b).
+    pub d_total: usize,
+    /// Floor so the update never degenerates to zero traffic.
+    pub d_min: usize,
+    pub tracker: RewardTracker,
+    last_state: Option<Vec<f32>>,
+    last_action: Option<Vec<f32>>,
+    pub n_channels: usize,
+}
+
+impl DeviceAgent {
+    pub fn new(
+        n_channels: usize,
+        h_max: usize,
+        d_total: usize,
+        d_min: usize,
+        cfg: DrlConfig,
+        rng: Rng,
+    ) -> Self {
+        let state_dim = Self::state_dim(n_channels);
+        let action_dim = 1 + n_channels;
+        DeviceAgent {
+            ddpg: Ddpg::new(state_dim, action_dim, cfg, rng),
+            scales: StateScales::default(),
+            h_max,
+            d_total,
+            d_min,
+            tracker: RewardTracker::default(),
+            last_state: None,
+            last_action: None,
+            n_channels,
+        }
+    }
+
+    /// 2R consumption components + R remaining fracs + N bandwidths + loss δ.
+    pub fn state_dim(n_channels: usize) -> usize {
+        2 * RESOURCES.len() + RESOURCES.len() + n_channels + 1
+    }
+
+    /// Build the Eq. 11 state vector from the meters and channel conditions.
+    pub fn observe_state(
+        &self,
+        meter: &ResourceMeter,
+        channels: &DeviceChannels,
+        last_loss_delta: f64,
+    ) -> Vec<f32> {
+        let s = &self.scales;
+        let mut v = Vec::with_capacity(Self::state_dim(self.n_channels));
+        // E_{m,r,comm}, E_{m,r,comp} per resource (Eq. 12a/12b).
+        for (ri, _r) in RESOURCES.iter().enumerate() {
+            let rc = &meter.last_round[ri];
+            let scale = if ri == 0 { s.energy } else { s.money };
+            v.push((rc.comm / scale) as f32);
+            v.push((rc.comp / scale) as f32);
+        }
+        for r in RESOURCES {
+            v.push(meter.remaining_frac(r) as f32);
+        }
+        for link in &channels.links {
+            v.push((link.effective_bandwidth() / s.bandwidth) as f32);
+        }
+        v.push((last_loss_delta / s.loss) as f32);
+        v
+    }
+
+    /// Choose this round's `(H_m, D_{m,n})` (exploratory during training).
+    pub fn decide(&mut self, state: &[f32], explore: bool) -> ControlDecision {
+        let raw = if explore {
+            self.ddpg.act_explore(state)
+        } else {
+            self.ddpg.act_greedy(state)
+        };
+        self.last_state = Some(state.to_vec());
+        self.last_action = Some(raw.clone());
+        self.decode(&raw)
+    }
+
+    /// Decode a raw `[-1,1]^{1+N}` action into a feasible decision
+    /// (projection enforces Eq. 10b/10c).
+    pub fn decode(&self, raw: &[f32]) -> ControlDecision {
+        assert_eq!(raw.len(), 1 + self.n_channels);
+        let h01 = ((raw[0] as f64) + 1.0) / 2.0;
+        let local_steps = 1 + (h01 * (self.h_max as f64 - 1.0)).round() as usize;
+        let fracs: Vec<f64> = raw[1..].iter().map(|&x| x as f64).collect();
+        let plan = allocate_budget(&fracs, self.d_total, self.d_min);
+        ControlDecision { local_steps: local_steps.min(self.h_max), plan, raw: raw.to_vec() }
+    }
+
+    /// Complete the transition after the round executed: compute the Eq. 16
+    /// reward, push to replay, and learn. Returns (reward, learn stats).
+    pub fn feedback(
+        &mut self,
+        loss_delta: f64,
+        eps: &[f64],
+        next_state: Vec<f32>,
+        done: bool,
+    ) -> (f64, Option<StepStats>) {
+        let reward = self.tracker.reward(loss_delta, eps);
+        let (state, action) = match (self.last_state.take(), self.last_action.take()) {
+            (Some(s), Some(a)) => (s, a),
+            _ => return (reward, None),
+        };
+        let stats = self.ddpg.observe(Transition {
+            state,
+            action,
+            reward: reward as f32,
+            next_state,
+            done,
+        });
+        (reward, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channels::ChannelType;
+
+    fn agent() -> DeviceAgent {
+        DeviceAgent::new(3, 8, 1000, 16, DrlConfig::default(), Rng::new(1))
+    }
+
+    #[test]
+    fn state_vector_dimension() {
+        let a = agent();
+        let meter = ResourceMeter::new(1000.0, 1.0);
+        let ch = DeviceChannels::new(
+            &[ChannelType::G5, ChannelType::G4, ChannelType::G3],
+            &Rng::new(2),
+            0,
+        );
+        let s = a.observe_state(&meter, &ch, 0.1);
+        assert_eq!(s.len(), DeviceAgent::state_dim(3));
+        assert_eq!(s.len(), a.ddpg.state_dim());
+        assert!(s.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn decode_respects_bounds() {
+        let a = agent();
+        for raw in [
+            vec![-1.0f32, -1.0, -1.0, -1.0],
+            vec![1.0, 1.0, 1.0, 1.0],
+            vec![0.0, 0.3, -0.7, 0.9],
+        ] {
+            let d = a.decode(&raw);
+            assert!((1..=8).contains(&d.local_steps), "{d:?}");
+            assert!(d.plan.total() >= 16 && d.plan.total() <= 1000, "{d:?}");
+        }
+    }
+
+    #[test]
+    fn decode_h_monotone_in_raw() {
+        let a = agent();
+        let lo = a.decode(&[-1.0, 0.0, 0.0, 0.0]).local_steps;
+        let hi = a.decode(&[1.0, 0.0, 0.0, 0.0]).local_steps;
+        assert_eq!(lo, 1);
+        assert_eq!(hi, 8);
+    }
+
+    #[test]
+    fn reward_prefers_cheaper_same_improvement() {
+        // Same δ at round t+1; lower resource use => higher utility ratio.
+        let mut cheap = RewardTracker::default();
+        let mut dear = RewardTracker::default();
+        // Round 1 identical.
+        cheap.reward(0.1, &[10.0, 1.0]);
+        dear.reward(0.1, &[10.0, 1.0]);
+        // Round 2: same improvement, different cost.
+        let r_cheap = cheap.reward(0.1, &[5.0, 0.5]);
+        let r_dear = dear.reward(0.1, &[20.0, 2.0]);
+        assert!(r_cheap > r_dear, "cheap {r_cheap} <= dear {r_dear}");
+    }
+
+    #[test]
+    fn reward_negative_when_loss_worsens() {
+        let mut t = RewardTracker::default();
+        t.reward(0.1, &[1.0, 1.0]);
+        let r = t.reward(-0.2, &[1.0, 1.0]);
+        assert!(r < 0.0, "worsening loss should be punished, got {r}");
+    }
+
+    #[test]
+    fn reward_bounded() {
+        let mut t = RewardTracker::default();
+        t.reward(1e-12, &[1e-9, 1e-9]);
+        let r = t.reward(1e9, &[1e-9, 1e-9]);
+        assert!(r.abs() <= 5.0, "{r}");
+    }
+
+    #[test]
+    fn feedback_learns_after_warmup() {
+        let mut a = DeviceAgent::new(
+            2,
+            4,
+            100,
+            4,
+            DrlConfig { warmup: 4, batch: 4, hidden: 16, ..DrlConfig::default() },
+            Rng::new(3),
+        );
+        let mut got_stats = false;
+        let state = vec![0.0f32; DeviceAgent::state_dim(2)];
+        for i in 0..64 {
+            a.decide(&state, true);
+            let (_, stats) = a.feedback(0.05, &[1.0, 0.1], state.clone(), i % 8 == 7);
+            got_stats |= stats.is_some();
+        }
+        assert!(got_stats, "agent never learned");
+    }
+}

@@ -1,0 +1,302 @@
+//! DDPG (Lillicrap et al. 2015) — the control algorithm of paper Sec. 3.3.
+//!
+//! Actor `π(s|θ^π)` (tanh head, actions in [-1,1]^A), critic `Q(s,a|θ^Q)`,
+//! target copies with soft updates (τ), uniform replay, OU exploration.
+//!
+//! Critic loss: MSE to `y = r + γ(1−done) Q'(s', π'(s'))` (Eq. 18).
+//! Actor update: deterministic policy gradient — ascend `Q(s, π(s))` by
+//! chaining `∂Q/∂a` (critic input-gradient) through the actor.
+
+use super::adam::Adam;
+use super::mlp::{Act, Cache, Grads, Mlp};
+use super::noise::OuNoise;
+use super::replay::{ReplayBuffer, Transition};
+use crate::config::DrlConfig;
+use crate::util::Rng;
+
+/// Diagnostics from one learning step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepStats {
+    pub critic_loss: f64,
+    pub actor_q: f64,
+}
+
+pub struct Ddpg {
+    pub actor: Mlp,
+    pub critic: Mlp,
+    pub actor_target: Mlp,
+    pub critic_target: Mlp,
+    actor_opt: Adam,
+    critic_opt: Adam,
+    pub replay: ReplayBuffer,
+    noise: OuNoise,
+    cfg: DrlConfig,
+    state_dim: usize,
+    action_dim: usize,
+    rng: Rng,
+    steps: usize,
+    // scratch
+    sample_buf: Vec<f32>,
+    noise_buf: Vec<f32>,
+}
+
+impl Ddpg {
+    pub fn new(state_dim: usize, action_dim: usize, cfg: DrlConfig, seed_rng: Rng) -> Self {
+        let mut rng = seed_rng;
+        let h = cfg.hidden;
+        let actor = Mlp::new(
+            &[state_dim, h, h, action_dim],
+            &[Act::Relu, Act::Relu, Act::Tanh],
+            &mut rng,
+        );
+        let critic = Mlp::new(
+            &[state_dim + action_dim, h, h, 1],
+            &[Act::Relu, Act::Relu, Act::Linear],
+            &mut rng,
+        );
+        let actor_target = actor.clone();
+        let critic_target = critic.clone();
+        let actor_opt = Adam::new(&actor, cfg.actor_lr as f32);
+        let critic_opt = Adam::new(&critic, cfg.critic_lr as f32);
+        let replay = ReplayBuffer::new(cfg.replay_capacity);
+        let noise = OuNoise::new(action_dim, cfg.noise_theta, cfg.noise_sigma, rng.fork(0xA0));
+        Ddpg {
+            actor,
+            critic,
+            actor_target,
+            critic_target,
+            actor_opt,
+            critic_opt,
+            replay,
+            noise,
+            cfg,
+            state_dim,
+            action_dim,
+            rng,
+            steps: 0,
+            sample_buf: Vec::new(),
+            noise_buf: Vec::new(),
+        }
+    }
+
+    pub fn action_dim(&self) -> usize {
+        self.action_dim
+    }
+
+    pub fn state_dim(&self) -> usize {
+        self.state_dim
+    }
+
+    /// Exploratory action: π(s) + OU noise, clamped to [-1, 1]. During the
+    /// warmup phase actions are uniform random for coverage.
+    pub fn act_explore(&mut self, state: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(state.len(), self.state_dim);
+        if self.steps < self.cfg.warmup {
+            return (0..self.action_dim)
+                .map(|_| self.rng.range(-1.0, 1.0) as f32)
+                .collect();
+        }
+        let mut a = self.actor.infer(state);
+        self.noise.sample(&mut self.noise_buf);
+        for (ai, &n) in a.iter_mut().zip(&self.noise_buf) {
+            *ai = (*ai + n).clamp(-1.0, 1.0);
+        }
+        a
+    }
+
+    /// Greedy action (evaluation).
+    pub fn act_greedy(&self, state: &[f32]) -> Vec<f32> {
+        self.actor.infer(state)
+    }
+
+    /// Store a transition and run one learning step if enough data.
+    pub fn observe(&mut self, t: Transition) -> Option<StepStats> {
+        self.replay.push(t);
+        self.steps += 1;
+        if self.replay.len() < self.cfg.batch.max(8) || self.steps < self.cfg.warmup {
+            return None;
+        }
+        Some(self.learn())
+    }
+
+    /// One DDPG learning step on a replay minibatch.
+    pub fn learn(&mut self) -> StepStats {
+        let b = self.cfg.batch.min(self.replay.len());
+        let mut batch: Vec<&Transition> = Vec::with_capacity(b);
+        // Split borrow: sample indices first into owned copies.
+        let mut rng = self.rng.fork(self.steps as u64);
+        self.replay.sample(b, &mut rng, &mut batch);
+        let batch: Vec<Transition> = batch.into_iter().cloned().collect();
+
+        // ---- Critic update ---------------------------------------------
+        // Targets y_i from target nets.
+        let mut targets = Vec::with_capacity(b);
+        for t in &batch {
+            let a_next = self.actor_target.infer(&t.next_state);
+            self.sample_buf.clear();
+            self.sample_buf.extend_from_slice(&t.next_state);
+            self.sample_buf.extend_from_slice(&a_next);
+            let q_next = self.critic_target.infer(&self.sample_buf)[0];
+            let bootstrap = if t.done { 0.0 } else { self.cfg.gamma as f32 * q_next };
+            targets.push(t.reward + bootstrap);
+        }
+        // Batched critic forward/backward.
+        let mut sa = Vec::with_capacity(b * (self.state_dim + self.action_dim));
+        for t in &batch {
+            sa.extend_from_slice(&t.state);
+            sa.extend_from_slice(&t.action);
+        }
+        let mut cache = Cache::default();
+        let q = self.critic.forward(&sa, &mut cache);
+        let mut dout = Vec::with_capacity(b);
+        let mut critic_loss = 0.0f64;
+        for i in 0..b {
+            let err = q[i] - targets[i];
+            critic_loss += (err as f64) * (err as f64);
+            dout.push(2.0 * err / b as f32);
+        }
+        critic_loss /= b as f64;
+        let mut cg = Grads::zeros_like(&self.critic);
+        self.critic.backward(&cache, &dout, &mut cg);
+        self.critic_opt.step(&mut self.critic, &cg);
+
+        // ---- Actor update ----------------------------------------------
+        // Maximize Q(s, π(s)): dQ/da via critic input grads, then chain
+        // through the actor; ascend => negate gradients.
+        let mut s_batch = Vec::with_capacity(b * self.state_dim);
+        for t in &batch {
+            s_batch.extend_from_slice(&t.state);
+        }
+        let mut a_cache = Cache::default();
+        let actions = self.actor.forward(&s_batch, &mut a_cache);
+        let mut sa2 = Vec::with_capacity(b * (self.state_dim + self.action_dim));
+        for i in 0..b {
+            sa2.extend_from_slice(&batch[i].state);
+            sa2.extend_from_slice(&actions[i * self.action_dim..(i + 1) * self.action_dim]);
+        }
+        let mut q_cache = Cache::default();
+        let q2 = self.critic.forward(&sa2, &mut q_cache);
+        let actor_q = q2.iter().map(|&x| x as f64).sum::<f64>() / b as f64;
+        // dQ/d(input) with dout = 1/b (mean over batch)
+        let mut dummy = Grads::zeros_like(&self.critic);
+        let dsa = self.critic.backward(&q_cache, &vec![1.0 / b as f32; b], &mut dummy);
+        // Extract the action part of the input gradient; negate for ascent.
+        let mut da = Vec::with_capacity(b * self.action_dim);
+        for i in 0..b {
+            let off = i * (self.state_dim + self.action_dim) + self.state_dim;
+            for j in 0..self.action_dim {
+                da.push(-dsa[off + j]);
+            }
+        }
+        let mut ag = Grads::zeros_like(&self.actor);
+        self.actor.backward(&a_cache, &da, &mut ag);
+        self.actor_opt.step(&mut self.actor, &ag);
+
+        // ---- Target soft updates ---------------------------------------
+        let tau = self.cfg.tau as f32;
+        self.actor_target.soft_update_from(&self.actor, tau);
+        self.critic_target.soft_update_from(&self.critic, tau);
+
+        StepStats { critic_loss, actor_q }
+    }
+
+    /// Reset the exploration process (e.g., per episode).
+    pub fn reset_noise(&mut self) {
+        self.noise.reset();
+    }
+
+    pub fn decay_exploration(&mut self, factor: f64, min_sigma: f64) {
+        self.noise.decay_sigma(factor, min_sigma);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Toy continuous control: state s ~ U(-1,1); reward = -(a - s)^2.
+    /// Optimal policy: a = s. DDPG should learn it quickly.
+    #[test]
+    fn solves_match_the_state_problem() {
+        let cfg = DrlConfig {
+            actor_lr: 2e-3,
+            critic_lr: 1e-2,
+            gamma: 0.0, // single-step episodes
+            tau: 0.05,
+            replay_capacity: 4096,
+            batch: 32,
+            hidden: 32,
+            noise_sigma: 0.3,
+            noise_theta: 0.15,
+            warmup: 64,
+        };
+        let mut agent = Ddpg::new(1, 1, cfg, Rng::new(7));
+        let mut env_rng = Rng::new(8);
+        for _ in 0..1500 {
+            let s = vec![env_rng.range(-1.0, 1.0) as f32];
+            let a = agent.act_explore(&s);
+            let r = -((a[0] - s[0]) * (a[0] - s[0]));
+            agent.observe(Transition {
+                state: s.clone(),
+                action: a,
+                reward: r,
+                next_state: s,
+                done: true,
+            });
+        }
+        // Evaluate greedy policy.
+        let mut err = 0.0f64;
+        let n = 50;
+        for i in 0..n {
+            let s = -1.0 + 2.0 * (i as f32) / (n - 1) as f32;
+            let a = agent.act_greedy(&[s])[0];
+            err += ((a - s) as f64).powi(2);
+        }
+        let mse = err / n as f64;
+        assert!(mse < 0.05, "greedy policy MSE {mse} too high");
+    }
+
+    #[test]
+    fn critic_loss_decreases_on_stationary_problem() {
+        let cfg = DrlConfig {
+            warmup: 16,
+            batch: 16,
+            hidden: 24,
+            gamma: 0.0,
+            ..DrlConfig::default()
+        };
+        let mut agent = Ddpg::new(2, 1, cfg, Rng::new(9));
+        let mut rng = Rng::new(10);
+        let mut first = None;
+        let mut last = 0.0;
+        for step in 0..800 {
+            let s = vec![rng.normal() as f32, rng.normal() as f32];
+            let a = agent.act_explore(&s);
+            let r = s[0] * a[0]; // simple bilinear reward
+            if let Some(stats) = agent.observe(Transition {
+                state: s.clone(),
+                action: a,
+                reward: r,
+                next_state: s,
+                done: true,
+            }) {
+                if first.is_none() && step > 50 {
+                    first = Some(stats.critic_loss);
+                }
+                last = stats.critic_loss;
+            }
+        }
+        assert!(last < first.unwrap(), "critic loss should fall: {first:?} -> {last}");
+    }
+
+    #[test]
+    fn actions_bounded() {
+        let mut agent = Ddpg::new(3, 2, DrlConfig::default(), Rng::new(11));
+        for i in 0..200 {
+            let s = vec![i as f32, -(i as f32), 0.5];
+            let a = agent.act_explore(&s);
+            assert_eq!(a.len(), 2);
+            assert!(a.iter().all(|&x| (-1.0..=1.0).contains(&x)), "{a:?}");
+        }
+    }
+}

@@ -1,0 +1,355 @@
+//! Dense MLP with manual backprop — the function approximator for DDPG.
+//!
+//! No autograd crate exists offline, so forward/backward are hand-written
+//! and verified against finite differences in the tests. Shapes are tiny
+//! (state/action dims < 16, hidden <= 128), so plain row-major loops are
+//! fast enough; the perf pass pins batch scratch buffers to avoid
+//! allocation in the training loop.
+
+use crate::util::Rng;
+
+/// Activation for a layer's output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Act {
+    Linear,
+    Relu,
+    Tanh,
+}
+
+impl Act {
+    #[inline]
+    fn apply(&self, z: f32) -> f32 {
+        match self {
+            Act::Linear => z,
+            Act::Relu => z.max(0.0),
+            Act::Tanh => z.tanh(),
+        }
+    }
+
+    /// Derivative in terms of the *activated* output a = act(z).
+    #[inline]
+    fn dact(&self, a: f32) -> f32 {
+        match self {
+            Act::Linear => 1.0,
+            Act::Relu => {
+                if a > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Act::Tanh => 1.0 - a * a,
+        }
+    }
+}
+
+/// One dense layer: `out = act(W x + b)`, `W` row-major `[out_dim, in_dim]`.
+#[derive(Clone, Debug)]
+pub struct Dense {
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub act: Act,
+}
+
+impl Dense {
+    pub fn new(in_dim: usize, out_dim: usize, act: Act, rng: &mut Rng) -> Self {
+        // He/Xavier-ish: U(-s, s), s = sqrt(6/(in+out)).
+        let s = (6.0 / (in_dim + out_dim) as f64).sqrt();
+        let w = (0..in_dim * out_dim)
+            .map(|_| rng.range(-s, s) as f32)
+            .collect();
+        Dense { w, b: vec![0.0; out_dim], in_dim, out_dim, act }
+    }
+
+    pub fn nparams(&self) -> usize {
+        self.w.len() + self.b.len()
+    }
+}
+
+/// Multi-layer perceptron.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub layers: Vec<Dense>,
+}
+
+/// Per-forward activations cache (batched): `acts[0]` is the input batch,
+/// `acts[l+1]` the activated output of layer `l`.
+#[derive(Clone, Debug, Default)]
+pub struct Cache {
+    pub acts: Vec<Vec<f32>>,
+    pub batch: usize,
+}
+
+/// Parameter gradients, same shapes as the MLP.
+#[derive(Clone, Debug)]
+pub struct Grads {
+    pub dw: Vec<Vec<f32>>,
+    pub db: Vec<Vec<f32>>,
+}
+
+impl Grads {
+    pub fn zeros_like(mlp: &Mlp) -> Self {
+        Grads {
+            dw: mlp.layers.iter().map(|l| vec![0.0; l.w.len()]).collect(),
+            db: mlp.layers.iter().map(|l| vec![0.0; l.b.len()]).collect(),
+        }
+    }
+
+    pub fn scale(&mut self, a: f32) {
+        for g in self.dw.iter_mut().chain(self.db.iter_mut()) {
+            for x in g.iter_mut() {
+                *x *= a;
+            }
+        }
+    }
+}
+
+impl Mlp {
+    /// Build from layer sizes, e.g. `[in, h, h, out]` with per-layer acts
+    /// (len = sizes.len() - 1).
+    pub fn new(sizes: &[usize], acts: &[Act], rng: &mut Rng) -> Self {
+        assert_eq!(acts.len(), sizes.len() - 1);
+        let layers = sizes
+            .windows(2)
+            .zip(acts)
+            .map(|(w, &a)| Dense::new(w[0], w[1], a, rng))
+            .collect();
+        Mlp { layers }
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.layers.first().map_or(0, |l| l.in_dim)
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.layers.last().map_or(0, |l| l.out_dim)
+    }
+
+    pub fn nparams(&self) -> usize {
+        self.layers.iter().map(Dense::nparams).sum()
+    }
+
+    /// Batched forward; `x` is `[batch, in_dim]` row-major. Returns the
+    /// output and fills `cache` for backward.
+    pub fn forward(&self, x: &[f32], cache: &mut Cache) -> Vec<f32> {
+        let batch = x.len() / self.in_dim();
+        debug_assert_eq!(batch * self.in_dim(), x.len());
+        cache.batch = batch;
+        cache.acts.clear();
+        cache.acts.push(x.to_vec());
+        let mut cur = x.to_vec();
+        for layer in &self.layers {
+            let mut out = vec![0f32; batch * layer.out_dim];
+            for bi in 0..batch {
+                let xrow = &cur[bi * layer.in_dim..(bi + 1) * layer.in_dim];
+                let orow = &mut out[bi * layer.out_dim..(bi + 1) * layer.out_dim];
+                for (o, orow_o) in orow.iter_mut().enumerate() {
+                    let wrow = &layer.w[o * layer.in_dim..(o + 1) * layer.in_dim];
+                    let mut z = layer.b[o];
+                    for (wi, xi) in wrow.iter().zip(xrow) {
+                        z += wi * xi;
+                    }
+                    *orow_o = layer.act.apply(z);
+                }
+            }
+            cache.acts.push(out.clone());
+            cur = out;
+        }
+        cur
+    }
+
+    /// Inference without caching (single row convenience).
+    pub fn infer(&self, x: &[f32]) -> Vec<f32> {
+        let mut cache = Cache::default();
+        self.forward(x, &mut cache)
+    }
+
+    /// Batched backward from `dout` (`[batch, out_dim]`, d loss / d output).
+    /// Returns d loss / d input and accumulates parameter grads into `grads`
+    /// (caller zeroes them). Gradients are summed over the batch.
+    pub fn backward(&self, cache: &Cache, dout: &[f32], grads: &mut Grads) -> Vec<f32> {
+        let batch = cache.batch;
+        let mut delta = dout.to_vec();
+        for (l, layer) in self.layers.iter().enumerate().rev() {
+            let a_out = &cache.acts[l + 1];
+            let a_in = &cache.acts[l];
+            // delta_z = delta * act'(a_out)
+            for (d, &a) in delta.iter_mut().zip(a_out.iter()) {
+                *d *= layer.act.dact(a);
+            }
+            let dw = &mut grads.dw[l];
+            let db = &mut grads.db[l];
+            let mut dx = vec![0f32; batch * layer.in_dim];
+            for bi in 0..batch {
+                let drow = &delta[bi * layer.out_dim..(bi + 1) * layer.out_dim];
+                let xrow = &a_in[bi * layer.in_dim..(bi + 1) * layer.in_dim];
+                let dxrow = &mut dx[bi * layer.in_dim..(bi + 1) * layer.in_dim];
+                for (o, &dz) in drow.iter().enumerate() {
+                    db[o] += dz;
+                    let wrow = &layer.w[o * layer.in_dim..(o + 1) * layer.in_dim];
+                    let dwrow = &mut dw[o * layer.in_dim..(o + 1) * layer.in_dim];
+                    for i in 0..layer.in_dim {
+                        dwrow[i] += dz * xrow[i];
+                        dxrow[i] += dz * wrow[i];
+                    }
+                }
+            }
+            delta = dx;
+        }
+        delta
+    }
+
+    /// Soft update toward `src`: θ ← (1−τ)θ + τ·θ_src (DDPG target nets).
+    pub fn soft_update_from(&mut self, src: &Mlp, tau: f32) {
+        for (dst, s) in self.layers.iter_mut().zip(&src.layers) {
+            for (d, &x) in dst.w.iter_mut().zip(&s.w) {
+                *d = (1.0 - tau) * *d + tau * x;
+            }
+            for (d, &x) in dst.b.iter_mut().zip(&s.b) {
+                *d = (1.0 - tau) * *d + tau * x;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fd_check(mlp: &Mlp, x: &[f32], loss_grad: impl Fn(&[f32]) -> (f32, Vec<f32>)) {
+        // Analytic grads
+        let mut cache = Cache::default();
+        let out = mlp.forward(x, &mut cache);
+        let (_, dout) = loss_grad(&out);
+        let mut grads = Grads::zeros_like(mlp);
+        let dx = mlp.backward(&cache, &dout, &mut grads);
+
+        let eps = 1e-3f32;
+        let f = |m: &Mlp, xv: &[f32]| -> f32 {
+            let mut c = Cache::default();
+            let o = m.forward(xv, &mut c);
+            loss_grad(&o).0
+        };
+        // check a few weight entries per layer
+        let mut rng = Rng::new(99);
+        for l in 0..mlp.layers.len() {
+            for _ in 0..4 {
+                let i = rng.index(mlp.layers[l].w.len());
+                let mut mp = mlp.clone();
+                mp.layers[l].w[i] += eps;
+                let mut mm = mlp.clone();
+                mm.layers[l].w[i] -= eps;
+                let fd = (f(&mp, x) - f(&mm, x)) / (2.0 * eps);
+                let an = grads.dw[l][i];
+                assert!(
+                    (fd - an).abs() < 1e-2 + 0.02 * fd.abs(),
+                    "layer {l} w[{i}]: fd={fd} analytic={an}"
+                );
+            }
+            // bias entry
+            let i = rng.index(mlp.layers[l].b.len());
+            let mut mp = mlp.clone();
+            mp.layers[l].b[i] += eps;
+            let mut mm = mlp.clone();
+            mm.layers[l].b[i] -= eps;
+            let fd = (f(&mp, x) - f(&mm, x)) / (2.0 * eps);
+            let an = grads.db[l][i];
+            assert!((fd - an).abs() < 1e-2 + 0.02 * fd.abs(), "layer {l} b[{i}]: {fd} vs {an}");
+        }
+        // input grads
+        for ii in 0..x.len().min(6) {
+            let mut xp = x.to_vec();
+            xp[ii] += eps;
+            let mut xm = x.to_vec();
+            xm[ii] -= eps;
+            let fd = (f(mlp, &xp) - f(mlp, &xm)) / (2.0 * eps);
+            assert!(
+                (fd - dx[ii]).abs() < 1e-2 + 0.02 * fd.abs(),
+                "dx[{ii}]: fd={fd} analytic={}",
+                dx[ii]
+            );
+        }
+    }
+
+    #[test]
+    fn gradients_match_finite_differences_scalar_loss() {
+        let mut rng = Rng::new(1);
+        let mlp = Mlp::new(&[4, 8, 3], &[Act::Tanh, Act::Linear], &mut rng);
+        let x: Vec<f32> = (0..8).map(|_| rng.normal() as f32 * 0.5).collect(); // batch 2
+        // loss = 0.5 * sum(out^2)  =>  dout = out
+        fd_check(&mlp, &x, |out| {
+            (0.5 * out.iter().map(|o| o * o).sum::<f32>(), out.to_vec())
+        });
+    }
+
+    #[test]
+    fn gradients_match_finite_differences_relu() {
+        let mut rng = Rng::new(2);
+        let mlp = Mlp::new(&[3, 16, 16, 2], &[Act::Relu, Act::Relu, Act::Tanh], &mut rng);
+        let x: Vec<f32> = (0..3).map(|_| rng.normal() as f32).collect();
+        fd_check(&mlp, &x, |out| (out.iter().sum::<f32>(), vec![1.0; out.len()]));
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let mut rng = Rng::new(3);
+        let mlp = Mlp::new(&[5, 7, 2], &[Act::Relu, Act::Linear], &mut rng);
+        let x = vec![0.1f32; 5 * 3];
+        let out = mlp.infer(&x);
+        assert_eq!(out.len(), 2 * 3);
+        assert_eq!(mlp.nparams(), 5 * 7 + 7 + 7 * 2 + 2);
+    }
+
+    #[test]
+    fn tanh_output_bounded() {
+        let mut rng = Rng::new(4);
+        let mlp = Mlp::new(&[2, 8, 3], &[Act::Relu, Act::Tanh], &mut rng);
+        for s in 0..20 {
+            let x = vec![s as f32 * 10.0, -(s as f32) * 7.0];
+            assert!(mlp.infer(&x).iter().all(|&a| (-1.0..=1.0).contains(&a)));
+        }
+    }
+
+    #[test]
+    fn soft_update_converges_to_source() {
+        let mut rng = Rng::new(5);
+        let src = Mlp::new(&[2, 4, 1], &[Act::Relu, Act::Linear], &mut rng);
+        let mut dst = Mlp::new(&[2, 4, 1], &[Act::Relu, Act::Linear], &mut rng);
+        for _ in 0..600 {
+            dst.soft_update_from(&src, 0.05);
+        }
+        for (d, s) in dst.layers.iter().zip(&src.layers) {
+            for (a, b) in d.w.iter().zip(&s.w) {
+                assert!((a - b).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_grads_are_sum_of_single_grads() {
+        let mut rng = Rng::new(6);
+        let mlp = Mlp::new(&[3, 5, 2], &[Act::Tanh, Act::Linear], &mut rng);
+        let x1: Vec<f32> = (0..3).map(|_| rng.normal() as f32).collect();
+        let x2: Vec<f32> = (0..3).map(|_| rng.normal() as f32).collect();
+        let mut joint = [x1.clone(), x2.clone()].concat();
+        let mut cache = Cache::default();
+        mlp.forward(&joint, &mut cache);
+        let mut gj = Grads::zeros_like(&mlp);
+        mlp.backward(&cache, &vec![1.0; 4], &mut gj);
+
+        let mut gs = Grads::zeros_like(&mlp);
+        for x in [&x1, &x2] {
+            let mut c = Cache::default();
+            mlp.forward(x, &mut c);
+            mlp.backward(&c, &vec![1.0; 2], &mut gs);
+        }
+        for l in 0..mlp.layers.len() {
+            for (a, b) in gj.dw[l].iter().zip(&gs.dw[l]) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        }
+        joint.clear(); // silence unused-mut lint paranoia
+    }
+}

@@ -1,0 +1,15 @@
+//! Learning-based control (paper Sec. 3): DDPG with per-device agents that
+//! pick local computation `H_m` and the layer-to-channel allocation
+//! `D_{m,n}` every round.
+
+pub mod adam;
+pub mod agent;
+pub mod ddpg;
+pub mod mlp;
+pub mod noise;
+pub mod replay;
+
+pub use agent::{ControlDecision, DeviceAgent, RewardTracker};
+pub use ddpg::{Ddpg, StepStats};
+pub use mlp::{Act, Mlp};
+pub use replay::{ReplayBuffer, Transition};

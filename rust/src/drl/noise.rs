@@ -1,0 +1,87 @@
+//! Ornstein–Uhlenbeck exploration noise (Lillicrap et al. 2015, Sec. 7).
+//!
+//! Temporally correlated noise added to the actor's action during training:
+//! `dx = θ(μ − x)dt + σ dW`. Correlation helps exploration in control
+//! problems where consecutive actions should be coherent.
+
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct OuNoise {
+    pub theta: f64,
+    pub sigma: f64,
+    pub mu: f64,
+    pub dt: f64,
+    state: Vec<f64>,
+    rng: Rng,
+}
+
+impl OuNoise {
+    pub fn new(dim: usize, theta: f64, sigma: f64, rng: Rng) -> Self {
+        OuNoise { theta, sigma, mu: 0.0, dt: 1.0, state: vec![0.0; dim], rng }
+    }
+
+    pub fn reset(&mut self) {
+        self.state.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    /// Next noise vector.
+    pub fn sample(&mut self, out: &mut Vec<f32>) {
+        out.clear();
+        for x in self.state.iter_mut() {
+            let dw = self.rng.normal() * self.dt.sqrt();
+            *x += self.theta * (self.mu - *x) * self.dt + self.sigma * dw;
+            out.push(*x as f32);
+        }
+    }
+
+    /// Decay sigma (common schedule as training stabilizes).
+    pub fn decay_sigma(&mut self, factor: f64, min_sigma: f64) {
+        self.sigma = (self.sigma * factor).max(min_sigma);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_reverts_to_mu() {
+        let mut n = OuNoise::new(1, 0.15, 0.2, Rng::new(1));
+        let mut out = Vec::new();
+        let mut acc = 0.0;
+        let steps = 20_000;
+        for _ in 0..steps {
+            n.sample(&mut out);
+            acc += out[0] as f64;
+        }
+        assert!((acc / steps as f64).abs() < 0.12);
+    }
+
+    #[test]
+    fn temporally_correlated() {
+        let mut n = OuNoise::new(1, 0.05, 0.1, Rng::new(2));
+        let mut out = Vec::new();
+        let xs: Vec<f64> = (0..5000)
+            .map(|_| {
+                n.sample(&mut out);
+                out[0] as f64
+            })
+            .collect();
+        // lag-1 autocorrelation should be clearly positive
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var: f64 = xs.iter().map(|x| (x - mean).powi(2)).sum();
+        let cov: f64 = xs.windows(2).map(|w| (w[0] - mean) * (w[1] - mean)).sum();
+        let rho = cov / var;
+        assert!(rho > 0.7, "lag-1 autocorr {rho}");
+    }
+
+    #[test]
+    fn decay_bounded_below() {
+        let mut n = OuNoise::new(2, 0.15, 0.2, Rng::new(3));
+        for _ in 0..1000 {
+            n.decay_sigma(0.9, 0.02);
+        }
+        assert!((n.sigma - 0.02).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,113 @@
+//! Experience replay buffer (Sec. 3.1: the tuple
+//! `(s, a, r, s')` store the critic samples from).
+
+use crate::util::Rng;
+
+/// One transition.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Transition {
+    pub state: Vec<f32>,
+    pub action: Vec<f32>,
+    pub reward: f32,
+    pub next_state: Vec<f32>,
+    /// Terminal flag (no bootstrap from s').
+    pub done: bool,
+}
+
+/// Fixed-capacity ring buffer with uniform sampling.
+#[derive(Clone, Debug)]
+pub struct ReplayBuffer {
+    buf: Vec<Transition>,
+    capacity: usize,
+    head: usize,
+}
+
+impl ReplayBuffer {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        ReplayBuffer { buf: Vec::with_capacity(capacity), capacity, head: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn push(&mut self, t: Transition) {
+        if self.buf.len() < self.capacity {
+            self.buf.push(t);
+        } else {
+            self.buf[self.head] = t;
+            self.head = (self.head + 1) % self.capacity;
+        }
+    }
+
+    /// Sample `n` transitions uniformly with replacement.
+    pub fn sample<'a>(&'a self, n: usize, rng: &mut Rng, out: &mut Vec<&'a Transition>) {
+        out.clear();
+        if self.buf.is_empty() {
+            return;
+        }
+        for _ in 0..n {
+            out.push(&self.buf[rng.index(self.buf.len())]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tr(r: f32) -> Transition {
+        Transition {
+            state: vec![r],
+            action: vec![0.0],
+            reward: r,
+            next_state: vec![r + 1.0],
+            done: false,
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let mut rb = ReplayBuffer::new(3);
+        for i in 0..5 {
+            rb.push(tr(i as f32));
+        }
+        assert_eq!(rb.len(), 3);
+        let rewards: Vec<f32> = rb.buf.iter().map(|t| t.reward).collect();
+        // 0 and 1 overwritten by 3 and 4
+        assert!(rewards.contains(&2.0) && rewards.contains(&3.0) && rewards.contains(&4.0));
+    }
+
+    #[test]
+    fn sample_uniform() {
+        let mut rb = ReplayBuffer::new(10);
+        for i in 0..10 {
+            rb.push(tr(i as f32));
+        }
+        let mut rng = Rng::new(1);
+        let mut out = Vec::new();
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..50 {
+            rb.sample(4, &mut rng, &mut out);
+            assert_eq!(out.len(), 4);
+            for t in &out {
+                seen.insert(t.reward as i64);
+            }
+        }
+        assert!(seen.len() >= 9, "sampling missed most of the buffer: {seen:?}");
+    }
+
+    #[test]
+    fn sample_empty_is_empty() {
+        let rb = ReplayBuffer::new(4);
+        let mut rng = Rng::new(2);
+        let mut out = Vec::new();
+        rb.sample(3, &mut rng, &mut out);
+        assert!(out.is_empty());
+    }
+}

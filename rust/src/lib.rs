@@ -1,0 +1,33 @@
+//! # lgc — Layered Gradient Compression for Multi-Channeled Federated Learning
+//!
+//! A from-scratch reproduction of *"Toward Efficient Federated Learning in
+//! Multi-Channeled Mobile Edge Network with Layered Gradient Compression"*
+//! (Du, Feng, Xiang, Liu — cs.LG 2021) as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! - **L3 (this crate)**: the FL coordinator — server, devices, the
+//!   multi-channel mobile-edge network simulator, the layered compression
+//!   wire protocol, resource accounting, and the per-device DDPG controller.
+//! - **L2** (`python/compile/model.py`): LR / CNN / char-GRU fwd/bwd as JAX
+//!   graphs, lowered once to HLO text (AOT) and executed via PJRT from
+//!   [`runtime`].
+//! - **L1** (`python/compile/kernels/`): Pallas kernels for the banded
+//!   `Top_{α,β}` sparsification and fused SGD step.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod bench;
+pub mod channels;
+pub mod compression;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod drl;
+pub mod metrics;
+pub mod models;
+pub mod resources;
+pub mod runtime;
+pub mod testing;
+pub mod theory;
+pub mod util;

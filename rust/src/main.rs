@@ -1,0 +1,176 @@
+//! `lgc` — launcher CLI for the LGC federated-learning framework.
+//!
+//! ```text
+//! lgc train [--config=FILE] [--key=value ...]   run one experiment
+//! lgc compare [--key=value ...]                 run all mechanisms, same seed
+//! lgc info                                      runtime / artifact info
+//! ```
+//!
+//! Overrides use the config keys (see `ExperimentConfig`), e.g.:
+//! `lgc train --mechanism=lgc --workload=cnn --rounds=200 --csv=out.csv`
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+use lgc::config::{ExperimentConfig, Mechanism};
+use lgc::coordinator::{Experiment, LocalTrainer, NativeLrTrainer, PjrtTrainer};
+use lgc::metrics::RunLog;
+use lgc::runtime::Runtime;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(args: Vec<String>) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "train" => cmd_train(rest),
+        "compare" => cmd_compare(rest),
+        "info" => cmd_info(rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command `{other}` (try `lgc help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "lgc — Layered Gradient Compression FL framework\n\n\
+         USAGE:\n  lgc train   [--config=FILE] [--key=value ...]\n  \
+         lgc compare [--key=value ...]\n  lgc info [--artifacts_dir=DIR]\n\n\
+         Common keys: mechanism=fedavg|lgc-static|lgc|topk, workload=lr|cnn|rnn,\n\
+         rounds=N, devices=M, lr=F, h_fixed=N, h_max=N, energy_budget=F,\n\
+         money_budget=F, seed=N, use_runtime=true|false, csv=FILE"
+    );
+}
+
+/// Split `--config=` and `--csv=` out of the overrides.
+fn parse_common(args: &[String]) -> (Option<PathBuf>, Option<PathBuf>, Vec<String>) {
+    let mut config = None;
+    let mut csv = None;
+    let mut overrides = Vec::new();
+    for a in args {
+        if let Some(v) = a.strip_prefix("--config=") {
+            config = Some(PathBuf::from(v));
+        } else if let Some(v) = a.strip_prefix("--csv=") {
+            csv = Some(PathBuf::from(v));
+        } else {
+            overrides.push(a.clone());
+        }
+    }
+    (config, csv, overrides)
+}
+
+/// Build the right trainer for a config.
+pub fn make_trainer(cfg: &ExperimentConfig) -> Result<Box<dyn LocalTrainer>> {
+    if cfg.use_runtime {
+        let rt = Runtime::new(Path::new(&cfg.artifacts_dir)).with_context(|| {
+            format!(
+                "PJRT runtime init from `{}` — run `make artifacts` first, \
+                 or pass --use_runtime=false for the native LR path",
+                cfg.artifacts_dir
+            )
+        })?;
+        Ok(Box::new(PjrtTrainer::new(&rt, cfg)?))
+    } else {
+        Ok(Box::new(NativeLrTrainer::new(cfg)))
+    }
+}
+
+fn report(log: &RunLog) {
+    println!("\n== {} ==", log.name);
+    println!("rounds run      : {}", log.records.len());
+    if let Some(last) = log.last() {
+        println!("final train loss: {:.4}", last.train_loss);
+        println!("final eval acc  : {:.4}", log.final_acc());
+        println!("best eval acc   : {:.4}", log.best_acc());
+        println!("total energy (J): {:.1}", last.energy_j);
+        println!("total money     : {:.4}", last.money);
+        println!("total time (s)  : {:.1}", last.total_time_s);
+        let bytes: u64 = log.records.iter().map(|r| r.bytes_up).sum();
+        println!("total upload    : {:.2} MB", bytes as f64 / (1024.0 * 1024.0));
+    }
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let (config, csv, overrides) = parse_common(args);
+    let cfg = ExperimentConfig::load(config.as_deref(), &overrides)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    println!(
+        "training: mechanism={} workload={} devices={} rounds={} runtime={}",
+        cfg.mechanism.name(),
+        cfg.workload.model_name(),
+        cfg.devices,
+        cfg.rounds,
+        cfg.use_runtime
+    );
+    let mut trainer = make_trainer(&cfg)?;
+    let mut exp = Experiment::new(cfg, trainer.as_ref());
+    let log = exp.run(trainer.as_mut())?;
+    report(&log);
+    if let Some(path) = csv {
+        log.write_csv(&path)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &[String]) -> Result<()> {
+    let (config, csv, overrides) = parse_common(args);
+    for mech in [Mechanism::FedAvg, Mechanism::LgcStatic, Mechanism::LgcDrl] {
+        let mut ov = overrides.clone();
+        ov.push(format!("--mechanism={}", mech.name()));
+        let cfg = ExperimentConfig::load(config.as_deref(), &ov)
+            .map_err(|e| anyhow::anyhow!(e))?;
+        let mut trainer = make_trainer(&cfg)?;
+        let mut exp = Experiment::new(cfg, trainer.as_ref());
+        let log = exp.run(trainer.as_mut())?;
+        report(&log);
+        if let Some(base) = &csv {
+            let path = base.with_file_name(format!(
+                "{}_{}.csv",
+                base.file_stem().and_then(|s| s.to_str()).unwrap_or("run"),
+                mech.name()
+            ));
+            log.write_csv(&path)?;
+            println!("wrote {}", path.display());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &[String]) -> Result<()> {
+    let (_, _, overrides) = parse_common(args);
+    let dir = overrides
+        .iter()
+        .find_map(|a| a.strip_prefix("--artifacts_dir="))
+        .unwrap_or("artifacts");
+    let rt = Runtime::new(Path::new(dir))?;
+    println!("PJRT platform : {}", rt.platform());
+    println!("artifacts dir : {dir}");
+    println!("batch={} img={} nclass={} vocab={} seq={}",
+        rt.manifest.batch, rt.manifest.img, rt.manifest.nclass,
+        rt.manifest.vocab, rt.manifest.seq);
+    println!("compress: D={} ks={:?}", rt.manifest.compress_d, rt.manifest.compress_ks);
+    for (name, meta) in &rt.manifest.models {
+        println!(
+            "model {name:>4}: P={:>7}  x={:?} ({})",
+            meta.params, meta.x_shape, meta.x_dtype
+        );
+    }
+    Ok(())
+}

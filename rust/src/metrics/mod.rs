@@ -1,0 +1,198 @@
+//! Metrics & telemetry: per-round training records, curve assembly, and CSV
+//! output — the plumbing every figure-bench prints its series through.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// One round's record for a whole experiment (server view).
+#[derive(Clone, Debug, Default)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Mean training loss across devices (as reported by local steps).
+    pub train_loss: f64,
+    /// Held-out eval loss (NaN when not evaluated this round).
+    pub eval_loss: f64,
+    /// Held-out accuracy in [0,1] (NaN when not evaluated).
+    pub eval_acc: f64,
+    /// Cumulative totals across devices.
+    pub energy_j: f64,
+    pub money: f64,
+    /// Simulated wall-clock of the round (slowest device) and cumulative.
+    pub round_time_s: f64,
+    pub total_time_s: f64,
+    /// Bytes uploaded this round (all devices, all channels).
+    pub bytes_up: u64,
+    /// Mean DRL reward across devices (NaN for non-DRL mechanisms).
+    pub drl_reward: f64,
+}
+
+/// A whole training run's log.
+#[derive(Clone, Debug, Default)]
+pub struct RunLog {
+    pub name: String,
+    pub records: Vec<RoundRecord>,
+}
+
+impl RunLog {
+    pub fn new(name: &str) -> Self {
+        RunLog { name: name.to_string(), records: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: RoundRecord) {
+        self.records.push(r);
+    }
+
+    pub fn last(&self) -> Option<&RoundRecord> {
+        self.records.last()
+    }
+
+    /// Final evaluated accuracy (last non-NaN).
+    pub fn final_acc(&self) -> f64 {
+        self.records
+            .iter()
+            .rev()
+            .find(|r| !r.eval_acc.is_nan())
+            .map_or(f64::NAN, |r| r.eval_acc)
+    }
+
+    /// Best evaluated accuracy.
+    pub fn best_acc(&self) -> f64 {
+        self.records
+            .iter()
+            .filter(|r| !r.eval_acc.is_nan())
+            .map(|r| r.eval_acc)
+            .fold(f64::NAN, f64::max)
+    }
+
+    /// Cumulative resource use at the first round reaching `target_acc`.
+    /// Returns (round, energy, money, time) or None if never reached.
+    pub fn cost_to_accuracy(&self, target_acc: f64) -> Option<(usize, f64, f64, f64)> {
+        self.records
+            .iter()
+            .find(|r| !r.eval_acc.is_nan() && r.eval_acc >= target_acc)
+            .map(|r| (r.round, r.energy_j, r.money, r.total_time_s))
+    }
+
+    /// Best accuracy achieved while cumulative `resource <= budget`.
+    /// `resource`: 0 = energy, 1 = money, 2 = time.
+    pub fn acc_under_budget(&self, resource: usize, budget: f64) -> f64 {
+        self.records
+            .iter()
+            .filter(|r| {
+                let used = match resource {
+                    0 => r.energy_j,
+                    1 => r.money,
+                    _ => r.total_time_s,
+                };
+                used <= budget && !r.eval_acc.is_nan()
+            })
+            .map(|r| r.eval_acc)
+            .fold(f64::NAN, f64::max)
+    }
+
+    /// Render as CSV.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        s.push_str(
+            "round,train_loss,eval_loss,eval_acc,energy_j,money,round_time_s,total_time_s,bytes_up,drl_reward\n",
+        );
+        for r in &self.records {
+            let _ = writeln!(
+                s,
+                "{},{:.6},{:.6},{:.6},{:.3},{:.6},{:.3},{:.3},{},{:.4}",
+                r.round,
+                r.train_loss,
+                r.eval_loss,
+                r.eval_acc,
+                r.energy_j,
+                r.money,
+                r.round_time_s,
+                r.total_time_s,
+                r.bytes_up,
+                r.drl_reward
+            );
+        }
+        s
+    }
+
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, acc: f64, energy: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            train_loss: 1.0 / (round + 1) as f64,
+            eval_loss: 1.0,
+            eval_acc: acc,
+            energy_j: energy,
+            money: energy / 100.0,
+            round_time_s: 1.0,
+            total_time_s: round as f64,
+            bytes_up: 100,
+            drl_reward: 0.0,
+        }
+    }
+
+    #[test]
+    fn final_and_best_acc() {
+        let mut log = RunLog::new("t");
+        log.push(rec(0, 0.2, 10.0));
+        log.push(rec(1, 0.9, 20.0));
+        log.push(rec(2, 0.6, 30.0));
+        assert_eq!(log.final_acc(), 0.6);
+        assert_eq!(log.best_acc(), 0.9);
+    }
+
+    #[test]
+    fn cost_to_accuracy_finds_first_crossing() {
+        let mut log = RunLog::new("t");
+        log.push(rec(0, 0.2, 10.0));
+        log.push(rec(5, 0.75, 50.0));
+        log.push(rec(9, 0.8, 90.0));
+        let (round, energy, _, _) = log.cost_to_accuracy(0.7).unwrap();
+        assert_eq!(round, 5);
+        assert_eq!(energy, 50.0);
+        assert!(log.cost_to_accuracy(0.95).is_none());
+    }
+
+    #[test]
+    fn acc_under_budget() {
+        let mut log = RunLog::new("t");
+        log.push(rec(0, 0.3, 10.0));
+        log.push(rec(1, 0.7, 40.0));
+        log.push(rec(2, 0.9, 200.0));
+        assert_eq!(log.acc_under_budget(0, 50.0), 0.7);
+        assert_eq!(log.acc_under_budget(0, 1000.0), 0.9);
+        assert!(log.acc_under_budget(0, 1.0).is_nan());
+    }
+
+    #[test]
+    fn csv_shape() {
+        let mut log = RunLog::new("t");
+        log.push(rec(0, 0.5, 1.0));
+        let csv = log.to_csv();
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.starts_with("round,"));
+    }
+
+    #[test]
+    fn nan_acc_skipped() {
+        let mut log = RunLog::new("t");
+        let mut r = rec(0, f64::NAN, 1.0);
+        log.push(r.clone());
+        assert!(log.final_acc().is_nan());
+        r.eval_acc = 0.4;
+        r.round = 1;
+        log.push(r);
+        assert_eq!(log.final_acc(), 0.4);
+    }
+}

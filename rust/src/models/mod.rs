@@ -1,0 +1,249 @@
+//! Pure-Rust reference models.
+//!
+//! [`NativeLr`] implements the exact same logistic-regression fwd/bwd as the
+//! L2 JAX graph (softmax cross-entropy over 784->10). It serves three roles:
+//! (1) an independent oracle for runtime integration tests (PJRT grad vs
+//! native grad), (2) a no-artifact path so coordinator unit tests run
+//! without compiled artifacts, and (3) the strongly-convex problem for the
+//! Theorem-1 validation (with L2 regularization it is strongly convex).
+
+use crate::runtime::BatchX;
+
+pub const IMG: usize = 784;
+pub const NCLASS: usize = 10;
+pub const LR_PARAMS: usize = IMG * NCLASS + NCLASS;
+
+/// Native logistic regression with optional L2 regularization.
+#[derive(Clone, Debug)]
+pub struct NativeLr {
+    /// L2 coefficient (0 = match the JAX graph exactly).
+    pub l2: f32,
+}
+
+impl NativeLr {
+    pub fn new() -> Self {
+        NativeLr { l2: 0.0 }
+    }
+
+    pub fn with_l2(l2: f32) -> Self {
+        NativeLr { l2 }
+    }
+
+    /// Mean softmax cross-entropy loss + gradient wrt flat params.
+    /// `x` is `[b, 784]` row-major, `y` labels. `grad` must be LR_PARAMS long.
+    pub fn loss_grad(&self, params: &[f32], x: &[f32], y: &[i32], grad: &mut [f32]) -> f64 {
+        assert_eq!(params.len(), LR_PARAMS);
+        assert_eq!(grad.len(), LR_PARAMS);
+        let b = y.len();
+        assert_eq!(x.len(), b * IMG);
+        let (w, bias) = params.split_at(IMG * NCLASS);
+        grad.iter_mut().for_each(|g| *g = 0.0);
+        let (gw, gb) = grad.split_at_mut(IMG * NCLASS);
+
+        let mut loss = 0.0f64;
+        let mut logits = [0f32; NCLASS];
+        let mut probs = [0f32; NCLASS];
+        for bi in 0..b {
+            let xr = &x[bi * IMG..(bi + 1) * IMG];
+            // logits = x W + b  (W stored [IMG, NCLASS] row-major like jax)
+            logits.copy_from_slice(&bias[..NCLASS]);
+            for (i, &xi) in xr.iter().enumerate() {
+                if xi == 0.0 {
+                    continue;
+                }
+                let wrow = &w[i * NCLASS..(i + 1) * NCLASS];
+                for c in 0..NCLASS {
+                    logits[c] += xi * wrow[c];
+                }
+            }
+            // softmax + xent
+            let maxl = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0f32;
+            for c in 0..NCLASS {
+                probs[c] = (logits[c] - maxl).exp();
+                z += probs[c];
+            }
+            let label = y[bi] as usize;
+            loss += -(((probs[label] / z).max(1e-30) as f64).ln());
+            // dlogits = probs - onehot
+            for c in 0..NCLASS {
+                probs[c] = probs[c] / z - if c == label { 1.0 } else { 0.0 };
+            }
+            for (i, &xi) in xr.iter().enumerate() {
+                if xi == 0.0 {
+                    continue;
+                }
+                let gwrow = &mut gw[i * NCLASS..(i + 1) * NCLASS];
+                for c in 0..NCLASS {
+                    gwrow[c] += xi * probs[c];
+                }
+            }
+            for c in 0..NCLASS {
+                gb[c] += probs[c];
+            }
+        }
+        let scale = 1.0 / b as f32;
+        for g in grad.iter_mut() {
+            *g *= scale;
+        }
+        let mut total = loss / b as f64;
+        if self.l2 > 0.0 {
+            for (g, &p) in grad.iter_mut().zip(params) {
+                *g += self.l2 * p;
+            }
+            total += 0.5 * self.l2 as f64 * crate::util::norm2(params);
+        }
+        total
+    }
+
+    /// Eval: (loss_sum, correct) like the PJRT eval graph.
+    pub fn eval(&self, params: &[f32], x: &[f32], y: &[i32]) -> (f64, f64) {
+        let b = y.len();
+        let (w, bias) = params.split_at(IMG * NCLASS);
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut logits = [0f32; NCLASS];
+        for bi in 0..b {
+            let xr = &x[bi * IMG..(bi + 1) * IMG];
+            logits.copy_from_slice(&bias[..NCLASS]);
+            for (i, &xi) in xr.iter().enumerate() {
+                if xi == 0.0 {
+                    continue;
+                }
+                let wrow = &w[i * NCLASS..(i + 1) * NCLASS];
+                for c in 0..NCLASS {
+                    logits[c] += xi * wrow[c];
+                }
+            }
+            let maxl = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let z: f32 = logits.iter().map(|l| (l - maxl).exp()).sum();
+            let label = y[bi] as usize;
+            loss_sum += -(((logits[label] - maxl).exp() / z).max(1e-30) as f64).ln();
+            let pred = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .unwrap()
+                .0;
+            if pred == label {
+                correct += 1.0;
+            }
+        }
+        (loss_sum, correct)
+    }
+
+    /// Convenience: matches the runtime BatchX ABI.
+    pub fn loss_grad_bx(&self, params: &[f32], x: &BatchX, y: &[i32], grad: &mut [f32]) -> f64 {
+        match x {
+            BatchX::F32(v) => self.loss_grad(params, v, y, grad),
+            BatchX::I32(_) => panic!("NativeLr takes f32 inputs"),
+        }
+    }
+}
+
+impl Default for NativeLr {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn toy_batch(b: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+        let mut rng = Rng::new(seed);
+        let x: Vec<f32> = (0..b * IMG).map(|_| rng.uniform_f32()).collect();
+        let y: Vec<i32> = (0..b).map(|_| rng.index(NCLASS) as i32).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn grad_matches_finite_differences() {
+        let mut rng = Rng::new(1);
+        let params: Vec<f32> = (0..LR_PARAMS).map(|_| rng.normal() as f32 * 0.01).collect();
+        let (x, y) = toy_batch(4, 2);
+        let model = NativeLr::new();
+        let mut grad = vec![0f32; LR_PARAMS];
+        model.loss_grad(&params, &x, &y, &mut grad);
+        let eps = 1e-3f32;
+        for _ in 0..10 {
+            let i = rng.index(LR_PARAMS);
+            let mut pp = params.clone();
+            pp[i] += eps;
+            let mut pm = params.clone();
+            pm[i] -= eps;
+            let mut dump = vec![0f32; LR_PARAMS];
+            let lp = model.loss_grad(&pp, &x, &y, &mut dump);
+            let lm = model.loss_grad(&pm, &x, &y, &mut dump);
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            assert!(
+                (fd - grad[i] as f64).abs() < 1e-3 + 0.02 * fd.abs(),
+                "param {i}: fd={fd} analytic={}",
+                grad[i]
+            );
+        }
+    }
+
+    #[test]
+    fn loss_at_zero_params_is_log_nclass() {
+        let params = vec![0f32; LR_PARAMS];
+        let (x, y) = toy_batch(8, 3);
+        let model = NativeLr::new();
+        let mut grad = vec![0f32; LR_PARAMS];
+        let loss = model.loss_grad(&params, &x, &y, &mut grad);
+        assert!((loss - (NCLASS as f64).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn sgd_descends() {
+        let mut params = vec![0f32; LR_PARAMS];
+        let (x, y) = toy_batch(16, 4);
+        let model = NativeLr::new();
+        let mut grad = vec![0f32; LR_PARAMS];
+        let l0 = model.loss_grad(&params, &x, &y, &mut grad);
+        for _ in 0..30 {
+            model.loss_grad(&params, &x, &y, &mut grad);
+            for (p, &g) in params.iter_mut().zip(&grad) {
+                *p -= 0.5 * g;
+            }
+        }
+        let l1 = model.loss_grad(&params, &x, &y, &mut grad);
+        assert!(l1 < l0 * 0.5, "loss {l0} -> {l1}");
+    }
+
+    #[test]
+    fn eval_counts() {
+        let mut params = vec![0f32; LR_PARAMS];
+        let (x, y) = toy_batch(8, 5);
+        let model = NativeLr::new();
+        let (loss_sum, correct) = model.eval(&params, &x, &y);
+        assert!((loss_sum / 8.0 - (NCLASS as f64).ln()).abs() < 1e-5);
+        assert!((0.0..=8.0).contains(&correct));
+        // after fitting, accuracy should rise
+        let mut grad = vec![0f32; LR_PARAMS];
+        for _ in 0..80 {
+            model.loss_grad(&params, &x, &y, &mut grad);
+            for (p, &g) in params.iter_mut().zip(&grad) {
+                *p -= 0.5 * g;
+            }
+        }
+        let (_, c2) = model.eval(&params, &x, &y);
+        assert!(c2 >= 7.0, "correct={c2}");
+    }
+
+    #[test]
+    fn l2_makes_gradient_at_zero_nonreg_equal() {
+        // grad_l2(p) = grad(p) + l2*p; at p=0 they coincide
+        let params = vec![0f32; LR_PARAMS];
+        let (x, y) = toy_batch(4, 6);
+        let m0 = NativeLr::new();
+        let m1 = NativeLr::with_l2(0.1);
+        let mut g0 = vec![0f32; LR_PARAMS];
+        let mut g1 = vec![0f32; LR_PARAMS];
+        m0.loss_grad(&params, &x, &y, &mut g0);
+        m1.loss_grad(&params, &x, &y, &mut g1);
+        assert_eq!(g0, g1);
+    }
+}

@@ -1,0 +1,183 @@
+//! Resource accounting and budgets (paper Sec. 2.3, Eq. 10).
+//!
+//! Two resource types `r ∈ R = {Energy, Money}` (the paper's evaluation
+//! metrics) plus wall-clock time tracked separately. Every device carries a
+//! [`ResourceMeter`]: per-round consumption split into *computation*
+//! (`E_comp · H`) and *communication* (`E_comm · D`) components — exactly
+//! the state the DRL agent observes (Eq. 11–12) — and a [`Budget`] that
+//! enforces Eq. 10a (stop when any budget is exhausted).
+
+/// Resource kinds tracked per Eq. 10 (R = 2 in the experiments).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Resource {
+    /// Battery energy in joules.
+    Energy,
+    /// Monetary cost in currency units.
+    Money,
+}
+
+pub const RESOURCES: [Resource; 2] = [Resource::Energy, Resource::Money];
+
+/// Per-round, per-resource consumption split (Eq. 15b terms).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RoundConsumption {
+    /// Computation component: `E_{m,r,comp} · H_m` .
+    pub comp: f64,
+    /// Communication component: `Σ_n E_{m,r,comm} · D_{m,n}`.
+    pub comm: f64,
+}
+
+impl RoundConsumption {
+    pub fn total(&self) -> f64 {
+        self.comp + self.comm
+    }
+}
+
+/// Energy model of local computation: joules per local SGD step, per device.
+/// (Phone-class SoC running a small model: ~0.5–3 J per mini-batch step; the
+/// exact constant only shifts the energy axis, the *ratios* between
+/// mechanisms are what the figures compare.)
+#[derive(Clone, Copy, Debug)]
+pub struct ComputeCostModel {
+    pub joules_per_step: f64,
+    pub seconds_per_step: f64,
+}
+
+impl ComputeCostModel {
+    /// Reasonable defaults per workload size (steps of batch 64).
+    pub fn for_params(nparams: usize) -> Self {
+        // Scale with model size: LR (8k) light, CNN (207k) heavy.
+        let scale = (nparams as f64 / 10_000.0).max(0.2);
+        ComputeCostModel {
+            joules_per_step: 0.8 * scale.min(25.0),
+            seconds_per_step: 0.02 * scale.min(25.0),
+        }
+    }
+}
+
+/// Running totals + budget enforcement for one device.
+#[derive(Clone, Debug)]
+pub struct ResourceMeter {
+    pub energy_budget: f64,
+    pub money_budget: f64,
+    pub energy_used: f64,
+    pub money_used: f64,
+    pub time_used: f64,
+    /// Last round's split, per resource — the DRL state (Eq. 11).
+    pub last_round: [RoundConsumption; 2],
+}
+
+impl ResourceMeter {
+    pub fn new(energy_budget: f64, money_budget: f64) -> Self {
+        ResourceMeter {
+            energy_budget,
+            money_budget,
+            energy_used: 0.0,
+            money_used: 0.0,
+            time_used: 0.0,
+            last_round: [RoundConsumption::default(); 2],
+        }
+    }
+
+    /// Record one round. `comp_energy`/`comp_time` from the compute model,
+    /// `comm_*` from the channel simulator.
+    pub fn record_round(
+        &mut self,
+        comp_energy: f64,
+        comm_energy: f64,
+        comm_money: f64,
+        wall_time: f64,
+    ) {
+        self.energy_used += comp_energy + comm_energy;
+        self.money_used += comm_money;
+        self.time_used += wall_time;
+        self.last_round[0] = RoundConsumption { comp: comp_energy, comm: comm_energy };
+        // Money has no computation component in the model (airtime only).
+        self.last_round[1] = RoundConsumption { comp: 0.0, comm: comm_money };
+    }
+
+    pub fn used(&self, r: Resource) -> f64 {
+        match r {
+            Resource::Energy => self.energy_used,
+            Resource::Money => self.money_used,
+        }
+    }
+
+    pub fn budget(&self, r: Resource) -> f64 {
+        match r {
+            Resource::Energy => self.energy_budget,
+            Resource::Money => self.money_budget,
+        }
+    }
+
+    /// Fraction of budget remaining in [0, 1]; 1.0 when unlimited.
+    pub fn remaining_frac(&self, r: Resource) -> f64 {
+        let b = self.budget(r);
+        if !b.is_finite() {
+            return 1.0;
+        }
+        ((b - self.used(r)) / b).clamp(0.0, 1.0)
+    }
+
+    /// Eq. 10a: true when every budget still has headroom.
+    pub fn within_budget(&self) -> bool {
+        self.energy_used <= self.energy_budget && self.money_used <= self.money_budget
+    }
+
+    /// True if the *next* round with estimated costs would break a budget.
+    pub fn can_afford(&self, est_energy: f64, est_money: f64) -> bool {
+        self.energy_used + est_energy <= self.energy_budget
+            && self.money_used + est_money <= self.money_budget
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_splits() {
+        let mut m = ResourceMeter::new(100.0, 10.0);
+        m.record_round(2.0, 3.0, 0.5, 1.5);
+        assert_eq!(m.energy_used, 5.0);
+        assert_eq!(m.money_used, 0.5);
+        assert_eq!(m.time_used, 1.5);
+        assert_eq!(m.last_round[0].comp, 2.0);
+        assert_eq!(m.last_round[0].comm, 3.0);
+        assert_eq!(m.last_round[1].comm, 0.5);
+        assert!(m.within_budget());
+    }
+
+    #[test]
+    fn budget_exhaustion() {
+        let mut m = ResourceMeter::new(10.0, f64::INFINITY);
+        m.record_round(6.0, 5.0, 0.0, 1.0);
+        assert!(!m.within_budget());
+        assert_eq!(m.remaining_frac(Resource::Energy), 0.0);
+        assert_eq!(m.remaining_frac(Resource::Money), 1.0);
+    }
+
+    #[test]
+    fn can_afford_lookahead() {
+        let mut m = ResourceMeter::new(10.0, 1.0);
+        m.record_round(4.0, 0.0, 0.5, 0.0);
+        assert!(m.can_afford(6.0, 0.5));
+        assert!(!m.can_afford(6.1, 0.0));
+        assert!(!m.can_afford(0.0, 0.6));
+    }
+
+    #[test]
+    fn compute_model_scales_with_params() {
+        let lr = ComputeCostModel::for_params(7_850);
+        let cnn = ComputeCostModel::for_params(206_922);
+        assert!(cnn.joules_per_step > lr.joules_per_step);
+        assert!(cnn.seconds_per_step > lr.seconds_per_step);
+    }
+
+    #[test]
+    fn remaining_frac_clamped() {
+        let mut m = ResourceMeter::new(1.0, f64::INFINITY);
+        m.record_round(5.0, 0.0, 0.0, 0.0);
+        assert_eq!(m.remaining_frac(Resource::Energy), 0.0);
+    }
+}

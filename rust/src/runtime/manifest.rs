@@ -1,0 +1,134 @@
+//! Parse `artifacts/manifest.toml` (written by `python -m compile.aot`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::toml::Document;
+
+/// Static metadata of one model artifact set.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelMeta {
+    pub name: String,
+    /// Flat parameter count P.
+    pub params: usize,
+    /// x tensor shape, e.g. [64, 784].
+    pub x_shape: Vec<usize>,
+    /// "f32" | "i32".
+    pub x_dtype: String,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    pub batch: usize,
+    pub img: usize,
+    pub nclass: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub compress_d: usize,
+    pub compress_ks: Vec<usize>,
+    pub models: BTreeMap<String, ModelMeta>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = Document::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let top_i = |k: &str| -> Result<usize> {
+            doc.get_i64("", k)
+                .map(|v| v as usize)
+                .ok_or_else(|| anyhow!("manifest missing top-level `{k}`"))
+        };
+        let mut models = BTreeMap::new();
+        for (name, _) in doc.sections_in_order() {
+            if name.is_empty() {
+                continue;
+            }
+            let params = doc
+                .get_i64(name, "params")
+                .ok_or_else(|| anyhow!("model [{name}] missing params"))?
+                as usize;
+            let x_shape_str = doc
+                .get_str(name, "x_shape")
+                .ok_or_else(|| anyhow!("model [{name}] missing x_shape"))?;
+            let x_shape: Vec<usize> = x_shape_str
+                .split('x')
+                .map(|s| s.parse::<usize>().map_err(|e| anyhow!("bad x_shape: {e}")))
+                .collect::<Result<_>>()?;
+            let x_dtype = doc
+                .get_str(name, "x_dtype")
+                .ok_or_else(|| anyhow!("model [{name}] missing x_dtype"))?
+                .to_string();
+            anyhow::ensure!(
+                x_dtype == "f32" || x_dtype == "i32",
+                "model [{name}] has unsupported x_dtype {x_dtype}"
+            );
+            models.insert(
+                name.to_string(),
+                ModelMeta { name: name.to_string(), params, x_shape, x_dtype },
+            );
+        }
+        Ok(Manifest {
+            batch: top_i("batch")?,
+            img: top_i("img")?,
+            nclass: top_i("nclass")?,
+            vocab: top_i("vocab")?,
+            seq: top_i("seq")?,
+            compress_d: top_i("compress_d")?,
+            compress_ks: doc
+                .get_vec_i64("", "compress_ks")
+                .ok_or_else(|| anyhow!("manifest missing compress_ks"))?
+                .into_iter()
+                .map(|v| v as usize)
+                .collect(),
+            models,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+batch = 64\nimg = 784\nnclass = 10\nvocab = 64\nseq = 24\ncompress_d = 65536\n\
+compress_ks = [655, 2621, 9830]\n\n[lr]\nparams = 7850\nx_shape = \"64x784\"\nx_dtype = \"f32\"\n\n\
+[rnn]\nparams = 72128\nx_shape = \"64x25\"\nx_dtype = \"i32\"\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.batch, 64);
+        assert_eq!(m.compress_ks, vec![655, 2621, 9830]);
+        assert_eq!(m.models["lr"].params, 7850);
+        assert_eq!(m.models["lr"].x_shape, vec![64, 784]);
+        assert_eq!(m.models["rnn"].x_dtype, "i32");
+        assert_eq!(m.models.len(), 2);
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(Manifest::parse("batch = 64\n").is_err());
+        assert!(Manifest::parse(&SAMPLE.replace("params = 7850\n", "")).is_err());
+        assert!(Manifest::parse(&SAMPLE.replace("\"f32\"", "\"f64\"")).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_built() {
+        let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.toml");
+        if !path.exists() {
+            return; // artifacts not built in this checkout
+        }
+        let m = Manifest::load(&path).unwrap();
+        assert_eq!(m.models["lr"].params, 7850);
+        assert_eq!(m.models["cnn"].params, 206922);
+        assert_eq!(m.models["rnn"].params, 72128);
+    }
+}

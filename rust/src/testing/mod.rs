@@ -1,0 +1,211 @@
+//! Mini property-testing harness (no `proptest` crate offline).
+//!
+//! [`check`] runs a property over `n` generated cases; on failure it
+//! performs greedy shrinking via the case's [`Shrink`] implementation and
+//! reports the minimal failing case. Deterministic from the run seed, and
+//! honors `LGC_PROPTEST_CASES` to widen sweeps in CI.
+
+use crate::util::Rng;
+
+/// Types that can propose smaller versions of themselves.
+pub trait Shrink: Sized + Clone + std::fmt::Debug {
+    /// Candidate shrinks, roughly ordered most-aggressive-first.
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 {
+            return vec![];
+        }
+        let mut v = vec![0, self / 2];
+        if *self > 1 {
+            v.push(self - 1);
+        }
+        v.dedup();
+        v
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0.0 {
+            return vec![];
+        }
+        vec![0.0, self / 2.0]
+    }
+}
+
+impl Shrink for Vec<f32> {
+    fn shrink(&self) -> Vec<Self> {
+        if self.is_empty() {
+            return vec![];
+        }
+        let mut out = Vec::new();
+        // halves
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[self.len() / 2..].to_vec());
+        // zero the values
+        if self.iter().any(|&x| x != 0.0) {
+            out.push(vec![0.0; self.len()]);
+        }
+        // drop one element
+        if self.len() > 1 {
+            let mut v = self.clone();
+            v.pop();
+            out.push(v);
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Number of cases per property (env-overridable).
+pub fn default_cases() -> usize {
+    std::env::var("LGC_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` over `n` cases from `gen`; shrink + panic on first failure.
+pub fn check<T, G, P>(seed: u64, n: usize, mut gen: G, mut prop: P)
+where
+    T: Shrink,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed ^ 0x9E3779B97F4A7C15);
+    for case in 0..n {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Greedy shrink: repeatedly take the first shrinking candidate
+            // that still fails, up to a budget.
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut budget = 200;
+            'outer: while budget > 0 {
+                for cand in best.shrink() {
+                    budget -= 1;
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}/{n}, seed {seed}):\n  minimal input: {best:?}\n  error: {best_msg}"
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::util::Rng;
+
+    pub fn f32_vec(rng: &mut Rng, max_len: usize, scale: f32) -> Vec<f32> {
+        let n = 1 + rng.index(max_len);
+        (0..n).map(|_| (rng.normal() as f32) * scale).collect()
+    }
+
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.index(hi - lo + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(
+            1,
+            50,
+            |rng| gen::usize_in(rng, 0, 100),
+            |_| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal input")]
+    fn failing_property_panics_with_shrunk_input() {
+        check(
+            2,
+            100,
+            |rng| gen::usize_in(rng, 0, 1000),
+            |&x| {
+                if x < 10 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} too big"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shrinking_reaches_small_reprs() {
+        // Verify the shrinker drives a Vec<f32> failure toward small size.
+        let caught = std::panic::catch_unwind(|| {
+            check(
+                3,
+                100,
+                |rng| gen::f32_vec(rng, 64, 1.0),
+                |v: &Vec<f32>| {
+                    if v.len() < 4 {
+                        Ok(())
+                    } else {
+                        Err("len >= 4".into())
+                    }
+                },
+            );
+        });
+        let msg = *caught.unwrap_err().downcast::<String>().unwrap();
+        // minimal failing vec should have exactly 4..8 elements after shrink
+        let start = msg.find('[').unwrap();
+        let end = msg.find(']').unwrap();
+        let items = msg[start + 1..end].split(',').count();
+        assert!(items <= 8, "shrinker left {items} items: {msg}");
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        check(7, 10, |rng| gen::usize_in(rng, 0, 1_000_000), |&x| {
+            a.push(x);
+            Ok(())
+        });
+        check(7, 10, |rng| gen::usize_in(rng, 0, 1_000_000), |&x| {
+            b.push(x);
+            Ok(())
+        });
+        assert_eq!(a, b);
+    }
+}

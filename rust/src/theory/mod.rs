@@ -1,0 +1,219 @@
+//! Theorem 1 — convergence bound evaluator (paper Sec. 2.2, Eq. 6–8).
+//!
+//! Computes the right-hand side of Eq. 6 given the problem constants
+//! (L, μ, G, σ_m, b), the compression contractions γ_m, and the gap bound H.
+//! The validation bench (A3) checks the bound's qualitative behaviour —
+//! monotone in H, decreasing in γ and T, and dominating the measured
+//! optimality gap on a strongly-convex quadratic federated problem.
+
+/// Problem + algorithm constants for the bound.
+#[derive(Clone, Debug)]
+pub struct BoundParams {
+    /// Smoothness L.
+    pub l_smooth: f64,
+    /// Strong convexity μ.
+    pub mu: f64,
+    /// Second-moment bound G² (Assumption 2, Eq. 4b) — G here, squared inside.
+    pub g: f64,
+    /// Per-device gradient noise σ_m (Assumption 2, Eq. 4a).
+    pub sigmas: Vec<f64>,
+    /// Mini-batch size b.
+    pub batch: usize,
+    /// Per-device compression contraction γ_m = K_m / D.
+    pub gammas: Vec<f64>,
+    /// Gap bound H on the synchronization sets I_m.
+    pub h_gap: usize,
+    /// Initial distance ‖w⁰ − w*‖².
+    pub r0_sq: f64,
+}
+
+impl BoundParams {
+    pub fn m(&self) -> usize {
+        self.sigmas.len()
+    }
+
+    pub fn kappa(&self) -> f64 {
+        self.l_smooth / self.mu
+    }
+
+    pub fn gamma_min(&self) -> f64 {
+        self.gammas.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    /// `a > max{4H/γ, 32κ, H}` (Theorem 1); we take 1.01x the max.
+    pub fn a(&self) -> f64 {
+        let h = self.h_gap as f64;
+        1.01 * (4.0 * h / self.gamma_min())
+            .max(32.0 * self.kappa())
+            .max(h)
+            .max(1.0 + 1e-9)
+    }
+
+    /// Constant C of Eq. 7a: `min_m 4aγ_m(1−γ_m²)/(aγ_m − 4H)`.
+    pub fn c_const(&self) -> f64 {
+        let a = self.a();
+        let h = self.h_gap as f64;
+        self.gammas
+            .iter()
+            .map(|&g| {
+                let denom = a * g - 4.0 * h;
+                if denom <= 0.0 {
+                    f64::INFINITY
+                } else {
+                    4.0 * a * g * (1.0 - g * g) / denom
+                }
+            })
+            .fold(f64::INFINITY, f64::min)
+            .max(0.0)
+    }
+
+    /// C₁ (Eq. 7b) and C₂ (Eq. 7c).
+    pub fn c1_c2(&self) -> (f64, f64) {
+        let c = self.c_const();
+        let m = self.m() as f64;
+        let sum: f64 = self
+            .gammas
+            .iter()
+            .map(|&g| (4.0 - 2.0 * g) * (1.0 + c / (g * g)))
+            .sum();
+        (192.0 / m * sum, 8.0 / m * sum)
+    }
+
+    /// A (Eq. 7d): gradient-noise term.
+    pub fn a_term(&self) -> f64 {
+        let m = self.m() as f64;
+        self.sigmas.iter().map(|s| s * s).sum::<f64>() / (self.batch as f64 * m * m)
+    }
+
+    /// B (Eq. 7e) with the η-dependent term evaluated at step size
+    /// η⁰ = 8/(μ·a) (its largest value — upper bound over the schedule).
+    pub fn b_term(&self) -> f64 {
+        let (c1, c2) = self.c1_c2();
+        let c = self.c_const();
+        let h = self.h_gap as f64;
+        let g2 = self.g * self.g;
+        let gamma = self.gamma_min();
+        let eta0 = 8.0 / (self.mu * self.a());
+        (1.5 * self.mu + 3.0 * self.l_smooth)
+            * (12.0 * c * g2 * h * h / (gamma * gamma) + c1 * eta0 * eta0 * h.powi(4) * g2)
+            + 24.0 * (1.0 + c2 * h * h) * self.l_smooth * g2 * h * h
+    }
+
+    /// The full Eq. 6 bound on `E[f(w̄^T)] − f*` after T rounds.
+    pub fn bound(&self, t_rounds: usize) -> f64 {
+        let t = t_rounds as f64;
+        let a = self.a();
+        // S = Σ (a+t)² ≥ T³/3 (Eq. 7h); use the exact sum.
+        let s: f64 = (0..t_rounds).map(|i| (a + i as f64).powi(2)).sum();
+        if s == 0.0 {
+            return f64::INFINITY;
+        }
+        let l = self.l_smooth;
+        let mu = self.mu;
+        l * a.powi(3) / (4.0 * s) * self.r0_sq
+            + 8.0 * l * t * (t + 2.0 * a) / (mu * mu * s) * self.a_term()
+            + 128.0 * l * t / (mu.powi(3) * s) * self.b_term()
+    }
+
+    /// The O(·) form of Corollary 1 (dominant terms only) — used to check
+    /// the asymptotic shape.
+    pub fn corollary_rate(&self, t_rounds: usize) -> f64 {
+        let t = t_rounds as f64;
+        let h = self.h_gap as f64;
+        let gamma = self.gamma_min();
+        let g2 = self.g * self.g;
+        let mu2 = self.mu * self.mu;
+        let sig2 = self.sigmas.iter().map(|s| s * s).fold(0.0, f64::max);
+        let b = self.batch as f64;
+        g2 * h.powi(3) / (mu2 * gamma.powi(3) * t.powi(3))
+            + sig2 / (mu2 * b * t)
+            + h * sig2 / (mu2 * b * gamma * t * t)
+            + g2 * (h * h + h.powi(4)) / (self.mu.powi(3) * gamma * gamma * t * t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> BoundParams {
+        BoundParams {
+            l_smooth: 1.0,
+            mu: 0.1,
+            g: 1.0,
+            sigmas: vec![0.5, 0.5, 0.5],
+            batch: 64,
+            gammas: vec![0.2, 0.2, 0.2],
+            h_gap: 2,
+            r0_sq: 1.0,
+        }
+    }
+
+    #[test]
+    fn bound_finite_and_positive() {
+        let p = params();
+        let b = p.bound(1000);
+        assert!(b.is_finite() && b > 0.0, "{b}");
+    }
+
+    #[test]
+    fn bound_decreases_in_t() {
+        let p = params();
+        let b1 = p.bound(1_000);
+        let b2 = p.bound(10_000);
+        let b3 = p.bound(100_000);
+        assert!(b1 > b2 && b2 > b3, "{b1} {b2} {b3}");
+    }
+
+    #[test]
+    fn bound_increases_in_h() {
+        let mut p = params();
+        let b1 = p.bound(10_000);
+        p.h_gap = 8;
+        let b2 = p.bound(10_000);
+        assert!(b2 > b1, "H=2: {b1}, H=8: {b2}");
+    }
+
+    #[test]
+    fn bound_decreases_with_less_compression() {
+        let mut p = params();
+        let aggressive = p.bound(10_000);
+        p.gammas = vec![0.9, 0.9, 0.9]; // keep 90% of coordinates
+        let light = p.bound(10_000);
+        assert!(light < aggressive, "γ=0.9: {light}, γ=0.2: {aggressive}");
+    }
+
+    #[test]
+    fn a_respects_constraints() {
+        let p = params();
+        let a = p.a();
+        assert!(a > 4.0 * p.h_gap as f64 / p.gamma_min());
+        assert!(a > 32.0 * p.kappa());
+        assert!(a > p.h_gap as f64);
+    }
+
+    #[test]
+    fn c_const_positive_finite() {
+        let p = params();
+        let c = p.c_const();
+        assert!(c.is_finite() && c > 0.0, "{c}");
+    }
+
+    #[test]
+    fn corollary_rate_t3_term_dominates_small_t_noise_term_large_t() {
+        let p = params();
+        // As T grows, the rate decays at least like 1/T (noise term).
+        let r1 = p.corollary_rate(100);
+        let r2 = p.corollary_rate(10_000);
+        assert!(r2 < r1 / 50.0, "{r1} vs {r2}");
+    }
+
+    #[test]
+    fn noise_term_scales_inverse_batch() {
+        let mut p = params();
+        let a1 = p.a_term();
+        p.batch *= 4;
+        let a2 = p.a_term();
+        assert!((a1 / a2 - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,334 @@
+//! Deterministic PRNG substrate (no `rand` crate available offline).
+//!
+//! `Rng` is xoshiro256++ (Blackman & Vigna) seeded via splitmix64 — the same
+//! construction `rand_xoshiro` uses.  On top of the raw stream we provide the
+//! distributions the simulator needs: uniform, normal (Ziggurat-free
+//! Box-Muller with caching), exponential, Dirichlet, permutations and
+//! weighted choice.  Everything is reproducible from a single `u64` seed, and
+//! `fork(tag)` derives independent streams for devices/channels/agents.
+
+/// xoshiro256++ PRNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second output of the last Box-Muller draw.
+    spare_normal: Option<f64>,
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Seed the generator. Any seed (including 0) is fine: state is expanded
+    /// through splitmix64 per the xoshiro authors' recommendation.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare_normal: None }
+    }
+
+    /// Derive an independent stream for a sub-component. Streams forked with
+    /// different tags from the same parent are statistically independent.
+    pub fn fork(&self, tag: u64) -> Rng {
+        // Mix the parent state with the tag through splitmix64.
+        let mut sm = self
+            .s
+            .iter()
+            .fold(tag ^ 0xA076_1D64_78BD_642F, |a, &b| a.rotate_left(17) ^ b);
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare_normal: None }
+    }
+
+    /// Next raw 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        // 53 high bits -> [0,1) double.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn uniform_f32(&mut self) -> f32 {
+        self.uniform() as f32
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n). Lemire's unbiased method.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize index in [0, n).
+    #[inline]
+    pub fn index(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Standard normal via Box-Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        // Rejection-free polar-less form; u1 in (0,1] to avoid ln(0).
+        let u1 = 1.0 - self.uniform();
+        let u2 = self.uniform();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.spare_normal = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Normal with given mean and standard deviation.
+    #[inline]
+    pub fn gaussian(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Exponential with rate `lambda`.
+    #[inline]
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        -(1.0 - self.uniform()).ln() / lambda
+    }
+
+    /// Gamma(shape, 1) via Marsaglia-Tsang (shape >= 0.01).
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        if shape < 1.0 {
+            // Boost: Gamma(a) = Gamma(a+1) * U^{1/a}
+            let g = self.gamma(shape + 1.0);
+            let u = 1.0 - self.uniform();
+            return g * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.uniform();
+            if u < 1.0 - 0.0331 * x.powi(4) {
+                return d * v;
+            }
+            if u > 0.0 && u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Symmetric Dirichlet(alpha) over `n` categories.
+    pub fn dirichlet(&mut self, alpha: f64, n: usize) -> Vec<f64> {
+        let mut v: Vec<f64> = (0..n).map(|_| self.gamma(alpha)).collect();
+        let s: f64 = v.iter().sum();
+        if s <= 0.0 {
+            return vec![1.0 / n as f64; n];
+        }
+        for x in &mut v {
+            *x /= s;
+        }
+        v
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Weighted index choice proportional to non-negative `weights`.
+    pub fn choice_weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        debug_assert!(total > 0.0);
+        let mut t = self.uniform() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            t -= w;
+            if t <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Vector of standard normals (f32).
+    pub fn normal_vec_f32(&mut self, n: usize, std: f32) -> Vec<f32> {
+        (0..n).map(|_| (self.normal() as f32) * std).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(1);
+        let mut c = Rng::new(2);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let vc: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+    }
+
+    #[test]
+    fn fork_streams_differ() {
+        let root = Rng::new(7);
+        let mut f1 = root.fork(1);
+        let mut f2 = root.fork(2);
+        assert_ne!(f1.next_u64(), f2.next_u64());
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut r = Rng::new(3);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_is_unbiased_smoke() {
+        let mut r = Rng::new(4);
+        let mut counts = [0u32; 7];
+        for _ in 0..70_000 {
+            counts[r.below(7) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(5);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn gaussian_shift_scale() {
+        let mut r = Rng::new(6);
+        let n = 30_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gaussian(1296.0, 0.00033)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        assert!((mean - 1296.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Rng::new(8);
+        for &alpha in &[0.1, 0.5, 1.0, 10.0] {
+            let v = r.dirichlet(alpha, 10);
+            let s: f64 = v.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+            assert!(v.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(9);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn weighted_choice_respects_weights() {
+        let mut r = Rng::new(10);
+        let w = [0.0, 3.0, 1.0];
+        let mut counts = [0u32; 3];
+        for _ in 0..40_000 {
+            counts[r.choice_weighted(&w)] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        let ratio = counts[1] as f64 / counts[2] as f64;
+        assert!((ratio - 3.0).abs() < 0.25, "ratio={ratio}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::new(11);
+        let n = 50_000;
+        let mean = (0..n).map(|_| r.exponential(2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn gamma_mean_matches_shape() {
+        let mut r = Rng::new(12);
+        for &shape in &[0.3, 1.0, 4.5] {
+            let n = 30_000;
+            let mean = (0..n).map(|_| r.gamma(shape)).sum::<f64>() / n as f64;
+            assert!((mean - shape).abs() < 0.1 * shape.max(0.5), "shape={shape} mean={mean}");
+        }
+    }
+}

@@ -1,0 +1,276 @@
+//! Property-based tests over the library invariants (DESIGN.md §7), using
+//! the in-repo mini-proptest harness (`lgc::testing`).
+
+use lgc::channels::allocate_budget;
+use lgc::compression::{lgc_compress, wire, CompressScratch, ErrorFeedback};
+use lgc::config::toml::Document;
+use lgc::coordinator::Server;
+use lgc::testing::{check, default_cases, gen, Shrink};
+use lgc::util::{norm2, Rng};
+
+#[test]
+fn prop_layers_partition_topk_support() {
+    check(
+        0xA1,
+        default_cases(),
+        |rng| {
+            let u = gen::f32_vec(rng, 4096, 1.0);
+            let n = u.len();
+            let k1 = gen::usize_in(rng, 1, (n / 4).max(1));
+            let k2 = gen::usize_in(rng, 1, (n / 4).max(1));
+            (u, (k1, k2))
+        },
+        |(u, (k1, k2))| {
+            let ks = [(*k1).min(u.len() / 2).max(1), (*k2).min(u.len() / 2).max(1)];
+            let total: usize = ks.iter().sum();
+            if total > u.len() {
+                return Ok(());
+            }
+            let upd = lgc_compress(u, &ks, &mut CompressScratch::default());
+            let mut seen = std::collections::HashSet::new();
+            for l in &upd.layers {
+                for &i in &l.indices {
+                    if !seen.insert(i) {
+                        return Err(format!("index {i} in two layers"));
+                    }
+                }
+            }
+            if upd.total_nnz() != total {
+                return Err(format!("nnz {} != K {total}", upd.total_nnz()));
+            }
+            for l in &upd.layers {
+                for (&i, &v) in l.indices.iter().zip(&l.values) {
+                    if u[i as usize] != v {
+                        return Err(format!("value mismatch at {i}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_compression_contraction() {
+    check(
+        0xA2,
+        default_cases(),
+        |rng| {
+            let u = gen::f32_vec(rng, 2048, 2.0);
+            let k = gen::usize_in(rng, 1, u.len());
+            (u, k)
+        },
+        |(u, k)| {
+            let k = (*k).min(u.len());
+            let upd = lgc_compress(u, &[k], &mut CompressScratch::default());
+            let dec = upd.decode();
+            let res: Vec<f32> = u.iter().zip(&dec).map(|(a, b)| a - b).collect();
+            let gamma = k as f64 / u.len() as f64;
+            let lhs = norm2(&res);
+            let rhs = (1.0 - gamma) * norm2(u) + 1e-6;
+            if lhs <= rhs {
+                Ok(())
+            } else {
+                Err(format!("contraction violated: {lhs} > {rhs}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_error_feedback_telescopes_exactly() {
+    check(
+        0xA3,
+        default_cases(),
+        |rng| {
+            let u = gen::f32_vec(rng, 1024, 1.0);
+            let k = gen::usize_in(rng, 1, u.len());
+            (u, k)
+        },
+        |(progress, k)| {
+            let dim = progress.len();
+            let k = (*k).min(dim);
+            let mut ef = ErrorFeedback::new(dim);
+            let mut u = Vec::new();
+            ef.compensate(progress, &mut u);
+            let g = lgc_compress(&u, &[k], &mut CompressScratch::default());
+            let dec = g.decode();
+            ef.absorb(&u, &g);
+            for i in 0..dim {
+                if ef.memory()[i] + dec[i] != u[i] {
+                    return Err(format!("telescoping broken at {i}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_wire_roundtrip() {
+    check(
+        0xA4,
+        default_cases(),
+        |rng| {
+            let u = gen::f32_vec(rng, 3000, 1.0);
+            let k = gen::usize_in(rng, 1, u.len());
+            (u, k)
+        },
+        |(u, k)| {
+            let k = (*k).min(u.len());
+            let upd = lgc_compress(u, &[k], &mut CompressScratch::default());
+            let chunk = wire::encode(u.len(), &upd.layers[0]);
+            if chunk.bytes.len() != wire::encoded_len(k) {
+                return Err("wrong encoded length".into());
+            }
+            let (dim, layer) = wire::decode(&chunk).map_err(|e| e.to_string())?;
+            if dim != u.len() || layer != upd.layers[0] {
+                return Err("roundtrip mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_allocation_always_feasible() {
+    check(
+        0xA5,
+        default_cases() * 2,
+        |rng| {
+            let raw: Vec<f32> = (0..gen::usize_in(rng, 1, 6))
+                .map(|_| (rng.range(-1.5, 1.5)) as f32)
+                .collect();
+            let d = gen::usize_in(rng, 1, 100_000);
+            (raw, d)
+        },
+        |(raw, d)| {
+            let fr: Vec<f64> = raw.iter().map(|&x| x as f64).collect();
+            let min_total = (*d / 10).max(1).min(64);
+            let plan = allocate_budget(&fr, *d, min_total);
+            if plan.counts.len() != raw.len() {
+                return Err("wrong channel count".into());
+            }
+            if plan.total() > *d {
+                return Err(format!("cap violated: {} > {d}", plan.total()));
+            }
+            if plan.total() < min_total.min(*d) {
+                return Err(format!("floor violated: {} < {min_total}", plan.total()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[derive(Clone, Debug)]
+struct DocCase(String);
+
+impl Shrink for DocCase {}
+
+#[test]
+fn prop_toml_roundtrip() {
+    check(
+        0xA6,
+        default_cases(),
+        |rng: &mut Rng| {
+            let mut doc = Document::new();
+            let sections = ["", "s1", "s2"];
+            for (si, sec) in sections.iter().enumerate() {
+                for ki in 0..gen::usize_in(rng, 1, 4) {
+                    let key = format!("k{si}_{ki}");
+                    let v = match rng.index(4) {
+                        0 => lgc::config::Value::Int(rng.below(1_000_000) as i64 - 500_000),
+                        1 => lgc::config::Value::Float(
+                            (rng.normal() * 1280.0).round() / 128.0,
+                        ),
+                        2 => lgc::config::Value::Str(format!("v{}", rng.below(1000))),
+                        _ => lgc::config::Value::Array(vec![
+                            lgc::config::Value::Int(rng.below(100) as i64),
+                            lgc::config::Value::Int(rng.below(100) as i64),
+                        ]),
+                    };
+                    doc.set(sec, &key, v);
+                }
+            }
+            DocCase(doc.to_string())
+        },
+        |DocCase(text)| {
+            let d1 = Document::parse(text).map_err(|e| e.to_string())?;
+            let printed = d1.to_string();
+            let d2 = Document::parse(&printed).map_err(|e| e.to_string())?;
+            if d1 == d2 {
+                Ok(())
+            } else {
+                Err("parse(print(doc)) != doc".into())
+            }
+        },
+    );
+}
+
+#[derive(Clone, Debug)]
+struct UpdatesCase {
+    dim: usize,
+    updates: Vec<lgc::compression::LgcUpdate>,
+}
+
+impl Shrink for UpdatesCase {
+    fn shrink(&self) -> Vec<Self> {
+        if self.updates.len() <= 1 {
+            return vec![];
+        }
+        vec![UpdatesCase { dim: self.dim, updates: self.updates[..1].to_vec() }]
+    }
+}
+
+#[test]
+fn prop_server_aggregation_is_mean_of_decodes() {
+    check(
+        0xA7,
+        default_cases() / 2,
+        |rng| {
+            let dim = gen::usize_in(rng, 8, 512);
+            let m = gen::usize_in(rng, 1, 6);
+            let mut updates = Vec::new();
+            for _ in 0..m {
+                let u: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+                let k = gen::usize_in(rng, 1, dim);
+                updates.push(lgc_compress(&u, &[k], &mut CompressScratch::default()));
+            }
+            UpdatesCase { dim, updates }
+        },
+        |case| {
+            let mut server = Server::new(vec![0f32; case.dim]);
+            let refs: Vec<&lgc::compression::LgcUpdate> = case.updates.iter().collect();
+            server.aggregate_and_apply(&refs);
+            let m = case.updates.len() as f32;
+            let decodes: Vec<Vec<f32>> = case.updates.iter().map(|u| u.decode()).collect();
+            for i in 0..case.dim {
+                let expect: f32 = -decodes.iter().map(|d| d[i]).sum::<f32>() / m;
+                if (server.params[i] - expect).abs() > 1e-5 {
+                    return Err(format!("aggregation mismatch at {i}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fedavg_equals_lgc_full_k() {
+    // FedAvg's dense update == LGC with K = D and one layer: the decoded
+    // update must be identical for the same progress vector.
+    check(
+        0xA8,
+        default_cases() / 2,
+        |rng| gen::f32_vec(rng, 2048, 1.0),
+        |progress: &Vec<f32>| {
+            let dim = progress.len();
+            let upd = lgc_compress(progress, &[dim], &mut CompressScratch::default());
+            let dec = upd.decode();
+            if &dec != progress {
+                return Err("full-K LGC is not identity".into());
+            }
+            Ok(())
+        },
+    );
+}

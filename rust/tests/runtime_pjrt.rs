@@ -1,0 +1,188 @@
+//! PJRT runtime integration: load the AOT artifacts, execute them, and
+//! cross-check numerics against the pure-Rust oracle. These tests skip
+//! (with a notice) when `artifacts/` has not been built.
+
+use std::path::Path;
+
+use lgc::models::NativeLr;
+use lgc::runtime::{BatchX, Runtime};
+use lgc::util::Rng;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.toml").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new(&dir).expect("runtime init"))
+}
+
+fn batch(rng: &mut Rng, b: usize, feat: usize, nclass: usize) -> (Vec<f32>, Vec<i32>) {
+    let x = (0..b * feat).map(|_| rng.uniform_f32()).collect();
+    let y = (0..b).map(|_| rng.index(nclass) as i32).collect();
+    (x, y)
+}
+
+#[test]
+fn lr_grad_matches_native_oracle() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load_model("lr").unwrap();
+    let params = rt.load_init_params("lr").unwrap();
+    let mut rng = Rng::new(1);
+    let (x, y) = batch(&mut rng, 64, 784, 10);
+
+    let (grads, loss) = exe.grad(&params, &BatchX::F32(x.clone()), &y).unwrap();
+    let native = NativeLr::new();
+    let mut ngrads = vec![0f32; params.len()];
+    let nloss = native.loss_grad(&params, &x, &y, &mut ngrads);
+
+    assert!((loss - nloss).abs() < 1e-4, "loss: pjrt {loss} vs native {nloss}");
+    let mut max_err = 0f32;
+    for (g, n) in grads.iter().zip(&ngrads) {
+        max_err = max_err.max((g - n).abs());
+    }
+    assert!(max_err < 1e-4, "max grad err {max_err}");
+}
+
+#[test]
+fn lr_local_step_applies_sgd_via_pallas_kernel() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load_model("lr").unwrap();
+    let params0 = rt.load_init_params("lr").unwrap();
+    let mut rng = Rng::new(2);
+    let (x, y) = batch(&mut rng, 64, 784, 10);
+    let lr = 0.05f32;
+
+    // local = grad + p - lr*g composition
+    let (grads, _) = exe.grad(&params0, &BatchX::F32(x.clone()), &y).unwrap();
+    let mut params = params0.clone();
+    let loss = exe.local_step(&mut params, &BatchX::F32(x), &y, lr).unwrap();
+    assert!(loss.is_finite());
+    let mut max_err = 0f32;
+    for i in 0..params.len() {
+        let expect = params0[i] - lr * grads[i];
+        max_err = max_err.max((params[i] - expect).abs());
+    }
+    assert!(max_err < 1e-5, "max param err {max_err}");
+}
+
+#[test]
+fn lr_eval_counts_match_native() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load_model("lr").unwrap();
+    let params = rt.load_init_params("lr").unwrap();
+    let mut rng = Rng::new(3);
+    let (x, y) = batch(&mut rng, 64, 784, 10);
+    let (loss_sum, correct) = exe.eval_batch(&params, &BatchX::F32(x.clone()), &y).unwrap();
+    let native = NativeLr::new();
+    let (nls, nc) = native.eval(&params, &x, &y);
+    assert!((loss_sum - nls).abs() < 1e-3, "{loss_sum} vs {nls}");
+    assert_eq!(correct, nc);
+}
+
+#[test]
+fn cnn_local_steps_decrease_loss() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load_model("cnn").unwrap();
+    let mut params = rt.load_init_params("cnn").unwrap();
+    let mut rng = Rng::new(4);
+    let (x, y) = batch(&mut rng, 64, 784, 10);
+    let bx = BatchX::F32(x);
+    let mut first = f64::NAN;
+    let mut last = f64::NAN;
+    for i in 0..6 {
+        let loss = exe.local_step(&mut params, &bx, &y, 0.05).unwrap();
+        if i == 0 {
+            first = loss;
+        }
+        last = loss;
+    }
+    assert!(last < first, "cnn loss {first} -> {last}");
+}
+
+#[test]
+fn rnn_local_steps_decrease_loss() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load_model("rnn").unwrap();
+    let mut params = rt.load_init_params("rnn").unwrap();
+    let mut rng = Rng::new(5);
+    // narrow slice of corpus -> predictable -> loss should fall fast
+    let corpus = lgc::data::CharCorpus::embedded(rt.manifest.seq);
+    let mut buf = Vec::new();
+    corpus.fill_batch(&mut rng, (0, 200), 64, &mut buf);
+    let bx = BatchX::I32(buf);
+    let y = vec![0i32; 64];
+    let mut first = f64::NAN;
+    let mut last = f64::NAN;
+    for i in 0..8 {
+        let loss = exe.local_step(&mut params, &bx, &y, 0.5).unwrap();
+        if i == 0 {
+            first = loss;
+        }
+        last = loss;
+    }
+    assert!(last < first, "rnn loss {first} -> {last}");
+    assert!(first < (64f64).ln() * 1.5, "init loss way off: {first}");
+}
+
+#[test]
+fn compress_artifact_matches_rust_compressor() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load_compress().unwrap();
+    let d = exe.d;
+    let ks = rt.manifest.compress_ks.clone();
+    let mut rng = Rng::new(6);
+    let u: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+
+    let (layers, thr) = exe.compress(&u).unwrap();
+    assert_eq!(layers.len(), ks.len() * d);
+    assert_eq!(thr.len(), ks.len() + 1);
+
+    // Dense decode from the artifact == rust-native lgc_compress decode.
+    let mut dense = vec![0f32; d];
+    for c in 0..ks.len() {
+        for i in 0..d {
+            dense[i] += layers[c * d + i];
+        }
+    }
+    let mut scratch = lgc::compression::CompressScratch::default();
+    let native = lgc::compression::lgc_compress(&u, &ks, &mut scratch);
+    let ndense = native.decode();
+    let nnz_a = dense.iter().filter(|&&x| x != 0.0).count();
+    let nnz_b = ndense.iter().filter(|&&x| x != 0.0).count();
+    assert_eq!(nnz_a, nnz_b, "support sizes differ");
+    let mut diff = 0usize;
+    for i in 0..d {
+        if (dense[i] - ndense[i]).abs() > 1e-6 {
+            diff += 1;
+        }
+    }
+    assert_eq!(diff, 0, "{diff} coordinates differ between artifact and native");
+}
+
+#[test]
+fn pjrt_full_lr_experiment_smoke() {
+    let Some(rt) = runtime() else { return };
+    use lgc::config::{ExperimentConfig, Mechanism, Workload};
+    use lgc::coordinator::{Experiment, PjrtTrainer};
+    let cfg = ExperimentConfig {
+        mechanism: Mechanism::LgcStatic,
+        workload: Workload::LrMnist,
+        rounds: 6,
+        devices: 2,
+        samples_per_device: 128,
+        eval_samples: 128,
+        eval_every: 2,
+        h_fixed: 2,
+        h_max: 4,
+        lr: 0.05,
+        ..ExperimentConfig::default()
+    };
+    let mut trainer = PjrtTrainer::new(&rt, &cfg).unwrap();
+    let mut exp = Experiment::new(cfg, &trainer);
+    let log = exp.run(&mut trainer).unwrap();
+    assert_eq!(log.records.len(), 6);
+    let first = log.records.first().unwrap().train_loss;
+    let last = log.records.last().unwrap().train_loss;
+    assert!(last < first, "{first} -> {last}");
+}
