@@ -7,7 +7,9 @@
 use std::path::Path;
 
 use lgc::bench::{bench_auto, Table};
-use lgc::compression::{lgc_compress, lgc_compress_radix, wire, CompressScratch};
+use lgc::compression::{
+    lgc_compress, lgc_compress_radix, wire, CompressScratch, Compressor, LayerBudget, LgcTopAB,
+};
 use lgc::runtime::Runtime;
 use lgc::util::Rng;
 
@@ -53,6 +55,29 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     table.print();
+
+    // Dyn-dispatch overhead of the Compressor seam: the round loop now calls
+    // `Box<dyn Compressor>` instead of `lgc_compress` directly; one virtual
+    // call per compress amortized over an O(D) pass must stay in the noise
+    // (budget: <= 2%, recorded in EXPERIMENTS.md §Perf).
+    println!("\n== dyn-dispatch: Box<dyn Compressor> vs direct call (1M-param CNN shape) ==");
+    {
+        let d = 1_048_576usize;
+        let u: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let ks = [d / 100, d * 4 / 100, d * 15 / 100];
+        let mut scratch = CompressScratch::default();
+        let rd = bench_auto("direct lgc_compress D=1M", 300.0, || {
+            std::hint::black_box(lgc_compress(&u, &ks, &mut scratch));
+        });
+        rd.report("");
+        let budget = LayerBudget::new(ks.to_vec());
+        let mut boxed: Box<dyn Compressor> = Box::new(LgcTopAB);
+        let rb = bench_auto("Box<dyn Compressor> D=1M", 300.0, || {
+            std::hint::black_box(boxed.compress(&u, &budget, &mut scratch));
+        });
+        let overhead = (rb.mean_ns / rd.mean_ns - 1.0) * 100.0;
+        rb.report(&format!("dyn-dispatch overhead {overhead:+.2}% (budget <= 2%)"));
+    }
 
     println!("\n== wire encode/decode ==");
     let d = 262_144;

@@ -5,7 +5,7 @@
 //! `cargo run --release --example drl_control [episodes]`
 
 use lgc::config::{ExperimentConfig, Mechanism, Workload};
-use lgc::coordinator::{Experiment, NativeLrTrainer};
+use lgc::coordinator::{ExperimentBuilder, NativeLrTrainer};
 
 fn main() -> anyhow::Result<()> {
     let episodes: usize = std::env::args()
@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
         ..ExperimentConfig::default()
     };
     let mut trainer = NativeLrTrainer::new(&cfg);
-    let mut exp = Experiment::new(cfg, &trainer);
+    let mut exp = ExperimentBuilder::new(cfg).trainer(&trainer).build()?;
 
     println!("episode  mean_reward  mean_energy_J/round  mean_H  eval_acc");
     for ep in 0..episodes {

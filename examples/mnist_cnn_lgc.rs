@@ -10,7 +10,7 @@
 use std::path::Path;
 
 use lgc::config::{ExperimentConfig, Mechanism, Workload};
-use lgc::coordinator::{Experiment, PjrtTrainer};
+use lgc::coordinator::{ExperimentBuilder, PjrtTrainer};
 use lgc::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
@@ -45,7 +45,7 @@ fn main() -> anyhow::Result<()> {
         rt.platform()
     );
     let mut trainer = PjrtTrainer::new(&rt, &cfg)?;
-    let mut exp = Experiment::new(cfg, &trainer);
+    let mut exp = ExperimentBuilder::new(cfg).trainer(&trainer).build()?;
 
     let t0 = std::time::Instant::now();
     let mut log = lgc::metrics::RunLog::new("e2e-cnn");

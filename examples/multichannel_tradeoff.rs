@@ -6,7 +6,7 @@
 //! budget on the native LR path and reports time / energy / money / accuracy.
 
 use lgc::config::{ExperimentConfig, Mechanism, Workload};
-use lgc::coordinator::{Experiment, NativeLrTrainer};
+use lgc::coordinator::{ExperimentBuilder, NativeLrTrainer};
 
 fn run(name: &str, fracs: Vec<f64>, mech: Mechanism) -> anyhow::Result<()> {
     let cfg = ExperimentConfig {
@@ -25,7 +25,7 @@ fn run(name: &str, fracs: Vec<f64>, mech: Mechanism) -> anyhow::Result<()> {
         ..ExperimentConfig::default()
     };
     let mut trainer = NativeLrTrainer::new(&cfg);
-    let mut exp = Experiment::new(cfg, &trainer);
+    let mut exp = ExperimentBuilder::new(cfg).trainer(&trainer).build()?;
     let log = exp.run(&mut trainer)?;
     let last = log.last().unwrap();
     let mb = log.records.iter().map(|r| r.bytes_up).sum::<u64>() as f64 / (1024.0 * 1024.0);

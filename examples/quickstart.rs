@@ -1,6 +1,11 @@
 //! Quickstart: train logistic regression with LGC over 3 simulated edge
-//! devices x 3 channels (5G/4G/3G), comparing against FedAvg — in under a
-//! minute on the native path, no artifacts needed.
+//! devices x 3 channels (5G/4G/3G), comparing mechanisms end-to-end through
+//! [`ExperimentBuilder`] — in under a minute on the native path, no
+//! artifacts needed.
+//!
+//! Also demonstrates the extension seams: the last run swaps in the
+//! `DenseNoop` reference compressor and sample-weighted aggregation with
+//! two builder calls (see DESIGN.md §"Extension points").
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -8,13 +13,16 @@
 //! LGC_USE_RUNTIME=1 cargo run --release --example quickstart
 //! ```
 
+use lgc::compression::DenseNoop;
 use lgc::config::{ExperimentConfig, Mechanism, Workload};
-use lgc::coordinator::{Experiment, LocalTrainer, NativeLrTrainer, PjrtTrainer};
+use lgc::coordinator::{
+    ExperimentBuilder, LocalTrainer, NativeLrTrainer, PjrtTrainer, WeightedBySamples,
+};
+use lgc::metrics::RunLog;
 use lgc::runtime::Runtime;
 
-fn main() -> anyhow::Result<()> {
-    let use_runtime = std::env::var("LGC_USE_RUNTIME").is_ok();
-    let mut cfg = ExperimentConfig {
+fn base_cfg(use_runtime: bool) -> ExperimentConfig {
+    ExperimentConfig {
         workload: Workload::LrMnist,
         rounds: 40,
         devices: 3,
@@ -26,37 +34,67 @@ fn main() -> anyhow::Result<()> {
         h_max: 6,
         use_runtime,
         ..ExperimentConfig::default()
-    };
+    }
+}
 
-    println!("LGC quickstart — {} path\n", if use_runtime { "PJRT artifact" } else { "native LR" });
+fn make_trainer(cfg: &ExperimentConfig) -> anyhow::Result<Box<dyn LocalTrainer>> {
+    if cfg.use_runtime {
+        let rt = Runtime::new(std::path::Path::new(&cfg.artifacts_dir))?;
+        Ok(Box::new(PjrtTrainer::new(&rt, cfg)?))
+    } else {
+        Ok(Box::new(NativeLrTrainer::new(cfg)))
+    }
+}
+
+fn report(name: &str, log: &RunLog) {
+    let last = log.last().unwrap();
+    let mb: f64 =
+        log.records.iter().map(|r| r.bytes_up).sum::<u64>() as f64 / (1024.0 * 1024.0);
     println!(
-        "{:<12} {:>8} {:>10} {:>12} {:>10} {:>10}",
+        "{:<22} {:>8} {:>10.4} {:>12.1} {:>10.4} {:>10.3}",
+        name,
+        log.records.len(),
+        log.final_acc(),
+        last.energy_j,
+        last.money,
+        mb
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    let use_runtime = std::env::var("LGC_USE_RUNTIME").is_ok();
+    println!(
+        "LGC quickstart — {} path\n",
+        if use_runtime { "PJRT artifact" } else { "native LR" }
+    );
+    println!(
+        "{:<22} {:>8} {:>10} {:>12} {:>10} {:>10}",
         "mechanism", "rounds", "final acc", "energy (J)", "money", "MB sent"
     );
 
+    // Registry presets: one builder line per mechanism.
     for mech in [Mechanism::FedAvg, Mechanism::LgcStatic, Mechanism::LgcDrl] {
+        let mut cfg = base_cfg(use_runtime);
         cfg.mechanism = mech;
-        let mut trainer: Box<dyn LocalTrainer> = if use_runtime {
-            let rt = Runtime::new(std::path::Path::new(&cfg.artifacts_dir))?;
-            Box::new(PjrtTrainer::new(&rt, &cfg)?)
-        } else {
-            Box::new(NativeLrTrainer::new(&cfg))
-        };
-        let mut exp = Experiment::new(cfg.clone(), trainer.as_ref());
+        let mut trainer = make_trainer(&cfg)?;
+        let mut exp = ExperimentBuilder::new(cfg).trainer(trainer.as_ref()).build()?;
         let log = exp.run(trainer.as_mut())?;
-        let last = log.last().unwrap();
-        let mb: f64 =
-            log.records.iter().map(|r| r.bytes_up).sum::<u64>() as f64 / (1024.0 * 1024.0);
-        println!(
-            "{:<12} {:>8} {:>10.4} {:>12.1} {:>10.4} {:>10.3}",
-            mech.name(),
-            log.records.len(),
-            log.final_acc(),
-            last.energy_j,
-            last.money,
-            mb
-        );
+        report(mech.name(), &log);
     }
+
+    // Custom seams: dense reference compressor + sample-weighted mean,
+    // plugged in without touching any mechanism code.
+    let mut cfg = base_cfg(use_runtime);
+    cfg.mechanism = Mechanism::FedAvg;
+    let mut trainer = make_trainer(&cfg)?;
+    let mut exp = ExperimentBuilder::new(cfg)
+        .trainer(trainer.as_ref())
+        .compressor(|_ctx, _id| Box::new(DenseNoop))
+        .aggregator(|_ctx| Box::new(WeightedBySamples::new()))
+        .build()?;
+    let log = exp.run(trainer.as_mut())?;
+    report("dense+weighted (custom)", &log);
+
     println!("\nLGC matches FedAvg accuracy at a fraction of the bytes/energy —");
     println!("see benches/ for the full Figure 3/4/5/6 reproductions.");
     Ok(())

@@ -6,7 +6,7 @@
 use std::path::Path;
 
 use lgc::config::{ExperimentConfig, Mechanism, Workload};
-use lgc::coordinator::{Experiment, PjrtTrainer};
+use lgc::coordinator::{ExperimentBuilder, PjrtTrainer};
 use lgc::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
         rounds
     );
     let mut trainer = PjrtTrainer::new(&rt, &cfg)?;
-    let mut exp = Experiment::new(cfg, &trainer);
+    let mut exp = ExperimentBuilder::new(cfg).trainer(&trainer).build()?;
     let mut log = lgc::metrics::RunLog::new("shakespeare-rnn");
     for round in 0..exp.cfg.rounds {
         let Some(rec) = exp.step_round(round, &mut trainer)? else { break };

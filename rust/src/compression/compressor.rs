@@ -1,0 +1,519 @@
+//! The [`Compressor`] trait — the pluggable compression seam of the round
+//! loop.
+//!
+//! The paper treats the compression operator as a *policy point*: banded
+//! `Top_{α,β}` → layered `LGC_k` today, but related work swaps in random
+//! sparsification, quantization, or no compression at all (FedGreen,
+//! arXiv:2111.06146; "To Talk or to Work", arXiv:2012.11804). This module
+//! turns that into an open API: anything implementing [`Compressor`] plugs
+//! into [`crate::coordinator::Device`] unchanged, and error feedback is a
+//! composable [`ErrorCompensated`] wrapper rather than device-side code.
+//!
+//! Built-in implementations:
+//!
+//! | type           | strategy                                   | wire format |
+//! |----------------|--------------------------------------------|-------------|
+//! | [`LgcTopAB`]   | banded top-K partition (production path)   | sparse      |
+//! | [`LgcRadix`]   | radix-select variant (documented §Perf)    | sparse      |
+//! | [`RandK`]      | uniform random-K (Wangni et al. 2017)      | sparse      |
+//! | [`Qsgd`]       | stochastic quantizer (Alistarh et al. 2017)| packed      |
+//! | [`DenseNoop`]  | identity (FedAvg-style dense reference)    | dense f32   |
+//!
+//! See DESIGN.md §"Extension points" for a worked example of registering a
+//! new compressor end to end.
+
+use super::error_feedback::ErrorFeedback;
+use super::quantize::{wire_bits, QsgdQuantizer};
+use super::rand_k::RandK;
+use super::{lgc_compress, lgc_compress_radix, CompressScratch, Layer, LgcUpdate};
+use crate::channels::AllocationPlan;
+
+/// Per-round coordinate budget, one entry per layer (Eq. 2's `K_c`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LayerBudget {
+    ks: Vec<usize>,
+}
+
+impl LayerBudget {
+    pub fn new(ks: Vec<usize>) -> Self {
+        assert!(!ks.is_empty(), "a budget needs at least one layer");
+        LayerBudget { ks }
+    }
+
+    /// Per-layer coordinate counts.
+    pub fn ks(&self) -> &[usize] {
+        &self.ks
+    }
+
+    /// Total coordinates across layers.
+    pub fn total(&self) -> usize {
+        self.ks.iter().sum()
+    }
+
+    /// Build a feasible budget from an allocation plan for a `dim`-sized
+    /// model: per-layer counts are clamped to `dim`, and an oversized total
+    /// is rescaled proportionally (never to all-zero).
+    pub fn from_plan(plan: &AllocationPlan, dim: usize) -> Self {
+        let ks: Vec<usize> = plan.layer_budgets().iter().map(|&k| k.min(dim)).collect();
+        if ks.is_empty() {
+            return LayerBudget { ks: vec![0] };
+        }
+        let total: usize = ks.iter().sum();
+        if total <= dim {
+            return LayerBudget { ks };
+        }
+        let mut scaled: Vec<usize> = ks.iter().map(|&k| (k * dim) / total.max(1)).collect();
+        if scaled.iter().sum::<usize>() == 0 {
+            scaled[0] = 1;
+        }
+        LayerBudget { ks: scaled }
+    }
+}
+
+/// A pluggable gradient compressor. One instance lives per device and may
+/// hold cross-round state (RNG streams, error memory via
+/// [`ErrorCompensated`], adaptive thresholds, ...).
+///
+/// Contract (enforced for every registered impl by
+/// `tests/compressor_contract.rs`):
+///
+/// - the decoded update's support is a subset of the input's support;
+/// - `total_nnz() <= budget.total()` whenever [`Compressor::respects_budget`]
+///   is true;
+/// - two instances built from the same seed produce identical output
+///   (determinism — the simulator's reproducibility depends on it).
+pub trait Compressor: Send {
+    /// Short human-readable name for logs and registry listings.
+    fn name(&self) -> String;
+
+    /// Compress `u` under `budget` into a layered update. `scratch` is the
+    /// caller's reusable workspace (no steady-state allocation). Emit at
+    /// most one layer per budget entry — the device maps layer `c` onto the
+    /// plan's `c`-th active channel and rejects over-long updates.
+    fn compress(
+        &mut self,
+        u: &[f32],
+        budget: &LayerBudget,
+        scratch: &mut CompressScratch,
+    ) -> LgcUpdate;
+
+    /// Bytes one layer of a `dim`-sized update occupies on the wire.
+    /// Default: the sparse index+value format ([`Layer::wire_bytes`]).
+    fn layer_wire_bytes(&self, layer: &Layer, dim: usize) -> u64 {
+        let _ = dim;
+        layer.wire_bytes()
+    }
+
+    /// Total wire bytes of an update under this compressor's format.
+    fn wire_bytes(&self, update: &LgcUpdate) -> u64 {
+        update
+            .layers
+            .iter()
+            .map(|l| self.layer_wire_bytes(l, update.dim))
+            .sum()
+    }
+
+    /// Whether updates travel in the sparse index+value wire format (and so
+    /// should be round-tripped through `wire::encode`/`decode` by the
+    /// server). Dense/packed formats return false.
+    fn sparse_wire(&self) -> bool {
+        true
+    }
+
+    /// Whether `total_nnz() <= budget.total()` is guaranteed. Quantizers and
+    /// the dense baseline return false.
+    fn respects_budget(&self) -> bool {
+        true
+    }
+
+    /// Whether shipped values equal the input coordinates exactly (true for
+    /// top-K-style selection; false for quantized or rescaled values). Used
+    /// by [`ErrorCompensated`] to pick the exact zeroing-based residual.
+    fn exact_values(&self) -> bool {
+        true
+    }
+
+    /// The error-feedback memory, if this compressor maintains one.
+    fn error_memory(&self) -> Option<&ErrorFeedback> {
+        None
+    }
+
+    fn error_memory_mut(&mut self) -> Option<&mut ErrorFeedback> {
+        None
+    }
+
+    /// Reset cross-round state (new episode / fresh FL problem).
+    fn reset(&mut self) {}
+}
+
+/// Banded `Top_{α,β}` via the partition hot path — the paper's production
+/// compressor (wraps [`lgc_compress`]).
+#[derive(Clone, Debug, Default)]
+pub struct LgcTopAB;
+
+impl Compressor for LgcTopAB {
+    fn name(&self) -> String {
+        "lgc-top-ab".to_string()
+    }
+
+    fn compress(
+        &mut self,
+        u: &[f32],
+        budget: &LayerBudget,
+        scratch: &mut CompressScratch,
+    ) -> LgcUpdate {
+        lgc_compress(u, budget.ks(), scratch)
+    }
+}
+
+/// Banded `Top_{α,β}` via the radix-select variant (documented §Perf
+/// iteration; bit-identical output to [`LgcTopAB`]).
+#[derive(Clone, Debug, Default)]
+pub struct LgcRadix;
+
+impl Compressor for LgcRadix {
+    fn name(&self) -> String {
+        "lgc-radix".to_string()
+    }
+
+    fn compress(
+        &mut self,
+        u: &[f32],
+        budget: &LayerBudget,
+        scratch: &mut CompressScratch,
+    ) -> LgcUpdate {
+        lgc_compress_radix(u, budget.ks(), scratch)
+    }
+}
+
+/// Identity "compressor": ships the full dense vector as one layer. The
+/// FedAvg-style uncompressed reference run, and the worked example of
+/// DESIGN.md §"Extension points". Wire accounting is 4 B/coordinate (a raw
+/// f32 stream — no index overhead).
+#[derive(Clone, Debug, Default)]
+pub struct DenseNoop;
+
+impl Compressor for DenseNoop {
+    fn name(&self) -> String {
+        "dense".to_string()
+    }
+
+    fn compress(
+        &mut self,
+        u: &[f32],
+        _budget: &LayerBudget,
+        _scratch: &mut CompressScratch,
+    ) -> LgcUpdate {
+        let layer = Layer {
+            indices: (0..u.len() as u32).collect(),
+            values: u.to_vec(),
+        };
+        LgcUpdate { dim: u.len(), layers: vec![layer] }
+    }
+
+    fn layer_wire_bytes(&self, layer: &Layer, _dim: usize) -> u64 {
+        4 * layer.len() as u64
+    }
+
+    fn sparse_wire(&self) -> bool {
+        false
+    }
+
+    fn respects_budget(&self) -> bool {
+        false
+    }
+}
+
+impl Compressor for RandK {
+    fn name(&self) -> String {
+        if self.unbiased { "rand-k(unbiased)".to_string() } else { "rand-k".to_string() }
+    }
+
+    fn compress(
+        &mut self,
+        u: &[f32],
+        budget: &LayerBudget,
+        _scratch: &mut CompressScratch,
+    ) -> LgcUpdate {
+        self.sparsify(u, budget.total())
+    }
+
+    /// Unbiased mode rescales kept values by D/K.
+    fn exact_values(&self) -> bool {
+        !self.unbiased
+    }
+
+    /// A fresh episode rewinds the mask stream so multi-episode runs are
+    /// reproducible against a single-episode run with the same seed.
+    fn reset(&mut self) {
+        self.reset_stream();
+    }
+}
+
+/// QSGD stochastic quantization adapted to the layered-update interface:
+/// the dequantized nonzeros travel as one layer, and wire accounting uses
+/// the packed format (norm + `ceil(log2(2s+1))` bits/coordinate over the
+/// full dimension) rather than the sparse index+value format.
+#[derive(Clone, Debug)]
+pub struct Qsgd {
+    quantizer: QsgdQuantizer,
+}
+
+impl Qsgd {
+    pub fn new(quantizer: QsgdQuantizer) -> Self {
+        Qsgd { quantizer }
+    }
+
+    pub fn levels(&self) -> u8 {
+        self.quantizer.levels
+    }
+}
+
+impl Compressor for Qsgd {
+    fn name(&self) -> String {
+        format!("qsgd{}", self.quantizer.levels)
+    }
+
+    fn compress(
+        &mut self,
+        u: &[f32],
+        _budget: &LayerBudget,
+        _scratch: &mut CompressScratch,
+    ) -> LgcUpdate {
+        let q = self.quantizer.quantize(u);
+        let dq = q.dequantize();
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for (i, &v) in dq.iter().enumerate() {
+            if v != 0.0 {
+                indices.push(i as u32);
+                values.push(v);
+            }
+        }
+        LgcUpdate { dim: u.len(), layers: vec![Layer { indices, values }] }
+    }
+
+    fn layer_wire_bytes(&self, _layer: &Layer, dim: usize) -> u64 {
+        let bits = wire_bits(self.quantizer.levels);
+        4 + (dim as u64 * bits as u64).div_ceil(8)
+    }
+
+    fn sparse_wire(&self) -> bool {
+        false
+    }
+
+    fn respects_budget(&self) -> bool {
+        false
+    }
+
+    fn exact_values(&self) -> bool {
+        false
+    }
+
+    /// A fresh episode rewinds the quantization noise stream (see
+    /// [`RandK`]'s reset for the rationale).
+    fn reset(&mut self) {
+        self.quantizer.reset_stream();
+    }
+}
+
+/// Composable error-feedback wrapper (Alg. 1 lines 8 & 11): maintains the
+/// memory `e`, compresses `e + u`, and absorbs what the inner compressor
+/// dropped. Replaces the open-coded error handling that used to live in
+/// `Device`.
+pub struct ErrorCompensated<C: Compressor> {
+    inner: C,
+    error: ErrorFeedback,
+    u_buf: Vec<f32>,
+}
+
+impl<C: Compressor> ErrorCompensated<C> {
+    pub fn new(inner: C) -> Self {
+        ErrorCompensated { inner, error: ErrorFeedback::new(0), u_buf: Vec::new() }
+    }
+
+    pub fn inner(&self) -> &C {
+        &self.inner
+    }
+}
+
+impl<C: Compressor> Compressor for ErrorCompensated<C> {
+    fn name(&self) -> String {
+        format!("ef({})", self.inner.name())
+    }
+
+    fn compress(
+        &mut self,
+        u: &[f32],
+        budget: &LayerBudget,
+        scratch: &mut CompressScratch,
+    ) -> LgcUpdate {
+        if self.error.dim() != u.len() {
+            self.error = ErrorFeedback::new(u.len());
+        }
+        // u' = e + u (line 8)
+        self.error.compensate(u, &mut self.u_buf);
+        // g = C(u') (line 9)
+        let g = self.inner.compress(&self.u_buf, budget, scratch);
+        // e' = u' − g (line 11); zeroing-based when values ship verbatim so
+        // the telescoping invariant holds bitwise.
+        if self.inner.exact_values() {
+            self.error.absorb(&self.u_buf, &g);
+        } else {
+            self.error.absorb_residual(&self.u_buf, &g);
+        }
+        g
+    }
+
+    fn layer_wire_bytes(&self, layer: &Layer, dim: usize) -> u64 {
+        self.inner.layer_wire_bytes(layer, dim)
+    }
+
+    fn wire_bytes(&self, update: &LgcUpdate) -> u64 {
+        self.inner.wire_bytes(update)
+    }
+
+    fn sparse_wire(&self) -> bool {
+        self.inner.sparse_wire()
+    }
+
+    fn respects_budget(&self) -> bool {
+        self.inner.respects_budget()
+    }
+
+    fn exact_values(&self) -> bool {
+        self.inner.exact_values()
+    }
+
+    fn error_memory(&self) -> Option<&ErrorFeedback> {
+        Some(&self.error)
+    }
+
+    fn error_memory_mut(&mut self) -> Option<&mut ErrorFeedback> {
+        Some(&mut self.error)
+    }
+
+    fn reset(&mut self) {
+        self.error.reset();
+        self.inner.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randu(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn lgc_top_ab_matches_free_function() {
+        let u = randu(512, 1);
+        let mut s1 = CompressScratch::default();
+        let mut s2 = CompressScratch::default();
+        let budget = LayerBudget::new(vec![8, 24, 96]);
+        let a = LgcTopAB.compress(&u, &budget, &mut s1);
+        let b = lgc_compress(&u, &[8, 24, 96], &mut s2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn radix_and_partition_compressors_agree() {
+        let u = randu(1024, 2);
+        let mut s1 = CompressScratch::default();
+        let mut s2 = CompressScratch::default();
+        let budget = LayerBudget::new(vec![10, 40, 150]);
+        assert_eq!(
+            LgcTopAB.compress(&u, &budget, &mut s1),
+            LgcRadix.compress(&u, &budget, &mut s2)
+        );
+    }
+
+    #[test]
+    fn dense_noop_is_identity() {
+        let u = randu(128, 3);
+        let mut s = CompressScratch::default();
+        let g = DenseNoop.compress(&u, &LayerBudget::new(vec![1]), &mut s);
+        assert_eq!(g.decode(), u);
+        assert_eq!(DenseNoop.wire_bytes(&g), 4 * 128);
+        assert!(!DenseNoop.sparse_wire());
+    }
+
+    #[test]
+    fn error_compensated_telescopes_like_device_loop() {
+        // The wrapper must reproduce the exact compensate/absorb sequence.
+        let mut ec = ErrorCompensated::new(LgcTopAB);
+        let mut ef = ErrorFeedback::new(256);
+        let mut s1 = CompressScratch::default();
+        let mut s2 = CompressScratch::default();
+        let budget = LayerBudget::new(vec![8, 24]);
+        let mut u_buf = Vec::new();
+        for round in 0..6 {
+            let progress = randu(256, 100 + round);
+            let a = ec.compress(&progress, &budget, &mut s1);
+            // reference: the old open-coded sequence
+            ef.compensate(&progress, &mut u_buf);
+            let b = lgc_compress(&u_buf, &[8, 24], &mut s2);
+            ef.absorb(&u_buf, &b);
+            assert_eq!(a, b, "round {round}");
+            assert_eq!(ec.error_memory().unwrap().memory(), ef.memory());
+        }
+    }
+
+    #[test]
+    fn error_compensated_with_inexact_inner_conserves_mass() {
+        let mut ec = ErrorCompensated::new(Qsgd::new(QsgdQuantizer::new(4, Rng::new(9))));
+        let u = randu(64, 7);
+        let mut s = CompressScratch::default();
+        let g = ec.compress(&u, &LayerBudget::new(vec![64]), &mut s);
+        let dec = g.decode();
+        let e = ec.error_memory().unwrap().memory();
+        for i in 0..64 {
+            assert!((e[i] + dec[i] - u[i]).abs() < 1e-5, "residual wrong at {i}");
+        }
+    }
+
+    #[test]
+    fn budget_from_plan_clamps_and_rescales() {
+        let plan = AllocationPlan { counts: vec![80, 0, 80] };
+        let b = LayerBudget::from_plan(&plan, 100);
+        assert_eq!(b.ks().len(), 2); // silent channel dropped
+        assert!(b.total() <= 100);
+        assert!(b.total() > 0);
+        let plan = AllocationPlan { counts: vec![10, 20] };
+        let b = LayerBudget::from_plan(&plan, 1000);
+        assert_eq!(b.ks(), &[10, 20]);
+    }
+
+    #[test]
+    fn qsgd_support_subset_and_packed_bytes() {
+        let mut q = Qsgd::new(QsgdQuantizer::new(2, Rng::new(4)));
+        let mut u = randu(256, 5);
+        for i in (0..256).step_by(2) {
+            u[i] = 0.0;
+        }
+        let mut s = CompressScratch::default();
+        let g = q.compress(&u, &LayerBudget::new(vec![256]), &mut s);
+        let dec = g.decode();
+        for i in 0..256 {
+            if dec[i] != 0.0 {
+                assert!(u[i] != 0.0, "qsgd shipped a zero coordinate {i}");
+            }
+        }
+        // packed: 4-byte norm + 3 bits/coordinate (2s+1 = 5 -> 8 -> 3 bits)
+        assert_eq!(q.wire_bytes(&g), 4 + (256 * 3_u64).div_ceil(8));
+    }
+
+    #[test]
+    fn rand_k_respects_budget_through_trait() {
+        let mut rk = RandK::new(Rng::new(11), false);
+        let u = randu(300, 12);
+        let mut s = CompressScratch::default();
+        let g = Compressor::compress(&mut rk, &u, &LayerBudget::new(vec![10, 20]), &mut s);
+        assert_eq!(g.total_nnz(), 30);
+        assert!(rk.respects_budget());
+    }
+}

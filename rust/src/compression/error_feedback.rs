@@ -60,11 +60,31 @@ impl ErrorFeedback {
         }
     }
 
-    /// Put a coordinate's mass back into the memory — used when a shipped
-    /// layer is lost in transit (the erasure-channel path): `absorb` zeroed
-    /// it as delivered, restitution undoes that so nothing is destroyed.
+    /// General residual `e' = u − decode(g)` by subtraction — for
+    /// compressors whose shipped values are *not* the input coordinates
+    /// verbatim (quantizers, unbiased rescaling). The zeroing-based
+    /// [`ErrorFeedback::absorb`] is exact for top-K-style selection; this is
+    /// the fallback that stays correct for everything else.
+    pub fn absorb_residual(&mut self, u: &[f32], shipped: &LgcUpdate) {
+        assert_eq!(u.len(), self.e.len());
+        assert_eq!(shipped.dim, self.e.len());
+        self.e.copy_from_slice(u);
+        for layer in &shipped.layers {
+            for (&i, &v) in layer.indices.iter().zip(&layer.values) {
+                self.e[i as usize] -= v;
+            }
+        }
+    }
+
+    /// Put a shipped coordinate's mass back into the memory — used when a
+    /// shipped layer is lost in transit (the erasure-channel path).
+    /// Restitution *adds* the shipped value: after the zeroing-based
+    /// [`ErrorFeedback::absorb`] the slot holds 0 (so `0 + v == u_i`
+    /// exactly), and after [`ErrorFeedback::absorb_residual`] it holds
+    /// `u_i − v` (so `(u_i − v) + v == u_i`) — either way the invariant
+    /// `e' + delivered == u` is restored and nothing is destroyed.
     pub fn restitute(&mut self, i: usize, value: f32) {
-        self.e[i] = value;
+        self.e[i] += value;
     }
 
     /// Reset (e.g., FedAvg has no memory).

@@ -8,6 +8,12 @@
 
 use crate::util::Rng;
 
+/// Bits per coordinate of the packed wire format for `levels` positive
+/// levels: `ceil(log2(2s+1))`, at least 1.
+pub fn wire_bits(levels: u8) -> u32 {
+    (2 * levels as u32 + 1).next_power_of_two().trailing_zeros().max(1)
+}
+
 /// Quantized vector: norm + per-coordinate (sign, level) pairs.
 #[derive(Clone, Debug)]
 pub struct QuantizedVec {
@@ -20,7 +26,7 @@ pub struct QuantizedVec {
 impl QuantizedVec {
     /// Wire bytes: norm + ceil(log2(2s+1)) bits/coord, byte-packed here.
     pub fn wire_bytes(&self) -> u64 {
-        let bits = (2 * self.levels as u32 + 1).next_power_of_two().trailing_zeros().max(1);
+        let bits = wire_bits(self.levels);
         4 + (self.q.len() as u64 * bits as u64).div_ceil(8)
     }
 
@@ -38,12 +44,21 @@ impl QuantizedVec {
 pub struct QsgdQuantizer {
     pub levels: u8,
     rng: Rng,
+    /// Snapshot of the RNG at construction (see [`QsgdQuantizer::reset_stream`]).
+    rng0: Rng,
 }
 
 impl QsgdQuantizer {
     pub fn new(levels: u8, rng: Rng) -> Self {
-        assert!(levels >= 1);
-        QsgdQuantizer { levels, rng }
+        // Levels are stored as signed per-coordinate i8s in QuantizedVec;
+        // beyond 127 the cast would silently saturate and bias the estimate.
+        assert!((1..=127).contains(&levels), "levels must be in [1, 127], got {levels}");
+        QsgdQuantizer { levels, rng0: rng.clone(), rng }
+    }
+
+    /// Rewind the RNG to its construction state (new episode).
+    pub fn reset_stream(&mut self) {
+        self.rng = self.rng0.clone();
     }
 
     pub fn quantize(&mut self, u: &[f32]) -> QuantizedVec {

@@ -10,6 +10,9 @@ use crate::util::Rng;
 #[derive(Clone, Debug)]
 pub struct RandK {
     rng: Rng,
+    /// Snapshot of the RNG at construction, so `reset_stream` restores a
+    /// fresh episode to the exact same draw sequence.
+    rng0: Rng,
     /// If true, scale kept values by D/K (unbiased); plain masking otherwise.
     pub unbiased: bool,
     perm: Vec<u32>,
@@ -17,11 +20,19 @@ pub struct RandK {
 
 impl RandK {
     pub fn new(rng: Rng, unbiased: bool) -> Self {
-        RandK { rng, unbiased, perm: Vec::new() }
+        RandK { rng0: rng.clone(), rng, unbiased, perm: Vec::new() }
     }
 
-    /// Sparsify `u` to `k` random coordinates (single layer).
-    pub fn compress(&mut self, u: &[f32], k: usize) -> LgcUpdate {
+    /// Rewind the RNG to its construction state (new episode).
+    pub fn reset_stream(&mut self) {
+        self.rng = self.rng0.clone();
+        self.perm.clear();
+    }
+
+    /// Keep `k` uniformly random coordinates of `u` (partial Fisher-Yates,
+    /// single layer). The [`crate::compression::Compressor`] impl routes
+    /// here with `k = budget.total()`.
+    pub fn sparsify(&mut self, u: &[f32], k: usize) -> LgcUpdate {
         let d = u.len();
         let k = k.min(d);
         // Partial Fisher-Yates: first k entries of a fresh permutation.
@@ -50,8 +61,8 @@ mod tests {
     fn keeps_exactly_k_random_coordinates() {
         let mut rk = RandK::new(Rng::new(1), false);
         let u: Vec<f32> = (1..=100).map(|i| i as f32).collect();
-        let a = rk.compress(&u, 10);
-        let b = rk.compress(&u, 10);
+        let a = rk.sparsify(&u, 10);
+        let b = rk.sparsify(&u, 10);
         assert_eq!(a.total_nnz(), 10);
         assert_eq!(b.total_nnz(), 10);
         assert_ne!(a, b, "two draws should differ");
@@ -68,7 +79,7 @@ mod tests {
         let n = 20_000;
         let mut acc = vec![0f64; u.len()];
         for _ in 0..n {
-            let dec = rk.compress(&u, 3).decode();
+            let dec = rk.sparsify(&u, 3).decode();
             for (a, &x) in acc.iter_mut().zip(&dec) {
                 *a += x as f64;
             }
@@ -94,7 +105,7 @@ mod tests {
         let res_top: Vec<f32> = u.iter().zip(&topk).map(|(a, b)| a - b).collect();
         let mut worse = 0;
         for _ in 0..20 {
-            let dec = rk.compress(&u, 64).decode();
+            let dec = rk.sparsify(&u, 64).decode();
             let res: Vec<f32> = u.iter().zip(&dec).map(|(a, b)| a - b).collect();
             if norm2(&res) > norm2(&res_top) {
                 worse += 1;
@@ -107,6 +118,6 @@ mod tests {
     fn k_equals_d_identity_when_biased() {
         let u: Vec<f32> = (0..32).map(|i| i as f32).collect();
         let mut rk = RandK::new(Rng::new(5), false);
-        assert_eq!(rk.compress(&u, 32).decode(), u);
+        assert_eq!(rk.sparsify(&u, 32).decode(), u);
     }
 }

@@ -32,9 +32,19 @@ pub struct SparseChunk {
 
 /// Encode one layer (indices must be ascending — `lgc_compress` guarantees).
 pub fn encode(dim: usize, layer: &Layer) -> SparseChunk {
+    let mut bytes = Vec::new();
+    encode_into(dim, layer, &mut bytes);
+    SparseChunk { bytes }
+}
+
+/// Encode one layer into a reusable buffer (cleared first); returns the
+/// number of bytes written, which always equals [`encoded_len`]`(layer.len())`
+/// — the byte count the channel simulator charges.
+pub fn encode_into(dim: usize, layer: &Layer, bytes: &mut Vec<u8>) -> usize {
     debug_assert!(layer.indices.windows(2).all(|w| w[0] < w[1]));
     let nnz = layer.len();
-    let mut bytes = Vec::with_capacity(encoded_len(nnz));
+    bytes.clear();
+    bytes.reserve(encoded_len(nnz));
     bytes.extend_from_slice(&(dim as u32).to_le_bytes());
     bytes.extend_from_slice(&(nnz as u32).to_le_bytes());
     let mut prev = 0u32;
@@ -45,7 +55,7 @@ pub fn encode(dim: usize, layer: &Layer) -> SparseChunk {
     for &v in &layer.values {
         bytes.extend_from_slice(&v.to_le_bytes());
     }
-    SparseChunk { bytes }
+    bytes.len()
 }
 
 /// Decode error.
@@ -70,7 +80,14 @@ impl std::error::Error for DecodeError {}
 
 /// Decode a chunk back into `(dim, Layer)`.
 pub fn decode(chunk: &SparseChunk) -> Result<(usize, Layer), DecodeError> {
-    let b = &chunk.bytes;
+    let mut layer = Layer { indices: Vec::new(), values: Vec::new() };
+    let dim = decode_into(&chunk.bytes, &mut layer)?;
+    Ok((dim, layer))
+}
+
+/// Decode raw wire bytes into a reusable `Layer` (its vectors are cleared
+/// and refilled, reusing their allocations); returns the encoded dimension.
+pub fn decode_into(b: &[u8], out: &mut Layer) -> Result<usize, DecodeError> {
     if b.len() < WIRE_HEADER {
         return Err(DecodeError::Truncated);
     }
@@ -79,7 +96,10 @@ pub fn decode(chunk: &SparseChunk) -> Result<(usize, Layer), DecodeError> {
     if b.len() != encoded_len(nnz) {
         return Err(DecodeError::Truncated);
     }
-    let mut indices = Vec::with_capacity(nnz);
+    out.indices.clear();
+    out.values.clear();
+    out.indices.reserve(nnz);
+    out.values.reserve(nnz);
     let mut prev = 0u32;
     for e in 0..nnz {
         let off = WIRE_HEADER + 4 * e;
@@ -88,16 +108,15 @@ pub fn decode(chunk: &SparseChunk) -> Result<(usize, Layer), DecodeError> {
         if idx >= dim {
             return Err(DecodeError::IndexOutOfRange { index: idx, dim });
         }
-        indices.push(idx);
+        out.indices.push(idx);
         prev = idx;
     }
     let vbase = WIRE_HEADER + 4 * nnz;
-    let mut values = Vec::with_capacity(nnz);
     for e in 0..nnz {
         let off = vbase + 4 * e;
-        values.push(f32::from_le_bytes(b[off..off + 4].try_into().unwrap()));
+        out.values.push(f32::from_le_bytes(b[off..off + 4].try_into().unwrap()));
     }
-    Ok((dim as usize, Layer { indices, values }))
+    Ok(dim as usize)
 }
 
 #[cfg(test)]

@@ -10,7 +10,10 @@ pub use toml::{Document, Value};
 
 use crate::channels::ChannelType;
 
-/// Which FL mechanism to run (paper Sec. 4.1 baselines + LGC).
+/// Which FL mechanism to run — a *name* that the coordinator's mechanism
+/// registry resolves to a preset of (compressor, aggregator, policy). The
+/// enum carries the built-in names plus [`Mechanism::Custom`] for presets
+/// registered at runtime; nothing in the round loop branches on it.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Mechanism {
     /// FedAvg (McMahan et al. 2017): fixed H, full dense model upload on the
@@ -22,25 +25,59 @@ pub enum Mechanism {
     LgcDrl,
     /// Single-channel Top-k with error feedback (ablation A1).
     TopK,
+    /// Single-channel random-K with error feedback (Wangni et al. 2017).
+    RandK,
+    /// QSGD stochastic quantization with error feedback (Alistarh et al.).
+    Qsgd,
+    /// A runtime-registered mechanism preset, addressed by its registry key.
+    Custom(&'static str),
 }
 
 impl Mechanism {
+    /// Parse a mechanism name. Built-in aliases resolve (case-insensitively)
+    /// to their enum variant; any other name becomes [`Mechanism::Custom`]
+    /// with its original spelling preserved, validated against the registry
+    /// when the experiment is built (so config files can name presets
+    /// registered by downstream code).
     pub fn parse(s: &str) -> Result<Self, String> {
-        match s.to_ascii_lowercase().as_str() {
-            "fedavg" => Ok(Mechanism::FedAvg),
-            "lgc-static" | "lgc_static" | "lgcstatic" | "lgc-nodrl" => Ok(Mechanism::LgcStatic),
-            "lgc" | "lgc-drl" | "lgc_drl" => Ok(Mechanism::LgcDrl),
-            "topk" | "top-k" => Ok(Mechanism::TopK),
-            other => Err(format!("unknown mechanism `{other}`")),
-        }
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "fedavg" => Mechanism::FedAvg,
+            "lgc-static" | "lgc_static" | "lgcstatic" | "lgc-nodrl" => Mechanism::LgcStatic,
+            "lgc" | "lgc-drl" | "lgc_drl" => Mechanism::LgcDrl,
+            "topk" | "top-k" => Mechanism::TopK,
+            "randk" | "rand-k" | "rand_k" => Mechanism::RandK,
+            "qsgd" => Mechanism::Qsgd,
+            _ => Mechanism::custom(s),
+        })
     }
 
+    /// A custom mechanism by registry key. Keys are interned in a
+    /// process-wide table (so `Mechanism` stays `Copy` and repeated parses
+    /// of the same name don't grow memory).
+    pub fn custom(key: &str) -> Self {
+        use std::collections::BTreeSet;
+        use std::sync::{Mutex, OnceLock};
+        static INTERNED: OnceLock<Mutex<BTreeSet<&'static str>>> = OnceLock::new();
+        let table = INTERNED.get_or_init(|| Mutex::new(BTreeSet::new()));
+        let mut table = table.lock().expect("mechanism intern table poisoned");
+        if let Some(&existing) = table.get(key) {
+            return Mechanism::Custom(existing);
+        }
+        let leaked: &'static str = Box::leak(key.to_string().into_boxed_str());
+        table.insert(leaked);
+        Mechanism::Custom(leaked)
+    }
+
+    /// The registry key / display name.
     pub fn name(&self) -> &'static str {
-        match self {
+        match *self {
             Mechanism::FedAvg => "fedavg",
             Mechanism::LgcStatic => "lgc-static",
             Mechanism::LgcDrl => "lgc-drl",
             Mechanism::TopK => "topk",
+            Mechanism::RandK => "rand-k",
+            Mechanism::Qsgd => "qsgd",
+            Mechanism::Custom(key) => key,
         }
     }
 }
@@ -405,9 +442,21 @@ mod tests {
 
     #[test]
     fn mechanism_and_workload_names_roundtrip() {
-        for m in [Mechanism::FedAvg, Mechanism::LgcStatic, Mechanism::LgcDrl, Mechanism::TopK] {
+        for m in [
+            Mechanism::FedAvg,
+            Mechanism::LgcStatic,
+            Mechanism::LgcDrl,
+            Mechanism::TopK,
+            Mechanism::RandK,
+            Mechanism::Qsgd,
+        ] {
             assert_eq!(Mechanism::parse(m.name()).unwrap(), m);
         }
+        // unknown names become Custom keys, resolved by the registry later
+        assert_eq!(
+            Mechanism::parse("my-registered-mech").unwrap().name(),
+            "my-registered-mech"
+        );
         for w in [Workload::LrMnist, Workload::CnnMnist, Workload::RnnShakespeare] {
             assert_eq!(Workload::parse(w.model_name()).unwrap(), w);
         }

@@ -1,0 +1,160 @@
+//! The [`Aggregator`] trait — the pluggable server-side combination rule.
+//!
+//! The seed hard-coded mean aggregation inside `Server::aggregate_and_apply`;
+//! this seam makes the rule swappable: [`MeanAggregator`] reproduces the old
+//! numerics bit-for-bit (proven by `tests/compressor_contract.rs`), and
+//! [`WeightedBySamples`] implements FedAvg-style sample-count weighting for
+//! non-IID shards. New rules (trimmed mean, median, momentum servers, ...)
+//! plug in via [`crate::coordinator::ExperimentBuilder::aggregator`] or a
+//! registered mechanism preset — see DESIGN.md §"Extension points".
+
+use crate::compression::LgcUpdate;
+
+/// Server-side combination rule for one round's uploads.
+///
+/// `aggregate` must *fully overwrite* `out` with the descent direction; the
+/// server then applies `params -= out`. Implementations may keep reusable
+/// state across rounds (buffers, momentum, ...) — one instance lives for the
+/// whole experiment.
+pub trait Aggregator: Send {
+    /// Short human-readable name for logs and registry listings.
+    fn name(&self) -> String;
+
+    /// Combine `uploads` (each with `dim == out.len()`) into `out`.
+    fn aggregate(&mut self, uploads: &[&LgcUpdate], out: &mut [f32]);
+
+    /// Optional per-round side channel: the experiment announces one weight
+    /// per upload (same order as the `uploads` slice of the following
+    /// `aggregate` call), e.g. local sample counts. Rules that don't weight
+    /// ignore it.
+    fn set_round_weights(&mut self, _weights: &[f64]) {}
+}
+
+/// Uniform mean of the decoded updates:
+/// `w̄^{t+1} = w̄^{t} − (1/M) Σ_m g_m` (Alg. 1 line 21) — the seed's exact
+/// behavior, preserved bit-for-bit.
+#[derive(Clone, Debug, Default)]
+pub struct MeanAggregator;
+
+impl Aggregator for MeanAggregator {
+    fn name(&self) -> String {
+        "mean".to_string()
+    }
+
+    fn aggregate(&mut self, uploads: &[&LgcUpdate], out: &mut [f32]) {
+        out.iter_mut().for_each(|x| *x = 0.0);
+        let scale = 1.0 / uploads.len() as f32;
+        for upd in uploads {
+            upd.add_into(out, scale);
+        }
+    }
+}
+
+/// Sample-count-weighted mean (McMahan et al. 2017): upload `m` contributes
+/// with weight `n_m / Σ n`. Falls back to the uniform mean when no (or
+/// mismatched) weights were announced for the round, so it degrades to
+/// [`MeanAggregator`] rather than misweighting.
+#[derive(Clone, Debug, Default)]
+pub struct WeightedBySamples {
+    round_weights: Vec<f64>,
+}
+
+impl WeightedBySamples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Aggregator for WeightedBySamples {
+    fn name(&self) -> String {
+        "weighted-by-samples".to_string()
+    }
+
+    fn set_round_weights(&mut self, weights: &[f64]) {
+        self.round_weights.clear();
+        self.round_weights.extend_from_slice(weights);
+    }
+
+    fn aggregate(&mut self, uploads: &[&LgcUpdate], out: &mut [f32]) {
+        out.iter_mut().for_each(|x| *x = 0.0);
+        let total: f64 = self.round_weights.iter().sum();
+        let usable = self.round_weights.len() == uploads.len()
+            && total > 0.0
+            && self.round_weights.iter().all(|&w| w >= 0.0 && w.is_finite());
+        if usable {
+            for (upd, &w) in uploads.iter().zip(&self.round_weights) {
+                upd.add_into(out, (w / total) as f32);
+            }
+        } else {
+            let scale = 1.0 / uploads.len() as f32;
+            for upd in uploads {
+                upd.add_into(out, scale);
+            }
+        }
+        // Weights are strictly per-round: consume them so a missing
+        // announce next round falls back to the mean instead of silently
+        // reusing stale sample counts.
+        self.round_weights.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::{lgc_compress, CompressScratch};
+    use crate::util::Rng;
+
+    fn upd(dim: usize, seed: u64, k: usize) -> LgcUpdate {
+        let mut rng = Rng::new(seed);
+        let u: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        lgc_compress(&u, &[k], &mut CompressScratch::default())
+    }
+
+    #[test]
+    fn mean_matches_hand_rolled() {
+        let a = upd(64, 1, 8);
+        let b = upd(64, 2, 8);
+        let mut out = vec![0f32; 64];
+        MeanAggregator.aggregate(&[&a, &b], &mut out);
+        let da = a.decode();
+        let db = b.decode();
+        for i in 0..64 {
+            assert_eq!(out[i].to_bits(), (0.0f32 + da[i] * 0.5 + db[i] * 0.5).to_bits());
+        }
+    }
+
+    #[test]
+    fn weighted_without_weights_is_mean() {
+        let a = upd(32, 3, 4);
+        let b = upd(32, 4, 4);
+        let mut w_out = vec![0f32; 32];
+        let mut m_out = vec![0f32; 32];
+        WeightedBySamples::new().aggregate(&[&a, &b], &mut w_out);
+        MeanAggregator.aggregate(&[&a, &b], &mut m_out);
+        assert_eq!(w_out, m_out);
+    }
+
+    #[test]
+    fn weighted_respects_sample_counts() {
+        let a = upd(32, 5, 32);
+        let b = upd(32, 6, 32);
+        let mut agg = WeightedBySamples::new();
+        agg.set_round_weights(&[300.0, 100.0]);
+        let mut out = vec![0f32; 32];
+        agg.aggregate(&[&a, &b], &mut out);
+        let da = a.decode();
+        let db = b.decode();
+        for i in 0..32 {
+            let expect = da[i] * 0.75 + db[i] * 0.25;
+            assert!((out[i] - expect).abs() < 1e-6, "at {i}: {} vs {expect}", out[i]);
+        }
+    }
+
+    #[test]
+    fn aggregate_overwrites_stale_out() {
+        let a = upd(16, 7, 4);
+        let mut out = vec![999.0f32; 16];
+        MeanAggregator.aggregate(&[&a], &mut out);
+        assert_eq!(out, a.decode());
+    }
+}

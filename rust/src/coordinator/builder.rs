@@ -1,0 +1,299 @@
+//! [`ExperimentBuilder`] — assemble an [`Experiment`] from a config, a
+//! trainer, and the three pluggable seams (compressor / aggregator /
+//! policy). Unset seams resolve through the [`MechanismRegistry`] preset
+//! named by `cfg.mechanism`; explicit builder calls win over the preset.
+//!
+//! ```no_run
+//! use lgc::config::ExperimentConfig;
+//! use lgc::coordinator::{ExperimentBuilder, NativeLrTrainer};
+//!
+//! let cfg = ExperimentConfig { use_runtime: false, ..Default::default() };
+//! let mut trainer = NativeLrTrainer::new(&cfg);
+//! let mut exp = ExperimentBuilder::new(cfg)
+//!     .trainer(&trainer)
+//!     .build()
+//!     .expect("build experiment");
+//! let log = exp.run(&mut trainer).unwrap();
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::aggregator::Aggregator;
+use super::device::Device;
+use super::experiment::Experiment;
+use super::policy::RoundPolicy;
+use super::registry::{
+    AggregatorFactory, BuildCtx, CompressorFactory, MechanismRegistry, PolicyFactory,
+};
+use super::server::Server;
+use super::trainer::LocalTrainer;
+use crate::channels::DeviceChannels;
+use crate::compression::{Compressor, LgcUpdate};
+use crate::config::ExperimentConfig;
+use crate::drl::DeviceAgent;
+use crate::resources::{ComputeCostModel, ResourceMeter};
+use crate::util::Rng;
+
+/// Builder for [`Experiment`] (see the module docs for the flow).
+pub struct ExperimentBuilder<'a> {
+    cfg: ExperimentConfig,
+    registry: MechanismRegistry,
+    trainer: Option<&'a dyn LocalTrainer>,
+    compressor: Option<CompressorFactory>,
+    aggregator: Option<AggregatorFactory>,
+    policy: Option<PolicyFactory>,
+    sync_gaps: Option<Vec<usize>>,
+}
+
+impl<'a> ExperimentBuilder<'a> {
+    pub fn new(cfg: ExperimentConfig) -> Self {
+        ExperimentBuilder {
+            cfg,
+            registry: MechanismRegistry::builtin(),
+            trainer: None,
+            compressor: None,
+            aggregator: None,
+            policy: None,
+            sync_gaps: None,
+        }
+    }
+
+    /// Swap the mechanism registry (e.g. after registering custom presets).
+    pub fn registry(mut self, registry: MechanismRegistry) -> Self {
+        self.registry = registry;
+        self
+    }
+
+    /// The local-training backend. Required before [`ExperimentBuilder::build`].
+    pub fn trainer(mut self, trainer: &'a dyn LocalTrainer) -> Self {
+        self.trainer = Some(trainer);
+        self
+    }
+
+    /// Override the per-device compressor factory (wins over the preset).
+    pub fn compressor<F>(mut self, factory: F) -> Self
+    where
+        F: Fn(&BuildCtx, usize) -> Box<dyn Compressor> + Send + Sync + 'static,
+    {
+        self.compressor = Some(Arc::new(factory));
+        self
+    }
+
+    /// Override the server aggregation rule (wins over the preset).
+    pub fn aggregator<F>(mut self, factory: F) -> Self
+    where
+        F: Fn(&BuildCtx) -> Box<dyn Aggregator> + Send + Sync + 'static,
+    {
+        self.aggregator = Some(Arc::new(factory));
+        self
+    }
+
+    /// Override the round policy (wins over the preset).
+    pub fn policy<F>(mut self, factory: F) -> Self
+    where
+        F: Fn(&BuildCtx) -> Box<dyn RoundPolicy> + Send + Sync + 'static,
+    {
+        self.policy = Some(Arc::new(factory));
+        self
+    }
+
+    /// Asynchronous sync sets: device m syncs every `gaps[m]` rounds
+    /// (each in `[1, h_max]`, the Alg. 1 gap bound).
+    pub fn sync_gaps(mut self, gaps: Vec<usize>) -> Self {
+        self.sync_gaps = Some(gaps);
+        self
+    }
+
+    pub fn build(self) -> Result<Experiment> {
+        let cfg = self.cfg;
+        cfg.validate().map_err(|e| anyhow!("invalid config: {e}"))?;
+        let trainer = self
+            .trainer
+            .ok_or_else(|| anyhow!("ExperimentBuilder needs a trainer (builder.trainer(&t))"))?;
+
+        // Resolve the three seams: explicit override, else registry preset.
+        let preset = self.registry.get(cfg.mechanism.name());
+        let need_preset =
+            self.compressor.is_none() || self.aggregator.is_none() || self.policy.is_none();
+        if need_preset && preset.is_none() {
+            return Err(anyhow!(
+                "unknown mechanism `{}` — registered: {}",
+                cfg.mechanism.name(),
+                self.registry.names().join(", ")
+            ));
+        }
+        let compressor_f = self
+            .compressor
+            .unwrap_or_else(|| preset.unwrap().compressor.clone());
+        let aggregator_f = self
+            .aggregator
+            .unwrap_or_else(|| preset.unwrap().aggregator.clone());
+        let policy_f = self.policy.unwrap_or_else(|| preset.unwrap().policy.clone());
+
+        let rng = Rng::new(cfg.seed);
+        let init = trainer.init_params();
+        let nparams = trainer.nparams();
+        let compute = ComputeCostModel::for_params(nparams);
+        let static_ks: Vec<usize> = cfg
+            .layer_fracs
+            .iter()
+            .map(|&f| ((f * nparams as f64).round() as usize).max(1))
+            .collect();
+        // DRL action space: up to 2x the static total traffic, floor of 64.
+        let d_total = (2 * static_ks.iter().sum::<usize>()).min(nparams);
+        let d_min = 64.min(nparams);
+
+        let ctx = BuildCtx { cfg: &cfg, nparams, static_ks: &static_ks, rng: &rng };
+        let policy = policy_f(&ctx);
+        let devices: Vec<Device> = (0..cfg.devices)
+            .map(|id| {
+                Device::new(
+                    id,
+                    init.clone(),
+                    compressor_f(&ctx, id),
+                    DeviceChannels::new(&cfg.channel_types, &rng, id),
+                    ResourceMeter::new(cfg.energy_budget, cfg.money_budget),
+                    compute,
+                )
+            })
+            .collect();
+        let agents: Vec<Option<DeviceAgent>> = (0..cfg.devices)
+            .map(|id| {
+                if policy.needs_agents() {
+                    Some(DeviceAgent::new(
+                        cfg.channel_types.len(),
+                        cfg.h_max,
+                        d_total,
+                        d_min,
+                        cfg.drl.clone(),
+                        rng.fork(0xD_00 + id as u64),
+                    ))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let server = Server::with_aggregator(init, aggregator_f(&ctx));
+
+        let sync_gap = match self.sync_gaps {
+            Some(gaps) => {
+                super::experiment::validate_sync_gaps(&gaps, cfg.devices, cfg.h_max)
+                    .map_err(|e| anyhow!(e))?;
+                gaps
+            }
+            None => vec![1; cfg.devices],
+        };
+
+        let m = cfg.devices;
+        Ok(Experiment {
+            server,
+            devices,
+            agents,
+            policy,
+            sync_gap,
+            rng,
+            total_time_s: 0.0,
+            d_total,
+            d_min,
+            recv_bufs: (0..m).map(|_| LgcUpdate { dim: 0, layers: Vec::new() }).collect(),
+            received: vec![false; m],
+            cfg,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::DenseNoop;
+    use crate::config::{Mechanism, Workload};
+    use crate::coordinator::aggregator::WeightedBySamples;
+    use crate::coordinator::trainer::NativeLrTrainer;
+
+    fn cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            mechanism: Mechanism::LgcStatic,
+            workload: Workload::LrMnist,
+            rounds: 4,
+            devices: 2,
+            samples_per_device: 128,
+            eval_samples: 128,
+            eval_every: 2,
+            h_fixed: 2,
+            h_max: 4,
+            use_runtime: false,
+            ..ExperimentConfig::default()
+        }
+    }
+
+    #[test]
+    fn builds_from_registry_preset() {
+        let c = cfg();
+        let trainer = NativeLrTrainer::new(&c);
+        let exp = ExperimentBuilder::new(c).trainer(&trainer).build().unwrap();
+        assert_eq!(exp.devices.len(), 2);
+        assert_eq!(exp.server.aggregator_name(), "mean");
+        assert!(exp.agents.iter().all(|a| a.is_none()));
+    }
+
+    #[test]
+    fn ddpg_preset_creates_agents() {
+        let mut c = cfg();
+        c.mechanism = Mechanism::LgcDrl;
+        let trainer = NativeLrTrainer::new(&c);
+        let exp = ExperimentBuilder::new(c).trainer(&trainer).build().unwrap();
+        assert!(exp.agents.iter().all(|a| a.is_some()));
+    }
+
+    #[test]
+    fn unknown_mechanism_lists_registered() {
+        let mut c = cfg();
+        c.mechanism = Mechanism::custom("nope");
+        let trainer = NativeLrTrainer::new(&c);
+        let err = ExperimentBuilder::new(c).trainer(&trainer).build().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("nope") && msg.contains("lgc-static"), "{msg}");
+    }
+
+    #[test]
+    fn explicit_seams_override_preset() {
+        let c = cfg();
+        let trainer = NativeLrTrainer::new(&c);
+        let mut exp = ExperimentBuilder::new(c)
+            .trainer(&trainer)
+            .compressor(|_ctx, _id| Box::new(DenseNoop))
+            .aggregator(|_ctx| Box::new(WeightedBySamples::new()))
+            .build()
+            .unwrap();
+        assert_eq!(exp.server.aggregator_name(), "weighted-by-samples");
+        assert_eq!(exp.devices[0].compressor_name(), "dense");
+        // and it still trains
+        let mut trainer2 = NativeLrTrainer::new(&exp.cfg);
+        let log = exp.run(&mut trainer2).unwrap();
+        assert_eq!(log.records.len(), 4);
+    }
+
+    #[test]
+    fn missing_trainer_is_an_error() {
+        let err = ExperimentBuilder::new(cfg()).build().unwrap_err();
+        assert!(format!("{err}").contains("trainer"));
+    }
+
+    #[test]
+    fn custom_compressor_override_runs() {
+        // The DESIGN.md worked example: a dense reference run on the
+        // lgc-static policy, via one builder call.
+        let c = cfg();
+        let trainer = NativeLrTrainer::new(&c);
+        let mut exp = ExperimentBuilder::new(c)
+            .trainer(&trainer)
+            .compressor(|_ctx, _id| Box::new(DenseNoop))
+            .build()
+            .unwrap();
+        let mut trainer2 = NativeLrTrainer::new(&exp.cfg);
+        let log = exp.run(&mut trainer2).unwrap();
+        assert_eq!(log.records.len(), 4);
+    }
+}

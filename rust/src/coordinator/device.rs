@@ -1,12 +1,17 @@
 //! Edge-device state and the per-round device procedure (Alg. 1, lines
-//! 4–17): local SGD, error-compensated layered compression, and the
+//! 4–17): local SGD, pluggable compression of the net progress, and the
 //! multi-channel upload.
+//!
+//! The device is mechanism-agnostic: *what* gets compressed and charged is
+//! decided entirely by its [`Compressor`] (error feedback included, via the
+//! [`crate::compression::ErrorCompensated`] wrapper) and by the
+//! [`crate::channels::AllocationPlan`] the round policy hands in.
 
 use anyhow::Result;
 
 use super::trainer::LocalTrainer;
 use crate::channels::{AllocationPlan, DeviceChannels, TransferCost};
-use crate::compression::{lgc_compress, CompressScratch, ErrorFeedback, LgcUpdate};
+use crate::compression::{CompressScratch, Compressor, ErrorFeedback, LayerBudget, LgcUpdate};
 use crate::resources::{ComputeCostModel, ResourceMeter};
 
 /// What a device hands the server after its round.
@@ -35,7 +40,8 @@ pub struct Device {
     pub params_hat: Vec<f32>,
     /// w_m — snapshot at the last synchronization.
     pub params_sync: Vec<f32>,
-    pub error: ErrorFeedback,
+    /// The pluggable compression operator (owns any error-feedback memory).
+    pub compressor: Box<dyn Compressor>,
     pub channels: DeviceChannels,
     pub meter: ResourceMeter,
     pub compute: ComputeCostModel,
@@ -44,7 +50,6 @@ pub struct Device {
     /// Last round's loss improvement δ (DRL state feature).
     pub last_delta: f64,
     scratch: CompressScratch,
-    u_buf: Vec<f32>,
     progress_buf: Vec<f32>,
 }
 
@@ -52,25 +57,45 @@ impl Device {
     pub fn new(
         id: usize,
         init_params: Vec<f32>,
+        compressor: Box<dyn Compressor>,
         channels: DeviceChannels,
         meter: ResourceMeter,
         compute: ComputeCostModel,
     ) -> Self {
-        let dim = init_params.len();
         Device {
             id,
             params_hat: init_params.clone(),
             params_sync: init_params,
-            error: ErrorFeedback::new(dim),
+            compressor,
             channels,
             meter,
             compute,
             prev_loss: f64::NAN,
             last_delta: 0.0,
             scratch: CompressScratch::default(),
-            u_buf: Vec::new(),
             progress_buf: Vec::new(),
         }
+    }
+
+    /// The compressor's display name (for logs/tests).
+    pub fn compressor_name(&self) -> String {
+        self.compressor.name()
+    }
+
+    /// Whether this device's updates travel in the sparse index+value wire
+    /// format (and should be round-tripped through it by the server).
+    pub fn sparse_wire(&self) -> bool {
+        self.compressor.sparse_wire()
+    }
+
+    /// The compressor's error-feedback memory, if it keeps one.
+    pub fn error_memory(&self) -> Option<&ErrorFeedback> {
+        self.compressor.error_memory()
+    }
+
+    /// Reset the compressor's cross-round state (new episode).
+    pub fn reset_compressor(&mut self) {
+        self.compressor.reset();
     }
 
     /// Run `h` local SGD steps (Alg. 1 lines 5–7). Returns mean step loss.
@@ -87,12 +112,16 @@ impl Device {
         Ok(acc / h.max(1) as f64)
     }
 
-    /// Compress the error-compensated net progress into layers (lines 8–11)
-    /// and charge the channels for the upload (line 10). `plan` maps layer
-    /// budgets to channels; layer c rides channel `plan.layer_channels()[c]`.
-    pub fn compress_and_upload(&mut self, plan: &AllocationPlan) -> (LgcUpdate, f64, Vec<TransferCost>) {
+    /// Net local progress `w_m − ŵ^{t+1/2}` followed by the compressor
+    /// (which applies its own error compensation, lines 8–11). An all-silent
+    /// plan (every channel at zero) means "nothing to upload this round":
+    /// the compressor is not invoked and an empty update ships for free —
+    /// local progress simply keeps accumulating until the next real upload.
+    fn compress_progress(&mut self, plan: &AllocationPlan) -> LgcUpdate {
         let dim = self.params_hat.len();
-        // progress = w_m − ŵ^{t+1/2}
+        if plan.layer_channels().is_empty() {
+            return LgcUpdate { dim, layers: Vec::new() };
+        }
         self.progress_buf.clear();
         self.progress_buf.extend(
             self.params_sync
@@ -100,32 +129,44 @@ impl Device {
                 .zip(&self.params_hat)
                 .map(|(&w, &wh)| w - wh),
         );
-        // u = e + progress (line 8)
-        let (error, progress_buf, u_buf) = (&self.error, &self.progress_buf, &mut self.u_buf);
-        error.compensate(progress_buf, u_buf);
-        // g = LGC(u) (line 9)
-        let ks = plan.layer_budgets();
-        let ks: Vec<usize> = ks.iter().map(|&k| k.min(dim)).collect();
-        let total: usize = ks.iter().sum();
-        let ks = if total > dim {
-            // Rescale proportionally if the plan exceeds P.
-            let mut scaled: Vec<usize> =
-                ks.iter().map(|&k| (k * dim) / total.max(1)).collect();
-            if scaled.iter().sum::<usize>() == 0 {
-                scaled[0] = 1;
-            }
-            scaled
-        } else {
-            ks
-        };
-        let update = lgc_compress(&self.u_buf, &ks, &mut self.scratch);
-        // e' = u − g (line 11)
-        self.error.absorb(&self.u_buf, &update);
-        // Upload layer c on its assigned channel, others silent.
+        let budget = LayerBudget::from_plan(plan, dim);
+        self.compressor
+            .compress(&self.progress_buf, &budget, &mut self.scratch)
+    }
+
+    /// Per-channel wire sizes of `update` under `plan` (layer `c` rides
+    /// channel `plan.layer_channels()[c]`), using the compressor's byte
+    /// accounting. The mapping is positional: a compressor that emits fewer
+    /// layers than active channels uses only the first ones (e.g. the dense
+    /// baseline rides a single channel regardless of the plan, exactly like
+    /// the classic FedAvg upload). Emitting *more* layers than nonzero plan
+    /// channels is a hard error — extra layers would otherwise travel
+    /// uncharged (and be silently dropped by the lossy path).
+    fn upload_sizes(&self, update: &LgcUpdate, plan: &AllocationPlan) -> Vec<u64> {
+        let channels = plan.layer_channels();
+        assert!(
+            update.layers.len() <= channels.len(),
+            "compressor `{}` emitted {} layers for a plan with {} active channels",
+            self.compressor.name(),
+            update.layers.len(),
+            channels.len()
+        );
         let mut sizes = vec![0u64; self.channels.len()];
-        for (layer, &ch) in update.layers.iter().zip(&plan.layer_channels()) {
-            sizes[ch] += layer.wire_bytes();
+        for (layer, &ch) in update.layers.iter().zip(&channels) {
+            sizes[ch] += self.compressor.layer_wire_bytes(layer, update.dim);
         }
+        sizes
+    }
+
+    /// Compress the net progress into layers (lines 8–11) and charge the
+    /// channels for the upload (line 10). `plan` maps layer budgets to
+    /// channels; layer c rides channel `plan.layer_channels()[c]`.
+    pub fn compress_and_upload(
+        &mut self,
+        plan: &AllocationPlan,
+    ) -> (LgcUpdate, f64, Vec<TransferCost>) {
+        let update = self.compress_progress(plan);
+        let sizes = self.upload_sizes(&update, plan);
         let (wall, costs) = self.channels.parallel_upload(&sizes);
         (update, wall, costs)
     }
@@ -135,30 +176,15 @@ impl Device {
     /// memory** (the device learns of the loss via the missing server ACK),
     /// so gradient mass is never destroyed — only delayed. Returns the
     /// *delivered* update (what the server sees), the wall time, per-channel
-    /// costs, and the number of lost layers.
+    /// costs, and the number of lost layers. (A compressor without error
+    /// memory simply loses the layer — dense/quantized baselines.)
     pub fn compress_and_upload_lossy(
         &mut self,
         plan: &AllocationPlan,
     ) -> (LgcUpdate, f64, Vec<TransferCost>, usize) {
-        // Encode exactly as the lossless path (shares its rescaling logic).
         let dim = self.params_hat.len();
-        self.progress_buf.clear();
-        self.progress_buf.extend(
-            self.params_sync
-                .iter()
-                .zip(&self.params_hat)
-                .map(|(&w, &wh)| w - wh),
-        );
-        let (error, progress_buf, u_buf) = (&self.error, &self.progress_buf, &mut self.u_buf);
-        error.compensate(progress_buf, u_buf);
-        let ks: Vec<usize> = plan.layer_budgets().iter().map(|&k| k.min(dim)).collect();
-        let update = lgc_compress(&self.u_buf, &ks, &mut self.scratch);
-        self.error.absorb(&self.u_buf, &update);
-
-        let mut sizes = vec![0u64; self.channels.len()];
-        for (layer, &ch) in update.layers.iter().zip(&plan.layer_channels()) {
-            sizes[ch] += layer.wire_bytes();
-        }
+        let update = self.compress_progress(plan);
+        let sizes = self.upload_sizes(&update, plan);
         let (wall, lossy_costs) = self.channels.parallel_upload_lossy(&sizes);
         // Split delivered vs lost layers by their channel's delivery flag.
         let channels = plan.layer_channels();
@@ -168,23 +194,20 @@ impl Device {
             if lossy_costs[ch].1 {
                 delivered.push(layer);
             } else {
-                // Restitute: these coordinates were zeroed by absorb() as if
-                // shipped; put them back so e' + delivered == u exactly.
-                for (&i, &v) in layer.indices.iter().zip(&layer.values) {
-                    self.error.restitute(i as usize, v);
+                // Restitute: the error memory absorbed this layer as if
+                // delivered; add the shipped values back so
+                // e' + delivered == u exactly (correct for both the
+                // zeroing-based and the residual-based absorb).
+                if let Some(err) = self.compressor.error_memory_mut() {
+                    for (&i, &v) in layer.indices.iter().zip(&layer.values) {
+                        err.restitute(i as usize, v);
+                    }
                 }
                 lost += 1;
             }
         }
         let costs = lossy_costs.into_iter().map(|(c, _)| c).collect();
         (LgcUpdate { dim, layers: delivered }, wall, costs, lost)
-    }
-
-    /// Dense upload (FedAvg baseline): the full model on one channel.
-    pub fn dense_upload(&mut self, channel: usize) -> (f64, Vec<TransferCost>) {
-        let mut sizes = vec![0u64; self.channels.len()];
-        sizes[channel] = (self.params_hat.len() * 4) as u64;
-        self.channels.parallel_upload(&sizes)
     }
 
     /// Receive the new global model (Alg. 1 lines 12–13).
@@ -206,6 +229,7 @@ impl Device {
 mod tests {
     use super::*;
     use crate::channels::{allocate_budget, ChannelType};
+    use crate::compression::{ErrorCompensated, LgcTopAB};
     use crate::config::ExperimentConfig;
     use crate::coordinator::trainer::{LocalTrainer, NativeLrTrainer};
     use crate::util::Rng;
@@ -215,6 +239,7 @@ mod tests {
         Device::new(
             0,
             vec![0f32; dim],
+            Box::new(ErrorCompensated::new(LgcTopAB)),
             DeviceChannels::new(
                 &[ChannelType::G5, ChannelType::G4, ChannelType::G3],
                 &rng,
@@ -223,6 +248,10 @@ mod tests {
             ResourceMeter::new(f64::INFINITY, f64::INFINITY),
             ComputeCostModel::for_params(dim),
         )
+    }
+
+    fn error_norm2(dev: &Device) -> f64 {
+        dev.error_memory().expect("EF compressor").norm2()
     }
 
     #[test]
@@ -254,7 +283,7 @@ mod tests {
         dev.local_steps(&mut tr, 2, 0.1).unwrap();
         let plan = allocate_budget(&[0.0, 0.0, 0.0], 200, 50);
         let (_, _, _) = dev.compress_and_upload(&plan);
-        assert!(dev.error.norm2() > 0.0, "memory should hold dropped mass");
+        assert!(error_norm2(&dev) > 0.0, "memory should hold dropped mass");
     }
 
     #[test]
@@ -298,12 +327,13 @@ mod tests {
         let mut saw_loss = false;
         for trial in 0..40 {
             // reset memory each trial so u is identical every time
-            dev.error.reset();
+            dev.reset_compressor();
             let (delivered, _, _, lost) = dev.compress_and_upload_lossy(&plan);
             saw_loss |= lost > 0;
             let dec = delivered.decode();
+            let mem = dev.error_memory().unwrap().memory().to_vec();
             for i in 0..500 {
-                let total = dev.error.memory()[i] + dec[i];
+                let total = mem[i] + dec[i];
                 assert!(
                     (total - u_expected[i]).abs() < 1e-7,
                     "mass not conserved at {i} (trial {trial})"
@@ -315,9 +345,22 @@ mod tests {
 
     #[test]
     fn dense_upload_full_model_bytes() {
-        let mut dev = mk_device(1000);
-        let (_, costs) = dev.dense_upload(0);
+        // The dense (FedAvg) reference is now just the DenseNoop compressor:
+        // one layer, 4 B/param, no index overhead.
+        let rng = Rng::new(2);
+        let mut dev = Device::new(
+            0,
+            vec![0f32; 1000],
+            Box::new(crate::compression::DenseNoop),
+            DeviceChannels::new(&[ChannelType::G5, ChannelType::G4], &rng, 0),
+            ResourceMeter::new(f64::INFINITY, f64::INFINITY),
+            ComputeCostModel::for_params(1000),
+        );
+        let plan = AllocationPlan { counts: vec![1000, 0] };
+        let (update, _, costs) = dev.compress_and_upload(&plan);
+        assert_eq!(update.total_nnz(), 1000);
         assert_eq!(costs[0].bytes, 4000);
         assert_eq!(costs[1].bytes, 0);
+        assert!(!dev.sparse_wire());
     }
 }

@@ -1,114 +1,73 @@
 //! The experiment orchestrator: wires server, devices, channels, budgets,
-//! and (for LGC-DRL) the per-device DDPG controllers into the full training
-//! loop of Algorithm 1, for every mechanism of Sec. 4.1.
+//! and the per-round control policy into the full training loop of
+//! Algorithm 1.
+//!
+//! The round loop is **mechanism-free**: everything mechanism-specific is
+//! carried by the three seams assembled by
+//! [`super::builder::ExperimentBuilder`] —
+//!
+//! - each device's [`crate::compression::Compressor`] (what is uploaded and
+//!   how bytes are accounted),
+//! - the server's [`super::aggregator::Aggregator`] (how uploads combine),
+//! - the experiment's [`super::policy::RoundPolicy`] (per-round `H` and
+//!   layer-to-channel plan, learning from outcomes).
 
 use anyhow::Result;
 
 use super::device::Device;
+use super::policy::RoundPolicy;
 use super::server::Server;
 use super::trainer::LocalTrainer;
-use crate::channels::{AllocationPlan, DeviceChannels};
-use crate::config::{ExperimentConfig, Mechanism};
+use crate::compression::LgcUpdate;
+use crate::config::ExperimentConfig;
 use crate::drl::DeviceAgent;
 use crate::metrics::{RoundRecord, RunLog};
-use crate::resources::{ComputeCostModel, ResourceMeter};
+use crate::resources::ResourceMeter;
 use crate::util::Rng;
 
-/// A full FL experiment (one mechanism, one workload).
+/// A full FL experiment (one mechanism preset, one workload).
 pub struct Experiment {
     pub cfg: ExperimentConfig,
     pub server: Server,
     pub devices: Vec<Device>,
     pub agents: Vec<Option<DeviceAgent>>,
+    /// The per-round control policy (decides H and the allocation plan).
+    pub policy: Box<dyn RoundPolicy>,
     /// Device m synchronizes when `round % sync_gap[m] == 0` (gap(I_m) ≤ H).
     pub sync_gap: Vec<usize>,
-    rng: Rng,
-    total_time_s: f64,
-    /// Per-device static layer budgets (ks) for non-DRL mechanisms.
-    static_ks: Vec<usize>,
-    d_total: usize,
-    d_min: usize,
+    pub(super) rng: Rng,
+    pub(super) total_time_s: f64,
+    pub(super) d_total: usize,
+    pub(super) d_min: usize,
+    /// Reusable per-device decode buffers: the server's wire round-trip
+    /// lands here, so the sparse-wire hot path allocates nothing at steady
+    /// state. (Dense/packed compressors hand over a freshly built update —
+    /// same per-round cost as the seed's FedAvg path.)
+    pub(super) recv_bufs: Vec<LgcUpdate>,
+    /// Which devices delivered an upload this round.
+    pub(super) received: Vec<bool>,
 }
 
 impl Experiment {
+    /// Build with the mechanism preset named by `cfg.mechanism` — a thin
+    /// wrapper over [`super::builder::ExperimentBuilder`]; panics on an
+    /// invalid config or unknown mechanism (use the builder directly for
+    /// recoverable errors or custom seams).
     pub fn new(cfg: ExperimentConfig, trainer: &dyn LocalTrainer) -> Self {
-        let rng = Rng::new(cfg.seed);
-        let init = trainer.init_params();
-        let nparams = trainer.nparams();
-        let compute = ComputeCostModel::for_params(nparams);
-        let devices: Vec<Device> = (0..cfg.devices)
-            .map(|id| {
-                Device::new(
-                    id,
-                    init.clone(),
-                    DeviceChannels::new(&cfg.channel_types, &rng, id),
-                    ResourceMeter::new(cfg.energy_budget, cfg.money_budget),
-                    compute,
-                )
-            })
-            .collect();
-        let static_ks: Vec<usize> = cfg
-            .layer_fracs
-            .iter()
-            .map(|&f| ((f * nparams as f64).round() as usize).max(1))
-            .collect();
-        // DRL action space: up to 2x the static total traffic, floor of 64.
-        let d_total = (2 * static_ks.iter().sum::<usize>()).min(nparams);
-        let d_min = 64.min(nparams);
-        let agents: Vec<Option<DeviceAgent>> = (0..cfg.devices)
-            .map(|id| {
-                if cfg.mechanism == Mechanism::LgcDrl {
-                    Some(DeviceAgent::new(
-                        cfg.channel_types.len(),
-                        cfg.h_max,
-                        d_total,
-                        d_min,
-                        cfg.drl.clone(),
-                        rng.fork(0xD_00 + id as u64),
-                    ))
-                } else {
-                    None
-                }
-            })
-            .collect();
-        Experiment {
-            server: Server::new(init),
-            sync_gap: vec![1; cfg.devices],
-            rng,
-            total_time_s: 0.0,
-            static_ks,
-            d_total,
-            d_min,
-            devices,
-            agents,
-            cfg,
-        }
+        super::builder::ExperimentBuilder::new(cfg)
+            .trainer(trainer)
+            .build()
+            .expect("experiment build failed")
     }
 
     /// Configure asynchronous sync sets I_m: device m syncs every `gap[m]`
-    /// rounds (must be in [1, h_max] to respect gap(I_m) ≤ H).
+    /// rounds (must be in [1, h_max] to respect gap(I_m) ≤ H). Panicking
+    /// convenience over the same validation the builder reports as an error.
     pub fn with_sync_gaps(mut self, gaps: Vec<usize>) -> Self {
-        assert_eq!(gaps.len(), self.devices.len());
-        assert!(gaps.iter().all(|&g| g >= 1 && g <= self.cfg.h_max));
+        validate_sync_gaps(&gaps, self.devices.len(), self.cfg.h_max)
+            .unwrap_or_else(|e| panic!("{e}"));
         self.sync_gap = gaps;
         self
-    }
-
-    /// The fixed layer-to-channel plan for non-DRL LGC: layer c on channel c.
-    fn static_plan(&self) -> AllocationPlan {
-        let mut counts = vec![0usize; self.cfg.channel_types.len()];
-        for (c, &k) in self.static_ks.iter().enumerate() {
-            counts[c] = k;
-        }
-        AllocationPlan { counts }
-    }
-
-    /// Single-channel Top-k plan (ablation baseline): everything on the
-    /// currently fastest channel.
-    fn topk_plan(&self, device: usize) -> AllocationPlan {
-        let mut counts = vec![0usize; self.cfg.channel_types.len()];
-        counts[self.devices[device].channels.fastest()] = self.static_ks.iter().sum();
-        AllocationPlan { counts }
     }
 
     /// Run the full experiment; returns the per-round log.
@@ -149,14 +108,11 @@ impl Experiment {
             .collect();
 
         // 3. Per-device local work + upload.
-        let mut uploads: Vec<Option<crate::compression::LgcUpdate>> = vec![None; m];
+        self.received.iter_mut().for_each(|r| *r = false);
         let mut round_wall = 0.0f64;
         let mut loss_sum = 0.0f64;
         let mut loss_n = 0usize;
-        let mut energy_round = 0.0f64;
-        let mut money_round = 0.0f64;
         let mut bytes_up = 0u64;
-        let mut drl_pre: Vec<Option<(Vec<f32>, usize)>> = vec![None; m]; // (state, H)
         let mut reward_acc = 0.0f64;
         let mut reward_n = 0usize;
 
@@ -164,61 +120,40 @@ impl Experiment {
             if !active[i] {
                 continue;
             }
-            // --- decide (H, plan) --------------------------------------
-            let (h, plan, dense) = match self.cfg.mechanism {
-                Mechanism::FedAvg => (self.cfg.h_fixed, None, true),
-                Mechanism::LgcStatic => (self.cfg.h_fixed, Some(self.static_plan()), false),
-                Mechanism::TopK => (self.cfg.h_fixed, Some(self.topk_plan(i)), false),
-                Mechanism::LgcDrl => {
-                    let agent = self.agents[i].as_mut().unwrap();
-                    let dev = &self.devices[i];
-                    let state = agent.observe_state(&dev.meter, &dev.channels, dev.last_delta);
-                    let decision = agent.decide(&state, true);
-                    drl_pre[i] = Some((state, decision.local_steps));
-                    (decision.local_steps, Some(decision.plan), false)
-                }
-            };
+            // --- decide (H, plan): the policy seam ----------------------
+            let (h, plan) =
+                self.policy
+                    .decide(round, &self.devices[i], self.agents[i].as_mut());
 
-            let dev = &mut self.devices[i];
             // --- local computation (lines 5-7) --------------------------
+            let dev = &mut self.devices[i];
             let loss = dev.local_steps(trainer, h, self.cfg.lr)?;
             loss_sum += loss;
             loss_n += 1;
             let (comp_j, comp_s) = dev.compute_cost(h);
 
-            // --- communication (lines 8-11) ------------------------------
+            // --- communication (lines 8-11): the compressor seam --------
             let (mut wall, comm_j, comm_money, bytes) = if syncs[i] {
-                if dense {
-                    // FedAvg: full dense model on the fastest channel.
-                    let ch = dev.channels.fastest();
-                    let (wall, costs) = dev.dense_upload(ch);
-                    // The "update" is w_m − ŵ_m dense.
-                    let g: Vec<f32> = dev
-                        .params_sync
-                        .iter()
-                        .zip(&dev.params_hat)
-                        .map(|(&w, &wh)| w - wh)
-                        .collect();
-                    let dim = g.len();
-                    let layer = crate::compression::Layer {
-                        indices: (0..dim as u32).collect(),
-                        values: g,
-                    };
-                    uploads[i] = Some(crate::compression::LgcUpdate { dim, layers: vec![layer] });
-                    let (j, mo, by) = costs.iter().fold((0.0, 0.0, 0u64), |acc, c| {
-                        (acc.0 + c.energy_j, acc.1 + c.money, acc.2 + c.bytes)
-                    });
-                    (wall, j, mo, by)
-                } else {
-                    let plan = plan.expect("sparse mechanisms have a plan");
-                    let (update, wall, costs) = dev.compress_and_upload(&plan);
-                    // Round-trip through the wire format, as the server sees it.
-                    uploads[i] = Some(Server::decode_from_wire(&update)?);
-                    let (j, mo, by) = costs.iter().fold((0.0, 0.0, 0u64), |acc, c| {
-                        (acc.0 + c.energy_j, acc.1 + c.money, acc.2 + c.bytes)
-                    });
-                    (wall, j, mo, by)
+                let (update, wall, costs) = dev.compress_and_upload(&plan);
+                // An empty update (all-silent plan) means the device did
+                // not upload: it must not be treated as received — and must
+                // not be synced below — or its accumulated local progress
+                // would be silently discarded.
+                if !update.layers.is_empty() {
+                    if dev.sparse_wire() {
+                        // Round-trip through the wire format, as the server
+                        // sees it, into this device's reusable buffer.
+                        self.server
+                            .decode_from_wire_into(&update, &mut self.recv_bufs[i])?;
+                    } else {
+                        self.recv_bufs[i] = update;
+                    }
+                    self.received[i] = true;
                 }
+                let (j, mo, by) = costs.iter().fold((0.0, 0.0, 0u64), |acc, c| {
+                    (acc.0 + c.energy_j, acc.1 + c.money, acc.2 + c.bytes)
+                });
+                (wall, j, mo, by)
             } else {
                 (0.0, 0.0, 0.0, 0) // no sync this round (Alg. 1 lines 14-17)
             };
@@ -228,38 +163,38 @@ impl Experiment {
             if dev.prev_loss.is_nan() {
                 dev.prev_loss = loss;
             }
-            energy_round += comp_j + comm_j;
-            money_round += comm_money;
             bytes_up += bytes;
 
             // δ = loss improvement this round (Eq. 15a, sign flipped so
-            // positive = better), feeding the Eq. 16 reward.
+            // positive = better), feeding the policy's learning signal.
             let delta = dev.prev_loss - loss;
             dev.prev_loss = loss;
             dev.last_delta = delta;
-            if let Some((_, _h)) = &drl_pre[i] {
-                let agent = self.agents[i].as_mut().unwrap();
-                let eps = [
-                    dev.meter.last_round[0].total().max(1e-9),
-                    dev.meter.last_round[1].total().max(1e-9),
-                ];
-                let next_state = agent.observe_state(&dev.meter, &dev.channels, delta);
-                let done = round + 1 == self.cfg.rounds;
-                let (r, _) = agent.feedback(delta, &eps, next_state, done);
+            let done = round + 1 == self.cfg.rounds;
+            if let Some(r) =
+                self.policy
+                    .observe(&self.devices[i], self.agents[i].as_mut(), delta, done)
+            {
                 reward_acc += r;
                 reward_n += 1;
             }
         }
 
-        // 4. Server aggregation + broadcast (lines 18-22).
-        let received: Vec<&crate::compression::LgcUpdate> =
-            uploads.iter().flatten().collect();
-        if !received.is_empty() {
-            self.server.aggregate_and_apply(&received);
-            for i in 0..m {
-                if syncs[i] && uploads[i].is_some() {
-                    self.devices[i].sync(&self.server.params);
-                }
+        // 4. Server aggregation + broadcast (lines 18-22): the aggregator
+        // seam. Weights announce local sample counts for rules that use
+        // them (e.g. WeightedBySamples); the default mean ignores them.
+        let received_idx: Vec<usize> = (0..m).filter(|&i| self.received[i]).collect();
+        if !received_idx.is_empty() {
+            let weights: Vec<f64> = received_idx
+                .iter()
+                .map(|&i| trainer.device_samples(i) as f64)
+                .collect();
+            let uploads: Vec<&LgcUpdate> =
+                received_idx.iter().map(|&i| &self.recv_bufs[i]).collect();
+            self.server.set_round_weights(&weights);
+            self.server.aggregate_and_apply(&uploads);
+            for &i in &received_idx {
+                self.devices[i].sync(&self.server.params);
             }
         }
 
@@ -275,7 +210,6 @@ impl Experiment {
         let (tot_energy, tot_money) = self.devices.iter().fold((0.0, 0.0), |acc, d| {
             (acc.0 + d.meter.energy_used, acc.1 + d.meter.money_used)
         });
-        let _ = (energy_round, money_round);
         Ok(Some(RoundRecord {
             round,
             train_loss: loss_sum / loss_n.max(1) as f64,
@@ -299,10 +233,10 @@ impl Experiment {
     /// error memories, meters and reward trackers restart).
     pub fn reset_episode(&mut self, trainer: &dyn LocalTrainer) {
         let init = trainer.init_params();
-        self.server = Server::new(init.clone());
+        self.server.reset_model(init.clone());
         for dev in &mut self.devices {
             dev.sync(&init);
-            dev.error.reset();
+            dev.reset_compressor();
             dev.prev_loss = f64::NAN;
             dev.last_delta = 0.0;
             dev.meter = ResourceMeter::new(self.cfg.energy_budget, self.cfg.money_budget);
@@ -322,6 +256,22 @@ impl Experiment {
     pub fn d_bounds(&self) -> (usize, usize) {
         (self.d_min, self.d_total)
     }
+}
+
+/// The single source of truth for the Alg. 1 sync-gap bounds, shared by
+/// [`Experiment::with_sync_gaps`] and the builder.
+pub(super) fn validate_sync_gaps(
+    gaps: &[usize],
+    devices: usize,
+    h_max: usize,
+) -> Result<(), String> {
+    if gaps.len() != devices {
+        return Err(format!("sync_gaps has {} entries for {devices} devices", gaps.len()));
+    }
+    if !gaps.iter().all(|&g| g >= 1 && g <= h_max) {
+        return Err(format!("sync gaps must lie in [1, h_max={h_max}]"));
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -392,6 +342,20 @@ mod tests {
     }
 
     #[test]
+    fn rand_k_baseline_runs() {
+        let log = run(Mechanism::RandK, 20);
+        assert_eq!(log.records.len(), 20);
+        assert!(log.final_acc() > 0.3, "acc={}", log.final_acc());
+    }
+
+    #[test]
+    fn qsgd_baseline_runs() {
+        let log = run(Mechanism::Qsgd, 12);
+        assert_eq!(log.records.len(), 12);
+        assert!(log.final_acc() > 0.3, "acc={}", log.final_acc());
+    }
+
+    #[test]
     fn energy_and_money_monotone() {
         let log = run(Mechanism::LgcStatic, 10);
         for w in log.records.windows(2) {
@@ -446,5 +410,37 @@ mod tests {
             assert_eq!(x.train_loss, y.train_loss);
             assert_eq!(x.bytes_up, y.bytes_up);
         }
+    }
+
+    #[test]
+    fn round_loop_has_no_mechanism_branching() {
+        // Smoke-check the seam design: the same Experiment type runs a
+        // custom mechanism that exists only in the registry.
+        use crate::compression::{DenseNoop, ErrorCompensated, LgcTopAB};
+        use crate::coordinator::builder::ExperimentBuilder;
+        let mut c = cfg(Mechanism::custom("half-dense"), 6);
+        c.devices = 2;
+        let trainer = NativeLrTrainer::new(&c);
+        let mut exp = ExperimentBuilder::new(c)
+            .trainer(&trainer)
+            .compressor(|_ctx, id| {
+                if id % 2 == 0 {
+                    Box::new(DenseNoop)
+                } else {
+                    Box::new(ErrorCompensated::new(LgcTopAB))
+                }
+            })
+            .aggregator(|_ctx| Box::new(crate::coordinator::aggregator::MeanAggregator))
+            .policy(|ctx| {
+                Box::new(crate::coordinator::policy::StaticLayered {
+                    h: ctx.cfg.h_fixed,
+                    counts: vec![64; ctx.cfg.channel_types.len()],
+                })
+            })
+            .build()
+            .unwrap();
+        let mut trainer2 = NativeLrTrainer::new(&exp.cfg);
+        let log = exp.run(&mut trainer2).unwrap();
+        assert_eq!(log.records.len(), 6);
     }
 }

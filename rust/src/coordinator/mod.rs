@@ -1,17 +1,31 @@
-//! L3 coordinator — the paper's system contribution.
+//! L3 coordinator — the paper's system contribution, organized around three
+//! pluggable seams (see DESIGN.md §"Extension points"):
 //!
-//! - [`server`]: the FL edge server (aggregate + broadcast, Alg. 1 18–22)
-//! - [`device`]: the edge device round procedure (Alg. 1 4–17)
+//! - [`server`]: the FL edge server; aggregation runs through the
+//!   [`aggregator::Aggregator`] trait (Alg. 1 lines 18–22)
+//! - [`device`]: the edge device round procedure; compression runs through
+//!   the [`crate::compression::Compressor`] trait (Alg. 1 lines 4–17)
+//! - [`policy`]: per-round control — `H` and the layer-to-channel plan
+//! - [`registry`]: string-keyed mechanism presets
+//!   (compressor × aggregator × policy)
+//! - [`builder`]: [`builder::ExperimentBuilder`], the assembly point
 //! - [`trainer`]: local-training backends (PJRT artifacts / native LR)
-//! - [`experiment`]: the full orchestrated loop for every mechanism
-//!   (FedAvg, LGC-static, LGC-DRL, single-channel Top-k)
+//! - [`experiment`]: the mechanism-free orchestrated loop
 
+pub mod aggregator;
+pub mod builder;
 pub mod device;
 pub mod experiment;
+pub mod policy;
+pub mod registry;
 pub mod server;
 pub mod trainer;
 
+pub use aggregator::{Aggregator, MeanAggregator, WeightedBySamples};
+pub use builder::ExperimentBuilder;
 pub use device::{Device, DeviceUpload};
 pub use experiment::Experiment;
+pub use policy::{DdpgPolicy, FastestSingle, RoundPolicy, StaticLayered};
+pub use registry::{BuildCtx, MechanismPreset, MechanismRegistry};
 pub use server::Server;
 pub use trainer::{LocalTrainer, NativeLrTrainer, PjrtTrainer, WorkloadData};

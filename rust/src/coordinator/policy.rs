@@ -1,0 +1,146 @@
+//! The [`RoundPolicy`] trait — the per-round control seam.
+//!
+//! A policy decides, for each active device, the local step count `H_m` and
+//! the layer-to-channel [`AllocationPlan`] `D_{m,n}` (the Eq. 13 action),
+//! and optionally learns from the round outcome. This replaces the
+//! per-mechanism `match` that used to live inside the round loop: mechanism
+//! behavior is now fully determined by the registered
+//! compressor/aggregator/policy triple (see [`super::registry`]).
+
+use super::device::Device;
+use crate::channels::AllocationPlan;
+use crate::drl::DeviceAgent;
+
+/// Per-round control decisions for one experiment.
+///
+/// `decide` runs *before* a device's local computation; `observe` runs after
+/// the round's costs are recorded (so `dev.meter.last_round` is fresh) and
+/// returns a reward when the policy learns online.
+pub trait RoundPolicy: Send {
+    /// Short human-readable name for logs and registry listings.
+    fn name(&self) -> String;
+
+    /// Whether the builder should create one DDPG [`DeviceAgent`] per
+    /// device for this policy.
+    fn needs_agents(&self) -> bool {
+        false
+    }
+
+    /// Decide `(H, plan)` for `dev` this round.
+    fn decide(
+        &mut self,
+        round: usize,
+        dev: &Device,
+        agent: Option<&mut DeviceAgent>,
+    ) -> (usize, AllocationPlan);
+
+    /// Observe the round outcome for `dev` (`delta` = loss improvement);
+    /// returns the learning reward, if any.
+    fn observe(
+        &mut self,
+        dev: &Device,
+        agent: Option<&mut DeviceAgent>,
+        delta: f64,
+        done: bool,
+    ) -> Option<f64> {
+        let _ = (dev, agent, delta, done);
+        None
+    }
+}
+
+/// Fixed `H` and a fixed layer-to-channel mapping: layer `c` rides channel
+/// `c` (channel list is fastest-first, so the base layer takes the most
+/// reliable link — the layered-coding mapping of the paper).
+#[derive(Clone, Debug)]
+pub struct StaticLayered {
+    pub h: usize,
+    /// Per-channel coordinate counts (zero = silent channel).
+    pub counts: Vec<usize>,
+}
+
+impl RoundPolicy for StaticLayered {
+    fn name(&self) -> String {
+        format!("static-layered(h={})", self.h)
+    }
+
+    fn decide(
+        &mut self,
+        _round: usize,
+        _dev: &Device,
+        _agent: Option<&mut DeviceAgent>,
+    ) -> (usize, AllocationPlan) {
+        (self.h, AllocationPlan { counts: self.counts.clone() })
+    }
+}
+
+/// Fixed `H`, everything on the *currently fastest* channel — the
+/// single-channel baselines (Top-k ablation A1; FedAvg's dense upload).
+/// The plan width follows the device's actual channel count.
+#[derive(Clone, Debug)]
+pub struct FastestSingle {
+    pub h: usize,
+    /// Total coordinate budget to place on the fastest channel.
+    pub total: usize,
+}
+
+impl RoundPolicy for FastestSingle {
+    fn name(&self) -> String {
+        format!("fastest-single(h={})", self.h)
+    }
+
+    fn decide(
+        &mut self,
+        _round: usize,
+        dev: &Device,
+        _agent: Option<&mut DeviceAgent>,
+    ) -> (usize, AllocationPlan) {
+        let mut counts = vec![0usize; dev.channels.len()];
+        counts[dev.channels.fastest()] = self.total;
+        (self.h, AllocationPlan { counts })
+    }
+}
+
+/// The paper's DDPG controller (Sec. 3.2–3.3): each device's agent observes
+/// the Eq. 11 state, emits the `(H_m, D_{m,n})` action, and learns from the
+/// Eq. 16 reward after the round.
+#[derive(Clone, Debug, Default)]
+pub struct DdpgPolicy;
+
+impl RoundPolicy for DdpgPolicy {
+    fn name(&self) -> String {
+        "ddpg".to_string()
+    }
+
+    fn needs_agents(&self) -> bool {
+        true
+    }
+
+    fn decide(
+        &mut self,
+        _round: usize,
+        dev: &Device,
+        agent: Option<&mut DeviceAgent>,
+    ) -> (usize, AllocationPlan) {
+        let agent = agent.expect("DdpgPolicy requires per-device agents");
+        let state = agent.observe_state(&dev.meter, &dev.channels, dev.last_delta);
+        let decision = agent.decide(&state, true);
+        (decision.local_steps, decision.plan)
+    }
+
+    fn observe(
+        &mut self,
+        dev: &Device,
+        agent: Option<&mut DeviceAgent>,
+        delta: f64,
+        done: bool,
+    ) -> Option<f64> {
+        let agent = agent?;
+        let eps = [
+            dev.meter.last_round[0].total().max(1e-9),
+            dev.meter.last_round[1].total().max(1e-9),
+        ];
+        let next_state = agent.observe_state(&dev.meter, &dev.channels, delta);
+        let (r, _) = agent.feedback(delta, &eps, next_state, done);
+        Some(r)
+    }
+}

@@ -1,0 +1,236 @@
+//! String-keyed mechanism registry: a mechanism is a named preset of
+//! (compressor factory, aggregator factory, policy factory). The builder
+//! resolves `cfg.mechanism` here, so adding a mechanism is a one-file
+//! registration — no enum branches in the round loop, the device, or the
+//! CLI (see DESIGN.md §"Extension points").
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use super::aggregator::{Aggregator, MeanAggregator};
+use super::policy::{DdpgPolicy, FastestSingle, RoundPolicy, StaticLayered};
+use crate::compression::{
+    Compressor, DenseNoop, ErrorCompensated, LgcRadix, LgcTopAB, Qsgd, RandK,
+};
+use crate::compression::quantize::QsgdQuantizer;
+use crate::config::ExperimentConfig;
+use crate::util::Rng;
+
+/// Everything a factory may need to build per-experiment parts.
+pub struct BuildCtx<'a> {
+    pub cfg: &'a ExperimentConfig,
+    /// Flat model parameter count P.
+    pub nparams: usize,
+    /// Static per-layer budgets derived from `cfg.layer_fracs`.
+    pub static_ks: &'a [usize],
+    /// The experiment's base RNG; fork it (never consume it) so builds stay
+    /// deterministic and order-independent.
+    pub rng: &'a Rng,
+}
+
+/// Builds the compressor for device `id` (one instance per device — it may
+/// carry per-device state such as error memory or RNG streams).
+pub type CompressorFactory = Arc<dyn Fn(&BuildCtx, usize) -> Box<dyn Compressor> + Send + Sync>;
+/// Builds the server-side aggregation rule.
+pub type AggregatorFactory = Arc<dyn Fn(&BuildCtx) -> Box<dyn Aggregator> + Send + Sync>;
+/// Builds the per-round control policy.
+pub type PolicyFactory = Arc<dyn Fn(&BuildCtx) -> Box<dyn RoundPolicy> + Send + Sync>;
+
+/// A named mechanism preset.
+#[derive(Clone)]
+pub struct MechanismPreset {
+    pub key: String,
+    pub summary: String,
+    pub compressor: CompressorFactory,
+    pub aggregator: AggregatorFactory,
+    pub policy: PolicyFactory,
+}
+
+impl MechanismPreset {
+    pub fn new(
+        key: &str,
+        summary: &str,
+        compressor: CompressorFactory,
+        aggregator: AggregatorFactory,
+        policy: PolicyFactory,
+    ) -> Self {
+        MechanismPreset {
+            key: key.to_string(),
+            summary: summary.to_string(),
+            compressor,
+            aggregator,
+            policy,
+        }
+    }
+}
+
+/// The registry: preset lookup by mechanism key (`Mechanism::name()` or any
+/// custom string).
+pub struct MechanismRegistry {
+    presets: BTreeMap<String, MechanismPreset>,
+}
+
+fn mean_aggregator() -> AggregatorFactory {
+    Arc::new(|_ctx| Box::new(MeanAggregator))
+}
+
+fn ef_lgc_compressor() -> CompressorFactory {
+    Arc::new(|_ctx, _id| Box::new(ErrorCompensated::new(LgcTopAB)))
+}
+
+fn static_layered_policy() -> PolicyFactory {
+    Arc::new(|ctx| {
+        let mut counts = vec![0usize; ctx.cfg.channel_types.len()];
+        for (c, &k) in ctx.static_ks.iter().enumerate() {
+            counts[c] = k;
+        }
+        Box::new(StaticLayered { h: ctx.cfg.h_fixed, counts })
+    })
+}
+
+fn fastest_single_policy(total_of: fn(&BuildCtx) -> usize) -> PolicyFactory {
+    Arc::new(move |ctx| {
+        Box::new(FastestSingle { h: ctx.cfg.h_fixed, total: total_of(ctx) })
+    })
+}
+
+impl MechanismRegistry {
+    /// Empty registry (extension tests / fully custom stacks).
+    pub fn empty() -> Self {
+        MechanismRegistry { presets: BTreeMap::new() }
+    }
+
+    /// The built-in mechanisms (paper Sec. 4.1 + baselines from related
+    /// work).
+    pub fn builtin() -> Self {
+        let mut reg = Self::empty();
+
+        reg.register(MechanismPreset::new(
+            "fedavg",
+            "FedAvg: dense upload on the fastest channel, mean aggregation",
+            Arc::new(|_ctx, _id| Box::new(DenseNoop)),
+            mean_aggregator(),
+            fastest_single_policy(|ctx| ctx.nparams),
+        ));
+
+        reg.register(MechanismPreset::new(
+            "lgc-static",
+            "LGC with fixed H and fixed layer-to-channel allocation",
+            ef_lgc_compressor(),
+            mean_aggregator(),
+            static_layered_policy(),
+        ));
+
+        reg.register(MechanismPreset::new(
+            "lgc-drl",
+            "LGC with the per-device DDPG controller choosing (H, D_{m,n})",
+            ef_lgc_compressor(),
+            mean_aggregator(),
+            Arc::new(|_ctx| Box::new(DdpgPolicy)),
+        ));
+
+        reg.register(MechanismPreset::new(
+            "topk",
+            "single-channel Top-k with error feedback (ablation A1)",
+            ef_lgc_compressor(),
+            mean_aggregator(),
+            fastest_single_policy(|ctx| ctx.static_ks.iter().sum()),
+        ));
+
+        reg.register(MechanismPreset::new(
+            "lgc-radix",
+            "LGC via the radix-select encoder variant (perf ablation)",
+            Arc::new(|_ctx, _id| Box::new(ErrorCompensated::new(LgcRadix))),
+            mean_aggregator(),
+            static_layered_policy(),
+        ));
+
+        reg.register(MechanismPreset::new(
+            "rand-k",
+            "single-channel random-K with error feedback (Wangni et al.)",
+            Arc::new(|ctx, id| {
+                let rng = ctx.rng.fork(0xBADC0DE ^ ((id as u64) << 8));
+                Box::new(ErrorCompensated::new(RandK::new(rng, false)))
+            }),
+            mean_aggregator(),
+            fastest_single_policy(|ctx| ctx.static_ks.iter().sum()),
+        ));
+
+        reg.register(MechanismPreset::new(
+            "qsgd",
+            "QSGD stochastic quantization with error feedback (Alistarh et al.)",
+            Arc::new(|ctx, id| {
+                let rng = ctx.rng.fork(0x0561D ^ ((id as u64) << 8));
+                Box::new(ErrorCompensated::new(Qsgd::new(QsgdQuantizer::new(4, rng))))
+            }),
+            mean_aggregator(),
+            fastest_single_policy(|ctx| ctx.nparams),
+        ));
+
+        reg
+    }
+
+    /// Register (or replace) a preset under its key.
+    pub fn register(&mut self, preset: MechanismPreset) {
+        self.presets.insert(preset.key.clone(), preset);
+    }
+
+    /// Look up a preset: exact key first, then case-insensitively (so
+    /// config-file spellings like `"Lgc-Radix"` resolve the same way the
+    /// built-in enum aliases do).
+    pub fn get(&self, key: &str) -> Option<&MechanismPreset> {
+        if let Some(p) = self.presets.get(key) {
+            return Some(p);
+        }
+        self.presets
+            .values()
+            .find(|p| p.key.eq_ignore_ascii_case(key))
+    }
+
+    /// Registered keys, sorted.
+    pub fn names(&self) -> Vec<&str> {
+        self.presets.keys().map(String::as_str).collect()
+    }
+}
+
+impl Default for MechanismRegistry {
+    fn default() -> Self {
+        Self::builtin()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_cover_all_enum_mechanisms() {
+        use crate::config::Mechanism;
+        let reg = MechanismRegistry::builtin();
+        for m in [
+            Mechanism::FedAvg,
+            Mechanism::LgcStatic,
+            Mechanism::LgcDrl,
+            Mechanism::TopK,
+            Mechanism::RandK,
+            Mechanism::Qsgd,
+        ] {
+            assert!(reg.get(m.name()).is_some(), "no preset for {}", m.name());
+        }
+    }
+
+    #[test]
+    fn register_and_lookup_custom() {
+        let mut reg = MechanismRegistry::builtin();
+        let preset = MechanismPreset::new(
+            "my-mech",
+            "custom",
+            Arc::new(|_ctx, _id| Box::new(DenseNoop)),
+            mean_aggregator(),
+            fastest_single_policy(|ctx| ctx.nparams),
+        );
+        reg.register(preset);
+        assert!(reg.get("my-mech").is_some());
+        assert!(reg.names().contains(&"my-mech"));
+    }
+}

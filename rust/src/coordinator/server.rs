@@ -1,53 +1,106 @@
 //! FL edge server (Alg. 1 lines 18–22): collect the layered updates from
 //! every device (decoding from the wire format, as the real server would),
-//! aggregate, update the global model, and broadcast.
+//! run the pluggable [`Aggregator`], update the global model, and broadcast.
 
-use crate::compression::{wire, LgcUpdate};
+use super::aggregator::{Aggregator, MeanAggregator};
+use crate::compression::{wire, Layer, LgcUpdate};
 
 /// The central server's state.
 pub struct Server {
     /// w̄ — the global model.
     pub params: Vec<f32>,
     agg_buf: Vec<f32>,
+    aggregator: Box<dyn Aggregator>,
+    /// Reusable wire buffer for the per-layer encode/decode round-trip (the
+    /// hot loop never allocates for it at steady state).
+    wire_buf: Vec<u8>,
 }
 
 impl Server {
+    /// Server with the default mean aggregation (the seed's behavior).
     pub fn new(init: Vec<f32>) -> Self {
+        Self::with_aggregator(init, Box::new(MeanAggregator))
+    }
+
+    /// Server with an explicit aggregation rule.
+    pub fn with_aggregator(init: Vec<f32>, aggregator: Box<dyn Aggregator>) -> Self {
         let dim = init.len();
-        Server { params: init, agg_buf: vec![0f32; dim] }
+        Server { params: init, agg_buf: vec![0f32; dim], aggregator, wire_buf: Vec::new() }
     }
 
     pub fn dim(&self) -> usize {
         self.params.len()
     }
 
-    /// Aggregate updates (mean of decoded g_m) and apply:
-    /// `w̄^{t+1} = w̄^{t} − (1/M) Σ_m g_m` (line 21, mean aggregation).
-    /// Updates arrive as wire chunks per layer — the server decodes them
-    /// exactly as it would off the sockets.
+    /// Restart the global model (new episode) while keeping the configured
+    /// aggregation rule.
+    pub fn reset_model(&mut self, init: Vec<f32>) {
+        self.agg_buf.clear();
+        self.agg_buf.resize(init.len(), 0.0);
+        self.params = init;
+    }
+
+    pub fn aggregator_name(&self) -> String {
+        self.aggregator.name()
+    }
+
+    /// Announce per-upload weights for the next [`Server::aggregate_and_apply`]
+    /// call (same order as its `uploads` slice).
+    pub fn set_round_weights(&mut self, weights: &[f64]) {
+        self.aggregator.set_round_weights(weights);
+    }
+
+    /// Aggregate updates through the configured rule and apply:
+    /// `w̄^{t+1} = w̄^{t} − aggregate(g_1..g_M)` (line 21).
     pub fn aggregate_and_apply(&mut self, uploads: &[&LgcUpdate]) {
         assert!(!uploads.is_empty());
-        self.agg_buf.iter_mut().for_each(|x| *x = 0.0);
-        let scale = 1.0 / uploads.len() as f32;
         for upd in uploads {
             assert_eq!(upd.dim, self.params.len(), "dim mismatch");
-            upd.add_into(&mut self.agg_buf, scale);
         }
+        self.aggregator.aggregate(uploads, &mut self.agg_buf);
         for (p, &g) in self.params.iter_mut().zip(&self.agg_buf) {
             *p -= g;
         }
     }
 
     /// Round-trip an update through the wire format (what the channel
-    /// actually carried) and return the decoded update. Detects protocol
-    /// bugs in tests and charges byte-exact costs in the simulator.
+    /// actually carried) into a reusable output buffer — `out`'s layer
+    /// vectors are recycled, so the round loop performs no steady-state
+    /// allocation here. Byte-accounting consistency between what the
+    /// channel simulator charges and what the wire carries is enforced by
+    /// `tests/compressor_contract.rs` for every registered sparse-wire
+    /// compressor.
+    pub fn decode_from_wire_into(
+        &mut self,
+        update: &LgcUpdate,
+        out: &mut LgcUpdate,
+    ) -> anyhow::Result<()> {
+        out.dim = update.dim;
+        out.layers.truncate(update.layers.len());
+        while out.layers.len() < update.layers.len() {
+            out.layers.push(Layer { indices: Vec::new(), values: Vec::new() });
+        }
+        for (layer, dst) in update.layers.iter().zip(out.layers.iter_mut()) {
+            let written = wire::encode_into(update.dim, layer, &mut self.wire_buf);
+            debug_assert_eq!(written as u64, layer.wire_bytes());
+            let dim = wire::decode_into(&self.wire_buf, dst)?;
+            anyhow::ensure!(dim == update.dim, "wire dim mismatch");
+        }
+        Ok(())
+    }
+
+    /// Allocating convenience wrapper over the same per-layer wire
+    /// round-trip as [`Server::decode_from_wire_into`], for tests and
+    /// one-off callers (no server state involved).
     pub fn decode_from_wire(update: &LgcUpdate) -> anyhow::Result<LgcUpdate> {
+        let mut buf = Vec::new();
         let mut layers = Vec::with_capacity(update.layers.len());
         for layer in &update.layers {
-            let chunk = wire::encode(update.dim, layer);
-            let (dim, decoded) = wire::decode(&chunk)?;
+            wire::encode_into(update.dim, layer, &mut buf);
+            let mut dst = Layer { indices: Vec::new(), values: Vec::new() };
+            let dim = wire::decode_into(&buf, &mut dst)?;
             anyhow::ensure!(dim == update.dim, "wire dim mismatch");
-            layers.push(decoded);
+            layers.push(dst);
         }
         Ok(LgcUpdate { dim: update.dim, layers })
     }
@@ -84,6 +137,30 @@ mod tests {
         let u = upd(256, 3, &[8, 16, 32]);
         let d = Server::decode_from_wire(&u).unwrap();
         assert_eq!(u, d);
+    }
+
+    #[test]
+    fn decode_into_reuses_buffers_and_checks_accounting() {
+        let mut server = Server::new(vec![0f32; 512]);
+        let mut out = LgcUpdate { dim: 0, layers: Vec::new() };
+        for seed in 0..8 {
+            let u = upd(512, 100 + seed, &[16, 64]);
+            server.decode_from_wire_into(&u, &mut out).unwrap();
+            assert_eq!(u, out, "seed {seed}");
+            // byte accounting: what the channels charge == what went over
+            // the wire
+            for layer in &u.layers {
+                assert_eq!(
+                    layer.wire_bytes(),
+                    wire::encoded_len(layer.len()) as u64
+                );
+            }
+        }
+        // shrinking layer counts must truncate the reusable output
+        let small = upd(512, 999, &[4]);
+        server.decode_from_wire_into(&small, &mut out).unwrap();
+        assert_eq!(out.layers.len(), 1);
+        assert_eq!(small, out);
     }
 
     #[test]

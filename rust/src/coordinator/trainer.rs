@@ -22,6 +22,12 @@ pub trait LocalTrainer {
     fn local_step(&mut self, device: usize, params: &mut Vec<f32>, lr: f32) -> Result<f64>;
     /// Evaluate on the held-out set: (mean loss, accuracy in [0,1]).
     fn eval(&mut self, params: &[f32]) -> Result<(f64, f64)>;
+    /// Local sample count of `device` (n_m) — feeds sample-weighted
+    /// aggregation rules. Defaults to 1 (uniform) for backends that don't
+    /// track shard sizes.
+    fn device_samples(&self, _device: usize) -> usize {
+        1
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -126,6 +132,17 @@ impl WorkloadData {
         }
     }
 
+    /// Local sample count of `device` (shard size / corpus span positions).
+    pub fn device_samples(&self, device: usize) -> usize {
+        match self {
+            WorkloadData::Mnist { shards, .. } => shards[device].len(),
+            WorkloadData::Shakespeare { spans, .. } => {
+                let (lo, hi) = spans[device];
+                hi.saturating_sub(lo)
+            }
+        }
+    }
+
     /// Iterate eval batches.
     pub fn eval_batches(&self) -> Vec<(BatchX, Vec<i32>, usize)> {
         match self {
@@ -180,6 +197,10 @@ impl LocalTrainer for PjrtTrainer {
     fn local_step(&mut self, device: usize, params: &mut Vec<f32>, lr: f32) -> Result<f64> {
         let (x, y) = self.data.next_batch(device);
         self.exe.local_step(params, &x, &y, lr)
+    }
+
+    fn device_samples(&self, device: usize) -> usize {
+        self.data.device_samples(device)
     }
 
     fn eval(&mut self, params: &[f32]) -> Result<(f64, f64)> {
@@ -242,6 +263,10 @@ impl LocalTrainer for NativeLrTrainer {
             *p -= lr * g;
         }
         Ok(loss)
+    }
+
+    fn device_samples(&self, device: usize) -> usize {
+        self.data.device_samples(device)
     }
 
     fn eval(&mut self, params: &[f32]) -> Result<(f64, f64)> {

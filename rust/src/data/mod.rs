@@ -70,6 +70,15 @@ impl BatchSampler {
         self.cursor = 0;
     }
 
+    /// Number of samples in this device's shard.
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
     /// Next `b` indices, reshuffling at epoch boundaries (with replacement
     /// across the boundary so batches are always full).
     pub fn next_batch(&mut self, b: usize, out: &mut Vec<usize>) {

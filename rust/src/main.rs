@@ -14,7 +14,9 @@ use std::process::ExitCode;
 
 use anyhow::{bail, Context, Result};
 use lgc::config::{ExperimentConfig, Mechanism};
-use lgc::coordinator::{Experiment, LocalTrainer, NativeLrTrainer, PjrtTrainer};
+use lgc::coordinator::{
+    ExperimentBuilder, LocalTrainer, MechanismRegistry, NativeLrTrainer, PjrtTrainer,
+};
 use lgc::metrics::RunLog;
 use lgc::runtime::Runtime;
 
@@ -48,11 +50,12 @@ fn run(args: Vec<String>) -> Result<()> {
 }
 
 fn print_usage() {
+    let mechanisms = MechanismRegistry::builtin().names().join("|");
     println!(
         "lgc — Layered Gradient Compression FL framework\n\n\
          USAGE:\n  lgc train   [--config=FILE] [--key=value ...]\n  \
          lgc compare [--key=value ...]\n  lgc info [--artifacts_dir=DIR]\n\n\
-         Common keys: mechanism=fedavg|lgc-static|lgc|topk, workload=lr|cnn|rnn,\n\
+         Common keys: mechanism={mechanisms}, workload=lr|cnn|rnn,\n\
          rounds=N, devices=M, lr=F, h_fixed=N, h_max=N, energy_budget=F,\n\
          money_budget=F, seed=N, use_runtime=true|false, csv=FILE"
     );
@@ -119,7 +122,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
         cfg.use_runtime
     );
     let mut trainer = make_trainer(&cfg)?;
-    let mut exp = Experiment::new(cfg, trainer.as_ref());
+    let mut exp = ExperimentBuilder::new(cfg).trainer(trainer.as_ref()).build()?;
     let log = exp.run(trainer.as_mut())?;
     report(&log);
     if let Some(path) = csv {
@@ -137,7 +140,7 @@ fn cmd_compare(args: &[String]) -> Result<()> {
         let cfg = ExperimentConfig::load(config.as_deref(), &ov)
             .map_err(|e| anyhow::anyhow!(e))?;
         let mut trainer = make_trainer(&cfg)?;
-        let mut exp = Experiment::new(cfg, trainer.as_ref());
+        let mut exp = ExperimentBuilder::new(cfg).trainer(trainer.as_ref()).build()?;
         let log = exp.run(trainer.as_mut())?;
         report(&log);
         if let Some(base) = &csv {

@@ -1,0 +1,175 @@
+//! XLA/PJRT-backed runtime (the `pjrt` cargo feature): compiles the AOT HLO
+//! artifacts on a CPU PJRT client and executes them.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{Manifest, ModelMeta};
+use super::BatchX;
+
+fn to_literal(x: &BatchX, dims: &[i64]) -> Result<xla::Literal> {
+    let lit = match x {
+        BatchX::F32(v) => xla::Literal::vec1(v),
+        BatchX::I32(v) => xla::Literal::vec1(v),
+    };
+    Ok(lit.reshape(dims)?)
+}
+
+/// Compiled graphs of one model.
+pub struct ModelExecutable {
+    pub meta: ModelMeta,
+    local: xla::PjRtLoadedExecutable,
+    grad: xla::PjRtLoadedExecutable,
+    eval: xla::PjRtLoadedExecutable,
+    x_dims: Vec<i64>,
+    batch: usize,
+}
+
+impl ModelExecutable {
+    /// One local SGD step (Alg. 1 line 6): `(params, x, y, lr) -> (params',
+    /// loss)`. `params` is updated in place.
+    pub fn local_step(&self, params: &mut Vec<f32>, x: &BatchX, y: &[i32], lr: f32) -> Result<f64> {
+        anyhow::ensure!(params.len() == self.meta.params, "params len mismatch");
+        let p = xla::Literal::vec1(params.as_slice());
+        let xl = to_literal(x, &self.x_dims)?;
+        let yl = xla::Literal::vec1(y);
+        let lrl = xla::Literal::scalar(lr);
+        let result = self.local.execute::<xla::Literal>(&[p, xl, yl, lrl])?[0][0]
+            .to_literal_sync()?;
+        let mut outs = result.to_tuple()?;
+        anyhow::ensure!(outs.len() == 2, "local graph returned {} outputs", outs.len());
+        let loss = outs.pop().unwrap().to_vec::<f32>()?[0] as f64;
+        let new_params = outs.pop().unwrap().to_vec::<f32>()?;
+        *params = new_params;
+        Ok(loss)
+    }
+
+    /// Raw gradient: `(params, x, y) -> (grads, loss)`.
+    pub fn grad(&self, params: &[f32], x: &BatchX, y: &[i32]) -> Result<(Vec<f32>, f64)> {
+        let p = xla::Literal::vec1(params);
+        let xl = to_literal(x, &self.x_dims)?;
+        let yl = xla::Literal::vec1(y);
+        let result = self.grad.execute::<xla::Literal>(&[p, xl, yl])?[0][0].to_literal_sync()?;
+        let mut outs = result.to_tuple()?;
+        anyhow::ensure!(outs.len() == 2, "grad graph returned {} outputs", outs.len());
+        let loss = outs.pop().unwrap().to_vec::<f32>()?[0] as f64;
+        let grads = outs.pop().unwrap().to_vec::<f32>()?;
+        Ok((grads, loss))
+    }
+
+    /// Eval one batch: returns (loss_sum, correct_count) over the batch's
+    /// prediction positions.
+    pub fn eval_batch(&self, params: &[f32], x: &BatchX, y: &[i32]) -> Result<(f64, f64)> {
+        let p = xla::Literal::vec1(params);
+        let xl = to_literal(x, &self.x_dims)?;
+        let yl = xla::Literal::vec1(y);
+        let result = self.eval.execute::<xla::Literal>(&[p, xl, yl])?[0][0].to_literal_sync()?;
+        let mut outs = result.to_tuple()?;
+        anyhow::ensure!(outs.len() == 2, "eval graph returned {} outputs", outs.len());
+        let correct = outs.pop().unwrap().to_vec::<f32>()?[0] as f64;
+        let loss_sum = outs.pop().unwrap().to_vec::<f32>()?[0] as f64;
+        Ok((loss_sum, correct))
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+}
+
+/// The LGC encoder artifact (ablation A2): `(u) -> (layers, thr)`.
+pub struct CompressExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub d: usize,
+    pub n_layers: usize,
+}
+
+impl CompressExecutable {
+    /// Returns (dense layers `[n_layers * d]` row-major, thresholds).
+    pub fn compress(&self, u: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        anyhow::ensure!(u.len() == self.d, "expected D={} got {}", self.d, u.len());
+        let ul = xla::Literal::vec1(u);
+        let result = self.exe.execute::<xla::Literal>(&[ul])?[0][0].to_literal_sync()?;
+        let mut outs = result.to_tuple()?;
+        anyhow::ensure!(outs.len() == 2);
+        let thr = outs.pop().unwrap().to_vec::<f32>()?;
+        let layers = outs.pop().unwrap().to_vec::<f32>()?;
+        Ok((layers, thr))
+    }
+}
+
+/// The PJRT runtime: one CPU client + artifact loading.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and parse the manifest in `dir`.
+    pub fn new(dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        let manifest = Manifest::load(&dir.join("manifest.toml"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        Ok(Runtime { client, dir: dir.to_path_buf(), manifest })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile_file(&self, name: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.dir.join(name);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+
+    /// Load + compile the three graphs of `model` ("lr" | "cnn" | "rnn").
+    pub fn load_model(&self, model: &str) -> Result<ModelExecutable> {
+        let meta = self
+            .manifest
+            .models
+            .get(model)
+            .ok_or_else(|| anyhow!("model `{model}` not in manifest"))?
+            .clone();
+        let local = self.compile_file(&format!("{model}_local.hlo.txt"))?;
+        let grad = self.compile_file(&format!("{model}_grad.hlo.txt"))?;
+        let eval = self.compile_file(&format!("{model}_eval.hlo.txt"))?;
+        let x_dims: Vec<i64> = meta.x_shape.iter().map(|&d| d as i64).collect();
+        Ok(ModelExecutable { meta, local, grad, eval, x_dims, batch: self.manifest.batch })
+    }
+
+    /// Load + compile the LGC compress artifact.
+    pub fn load_compress(&self) -> Result<CompressExecutable> {
+        let d = self.manifest.compress_d;
+        let exe = self.compile_file(&format!("lgc_compress_d{d}.hlo.txt"))?;
+        Ok(CompressExecutable { exe, d, n_layers: self.manifest.compress_ks.len() })
+    }
+
+    /// Load the deterministic initial parameters exported by aot.py.
+    pub fn load_init_params(&self, model: &str) -> Result<Vec<f32>> {
+        let meta = self
+            .manifest
+            .models
+            .get(model)
+            .ok_or_else(|| anyhow!("model `{model}` not in manifest"))?;
+        let path = self.dir.join(format!("{model}_init.bin"));
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        anyhow::ensure!(
+            bytes.len() == meta.params * 4,
+            "init file {} has {} bytes, expected {}",
+            path.display(),
+            bytes.len(),
+            meta.params * 4
+        );
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}

@@ -1,0 +1,98 @@
+//! No-op runtime backend used when the `pjrt` feature is disabled.
+//!
+//! Mirrors the public API of the XLA-backed [`super::pjrt`] module so that
+//! callers (CLI, trainers, examples, benches) compile unchanged; every
+//! constructor fails with a clear message pointing at the native path.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::manifest::{Manifest, ModelMeta};
+use super::BatchX;
+
+const NO_PJRT: &str = "this build has no PJRT backend (compiled without the `pjrt` \
+     cargo feature) — use the native trainer (`use_runtime = false` / \
+     `--use_runtime=false`), or add an `xla` dependency to Cargo.toml and \
+     rebuild with `--features pjrt` (DESIGN.md \"Runtime backends\")";
+
+/// Stub of the compiled model graphs. Never constructible: [`Runtime::new`]
+/// always fails first, so these methods are unreachable by design.
+pub struct ModelExecutable {
+    pub meta: ModelMeta,
+    batch: usize,
+}
+
+impl ModelExecutable {
+    pub fn local_step(
+        &self,
+        _params: &mut Vec<f32>,
+        _x: &BatchX,
+        _y: &[i32],
+        _lr: f32,
+    ) -> Result<f64> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn grad(&self, _params: &[f32], _x: &BatchX, _y: &[i32]) -> Result<(Vec<f32>, f64)> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn eval_batch(&self, _params: &[f32], _x: &BatchX, _y: &[i32]) -> Result<(f64, f64)> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+}
+
+/// Stub of the LGC encoder artifact.
+pub struct CompressExecutable {
+    pub d: usize,
+    pub n_layers: usize,
+}
+
+impl CompressExecutable {
+    pub fn compress(&self, _u: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        bail!(NO_PJRT)
+    }
+}
+
+/// Stub runtime: construction always fails.
+pub struct Runtime {
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    pub fn new(_dir: &Path) -> Result<Self> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn platform(&self) -> String {
+        "none (pjrt feature disabled)".to_string()
+    }
+
+    pub fn load_model(&self, _model: &str) -> Result<ModelExecutable> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn load_compress(&self) -> Result<CompressExecutable> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn load_init_params(&self, _model: &str) -> Result<Vec<f32>> {
+        bail!(NO_PJRT)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_runtime_fails_with_guidance() {
+        let err = Runtime::new(Path::new("artifacts")).unwrap_err();
+        assert!(format!("{err}").contains("pjrt"), "{err}");
+    }
+}

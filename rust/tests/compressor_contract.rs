@@ -1,0 +1,214 @@
+//! Contract tests for the pluggable seams:
+//!
+//! - every compressor reachable through the built-in mechanism registry
+//!   honors the `Compressor` contract (support subset, budget, determinism);
+//! - `MeanAggregator` reproduces the seed's hard-coded
+//!   `Server::aggregate_and_apply` numerics **bit-for-bit**;
+//! - the server's reusable wire round-trip preserves updates exactly and
+//!   its byte accounting matches `Layer::wire_bytes()`.
+
+use lgc::compression::{CompressScratch, Compressor, LayerBudget, LgcUpdate};
+use lgc::config::{ExperimentConfig, Mechanism, Workload};
+use lgc::coordinator::{Aggregator, BuildCtx, MeanAggregator, MechanismRegistry, Server};
+use lgc::util::Rng;
+
+const DIM: usize = 512;
+
+fn test_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        mechanism: Mechanism::LgcStatic,
+        workload: Workload::LrMnist,
+        devices: 2,
+        rounds: 4,
+        h_fixed: 2,
+        h_max: 4,
+        use_runtime: false,
+        ..ExperimentConfig::default()
+    }
+}
+
+/// A gradient-like vector with an explicitly empty support region, so the
+/// "decode support ⊆ input support" check is non-vacuous.
+fn test_input(seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..DIM)
+        .map(|i| if i % 3 == 0 { 0.0 } else { rng.normal() as f32 })
+        .collect()
+}
+
+/// Build the compressor of a registered mechanism for device `id`.
+fn build_compressor(reg: &MechanismRegistry, key: &str, id: usize) -> Box<dyn Compressor> {
+    let cfg = test_cfg();
+    let static_ks = [8usize, 24, 96];
+    let rng = Rng::new(cfg.seed);
+    let ctx = BuildCtx { cfg: &cfg, nparams: DIM, static_ks: &static_ks, rng: &rng };
+    let preset = reg.get(key).expect("registered preset");
+    (preset.compressor)(&ctx, id)
+}
+
+#[test]
+fn every_registered_compressor_honors_the_contract() {
+    let reg = MechanismRegistry::builtin();
+    let budget = LayerBudget::new(vec![8, 24, 96]);
+    for key in reg.names() {
+        let mut scratch = CompressScratch::default();
+        let mut c = build_compressor(&reg, key, 0);
+        let u = test_input(1);
+        let g = c.compress(&u, &budget, &mut scratch);
+        let name = c.name();
+
+        // 1. shape: decodes to the input dimension
+        assert_eq!(g.dim, DIM, "[{key}/{name}] wrong dim");
+
+        // 2. support subset: nothing materializes at zero input coordinates
+        let dec = g.decode();
+        for i in 0..DIM {
+            if dec[i] != 0.0 {
+                assert!(
+                    u[i] != 0.0,
+                    "[{key}/{name}] shipped mass at empty coordinate {i}"
+                );
+            }
+        }
+
+        // 3. budget: nnz bounded when the compressor claims it
+        if c.respects_budget() {
+            assert!(
+                g.total_nnz() <= budget.total(),
+                "[{key}/{name}] nnz {} > budget {}",
+                g.total_nnz(),
+                budget.total()
+            );
+        }
+
+        // 4. wire accounting is positive for a nonzero update, and sparse-
+        // wire compressors must charge exactly what the sparse format
+        // carries (the channel simulator bills `layer_wire_bytes`)
+        assert!(g.total_nnz() == 0 || c.wire_bytes(&g) > 0, "[{key}/{name}] zero wire bytes");
+        if c.sparse_wire() {
+            for layer in &g.layers {
+                assert_eq!(
+                    c.layer_wire_bytes(layer, g.dim),
+                    layer.wire_bytes(),
+                    "[{key}/{name}] charged bytes differ from sparse wire bytes"
+                );
+            }
+        }
+
+        // 5. determinism under a fixed seed: a fresh instance from the same
+        // factory reproduces the exact same update sequence
+        let mut c2 = build_compressor(&reg, key, 0);
+        let mut scratch2 = CompressScratch::default();
+        let g2 = c2.compress(&u, &budget, &mut scratch2);
+        assert_eq!(g, g2, "[{key}/{name}] non-deterministic first round");
+        // ... including stateful rounds (error memory, RNG streams)
+        let u_next = test_input(2);
+        let h1 = c.compress(&u_next, &budget, &mut scratch);
+        let h2 = c2.compress(&u_next, &budget, &mut scratch2);
+        assert_eq!(h1, h2, "[{key}/{name}] non-deterministic second round");
+
+        // 6. reset clears any error memory
+        c.reset();
+        if let Some(mem) = c.error_memory() {
+            assert_eq!(mem.norm2(), 0.0, "[{key}/{name}] reset left memory");
+        }
+    }
+}
+
+#[test]
+fn distinct_devices_get_independent_streams() {
+    // Per-device factories must not share RNG state: stochastic compressors
+    // on different devices should produce different draws.
+    let reg = MechanismRegistry::builtin();
+    let budget = LayerBudget::new(vec![32]);
+    let u = test_input(3);
+    let mut scratch = CompressScratch::default();
+    let mut a = build_compressor(&reg, "rand-k", 0);
+    let mut b = build_compressor(&reg, "rand-k", 1);
+    let ga = a.compress(&u, &budget, &mut scratch);
+    let gb = b.compress(&u, &budget, &mut scratch);
+    assert_ne!(ga, gb, "device 0 and 1 drew identical rand-k masks");
+}
+
+/// The seed's aggregation loop, verbatim: zero the buffer, add each decode
+/// scaled by 1/M, subtract from params.
+fn seed_aggregate_and_apply(params: &mut [f32], uploads: &[&LgcUpdate]) {
+    let mut agg = vec![0f32; params.len()];
+    let scale = 1.0 / uploads.len() as f32;
+    for upd in uploads {
+        upd.add_into(&mut agg, scale);
+    }
+    for (p, &g) in params.iter_mut().zip(&agg) {
+        *p -= g;
+    }
+}
+
+#[test]
+fn mean_aggregator_matches_seed_numerics_bit_for_bit() {
+    let mut rng = Rng::new(42);
+    for trial in 0..10 {
+        let dim = 64 + rng.index(512);
+        let m = 1 + rng.index(6);
+        let updates: Vec<LgcUpdate> = (0..m)
+            .map(|_| {
+                let u: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+                let k = 1 + rng.index(dim / 2);
+                lgc::compression::lgc_compress(&u, &[k], &mut CompressScratch::default())
+            })
+            .collect();
+        let refs: Vec<&LgcUpdate> = updates.iter().collect();
+
+        let init: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        let mut server = Server::new(init.clone());
+        server.aggregate_and_apply(&refs);
+
+        let mut expect = init;
+        seed_aggregate_and_apply(&mut expect, &refs);
+
+        for i in 0..dim {
+            assert_eq!(
+                server.params[i].to_bits(),
+                expect[i].to_bits(),
+                "trial {trial}: bit drift at coordinate {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn mean_aggregator_trait_object_matches_direct() {
+    // Dispatch through Box<dyn Aggregator> must not change numerics.
+    let u: Vec<f32> = (0..128).map(|i| (i as f32).sin()).collect();
+    let upd = lgc::compression::lgc_compress(&u, &[32], &mut CompressScratch::default());
+    let refs = [&upd, &upd];
+    let mut direct = vec![0f32; 128];
+    MeanAggregator.aggregate(&refs, &mut direct);
+    let mut boxed_out = vec![0f32; 128];
+    let mut boxed: Box<dyn Aggregator> = Box::new(MeanAggregator);
+    boxed.aggregate(&refs, &mut boxed_out);
+    assert_eq!(direct, boxed_out);
+}
+
+#[test]
+fn server_wire_roundtrip_reuses_buffers_and_accounts_bytes() {
+    let mut server = Server::new(vec![0f32; DIM]);
+    let mut out = LgcUpdate { dim: 0, layers: Vec::new() };
+    let mut scratch = CompressScratch::default();
+    for seed in 0..6 {
+        let u = test_input(50 + seed);
+        let g = lgc::compression::lgc_compress(&u, &[8, 24, 96], &mut scratch);
+        server.decode_from_wire_into(&g, &mut out).unwrap();
+        assert_eq!(g, out, "roundtrip drift (seed {seed})");
+        // The bytes the channels charge per layer are exactly the encoded
+        // wire length (header + 8 B/entry) — decode_from_wire_into asserts
+        // the same internally; double-check the public accounting here.
+        for layer in &g.layers {
+            assert_eq!(
+                layer.wire_bytes(),
+                (lgc::compression::wire::WIRE_HEADER
+                    + layer.len() * lgc::compression::WIRE_BYTES_PER_ENTRY)
+                    as u64
+            );
+        }
+    }
+}

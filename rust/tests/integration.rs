@@ -127,7 +127,7 @@ fn error_feedback_is_essential_under_heavy_compression() {
     let mut no_ef_final = f64::NAN;
     for round in 0..30 {
         for dev in &mut exp.devices {
-            dev.error.reset(); // kill the memory -> plain (biased) top-k
+            dev.reset_compressor(); // kill the memory -> plain (biased) top-k
         }
         if let Some(rec) = exp.step_round(round, &mut trainer).unwrap() {
             if !rec.eval_acc.is_nan() {

@@ -1,6 +1,7 @@
 //! PJRT runtime integration: load the AOT artifacts, execute them, and
 //! cross-check numerics against the pure-Rust oracle. These tests skip
-//! (with a notice) when `artifacts/` has not been built.
+//! (with a notice) when the `pjrt` feature is off or `artifacts/` has not
+//! been built.
 
 use std::path::Path;
 
@@ -9,6 +10,10 @@ use lgc::runtime::{BatchX, Runtime};
 use lgc::util::Rng;
 
 fn runtime() -> Option<Runtime> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("skipping: built without the `pjrt` feature");
+        return None;
+    }
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.toml").exists() {
         eprintln!("skipping: artifacts not built (run `make artifacts`)");
