@@ -1,0 +1,107 @@
+//! Event-engine throughput micro-bench: events/sec and rounds/sec of the
+//! simulation core, barrier vs. semi-async vs. fully-async, and the
+//! `std::thread::scope` parallel device-compute path (1 vs. N workers).
+//!
+//! ```bash
+//! cargo bench --bench bench_async_throughput
+//! ```
+//!
+//! Notes: the async modes pace devices by arrival, so their compute runs
+//! inline with event handling (threads column shows 1); the parallel path
+//! applies to barrier rounds, where all active devices train concurrently.
+
+use std::time::Instant;
+
+use lgc::bench::Table;
+use lgc::config::{ExperimentConfig, Mechanism, Workload};
+use lgc::coordinator::{ExperimentBuilder, NativeLrTrainer};
+use lgc::sim::SyncMode;
+
+fn cfg(threads: usize, devices: usize, rounds: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        mechanism: Mechanism::LgcStatic,
+        workload: Workload::LrMnist,
+        rounds,
+        devices,
+        samples_per_device: 256,
+        eval_samples: 256,
+        eval_every: 1_000_000, // evals would dominate; round 0 + final only
+        lr: 0.05,
+        h_fixed: 2,
+        h_max: 4,
+        use_runtime: false,
+        compute_threads: threads,
+        ..ExperimentConfig::default()
+    }
+}
+
+struct RunStats {
+    wall_s: f64,
+    events: u64,
+    records: usize,
+    sim_s: f64,
+    acc: f64,
+}
+
+fn run_one(mode: SyncMode, threads: usize, devices: usize, rounds: usize) -> RunStats {
+    let c = cfg(threads, devices, rounds);
+    let mut trainer = NativeLrTrainer::new(&c);
+    let mut exp = ExperimentBuilder::new(c)
+        .trainer(&trainer)
+        .sync_mode(mode)
+        .build()
+        .expect("build");
+    let t0 = Instant::now();
+    let log = exp.run(&mut trainer).expect("run");
+    RunStats {
+        wall_s: t0.elapsed().as_secs_f64(),
+        events: exp.sim_stats.events,
+        records: log.records.len(),
+        sim_s: log.last().map_or(0.0, |r| r.total_time_s),
+        acc: log.final_acc(),
+    }
+}
+
+fn main() {
+    let devices = 8;
+    let rounds = 60;
+    let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!(
+        "== event-engine throughput (LgcStatic / LR, {devices} devices, {rounds} records) ==\n"
+    );
+    let mut table = Table::new(&[
+        "mode",
+        "threads",
+        "wall ms",
+        "events",
+        "events/s",
+        "rounds/s",
+        "sim s",
+        "final acc",
+    ]);
+    let cases: Vec<(&str, SyncMode, usize)> = vec![
+        ("barrier", SyncMode::Barrier, 1),
+        ("barrier", SyncMode::Barrier, auto),
+        ("semi-async k=4", SyncMode::SemiAsync { buffer_k: 4 }, 1),
+        ("fully-async d=.7", SyncMode::FullyAsync { staleness_decay: 0.7 }, 1),
+    ];
+    for (name, mode, threads) in cases {
+        let r = run_one(mode, threads, devices, rounds);
+        table.row(&[
+            name.to_string(),
+            threads.to_string(),
+            format!("{:.1}", r.wall_s * 1e3),
+            r.events.to_string(),
+            format!("{:.0}", r.events as f64 / r.wall_s.max(1e-9)),
+            format!("{:.1}", r.records as f64 / r.wall_s.max(1e-9)),
+            format!("{:.2}", r.sim_s),
+            format!("{:.3}", r.acc),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nbarrier x{auto} threads parallelizes device local compute (bit-identical \
+         results); async modes trade per-event work for straggler immunity — compare \
+         the `sim s` column for simulated wall-clock."
+    );
+}

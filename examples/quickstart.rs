@@ -20,6 +20,7 @@ use lgc::coordinator::{
 };
 use lgc::metrics::RunLog;
 use lgc::runtime::Runtime;
+use lgc::sim::SyncMode;
 
 fn base_cfg(use_runtime: bool) -> ExperimentConfig {
     ExperimentConfig {
@@ -95,7 +96,21 @@ fn main() -> anyhow::Result<()> {
     let log = exp.run(trainer.as_mut())?;
     report("dense+weighted (custom)", &log);
 
+    // Sync-mode seam: the same mechanism under FedBuff-style semi-async
+    // aggregation on the event engine — the server aggregates every 2
+    // completed uploads instead of waiting for the slowest device.
+    let mut cfg = base_cfg(use_runtime);
+    cfg.mechanism = Mechanism::LgcStatic;
+    let mut trainer = make_trainer(&cfg)?;
+    let mut exp = ExperimentBuilder::new(cfg)
+        .trainer(trainer.as_ref())
+        .sync_mode(SyncMode::SemiAsync { buffer_k: 2 })
+        .build()?;
+    let log = exp.run(trainer.as_mut())?;
+    report("lgc-static semi-async", &log);
+
     println!("\nLGC matches FedAvg accuracy at a fraction of the bytes/energy —");
-    println!("see benches/ for the full Figure 3/4/5/6 reproductions.");
+    println!("see benches/ for the full Figure 3/4/5/6 reproductions, and");
+    println!("EXPERIMENTS.md for async/straggler scenario recipes.");
     Ok(())
 }

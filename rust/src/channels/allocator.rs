@@ -24,6 +24,12 @@ impl AllocationPlan {
         self.counts.iter().sum()
     }
 
+    /// True when every channel is silent (nothing to upload this round) —
+    /// allocation-free, unlike checking `layer_channels().is_empty()`.
+    pub fn is_silent(&self) -> bool {
+        self.counts.iter().all(|&c| c == 0)
+    }
+
     /// Layer budgets `ks` for the LGC encoder: drop zero-count channels and
     /// keep channel order (channel list is fastest-first by construction, so
     /// layer 0 = base layer = most reliable channel).

@@ -127,7 +127,7 @@ impl Fading {
             Fading::Mid => [0.20, 0.65, 0.15],
             Fading::Bad => [0.10, 0.30, 0.60],
         };
-        match rng.choice_weighted(&rows.map(|x| x)) {
+        match rng.choice_weighted(&rows) {
             0 => Fading::Good,
             1 => Fading::Mid,
             _ => Fading::Bad,
@@ -153,13 +153,26 @@ impl TransferCost {
         Self::default()
     }
 
+    /// Running totals for **one channel across transfers**: all four fields
+    /// sum, including `time_s` (cumulative airtime of this channel). This is
+    /// *not* wall-clock composition — concurrent transfers overlap, so wall
+    /// time comes from the event engine (`crate::sim`), which takes the max
+    /// arrival over a device's parallel channels per upload.
     pub fn accumulate(&mut self, other: &TransferCost) {
-        // Time accumulates as max elsewhere (parallel channels); here plain sum
-        // is for per-channel totals.
         self.time_s += other.time_s;
         self.energy_j += other.energy_j;
         self.money += other.money;
         self.bytes += other.bytes;
+    }
+
+    /// One upload's `(energy_j, money, bytes)` totals across its per-channel
+    /// costs (time excluded — wall time is the max, not the sum). The single
+    /// fold shared by the event engine and the synchronous reference loop,
+    /// so their accounting cannot drift.
+    pub fn fold_totals(costs: &[TransferCost]) -> (f64, f64, u64) {
+        costs.iter().fold((0.0, 0.0, 0u64), |acc, c| {
+            (acc.0 + c.energy_j, acc.1 + c.money, acc.2 + c.bytes)
+        })
     }
 }
 

@@ -9,6 +9,7 @@ use std::path::Path;
 pub use toml::{Document, Value};
 
 use crate::channels::ChannelType;
+use crate::sim::SyncMode;
 
 /// Which FL mechanism to run — a *name* that the coordinator's mechanism
 /// registry resolves to a preset of (compressor, aggregator, policy). The
@@ -152,6 +153,25 @@ pub struct ExperimentConfig {
     pub use_runtime: bool,
     /// Directory with AOT artifacts.
     pub artifacts_dir: String,
+    /// Server synchronization discipline for the event engine. `None` defers
+    /// to the mechanism preset's default (and ultimately `Barrier`). TOML:
+    /// `sync_mode = "barrier" | "semi-async" | "fully-async"` with
+    /// parameters `buffer_k` / `staleness_decay`.
+    pub sync_mode: Option<SyncMode>,
+    /// Standalone `buffer_k` override: applies to whichever semi-async mode
+    /// ends up resolved (explicit `sync_mode` or a preset default like
+    /// `lgc-semi-async`), so `--buffer_k=4` works without restating the
+    /// mode.
+    pub buffer_k: Option<usize>,
+    /// Standalone `staleness_decay` override (see `buffer_k`).
+    pub staleness_decay: Option<f64>,
+    /// Worker threads for device local compute (barrier mode): 1 =
+    /// sequential, 0 = one per available core, n = n. Thread count never
+    /// changes results (per-device forked RNG streams).
+    pub compute_threads: usize,
+    /// Virtual period of channel-fading transitions in the async sync modes
+    /// (barrier mode keeps the one-transition-per-round semantics).
+    pub fading_tick_s: f64,
     /// DRL hyperparameters.
     pub drl: DrlConfig,
 }
@@ -212,6 +232,11 @@ impl Default for ExperimentConfig {
             eval_every: 5,
             use_runtime: true,
             artifacts_dir: "artifacts".to_string(),
+            sync_mode: None,
+            buffer_k: None,
+            staleness_decay: None,
+            compute_threads: 1,
+            fading_tick_s: 0.5,
             drl: DrlConfig::default(),
         }
     }
@@ -297,6 +322,28 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_str("", "artifacts_dir") {
             cfg.artifacts_dir = v.to_string();
         }
+        if let Some(v) = doc.get_i64("", "buffer_k") {
+            cfg.buffer_k = Some(
+                usize::try_from(v).map_err(|_| format!("buffer_k must be >= 1, got {v}"))?,
+            );
+        }
+        if let Some(v) = doc.get_f64("", "staleness_decay") {
+            cfg.staleness_decay = Some(v);
+        }
+        if let Some(kind) = doc.get_str("", "sync_mode") {
+            cfg.sync_mode = Some(SyncMode::parse(
+                kind,
+                cfg.buffer_k.unwrap_or(2),
+                cfg.staleness_decay.unwrap_or(0.5),
+            )?);
+        }
+        if let Some(v) = doc.get_i64("", "compute_threads") {
+            cfg.compute_threads = usize::try_from(v)
+                .map_err(|_| format!("compute_threads must be >= 0 (0 = all cores), got {v}"))?;
+        }
+        if let Some(v) = doc.get_f64("", "fading_tick_s") {
+            cfg.fading_tick_s = v;
+        }
         // [drl]
         if let Some(v) = doc.get_f64("drl", "actor_lr") {
             cfg.drl.actor_lr = v;
@@ -361,6 +408,18 @@ impl ExperimentConfig {
                 self.layer_fracs.len(),
                 self.channel_types.len()
             ));
+        }
+        if let Some(mode) = self.sync_mode {
+            mode.validate()?;
+        }
+        if let Some(k) = self.buffer_k {
+            SyncMode::SemiAsync { buffer_k: k }.validate()?;
+        }
+        if let Some(d) = self.staleness_decay {
+            SyncMode::FullyAsync { staleness_decay: d }.validate()?;
+        }
+        if !(self.fading_tick_s > 0.0) {
+            return Err(format!("fading_tick_s must be > 0, got {}", self.fading_tick_s));
         }
         Ok(())
     }
@@ -437,6 +496,37 @@ mod tests {
         for text in bad {
             let doc = Document::parse(text).unwrap();
             assert!(ExperimentConfig::from_document(&doc).is_err(), "{text}");
+        }
+    }
+
+    #[test]
+    fn sync_mode_keys_parse() {
+        let doc = Document::parse("sync_mode = \"semi-async\"\nbuffer_k = 3\ncompute_threads = 4\n")
+            .unwrap();
+        let cfg = ExperimentConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.sync_mode, Some(SyncMode::SemiAsync { buffer_k: 3 }));
+        assert_eq!(cfg.compute_threads, 4);
+        let doc = Document::parse("sync_mode = \"fully-async\"\nstaleness_decay = 0.7\n").unwrap();
+        let cfg = ExperimentConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.sync_mode, Some(SyncMode::FullyAsync { staleness_decay: 0.7 }));
+        assert!(ExperimentConfig::from_document(&doc).unwrap().fading_tick_s > 0.0);
+        // Standalone parameter keys survive without sync_mode (the builder
+        // overlays them on the mechanism preset's default mode).
+        let doc = Document::parse("buffer_k = 4\n").unwrap();
+        let cfg = ExperimentConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.sync_mode, None);
+        assert_eq!(cfg.buffer_k, Some(4));
+        for bad in [
+            "sync_mode = \"warp\"",
+            "sync_mode = \"semi-async\"\nbuffer_k = 0",
+            "sync_mode = \"fully-async\"\nstaleness_decay = 1.5",
+            "buffer_k = 0",
+            "staleness_decay = 0.0",
+            "fading_tick_s = 0.0",
+            "compute_threads = -1",
+        ] {
+            let doc = Document::parse(bad).unwrap();
+            assert!(ExperimentConfig::from_document(&doc).is_err(), "{bad}");
         }
     }
 

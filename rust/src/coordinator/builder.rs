@@ -34,6 +34,7 @@ use crate::compression::{Compressor, LgcUpdate};
 use crate::config::ExperimentConfig;
 use crate::drl::DeviceAgent;
 use crate::resources::{ComputeCostModel, ResourceMeter};
+use crate::sim::{SimStats, SyncMode};
 use crate::util::Rng;
 
 /// Builder for [`Experiment`] (see the module docs for the flow).
@@ -106,6 +107,12 @@ impl<'a> ExperimentBuilder<'a> {
         self
     }
 
+    /// Pin the server sync mode (wins over the mechanism preset's default).
+    pub fn sync_mode(mut self, mode: SyncMode) -> Self {
+        self.cfg.sync_mode = Some(mode);
+        self
+    }
+
     pub fn build(self) -> Result<Experiment> {
         let cfg = self.cfg;
         cfg.validate().map_err(|e| anyhow!("invalid config: {e}"))?;
@@ -131,6 +138,23 @@ impl<'a> ExperimentBuilder<'a> {
             .aggregator
             .unwrap_or_else(|| preset.unwrap().aggregator.clone());
         let policy_f = self.policy.unwrap_or_else(|| preset.unwrap().policy.clone());
+        // Sync-mode resolution: explicit config > preset default > barrier,
+        // then standalone parameter overrides (`--buffer_k=4` works against
+        // a preset-provided mode without restating `sync_mode`).
+        let sync_mode = cfg
+            .sync_mode
+            .or_else(|| preset.and_then(|p| p.default_sync))
+            .unwrap_or(SyncMode::Barrier);
+        let sync_mode = match sync_mode {
+            SyncMode::SemiAsync { buffer_k } => {
+                SyncMode::SemiAsync { buffer_k: cfg.buffer_k.unwrap_or(buffer_k) }
+            }
+            SyncMode::FullyAsync { staleness_decay } => SyncMode::FullyAsync {
+                staleness_decay: cfg.staleness_decay.unwrap_or(staleness_decay),
+            },
+            SyncMode::Barrier => SyncMode::Barrier,
+        };
+        sync_mode.validate().map_err(|e| anyhow!("invalid sync mode: {e}"))?;
 
         let rng = Rng::new(cfg.seed);
         let init = trainer.init_params();
@@ -193,6 +217,8 @@ impl<'a> ExperimentBuilder<'a> {
             agents,
             policy,
             sync_gap,
+            sync_mode,
+            sim_stats: SimStats::default(),
             rng,
             total_time_s: 0.0,
             d_total,
@@ -273,6 +299,39 @@ mod tests {
         let mut trainer2 = NativeLrTrainer::new(&exp.cfg);
         let log = exp.run(&mut trainer2).unwrap();
         assert_eq!(log.records.len(), 4);
+    }
+
+    #[test]
+    fn sync_mode_resolution_config_over_preset_over_barrier() {
+        // Preset default: the lgc-semi-async preset carries SemiAsync.
+        let mut c = cfg();
+        c.mechanism = Mechanism::parse("lgc-semi-async").unwrap();
+        let trainer = NativeLrTrainer::new(&c);
+        let exp = ExperimentBuilder::new(c).trainer(&trainer).build().unwrap();
+        assert_eq!(exp.sync_mode, SyncMode::SemiAsync { buffer_k: 2 });
+        // Explicit builder/config choice wins over the preset default.
+        let mut c2 = cfg();
+        c2.mechanism = Mechanism::parse("lgc-semi-async").unwrap();
+        let trainer2 = NativeLrTrainer::new(&c2);
+        let exp2 = ExperimentBuilder::new(c2)
+            .trainer(&trainer2)
+            .sync_mode(SyncMode::Barrier)
+            .build()
+            .unwrap();
+        assert_eq!(exp2.sync_mode, SyncMode::Barrier);
+        // No preset default, no config: barrier.
+        let c3 = cfg();
+        let trainer3 = NativeLrTrainer::new(&c3);
+        let exp3 = ExperimentBuilder::new(c3).trainer(&trainer3).build().unwrap();
+        assert_eq!(exp3.sync_mode, SyncMode::Barrier);
+        // A standalone buffer_k override reparameterizes the preset's mode
+        // without restating sync_mode.
+        let mut c4 = cfg();
+        c4.mechanism = Mechanism::parse("lgc-semi-async").unwrap();
+        c4.buffer_k = Some(4);
+        let trainer4 = NativeLrTrainer::new(&c4);
+        let exp4 = ExperimentBuilder::new(c4).trainer(&trainer4).build().unwrap();
+        assert_eq!(exp4.sync_mode, SyncMode::SemiAsync { buffer_k: 4 });
     }
 
     #[test]

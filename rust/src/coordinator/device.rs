@@ -9,10 +9,42 @@
 
 use anyhow::Result;
 
-use super::trainer::LocalTrainer;
+use super::trainer::{DeviceTrainer, LocalTrainer};
 use crate::channels::{AllocationPlan, DeviceChannels, TransferCost};
 use crate::compression::{CompressScratch, Compressor, ErrorFeedback, LayerBudget, LgcUpdate};
 use crate::resources::{ComputeCostModel, ResourceMeter};
+
+/// Fate of one emitted layer of an upload (parallel to the emitted layer
+/// order: entry 0 describes the base layer).
+#[derive(Clone, Copy, Debug)]
+pub struct LayerTransfer {
+    /// Channel the layer rode (index into `DeviceChannels::links`).
+    pub channel: usize,
+    /// Whether it survived the erasure draw (always true on the lossless
+    /// path).
+    pub delivered: bool,
+}
+
+/// Everything the event engine needs to turn one upload into per-layer
+/// in-flight transfers: the delivered payload, the per-layer channel
+/// mapping, and the per-channel cost samples.
+#[derive(Clone, Debug)]
+pub struct UploadOutcome {
+    /// The layers that reached the server (lost layers removed, order
+    /// preserved). Pair with the `delivered` entries of `transfers` to
+    /// recover each delivered layer's channel.
+    pub update: LgcUpdate,
+    /// One entry per *emitted* layer, including lost ones.
+    pub transfers: Vec<LayerTransfer>,
+    /// Max over channels of the transfer time (the paper's parallel
+    /// multi-channel upload).
+    pub wall_time_s: f64,
+    /// Per-channel cost samples (energy/money/airtime are charged whether
+    /// or not the payload survived — the radio transmitted either way).
+    pub costs: Vec<TransferCost>,
+    /// Number of emitted layers that were erased in transit.
+    pub lost_layers: usize,
+}
 
 /// What a device hands the server after its round.
 #[derive(Clone, Debug)]
@@ -98,6 +130,20 @@ impl Device {
         self.compressor.reset();
     }
 
+    /// The one mean-loss accumulation loop both step entry points share —
+    /// keeping the "parallel is bit-identical to sequential" contract in a
+    /// single place.
+    fn run_steps<F>(&mut self, h: usize, mut step: F) -> Result<f64>
+    where
+        F: FnMut(&mut Vec<f32>) -> Result<f64>,
+    {
+        let mut acc = 0.0;
+        for _ in 0..h {
+            acc += step(&mut self.params_hat)?;
+        }
+        Ok(acc / h.max(1) as f64)
+    }
+
     /// Run `h` local SGD steps (Alg. 1 lines 5–7). Returns mean step loss.
     pub fn local_steps(
         &mut self,
@@ -105,11 +151,19 @@ impl Device {
         h: usize,
         lr: f32,
     ) -> Result<f64> {
-        let mut acc = 0.0;
-        for _ in 0..h {
-            acc += trainer.local_step(self.id, &mut self.params_hat, lr)?;
-        }
-        Ok(acc / h.max(1) as f64)
+        let id = self.id;
+        self.run_steps(h, move |params| trainer.local_step(id, params, lr))
+    }
+
+    /// [`Device::local_steps`] over an independently-owned per-device
+    /// trainer handle (the parallel compute path).
+    pub fn local_steps_split(
+        &mut self,
+        trainer: &mut dyn DeviceTrainer,
+        h: usize,
+        lr: f32,
+    ) -> Result<f64> {
+        self.run_steps(h, move |params| trainer.local_step(params, lr))
     }
 
     /// Net local progress `w_m − ŵ^{t+1/2}` followed by the compressor
@@ -119,7 +173,7 @@ impl Device {
     /// local progress simply keeps accumulating until the next real upload.
     fn compress_progress(&mut self, plan: &AllocationPlan) -> LgcUpdate {
         let dim = self.params_hat.len();
-        if plan.layer_channels().is_empty() {
+        if plan.is_silent() {
             return LgcUpdate { dim, layers: Vec::new() };
         }
         self.progress_buf.clear();
@@ -171,17 +225,19 @@ impl Device {
         (update, wall, costs)
     }
 
-    /// Lossy variant of [`Device::compress_and_upload`]: layers ride erasure
-    /// channels; a lost layer's coordinates are **restituted into the error
-    /// memory** (the device learns of the loss via the missing server ACK),
-    /// so gradient mass is never destroyed — only delayed. Returns the
-    /// *delivered* update (what the server sees), the wall time, per-channel
-    /// costs, and the number of lost layers. (A compressor without error
-    /// memory simply loses the layer — dense/quantized baselines.)
-    pub fn compress_and_upload_lossy(
-        &mut self,
-        plan: &AllocationPlan,
-    ) -> (LgcUpdate, f64, Vec<TransferCost>, usize) {
+    /// Lossy upload with the full per-layer outcome — the event engine's
+    /// entry point (async sync modes). Layers ride erasure channels; a lost
+    /// layer's coordinates are **restituted into the error memory** (the
+    /// device learns of the loss via the missing server ACK), so gradient
+    /// mass is never destroyed — only delayed. A compressor without error
+    /// memory genuinely loses the layer (dense/quantized baselines without
+    /// the `ErrorCompensated` wrapper); the built-in presets all wrap.
+    ///
+    /// Note for callers: once the compressor ran, the round's net progress
+    /// lives in `delivered layers + error memory` — the device must be
+    /// `sync`ed to the next broadcast model even if *everything* was lost,
+    /// or the restituted mass would be double-counted next round.
+    pub fn upload_lossy(&mut self, plan: &AllocationPlan) -> UploadOutcome {
         let dim = self.params_hat.len();
         let update = self.compress_progress(plan);
         let sizes = self.upload_sizes(&update, plan);
@@ -189,9 +245,11 @@ impl Device {
         // Split delivered vs lost layers by their channel's delivery flag.
         let channels = plan.layer_channels();
         let mut delivered = Vec::new();
+        let mut transfers = Vec::with_capacity(update.layers.len());
         let mut lost = 0usize;
         for (layer, &ch) in update.layers.into_iter().zip(&channels) {
             if lossy_costs[ch].1 {
+                transfers.push(LayerTransfer { channel: ch, delivered: true });
                 delivered.push(layer);
             } else {
                 // Restitute: the error memory absorbed this layer as if
@@ -203,11 +261,30 @@ impl Device {
                         err.restitute(i as usize, v);
                     }
                 }
+                transfers.push(LayerTransfer { channel: ch, delivered: false });
                 lost += 1;
             }
         }
         let costs = lossy_costs.into_iter().map(|(c, _)| c).collect();
-        (LgcUpdate { dim, layers: delivered }, wall, costs, lost)
+        UploadOutcome {
+            update: LgcUpdate { dim, layers: delivered },
+            transfers,
+            wall_time_s: wall,
+            costs,
+            lost_layers: lost,
+        }
+    }
+
+    /// Lossy variant of [`Device::compress_and_upload`]: a thin wrapper over
+    /// [`Device::upload_lossy`] returning the *delivered* update (what the
+    /// server sees), the wall time, per-channel costs, and the number of
+    /// lost layers.
+    pub fn compress_and_upload_lossy(
+        &mut self,
+        plan: &AllocationPlan,
+    ) -> (LgcUpdate, f64, Vec<TransferCost>, usize) {
+        let o = self.upload_lossy(plan);
+        (o.update, o.wall_time_s, o.costs, o.lost_layers)
     }
 
     /// Receive the new global model (Alg. 1 lines 12–13).

@@ -11,6 +11,13 @@
 //! - the server's [`super::aggregator::Aggregator`] (how uploads combine),
 //! - the experiment's [`super::policy::RoundPolicy`] (per-round `H` and
 //!   layer-to-channel plan, learning from outcomes).
+//!
+//! Execution itself runs on the discrete-event engine in [`crate::sim`]
+//! under the experiment's [`SyncMode`] (barrier / semi-async / fully-async).
+//! [`Experiment::step_round`] is the original synchronous loop, kept as the
+//! bit-for-bit reference that the engine's barrier mode is proven against
+//! (`tests/sim_engine.rs`) and as the stepping API for callers that
+//! interleave rounds with their own logic (DRL episode benches).
 
 use anyhow::Result;
 
@@ -21,8 +28,9 @@ use super::trainer::LocalTrainer;
 use crate::compression::LgcUpdate;
 use crate::config::ExperimentConfig;
 use crate::drl::DeviceAgent;
-use crate::metrics::{RoundRecord, RunLog};
+use crate::metrics::{percentile, RoundRecord, RunLog};
 use crate::resources::ResourceMeter;
+use crate::sim::{SimStats, SyncMode};
 use crate::util::Rng;
 
 /// A full FL experiment (one mechanism preset, one workload).
@@ -34,18 +42,24 @@ pub struct Experiment {
     /// The per-round control policy (decides H and the allocation plan).
     pub policy: Box<dyn RoundPolicy>,
     /// Device m synchronizes when `round % sync_gap[m] == 0` (gap(I_m) ≤ H).
+    /// Barrier-mode concept; the async modes pace devices by arrival instead.
     pub sync_gap: Vec<usize>,
+    /// Server synchronization discipline (resolved by the builder:
+    /// `cfg.sync_mode` > mechanism-preset default > `Barrier`).
+    pub sync_mode: SyncMode,
+    /// Event-engine counters from the most recent [`Experiment::run`].
+    pub sim_stats: SimStats,
     pub(super) rng: Rng,
-    pub(super) total_time_s: f64,
+    pub(crate) total_time_s: f64,
     pub(super) d_total: usize,
     pub(super) d_min: usize,
     /// Reusable per-device decode buffers: the server's wire round-trip
     /// lands here, so the sparse-wire hot path allocates nothing at steady
     /// state. (Dense/packed compressors hand over a freshly built update —
     /// same per-round cost as the seed's FedAvg path.)
-    pub(super) recv_bufs: Vec<LgcUpdate>,
+    pub(crate) recv_bufs: Vec<LgcUpdate>,
     /// Which devices delivered an upload this round.
-    pub(super) received: Vec<bool>,
+    pub(crate) received: Vec<bool>,
 }
 
 impl Experiment {
@@ -70,24 +84,30 @@ impl Experiment {
         self
     }
 
-    /// Run the full experiment; returns the per-round log.
+    /// Override the sync mode after building (test/bench convenience; the
+    /// canonical path is `cfg.sync_mode` or a mechanism-preset default).
+    pub fn with_sync_mode(mut self, mode: SyncMode) -> Self {
+        mode.validate().unwrap_or_else(|e| panic!("{e}"));
+        self.sync_mode = mode;
+        self
+    }
+
+    /// Run the full experiment on the discrete-event engine under
+    /// [`Experiment::sync_mode`]; returns the per-round log (one record per
+    /// round under barrier, one per server aggregation in the async modes).
     pub fn run(&mut self, trainer: &mut dyn LocalTrainer) -> Result<RunLog> {
         let mut log = RunLog::new(&format!(
             "{}-{}",
             self.cfg.mechanism.name(),
             self.cfg.workload.model_name()
         ));
-        for round in 0..self.cfg.rounds {
-            if let Some(rec) = self.step_round(round, trainer)? {
-                log.push(rec);
-            } else {
-                break; // all devices out of budget
-            }
-        }
+        crate::sim::engine::run(self, trainer, &mut log)?;
         Ok(log)
     }
 
-    /// Execute one round. Returns None when every device is out of budget.
+    /// Execute one round of the **synchronous reference loop** (the
+    /// pre-engine semantics, equal to the engine's barrier mode bit for
+    /// bit). Returns None when every device is out of budget.
     pub fn step_round(
         &mut self,
         round: usize,
@@ -115,6 +135,7 @@ impl Experiment {
         let mut bytes_up = 0u64;
         let mut reward_acc = 0.0f64;
         let mut reward_n = 0usize;
+        let mut finishes: Vec<f64> = Vec::with_capacity(m);
 
         for i in 0..m {
             if !active[i] {
@@ -150,15 +171,14 @@ impl Experiment {
                     }
                     self.received[i] = true;
                 }
-                let (j, mo, by) = costs.iter().fold((0.0, 0.0, 0u64), |acc, c| {
-                    (acc.0 + c.energy_j, acc.1 + c.money, acc.2 + c.bytes)
-                });
+                let (j, mo, by) = crate::channels::TransferCost::fold_totals(&costs);
                 (wall, j, mo, by)
             } else {
                 (0.0, 0.0, 0.0, 0) // no sync this round (Alg. 1 lines 14-17)
             };
             wall += comp_s;
             round_wall = round_wall.max(wall);
+            finishes.push(wall);
             dev.meter.record_round(comp_j, comm_j, comm_money, wall);
             if dev.prev_loss.is_nan() {
                 dev.prev_loss = loss;
@@ -225,6 +245,9 @@ impl Experiment {
             } else {
                 f64::NAN
             },
+            finish_p50_s: percentile(&mut finishes, 50.0),
+            finish_p95_s: percentile(&mut finishes, 95.0),
+            stale_updates: 0,
         }))
     }
 

@@ -9,8 +9,12 @@
 //! - [`registry`]: string-keyed mechanism presets
 //!   (compressor × aggregator × policy)
 //! - [`builder`]: [`builder::ExperimentBuilder`], the assembly point
-//! - [`trainer`]: local-training backends (PJRT artifacts / native LR)
-//! - [`experiment`]: the mechanism-free orchestrated loop
+//! - [`trainer`]: local-training backends (PJRT artifacts / native LR),
+//!   splittable into per-device [`trainer::DeviceTrainer`] handles for
+//!   parallel compute
+//! - [`experiment`]: the mechanism-free orchestration state; execution runs
+//!   on the [`crate::sim`] event engine under a
+//!   [`crate::sim::SyncMode`] (barrier / semi-async / fully-async)
 
 pub mod aggregator;
 pub mod builder;
@@ -23,9 +27,11 @@ pub mod trainer;
 
 pub use aggregator::{Aggregator, MeanAggregator, WeightedBySamples};
 pub use builder::ExperimentBuilder;
-pub use device::{Device, DeviceUpload};
+pub use device::{Device, DeviceUpload, LayerTransfer, UploadOutcome};
 pub use experiment::Experiment;
 pub use policy::{DdpgPolicy, FastestSingle, RoundPolicy, StaticLayered};
 pub use registry::{BuildCtx, MechanismPreset, MechanismRegistry};
 pub use server::Server;
-pub use trainer::{LocalTrainer, NativeLrTrainer, PjrtTrainer, WorkloadData};
+pub use trainer::{
+    DeviceTrainer, LocalTrainer, MnistDeviceTrainer, NativeLrTrainer, PjrtTrainer, WorkloadData,
+};

@@ -14,6 +14,7 @@ use crate::compression::{
 };
 use crate::compression::quantize::QsgdQuantizer;
 use crate::config::ExperimentConfig;
+use crate::sim::SyncMode;
 use crate::util::Rng;
 
 /// Everything a factory may need to build per-experiment parts.
@@ -44,6 +45,9 @@ pub struct MechanismPreset {
     pub compressor: CompressorFactory,
     pub aggregator: AggregatorFactory,
     pub policy: PolicyFactory,
+    /// Sync-mode default applied when the config leaves `sync_mode` unset
+    /// (`cfg.sync_mode` always wins; `None` here means `Barrier`).
+    pub default_sync: Option<SyncMode>,
 }
 
 impl MechanismPreset {
@@ -60,7 +64,14 @@ impl MechanismPreset {
             compressor,
             aggregator,
             policy,
+            default_sync: None,
         }
+    }
+
+    /// Attach a sync-mode default (builder style).
+    pub fn with_default_sync(mut self, mode: SyncMode) -> Self {
+        self.default_sync = Some(mode);
+        self
     }
 }
 
@@ -167,6 +178,28 @@ impl MechanismRegistry {
             fastest_single_policy(|ctx| ctx.nparams),
         ));
 
+        reg.register(
+            MechanismPreset::new(
+                "lgc-semi-async",
+                "LGC (static allocation) under FedBuff-style buffered aggregation",
+                ef_lgc_compressor(),
+                mean_aggregator(),
+                static_layered_policy(),
+            )
+            .with_default_sync(SyncMode::SemiAsync { buffer_k: 2 }),
+        );
+
+        reg.register(
+            MechanismPreset::new(
+                "lgc-async",
+                "LGC (static allocation) under FedAsync staleness-weighted application",
+                ef_lgc_compressor(),
+                mean_aggregator(),
+                static_layered_policy(),
+            )
+            .with_default_sync(SyncMode::FullyAsync { staleness_decay: 0.5 }),
+        );
+
         reg
     }
 
@@ -217,6 +250,20 @@ mod tests {
         ] {
             assert!(reg.get(m.name()).is_some(), "no preset for {}", m.name());
         }
+    }
+
+    #[test]
+    fn async_presets_carry_sync_defaults() {
+        let reg = MechanismRegistry::builtin();
+        assert_eq!(
+            reg.get("lgc-semi-async").unwrap().default_sync,
+            Some(SyncMode::SemiAsync { buffer_k: 2 })
+        );
+        assert_eq!(
+            reg.get("lgc-async").unwrap().default_sync,
+            Some(SyncMode::FullyAsync { staleness_decay: 0.5 })
+        );
+        assert_eq!(reg.get("lgc-static").unwrap().default_sync, None);
     }
 
     #[test]

@@ -2,6 +2,15 @@
 //! for gradient compute, which is either the PJRT runtime executing the AOT
 //! artifacts (production path) or the pure-Rust LR reference (test path —
 //! no artifacts needed, exact same interface).
+//!
+//! For parallel device compute, a backend can *split* its per-device shards
+//! into independently-owned [`DeviceTrainer`] handles
+//! ([`LocalTrainer::split_device_trainers`]): each handle carries its own
+//! sampler RNG, batch buffers and model instance, so `std::thread::scope`
+//! workers can train disjoint devices concurrently with results bit-identical
+//! to the sequential path (per-device forked RNG streams — nothing shared).
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -28,6 +37,40 @@ pub trait LocalTrainer {
     fn device_samples(&self, _device: usize) -> usize {
         1
     }
+    /// Move the per-device training shards out into independently-owned
+    /// handles (one per device, device order) for parallel local compute
+    /// (`DeviceTrainer` is `Send` by supertrait). Returns `None` when the
+    /// backend cannot split (e.g. a single shared executable) — callers then
+    /// fall back to sequential [`LocalTrainer::local_step`]. While split,
+    /// the parent keeps evaluation and shard-size queries but cannot serve
+    /// `local_step`; hand the handles back via
+    /// [`LocalTrainer::restore_device_trainers`] (the engine does this at
+    /// the end of every run, so a trainer stays reusable across runs).
+    fn split_device_trainers(&mut self) -> Option<Vec<Box<dyn DeviceTrainer>>> {
+        None
+    }
+
+    /// Reabsorb handles produced by
+    /// [`LocalTrainer::split_device_trainers`], restoring sequential
+    /// `local_step` service with the handles' advanced sampler state (same
+    /// device order). Default: drop them.
+    fn restore_device_trainers(&mut self, _handles: Vec<Box<dyn DeviceTrainer>>) {}
+}
+
+/// An independently-owned single-device training handle (see
+/// [`LocalTrainer::split_device_trainers`]). Implementations must be
+/// deterministic given their construction state: the engine relies on
+/// thread-count-independent results.
+pub trait DeviceTrainer: Send {
+    /// One local SGD step on this device's shard, updating `params` in
+    /// place. Must compute exactly what the parent trainer's
+    /// `local_step(device, ...)` would have.
+    fn local_step(&mut self, params: &mut Vec<f32>, lr: f32) -> Result<f64>;
+    /// Local sample count n_m of this device's shard.
+    fn samples(&self) -> usize;
+    /// Type-erased self-return so the parent trainer can downcast and
+    /// reabsorb the handle (`restore_device_trainers`).
+    fn into_any(self: Box<Self>) -> Box<dyn std::any::Any>;
 }
 
 // ---------------------------------------------------------------------------
@@ -37,8 +80,13 @@ pub trait LocalTrainer {
 /// Materialized per-device training data + held-out eval batches.
 pub enum WorkloadData {
     Mnist {
-        train: Dataset,
+        /// Shared read-only training pool (`Arc` so split-off
+        /// [`DeviceTrainer`] handles can gather from it concurrently).
+        train: Arc<Dataset>,
         shards: Vec<BatchSampler>,
+        /// Shard sizes, recorded at build time so `device_samples` keeps
+        /// answering after the shards were split off.
+        shard_sizes: Vec<usize>,
         eval_x: Vec<f32>,
         eval_y: Vec<i32>,
         batch: usize,
@@ -72,17 +120,19 @@ impl WorkloadData {
                     crate::data::mnist::CLASSES,
                     &mut rng,
                 );
-                let shards = parts
+                let shards: Vec<BatchSampler> = parts
                     .into_iter()
                     .enumerate()
                     .map(|(i, idxs)| BatchSampler::new(idxs, rng.fork(i as u64)))
                     .collect();
+                let shard_sizes = shards.iter().map(BatchSampler::len).collect();
                 let eval = gen.dataset(total as u64 + 10_000, cfg.eval_samples);
                 WorkloadData::Mnist {
                     eval_x: eval.x,
                     eval_y: eval.y,
-                    train,
+                    train: Arc::new(train),
                     shards,
+                    shard_sizes,
                     batch,
                     idx_buf: Vec::new(),
                     xb: Vec::new(),
@@ -120,6 +170,12 @@ impl WorkloadData {
     pub fn next_batch(&mut self, device: usize) -> (BatchX, Vec<i32>) {
         match self {
             WorkloadData::Mnist { train, shards, batch, idx_buf, xb, yb, .. } => {
+                assert!(
+                    !shards.is_empty(),
+                    "training shards were moved out by split_device_trainers(); \
+                     use the DeviceTrainer handles for local steps (a split \
+                     trainer only serves eval and shard sizes)"
+                );
                 shards[device].next_batch(*batch, idx_buf);
                 train.gather(idx_buf, xb, yb);
                 (BatchX::F32(xb.clone()), yb.clone())
@@ -133,13 +189,26 @@ impl WorkloadData {
     }
 
     /// Local sample count of `device` (shard size / corpus span positions).
+    /// Keeps answering after [`WorkloadData::split_mnist_shards`].
     pub fn device_samples(&self, device: usize) -> usize {
         match self {
-            WorkloadData::Mnist { shards, .. } => shards[device].len(),
+            WorkloadData::Mnist { shard_sizes, .. } => shard_sizes[device],
             WorkloadData::Shakespeare { spans, .. } => {
                 let (lo, hi) = spans[device];
                 hi.saturating_sub(lo)
             }
+        }
+    }
+
+    /// Move the MNIST shard samplers out (device order) together with the
+    /// shared training pool; `None` for non-MNIST workloads or if already
+    /// split. The parent keeps eval batches and `device_samples`.
+    pub fn split_mnist_shards(&mut self) -> Option<(Arc<Dataset>, Vec<BatchSampler>, usize)> {
+        match self {
+            WorkloadData::Mnist { train, shards, batch, .. } if !shards.is_empty() => {
+                Some((Arc::clone(train), std::mem::take(shards), *batch))
+            }
+            _ => None,
         }
     }
 
@@ -162,6 +231,72 @@ impl WorkloadData {
                 .map(|b| (BatchX::I32(b.clone()), vec![0i32; *batch], *batch * *seq))
                 .collect(),
         }
+    }
+}
+
+/// The single LR SGD-step implementation behind both the sequential trainer
+/// and the split-off per-device handles: sample a batch, gather it, take
+/// one gradient step. One body means the "parallel is bit-identical to
+/// sequential" contract cannot drift between copies.
+#[allow(clippy::too_many_arguments)]
+fn lr_local_step(
+    model: &NativeLr,
+    train: &Dataset,
+    sampler: &mut BatchSampler,
+    batch: usize,
+    idx_buf: &mut Vec<usize>,
+    xb: &mut Vec<f32>,
+    yb: &mut Vec<i32>,
+    grad_buf: &mut [f32],
+    params: &mut [f32],
+    lr: f32,
+) -> f64 {
+    sampler.next_batch(batch, idx_buf);
+    train.gather(idx_buf, xb, yb);
+    let loss = model.loss_grad(params, xb, yb, grad_buf);
+    for (p, &g) in params.iter_mut().zip(grad_buf.iter()) {
+        *p -= lr * g;
+    }
+    loss
+}
+
+/// Split-off single-device LR trainer: own sampler (its forked RNG stream
+/// moved with it), own batch buffers, own [`NativeLr`] instance — nothing
+/// shared but the read-only dataset, so devices train concurrently with
+/// *exactly* the sequential path's numerics.
+pub struct MnistDeviceTrainer {
+    model: NativeLr,
+    train: Arc<Dataset>,
+    sampler: BatchSampler,
+    batch: usize,
+    idx_buf: Vec<usize>,
+    xb: Vec<f32>,
+    yb: Vec<i32>,
+    grad_buf: Vec<f32>,
+}
+
+impl DeviceTrainer for MnistDeviceTrainer {
+    fn local_step(&mut self, params: &mut Vec<f32>, lr: f32) -> Result<f64> {
+        Ok(lr_local_step(
+            &self.model,
+            &self.train,
+            &mut self.sampler,
+            self.batch,
+            &mut self.idx_buf,
+            &mut self.xb,
+            &mut self.yb,
+            &mut self.grad_buf,
+            params,
+            lr,
+        ))
+    }
+
+    fn samples(&self) -> usize {
+        self.sampler.len()
+    }
+
+    fn into_any(self: Box<Self>) -> Box<dyn std::any::Any> {
+        self
     }
 }
 
@@ -253,16 +388,27 @@ impl LocalTrainer for NativeLrTrainer {
     }
 
     fn local_step(&mut self, device: usize, params: &mut Vec<f32>, lr: f32) -> Result<f64> {
-        let (x, y) = self.data.next_batch(device);
-        let x = match x {
-            BatchX::F32(v) => v,
-            _ => unreachable!(),
+        let WorkloadData::Mnist { train, shards, batch, idx_buf, xb, yb, .. } = &mut self.data
+        else {
+            unreachable!("NativeLrTrainer only supports the LR workload")
         };
-        let loss = self.model.loss_grad(params, &x, &y, &mut self.grad_buf);
-        for (p, &g) in params.iter_mut().zip(&self.grad_buf) {
-            *p -= lr * g;
-        }
-        Ok(loss)
+        assert!(
+            !shards.is_empty(),
+            "training shards were moved out by split_device_trainers(); \
+             use the DeviceTrainer handles for local steps"
+        );
+        Ok(lr_local_step(
+            &self.model,
+            train,
+            &mut shards[device],
+            *batch,
+            idx_buf,
+            xb,
+            yb,
+            &mut self.grad_buf,
+            params,
+            lr,
+        ))
     }
 
     fn device_samples(&self, device: usize) -> usize {
@@ -285,6 +431,55 @@ impl LocalTrainer for NativeLrTrainer {
         }
         anyhow::ensure!(n > 0, "empty eval set");
         Ok((loss_sum / n as f64, correct / n as f64))
+    }
+
+    fn split_device_trainers(&mut self) -> Option<Vec<Box<dyn DeviceTrainer>>> {
+        let (train, shards, batch) = self.data.split_mnist_shards()?;
+        Some(
+            shards
+                .into_iter()
+                .map(|sampler| {
+                    Box::new(MnistDeviceTrainer {
+                        model: NativeLr::new(),
+                        train: Arc::clone(&train),
+                        sampler,
+                        batch,
+                        idx_buf: Vec::new(),
+                        xb: Vec::new(),
+                        yb: Vec::new(),
+                        grad_buf: vec![0f32; crate::models::LR_PARAMS],
+                    }) as Box<dyn DeviceTrainer>
+                })
+                .collect(),
+        )
+    }
+
+    /// Reabsorbs the handles' advanced samplers (device order is trusted —
+    /// hand back exactly what `split_device_trainers` produced). Panics on
+    /// a foreign or miscounted handle set: silently dropping it would leave
+    /// the trainer permanently unable to serve `local_step`.
+    fn restore_device_trainers(&mut self, handles: Vec<Box<dyn DeviceTrainer>>) {
+        let WorkloadData::Mnist { shards, shard_sizes, .. } = &mut self.data else {
+            unreachable!("NativeLrTrainer only supports the LR workload")
+        };
+        assert!(
+            shards.is_empty(),
+            "restore_device_trainers called on a trainer that was never split"
+        );
+        assert_eq!(
+            handles.len(),
+            shard_sizes.len(),
+            "restore_device_trainers: handle count does not match device count"
+        );
+        for (i, handle) in handles.into_iter().enumerate() {
+            let h = handle
+                .into_any()
+                .downcast::<MnistDeviceTrainer>()
+                .unwrap_or_else(|_| {
+                    panic!("restore_device_trainers: handle {i} is not a MnistDeviceTrainer")
+                });
+            shards.push(h.sampler);
+        }
     }
 }
 
@@ -344,6 +539,39 @@ mod tests {
             (BatchX::F32(a), BatchX::F32(b)) => assert_ne!(a, b),
             _ => panic!(),
         }
+    }
+
+    #[test]
+    fn split_handles_match_sequential_steps_bitwise() {
+        let cfg = small_cfg();
+        let mut seq = NativeLrTrainer::new(&cfg);
+        let mut par = NativeLrTrainer::new(&cfg);
+        let mut handles = par.split_device_trainers().expect("LR workload splits");
+        assert_eq!(handles.len(), 3);
+        let mut p_seq = seq.init_params();
+        let mut p_par = p_seq.clone();
+        for step in 0..5 {
+            for dev in 0..3 {
+                let a = seq.local_step(dev, &mut p_seq, 0.05).unwrap();
+                let b = handles[dev].local_step(&mut p_par, 0.05).unwrap();
+                assert_eq!(a.to_bits(), b.to_bits(), "step {step} dev {dev}");
+            }
+        }
+        assert_eq!(p_seq, p_par);
+        // The parent still evaluates and reports shard sizes, but a second
+        // split yields nothing while the handles are out.
+        assert!(par.split_device_trainers().is_none());
+        assert_eq!(par.device_samples(1), handles[1].samples());
+        par.eval(&p_par).unwrap();
+        // Restoring the handles reabsorbs the advanced samplers: the parent
+        // continues exactly where the handles left off.
+        par.restore_device_trainers(handles);
+        for dev in 0..3 {
+            let a = seq.local_step(dev, &mut p_seq, 0.05).unwrap();
+            let b = par.local_step(dev, &mut p_par, 0.05).unwrap();
+            assert_eq!(a.to_bits(), b.to_bits(), "post-restore dev {dev}");
+        }
+        assert!(par.split_device_trainers().is_some(), "splittable again");
     }
 
     #[test]

@@ -35,10 +35,15 @@
 //!
 //! The round loop in [`coordinator::experiment`] is mechanism-free: FedAvg,
 //! LGC-static, LGC-DRL, Top-k, Rand-K and QSGD differ *only* in their
-//! registered preset. See DESIGN.md §"Extension points" for how to register
-//! your own compressor/aggregator/mechanism (with a worked `DenseNoop`
-//! example), and EXPERIMENTS.md for measured results including the
-//! dyn-dispatch overhead budget of the compressor seam.
+//! registered preset. Execution runs on the discrete-event engine in
+//! [`sim`] — virtual clock, per-layer in-flight transfers, and the
+//! [`sim::SyncMode`] seam (`Barrier` reproduces the synchronous loop
+//! bit-for-bit; `SemiAsync`/`FullyAsync` are FedBuff/FedAsync-style servers
+//! for straggler-heavy edge fleets), with barrier-round device compute
+//! parallelized via `std::thread::scope`. See DESIGN.md §"Extension points"
+//! and §"Event engine & sync modes" for how to register your own
+//! compressor/aggregator/mechanism/sync mode, and EXPERIMENTS.md for
+//! measured results and async/straggler scenario recipes.
 //!
 //! ## The three layers
 //!
@@ -76,6 +81,7 @@ pub mod metrics;
 pub mod models;
 pub mod resources;
 pub mod runtime;
+pub mod sim;
 pub mod testing;
 pub mod theory;
 pub mod util;

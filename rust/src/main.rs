@@ -57,7 +57,9 @@ fn print_usage() {
          lgc compare [--key=value ...]\n  lgc info [--artifacts_dir=DIR]\n\n\
          Common keys: mechanism={mechanisms}, workload=lr|cnn|rnn,\n\
          rounds=N, devices=M, lr=F, h_fixed=N, h_max=N, energy_budget=F,\n\
-         money_budget=F, seed=N, use_runtime=true|false, csv=FILE"
+         money_budget=F, seed=N, use_runtime=true|false, csv=FILE,\n\
+         sync_mode=barrier|semi-async|fully-async, buffer_k=N,\n\
+         staleness_decay=F, compute_threads=N (0 = all cores)"
     );
 }
 
@@ -123,6 +125,15 @@ fn cmd_train(args: &[String]) -> Result<()> {
     );
     let mut trainer = make_trainer(&cfg)?;
     let mut exp = ExperimentBuilder::new(cfg).trainer(trainer.as_ref()).build()?;
+    match exp.sync_mode {
+        lgc::sim::SyncMode::Barrier => println!(
+            "sync mode: barrier (compute_threads={})",
+            exp.cfg.compute_threads
+        ),
+        // Async modes pace devices by arrival and run compute inline with
+        // event handling — don't advertise a thread count that isn't used.
+        mode => println!("sync mode: {} (device compute inline)", mode.name()),
+    }
     let log = exp.run(trainer.as_mut())?;
     report(&log);
     if let Some(path) = csv {

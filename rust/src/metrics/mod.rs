@@ -24,6 +24,29 @@ pub struct RoundRecord {
     pub bytes_up: u64,
     /// Mean DRL reward across devices (NaN for non-DRL mechanisms).
     pub drl_reward: f64,
+    /// Median per-device finish time of the round's contributions (barrier:
+    /// compute+upload wall per active device; async: upload durations of
+    /// the aggregated updates). NaN when nothing finished.
+    pub finish_p50_s: f64,
+    /// 95th-percentile finish time — the straggler profile the async sync
+    /// modes exist to beat.
+    pub finish_p95_s: f64,
+    /// Updates applied with staleness > 0 this round (async modes; always 0
+    /// under barrier sync).
+    pub stale_updates: u64,
+}
+
+/// Nearest-rank percentile (`p` in [0, 100]); sorts `xs` in place. NaN for
+/// an empty slice. Shared by the engine and the synchronous reference loop
+/// so straggler stats agree bit-for-bit.
+pub fn percentile(xs: &mut [f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.sort_by(f64::total_cmp);
+    let n = xs.len();
+    let rank = ((p / 100.0) * n as f64).ceil() as usize;
+    xs[rank.clamp(1, n) - 1]
 }
 
 /// A whole training run's log.
@@ -94,12 +117,12 @@ impl RunLog {
     pub fn to_csv(&self) -> String {
         let mut s = String::new();
         s.push_str(
-            "round,train_loss,eval_loss,eval_acc,energy_j,money,round_time_s,total_time_s,bytes_up,drl_reward\n",
+            "round,train_loss,eval_loss,eval_acc,energy_j,money,round_time_s,total_time_s,bytes_up,drl_reward,finish_p50_s,finish_p95_s,stale_updates\n",
         );
         for r in &self.records {
             let _ = writeln!(
                 s,
-                "{},{:.6},{:.6},{:.6},{:.3},{:.6},{:.3},{:.3},{},{:.4}",
+                "{},{:.6},{:.6},{:.6},{:.3},{:.6},{:.3},{:.3},{},{:.4},{:.4},{:.4},{}",
                 r.round,
                 r.train_loss,
                 r.eval_loss,
@@ -109,7 +132,10 @@ impl RunLog {
                 r.round_time_s,
                 r.total_time_s,
                 r.bytes_up,
-                r.drl_reward
+                r.drl_reward,
+                r.finish_p50_s,
+                r.finish_p95_s,
+                r.stale_updates
             );
         }
         s
@@ -139,7 +165,20 @@ mod tests {
             total_time_s: round as f64,
             bytes_up: 100,
             drl_reward: 0.0,
+            ..RoundRecord::default()
         }
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let mut xs = vec![3.0, 1.0, 2.0, 5.0, 4.0];
+        assert_eq!(percentile(&mut xs, 50.0), 3.0);
+        assert_eq!(percentile(&mut xs, 95.0), 5.0);
+        assert_eq!(percentile(&mut xs, 100.0), 5.0);
+        assert_eq!(percentile(&mut xs, 0.0), 1.0);
+        let mut one = vec![7.5];
+        assert_eq!(percentile(&mut one, 50.0), 7.5);
+        assert!(percentile(&mut [], 50.0).is_nan());
     }
 
     #[test]

@@ -1,0 +1,828 @@
+//! The discrete-event simulation engine driving an
+//! [`Experiment`](crate::coordinator::Experiment) under a
+//! [`SyncMode`](super::SyncMode).
+//!
+//! Every compressed layer is its own in-flight transfer: the engine turns an
+//! upload into one [`Event::LayerArrived`] per emitted layer, with the
+//! arrival time derived from the layer's channel cost sample — so the server
+//! observes a base layer on 5G long before an enhancement layer crawling
+//! over 3G, and the async modes act on completed uploads without waiting for
+//! the fleet.
+//!
+//! **Barrier mode is the pre-engine synchronous loop, reproduced
+//! bit-for-bit** (see `Experiment::step_round`, kept as the reference
+//! implementation, and the equivalence test in `tests/sim_engine.rs`):
+//! same per-component RNG streams, same f64 accumulation order for the
+//! per-round reductions, same per-device call sequences. The one deliberate
+//! relaxation: `RoundPolicy::decide` runs for all devices at round start and
+//! `RoundPolicy::observe` for all devices at broadcast (the synchronous loop
+//! interleaved them per device). Per-policy and per-agent call order is
+//! unchanged, so every built-in policy is unaffected.
+//!
+//! Async modes additionally route uploads through the **lossy** channel path
+//! ([`Device::upload_lossy`]): fading-dependent layer erasure actually
+//! happens, and lost layers are restituted into the device's error-feedback
+//! memory rather than silently discarded.
+
+use anyhow::Result;
+
+use super::event::{Event, EventQueue};
+use super::{SimStats, SyncMode};
+use crate::channels::{AllocationPlan, TransferCost};
+use crate::compression::LgcUpdate;
+use crate::coordinator::device::Device;
+use crate::coordinator::experiment::Experiment;
+use crate::coordinator::trainer::{DeviceTrainer, LocalTrainer};
+use crate::metrics::{percentile, RoundRecord, RunLog};
+
+/// Drive `exp` to completion under its resolved sync mode, appending one
+/// [`RoundRecord`] per round (barrier) or per server aggregation (async).
+pub fn run(
+    exp: &mut Experiment,
+    trainer: &mut dyn LocalTrainer,
+    log: &mut RunLog,
+) -> Result<()> {
+    match exp.sync_mode {
+        SyncMode::Barrier => run_barrier(exp, trainer, log),
+        SyncMode::SemiAsync { buffer_k } => {
+            run_async(exp, trainer, log, AsyncKind::Semi { buffer_k })
+        }
+        SyncMode::FullyAsync { staleness_decay } => {
+            run_async(exp, trainer, log, AsyncKind::Fully { staleness_decay })
+        }
+    }
+}
+
+/// `compute_threads` semantics: 0 = one worker per available core, n = n.
+fn resolve_threads(cfg_threads: usize) -> usize {
+    match cfg_threads {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        n => n,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Barrier mode
+// ---------------------------------------------------------------------------
+
+fn run_barrier(
+    exp: &mut Experiment,
+    trainer: &mut dyn LocalTrainer,
+    log: &mut RunLog,
+) -> Result<()> {
+    let m = exp.devices.len();
+    let samples: Vec<usize> = (0..m).map(|i| trainer.device_samples(i)).collect();
+    let threads = resolve_threads(exp.cfg.compute_threads);
+    // Parallel compute needs independently-owned per-device trainers; fall
+    // back to the sequential path when the backend cannot split. Whatever
+    // happens, hand the handles back afterwards so the trainer stays usable
+    // for further runs (with the advanced sampler state).
+    let mut handles = if threads > 1 { trainer.split_device_trainers() } else { None };
+    let result = barrier_rounds(exp, trainer, log, &mut handles, threads, &samples);
+    if let Some(h) = handles.take() {
+        trainer.restore_device_trainers(h);
+    }
+    result
+}
+
+fn barrier_rounds(
+    exp: &mut Experiment,
+    trainer: &mut dyn LocalTrainer,
+    log: &mut RunLog,
+    handles: &mut Option<Vec<Box<dyn DeviceTrainer>>>,
+    threads: usize,
+    samples: &[usize],
+) -> Result<()> {
+    let m = exp.devices.len();
+    if let Some(h) = handles.as_ref() {
+        anyhow::ensure!(
+            h.len() == m,
+            "split_device_trainers returned {} handles for {m} devices",
+            h.len()
+        );
+    }
+    let mut queue = EventQueue::new();
+    let mut stats = SimStats::default();
+
+    // The single barrier-round broadcast trigger: once nothing is pending,
+    // schedule the Broadcast at the round's wall time (exactly once).
+    fn maybe_broadcast(
+        queue: &mut EventQueue,
+        pending_compute: usize,
+        pending_layers: usize,
+        scheduled: &mut bool,
+        round_wall: f64,
+    ) {
+        if pending_compute == 0 && pending_layers == 0 && !*scheduled {
+            queue.push(round_wall, Event::Broadcast);
+            *scheduled = true;
+        }
+    }
+
+    'rounds: for round in 0..exp.cfg.rounds {
+        // Per-round state, indexed by device. Event times within a round are
+        // offsets from the round start, so the f64 arithmetic matches the
+        // synchronous loop exactly; the virtual clock is `exp.total_time_s`.
+        let mut active = vec![false; m];
+        let mut syncs = vec![false; m];
+        let mut hs = vec![0usize; m];
+        let mut plans: Vec<Option<AllocationPlan>> = (0..m).map(|_| None).collect();
+        let mut losses = vec![0.0f64; m];
+        let mut comp_s = vec![0.0f64; m];
+        let mut comp_j = vec![0.0f64; m];
+        let mut walls = vec![0.0f64; m];
+        let mut round_wall = 0.0f64;
+        let mut bytes_up = 0u64;
+        let mut pending_compute = 0usize;
+        let mut pending_layers = 0usize;
+        let mut broadcast_scheduled = false;
+
+        queue.push(0.0, Event::FadingTick);
+        while let Some((_t, ev)) = queue.pop() {
+            match ev {
+                Event::FadingTick => {
+                    // Network dynamics advance for every device (in-budget
+                    // or not), exactly like the synchronous loop.
+                    for dev in &mut exp.devices {
+                        dev.channels.step_round();
+                    }
+                    for i in 0..m {
+                        active[i] = exp.devices[i].meter.within_budget();
+                    }
+                    if active.iter().all(|&a| !a) {
+                        break 'rounds; // every device out of budget
+                    }
+                    for i in 0..m {
+                        syncs[i] = active[i] && (round + 1) % exp.sync_gap[i] == 0;
+                    }
+                    exp.received.iter_mut().for_each(|r| *r = false);
+                    // The policy seam, in device order.
+                    for i in 0..m {
+                        if !active[i] {
+                            continue;
+                        }
+                        let (h, plan) =
+                            exp.policy
+                                .decide(round, &exp.devices[i], exp.agents[i].as_mut());
+                        hs[i] = h;
+                        plans[i] = Some(plan);
+                    }
+                    // Local compute (Alg. 1 lines 5-7): parallel when the
+                    // trainer split off per-device handles, else sequential.
+                    // Both paths are bit-identical (per-device RNG streams).
+                    if let Some(hnds) = handles.as_mut() {
+                        parallel_local_steps(
+                            &mut exp.devices,
+                            hnds,
+                            &hs,
+                            &active,
+                            exp.cfg.lr,
+                            threads,
+                            &mut losses,
+                        )?;
+                    } else {
+                        for i in 0..m {
+                            if active[i] {
+                                losses[i] =
+                                    exp.devices[i].local_steps(trainer, hs[i], exp.cfg.lr)?;
+                            }
+                        }
+                    }
+                    for i in 0..m {
+                        if !active[i] {
+                            continue;
+                        }
+                        let (j, s) = exp.devices[i].compute_cost(hs[i]);
+                        comp_j[i] = j;
+                        comp_s[i] = s;
+                        queue.push(s, Event::ComputeDone { device: i });
+                        pending_compute += 1;
+                    }
+                }
+                Event::ComputeDone { device: i } => {
+                    pending_compute -= 1;
+                    let plan = plans[i].take().expect("plan decided at round start");
+                    // Communication (lines 8-11): the compressor seam.
+                    let (mut wall, comm_j, comm_money, bytes) = if syncs[i] {
+                        let (update, wall, costs) = exp.devices[i].compress_and_upload(&plan);
+                        if !update.layers.is_empty() {
+                            // One in-flight transfer per emitted layer:
+                            // layer c rides the plan's c-th active channel
+                            // and lands after that channel's sampled
+                            // transfer time.
+                            let channels = plan.layer_channels();
+                            for (layer_idx, &ch) in
+                                channels.iter().take(update.layers.len()).enumerate()
+                            {
+                                queue.push(
+                                    comp_s[i] + costs[ch].time_s,
+                                    Event::LayerArrived { device: i, channel: ch, layer: layer_idx },
+                                );
+                                pending_layers += 1;
+                            }
+                            if exp.devices[i].sparse_wire() {
+                                exp.server
+                                    .decode_from_wire_into(&update, &mut exp.recv_bufs[i])?;
+                            } else {
+                                exp.recv_bufs[i] = update;
+                            }
+                            exp.received[i] = true;
+                        }
+                        let (j, mo, by) = TransferCost::fold_totals(&costs);
+                        (wall, j, mo, by)
+                    } else {
+                        (0.0, 0.0, 0.0, 0) // no sync this round (lines 14-17)
+                    };
+                    wall += comp_s[i];
+                    walls[i] = wall;
+                    round_wall = round_wall.max(wall);
+                    let dev = &mut exp.devices[i];
+                    dev.meter.record_round(comp_j[i], comm_j, comm_money, wall);
+                    if dev.prev_loss.is_nan() {
+                        dev.prev_loss = losses[i];
+                    }
+                    let delta = dev.prev_loss - losses[i];
+                    dev.prev_loss = losses[i];
+                    dev.last_delta = delta;
+                    bytes_up += bytes;
+                    maybe_broadcast(
+                        &mut queue,
+                        pending_compute,
+                        pending_layers,
+                        &mut broadcast_scheduled,
+                        round_wall,
+                    );
+                }
+                Event::LayerArrived { .. } => {
+                    pending_layers -= 1;
+                    maybe_broadcast(
+                        &mut queue,
+                        pending_compute,
+                        pending_layers,
+                        &mut broadcast_scheduled,
+                        round_wall,
+                    );
+                }
+                Event::Broadcast => {
+                    // Reductions in device order: the f64 accumulation order
+                    // of the synchronous loop, preserved.
+                    let done = round + 1 == exp.cfg.rounds;
+                    let mut loss_sum = 0.0f64;
+                    let mut loss_n = 0usize;
+                    let mut reward_acc = 0.0f64;
+                    let mut reward_n = 0usize;
+                    for i in 0..m {
+                        if !active[i] {
+                            continue;
+                        }
+                        loss_sum += losses[i];
+                        loss_n += 1;
+                        let delta = exp.devices[i].last_delta;
+                        if let Some(r) = exp.policy.observe(
+                            &exp.devices[i],
+                            exp.agents[i].as_mut(),
+                            delta,
+                            done,
+                        ) {
+                            reward_acc += r;
+                            reward_n += 1;
+                        }
+                    }
+                    // Aggregation + broadcast (lines 18-22): the aggregator
+                    // seam.
+                    let received_idx: Vec<usize> =
+                        (0..m).filter(|&i| exp.received[i]).collect();
+                    if !received_idx.is_empty() {
+                        let weights: Vec<f64> =
+                            received_idx.iter().map(|&i| samples[i] as f64).collect();
+                        let uploads: Vec<&LgcUpdate> =
+                            received_idx.iter().map(|&i| &exp.recv_bufs[i]).collect();
+                        exp.server.set_round_weights(&weights);
+                        exp.server.aggregate_and_apply(&uploads);
+                        for &i in &received_idx {
+                            exp.devices[i].sync(&exp.server.params);
+                        }
+                    }
+                    exp.total_time_s += round_wall;
+                    let (eval_loss, eval_acc) = if round % exp.cfg.eval_every == 0 || done {
+                        trainer.eval(&exp.server.params)?
+                    } else {
+                        (f64::NAN, f64::NAN)
+                    };
+                    let (tot_energy, tot_money) =
+                        exp.devices.iter().fold((0.0, 0.0), |acc, d| {
+                            (acc.0 + d.meter.energy_used, acc.1 + d.meter.money_used)
+                        });
+                    let mut finishes: Vec<f64> =
+                        (0..m).filter(|&i| active[i]).map(|i| walls[i]).collect();
+                    let finish_p50_s = percentile(&mut finishes, 50.0);
+                    let finish_p95_s = percentile(&mut finishes, 95.0);
+                    log.push(RoundRecord {
+                        round,
+                        train_loss: loss_sum / loss_n.max(1) as f64,
+                        eval_loss,
+                        eval_acc,
+                        energy_j: tot_energy,
+                        money: tot_money,
+                        round_time_s: round_wall,
+                        total_time_s: exp.total_time_s,
+                        bytes_up,
+                        drl_reward: if reward_n > 0 {
+                            reward_acc / reward_n as f64
+                        } else {
+                            f64::NAN
+                        },
+                        finish_p50_s,
+                        finish_p95_s,
+                        stale_updates: 0,
+                    });
+                    stats.records += 1;
+                }
+            }
+        }
+    }
+    stats.events = queue.popped();
+    exp.sim_stats = stats;
+    Ok(())
+}
+
+/// Run every active device's local steps, striped over at most `threads`
+/// scoped worker threads. Each job owns a disjoint `&mut Device` plus its
+/// own [`DeviceTrainer`] handle, so the results are bit-identical to the
+/// sequential path regardless of thread count or scheduling.
+fn parallel_local_steps(
+    devices: &mut [Device],
+    handles: &mut [Box<dyn DeviceTrainer>],
+    hs: &[usize],
+    active: &[bool],
+    lr: f32,
+    threads: usize,
+    losses: &mut [f64],
+) -> Result<()> {
+    struct Job<'a> {
+        dev: &'a mut Device,
+        tr: &'a mut dyn DeviceTrainer,
+        h: usize,
+        out: &'a mut f64,
+        err: Option<anyhow::Error>,
+    }
+    let mut jobs: Vec<Job> = Vec::new();
+    for (((dev, tr), (&h, &is_active)), out) in devices
+        .iter_mut()
+        .zip(handles.iter_mut())
+        .zip(hs.iter().zip(active.iter()))
+        .zip(losses.iter_mut())
+    {
+        if !is_active {
+            continue;
+        }
+        jobs.push(Job { dev, tr: &mut **tr, h, out, err: None });
+    }
+    if jobs.is_empty() {
+        return Ok(());
+    }
+    let chunk = jobs.len().div_ceil(threads.max(1));
+    std::thread::scope(|s| {
+        for batch in jobs.chunks_mut(chunk) {
+            s.spawn(move || {
+                for job in batch.iter_mut() {
+                    match job.dev.local_steps_split(job.tr, job.h, lr) {
+                        Ok(loss) => *job.out = loss,
+                        Err(e) => job.err = Some(e),
+                    }
+                }
+            });
+        }
+    });
+    for job in jobs {
+        if let Some(e) = job.err {
+            return Err(e);
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Async modes (semi-async buffered / fully-async staleness-weighted)
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy)]
+enum AsyncKind {
+    Semi { buffer_k: usize },
+    Fully { staleness_decay: f64 },
+}
+
+/// Per-device lifecycle state for the async engine.
+#[derive(Default)]
+struct DevState {
+    /// False once the device ran out of budget (it never restarts).
+    alive: bool,
+    /// Upload finished; waiting for the next broadcast to resync + restart.
+    waiting: bool,
+    started_at: f64,
+    /// When this device's own transmission finishes (compute end + max
+    /// channel transfer time, lost layers included — the radio is occupied
+    /// either way, and loss is only detectable after TX ends).
+    tx_end: f64,
+    /// Server version the device last synchronized to.
+    model_version: u64,
+    /// Whether the last upload actually invoked the compressor (false for an
+    /// all-silent plan): only then does the round's progress live in
+    /// `delivered layers + error memory`, requiring a resync. A device that
+    /// never compressed keeps accumulating locally, like barrier non-sync
+    /// rounds.
+    compressed: bool,
+    loss: f64,
+    comp_s: f64,
+    comp_j: f64,
+    plan: Option<AllocationPlan>,
+    /// Delivered layers still in flight (scheduled arrivals outstanding).
+    expected: usize,
+    arrived: usize,
+    update: Option<LgcUpdate>,
+}
+
+/// One completed upload parked in the semi-async server buffer.
+struct Buffered {
+    /// Owner device — the decoded update's buffer returns to
+    /// `recv_bufs[device]` after aggregation (steady-state reuse).
+    device: usize,
+    update: LgcUpdate,
+    weight: f64,
+    loss: f64,
+    staleness: u64,
+    duration: f64,
+}
+
+/// Shared mutable context of the async run (everything that is not the
+/// experiment, the queue, or per-device state).
+struct AsyncCtx {
+    kind: AsyncKind,
+    samples: Vec<usize>,
+    buffer: Vec<Buffered>,
+    /// Devices with compute or layers still in flight.
+    busy: usize,
+    server_version: u64,
+    last_record_t: f64,
+    window_bytes: u64,
+    window_rewards: f64,
+    window_reward_n: usize,
+    stats: SimStats,
+}
+
+fn run_async(
+    exp: &mut Experiment,
+    trainer: &mut dyn LocalTrainer,
+    log: &mut RunLog,
+    kind: AsyncKind,
+) -> Result<()> {
+    let m = exp.devices.len();
+    let mut queue = EventQueue::new();
+    let mut st: Vec<DevState> = (0..m).map(|_| DevState::default()).collect();
+    let mut ctx = AsyncCtx {
+        kind,
+        samples: (0..m).map(|i| trainer.device_samples(i)).collect(),
+        buffer: Vec::new(),
+        busy: 0,
+        server_version: 0,
+        last_record_t: exp.total_time_s,
+        window_bytes: 0,
+        window_rewards: 0.0,
+        window_reward_n: 0,
+        stats: SimStats::default(),
+    };
+    let clock0 = exp.total_time_s;
+
+    for i in 0..m {
+        begin_device_round(exp, trainer, &mut st, &mut queue, &mut ctx, i, clock0, 0)?;
+    }
+    if ctx.busy == 0 {
+        exp.sim_stats = ctx.stats;
+        return Ok(()); // nobody within budget
+    }
+    queue.push(clock0 + exp.cfg.fading_tick_s, Event::FadingTick);
+
+    // Defensive bound: an async run always advances virtual time (compute
+    // takes > 0 s), but a pathological setup where no record is ever emitted
+    // (e.g. every upload erased forever) should fail loudly, not spin.
+    const ASYNC_EVENT_CAP: u64 = 50_000_000;
+
+    while log.records.len() < exp.cfg.rounds {
+        let Some((t, ev)) = queue.pop() else { break };
+        anyhow::ensure!(
+            queue.popped() <= ASYNC_EVENT_CAP,
+            "async engine exceeded {ASYNC_EVENT_CAP} events with only {} of {} records — \
+             livelocked scenario?",
+            log.records.len(),
+            exp.cfg.rounds
+        );
+        match ev {
+            Event::FadingTick => {
+                // Channel dynamics on a fixed virtual period, decoupled from
+                // device round boundaries.
+                for dev in &mut exp.devices {
+                    dev.channels.step_round();
+                }
+                if st.iter().any(|d| d.alive) {
+                    queue.push(t + exp.cfg.fading_tick_s, Event::FadingTick);
+                }
+            }
+            Event::ComputeDone { device: i } => {
+                let plan = st[i].plan.take().expect("plan set at round start");
+                // An all-silent plan never invokes the compressor — the
+                // device must then skip the resync or its accumulated local
+                // progress would be discarded (mirrors the barrier loop's
+                // `received` guard).
+                st[i].compressed = !plan.is_silent();
+                // The lossy per-layer path: fading erasures happen, and lost
+                // layers were restituted into the error memory by the
+                // device (never silently discarded).
+                let outcome = exp.devices[i].upload_lossy(&plan);
+                let (comm_j, comm_money, bytes) = TransferCost::fold_totals(&outcome.costs);
+                exp.devices[i].meter.record_round(
+                    st[i].comp_j,
+                    comm_j,
+                    comm_money,
+                    st[i].comp_s + outcome.wall_time_s,
+                );
+                ctx.window_bytes += bytes;
+                ctx.stats.lost_layers += outcome.lost_layers as u64;
+                // Policy learning signal, now that the meter is fresh.
+                let loss = st[i].loss;
+                let dev = &mut exp.devices[i];
+                if dev.prev_loss.is_nan() {
+                    dev.prev_loss = loss;
+                }
+                let delta = dev.prev_loss - loss;
+                dev.prev_loss = loss;
+                dev.last_delta = delta;
+                let done = log.records.len() + 1 >= exp.cfg.rounds;
+                if let Some(r) =
+                    exp.policy
+                        .observe(&exp.devices[i], exp.agents[i].as_mut(), delta, done)
+                {
+                    ctx.window_rewards += r;
+                    ctx.window_reward_n += 1;
+                }
+                // One in-flight transfer per *delivered* layer.
+                let mut expected = 0usize;
+                for (layer_idx, tr) in outcome.transfers.iter().enumerate() {
+                    if tr.delivered {
+                        queue.push(
+                            t + outcome.costs[tr.channel].time_s,
+                            Event::LayerArrived {
+                                device: i,
+                                channel: tr.channel,
+                                layer: layer_idx,
+                            },
+                        );
+                        expected += 1;
+                    }
+                }
+                st[i].update = Some(outcome.update);
+                st[i].expected = expected;
+                st[i].arrived = 0;
+                st[i].tx_end = t + outcome.wall_time_s;
+                if expected == 0 {
+                    // Nothing survived (or an all-silent plan): the upload
+                    // completes once the device's own transmission ends (it
+                    // cannot detect a loss earlier). If the compressor ran,
+                    // the device still resyncs at the next broadcast — its
+                    // progress was absorbed into delivered layers + error
+                    // memory.
+                    let tx_end = st[i].tx_end;
+                    complete_upload(exp, trainer, &mut st, &mut queue, &mut ctx, log, i, tx_end)?;
+                }
+            }
+            Event::LayerArrived { device: i, .. } => {
+                st[i].arrived += 1;
+                if st[i].arrived == st[i].expected {
+                    complete_upload(exp, trainer, &mut st, &mut queue, &mut ctx, log, i, t)?;
+                }
+            }
+            Event::Broadcast => {
+                // Resync + restart every device waiting on a fresh model —
+                // but never before the device's own radio went quiet (a
+                // lost layer's airtime was still spent).
+                let era = log.records.len();
+                for i in 0..m {
+                    if st[i].waiting {
+                        st[i].waiting = false;
+                        if st[i].compressed {
+                            exp.devices[i].sync(&exp.server.params);
+                            st[i].model_version = ctx.server_version;
+                        }
+                        let restart_at = t.max(st[i].tx_end);
+                        begin_device_round(
+                            exp, trainer, &mut st, &mut queue, &mut ctx, i, restart_at, era,
+                        )?;
+                    }
+                }
+            }
+        }
+    }
+    ctx.stats.events = queue.popped();
+    exp.sim_stats = ctx.stats;
+    Ok(())
+}
+
+/// Start one device round at virtual time `now`: policy decision, local
+/// steps, and a `ComputeDone` scheduled after the compute time.
+#[allow(clippy::too_many_arguments)]
+fn begin_device_round(
+    exp: &mut Experiment,
+    trainer: &mut dyn LocalTrainer,
+    st: &mut [DevState],
+    queue: &mut EventQueue,
+    ctx: &mut AsyncCtx,
+    i: usize,
+    now: f64,
+    era: usize,
+) -> Result<()> {
+    if !exp.devices[i].meter.within_budget() {
+        st[i].alive = false;
+        return Ok(());
+    }
+    let (h, plan) = exp.policy.decide(era, &exp.devices[i], exp.agents[i].as_mut());
+    let loss = exp.devices[i].local_steps(trainer, h, exp.cfg.lr)?;
+    let (comp_j, comp_s) = exp.devices[i].compute_cost(h);
+    let s = &mut st[i];
+    s.alive = true;
+    s.waiting = false;
+    s.started_at = now;
+    s.loss = loss;
+    s.comp_s = comp_s;
+    s.comp_j = comp_j;
+    s.plan = Some(plan);
+    s.expected = 0;
+    s.arrived = 0;
+    s.update = None;
+    queue.push(now + comp_s, Event::ComputeDone { device: i });
+    ctx.busy += 1;
+    Ok(())
+}
+
+/// All of device `i`'s delivered layers have landed: hand the update to the
+/// sync-mode server logic and park the device until the next broadcast.
+#[allow(clippy::too_many_arguments)]
+fn complete_upload(
+    exp: &mut Experiment,
+    trainer: &mut dyn LocalTrainer,
+    st: &mut [DevState],
+    queue: &mut EventQueue,
+    ctx: &mut AsyncCtx,
+    log: &mut RunLog,
+    i: usize,
+    t: f64,
+) -> Result<()> {
+    st[i].waiting = true;
+    ctx.busy -= 1;
+    let duration = t - st[i].started_at;
+    let staleness = ctx.server_version - st[i].model_version;
+    let mut update = st[i].update.take().expect("upload in flight");
+    // Round-trip through the wire format, as the server sees it (reusing the
+    // per-device decode buffer).
+    if !update.layers.is_empty() && exp.devices[i].sparse_wire() {
+        let mut buf = std::mem::replace(
+            &mut exp.recv_bufs[i],
+            LgcUpdate { dim: 0, layers: Vec::new() },
+        );
+        exp.server.decode_from_wire_into(&update, &mut buf)?;
+        update = buf;
+    }
+    if !update.layers.is_empty() {
+        match ctx.kind {
+            AsyncKind::Semi { buffer_k: _ } => {
+                ctx.buffer.push(Buffered {
+                    device: i,
+                    update,
+                    weight: ctx.samples[i] as f64,
+                    loss: st[i].loss,
+                    staleness,
+                    duration,
+                });
+            }
+            AsyncKind::Fully { staleness_decay } => {
+                // FedAsync-style application: scale by decay^staleness, then
+                // flow through the aggregator seam as a single-upload batch.
+                // (powf, not powi: staleness is unbounded, and decay in
+                // (0, 1] underflows to 0 for ultra-stale updates — exactly
+                // the documented suppression.)
+                let w = staleness_decay.powf(staleness as f64) as f32;
+                for layer in &mut update.layers {
+                    for v in &mut layer.values {
+                        *v *= w;
+                    }
+                }
+                exp.server.set_round_weights(&[ctx.samples[i] as f64]);
+                exp.server.aggregate_and_apply(&[&update]);
+                // Hand the decode buffer back for reuse by the next upload.
+                exp.recv_bufs[i] = update;
+                ctx.server_version += 1;
+                push_async_record(exp, trainer, ctx, log, t, &[(st[i].loss, duration, staleness)])?;
+                queue.push(t, Event::Broadcast);
+            }
+        }
+    } else if matches!(ctx.kind, AsyncKind::Fully { .. }) {
+        // Entirely lost: nothing to apply, but resync the device (its
+        // progress sits in the error memory now).
+        queue.push(t, Event::Broadcast);
+    }
+    if let AsyncKind::Semi { buffer_k } = ctx.kind {
+        if ctx.buffer.len() >= buffer_k || (ctx.busy == 0 && !ctx.buffer.is_empty()) {
+            // FedBuff trigger — or a flush when the whole fleet is parked on
+            // a buffer that can no longer fill.
+            aggregate_semi_buffer(exp, trainer, ctx, log, t, buffer_k)?;
+            queue.push(t, Event::Broadcast);
+        } else if ctx.busy == 0 && ctx.buffer.is_empty() {
+            // Everyone waiting, nothing aggregable (all uploads erased):
+            // broadcast anyway so the fleet resyncs and retries.
+            queue.push(t, Event::Broadcast);
+        }
+    }
+    Ok(())
+}
+
+/// Aggregate the first `min(len, buffer_k)` buffered uploads through the
+/// aggregator seam and emit one round record.
+fn aggregate_semi_buffer(
+    exp: &mut Experiment,
+    trainer: &mut dyn LocalTrainer,
+    ctx: &mut AsyncCtx,
+    log: &mut RunLog,
+    t: f64,
+    buffer_k: usize,
+) -> Result<()> {
+    let take = ctx.buffer.len().min(buffer_k.max(1));
+    let batch: Vec<Buffered> = ctx.buffer.drain(..take).collect();
+    let weights: Vec<f64> = batch.iter().map(|b| b.weight).collect();
+    let uploads: Vec<&LgcUpdate> = batch.iter().map(|b| &b.update).collect();
+    exp.server.set_round_weights(&weights);
+    exp.server.aggregate_and_apply(&uploads);
+    ctx.server_version += 1;
+    let contributions: Vec<(f64, f64, u64)> =
+        batch.iter().map(|b| (b.loss, b.duration, b.staleness)).collect();
+    // Return the decode buffers to their owner devices for steady-state
+    // reuse (each next upload decodes into them again).
+    for b in batch {
+        exp.recv_bufs[b.device] = b.update;
+    }
+    push_async_record(exp, trainer, ctx, log, t, &contributions)
+}
+
+/// Emit one async-mode [`RoundRecord`]: one per server aggregation, with the
+/// window since the previous record as its time span.
+fn push_async_record(
+    exp: &mut Experiment,
+    trainer: &mut dyn LocalTrainer,
+    ctx: &mut AsyncCtx,
+    log: &mut RunLog,
+    now: f64,
+    contributions: &[(f64, f64, u64)],
+) -> Result<()> {
+    let round = log.records.len();
+    let done = round + 1 >= exp.cfg.rounds;
+    let train_loss = if contributions.is_empty() {
+        f64::NAN
+    } else {
+        contributions.iter().map(|c| c.0).sum::<f64>() / contributions.len() as f64
+    };
+    let mut finishes: Vec<f64> = contributions.iter().map(|c| c.1).collect();
+    let stale_updates = contributions.iter().filter(|c| c.2 > 0).count() as u64;
+    ctx.stats.stale_updates += stale_updates;
+    let (eval_loss, eval_acc) = if round % exp.cfg.eval_every == 0 || done {
+        trainer.eval(&exp.server.params)?
+    } else {
+        (f64::NAN, f64::NAN)
+    };
+    let (tot_energy, tot_money) = exp.devices.iter().fold((0.0, 0.0), |acc, d| {
+        (acc.0 + d.meter.energy_used, acc.1 + d.meter.money_used)
+    });
+    let rec = RoundRecord {
+        round,
+        train_loss,
+        eval_loss,
+        eval_acc,
+        energy_j: tot_energy,
+        money: tot_money,
+        round_time_s: now - ctx.last_record_t,
+        total_time_s: now,
+        bytes_up: ctx.window_bytes,
+        drl_reward: if ctx.window_reward_n > 0 {
+            ctx.window_rewards / ctx.window_reward_n as f64
+        } else {
+            f64::NAN
+        },
+        finish_p50_s: percentile(&mut finishes, 50.0),
+        finish_p95_s: percentile(&mut finishes, 95.0),
+        stale_updates,
+    };
+    exp.total_time_s = now;
+    ctx.last_record_t = now;
+    ctx.window_bytes = 0;
+    ctx.window_rewards = 0.0;
+    ctx.window_reward_n = 0;
+    log.push(rec);
+    ctx.stats.records += 1;
+    Ok(())
+}

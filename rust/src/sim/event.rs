@@ -1,0 +1,169 @@
+//! Discrete events and the virtual-time event queue.
+//!
+//! The simulation core is a binary min-heap of [`Scheduled`] entries ordered
+//! by `(time, seq)`: virtual seconds first, insertion sequence second. The
+//! `seq` tie-break makes event ordering *total* and deterministic — two
+//! events at the same instant pop in the order they were scheduled, so a
+//! seeded run replays identically regardless of heap internals.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// One simulation event. Everything the engine reacts to is one of these
+/// four kinds (see DESIGN.md §"Event engine & sync modes").
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Event {
+    /// Advance every link's Markov fading chain. Barrier mode fires one tick
+    /// at the start of each round (the pre-engine semantics); async modes
+    /// fire it on a fixed virtual period (`cfg.fading_tick_s`), decoupling
+    /// channel dynamics from round boundaries.
+    FadingTick,
+    /// `device` finished its local SGD steps and starts uploading.
+    ComputeDone { device: usize },
+    /// One compressed layer of `device`'s upload landed at the server after
+    /// crossing `channel`. `layer` indexes the emitted layers of the upload
+    /// (0 = base layer).
+    LayerArrived { device: usize, channel: usize, layer: usize },
+    /// The server finished an aggregation and pushes the fresh global model
+    /// to the devices that are waiting for it.
+    Broadcast,
+}
+
+/// A heap entry: an [`Event`] at a virtual time, with an insertion sequence
+/// number for deterministic tie-breaking.
+#[derive(Clone, Debug)]
+struct Scheduled {
+    time: f64,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.time.to_bits() == other.time.to_bits() && self.seq == other.seq
+    }
+}
+
+impl Eq for Scheduled {}
+
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed on purpose: BinaryHeap is a max-heap, we want the
+        // earliest (time, seq) on top.
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Min-heap event queue over virtual time.
+#[derive(Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Scheduled>,
+    next_seq: u64,
+    popped: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule `event` at virtual time `time` (seconds). Events at equal
+    /// times pop in scheduling order.
+    pub fn push(&mut self, time: f64, event: Event) {
+        debug_assert!(time.is_finite(), "event scheduled at non-finite time");
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Scheduled { time, seq, event });
+    }
+
+    /// Pop the earliest event, if any.
+    pub fn pop(&mut self) -> Option<(f64, Event)> {
+        let s = self.heap.pop()?;
+        self.popped += 1;
+        Some((s.time, s.event))
+    }
+
+    /// Total events popped over the queue's lifetime — the engine reports
+    /// this as `SimStats::events` (single source of truth for throughput).
+    pub fn popped(&self) -> u64 {
+        self.popped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channels::{ChannelType, DeviceChannels};
+    use crate::util::Rng;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(2.0, Event::Broadcast);
+        q.push(0.5, Event::ComputeDone { device: 1 });
+        q.push(1.0, Event::FadingTick);
+        assert_eq!(q.pop().unwrap().1, Event::ComputeDone { device: 1 });
+        assert_eq!(q.pop().unwrap().1, Event::FadingTick);
+        assert_eq!(q.pop().unwrap().1, Event::Broadcast);
+        assert!(q.pop().is_none());
+        assert_eq!(q.popped(), 3);
+    }
+
+    #[test]
+    fn equal_times_pop_in_scheduling_order() {
+        let mut q = EventQueue::new();
+        for device in 0..8 {
+            q.push(1.25, Event::ComputeDone { device });
+        }
+        for device in 0..8 {
+            assert_eq!(q.pop().unwrap().1, Event::ComputeDone { device });
+        }
+    }
+
+    /// The layered-coding premise made concrete: with the base layer mapped
+    /// to the faster channel (and no bigger than the enhancement layer), its
+    /// arrival event always precedes the enhancement layer's arrival.
+    #[test]
+    fn base_layer_arrival_precedes_enhancement_on_faster_channel() {
+        let rng = Rng::new(7);
+        let ch = DeviceChannels::new(&[ChannelType::G5, ChannelType::G3], &rng, 0);
+        for (base_bytes, enh_bytes) in
+            [(1_000u64, 1_000u64), (500, 4_000), (10_000, 10_000), (64, 1 << 20)]
+        {
+            assert!(base_bytes <= enh_bytes);
+            let mut q = EventQueue::new();
+            let t_base = ch.links[0].expected_cost(base_bytes).time_s;
+            let t_enh = ch.links[1].expected_cost(enh_bytes).time_s;
+            // Base layer is scheduled first, as the engine emits layers in
+            // layer order — the seq tie-break covers the equal-time case.
+            q.push(t_base, Event::LayerArrived { device: 0, channel: 0, layer: 0 });
+            q.push(t_enh, Event::LayerArrived { device: 0, channel: 1, layer: 1 });
+            let first = q.pop().unwrap().1;
+            assert_eq!(
+                first,
+                Event::LayerArrived { device: 0, channel: 0, layer: 0 },
+                "base layer must land first ({base_bytes}B on 5G vs {enh_bytes}B on 3G)"
+            );
+        }
+    }
+
+    #[test]
+    fn seq_numbers_make_ordering_stable_across_interleaved_pushes() {
+        let mut q = EventQueue::new();
+        q.push(3.0, Event::Broadcast);
+        q.push(3.0, Event::FadingTick);
+        q.pop(); // Broadcast
+        q.push(3.0, Event::ComputeDone { device: 0 });
+        assert_eq!(q.pop().unwrap().1, Event::FadingTick);
+        assert_eq!(q.pop().unwrap().1, Event::ComputeDone { device: 0 });
+    }
+}

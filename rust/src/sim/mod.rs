@@ -1,0 +1,41 @@
+//! Discrete-event simulation core: virtual clock, per-layer in-flight
+//! transfers, and the [`SyncMode`] seam (barrier / semi-async / fully-async
+//! servers).
+//!
+//! The engine replaces the round-synchronous for-loop as the execution
+//! substrate of [`Experiment::run`](crate::coordinator::Experiment::run):
+//!
+//! - [`event`]: the [`Event`] taxonomy (`FadingTick`, `ComputeDone`,
+//!   `LayerArrived`, `Broadcast`) and the deterministic binary-heap
+//!   [`EventQueue`] ordered by `(virtual time, scheduling sequence)`;
+//! - [`mode`]: the [`SyncMode`] seam — `Barrier` reproduces the pre-engine
+//!   synchronous loop bit-for-bit, `SemiAsync` buffers `buffer_k` uploads
+//!   FedBuff-style, `FullyAsync` applies each upload on arrival with
+//!   FedAsync staleness weighting;
+//! - [`engine`]: the driver, including the `std::thread::scope` parallel
+//!   device-compute path over split
+//!   [`DeviceTrainer`](crate::coordinator::DeviceTrainer) handles.
+//!
+//! See DESIGN.md §"Event engine & sync modes" for the taxonomy, the
+//! equivalence argument, and how to add a new mode.
+
+pub mod engine;
+pub mod event;
+pub mod mode;
+
+pub use event::{Event, EventQueue};
+pub use mode::SyncMode;
+
+/// Engine counters exposed after a run via `Experiment::sim_stats`
+/// (events/sec throughput for benches, plus async-mode telemetry).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimStats {
+    /// Events popped from the queue over the run.
+    pub events: u64,
+    /// Round records emitted (server aggregations in async modes).
+    pub records: u64,
+    /// Updates applied with staleness > 0 (async modes; 0 under barrier).
+    pub stale_updates: u64,
+    /// Layers erased in transit (async modes ride the lossy channel path).
+    pub lost_layers: u64,
+}

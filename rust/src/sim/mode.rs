@@ -1,0 +1,117 @@
+//! The [`SyncMode`] seam: how the server turns device uploads into global
+//! model updates over virtual time.
+//!
+//! | mode | server behavior | literature |
+//! |------|-----------------|------------|
+//! | [`SyncMode::Barrier`] | wait for *every* active device each round (the pre-engine loop, reproduced bit-for-bit) | FedAvg, McMahan et al. 2017 |
+//! | [`SyncMode::SemiAsync`] | buffer completed uploads; aggregate every `buffer_k` of them | FedBuff-style buffered aggregation (cf. arXiv:2012.11804, arXiv:2105.11028) |
+//! | [`SyncMode::FullyAsync`] | apply each upload on arrival, scaled by `staleness_decay^staleness` | FedAsync-style staleness weighting |
+
+/// Server synchronization discipline for one experiment. Orthogonal to the
+/// mechanism preset (compressor x aggregator x policy): any mechanism can
+/// run under any mode. Resolved by the builder as
+/// `cfg.sync_mode` > preset default > `Barrier`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum SyncMode {
+    /// Round-synchronous: the round ends when the slowest active device's
+    /// last layer lands. Numerically identical to the pre-engine loop
+    /// (`Experiment::step_round`), proven by `tests/sim_engine.rs`.
+    #[default]
+    Barrier,
+    /// Buffered semi-asynchronous aggregation: devices run at their own
+    /// pace; the server aggregates as soon as `buffer_k` complete uploads
+    /// are buffered, then broadcasts to the devices that contributed (and
+    /// any others waiting). Stragglers no longer stall the fleet.
+    SemiAsync {
+        /// Uploads per aggregation (>= 1). Values above the device count
+        /// still work — the engine flushes a partial buffer when every
+        /// device is waiting on it.
+        buffer_k: usize,
+    },
+    /// Fully asynchronous: every completed upload is applied immediately,
+    /// weighted by `staleness_decay^s` where `s` is the number of server
+    /// model versions that elapsed since the device last synchronized.
+    FullyAsync {
+        /// Per-version staleness discount in (0, 1]. 1.0 = no discount.
+        staleness_decay: f64,
+    },
+}
+
+impl SyncMode {
+    /// Display / config name of the mode kind.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SyncMode::Barrier => "barrier",
+            SyncMode::SemiAsync { .. } => "semi-async",
+            SyncMode::FullyAsync { .. } => "fully-async",
+        }
+    }
+
+    /// Build from a config-file kind string plus the parameter keys
+    /// (`buffer_k`, `staleness_decay`); parameters irrelevant to the kind
+    /// are ignored.
+    pub fn parse(kind: &str, buffer_k: usize, staleness_decay: f64) -> Result<Self, String> {
+        let mode = match kind.to_ascii_lowercase().as_str() {
+            "barrier" | "sync" => SyncMode::Barrier,
+            "semi-async" | "semi_async" | "semiasync" | "fedbuff" => {
+                SyncMode::SemiAsync { buffer_k }
+            }
+            "fully-async" | "fully_async" | "async" | "fedasync" => {
+                SyncMode::FullyAsync { staleness_decay }
+            }
+            other => return Err(format!("unknown sync_mode `{other}`")),
+        };
+        mode.validate()?;
+        Ok(mode)
+    }
+
+    /// Parameter sanity (also run by `ExperimentConfig::validate`).
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            SyncMode::Barrier => Ok(()),
+            SyncMode::SemiAsync { buffer_k } => {
+                if buffer_k == 0 {
+                    Err("semi-async buffer_k must be >= 1".into())
+                } else {
+                    Ok(())
+                }
+            }
+            SyncMode::FullyAsync { staleness_decay } => {
+                if staleness_decay > 0.0 && staleness_decay <= 1.0 {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "fully-async staleness_decay must lie in (0, 1], got {staleness_decay}"
+                    ))
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_kinds_and_aliases() {
+        assert_eq!(SyncMode::parse("barrier", 2, 0.5).unwrap(), SyncMode::Barrier);
+        assert_eq!(
+            SyncMode::parse("semi-async", 3, 0.5).unwrap(),
+            SyncMode::SemiAsync { buffer_k: 3 }
+        );
+        assert_eq!(
+            SyncMode::parse("FedAsync", 2, 0.7).unwrap(),
+            SyncMode::FullyAsync { staleness_decay: 0.7 }
+        );
+        assert!(SyncMode::parse("nope", 2, 0.5).is_err());
+    }
+
+    #[test]
+    fn invalid_params_rejected() {
+        assert!(SyncMode::parse("semi-async", 0, 0.5).is_err());
+        assert!(SyncMode::parse("fully-async", 2, 0.0).is_err());
+        assert!(SyncMode::parse("fully-async", 2, 1.5).is_err());
+        assert!(SyncMode::FullyAsync { staleness_decay: 1.0 }.validate().is_ok());
+    }
+}

@@ -46,16 +46,8 @@ pub fn stddev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
 }
 
-/// Percentile (nearest-rank) of an unsorted slice; p in [0, 100].
-pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
-        return 0.0;
-    }
-    let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
-    v[rank.min(v.len() - 1)]
-}
+// NOTE: percentile lives in `crate::metrics::percentile` (nearest-rank,
+// NaN on empty) — the single implementation behind the straggler stats.
 
 /// Clamp helper for f64.
 #[inline]
@@ -88,8 +80,5 @@ mod tests {
         let xs = [1.0, 2.0, 3.0, 4.0];
         assert_eq!(mean(&xs), 2.5);
         assert!((stddev(&xs) - 1.2909944).abs() < 1e-6);
-        assert_eq!(percentile(&xs, 0.0), 1.0);
-        assert_eq!(percentile(&xs, 100.0), 4.0);
-        assert_eq!(percentile(&xs, 50.0), 3.0); // nearest rank of 1.5 -> idx 2
     }
 }

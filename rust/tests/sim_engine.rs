@@ -1,0 +1,348 @@
+//! Event-engine integration tests: bit-for-bit equivalence of the engine's
+//! barrier mode against the synchronous reference loop, thread-count
+//! invariance of parallel device compute, async-mode straggler behavior,
+//! and the lossy-upload error-feedback regression.
+
+use lgc::channels::{AllocationPlan, ChannelType, DeviceChannels, Fading};
+use lgc::compression::{ErrorCompensated, LgcTopAB};
+use lgc::config::{ExperimentConfig, Mechanism, Workload};
+use lgc::coordinator::{
+    Device, Experiment, ExperimentBuilder, LocalTrainer, NativeLrTrainer, Server,
+};
+use lgc::metrics::RunLog;
+use lgc::resources::{ComputeCostModel, ResourceMeter};
+use lgc::sim::SyncMode;
+use lgc::util::Rng;
+
+fn base_cfg(mechanism: Mechanism, rounds: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        mechanism,
+        workload: Workload::LrMnist,
+        rounds,
+        devices: 3,
+        samples_per_device: 256,
+        eval_samples: 256,
+        eval_every: 3,
+        lr: 0.05,
+        h_fixed: 2,
+        h_max: 4,
+        use_runtime: false,
+        ..ExperimentConfig::default()
+    }
+}
+
+/// The pre-engine synchronous loop, stepped by hand — the equivalence
+/// oracle.
+fn reference_log(cfg: ExperimentConfig) -> RunLog {
+    let rounds = cfg.rounds;
+    let mut trainer = NativeLrTrainer::new(&cfg);
+    let mut exp = Experiment::new(cfg, &trainer);
+    let mut log = RunLog::new("reference");
+    for round in 0..rounds {
+        match exp.step_round(round, &mut trainer).unwrap() {
+            Some(rec) => log.push(rec),
+            None => break,
+        }
+    }
+    log
+}
+
+fn engine_log(cfg: ExperimentConfig) -> RunLog {
+    let mut trainer = NativeLrTrainer::new(&cfg);
+    let mut exp = Experiment::new(cfg, &trainer);
+    assert_eq!(exp.sync_mode, SyncMode::Barrier);
+    exp.run(&mut trainer).unwrap()
+}
+
+fn assert_logs_bitwise_equal(a: &RunLog, b: &RunLog, label: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{label}: record counts");
+    for (x, y) in a.records.iter().zip(&b.records) {
+        let r = x.round;
+        assert_eq!(x.round, y.round, "{label} round {r}");
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{label} loss round {r}");
+        assert_eq!(x.bytes_up, y.bytes_up, "{label} bytes round {r}");
+        assert_eq!(
+            x.round_time_s.to_bits(),
+            y.round_time_s.to_bits(),
+            "{label} round_time round {r}"
+        );
+        assert_eq!(
+            x.total_time_s.to_bits(),
+            y.total_time_s.to_bits(),
+            "{label} total_time round {r}"
+        );
+        assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits(), "{label} energy round {r}");
+        assert_eq!(x.money.to_bits(), y.money.to_bits(), "{label} money round {r}");
+        if x.eval_acc.is_nan() || y.eval_acc.is_nan() {
+            assert_eq!(x.eval_acc.is_nan(), y.eval_acc.is_nan(), "{label} eval round {r}");
+        } else {
+            assert_eq!(x.eval_acc.to_bits(), y.eval_acc.to_bits(), "{label} acc round {r}");
+        }
+        assert_eq!(
+            x.finish_p50_s.to_bits(),
+            y.finish_p50_s.to_bits(),
+            "{label} p50 round {r}"
+        );
+        assert_eq!(
+            x.finish_p95_s.to_bits(),
+            y.finish_p95_s.to_bits(),
+            "{label} p95 round {r}"
+        );
+        assert_eq!(x.stale_updates, y.stale_updates, "{label} stale round {r}");
+    }
+}
+
+/// The acceptance criterion: `BarrierSync` on the event engine reproduces
+/// the synchronous loop's per-round train loss and bytes_up exactly
+/// (seeded), on LgcStatic and on the other registered mechanism shapes.
+#[test]
+fn barrier_engine_matches_synchronous_loop_bitwise() {
+    for (mech, rounds) in [
+        (Mechanism::LgcStatic, 14),
+        (Mechanism::FedAvg, 8),
+        (Mechanism::Qsgd, 8),
+        (Mechanism::RandK, 8),
+        // Per-agent decide/observe sequences are preserved, so even the
+        // DDPG-controlled mechanism replays bit-for-bit.
+        (Mechanism::LgcDrl, 6),
+    ] {
+        let reference = reference_log(base_cfg(mech, rounds));
+        let engine = engine_log(base_cfg(mech, rounds));
+        assert_eq!(engine.records.len(), rounds, "{}", mech.name());
+        assert_logs_bitwise_equal(&reference, &engine, mech.name());
+    }
+}
+
+#[test]
+fn barrier_engine_matches_reference_with_sync_gaps_and_budget() {
+    // Async sync sets + a tight budget: early stop must agree too.
+    let mut cfg = base_cfg(Mechanism::LgcStatic, 30);
+    cfg.energy_budget = 160.0;
+    let mk = |cfg: &ExperimentConfig| {
+        let trainer = NativeLrTrainer::new(cfg);
+        let exp = Experiment::new(cfg.clone(), &trainer).with_sync_gaps(vec![1, 2, 3]);
+        (trainer, exp)
+    };
+    let (mut tr_a, mut exp_a) = mk(&cfg);
+    let mut reference = RunLog::new("reference");
+    for round in 0..cfg.rounds {
+        match exp_a.step_round(round, &mut tr_a).unwrap() {
+            Some(rec) => reference.push(rec),
+            None => break,
+        }
+    }
+    let (mut tr_b, mut exp_b) = mk(&cfg);
+    let engine = exp_b.run(&mut tr_b).unwrap();
+    assert!(reference.records.len() < 30, "budget should bite");
+    assert_logs_bitwise_equal(&reference, &engine, "gaps+budget");
+}
+
+/// Acceptance criterion: multi-threaded device compute yields identical
+/// results to single-threaded.
+#[test]
+fn multithreaded_compute_is_bitwise_identical_to_sequential() {
+    let mut base = base_cfg(Mechanism::LgcStatic, 10);
+    base.devices = 4;
+    for threads in [2usize, 4, 0 /* auto */] {
+        let mut cfg = base.clone();
+        cfg.compute_threads = threads;
+        let seq = engine_log(base.clone());
+        let par = engine_log(cfg);
+        assert_logs_bitwise_equal(&seq, &par, &format!("threads={threads}"));
+    }
+}
+
+/// A trainer survives repeated multi-threaded runs: the engine hands the
+/// split handles back after each run, so the second run matches a
+/// sequential double-run bit for bit.
+#[test]
+fn repeated_multithreaded_runs_match_sequential_double_run() {
+    let run_twice = |threads: usize| {
+        let mut cfg = base_cfg(Mechanism::LgcStatic, 5);
+        cfg.compute_threads = threads;
+        let mut trainer = NativeLrTrainer::new(&cfg);
+        let mut exp = Experiment::new(cfg, &trainer);
+        let first = exp.run(&mut trainer).unwrap();
+        let second = exp.run(&mut trainer).unwrap();
+        (first, second)
+    };
+    let (seq1, seq2) = run_twice(1);
+    let (par1, par2) = run_twice(3);
+    assert_logs_bitwise_equal(&seq1, &par1, "first run");
+    assert_logs_bitwise_equal(&seq2, &par2, "second run");
+}
+
+/// Build an experiment where device 2 is a straggler: slow compute, pinned
+/// to 3G links that start in Bad fading.
+fn straggler_exp(cfg: ExperimentConfig, trainer: &NativeLrTrainer, mode: SyncMode) -> Experiment {
+    let mut exp = ExperimentBuilder::new(cfg)
+        .trainer(trainer)
+        .sync_mode(mode)
+        .build()
+        .unwrap();
+    let dev = &mut exp.devices[2];
+    dev.compute.seconds_per_step *= 25.0;
+    for link in dev.channels.links.iter_mut() {
+        link.ty = ChannelType::G3;
+        link.fading = Fading::Bad;
+    }
+    exp
+}
+
+/// Acceptance criterion: `SemiAsync` finishes a seeded straggler scenario in
+/// strictly less simulated wall time than `BarrierSync` at comparable final
+/// accuracy.
+#[test]
+fn semi_async_beats_barrier_wall_time_under_straggler() {
+    let cfg = base_cfg(Mechanism::LgcStatic, 40);
+    let run = |mode: SyncMode| {
+        let mut trainer = NativeLrTrainer::new(&cfg);
+        let mut exp = straggler_exp(cfg.clone(), &trainer, mode);
+        let log = exp.run(&mut trainer).unwrap();
+        (log, exp.sim_stats)
+    };
+    let (barrier, _) = run(SyncMode::Barrier);
+    let (semi, semi_stats) = run(SyncMode::SemiAsync { buffer_k: 2 });
+    assert_eq!(barrier.records.len(), 40);
+    assert_eq!(semi.records.len(), 40);
+    let t_barrier = barrier.last().unwrap().total_time_s;
+    let t_semi = semi.last().unwrap().total_time_s;
+    assert!(
+        t_semi < t_barrier,
+        "semi-async {t_semi:.2}s should beat barrier {t_barrier:.2}s"
+    );
+    assert!(
+        barrier.final_acc() > 0.5 && semi.final_acc() > 0.5,
+        "both modes should train: barrier {:.3}, semi {:.3}",
+        barrier.final_acc(),
+        semi.final_acc()
+    );
+    // The straggler's buffered updates arrive stale, and straggler stats
+    // are populated for the async records.
+    let stale_total: u64 = semi.records.iter().map(|r| r.stale_updates).sum();
+    assert!(stale_total > 0, "straggler contributions should be stale");
+    assert_eq!(semi_stats.records, 40);
+    assert!(semi_stats.events > 0);
+    assert!(semi
+        .records
+        .iter()
+        .all(|r| r.finish_p50_s.is_nan() || r.finish_p95_s >= r.finish_p50_s));
+}
+
+#[test]
+fn fully_async_trains_and_advances_monotonically() {
+    let cfg = base_cfg(Mechanism::LgcStatic, 60);
+    let mut trainer = NativeLrTrainer::new(&cfg);
+    let mut exp = ExperimentBuilder::new(cfg.clone())
+        .trainer(&trainer)
+        .sync_mode(SyncMode::FullyAsync { staleness_decay: 0.8 })
+        .build()
+        .unwrap();
+    let log = exp.run(&mut trainer).unwrap();
+    assert_eq!(log.records.len(), 60);
+    for w in log.records.windows(2) {
+        assert!(w[1].total_time_s >= w[0].total_time_s);
+        assert!(w[1].energy_j >= w[0].energy_j);
+    }
+    assert!(log.final_acc() > 0.35, "acc={}", log.final_acc());
+    // Staleness-weighted applications happen (concurrent devices).
+    let stale_total: u64 = log.records.iter().map(|r| r.stale_updates).sum();
+    assert!(stale_total > 0);
+}
+
+#[test]
+fn semi_async_preset_resolves_and_runs_end_to_end() {
+    let cfg = base_cfg(Mechanism::parse("lgc-semi-async").unwrap(), 12);
+    let mut trainer = NativeLrTrainer::new(&cfg);
+    let mut exp = Experiment::new(cfg, &trainer);
+    assert_eq!(exp.sync_mode, SyncMode::SemiAsync { buffer_k: 2 });
+    let log = exp.run(&mut trainer).unwrap();
+    assert_eq!(log.records.len(), 12);
+    assert!(exp.sim_stats.events > 0);
+}
+
+#[test]
+fn engine_determinism_given_seed_across_modes() {
+    for mode in [
+        SyncMode::Barrier,
+        SyncMode::SemiAsync { buffer_k: 2 },
+        SyncMode::FullyAsync { staleness_decay: 0.6 },
+    ] {
+        let run = || {
+            let cfg = base_cfg(Mechanism::LgcStatic, 10);
+            let mut trainer = NativeLrTrainer::new(&cfg);
+            let mut exp = ExperimentBuilder::new(cfg)
+                .trainer(&trainer)
+                .sync_mode(mode)
+                .build()
+                .unwrap();
+            exp.run(&mut trainer).unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_logs_bitwise_equal(&a, &b, mode.name());
+    }
+}
+
+/// Regression for the lossy-upload seam: a device stuck in Bad fading keeps
+/// losing layers, yet training still converges because every lost layer is
+/// restituted into the error-feedback memory and the device resyncs after
+/// each compressed upload (nothing is silently discarded).
+#[test]
+fn bad_fading_device_with_lossy_uploads_still_converges() {
+    let cfg = ExperimentConfig {
+        workload: Workload::LrMnist,
+        devices: 1,
+        samples_per_device: 512,
+        eval_samples: 256,
+        use_runtime: false,
+        ..ExperimentConfig::default()
+    };
+    let mut trainer = NativeLrTrainer::new(&cfg);
+    let init = trainer.init_params();
+    let rng = Rng::new(11);
+    let mut dev = Device::new(
+        0,
+        init.clone(),
+        Box::new(ErrorCompensated::new(LgcTopAB)),
+        DeviceChannels::new(
+            &[ChannelType::G5, ChannelType::G4, ChannelType::G3],
+            &rng,
+            0,
+        ),
+        ResourceMeter::new(f64::INFINITY, f64::INFINITY),
+        ComputeCostModel::for_params(init.len()),
+    );
+    let mut server = Server::new(init);
+    let plan = AllocationPlan { counts: vec![80, 120, 200] };
+    let mut first_loss = f64::NAN;
+    let mut last_loss = f64::NAN;
+    let mut lost_total = 0usize;
+    for round in 0..80 {
+        let loss = dev.local_steps(&mut trainer, 2, 0.05).unwrap();
+        if round == 0 {
+            first_loss = loss;
+        }
+        last_loss = loss;
+        // Pin every link to Bad fading so erasures keep happening.
+        for link in dev.channels.links.iter_mut() {
+            link.fading = Fading::Bad;
+        }
+        let (delivered, _wall, _costs, lost) = dev.compress_and_upload_lossy(&plan);
+        lost_total += lost;
+        if !delivered.layers.is_empty() {
+            let decoded = Server::decode_from_wire(&delivered).unwrap();
+            server.aggregate_and_apply(&[&decoded]);
+        }
+        // Always resync: after compression the round's progress lives in
+        // `delivered + error memory`; skipping the sync would double-count
+        // the restituted mass.
+        dev.sync(&server.params);
+    }
+    assert!(lost_total > 0, "Bad fading over 80 rounds should lose layers");
+    assert!(
+        last_loss < 0.7 * first_loss,
+        "loss should drop despite erasures: {first_loss:.3} -> {last_loss:.3}"
+    );
+    let (_, acc) = trainer.eval(&server.params).unwrap();
+    assert!(acc > 0.35, "acc={acc}");
+}
