@@ -1,0 +1,115 @@
+//! Population-scale bench: rounds/s and peak resident memory vs population
+//! size {1k, 10k, 100k} at a fixed cohort of 64, barrier vs semi-async.
+//!
+//! ```bash
+//! cargo bench --bench bench_population_scale
+//! ```
+//!
+//! The claim under test: resident state is O(model + cohort), not
+//! O(population × model) — only `DeviceSpec` records (plus compact
+//! error-feedback residuals of previously sampled clients) scale with the
+//! population, so "peak RSS" should grow far slower than 2 dense model
+//! replicas per client would (7850-param LR: ~63 KB/client materialized vs
+//! a few hundred bytes as a spec). Cases run smallest population first, so
+//! the VmHWM column (a process-lifetime high-water mark) is attributable to
+//! the first case that pushes it up.
+
+use std::time::Instant;
+
+use lgc::bench::Table;
+use lgc::config::{ExperimentConfig, Mechanism, Workload};
+use lgc::coordinator::{ExperimentBuilder, NativeLrTrainer};
+use lgc::population::SamplerKind;
+use lgc::sim::SyncMode;
+
+/// Process peak resident set (VmHWM) in MB, Linux only.
+fn peak_rss_mb() -> Option<f64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: f64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb / 1024.0)
+}
+
+fn cfg(population: usize, mode: SyncMode) -> ExperimentConfig {
+    ExperimentConfig {
+        mechanism: Mechanism::LgcStatic,
+        workload: Workload::LrMnist,
+        rounds: 3,
+        devices: 8,
+        samples_per_device: 256,
+        eval_samples: 256,
+        eval_every: 1_000_000, // evals would dominate; round 0 + final only
+        lr: 0.05,
+        h_fixed: 2,
+        h_max: 4,
+        use_runtime: false,
+        population: Some(population),
+        cohort: Some(64.min(population)),
+        sampler: Some(SamplerKind::UniformK),
+        sync_mode: Some(mode),
+        streaming: true,
+        ..ExperimentConfig::default()
+    }
+}
+
+struct Case {
+    wall_s: f64,
+    records: usize,
+    peak_materialized: usize,
+    residual_kb: f64,
+}
+
+fn run_case(population: usize, mode: SyncMode) -> Case {
+    let c = cfg(population, mode);
+    let mut trainer = NativeLrTrainer::new(&c);
+    let mut exp = ExperimentBuilder::new(c)
+        .trainer(&trainer)
+        .build()
+        .expect("build");
+    let t0 = Instant::now();
+    let log = exp.run(&mut trainer).expect("run");
+    let pop = exp.population.as_ref().expect("population mode");
+    Case {
+        wall_s: t0.elapsed().as_secs_f64(),
+        records: log.records.len(),
+        peak_materialized: pop.peak_materialized(),
+        residual_kb: pop.residual_bytes() as f64 / 1024.0,
+    }
+}
+
+fn main() {
+    println!("== population scale (LgcStatic / LR, cohort 64, 3 rounds) ==\n");
+    let mut table = Table::new(&[
+        "mode",
+        "population",
+        "wall ms",
+        "rounds/s",
+        "peak materialized",
+        "residuals KB",
+        "peak RSS MB",
+    ]);
+    for &population in &[1_000usize, 10_000, 100_000] {
+        for (name, mode) in [
+            ("barrier", SyncMode::Barrier),
+            ("semi-async k=16", SyncMode::SemiAsync { buffer_k: 16 }),
+        ] {
+            let r = run_case(population, mode);
+            assert_eq!(r.records, 3);
+            table.row(&[
+                name.to_string(),
+                population.to_string(),
+                format!("{:.1}", r.wall_s * 1e3),
+                format!("{:.2}", r.records as f64 / r.wall_s.max(1e-9)),
+                r.peak_materialized.to_string(),
+                format!("{:.1}", r.residual_kb),
+                peak_rss_mb().map_or("n/a".to_string(), |m| format!("{m:.0}")),
+            ]);
+        }
+    }
+    table.print();
+    println!(
+        "\npeak materialized stays at the cohort size regardless of population; the\n\
+         population cost is the spec store (+ residuals of sampled clients), visible\n\
+         as the slow RSS growth from 1k to 100k clients."
+    );
+}

@@ -144,6 +144,14 @@ pub trait Compressor: Send {
 
     /// Reset cross-round state (new episode / fresh FL problem).
     fn reset(&mut self) {}
+
+    /// Release O(model-dim) working buffers while keeping cross-round
+    /// statistical state (RNG streams, adaptive thresholds). The population
+    /// store calls this when a client is demobilized back to its spec —
+    /// after draining the error memory separately — so a parked compressor
+    /// costs O(1) in the model dimension. Default: no-op (stateless
+    /// compressors hold nothing).
+    fn trim_working_memory(&mut self) {}
 }
 
 /// Banded `Top_{α,β}` via the partition hot path — the paper's production
@@ -396,6 +404,11 @@ impl<C: Compressor> Compressor for ErrorCompensated<C> {
     fn reset(&mut self) {
         self.error.reset();
         self.inner.reset();
+    }
+
+    fn trim_working_memory(&mut self) {
+        self.u_buf = Vec::new();
+        self.inner.trim_working_memory();
     }
 }
 

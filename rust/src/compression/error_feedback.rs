@@ -76,6 +76,29 @@ impl ErrorFeedback {
         }
     }
 
+    /// Move the dense memory out (leaving a dim-0 memory behind) — the
+    /// population store drains it into a compact
+    /// [`Residual`](crate::population::Residual) when a client is
+    /// demobilized. `ErrorCompensated` recreates a zeroed memory on the
+    /// next compress if nothing is restored first.
+    pub fn take_memory(&mut self) -> Vec<f32> {
+        std::mem::take(&mut self.e)
+    }
+
+    /// Install a dense memory wholesale (the restore half of
+    /// [`ErrorFeedback::take_memory`]).
+    pub fn set_memory(&mut self, e: Vec<f32>) {
+        self.e = e;
+    }
+
+    /// Resize to `dim` (zero-filled) unless already there — lets callers
+    /// fold values into a memory that may never have been allocated.
+    pub fn ensure_dim(&mut self, dim: usize) {
+        if self.e.len() != dim {
+            self.e = vec![0.0; dim];
+        }
+    }
+
     /// Put a shipped coordinate's mass back into the memory — used when a
     /// shipped layer is lost in transit (the erasure-channel path).
     /// Restitution *adds* the shipped value: after the zeroing-based

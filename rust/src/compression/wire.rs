@@ -58,11 +58,20 @@ pub fn encode_into(dim: usize, layer: &Layer, bytes: &mut Vec<u8>) -> usize {
     bytes.len()
 }
 
-/// Decode error.
+/// Decode error. Every malformed buffer maps to one of these — decoding
+/// never panics, whatever bytes arrive off the wire (`tests` below sweep
+/// truncations, bit flips and adversarial headers).
 #[derive(Debug, PartialEq, Eq)]
 pub enum DecodeError {
+    /// Buffer length disagrees with the header's entry count (short header,
+    /// truncated payload, or trailing garbage).
     Truncated,
     IndexOutOfRange { index: u32, dim: u32 },
+    /// The delta stream wrapped past `u32::MAX` — impossible for any
+    /// well-formed encoding.
+    IndexOverflow { prev: u32, delta: u32 },
+    /// A zero delta after the first entry: duplicate coordinate.
+    DuplicateIndex { index: u32 },
 }
 
 impl std::fmt::Display for DecodeError {
@@ -71,6 +80,12 @@ impl std::fmt::Display for DecodeError {
             DecodeError::Truncated => write!(f, "truncated sparse chunk"),
             DecodeError::IndexOutOfRange { index, dim } => {
                 write!(f, "index {index} out of range for dim {dim}")
+            }
+            DecodeError::IndexOverflow { prev, delta } => {
+                write!(f, "index overflow: {prev} + delta {delta} exceeds u32")
+            }
+            DecodeError::DuplicateIndex { index } => {
+                write!(f, "duplicate coordinate {index} (zero delta)")
             }
         }
     }
@@ -87,13 +102,23 @@ pub fn decode(chunk: &SparseChunk) -> Result<(usize, Layer), DecodeError> {
 
 /// Decode raw wire bytes into a reusable `Layer` (its vectors are cleared
 /// and refilled, reusing their allocations); returns the encoded dimension.
+///
+/// Hardened against malformed input: every length/overflow/ordering check
+/// returns an [`Err`] — there is no panic path, however adversarial the
+/// buffer. On `Err`, `out`'s contents are unspecified (cleared plus however
+/// many entries decoded before the fault).
 pub fn decode_into(b: &[u8], out: &mut Layer) -> Result<usize, DecodeError> {
     if b.len() < WIRE_HEADER {
         return Err(DecodeError::Truncated);
     }
-    let dim = u32::from_le_bytes(b[0..4].try_into().unwrap());
-    let nnz = u32::from_le_bytes(b[4..8].try_into().unwrap()) as usize;
-    if b.len() != encoded_len(nnz) {
+    let dim = u32::from_le_bytes(b[0..4].try_into().expect("4-byte slice"));
+    let nnz = u32::from_le_bytes(b[4..8].try_into().expect("4-byte slice")) as usize;
+    // Checked length arithmetic: a hostile nnz header must not overflow the
+    // expected-size computation (usize is 32-bit on some targets).
+    let expect = nnz
+        .checked_mul(WIRE_BYTES_PER_ENTRY)
+        .and_then(|x| x.checked_add(WIRE_HEADER));
+    if expect != Some(b.len()) {
         return Err(DecodeError::Truncated);
     }
     out.indices.clear();
@@ -103,8 +128,13 @@ pub fn decode_into(b: &[u8], out: &mut Layer) -> Result<usize, DecodeError> {
     let mut prev = 0u32;
     for e in 0..nnz {
         let off = WIRE_HEADER + 4 * e;
-        let delta = u32::from_le_bytes(b[off..off + 4].try_into().unwrap());
-        let idx = prev + delta;
+        let delta = u32::from_le_bytes(b[off..off + 4].try_into().expect("4-byte slice"));
+        if e > 0 && delta == 0 {
+            return Err(DecodeError::DuplicateIndex { index: prev });
+        }
+        let idx = prev
+            .checked_add(delta)
+            .ok_or(DecodeError::IndexOverflow { prev, delta })?;
         if idx >= dim {
             return Err(DecodeError::IndexOutOfRange { index: idx, dim });
         }
@@ -114,7 +144,8 @@ pub fn decode_into(b: &[u8], out: &mut Layer) -> Result<usize, DecodeError> {
     let vbase = WIRE_HEADER + 4 * nnz;
     for e in 0..nnz {
         let off = vbase + 4 * e;
-        out.values.push(f32::from_le_bytes(b[off..off + 4].try_into().unwrap()));
+        out.values
+            .push(f32::from_le_bytes(b[off..off + 4].try_into().expect("4-byte slice")));
     }
     Ok(dim as usize)
 }
@@ -178,5 +209,96 @@ mod tests {
     fn wire_accounting_matches_paper_8_bytes_per_entry() {
         assert_eq!(WIRE_BYTES_PER_ENTRY, 8);
         assert_eq!(encoded_len(1000) - WIRE_HEADER, 8000);
+    }
+
+    #[test]
+    fn duplicate_index_detected() {
+        // Hand-craft: dim=10, nnz=2, deltas [3, 0] (index 3 twice).
+        let mut b = Vec::new();
+        b.extend_from_slice(&10u32.to_le_bytes());
+        b.extend_from_slice(&2u32.to_le_bytes());
+        b.extend_from_slice(&3u32.to_le_bytes());
+        b.extend_from_slice(&0u32.to_le_bytes());
+        b.extend_from_slice(&1.0f32.to_le_bytes());
+        b.extend_from_slice(&2.0f32.to_le_bytes());
+        let mut out = Layer { indices: vec![], values: vec![] };
+        assert_eq!(
+            decode_into(&b, &mut out),
+            Err(DecodeError::DuplicateIndex { index: 3 })
+        );
+        // A leading zero delta is index 0 — legal.
+        let layer = Layer { indices: vec![0, 1], values: vec![0.5, 0.25] };
+        let chunk = encode(4, &layer);
+        assert_eq!(decode(&chunk).unwrap().1, layer);
+    }
+
+    #[test]
+    fn index_overflow_detected() {
+        // dim=u32::MAX, two deltas of 2^31 each: the second add wraps u32.
+        let half = 1u32 << 31;
+        let mut b = Vec::new();
+        b.extend_from_slice(&u32::MAX.to_le_bytes());
+        b.extend_from_slice(&2u32.to_le_bytes());
+        b.extend_from_slice(&half.to_le_bytes());
+        b.extend_from_slice(&half.to_le_bytes());
+        b.extend_from_slice(&0.0f32.to_le_bytes());
+        b.extend_from_slice(&0.0f32.to_le_bytes());
+        let mut out = Layer { indices: vec![], values: vec![] };
+        assert_eq!(
+            decode_into(&b, &mut out),
+            Err(DecodeError::IndexOverflow { prev: half, delta: half })
+        );
+    }
+
+    #[test]
+    fn hostile_nnz_header_is_rejected_not_allocated() {
+        // nnz = u32::MAX with an 8-byte buffer: length check must fail
+        // before any reserve; checked arithmetic guards 32-bit targets.
+        let mut b = Vec::new();
+        b.extend_from_slice(&100u32.to_le_bytes());
+        b.extend_from_slice(&u32::MAX.to_le_bytes());
+        let mut out = Layer { indices: vec![], values: vec![] };
+        assert_eq!(decode_into(&b, &mut out), Err(DecodeError::Truncated));
+        // Trailing garbage is a length mismatch too.
+        let layer = Layer { indices: vec![1, 5], values: vec![0.5, -0.5] };
+        let mut chunk = encode(10, &layer);
+        chunk.bytes.push(0xAB);
+        assert_eq!(decode(&chunk), Err(DecodeError::Truncated));
+    }
+
+    /// The satellite sweep: random buffers, truncations and single-byte
+    /// mutations of valid encodings must all return `Ok` or `Err` — never
+    /// panic, never produce an out-of-contract layer.
+    #[test]
+    fn malformed_input_sweep_never_panics() {
+        let mut rng = Rng::new(0xBAD_BEEF);
+        let mut out = Layer { indices: vec![], values: vec![] };
+        // Pure-noise buffers of every small length.
+        for len in 0..64 {
+            let b: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            let _ = decode_into(&b, &mut out);
+        }
+        // Valid encodings, then truncate at every boundary and flip bytes.
+        for seed in 0..8 {
+            let d = 32 + rng.index(500);
+            let u: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let k = 1 + rng.index(d / 2);
+            let upd = lgc_compress(&u, &[k], &mut CompressScratch::default());
+            let chunk = encode(d, &upd.layers[0]);
+            for cut in 0..chunk.bytes.len() {
+                let _ = decode_into(&chunk.bytes[..cut], &mut out);
+            }
+            for _ in 0..200 {
+                let mut mutated = chunk.bytes.clone();
+                let pos = rng.index(mutated.len());
+                mutated[pos] ^= 1 << rng.index(8);
+                if let Ok(dim) = decode_into(&mutated, &mut out) {
+                    // Whatever decoded must honor the format invariants.
+                    assert!(out.indices.windows(2).all(|w| w[0] < w[1]), "seed {seed}");
+                    assert!(out.indices.iter().all(|&i| (i as usize) < dim));
+                    assert_eq!(out.indices.len(), out.values.len());
+                }
+            }
+        }
     }
 }

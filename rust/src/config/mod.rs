@@ -9,6 +9,7 @@ use std::path::Path;
 pub use toml::{Document, Value};
 
 use crate::channels::ChannelType;
+use crate::population::SamplerKind;
 use crate::sim::SyncMode;
 
 /// Which FL mechanism to run — a *name* that the coordinator's mechanism
@@ -172,6 +173,34 @@ pub struct ExperimentConfig {
     /// Virtual period of channel-fading transitions in the async sync modes
     /// (barrier mode keeps the one-transition-per-round semantics).
     pub fading_tick_s: f64,
+    /// Total client population (population mode). Clients are cheap
+    /// [`crate::population::DeviceSpec`] records mapped onto the trainer's
+    /// `devices` data shards (`id % devices`); a full `Device` is
+    /// materialized only while a client sits in the round's cohort. `None`
+    /// (default) keeps the legacy fully-materialized path with `devices`
+    /// permanent devices. Setting any of `population` / `cohort` / `sampler`
+    /// switches the experiment into population mode.
+    pub population: Option<usize>,
+    /// Clients sampled per round (population mode). Default: the whole
+    /// population (full participation).
+    pub cohort: Option<usize>,
+    /// Cohort selection rule. Default: `uniform-k` when `cohort <
+    /// population`, else `full` (bit-for-bit the legacy loop). TOML:
+    /// `sampler = "full" | "uniform-k" | "weighted-by-samples" |
+    /// "availability-markov"`.
+    pub sampler: Option<SamplerKind>,
+    /// Per-round/tick probability an online client churns offline (also the
+    /// mid-upload dropout rate). 0 disables churn.
+    pub churn_down: f64,
+    /// Per-round/tick probability an offline client comes back online.
+    pub churn_up: f64,
+    /// Server-side streaming aggregation: fold each upload into the running
+    /// aggregate on arrival (O(model) server state) instead of buffering
+    /// every decoded update until aggregation. Applies to the population
+    /// cohort engines and the semi-/fully-async modes; results match batch
+    /// aggregation to the documented float tolerance. Default false (the
+    /// batch path is the bit-for-bit reference).
+    pub streaming: bool,
     /// DRL hyperparameters.
     pub drl: DrlConfig,
 }
@@ -237,6 +266,12 @@ impl Default for ExperimentConfig {
             staleness_decay: None,
             compute_threads: 1,
             fading_tick_s: 0.5,
+            population: None,
+            cohort: None,
+            sampler: None,
+            churn_down: 0.0,
+            churn_up: 0.0,
+            streaming: false,
             drl: DrlConfig::default(),
         }
     }
@@ -344,6 +379,27 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_f64("", "fading_tick_s") {
             cfg.fading_tick_s = v;
         }
+        if let Some(v) = doc.get_i64("", "population") {
+            cfg.population = Some(
+                usize::try_from(v).map_err(|_| format!("population must be >= 1, got {v}"))?,
+            );
+        }
+        if let Some(v) = doc.get_i64("", "cohort") {
+            cfg.cohort =
+                Some(usize::try_from(v).map_err(|_| format!("cohort must be >= 1, got {v}"))?);
+        }
+        if let Some(s) = doc.get_str("", "sampler") {
+            cfg.sampler = Some(SamplerKind::parse(s)?);
+        }
+        if let Some(v) = doc.get_f64("", "churn_down") {
+            cfg.churn_down = v;
+        }
+        if let Some(v) = doc.get_f64("", "churn_up") {
+            cfg.churn_up = v;
+        }
+        if let Some(v) = doc.get_bool("", "streaming") {
+            cfg.streaming = v;
+        }
         // [drl]
         if let Some(v) = doc.get_f64("drl", "actor_lr") {
             cfg.drl.actor_lr = v;
@@ -420,6 +476,26 @@ impl ExperimentConfig {
         }
         if !(self.fading_tick_s > 0.0) {
             return Err(format!("fading_tick_s must be > 0, got {}", self.fading_tick_s));
+        }
+        if let Some(p) = self.population {
+            if p == 0 {
+                return Err("population must be >= 1".into());
+            }
+        }
+        let pop_n = self.population.unwrap_or(self.devices);
+        if let Some(c) = self.cohort {
+            if c == 0 {
+                return Err("cohort must be >= 1".into());
+            }
+            if c > pop_n {
+                return Err(format!("cohort {c} exceeds population {pop_n}"));
+            }
+        }
+        if !(0.0..=1.0).contains(&self.churn_down) {
+            return Err(format!("churn_down must lie in [0, 1], got {}", self.churn_down));
+        }
+        if !(0.0..=1.0).contains(&self.churn_up) {
+            return Err(format!("churn_up must lie in [0, 1], got {}", self.churn_up));
         }
         Ok(())
     }
@@ -524,6 +600,38 @@ mod tests {
             "staleness_decay = 0.0",
             "fading_tick_s = 0.0",
             "compute_threads = -1",
+        ] {
+            let doc = Document::parse(bad).unwrap();
+            assert!(ExperimentConfig::from_document(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn population_keys_parse() {
+        let doc = Document::parse(
+            "population = 10000\ncohort = 64\nsampler = \"uniform-k\"\nchurn_down = 0.1\nchurn_up = 0.5\nstreaming = true\n",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.population, Some(10_000));
+        assert_eq!(cfg.cohort, Some(64));
+        assert_eq!(cfg.sampler, Some(SamplerKind::UniformK));
+        assert!((cfg.churn_down - 0.1).abs() < 1e-12);
+        assert!((cfg.churn_up - 0.5).abs() < 1e-12);
+        assert!(cfg.streaming);
+        for name in ["full", "weighted-by-samples", "availability-markov"] {
+            let doc = Document::parse(&format!("sampler = \"{name}\"\n")).unwrap();
+            let cfg = ExperimentConfig::from_document(&doc).unwrap();
+            assert_eq!(cfg.sampler.unwrap().name(), name);
+        }
+        for bad in [
+            "population = 0",
+            "cohort = 0",
+            "population = 100\ncohort = 101",
+            "cohort = 4", // devices defaults to 3: cohort beyond population
+            "sampler = \"lottery\"",
+            "churn_down = 1.5",
+            "churn_up = -0.1",
         ] {
             let doc = Document::parse(bad).unwrap();
             assert!(ExperimentConfig::from_document(&doc).is_err(), "{bad}");

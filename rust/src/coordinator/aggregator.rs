@@ -28,6 +28,34 @@ pub trait Aggregator: Send {
     /// `aggregate` call), e.g. local sample counts. Rules that don't weight
     /// ignore it.
     fn set_round_weights(&mut self, _weights: &[f64]) {}
+
+    // --- Streaming accumulate/finalize API --------------------------------
+    //
+    // Rules that can fold uploads into a running aggregate implement these
+    // three, and the server then never buffers decoded `LgcUpdate`s: each
+    // upload is folded into `acc` (the server's O(model) aggregate buffer)
+    // the moment it arrives — pairing naturally with the semi-/fully-async
+    // sim modes and the population cohort engines. Streaming totals may
+    // differ from the batch `aggregate` result by f32 accumulation order
+    // (sum-then-scale vs scale-then-sum): the documented tolerance is
+    // ~1e-6 relative (~1e-5 absolute on unit-scale updates), asserted by
+    // `tests/population.rs`.
+
+    /// Start a streaming round over a zeroed `dim`-sized accumulator.
+    /// Returns `true` when this rule streams natively; `false` (the
+    /// default) makes the server fall back to buffering clones and driving
+    /// the batch [`Aggregator::aggregate`] at finalize time.
+    fn stream_begin(&mut self, _dim: usize) -> bool {
+        false
+    }
+
+    /// Fold one upload (with its announced weight) into `acc`.
+    fn stream_accumulate(&mut self, _upload: &LgcUpdate, _weight: f64, _acc: &mut [f32]) {}
+
+    /// Turn the accumulated `acc` into the final descent direction in
+    /// place. `uploads` and `weight_sum` are the fold counts the server
+    /// tracked (so stateless rules need no counters of their own).
+    fn stream_finalize(&mut self, _acc: &mut [f32], _uploads: usize, _weight_sum: f64) {}
 }
 
 /// Uniform mean of the decoded updates:
@@ -47,6 +75,22 @@ impl Aggregator for MeanAggregator {
         for upd in uploads {
             upd.add_into(out, scale);
         }
+    }
+
+    fn stream_begin(&mut self, _dim: usize) -> bool {
+        true
+    }
+
+    /// Running unweighted sum; the 1/M scale is applied once at finalize
+    /// (sum-then-scale vs the batch path's scale-then-sum — the documented
+    /// streaming tolerance).
+    fn stream_accumulate(&mut self, upload: &LgcUpdate, _weight: f64, acc: &mut [f32]) {
+        upload.add_into(acc, 1.0);
+    }
+
+    fn stream_finalize(&mut self, acc: &mut [f32], uploads: usize, _weight_sum: f64) {
+        let scale = 1.0 / uploads.max(1) as f32;
+        acc.iter_mut().for_each(|x| *x *= scale);
     }
 }
 
@@ -95,6 +139,31 @@ impl Aggregator for WeightedBySamples {
         // announce next round falls back to the mean instead of silently
         // reusing stale sample counts.
         self.round_weights.clear();
+    }
+
+    fn stream_begin(&mut self, _dim: usize) -> bool {
+        self.round_weights.clear(); // per-upload weights arrive with each fold
+        true
+    }
+
+    /// Fold `weight · upload`; normalization by Σw happens at finalize.
+    /// Streaming requires positive finite weights (the drivers pass local
+    /// sample counts); a degenerate weight sum yields the uniform-mean
+    /// fallback, mirroring the batch path.
+    fn stream_accumulate(&mut self, upload: &LgcUpdate, weight: f64, acc: &mut [f32]) {
+        upload.add_into(acc, weight as f32);
+    }
+
+    fn stream_finalize(&mut self, acc: &mut [f32], uploads: usize, weight_sum: f64) {
+        let scale = if weight_sum > 0.0 && weight_sum.is_finite() {
+            (1.0 / weight_sum) as f32
+        } else {
+            // Degenerate weights: nothing meaningful was accumulated with
+            // w ≈ 0; scale by 1/M like the batch fallback (acc is ~zero, so
+            // this only matters for NaN/inf hygiene).
+            1.0 / uploads.max(1) as f32
+        };
+        acc.iter_mut().for_each(|x| *x *= scale);
     }
 }
 
@@ -156,5 +225,54 @@ mod tests {
         let mut out = vec![999.0f32; 16];
         MeanAggregator.aggregate(&[&a], &mut out);
         assert_eq!(out, a.decode());
+    }
+
+    #[test]
+    fn streaming_mean_matches_batch_within_tolerance() {
+        let ups: Vec<LgcUpdate> = (0..5).map(|s| upd(128, 40 + s, 32)).collect();
+        let refs: Vec<&LgcUpdate> = ups.iter().collect();
+        let mut batch = vec![0f32; 128];
+        MeanAggregator.aggregate(&refs, &mut batch);
+        let mut agg = MeanAggregator;
+        assert!(agg.stream_begin(128));
+        let mut acc = vec![0f32; 128];
+        for u in &ups {
+            agg.stream_accumulate(u, 1.0, &mut acc);
+        }
+        agg.stream_finalize(&mut acc, ups.len(), ups.len() as f64);
+        for i in 0..128 {
+            assert!(
+                (acc[i] - batch[i]).abs() < 1e-5,
+                "at {i}: stream {} vs batch {}",
+                acc[i],
+                batch[i]
+            );
+        }
+    }
+
+    #[test]
+    fn streaming_weighted_matches_batch_within_tolerance() {
+        let ups: Vec<LgcUpdate> = (0..4).map(|s| upd(96, 60 + s, 24)).collect();
+        let refs: Vec<&LgcUpdate> = ups.iter().collect();
+        let weights = [300.0, 120.0, 700.0, 55.0];
+        let mut batch_agg = WeightedBySamples::new();
+        batch_agg.set_round_weights(&weights);
+        let mut batch = vec![0f32; 96];
+        batch_agg.aggregate(&refs, &mut batch);
+        let mut agg = WeightedBySamples::new();
+        assert!(agg.stream_begin(96));
+        let mut acc = vec![0f32; 96];
+        for (u, &w) in ups.iter().zip(&weights) {
+            agg.stream_accumulate(u, w, &mut acc);
+        }
+        agg.stream_finalize(&mut acc, ups.len(), weights.iter().sum());
+        for i in 0..96 {
+            assert!(
+                (acc[i] - batch[i]).abs() < 1e-5,
+                "at {i}: stream {} vs batch {}",
+                acc[i],
+                batch[i]
+            );
+        }
     }
 }

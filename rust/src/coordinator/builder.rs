@@ -26,6 +26,7 @@ use super::experiment::Experiment;
 use super::policy::RoundPolicy;
 use super::registry::{
     AggregatorFactory, BuildCtx, CompressorFactory, MechanismRegistry, PolicyFactory,
+    SamplerFactory,
 };
 use super::server::Server;
 use super::trainer::LocalTrainer;
@@ -33,6 +34,7 @@ use crate::channels::DeviceChannels;
 use crate::compression::{Compressor, LgcUpdate};
 use crate::config::ExperimentConfig;
 use crate::drl::DeviceAgent;
+use crate::population::{self, ClientSampler, DeviceSpec, Population, SamplerKind};
 use crate::resources::{ComputeCostModel, ResourceMeter};
 use crate::sim::{SimStats, SyncMode};
 use crate::util::Rng;
@@ -45,6 +47,7 @@ pub struct ExperimentBuilder<'a> {
     compressor: Option<CompressorFactory>,
     aggregator: Option<AggregatorFactory>,
     policy: Option<PolicyFactory>,
+    sampler: Option<SamplerFactory>,
     sync_gaps: Option<Vec<usize>>,
 }
 
@@ -57,6 +60,7 @@ impl<'a> ExperimentBuilder<'a> {
             compressor: None,
             aggregator: None,
             policy: None,
+            sampler: None,
             sync_gaps: None,
         }
     }
@@ -97,6 +101,17 @@ impl<'a> ExperimentBuilder<'a> {
         F: Fn(&BuildCtx) -> Box<dyn RoundPolicy> + Send + Sync + 'static,
     {
         self.policy = Some(Arc::new(factory));
+        self
+    }
+
+    /// Override the population cohort sampler (wins over the `sampler`
+    /// config key). Setting it switches the experiment into population mode
+    /// even without the config keys.
+    pub fn sampler<F>(mut self, factory: F) -> Self
+    where
+        F: Fn(&BuildCtx) -> Box<dyn ClientSampler> + Send + Sync + 'static,
+    {
+        self.sampler = Some(Arc::new(factory));
         self
     }
 
@@ -171,21 +186,78 @@ impl<'a> ExperimentBuilder<'a> {
 
         let ctx = BuildCtx { cfg: &cfg, nparams, static_ks: &static_ks, rng: &rng };
         let policy = policy_f(&ctx);
-        let devices: Vec<Device> = (0..cfg.devices)
+
+        // Population mode: any of the population/cohort/sampler knobs (or a
+        // sampler override) switches from the permanently-materialized
+        // device fleet to the lazy cohort store.
+        let population_mode = cfg.population.is_some()
+            || cfg.cohort.is_some()
+            || cfg.sampler.is_some()
+            || self.sampler.is_some();
+        let pop_n = cfg.population.unwrap_or(cfg.devices);
+        let n_clients = if population_mode { pop_n } else { cfg.devices };
+
+        let (devices, population, client_sampler) = if population_mode {
+            if self.sync_gaps.is_some() {
+                return Err(anyhow!(
+                    "sync_gaps pace a permanently-materialized fleet; population mode \
+                     paces clients by cohort sampling instead"
+                ));
+            }
+            let cohort_n = cfg.cohort.unwrap_or(pop_n);
+            // Specs are built with the exact same per-id construction calls
+            // as the legacy device loop below, so FullParticipation over a
+            // population of size `devices` replays the reference loop bit
+            // for bit (tests/population.rs).
+            let specs: Vec<DeviceSpec> = (0..pop_n)
+                .map(|id| {
+                    let shard = id % cfg.devices;
+                    DeviceSpec::new(
+                        id,
+                        shard,
+                        trainer.device_samples(shard),
+                        DeviceChannels::new(&cfg.channel_types, &rng, id),
+                        ResourceMeter::new(cfg.energy_budget, cfg.money_budget),
+                        compute,
+                        compressor_f(&ctx, id),
+                        rng.fork(0xC4EA_0000 ^ (id as u64).wrapping_mul(0x9E37_79B9)),
+                    )
+                })
+                .collect();
+            let kind = cfg.sampler.unwrap_or(if cohort_n < pop_n {
+                SamplerKind::UniformK
+            } else {
+                SamplerKind::Full
+            });
+            let sampler: Box<dyn ClientSampler> = match &self.sampler {
+                Some(f) => f(&ctx),
+                None => population::build_sampler(kind, cohort_n, rng.fork(0x5A3D_17E5)),
+            };
+            let pop = Population::new(specs, cohort_n, cfg.churn_down, cfg.churn_up);
+            (Vec::new(), Some(pop), Some(sampler))
+        } else {
+            let devices: Vec<Device> = (0..cfg.devices)
+                .map(|id| {
+                    Device::new(
+                        id,
+                        init.clone(),
+                        compressor_f(&ctx, id),
+                        DeviceChannels::new(&cfg.channel_types, &rng, id),
+                        ResourceMeter::new(cfg.energy_budget, cfg.money_budget),
+                        compute,
+                    )
+                })
+                .collect();
+            (devices, None, None)
+        };
+        // Population mode defers DRL agent creation to first participation
+        // (`sim::engine` materializes them with the identical seeded fork),
+        // because an eager DDPG agent per client — MLPs, optimizer state, a
+        // pre-reserved replay buffer — would make build-time memory
+        // O(population × agent) and defeat the O(model + cohort) bound.
+        let agents: Vec<Option<DeviceAgent>> = (0..n_clients)
             .map(|id| {
-                Device::new(
-                    id,
-                    init.clone(),
-                    compressor_f(&ctx, id),
-                    DeviceChannels::new(&cfg.channel_types, &rng, id),
-                    ResourceMeter::new(cfg.energy_budget, cfg.money_budget),
-                    compute,
-                )
-            })
-            .collect();
-        let agents: Vec<Option<DeviceAgent>> = (0..cfg.devices)
-            .map(|id| {
-                if policy.needs_agents() {
+                if policy.needs_agents() && !population_mode {
                     Some(DeviceAgent::new(
                         cfg.channel_types.len(),
                         cfg.h_max,
@@ -210,10 +282,14 @@ impl<'a> ExperimentBuilder<'a> {
             None => vec![1; cfg.devices],
         };
 
-        let m = cfg.devices;
+        // The per-device decode buffers back the legacy engine paths only;
+        // the cohort engines keep their own O(cohort) slot buffers.
+        let m = devices.len();
         Ok(Experiment {
             server,
             devices,
+            population,
+            sampler: client_sampler,
             agents,
             policy,
             sync_gap,

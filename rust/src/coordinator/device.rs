@@ -65,6 +65,19 @@ pub struct DeviceUpload {
     pub local_steps: usize,
 }
 
+/// What [`Device::into_parts`] hands the population store when a client is
+/// demobilized (see [`crate::population::Population::demobilize`]).
+pub struct DeviceParts {
+    pub id: usize,
+    pub params_hat: Vec<f32>,
+    pub params_sync: Vec<f32>,
+    pub compressor: Box<dyn Compressor>,
+    pub channels: DeviceChannels,
+    pub meter: ResourceMeter,
+    pub prev_loss: f64,
+    pub last_delta: f64,
+}
+
 /// Persistent device state across rounds.
 pub struct Device {
     pub id: usize,
@@ -152,7 +165,21 @@ impl Device {
         lr: f32,
     ) -> Result<f64> {
         let id = self.id;
-        self.run_steps(h, move |params| trainer.local_step(id, params, lr))
+        self.local_steps_sharded(trainer, id, h, lr)
+    }
+
+    /// [`Device::local_steps`] against an explicit trainer data shard —
+    /// population mode maps many clients onto `cfg.devices` shards
+    /// ([`crate::population::DeviceSpec::shard`]); the legacy path is the
+    /// identity mapping `shard == id`.
+    pub fn local_steps_sharded(
+        &mut self,
+        trainer: &mut dyn LocalTrainer,
+        shard: usize,
+        h: usize,
+        lr: f32,
+    ) -> Result<f64> {
+        self.run_steps(h, move |params| trainer.local_step(shard, params, lr))
     }
 
     /// [`Device::local_steps`] over an independently-owned per-device
@@ -291,6 +318,41 @@ impl Device {
     pub fn sync(&mut self, global: &[f32]) {
         self.params_hat.copy_from_slice(global);
         self.params_sync.copy_from_slice(global);
+    }
+
+    /// Restitute every coordinate of an already-compressed `update` into the
+    /// error memory — the whole-upload analogue of the per-layer loss branch
+    /// of [`Device::upload_lossy`]. Used when a client churns offline
+    /// mid-upload (population mode): the server never ACKs, so the shipped
+    /// mass returns to the memory and is merely delayed. No-op for
+    /// compressors without error memory (dense baselines genuinely lose the
+    /// payload, same as their erasure path).
+    pub fn restitute_update(&mut self, update: &LgcUpdate) {
+        if let Some(err) = self.compressor.error_memory_mut() {
+            for layer in &update.layers {
+                for (&i, &v) in layer.indices.iter().zip(&layer.values) {
+                    err.restitute(i as usize, v);
+                }
+            }
+        }
+    }
+
+    /// Decompose into the parts a [`crate::population::DeviceSpec`]
+    /// persists, dropping the compression scratch and progress buffers. The
+    /// dense `params_hat`/`params_sync` replicas ride along so the
+    /// population store can fold un-compressed pending progress into the
+    /// error memory before they are freed.
+    pub fn into_parts(self) -> DeviceParts {
+        DeviceParts {
+            id: self.id,
+            params_hat: self.params_hat,
+            params_sync: self.params_sync,
+            compressor: self.compressor,
+            channels: self.channels,
+            meter: self.meter,
+            prev_loss: self.prev_loss,
+            last_delta: self.last_delta,
+        }
     }
 
     /// Compute-side cost of `h` local steps.

@@ -29,6 +29,7 @@ use crate::compression::LgcUpdate;
 use crate::config::ExperimentConfig;
 use crate::drl::DeviceAgent;
 use crate::metrics::{percentile, RoundRecord, RunLog};
+use crate::population::{ClientSampler, Population};
 use crate::resources::ResourceMeter;
 use crate::sim::{SimStats, SyncMode};
 use crate::util::Rng;
@@ -37,7 +38,19 @@ use crate::util::Rng;
 pub struct Experiment {
     pub cfg: ExperimentConfig,
     pub server: Server,
+    /// The permanently-materialized device fleet (legacy path). Empty in
+    /// population mode, where devices live transiently inside
+    /// [`Experiment::population`] and only the sampled cohort is
+    /// materialized each round.
     pub devices: Vec<Device>,
+    /// One [`Population`] of cheap per-client specs when the config enables
+    /// population mode (`population` / `cohort` / `sampler` keys);
+    /// `None` on the legacy path.
+    pub population: Option<Population>,
+    /// The cohort-selection seam (population mode only).
+    pub sampler: Option<Box<dyn ClientSampler>>,
+    /// Per-client DRL agents — indexed by client id (population mode) or
+    /// device id (legacy), `None` entries for non-DRL policies.
     pub agents: Vec<Option<DeviceAgent>>,
     /// The per-round control policy (decides H and the allocation plan).
     pub policy: Box<dyn RoundPolicy>,
@@ -113,6 +126,11 @@ impl Experiment {
         round: usize,
         trainer: &mut dyn LocalTrainer,
     ) -> Result<Option<RoundRecord>> {
+        assert!(
+            self.population.is_none(),
+            "step_round drives the legacy fully-materialized loop; population-mode \
+             experiments run their cohort engine via Experiment::run"
+        );
         let m = self.devices.len();
         // 1. Network dynamics advance.
         for dev in &mut self.devices {
@@ -248,6 +266,9 @@ impl Experiment {
             finish_p50_s: percentile(&mut finishes, 50.0),
             finish_p95_s: percentile(&mut finishes, 95.0),
             stale_updates: 0,
+            sampled: active.iter().filter(|&&a| a).count() as u64,
+            completed: received_idx.len() as u64,
+            dropped_offline: 0,
         }))
     }
 
@@ -267,6 +288,9 @@ impl Experiment {
         for agent in self.agents.iter_mut().flatten() {
             agent.tracker = Default::default();
             agent.ddpg.reset_noise();
+        }
+        if let Some(pop) = &mut self.population {
+            pop.reset_episode(self.cfg.energy_budget, self.cfg.money_budget);
         }
         self.total_time_s = 0.0;
     }

@@ -27,10 +27,10 @@ pub mod trainer;
 
 pub use aggregator::{Aggregator, MeanAggregator, WeightedBySamples};
 pub use builder::ExperimentBuilder;
-pub use device::{Device, DeviceUpload, LayerTransfer, UploadOutcome};
+pub use device::{Device, DeviceParts, DeviceUpload, LayerTransfer, UploadOutcome};
 pub use experiment::Experiment;
 pub use policy::{DdpgPolicy, FastestSingle, RoundPolicy, StaticLayered};
-pub use registry::{BuildCtx, MechanismPreset, MechanismRegistry};
+pub use registry::{BuildCtx, MechanismPreset, MechanismRegistry, SamplerFactory};
 pub use server::Server;
 pub use trainer::{
     DeviceTrainer, LocalTrainer, MnistDeviceTrainer, NativeLrTrainer, PjrtTrainer, WorkloadData,

@@ -36,6 +36,12 @@ pub type CompressorFactory = Arc<dyn Fn(&BuildCtx, usize) -> Box<dyn Compressor>
 pub type AggregatorFactory = Arc<dyn Fn(&BuildCtx) -> Box<dyn Aggregator> + Send + Sync>;
 /// Builds the per-round control policy.
 pub type PolicyFactory = Arc<dyn Fn(&BuildCtx) -> Box<dyn RoundPolicy> + Send + Sync>;
+/// Builds the population client sampler (population mode) — an
+/// [`ExperimentBuilder::sampler`](super::ExperimentBuilder::sampler)
+/// override; the built-ins resolve from the config's `sampler` key via
+/// [`crate::population::build_sampler`].
+pub type SamplerFactory =
+    Arc<dyn Fn(&BuildCtx) -> Box<dyn crate::population::ClientSampler> + Send + Sync>;
 
 /// A named mechanism preset.
 #[derive(Clone)]

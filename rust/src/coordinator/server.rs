@@ -14,6 +14,13 @@ pub struct Server {
     /// Reusable wire buffer for the per-layer encode/decode round-trip (the
     /// hot loop never allocates for it at steady state).
     wire_buf: Vec<u8>,
+    /// Streaming-round state (see [`Server::stream_begin`]): whether the
+    /// aggregator streams natively, fold counters, and the clone buffer of
+    /// the batch fallback.
+    stream_native: bool,
+    stream_n: usize,
+    stream_wsum: f64,
+    stream_fallback: Vec<(LgcUpdate, f64)>,
 }
 
 impl Server {
@@ -25,7 +32,16 @@ impl Server {
     /// Server with an explicit aggregation rule.
     pub fn with_aggregator(init: Vec<f32>, aggregator: Box<dyn Aggregator>) -> Self {
         let dim = init.len();
-        Server { params: init, agg_buf: vec![0f32; dim], aggregator, wire_buf: Vec::new() }
+        Server {
+            params: init,
+            agg_buf: vec![0f32; dim],
+            aggregator,
+            wire_buf: Vec::new(),
+            stream_native: false,
+            stream_n: 0,
+            stream_wsum: 0.0,
+            stream_fallback: Vec::new(),
+        }
     }
 
     pub fn dim(&self) -> usize {
@@ -38,6 +54,9 @@ impl Server {
         self.agg_buf.clear();
         self.agg_buf.resize(init.len(), 0.0);
         self.params = init;
+        self.stream_n = 0;
+        self.stream_wsum = 0.0;
+        self.stream_fallback.clear();
     }
 
     pub fn aggregator_name(&self) -> String {
@@ -61,6 +80,61 @@ impl Server {
         for (p, &g) in self.params.iter_mut().zip(&self.agg_buf) {
             *p -= g;
         }
+    }
+
+    /// Open a streaming aggregation round: uploads folded via
+    /// [`Server::stream_accumulate`] land in the server's O(model) aggregate
+    /// buffer the moment they arrive, instead of every decoded `LgcUpdate`
+    /// being buffered until aggregation time. When the configured rule does
+    /// not stream natively (`Aggregator::stream_begin` returns false), the
+    /// server transparently falls back to buffering clones and driving the
+    /// batch `aggregate` at [`Server::stream_apply`] — callers never branch.
+    /// Streaming vs batch results agree to the documented float tolerance
+    /// (~1e-6 relative; see `coordinator::aggregator`).
+    pub fn stream_begin(&mut self) {
+        self.agg_buf.iter_mut().for_each(|x| *x = 0.0);
+        self.stream_native = self.aggregator.stream_begin(self.params.len());
+        self.stream_n = 0;
+        self.stream_wsum = 0.0;
+        self.stream_fallback.clear();
+    }
+
+    /// Fold one upload (with its announced weight, e.g. the client's local
+    /// sample count) into the running aggregate.
+    pub fn stream_accumulate(&mut self, upload: &LgcUpdate, weight: f64) {
+        assert_eq!(upload.dim, self.params.len(), "dim mismatch");
+        if self.stream_native {
+            self.aggregator.stream_accumulate(upload, weight, &mut self.agg_buf);
+        } else {
+            self.stream_fallback.push((upload.clone(), weight));
+        }
+        self.stream_n += 1;
+        self.stream_wsum += weight;
+    }
+
+    /// Finalize the streaming round and apply the descent direction:
+    /// `w̄ ← w̄ − finalize(acc)`. Returns false (and applies nothing) when no
+    /// upload was folded since [`Server::stream_begin`].
+    pub fn stream_apply(&mut self) -> bool {
+        if self.stream_n == 0 {
+            return false;
+        }
+        if self.stream_native {
+            self.aggregator
+                .stream_finalize(&mut self.agg_buf, self.stream_n, self.stream_wsum);
+        } else {
+            let buffered = std::mem::take(&mut self.stream_fallback);
+            let weights: Vec<f64> = buffered.iter().map(|(_, w)| *w).collect();
+            let uploads: Vec<&LgcUpdate> = buffered.iter().map(|(u, _)| u).collect();
+            self.aggregator.set_round_weights(&weights);
+            self.aggregator.aggregate(&uploads, &mut self.agg_buf);
+        }
+        for (p, &g) in self.params.iter_mut().zip(&self.agg_buf) {
+            *p -= g;
+        }
+        self.stream_n = 0;
+        self.stream_wsum = 0.0;
+        true
     }
 
     /// Round-trip an update through the wire format (what the channel
@@ -181,5 +255,67 @@ mod tests {
         let mut server = Server::new(vec![0f32; 16]);
         let a = upd(32, 5, &[4]);
         server.aggregate_and_apply(&[&a]);
+    }
+
+    #[test]
+    fn streaming_apply_matches_batch_within_tolerance() {
+        let ups: Vec<LgcUpdate> = (0..6).map(|s| upd(64, 200 + s, &[8, 16])).collect();
+        let mut batch = Server::new(vec![0f32; 64]);
+        let refs: Vec<&LgcUpdate> = ups.iter().collect();
+        batch.aggregate_and_apply(&refs);
+        let mut stream = Server::new(vec![0f32; 64]);
+        stream.stream_begin();
+        for u in &ups {
+            stream.stream_accumulate(u, 1.0);
+        }
+        assert!(stream.stream_apply());
+        for i in 0..64 {
+            assert!(
+                (batch.params[i] - stream.params[i]).abs() < 1e-5,
+                "at {i}: batch {} vs stream {}",
+                batch.params[i],
+                stream.params[i]
+            );
+        }
+    }
+
+    #[test]
+    fn streaming_fallback_buffers_for_non_streaming_rules() {
+        // A rule that never streams: the server must buffer and reproduce
+        // the batch path exactly (bitwise — same calls, same order).
+        struct BatchOnly;
+        impl crate::coordinator::aggregator::Aggregator for BatchOnly {
+            fn name(&self) -> String {
+                "batch-only".into()
+            }
+            fn aggregate(&mut self, uploads: &[&LgcUpdate], out: &mut [f32]) {
+                out.iter_mut().for_each(|x| *x = 0.0);
+                let scale = 1.0 / uploads.len() as f32;
+                for upd in uploads {
+                    upd.add_into(out, scale);
+                }
+            }
+        }
+        let ups: Vec<LgcUpdate> = (0..3).map(|s| upd(32, 300 + s, &[8])).collect();
+        let refs: Vec<&LgcUpdate> = ups.iter().collect();
+        let mut batch = Server::with_aggregator(vec![0f32; 32], Box::new(BatchOnly));
+        batch.aggregate_and_apply(&refs);
+        let mut stream = Server::with_aggregator(vec![0f32; 32], Box::new(BatchOnly));
+        stream.stream_begin();
+        for u in &ups {
+            stream.stream_accumulate(u, 1.0);
+        }
+        assert!(stream.stream_apply());
+        for i in 0..32 {
+            assert_eq!(batch.params[i].to_bits(), stream.params[i].to_bits(), "at {i}");
+        }
+    }
+
+    #[test]
+    fn streaming_apply_without_uploads_is_noop() {
+        let mut server = Server::new(vec![0.5f32; 8]);
+        server.stream_begin();
+        assert!(!server.stream_apply());
+        assert!(server.params.iter().all(|&p| p == 0.5));
     }
 }

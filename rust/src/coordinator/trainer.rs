@@ -3,6 +3,13 @@
 //! artifacts (production path) or the pure-Rust LR reference (test path —
 //! no artifacts needed, exact same interface).
 //!
+//! A trainer serves `cfg.devices` data shards. The legacy path maps device
+//! `i` to shard `i`; population mode maps many clients onto the same shards
+//! (`client_id % cfg.devices`, see
+//! [`crate::population::DeviceSpec::shard`]), so the dataset does not grow
+//! with the client population — `local_step(shard, ...)` is indexed by
+//! shard, whichever client is training on it.
+//!
 //! For parallel device compute, a backend can *split* its per-device shards
 //! into independently-owned [`DeviceTrainer`] handles
 //! ([`LocalTrainer::split_device_trainers`]): each handle carries its own

@@ -9,8 +9,16 @@
 //! | seam | trait | built-ins |
 //! |------|-------|-----------|
 //! | compression | [`compression::Compressor`] | `LgcTopAB`, `LgcRadix`, `RandK`, `Qsgd`, `DenseNoop`, composable `ErrorCompensated<C>` |
-//! | aggregation | [`coordinator::Aggregator`] | `MeanAggregator`, `WeightedBySamples` |
+//! | aggregation | [`coordinator::Aggregator`] | `MeanAggregator`, `WeightedBySamples` (both batch and streaming accumulate/finalize) |
 //! | round control | [`coordinator::RoundPolicy`] | `StaticLayered`, `FastestSingle`, `DdpgPolicy` |
+//! | client sampling | [`population::ClientSampler`] | `FullParticipation`, `UniformK`, `WeightedBySamples`, `AvailabilityMarkov` |
+//!
+//! Population mode ([`population`]) makes client count a free parameter:
+//! a `Population` of cheap per-client specs materializes full devices only
+//! for the round's sampled cohort, so resident memory is O(model + cohort)
+//! rather than O(population × model) — set `population` / `cohort` /
+//! `sampler` in the config (see DESIGN.md §"Population, sampling &
+//! streaming aggregation").
 //!
 //! A *mechanism* is a named preset of the three, looked up in the
 //! string-keyed [`coordinator::MechanismRegistry`] and assembled by
@@ -79,6 +87,7 @@ pub mod data;
 pub mod drl;
 pub mod metrics;
 pub mod models;
+pub mod population;
 pub mod resources;
 pub mod runtime;
 pub mod sim;

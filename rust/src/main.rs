@@ -59,7 +59,10 @@ fn print_usage() {
          rounds=N, devices=M, lr=F, h_fixed=N, h_max=N, energy_budget=F,\n\
          money_budget=F, seed=N, use_runtime=true|false, csv=FILE,\n\
          sync_mode=barrier|semi-async|fully-async, buffer_k=N,\n\
-         staleness_decay=F, compute_threads=N (0 = all cores)"
+         staleness_decay=F, compute_threads=N (0 = all cores),\n\
+         population=N, cohort=K, sampler=full|uniform-k|\
+         weighted-by-samples|availability-markov,\n\
+         churn_down=P, churn_up=P, streaming=true|false"
     );
 }
 
@@ -125,6 +128,15 @@ fn cmd_train(args: &[String]) -> Result<()> {
     );
     let mut trainer = make_trainer(&cfg)?;
     let mut exp = ExperimentBuilder::new(cfg).trainer(trainer.as_ref()).build()?;
+    if let (Some(pop), Some(sampler)) = (&exp.population, &exp.sampler) {
+        println!(
+            "population: {} clients, cohort {} per round, sampler {}{}",
+            pop.len(),
+            pop.cohort(),
+            sampler.name(),
+            if exp.cfg.streaming { ", streaming aggregation" } else { "" }
+        );
+    }
     match exp.sync_mode {
         lgc::sim::SyncMode::Barrier => println!(
             "sync mode: barrier (compute_threads={})",

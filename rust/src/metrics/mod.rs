@@ -34,6 +34,15 @@ pub struct RoundRecord {
     /// Updates applied with staleness > 0 this round (async modes; always 0
     /// under barrier sync).
     pub stale_updates: u64,
+    /// Clients that actually ran the round (barrier: the active devices;
+    /// population mode: the materialized cohort members that trained; async
+    /// modes: the uploads contributing to this aggregation).
+    pub sampled: u64,
+    /// Uploads that reached the server and entered aggregation.
+    pub completed: u64,
+    /// Uploads lost because the client churned offline mid-upload
+    /// (population mode with availability churn; 0 elsewhere).
+    pub dropped_offline: u64,
 }
 
 /// Nearest-rank percentile (`p` in [0, 100]); sorts `xs` in place. NaN for
@@ -117,12 +126,12 @@ impl RunLog {
     pub fn to_csv(&self) -> String {
         let mut s = String::new();
         s.push_str(
-            "round,train_loss,eval_loss,eval_acc,energy_j,money,round_time_s,total_time_s,bytes_up,drl_reward,finish_p50_s,finish_p95_s,stale_updates\n",
+            "round,train_loss,eval_loss,eval_acc,energy_j,money,round_time_s,total_time_s,bytes_up,drl_reward,finish_p50_s,finish_p95_s,stale_updates,sampled,completed,dropped_offline\n",
         );
         for r in &self.records {
             let _ = writeln!(
                 s,
-                "{},{:.6},{:.6},{:.6},{:.3},{:.6},{:.3},{:.3},{},{:.4},{:.4},{:.4},{}",
+                "{},{:.6},{:.6},{:.6},{:.3},{:.6},{:.3},{:.3},{},{:.4},{:.4},{:.4},{},{},{},{}",
                 r.round,
                 r.train_loss,
                 r.eval_loss,
@@ -135,7 +144,10 @@ impl RunLog {
                 r.drl_reward,
                 r.finish_p50_s,
                 r.finish_p95_s,
-                r.stale_updates
+                r.stale_updates,
+                r.sampled,
+                r.completed,
+                r.dropped_offline
             );
         }
         s
@@ -221,6 +233,22 @@ mod tests {
         let csv = log.to_csv();
         assert_eq!(csv.lines().count(), 2);
         assert!(csv.starts_with("round,"));
+    }
+
+    #[test]
+    fn csv_has_participation_columns() {
+        let mut log = RunLog::new("t");
+        let mut r = rec(0, 0.5, 1.0);
+        r.sampled = 5;
+        r.completed = 4;
+        r.dropped_offline = 1;
+        log.push(r);
+        let csv = log.to_csv();
+        assert!(
+            csv.lines().next().unwrap().ends_with("sampled,completed,dropped_offline"),
+            "{csv}"
+        );
+        assert!(csv.lines().nth(1).unwrap().ends_with(",5,4,1"), "{csv}");
     }
 
     #[test]

@@ -1,0 +1,625 @@
+//! Population-scale client virtualization: lazy device cohorts over a store
+//! of cheap per-client records.
+//!
+//! The paper evaluates LGC on a handful of always-on edge devices, where
+//! every [`Device`](crate::coordinator::Device) permanently owns two dense
+//! model replicas plus compressor error-feedback memory — O(population ×
+//! model_dim) resident state. Real cross-device FL runs a small sampled
+//! cohort per round over a vast, churning population (cf. "To Talk or to
+//! Work", arXiv:2012.11804). This module makes population size a free
+//! parameter:
+//!
+//! - [`DeviceSpec`] is the *demobilized* form of a client: seeded channel
+//!   state (the fading chains keep advancing while unsampled), compute
+//!   profile, resource meter, data-shard id, the compressor box (cross-round
+//!   RNG streams) and a **compact persisted error-feedback [`Residual`]** —
+//!   everything O(1) in the model dimension except the residual, which is
+//!   empty until the client first participates and never larger than one
+//!   dense model.
+//! - [`Population`] holds one spec per client and **materializes** a full
+//!   `Device` (dense `params_hat`/`params_sync` replicas, working buffers)
+//!   only when that client is sampled into the round's cohort, demobilizing
+//!   it back to a spec afterwards. Resident memory is O(model + cohort), not
+//!   O(population × model); `peak_materialized` proves the bound.
+//! - [`ClientSampler`] ([`sampler`]) is the pluggable cohort-selection seam:
+//!   [`FullParticipation`] reproduces the fully-materialized reference loop
+//!   bit for bit (proven against the frozen `Experiment::step_round` oracle
+//!   in `tests/population.rs`), [`UniformK`] / [`WeightedBySamples`] are the
+//!   classic partial-participation rules, and [`AvailabilityMarkov`] samples
+//!   only clients whose per-client on/off churn chain (stepped here, in the
+//!   population) says they are online. A client that churns offline
+//!   mid-upload feeds the existing lost-layer restitution path — its shipped
+//!   coordinates return to the error memory, so gradient mass is delayed,
+//!   never destroyed.
+//!
+//! Demobilization contract: when a client leaves the cohort, its error
+//! memory is drained into the spec's [`Residual`] and its O(model) working
+//! buffers are released ([`crate::compression::Compressor::trim_working_memory`]).
+//! If the round ended *without* the compressor running (an all-silent plan),
+//! the pending local progress `w_sync − ŵ` is folded into the error memory
+//! first so nothing is lost; if the compressor *did* run, the progress
+//! already lives in `delivered layers + error memory` and folding would
+//! double-count — the `compressed_since_sync` flag keeps the two cases
+//! straight. See DESIGN.md §"Population, sampling & streaming aggregation".
+
+pub mod sampler;
+
+pub use sampler::{
+    build_sampler, AvailabilityMarkov, ClientSampler, FullParticipation, SamplerKind, UniformK,
+    WeightedBySamples,
+};
+
+use crate::channels::DeviceChannels;
+use crate::compression::{Compressor, ErrorFeedback};
+use crate::coordinator::device::{Device, DeviceParts};
+use crate::resources::{ComputeCostModel, ResourceMeter};
+use crate::util::Rng;
+
+/// Compact persisted error-feedback residual of a demobilized client.
+///
+/// Encoding picks the smaller of two forms at export time: sparse
+/// `(index, value)` pairs (8 B/nonzero) while at most half the coordinates
+/// are nonzero, plain dense `f32` (4 B/coordinate) beyond that — so the
+/// persisted state never exceeds one dense model and is empty for clients
+/// that have not participated yet. Export/restore is bitwise lossless
+/// (signed zeros included).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum Residual {
+    /// No dropped mass carried (client never compressed, or compressed
+    /// losslessly).
+    #[default]
+    Empty,
+    /// `(coordinate, value)` pairs, ascending, values all nonzero bits.
+    Sparse(Vec<(u32, f32)>),
+    /// Dense residual (cheaper than pairs once more than half the
+    /// coordinates are nonzero — the common case for top-K error feedback).
+    Dense(Vec<f32>),
+}
+
+impl Residual {
+    /// Drain `ef` into its compact form, releasing the dense memory.
+    pub fn drain_from(ef: &mut ErrorFeedback) -> Residual {
+        let e = ef.take_memory();
+        let nnz = e.iter().filter(|v| v.to_bits() != 0).count();
+        if nnz == 0 {
+            return Residual::Empty;
+        }
+        if nnz * 2 > e.len() {
+            return Residual::Dense(e);
+        }
+        Residual::Sparse(
+            e.iter()
+                .enumerate()
+                .filter(|(_, v)| v.to_bits() != 0)
+                .map(|(i, &v)| (i as u32, v))
+                .collect(),
+        )
+    }
+
+    /// Rebuild the dense memory inside `ef` (consumes the residual).
+    pub fn restore_into(self, ef: &mut ErrorFeedback, dim: usize) {
+        match self {
+            Residual::Empty => {}
+            Residual::Sparse(pairs) => {
+                let mut e = vec![0.0f32; dim];
+                for (i, v) in pairs {
+                    e[i as usize] = v;
+                }
+                ef.set_memory(e);
+            }
+            Residual::Dense(e) => {
+                assert_eq!(e.len(), dim, "dense residual dim mismatch");
+                ef.set_memory(e);
+            }
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        matches!(self, Residual::Empty)
+    }
+
+    /// Nonzero coordinates carried.
+    pub fn nnz(&self) -> usize {
+        match self {
+            Residual::Empty => 0,
+            Residual::Sparse(v) => v.len(),
+            Residual::Dense(v) => v.iter().filter(|x| x.to_bits() != 0).count(),
+        }
+    }
+
+    /// Approximate heap bytes of the persisted form.
+    pub fn bytes(&self) -> usize {
+        match self {
+            Residual::Empty => 0,
+            Residual::Sparse(v) => v.len() * 8,
+            Residual::Dense(v) => v.len() * 4,
+        }
+    }
+}
+
+/// The demobilized form of one client: everything that must persist across
+/// sampling epochs, and nothing that scales with the model dimension except
+/// the [`Residual`].
+pub struct DeviceSpec {
+    pub id: usize,
+    /// Trainer data shard this client draws batches from (population mode
+    /// maps many clients onto `cfg.devices` shards, `id % cfg.devices`).
+    pub shard: usize,
+    /// Local sample count n_m of the shard (weighted sampling/aggregation).
+    pub samples: usize,
+    /// Multi-channel uplink state — `None` while the client is materialized
+    /// (the channels move into the live `Device` and back).
+    pub channels: Option<DeviceChannels>,
+    pub meter: ResourceMeter,
+    pub compute: ComputeCostModel,
+    /// The compressor box (cross-round RNG streams persist; the error
+    /// memory is drained into `residual` while demobilized) — `None` while
+    /// materialized.
+    pub compressor: Option<Box<dyn Compressor>>,
+    /// Compact persisted error-feedback residual.
+    pub residual: Residual,
+    /// Training-loss of the client's previous round (DRL δ state).
+    pub prev_loss: f64,
+    pub last_delta: f64,
+    /// Availability churn chain state (AvailabilityMarkov sampling).
+    pub online: bool,
+    /// Private RNG stream of the churn chain.
+    churn_rng: Rng,
+}
+
+impl DeviceSpec {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        id: usize,
+        shard: usize,
+        samples: usize,
+        channels: DeviceChannels,
+        meter: ResourceMeter,
+        compute: ComputeCostModel,
+        compressor: Box<dyn Compressor>,
+        churn_rng: Rng,
+    ) -> Self {
+        DeviceSpec {
+            id,
+            shard,
+            samples,
+            channels: Some(channels),
+            meter,
+            compute,
+            compressor: Some(compressor),
+            residual: Residual::Empty,
+            prev_loss: f64::NAN,
+            last_delta: 0.0,
+            online: true,
+            churn_rng,
+        }
+    }
+}
+
+/// The client store: one [`DeviceSpec`] per client, with materialization
+/// bookkeeping and the population-wide dynamics (channel fading for every
+/// client, availability churn).
+pub struct Population {
+    specs: Vec<DeviceSpec>,
+    cohort: usize,
+    /// Per-tick probability that an online client drops offline (0 = no
+    /// churn; also gates the mid-upload dropout draw).
+    churn_down: f64,
+    /// Per-tick probability that an offline client comes back.
+    churn_up: f64,
+    materialized: usize,
+    peak_materialized: usize,
+}
+
+impl Population {
+    pub fn new(specs: Vec<DeviceSpec>, cohort: usize, churn_down: f64, churn_up: f64) -> Self {
+        assert!(!specs.is_empty(), "population needs at least one client");
+        assert!(
+            cohort >= 1 && cohort <= specs.len(),
+            "cohort {cohort} out of range for population {}",
+            specs.len()
+        );
+        assert!((0.0..=1.0).contains(&churn_down) && (0.0..=1.0).contains(&churn_up));
+        Population {
+            specs,
+            cohort,
+            churn_down,
+            churn_up,
+            materialized: 0,
+            peak_materialized: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// Target cohort size per round.
+    pub fn cohort(&self) -> usize {
+        self.cohort
+    }
+
+    pub fn spec(&self, id: usize) -> &DeviceSpec {
+        &self.specs[id]
+    }
+
+    pub fn shard(&self, id: usize) -> usize {
+        self.specs[id].shard
+    }
+
+    pub fn samples(&self, id: usize) -> usize {
+        self.specs[id].samples
+    }
+
+    pub fn online(&self, id: usize) -> bool {
+        self.specs[id].online
+    }
+
+    pub fn within_budget(&self, id: usize) -> bool {
+        self.specs[id].meter.within_budget()
+    }
+
+    pub fn is_materialized(&self, id: usize) -> bool {
+        self.specs[id].channels.is_none()
+    }
+
+    /// Can this client be sampled right now? Demobilized, within budget,
+    /// and online.
+    pub fn eligible(&self, id: usize) -> bool {
+        let s = &self.specs[id];
+        s.channels.is_some() && s.online && s.meter.within_budget()
+    }
+
+    /// Ascending ids of all currently eligible clients (O(population) scan —
+    /// the per-round cost sampling is allowed to pay; specs are cheap).
+    pub fn eligible_ids(&self) -> Vec<usize> {
+        (0..self.specs.len()).filter(|&i| self.eligible(i)).collect()
+    }
+
+    pub fn any_within_budget(&self) -> bool {
+        self.specs.iter().any(|s| s.meter.within_budget())
+    }
+
+    /// Could an ineligible population become eligible again without engine
+    /// action? True while some in-budget client is online, or offline but
+    /// able to churn back (`churn_up > 0`). The async cohort engine keeps
+    /// its clock alive on this, so a transient everybody-offline moment
+    /// pauses the pool instead of ending the run.
+    pub fn may_become_eligible(&self) -> bool {
+        self.specs
+            .iter()
+            .any(|s| s.meter.within_budget() && (s.online || self.churn_up > 0.0))
+    }
+
+    /// Currently materialized client count.
+    pub fn materialized(&self) -> usize {
+        self.materialized
+    }
+
+    /// High-water mark of simultaneously materialized clients — the memory
+    /// bound the cohort engines are proven against (≤ cohort at all times).
+    pub fn peak_materialized(&self) -> usize {
+        self.peak_materialized
+    }
+
+    /// Total heap bytes of all persisted residuals.
+    pub fn residual_bytes(&self) -> usize {
+        self.specs.iter().map(|s| s.residual.bytes()).sum()
+    }
+
+    /// Cumulative (energy, money) across every client's meter. Exact once
+    /// all clients are demobilized (a materialized client's spec meter is a
+    /// stale copy — the live meter travels with its `Device`).
+    pub fn meter_totals(&self) -> (f64, f64) {
+        self.specs.iter().fold((0.0, 0.0), |acc, s| {
+            (acc.0 + s.meter.energy_used, acc.1 + s.meter.money_used)
+        })
+    }
+
+    /// [`Population::meter_totals`] restricted to demobilized clients —
+    /// async drivers add the live devices' meters on top.
+    pub fn demobilized_meter_totals(&self) -> (f64, f64) {
+        self.specs
+            .iter()
+            .filter(|s| s.channels.is_some())
+            .fold((0.0, 0.0), |acc, s| {
+                (acc.0 + s.meter.energy_used, acc.1 + s.meter.money_used)
+            })
+    }
+
+    /// Advance the population-wide dynamics by one round/tick: every
+    /// demobilized client's fading chains (materialized clients' channels
+    /// advance inside their live `Device`, exactly like the reference loop)
+    /// and, when churn is enabled, every demobilized client's availability
+    /// chain. With churn disabled this makes the exact same RNG draws as
+    /// the fully-materialized loop's `channels.step_round()` sweep.
+    pub fn step_round(&mut self) {
+        let (down, up) = (self.churn_down, self.churn_up);
+        let churn = down > 0.0 || up > 0.0;
+        for spec in &mut self.specs {
+            if let Some(ch) = &mut spec.channels {
+                ch.step_round();
+            } else {
+                continue; // materialized: the live Device owns the dynamics
+            }
+            if churn {
+                if spec.online {
+                    if spec.churn_rng.uniform() < down {
+                        spec.online = false;
+                    }
+                } else if spec.churn_rng.uniform() < up {
+                    spec.online = true;
+                }
+            }
+        }
+    }
+
+    /// One Bernoulli draw from the client's churn stream: does the client
+    /// drop offline while its upload is in flight? No draw (and `false`)
+    /// when churn is disabled, so churn-free runs stay bit-identical to the
+    /// reference loop.
+    pub fn midround_offline(&mut self, id: usize) -> bool {
+        if self.churn_down <= 0.0 {
+            return false;
+        }
+        let spec = &mut self.specs[id];
+        if spec.churn_rng.uniform() < self.churn_down {
+            spec.online = false;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Wake a client up into a full [`Device`], synchronized to `global`:
+    /// dense replicas allocated now, channel/compressor state moved in, the
+    /// persisted residual rehydrated into the error memory.
+    pub fn materialize(&mut self, id: usize, global: &[f32]) -> Device {
+        let spec = &mut self.specs[id];
+        let channels = spec
+            .channels
+            .take()
+            .unwrap_or_else(|| panic!("client {id} is already materialized"));
+        let mut compressor = spec
+            .compressor
+            .take()
+            .unwrap_or_else(|| panic!("client {id} is already materialized"));
+        let residual = std::mem::take(&mut spec.residual);
+        if !residual.is_empty() {
+            let ef = compressor
+                .error_memory_mut()
+                .expect("residual persisted for a compressor without error memory");
+            residual.restore_into(ef, global.len());
+        }
+        let mut dev = Device::new(
+            id,
+            global.to_vec(),
+            compressor,
+            channels,
+            spec.meter.clone(),
+            spec.compute,
+        );
+        dev.prev_loss = spec.prev_loss;
+        dev.last_delta = spec.last_delta;
+        self.materialized += 1;
+        self.peak_materialized = self.peak_materialized.max(self.materialized);
+        dev
+    }
+
+    /// Put a client back to rest: persist meter/loss state, drain the error
+    /// memory into the compact residual, release O(model) buffers, drop the
+    /// dense replicas (they go out of scope with `parts`).
+    ///
+    /// `compressed_since_sync`: whether the compressor ran after the
+    /// device's last `sync`. If it did, the round's net progress already
+    /// lives in `delivered layers + error memory` and must NOT be folded
+    /// again; if it did not (all-silent plan), the pending progress
+    /// `w_sync − ŵ` is folded into the error memory so it survives
+    /// demobilization. (A compressor without error memory genuinely drops
+    /// pending progress — the dense baselines' documented behavior, same as
+    /// their lossy-upload path.)
+    ///
+    /// Note the fold is mass-preserving but not bit-identical to the
+    /// fully-materialized loop for silent rounds: a permanent device keeps
+    /// training from its drifted `ŵ`, while a demobilized client
+    /// rematerializes at the current global with the delta parked here —
+    /// the one documented divergence of the cohort engines (built-in
+    /// policies never emit silent plans, so the `FullParticipation` oracle
+    /// is unaffected).
+    pub fn demobilize(&mut self, parts: DeviceParts, compressed_since_sync: bool) {
+        let DeviceParts {
+            id,
+            params_hat,
+            params_sync,
+            mut compressor,
+            channels,
+            meter,
+            prev_loss,
+            last_delta,
+        } = parts;
+        if !compressed_since_sync {
+            let pending = params_sync
+                .iter()
+                .zip(&params_hat)
+                .any(|(a, b)| a.to_bits() != b.to_bits());
+            if pending {
+                if let Some(ef) = compressor.error_memory_mut() {
+                    ef.ensure_dim(params_hat.len());
+                    for (i, (&w, &wh)) in params_sync.iter().zip(&params_hat).enumerate() {
+                        let d = w - wh;
+                        if d != 0.0 {
+                            ef.restitute(i, d);
+                        }
+                    }
+                }
+            }
+        }
+        let residual = compressor
+            .error_memory_mut()
+            .map(Residual::drain_from)
+            .unwrap_or(Residual::Empty);
+        compressor.trim_working_memory();
+        let spec = &mut self.specs[id];
+        debug_assert!(spec.channels.is_none(), "demobilizing a client twice");
+        spec.residual = residual;
+        spec.compressor = Some(compressor);
+        spec.channels = Some(channels);
+        spec.meter = meter;
+        spec.prev_loss = prev_loss;
+        spec.last_delta = last_delta;
+        self.materialized -= 1;
+    }
+
+    /// Fresh FL episode: meters, residuals, compressor episode state and
+    /// availability restart; channel fading chains keep their streams (like
+    /// the fully-materialized `reset_episode`).
+    pub fn reset_episode(&mut self, energy_budget: f64, money_budget: f64) {
+        assert_eq!(self.materialized, 0, "reset_episode with clients in flight");
+        for spec in &mut self.specs {
+            spec.residual = Residual::Empty;
+            if let Some(c) = spec.compressor.as_mut() {
+                c.reset();
+            }
+            spec.meter = ResourceMeter::new(energy_budget, money_budget);
+            spec.prev_loss = f64::NAN;
+            spec.last_delta = 0.0;
+            spec.online = true;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channels::ChannelType;
+    use crate::compression::{ErrorCompensated, LgcTopAB};
+
+    fn spec(id: usize, seed: u64) -> DeviceSpec {
+        let rng = Rng::new(seed);
+        DeviceSpec::new(
+            id,
+            id % 2,
+            100 + id,
+            DeviceChannels::new(&[ChannelType::G5, ChannelType::G3], &rng, id),
+            ResourceMeter::new(f64::INFINITY, f64::INFINITY),
+            ComputeCostModel::for_params(1000),
+            Box::new(ErrorCompensated::new(LgcTopAB)),
+            rng.fork(0xC0FFEE ^ id as u64),
+        )
+    }
+
+    fn pop(n: usize, cohort: usize) -> Population {
+        Population::new((0..n).map(|i| spec(i, 7)).collect(), cohort, 0.0, 0.0)
+    }
+
+    #[test]
+    fn materialize_demobilize_roundtrip_preserves_residual_bitwise() {
+        let mut p = pop(4, 2);
+        let global = vec![0.25f32; 64];
+        let mut dev = p.materialize(1, &global);
+        assert_eq!(p.materialized(), 1);
+        // Make some local progress, then compress so the error memory fills.
+        for (i, x) in dev.params_hat.iter_mut().enumerate() {
+            *x += (i as f32 + 1.0) * 1e-3;
+        }
+        let plan = crate::channels::AllocationPlan { counts: vec![4, 4] };
+        let (_, _, _) = dev.compress_and_upload(&plan);
+        dev.sync(&global);
+        let mem_before = dev.error_memory().unwrap().memory().to_vec();
+        assert!(mem_before.iter().any(|&x| x != 0.0));
+        p.demobilize(dev.into_parts(), true);
+        assert_eq!(p.materialized(), 0);
+        assert!(!p.spec(1).residual.is_empty());
+        // Rematerialize: the error memory must come back bit-for-bit.
+        let dev2 = p.materialize(1, &global);
+        let mem_after = dev2.error_memory().unwrap().memory().to_vec();
+        assert_eq!(mem_before.len(), mem_after.len());
+        for (a, b) in mem_before.iter().zip(&mem_after) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        p.demobilize(dev2.into_parts(), true);
+    }
+
+    #[test]
+    fn pending_progress_folds_into_residual_when_not_compressed() {
+        let mut p = pop(3, 1);
+        let global = vec![1.0f32; 32];
+        let mut dev = p.materialize(0, &global);
+        // Local progress without any compress call (silent round).
+        for x in dev.params_hat.iter_mut() {
+            *x -= 0.125;
+        }
+        p.demobilize(dev.into_parts(), false);
+        let r = &p.spec(0).residual;
+        assert_eq!(r.nnz(), 32, "all 32 coordinates moved");
+        // u = w_sync − ŵ = +0.125 per coordinate.
+        let dev2 = p.materialize(0, &global);
+        let mem = dev2.error_memory().unwrap().memory().to_vec();
+        assert!(mem.iter().all(|&x| (x - 0.125).abs() < 1e-7));
+        p.demobilize(dev2.into_parts(), true);
+    }
+
+    #[test]
+    fn peak_materialized_tracks_high_water() {
+        let mut p = pop(5, 3);
+        let g = vec![0f32; 8];
+        let a = p.materialize(0, &g);
+        let b = p.materialize(3, &g);
+        assert_eq!(p.peak_materialized(), 2);
+        p.demobilize(a.into_parts(), true);
+        let c = p.materialize(4, &g);
+        assert_eq!(p.materialized(), 2);
+        assert_eq!(p.peak_materialized(), 2);
+        p.demobilize(b.into_parts(), true);
+        p.demobilize(c.into_parts(), true);
+        assert_eq!(p.materialized(), 0);
+    }
+
+    #[test]
+    fn churn_chain_moves_clients_on_and_off() {
+        let specs = (0..50).map(|i| spec(i, 11)).collect();
+        let mut p = Population::new(specs, 10, 0.4, 0.5);
+        let mut saw_offline = false;
+        let mut saw_back_online = false;
+        let mut was_offline = vec![false; 50];
+        for _ in 0..40 {
+            p.step_round();
+            for i in 0..50 {
+                if !p.online(i) {
+                    saw_offline = true;
+                    was_offline[i] = true;
+                } else if was_offline[i] {
+                    saw_back_online = true;
+                }
+            }
+        }
+        assert!(saw_offline && saw_back_online);
+    }
+
+    #[test]
+    fn residual_compact_forms_roundtrip() {
+        let mut ef = ErrorFeedback::new(10);
+        // Mostly-zero memory -> sparse.
+        ef.restitute(3, 1.5);
+        ef.restitute(7, -2.0);
+        let r = Residual::drain_from(&mut ef);
+        assert!(matches!(r, Residual::Sparse(_)));
+        assert_eq!(r.nnz(), 2);
+        assert_eq!(r.bytes(), 16);
+        let mut ef2 = ErrorFeedback::new(0);
+        r.restore_into(&mut ef2, 10);
+        assert_eq!(ef2.memory()[3], 1.5);
+        assert_eq!(ef2.memory()[7], -2.0);
+        // Mostly-nonzero -> dense.
+        let mut ef3 = ErrorFeedback::new(10);
+        for i in 0..9 {
+            ef3.restitute(i, i as f32 + 1.0);
+        }
+        let r = Residual::drain_from(&mut ef3);
+        assert!(matches!(r, Residual::Dense(_)));
+        assert_eq!(r.bytes(), 40);
+        // Empty stays empty.
+        let mut ef4 = ErrorFeedback::new(10);
+        assert!(Residual::drain_from(&mut ef4).is_empty());
+    }
+}

@@ -1,0 +1,385 @@
+//! The [`ClientSampler`] seam — which clients of a [`Population`]
+//! participate in each round.
+//!
+//! Partial participation is itself a communication/computation trade-off
+//! knob (Fast Federated Learning by Balancing Communication Trade-Offs,
+//! IEEE TCOM 2021): the server only pays for the sampled cohort, and
+//! convergence degrades gracefully with the sampling fraction. Samplers are
+//! deterministic given their construction RNG — the simulator's
+//! reproducibility contract (`tests/population.rs` proves same-seed runs
+//! replay bit for bit).
+//!
+//! | sampler | rule | notes |
+//! |---------|------|-------|
+//! | [`FullParticipation`] | every client, every round | bit-for-bit equal to the fully-materialized reference loop |
+//! | [`UniformK`] | k distinct clients uniformly among eligible | the classic FedAvg `C`-fraction |
+//! | [`WeightedBySamples`] | k distinct, P ∝ local sample count | Efraimidis–Spirakis A-Res weighted reservoir |
+//! | [`AvailabilityMarkov`] | k uniformly among *online* clients | the on/off churn chain lives in [`Population`] |
+
+use super::Population;
+use crate::util::Rng;
+
+/// Built-in sampler kinds, as named by the `sampler` config key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SamplerKind {
+    Full,
+    UniformK,
+    WeightedBySamples,
+    AvailabilityMarkov,
+}
+
+impl SamplerKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "full" | "full-participation" | "all" => Ok(SamplerKind::Full),
+            "uniform" | "uniform-k" | "uniform_k" => Ok(SamplerKind::UniformK),
+            "weighted" | "weighted-by-samples" | "weighted_by_samples" => {
+                Ok(SamplerKind::WeightedBySamples)
+            }
+            "availability" | "availability-markov" | "availability_markov" | "markov" => {
+                Ok(SamplerKind::AvailabilityMarkov)
+            }
+            other => Err(format!(
+                "unknown sampler `{other}` (full|uniform-k|weighted-by-samples|availability-markov)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SamplerKind::Full => "full",
+            SamplerKind::UniformK => "uniform-k",
+            SamplerKind::WeightedBySamples => "weighted-by-samples",
+            SamplerKind::AvailabilityMarkov => "availability-markov",
+        }
+    }
+}
+
+/// Build the built-in sampler for `kind` with cohort size `k` and its own
+/// forked RNG stream.
+pub fn build_sampler(kind: SamplerKind, k: usize, rng: Rng) -> Box<dyn ClientSampler> {
+    match kind {
+        SamplerKind::Full => Box::new(FullParticipation::new()),
+        SamplerKind::UniformK => Box::new(UniformK::new(k, rng)),
+        SamplerKind::WeightedBySamples => Box::new(WeightedBySamples::new(k, rng)),
+        SamplerKind::AvailabilityMarkov => Box::new(AvailabilityMarkov::new(k, rng)),
+    }
+}
+
+/// Cohort selection for one round, plus slot replacement for the async
+/// engines.
+///
+/// Contract:
+/// - `sample` returns **ascending** client ids (aggregation order — and for
+///   `FullParticipation`, the exact device order of the reference loop);
+/// - except for `FullParticipation` (which hands back every id and lets the
+///   driver skip out-of-budget clients exactly like the reference loop),
+///   returned clients must be [`Population::eligible`];
+/// - two instances built from the same RNG produce the same sequence.
+pub trait ClientSampler: Send {
+    /// Short human-readable name for logs.
+    fn name(&self) -> String;
+
+    /// Select the round's cohort.
+    fn sample(&mut self, round: usize, pop: &Population) -> Vec<usize>;
+
+    /// Pick one replacement client for a freed async slot. `busy[id]` marks
+    /// clients currently in flight (also excluded by eligibility — the
+    /// slice makes the intent explicit and guards future samplers).
+    fn sample_replacement(&mut self, pop: &Population, busy: &[bool]) -> Option<usize>;
+}
+
+/// Every client, every round — today's behavior, reproduced bit for bit
+/// over a materialized population (the driver applies the same per-client
+/// budget skip as the reference loop).
+#[derive(Clone, Debug, Default)]
+pub struct FullParticipation {
+    /// Round-robin cursor for async slot replacement.
+    cursor: usize,
+}
+
+impl FullParticipation {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl ClientSampler for FullParticipation {
+    fn name(&self) -> String {
+        "full".to_string()
+    }
+
+    fn sample(&mut self, _round: usize, pop: &Population) -> Vec<usize> {
+        (0..pop.len()).collect()
+    }
+
+    fn sample_replacement(&mut self, pop: &Population, busy: &[bool]) -> Option<usize> {
+        let n = pop.len();
+        for step in 0..n {
+            let id = (self.cursor + step) % n;
+            if !busy[id] && pop.eligible(id) {
+                self.cursor = (id + 1) % n;
+                return Some(id);
+            }
+        }
+        None
+    }
+}
+
+/// Uniform-without-replacement over the eligible clients: partial Fisher–
+/// Yates over the eligible id list, then sorted ascending.
+#[derive(Clone, Debug)]
+pub struct UniformK {
+    pub k: usize,
+    rng: Rng,
+}
+
+impl UniformK {
+    pub fn new(k: usize, rng: Rng) -> Self {
+        assert!(k >= 1, "cohort must be >= 1");
+        UniformK { k, rng }
+    }
+}
+
+/// Uniform single draw among eligible, non-busy clients: rejection sampling
+/// first (O(1) in the common cohort ≪ population regime, where nearly every
+/// client is an eligible candidate), exact O(population) scan as the
+/// sparse-eligibility fallback — so an async Broadcast that rotates the
+/// whole pool never costs O(cohort × population) on a healthy population.
+fn uniform_replacement(pop: &Population, busy: &[bool], rng: &mut Rng) -> Option<usize> {
+    for _ in 0..32 {
+        let id = rng.index(pop.len());
+        if !busy[id] && pop.eligible(id) {
+            return Some(id);
+        }
+    }
+    let elig: Vec<usize> = pop
+        .eligible_ids()
+        .into_iter()
+        .filter(|&i| !busy[i])
+        .collect();
+    if elig.is_empty() {
+        None
+    } else {
+        Some(elig[rng.index(elig.len())])
+    }
+}
+
+fn uniform_among(elig: Vec<usize>, k: usize, rng: &mut Rng) -> Vec<usize> {
+    let n = elig.len();
+    if n <= k {
+        return elig; // already ascending
+    }
+    let mut elig = elig;
+    for i in 0..k {
+        let j = i + rng.index(n - i);
+        elig.swap(i, j);
+    }
+    elig.truncate(k);
+    elig.sort_unstable();
+    elig
+}
+
+impl ClientSampler for UniformK {
+    fn name(&self) -> String {
+        format!("uniform-k({})", self.k)
+    }
+
+    fn sample(&mut self, _round: usize, pop: &Population) -> Vec<usize> {
+        uniform_among(pop.eligible_ids(), self.k, &mut self.rng)
+    }
+
+    fn sample_replacement(&mut self, pop: &Population, busy: &[bool]) -> Option<usize> {
+        uniform_replacement(pop, busy, &mut self.rng)
+    }
+}
+
+/// Weighted-without-replacement, P(client) ∝ its local sample count
+/// (McMahan-style importance): A-Res weighted reservoir — key
+/// `u^(1/w)`, keep the k largest keys.
+#[derive(Clone, Debug)]
+pub struct WeightedBySamples {
+    pub k: usize,
+    rng: Rng,
+}
+
+impl WeightedBySamples {
+    pub fn new(k: usize, rng: Rng) -> Self {
+        assert!(k >= 1, "cohort must be >= 1");
+        WeightedBySamples { k, rng }
+    }
+}
+
+impl ClientSampler for WeightedBySamples {
+    fn name(&self) -> String {
+        format!("weighted-by-samples({})", self.k)
+    }
+
+    fn sample(&mut self, _round: usize, pop: &Population) -> Vec<usize> {
+        let elig = pop.eligible_ids();
+        if elig.len() <= self.k {
+            return elig;
+        }
+        let mut keyed: Vec<(f64, usize)> = elig
+            .into_iter()
+            .map(|i| {
+                let w = pop.samples(i).max(1) as f64;
+                let u = self.rng.uniform().max(1e-300);
+                (u.powf(1.0 / w), i)
+            })
+            .collect();
+        keyed.sort_by(|a, b| b.0.total_cmp(&a.0));
+        let mut ids: Vec<usize> = keyed[..self.k].iter().map(|&(_, i)| i).collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    fn sample_replacement(&mut self, pop: &Population, busy: &[bool]) -> Option<usize> {
+        let elig: Vec<usize> = pop
+            .eligible_ids()
+            .into_iter()
+            .filter(|&i| !busy[i])
+            .collect();
+        if elig.is_empty() {
+            return None;
+        }
+        let total: f64 = elig.iter().map(|&i| pop.samples(i).max(1) as f64).sum();
+        let mut t = self.rng.uniform() * total;
+        for &i in &elig {
+            t -= pop.samples(i).max(1) as f64;
+            if t <= 0.0 {
+                return Some(i);
+            }
+        }
+        Some(*elig.last().unwrap())
+    }
+}
+
+/// Uniform over the clients whose availability chain says they are
+/// **online** right now. The per-client on/off Markov chain itself is
+/// stepped by [`Population::step_round`] (and mid-upload dropouts by
+/// [`Population::midround_offline`]) — this sampler is the selection rule
+/// that respects it. With churn disabled it degenerates to [`UniformK`].
+#[derive(Clone, Debug)]
+pub struct AvailabilityMarkov {
+    pub k: usize,
+    rng: Rng,
+}
+
+impl AvailabilityMarkov {
+    pub fn new(k: usize, rng: Rng) -> Self {
+        assert!(k >= 1, "cohort must be >= 1");
+        AvailabilityMarkov { k, rng }
+    }
+}
+
+impl ClientSampler for AvailabilityMarkov {
+    fn name(&self) -> String {
+        format!("availability-markov({})", self.k)
+    }
+
+    fn sample(&mut self, _round: usize, pop: &Population) -> Vec<usize> {
+        // Eligibility already excludes offline clients.
+        uniform_among(pop.eligible_ids(), self.k, &mut self.rng)
+    }
+
+    fn sample_replacement(&mut self, pop: &Population, busy: &[bool]) -> Option<usize> {
+        uniform_replacement(pop, busy, &mut self.rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channels::{ChannelType, DeviceChannels};
+    use crate::compression::DenseNoop;
+    use crate::population::DeviceSpec;
+    use crate::resources::{ComputeCostModel, ResourceMeter};
+
+    fn synthetic_pop(samples: &[usize]) -> Population {
+        let rng = Rng::new(3);
+        let specs = samples
+            .iter()
+            .enumerate()
+            .map(|(id, &n)| {
+                DeviceSpec::new(
+                    id,
+                    id,
+                    n,
+                    DeviceChannels::new(&[ChannelType::G5], &rng, id),
+                    ResourceMeter::new(f64::INFINITY, f64::INFINITY),
+                    ComputeCostModel::for_params(100),
+                    Box::new(DenseNoop),
+                    rng.fork(id as u64),
+                )
+            })
+            .collect();
+        Population::new(specs, samples.len().min(4), 0.0, 0.0)
+    }
+
+    #[test]
+    fn full_participation_returns_everyone_ascending() {
+        let pop = synthetic_pop(&[10; 7]);
+        let mut s = FullParticipation::new();
+        assert_eq!(s.sample(0, &pop), (0..7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn uniform_k_is_k_distinct_ascending_and_seeded() {
+        let pop = synthetic_pop(&[10; 30]);
+        let mut a = UniformK::new(5, Rng::new(9));
+        let mut b = UniformK::new(5, Rng::new(9));
+        let mut c = UniformK::new(5, Rng::new(10));
+        let (sa, sb, sc) = (a.sample(0, &pop), b.sample(0, &pop), c.sample(0, &pop));
+        assert_eq!(sa.len(), 5);
+        assert!(sa.windows(2).all(|w| w[0] < w[1]), "{sa:?}");
+        assert_eq!(sa, sb, "same seed, same cohort");
+        assert_ne!(sa, sc, "different seed should differ (w.h.p.)");
+        // Consecutive rounds rotate the cohort.
+        assert_ne!(a.sample(1, &pop), sb);
+    }
+
+    #[test]
+    fn weighted_prefers_heavy_shards() {
+        // 5 heavy clients (1000 samples) vs 5 light (10): over 200 draws of
+        // k=2 the heavies must dominate overwhelmingly.
+        let samples: Vec<usize> = (0..10).map(|i| if i < 5 { 1000 } else { 10 }).collect();
+        let pop = synthetic_pop(&samples);
+        let mut s = WeightedBySamples::new(2, Rng::new(21));
+        let mut heavy = 0usize;
+        let mut light = 0usize;
+        for round in 0..200 {
+            for id in s.sample(round, &pop) {
+                if id < 5 {
+                    heavy += 1;
+                } else {
+                    light += 1;
+                }
+            }
+        }
+        assert!(heavy > 4 * light, "heavy {heavy} vs light {light}");
+    }
+
+    #[test]
+    fn samplers_skip_ineligible_clients() {
+        let mut pop = synthetic_pop(&[10; 8]);
+        // Exhaust client 2's budget: no sampler may pick it again.
+        {
+            let g = vec![0f32; 4];
+            let mut d = pop.materialize(2, &g);
+            d.meter = ResourceMeter::new(0.0, 0.0);
+            d.meter.record_round(1.0, 0.0, 0.0, 0.0);
+            pop.demobilize(d.into_parts(), true);
+        }
+        let mut s = UniformK::new(8, Rng::new(4));
+        let cohort = s.sample(0, &pop);
+        assert!(!cohort.contains(&2), "{cohort:?}");
+        assert_eq!(cohort.len(), 7);
+        let mut f = FullParticipation::new();
+        let busy = vec![false; 8];
+        for _ in 0..14 {
+            let id = f.sample_replacement(&pop, &busy).unwrap();
+            assert_ne!(id, 2);
+        }
+    }
+}

@@ -33,15 +33,23 @@ use crate::compression::LgcUpdate;
 use crate::coordinator::device::Device;
 use crate::coordinator::experiment::Experiment;
 use crate::coordinator::trainer::{DeviceTrainer, LocalTrainer};
+use crate::drl::DeviceAgent;
 use crate::metrics::{percentile, RoundRecord, RunLog};
+use crate::population::{ClientSampler, Population};
 
 /// Drive `exp` to completion under its resolved sync mode, appending one
 /// [`RoundRecord`] per round (barrier) or per server aggregation (async).
+/// Population-mode experiments (a [`Population`] present) run the cohort
+/// engines instead: clients are materialized only while sampled, so
+/// resident memory stays O(model + cohort).
 pub fn run(
     exp: &mut Experiment,
     trainer: &mut dyn LocalTrainer,
     log: &mut RunLog,
 ) -> Result<()> {
+    if exp.population.is_some() {
+        return run_cohort(exp, trainer, log);
+    }
     match exp.sync_mode {
         SyncMode::Barrier => run_barrier(exp, trainer, log),
         SyncMode::SemiAsync { buffer_k } => {
@@ -263,6 +271,9 @@ fn barrier_rounds(
                         round_wall,
                     );
                 }
+                Event::UploadDone { .. } => {
+                    unreachable!("UploadDone is only scheduled by the cohort engines")
+                }
                 Event::Broadcast => {
                     // Reductions in device order: the f64 accumulation order
                     // of the synchronous loop, preserved.
@@ -335,6 +346,9 @@ fn barrier_rounds(
                         finish_p50_s,
                         finish_p95_s,
                         stale_updates: 0,
+                        sampled: active.iter().filter(|&&a| a).count() as u64,
+                        completed: received_idx.len() as u64,
+                        dropped_offline: 0,
                     });
                     stats.records += 1;
                 }
@@ -600,6 +614,9 @@ fn run_async(
                     complete_upload(exp, trainer, &mut st, &mut queue, &mut ctx, log, i, t)?;
                 }
             }
+            Event::UploadDone { .. } => {
+                unreachable!("UploadDone is only scheduled by the cohort engines")
+            }
             Event::Broadcast => {
                 // Resync + restart every device waiting on a fresh model —
                 // but never before the device's own radio went quiet (a
@@ -693,14 +710,34 @@ fn complete_upload(
     if !update.layers.is_empty() {
         match ctx.kind {
             AsyncKind::Semi { buffer_k: _ } => {
-                ctx.buffer.push(Buffered {
-                    device: i,
-                    update,
-                    weight: ctx.samples[i] as f64,
-                    loss: st[i].loss,
-                    staleness,
-                    duration,
-                });
+                if exp.cfg.streaming {
+                    // Fold into the server's running aggregate on arrival;
+                    // only record metadata is parked, and the decode buffer
+                    // returns to its owner immediately — the server never
+                    // holds O(buffer_k) decoded updates.
+                    if ctx.buffer.is_empty() {
+                        exp.server.stream_begin();
+                    }
+                    exp.server.stream_accumulate(&update, ctx.samples[i] as f64);
+                    exp.recv_bufs[i] = update;
+                    ctx.buffer.push(Buffered {
+                        device: i,
+                        update: LgcUpdate { dim: 0, layers: Vec::new() },
+                        weight: ctx.samples[i] as f64,
+                        loss: st[i].loss,
+                        staleness,
+                        duration,
+                    });
+                } else {
+                    ctx.buffer.push(Buffered {
+                        device: i,
+                        update,
+                        weight: ctx.samples[i] as f64,
+                        loss: st[i].loss,
+                        staleness,
+                        duration,
+                    });
+                }
             }
             AsyncKind::Fully { staleness_decay } => {
                 // FedAsync-style application: scale by decay^staleness, then
@@ -714,8 +751,14 @@ fn complete_upload(
                         *v *= w;
                     }
                 }
-                exp.server.set_round_weights(&[ctx.samples[i] as f64]);
-                exp.server.aggregate_and_apply(&[&update]);
+                if exp.cfg.streaming {
+                    exp.server.stream_begin();
+                    exp.server.stream_accumulate(&update, ctx.samples[i] as f64);
+                    exp.server.stream_apply();
+                } else {
+                    exp.server.set_round_weights(&[ctx.samples[i] as f64]);
+                    exp.server.aggregate_and_apply(&[&update]);
+                }
                 // Hand the decode buffer back for reuse by the next upload.
                 exp.recv_bufs[i] = update;
                 ctx.server_version += 1;
@@ -753,20 +796,32 @@ fn aggregate_semi_buffer(
     t: f64,
     buffer_k: usize,
 ) -> Result<()> {
-    let take = ctx.buffer.len().min(buffer_k.max(1));
+    // Streaming folds every buffered upload on arrival, so a flush always
+    // drains the whole buffer; the batch path takes at most `buffer_k`.
+    let take = if exp.cfg.streaming {
+        ctx.buffer.len()
+    } else {
+        ctx.buffer.len().min(buffer_k.max(1))
+    };
     let batch: Vec<Buffered> = ctx.buffer.drain(..take).collect();
-    let weights: Vec<f64> = batch.iter().map(|b| b.weight).collect();
-    let uploads: Vec<&LgcUpdate> = batch.iter().map(|b| &b.update).collect();
-    exp.server.set_round_weights(&weights);
-    exp.server.aggregate_and_apply(&uploads);
-    ctx.server_version += 1;
     let contributions: Vec<(f64, f64, u64)> =
         batch.iter().map(|b| (b.loss, b.duration, b.staleness)).collect();
-    // Return the decode buffers to their owner devices for steady-state
-    // reuse (each next upload decodes into them again).
-    for b in batch {
-        exp.recv_bufs[b.device] = b.update;
+    if exp.cfg.streaming {
+        exp.server.stream_apply();
+        // Decode buffers were already handed back on arrival; the parked
+        // entries carry empty placeholders.
+    } else {
+        let weights: Vec<f64> = batch.iter().map(|b| b.weight).collect();
+        let uploads: Vec<&LgcUpdate> = batch.iter().map(|b| &b.update).collect();
+        exp.server.set_round_weights(&weights);
+        exp.server.aggregate_and_apply(&uploads);
+        // Return the decode buffers to their owner devices for steady-state
+        // reuse (each next upload decodes into them again).
+        for b in batch {
+            exp.recv_bufs[b.device] = b.update;
+        }
     }
+    ctx.server_version += 1;
     push_async_record(exp, trainer, ctx, log, t, &contributions)
 }
 
@@ -816,6 +871,9 @@ fn push_async_record(
         finish_p50_s: percentile(&mut finishes, 50.0),
         finish_p95_s: percentile(&mut finishes, 95.0),
         stale_updates,
+        sampled: contributions.len() as u64,
+        completed: contributions.len() as u64,
+        dropped_offline: 0,
     };
     exp.total_time_s = now;
     ctx.last_record_t = now;
@@ -824,5 +882,777 @@ fn push_async_record(
     ctx.window_reward_n = 0;
     log.push(rec);
     ctx.stats.records += 1;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Population cohort engines
+// ---------------------------------------------------------------------------
+//
+// Population mode replaces the permanently-materialized fleet with a
+// `Population` of cheap per-client specs: each round (barrier) or slot
+// (async) materializes a full `Device` only for the sampled clients and
+// demobilizes them afterwards, so resident memory is O(model + cohort)
+// regardless of population size (`Population::peak_materialized` proves
+// the bound in tests/population.rs).
+
+/// Dispatch the population cohort engine for the experiment's sync mode.
+/// The population and sampler are taken out for the duration of the run
+/// (same pattern as the split trainer handles) and always handed back.
+fn run_cohort(
+    exp: &mut Experiment,
+    trainer: &mut dyn LocalTrainer,
+    log: &mut RunLog,
+) -> Result<()> {
+    let mut pop = exp.population.take().expect("population mode");
+    let mut sampler = exp
+        .sampler
+        .take()
+        .expect("population mode always carries a sampler");
+    let result = match exp.sync_mode {
+        SyncMode::Barrier => cohort_barrier_rounds(exp, trainer, log, &mut pop, sampler.as_mut()),
+        SyncMode::SemiAsync { buffer_k } => cohort_async_rounds(
+            exp,
+            trainer,
+            log,
+            &mut pop,
+            sampler.as_mut(),
+            AsyncKind::Semi { buffer_k },
+        ),
+        SyncMode::FullyAsync { staleness_decay } => cohort_async_rounds(
+            exp,
+            trainer,
+            log,
+            &mut pop,
+            sampler.as_mut(),
+            AsyncKind::Fully { staleness_decay },
+        ),
+    };
+    exp.population = Some(pop);
+    exp.sampler = Some(sampler);
+    result
+}
+
+/// Lazily materialize client `id`'s DRL agent (population mode). Agents
+/// are per-client *learning* state — they persist for the rest of the run
+/// once created, but creation is deferred to first participation so
+/// build-time memory stays O(population × spec) rather than O(population ×
+/// agent). The fork tag matches the legacy builder's exactly (and
+/// `Experiment::rng` is never consumed during runs), so full participation
+/// stays bit-for-bit.
+fn ensure_agent(exp: &mut Experiment, id: usize) {
+    if exp.policy.needs_agents() && exp.agents[id].is_none() {
+        let (d_min, d_total) = exp.d_bounds();
+        let rng = exp.rng().fork(0xD_00 + id as u64);
+        exp.agents[id] = Some(DeviceAgent::new(
+            exp.cfg.channel_types.len(),
+            exp.cfg.h_max,
+            d_total,
+            d_min,
+            exp.cfg.drl.clone(),
+            rng,
+        ));
+    }
+}
+
+/// Barrier-synchronous cohort rounds. With `FullParticipation`, a
+/// population the size of the device fleet, no churn and batch aggregation
+/// this replays `Experiment::step_round` **bit for bit** for every policy
+/// that uploads each round (all the built-ins) — the materialize → decide
+/// → train → upload → observe per-client sequence, the f64 reduction
+/// order, and every RNG stream are identical (the equivalence oracle in
+/// tests/population.rs). One documented divergence: a policy emitting an
+/// all-silent plan keeps the drifted local model across rounds in the
+/// legacy loop, whereas demobilization parks the pending progress in the
+/// error memory and rematerializes at the current global. Streaming
+/// aggregation folds each upload on arrival instead of batching
+/// (documented float tolerance vs batch).
+fn cohort_barrier_rounds(
+    exp: &mut Experiment,
+    trainer: &mut dyn LocalTrainer,
+    log: &mut RunLog,
+    pop: &mut Population,
+    sampler: &mut dyn ClientSampler,
+) -> Result<()> {
+    let mut stats = SimStats::default();
+    let streaming = exp.cfg.streaming;
+    // Reusable decode buffers: one per received upload (batch) or a single
+    // shared one (streaming — the upload is folded the moment it decodes).
+    let mut decoded: Vec<LgcUpdate> = Vec::new();
+    'rounds: for round in 0..exp.cfg.rounds {
+        // 1. Population-wide dynamics: every demobilized client's fading
+        // chains (nobody is materialized between rounds) + availability.
+        pop.step_round();
+        if !pop.any_within_budget() {
+            break 'rounds;
+        }
+        // 2. Cohort selection: the sampler seam.
+        let cohort = sampler.sample(round, pop);
+        let mut live: Vec<(Device, bool, bool)> = Vec::with_capacity(cohort.len());
+        let mut received_live: Vec<usize> = Vec::new();
+        let mut weights: Vec<f64> = Vec::new();
+        let mut round_wall = 0.0f64;
+        let mut loss_sum = 0.0f64;
+        let mut loss_n = 0usize;
+        let mut bytes_up = 0u64;
+        let mut reward_acc = 0.0f64;
+        let mut reward_n = 0usize;
+        let mut finishes: Vec<f64> = Vec::with_capacity(cohort.len());
+        let mut dropped_offline = 0u64;
+        let mut nrecv = 0usize;
+        if streaming {
+            exp.server.stream_begin();
+        }
+        // 3. Per-client round, in ascending id order (the reference loop's
+        // device order): materialize, decide, train, upload, account.
+        for id in cohort {
+            if pop.is_materialized(id) || !pop.within_budget(id) || !pop.online(id) {
+                continue; // the reference loop's per-device budget skip
+            }
+            ensure_agent(exp, id);
+            let mut dev = pop.materialize(id, &exp.server.params);
+            let (h, plan) = exp.policy.decide(round, &dev, exp.agents[id].as_mut());
+            let loss = dev.local_steps_sharded(trainer, pop.shard(id), h, exp.cfg.lr)?;
+            loss_sum += loss;
+            loss_n += 1;
+            let (comp_j, comp_s) = dev.compute_cost(h);
+            let compressed = !plan.is_silent();
+            let (update, mut wall, costs) = dev.compress_and_upload(&plan);
+            let mut received = false;
+            if !update.layers.is_empty() {
+                if pop.midround_offline(id) {
+                    // The radio went dark before the server ACK: the whole
+                    // upload feeds the lost-layer restitution path (mass
+                    // delayed into the error memory, never destroyed).
+                    dev.restitute_update(&update);
+                    dropped_offline += 1;
+                } else {
+                    let slot = if streaming { 0 } else { nrecv };
+                    if decoded.len() <= slot {
+                        decoded.push(LgcUpdate { dim: 0, layers: Vec::new() });
+                    }
+                    if dev.sparse_wire() {
+                        exp.server.decode_from_wire_into(&update, &mut decoded[slot])?;
+                    } else {
+                        decoded[slot] = update;
+                    }
+                    // `DeviceSpec::samples` caches `device_samples(shard)`
+                    // at build time (shard sizes are static), so this is
+                    // the reference loop's exact weight without re-querying
+                    // the trainer — the one weight convention of every
+                    // cohort path.
+                    let w = pop.samples(id) as f64;
+                    if streaming {
+                        exp.server.stream_accumulate(&decoded[slot], w);
+                    } else {
+                        weights.push(w);
+                    }
+                    nrecv += 1;
+                    received = true;
+                }
+            }
+            let (comm_j, comm_money, bytes) = TransferCost::fold_totals(&costs);
+            wall += comp_s;
+            round_wall = round_wall.max(wall);
+            finishes.push(wall);
+            dev.meter.record_round(comp_j, comm_j, comm_money, wall);
+            if dev.prev_loss.is_nan() {
+                dev.prev_loss = loss;
+            }
+            let delta = dev.prev_loss - loss;
+            dev.prev_loss = loss;
+            dev.last_delta = delta;
+            bytes_up += bytes;
+            let done = round + 1 == exp.cfg.rounds;
+            if let Some(r) = exp.policy.observe(&dev, exp.agents[id].as_mut(), delta, done) {
+                reward_acc += r;
+                reward_n += 1;
+            }
+            if received {
+                received_live.push(live.len());
+            }
+            live.push((dev, compressed, received));
+        }
+        stats.dropped_offline += dropped_offline;
+        // 4. Aggregation + broadcast: the aggregator seam (batch order ==
+        // ascending client id, exactly the reference loop).
+        let applied = if streaming {
+            exp.server.stream_apply()
+        } else if nrecv > 0 {
+            let uploads: Vec<&LgcUpdate> = decoded[..nrecv].iter().collect();
+            exp.server.set_round_weights(&weights);
+            exp.server.aggregate_and_apply(&uploads);
+            true
+        } else {
+            false
+        };
+        if applied {
+            for &k in &received_live {
+                live[k].0.sync(&exp.server.params);
+            }
+        }
+        // 5. Demobilize the cohort: meters/losses persist to the specs, the
+        // error memory drains into the compact residual, the dense replicas
+        // are freed.
+        for (dev, compressed, _) in live {
+            pop.demobilize(dev.into_parts(), compressed);
+        }
+        // 6. Evaluate + record — the reference loop's exact bookkeeping.
+        exp.total_time_s += round_wall;
+        let done_round = round + 1 == exp.cfg.rounds;
+        let (eval_loss, eval_acc) = if round % exp.cfg.eval_every == 0 || done_round {
+            trainer.eval(&exp.server.params)?
+        } else {
+            (f64::NAN, f64::NAN)
+        };
+        let (tot_energy, tot_money) = pop.meter_totals();
+        log.push(RoundRecord {
+            round,
+            train_loss: if loss_n == 0 { f64::NAN } else { loss_sum / loss_n as f64 },
+            eval_loss,
+            eval_acc,
+            energy_j: tot_energy,
+            money: tot_money,
+            round_time_s: round_wall,
+            total_time_s: exp.total_time_s,
+            bytes_up,
+            drl_reward: if reward_n > 0 {
+                reward_acc / reward_n as f64
+            } else {
+                f64::NAN
+            },
+            finish_p50_s: percentile(&mut finishes, 50.0),
+            finish_p95_s: percentile(&mut finishes, 95.0),
+            stale_updates: 0,
+            sampled: loss_n as u64,
+            completed: nrecv as u64,
+            dropped_offline,
+        });
+        stats.records += 1;
+    }
+    exp.sim_stats = stats;
+    Ok(())
+}
+
+/// One async cohort slot: the in-flight state of whichever client currently
+/// occupies it. On broadcast the client demobilizes and the sampler picks a
+/// replacement, so at most `Population::cohort()` clients are ever
+/// materialized.
+struct CohortSlot {
+    client: usize,
+    dev: Option<Device>,
+    started_at: f64,
+    comp_s: f64,
+    comp_j: f64,
+    loss: f64,
+    plan: Option<AllocationPlan>,
+    compressed: bool,
+    model_version: u64,
+    update: Option<LgcUpdate>,
+    waiting: bool,
+    retired: bool,
+}
+
+impl CohortSlot {
+    fn idle() -> Self {
+        CohortSlot {
+            client: 0,
+            dev: None,
+            started_at: 0.0,
+            comp_s: 0.0,
+            comp_j: 0.0,
+            loss: 0.0,
+            plan: None,
+            compressed: false,
+            model_version: 0,
+            update: None,
+            waiting: false,
+            retired: true,
+        }
+    }
+}
+
+/// Per-aggregation-window counters of the cohort async engine.
+#[derive(Default)]
+struct CohortWindow {
+    bytes: u64,
+    rewards: f64,
+    reward_n: usize,
+    dropped: u64,
+}
+
+/// Materialize `client` into `slots[slot_idx]` and start its round: policy
+/// decision, local steps, and a `ComputeDone` after the compute time.
+#[allow(clippy::too_many_arguments)]
+fn begin_cohort_slot(
+    exp: &mut Experiment,
+    trainer: &mut dyn LocalTrainer,
+    pop: &mut Population,
+    slots: &mut [CohortSlot],
+    queue: &mut EventQueue,
+    slot_idx: usize,
+    client: usize,
+    now: f64,
+    era: usize,
+    server_version: u64,
+) -> Result<()> {
+    ensure_agent(exp, client);
+    let mut dev = pop.materialize(client, &exp.server.params);
+    let (h, plan) = exp.policy.decide(era, &dev, exp.agents[client].as_mut());
+    let loss = dev.local_steps_sharded(trainer, pop.shard(client), h, exp.cfg.lr)?;
+    let (comp_j, comp_s) = dev.compute_cost(h);
+    let s = &mut slots[slot_idx];
+    s.client = client;
+    s.dev = Some(dev);
+    s.started_at = now;
+    s.comp_s = comp_s;
+    s.comp_j = comp_j;
+    s.loss = loss;
+    s.plan = Some(plan);
+    s.compressed = false;
+    s.model_version = server_version;
+    s.update = None;
+    s.waiting = false;
+    s.retired = false;
+    queue.push(now + comp_s, Event::ComputeDone { device: slot_idx });
+    Ok(())
+}
+
+/// Apply the buffered semi-async window (streaming: finalize the running
+/// aggregate; batch: drive the aggregator over the parked payloads) and
+/// emit its record.
+#[allow(clippy::too_many_arguments)]
+fn flush_semi_cohort(
+    exp: &mut Experiment,
+    trainer: &mut dyn LocalTrainer,
+    pop: &Population,
+    slots: &[CohortSlot],
+    log: &mut RunLog,
+    stats: &mut SimStats,
+    window: &mut CohortWindow,
+    last_record_t: &mut f64,
+    streaming: bool,
+    pending: &mut Vec<(f64, f64, u64)>,
+    pending_updates: &mut Vec<LgcUpdate>,
+    pending_weights: &mut Vec<f64>,
+    free_bufs: &mut Vec<LgcUpdate>,
+    server_version: &mut u64,
+    t: f64,
+) -> Result<()> {
+    if streaming {
+        exp.server.stream_apply();
+    } else {
+        let uploads: Vec<&LgcUpdate> = pending_updates.iter().collect();
+        exp.server.set_round_weights(&pending_weights[..]);
+        exp.server.aggregate_and_apply(&uploads);
+    }
+    *server_version += 1;
+    let contributions = std::mem::take(pending);
+    // Drained window buffers go back to the free list for reuse.
+    free_bufs.append(pending_updates);
+    pending_weights.clear();
+    push_cohort_record(
+        exp, trainer, pop, slots, log, stats, window, last_record_t, t, &contributions,
+    )
+}
+
+/// Emit one cohort-async [`RoundRecord`] (one per server aggregation), with
+/// the window since the previous record as its time span. Energy/money
+/// totals sum every demobilized spec's meter plus the live slots' meters.
+#[allow(clippy::too_many_arguments)]
+fn push_cohort_record(
+    exp: &mut Experiment,
+    trainer: &mut dyn LocalTrainer,
+    pop: &Population,
+    slots: &[CohortSlot],
+    log: &mut RunLog,
+    stats: &mut SimStats,
+    window: &mut CohortWindow,
+    last_record_t: &mut f64,
+    now: f64,
+    contributions: &[(f64, f64, u64)],
+) -> Result<()> {
+    let round = log.records.len();
+    let done = round + 1 >= exp.cfg.rounds;
+    let train_loss = if contributions.is_empty() {
+        f64::NAN
+    } else {
+        contributions.iter().map(|c| c.0).sum::<f64>() / contributions.len() as f64
+    };
+    let mut finishes: Vec<f64> = contributions.iter().map(|c| c.1).collect();
+    let stale_updates = contributions.iter().filter(|c| c.2 > 0).count() as u64;
+    stats.stale_updates += stale_updates;
+    let (eval_loss, eval_acc) = if round % exp.cfg.eval_every == 0 || done {
+        trainer.eval(&exp.server.params)?
+    } else {
+        (f64::NAN, f64::NAN)
+    };
+    let (mut tot_energy, mut tot_money) = pop.demobilized_meter_totals();
+    for s in slots {
+        if let Some(d) = &s.dev {
+            tot_energy += d.meter.energy_used;
+            tot_money += d.meter.money_used;
+        }
+    }
+    let rec = RoundRecord {
+        round,
+        train_loss,
+        eval_loss,
+        eval_acc,
+        energy_j: tot_energy,
+        money: tot_money,
+        round_time_s: now - *last_record_t,
+        total_time_s: now,
+        bytes_up: window.bytes,
+        drl_reward: if window.reward_n > 0 {
+            window.rewards / window.reward_n as f64
+        } else {
+            f64::NAN
+        },
+        finish_p50_s: percentile(&mut finishes, 50.0),
+        finish_p95_s: percentile(&mut finishes, 95.0),
+        stale_updates,
+        // Invariant shared with the barrier engine: every sampled upload
+        // either completed or dropped offline (completed + dropped_offline
+        // == sampled; fading-erased uploads are tracked as lost layers).
+        sampled: contributions.len() as u64 + window.dropped,
+        completed: contributions.len() as u64,
+        dropped_offline: window.dropped,
+    };
+    exp.total_time_s = now;
+    *last_record_t = now;
+    *window = CohortWindow::default();
+    log.push(rec);
+    stats.records += 1;
+    Ok(())
+}
+
+/// Event-driven cohort engine for the async sync modes: `cohort` slots run
+/// concurrently; each completed upload folds into the server (buffered
+/// FedBuff-style under `Semi`, applied immediately with staleness decay
+/// under `Fully`), and every broadcast demobilizes the finished client and
+/// samples a replacement — a steady-state pool over the whole population.
+/// Uploads ride the lossy channel path, complete when the slot's radio goes
+/// quiet (compute end + slowest layer), and may be lost wholesale to
+/// mid-upload availability churn (restituted into error memory, counted as
+/// `dropped_offline`).
+fn cohort_async_rounds(
+    exp: &mut Experiment,
+    trainer: &mut dyn LocalTrainer,
+    log: &mut RunLog,
+    pop: &mut Population,
+    sampler: &mut dyn ClientSampler,
+    kind: AsyncKind,
+) -> Result<()> {
+    let n_slots = pop.cohort();
+    let streaming = exp.cfg.streaming;
+    let mut queue = EventQueue::new();
+    let mut stats = SimStats::default();
+    let mut slots: Vec<CohortSlot> = (0..n_slots).map(|_| CohortSlot::idle()).collect();
+    let mut busy = vec![false; pop.len()];
+    let mut in_flight = 0usize;
+    let mut server_version = 0u64;
+    // Buffered-window state (Semi): record metadata always; payloads and
+    // weights only on the batch (non-streaming) path.
+    let mut pending: Vec<(f64, f64, u64)> = Vec::new();
+    let mut pending_updates: Vec<LgcUpdate> = Vec::new();
+    let mut pending_weights: Vec<f64> = Vec::new();
+    let mut window = CohortWindow::default();
+    let mut last_record_t = exp.total_time_s;
+    let mut decode_buf = LgcUpdate { dim: 0, layers: Vec::new() };
+    // Recycled update buffers for the batch window (see the Semi arm).
+    let mut free_bufs: Vec<LgcUpdate> = Vec::new();
+    let clock0 = exp.total_time_s;
+
+    let mut initial: Vec<usize> = sampler
+        .sample(0, pop)
+        .into_iter()
+        .filter(|&id| pop.eligible(id))
+        .collect();
+    initial.truncate(n_slots);
+    for (slot_idx, client) in initial.into_iter().enumerate() {
+        begin_cohort_slot(
+            exp, trainer, pop, &mut slots, &mut queue, slot_idx, client, clock0, 0,
+            server_version,
+        )?;
+        busy[client] = true;
+        in_flight += 1;
+    }
+    if in_flight == 0 {
+        exp.sim_stats = stats;
+        return Ok(()); // nobody eligible
+    }
+    queue.push(clock0 + exp.cfg.fading_tick_s, Event::FadingTick);
+
+    // Same defensive bound as the legacy async engine.
+    const COHORT_EVENT_CAP: u64 = 50_000_000;
+
+    while log.records.len() < exp.cfg.rounds {
+        let Some((t, ev)) = queue.pop() else { break };
+        anyhow::ensure!(
+            queue.popped() <= COHORT_EVENT_CAP,
+            "cohort engine exceeded {COHORT_EVENT_CAP} events with only {} of {} records",
+            log.records.len(),
+            exp.cfg.rounds
+        );
+        match ev {
+            Event::FadingTick => {
+                // Whole-population dynamics: demobilized specs advance in
+                // the store, live slot devices in place.
+                pop.step_round();
+                for s in slots.iter_mut() {
+                    if let Some(dev) = s.dev.as_mut() {
+                        dev.channels.step_round();
+                    }
+                }
+                // Revive retired slots: a slot retires when the sampler
+                // finds nobody eligible at broadcast time, but churn (or a
+                // budget refill in future samplers) can bring clients back
+                // — re-probe so a transient everybody-offline moment only
+                // pauses the pool.
+                for i in 0..slots.len() {
+                    if !slots[i].retired {
+                        continue;
+                    }
+                    match sampler.sample_replacement(pop, &busy) {
+                        Some(next) => {
+                            begin_cohort_slot(
+                                exp,
+                                trainer,
+                                pop,
+                                &mut slots,
+                                &mut queue,
+                                i,
+                                next,
+                                t,
+                                log.records.len(),
+                                server_version,
+                            )?;
+                            busy[next] = true;
+                            in_flight += 1;
+                        }
+                        None => break, // nobody eligible for any slot
+                    }
+                }
+                if slots.iter().any(|s| !s.retired) || pop.may_become_eligible() {
+                    queue.push(t + exp.cfg.fading_tick_s, Event::FadingTick);
+                }
+            }
+            Event::ComputeDone { device: i } => {
+                let s = &mut slots[i];
+                let plan = s.plan.take().expect("plan set at slot start");
+                s.compressed = !plan.is_silent();
+                let client = s.client;
+                let (comp_j, comp_s, loss) = (s.comp_j, s.comp_s, s.loss);
+                let dev = s.dev.as_mut().expect("device in flight");
+                let outcome = dev.upload_lossy(&plan);
+                let (comm_j, comm_money, bytes) = TransferCost::fold_totals(&outcome.costs);
+                dev.meter
+                    .record_round(comp_j, comm_j, comm_money, comp_s + outcome.wall_time_s);
+                window.bytes += bytes;
+                stats.lost_layers += outcome.lost_layers as u64;
+                if dev.prev_loss.is_nan() {
+                    dev.prev_loss = loss;
+                }
+                let delta = dev.prev_loss - loss;
+                dev.prev_loss = loss;
+                dev.last_delta = delta;
+                let done = log.records.len() + 1 >= exp.cfg.rounds;
+                if let Some(r) = exp.policy.observe(dev, exp.agents[client].as_mut(), delta, done)
+                {
+                    window.rewards += r;
+                    window.reward_n += 1;
+                }
+                let mut update = outcome.update;
+                if !update.layers.is_empty() && pop.midround_offline(client) {
+                    // Mid-upload churn: the server never ACKs, so every
+                    // delivered layer is restituted like a fading erasure.
+                    dev.restitute_update(&update);
+                    update.layers.clear();
+                    stats.dropped_offline += 1;
+                    window.dropped += 1;
+                }
+                s.update = Some(update);
+                queue.push(t + outcome.wall_time_s, Event::UploadDone { device: i });
+            }
+            Event::UploadDone { device: i } => {
+                let duration = t - slots[i].started_at;
+                let staleness = server_version - slots[i].model_version;
+                let client = slots[i].client;
+                let loss = slots[i].loss;
+                slots[i].waiting = true;
+                in_flight -= 1;
+                let update = slots[i].update.take().expect("upload in flight");
+                let delivered = !update.layers.is_empty();
+                if delivered {
+                    // Wire round-trip into the shared decode buffer.
+                    if slots[i].dev.as_ref().expect("device in flight").sparse_wire() {
+                        exp.server.decode_from_wire_into(&update, &mut decode_buf)?;
+                    } else {
+                        decode_buf = update;
+                    }
+                    let weight = pop.samples(client) as f64;
+                    match kind {
+                        AsyncKind::Semi { .. } => {
+                            if streaming {
+                                if pending.is_empty() {
+                                    exp.server.stream_begin();
+                                }
+                                exp.server.stream_accumulate(&decode_buf, weight);
+                            } else {
+                                // Move the decoded update into the window
+                                // and recycle a drained buffer — no O(model)
+                                // clone per upload, zero steady-state
+                                // allocation once the free list warms up.
+                                let parked = std::mem::replace(
+                                    &mut decode_buf,
+                                    free_bufs
+                                        .pop()
+                                        .unwrap_or(LgcUpdate { dim: 0, layers: Vec::new() }),
+                                );
+                                pending_updates.push(parked);
+                                pending_weights.push(weight);
+                            }
+                            pending.push((loss, duration, staleness));
+                        }
+                        AsyncKind::Fully { staleness_decay } => {
+                            let w = staleness_decay.powf(staleness as f64) as f32;
+                            for layer in &mut decode_buf.layers {
+                                for v in &mut layer.values {
+                                    *v *= w;
+                                }
+                            }
+                            if streaming {
+                                exp.server.stream_begin();
+                                exp.server.stream_accumulate(&decode_buf, weight);
+                                exp.server.stream_apply();
+                            } else {
+                                exp.server.set_round_weights(&[weight]);
+                                exp.server.aggregate_and_apply(&[&decode_buf]);
+                            }
+                            server_version += 1;
+                            push_cohort_record(
+                                exp,
+                                trainer,
+                                pop,
+                                &slots,
+                                log,
+                                &mut stats,
+                                &mut window,
+                                &mut last_record_t,
+                                t,
+                                &[(loss, duration, staleness)],
+                            )?;
+                            queue.push(t, Event::Broadcast);
+                        }
+                    }
+                } else if matches!(kind, AsyncKind::Fully { .. }) {
+                    // Entirely lost: nothing to apply, but resync + replace.
+                    queue.push(t, Event::Broadcast);
+                }
+                if let AsyncKind::Semi { buffer_k } = kind {
+                    if pending.len() >= buffer_k.max(1) {
+                        flush_semi_cohort(
+                            exp,
+                            trainer,
+                            pop,
+                            &slots,
+                            log,
+                            &mut stats,
+                            &mut window,
+                            &mut last_record_t,
+                            streaming,
+                            &mut pending,
+                            &mut pending_updates,
+                            &mut pending_weights,
+                            &mut free_bufs,
+                            &mut server_version,
+                            t,
+                        )?;
+                        queue.push(t, Event::Broadcast);
+                    } else if in_flight == 0 {
+                        // Whole pool parked: flush a partial buffer, or just
+                        // broadcast so everyone resyncs and rotates.
+                        if !pending.is_empty() {
+                            flush_semi_cohort(
+                                exp,
+                                trainer,
+                                pop,
+                                &slots,
+                                log,
+                                &mut stats,
+                                &mut window,
+                                &mut last_record_t,
+                                streaming,
+                                &mut pending,
+                                &mut pending_updates,
+                                &mut pending_weights,
+                                &mut free_bufs,
+                                &mut server_version,
+                                t,
+                            )?;
+                        }
+                        queue.push(t, Event::Broadcast);
+                    }
+                }
+            }
+            Event::Broadcast => {
+                // Every waiting slot: resync (if its progress was absorbed
+                // by a compress), demobilize, and hand the slot to a
+                // sampler-chosen replacement client.
+                for i in 0..slots.len() {
+                    if slots[i].retired || !slots[i].waiting {
+                        continue;
+                    }
+                    slots[i].waiting = false;
+                    let compressed = slots[i].compressed;
+                    let client = slots[i].client;
+                    let mut dev = slots[i].dev.take().expect("waiting slot has a device");
+                    if compressed {
+                        dev.sync(&exp.server.params);
+                    }
+                    pop.demobilize(dev.into_parts(), compressed);
+                    busy[client] = false;
+                    match sampler.sample_replacement(pop, &busy) {
+                        Some(next) => {
+                            begin_cohort_slot(
+                                exp,
+                                trainer,
+                                pop,
+                                &mut slots,
+                                &mut queue,
+                                i,
+                                next,
+                                t,
+                                log.records.len(),
+                                server_version,
+                            )?;
+                            busy[next] = true;
+                            in_flight += 1;
+                        }
+                        None => slots[i].retired = true,
+                    }
+                }
+            }
+            Event::LayerArrived { .. } => {
+                unreachable!("cohort engine completes uploads via UploadDone")
+            }
+        }
+    }
+    // Drain: demobilize whatever is still materialized so the population
+    // accounts for every client when the caller inspects it. A slot whose
+    // compressor ran resyncs first (its progress lives in delivered layers
+    // + error memory — end-of-run in-flight layers are truncated, exactly
+    // like the legacy async engine's unapplied tail buffer).
+    for s in slots.iter_mut() {
+        if let Some(mut dev) = s.dev.take() {
+            if s.compressed {
+                dev.sync(&exp.server.params);
+            }
+            pop.demobilize(dev.into_parts(), s.compressed);
+        }
+    }
+    stats.events = queue.popped();
+    exp.sim_stats = stats;
     Ok(())
 }

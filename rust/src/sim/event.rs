@@ -10,7 +10,7 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 /// One simulation event. Everything the engine reacts to is one of these
-/// four kinds (see DESIGN.md §"Event engine & sync modes").
+/// kinds (see DESIGN.md §"Event engine & sync modes").
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Event {
     /// Advance every link's Markov fading chain. Barrier mode fires one tick
@@ -24,6 +24,11 @@ pub enum Event {
     /// crossing `channel`. `layer` indexes the emitted layers of the upload
     /// (0 = base layer).
     LayerArrived { device: usize, channel: usize, layer: usize },
+    /// The whole upload transmission of cohort slot `device` finished —
+    /// the population cohort engines drive server action per completed
+    /// upload (the slot's radio went quiet: delivered layers are in, churn
+    /// losses are known). Never scheduled by the legacy per-layer paths.
+    UploadDone { device: usize },
     /// The server finished an aggregation and pushes the fresh global model
     /// to the devices that are waiting for it.
     Broadcast,

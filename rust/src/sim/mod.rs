@@ -38,4 +38,6 @@ pub struct SimStats {
     pub stale_updates: u64,
     /// Layers erased in transit (async modes ride the lossy channel path).
     pub lost_layers: u64,
+    /// Uploads lost to mid-upload availability churn (population mode).
+    pub dropped_offline: u64,
 }

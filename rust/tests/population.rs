@@ -1,0 +1,385 @@
+//! Population-mode integration tests: the `FullParticipation` cohort engine
+//! against the frozen `Experiment::step_round` oracle (bit for bit), the
+//! O(model + cohort) memory bound at 100k clients, sampler determinism,
+//! availability churn, and streaming-vs-batch aggregation tolerance.
+
+use lgc::compression::{lgc_compress, CompressScratch, LgcUpdate};
+use lgc::config::{ExperimentConfig, Mechanism, Workload};
+use lgc::coordinator::{Experiment, ExperimentBuilder, NativeLrTrainer, Server};
+use lgc::metrics::RunLog;
+use lgc::population::SamplerKind;
+use lgc::sim::SyncMode;
+use lgc::util::Rng;
+
+fn base_cfg(mechanism: Mechanism, rounds: usize, seed: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        mechanism,
+        workload: Workload::LrMnist,
+        rounds,
+        devices: 3,
+        samples_per_device: 256,
+        eval_samples: 256,
+        eval_every: 3,
+        lr: 0.05,
+        h_fixed: 2,
+        h_max: 4,
+        seed,
+        use_runtime: false,
+        ..ExperimentConfig::default()
+    }
+}
+
+/// The same experiment, switched into population mode with full
+/// participation over a population the size of the device fleet — the
+/// configuration the equivalence oracle freezes.
+fn full_participation_cfg(mechanism: Mechanism, rounds: usize, seed: u64) -> ExperimentConfig {
+    let mut cfg = base_cfg(mechanism, rounds, seed);
+    cfg.population = Some(cfg.devices);
+    cfg.cohort = Some(cfg.devices);
+    cfg.sampler = Some(SamplerKind::Full);
+    cfg
+}
+
+/// The frozen reference: the pre-engine synchronous loop, stepped by hand.
+fn reference_log(cfg: ExperimentConfig) -> RunLog {
+    let rounds = cfg.rounds;
+    let mut trainer = NativeLrTrainer::new(&cfg);
+    let mut exp = Experiment::new(cfg, &trainer);
+    let mut log = RunLog::new("reference");
+    for round in 0..rounds {
+        match exp.step_round(round, &mut trainer).unwrap() {
+            Some(rec) => log.push(rec),
+            None => break,
+        }
+    }
+    log
+}
+
+fn population_run(cfg: ExperimentConfig) -> (RunLog, Experiment) {
+    let mut trainer = NativeLrTrainer::new(&cfg);
+    let mut exp = Experiment::new(cfg, &trainer);
+    assert!(exp.population.is_some(), "population mode expected");
+    assert!(exp.devices.is_empty(), "no permanently materialized fleet");
+    let log = exp.run(&mut trainer).unwrap();
+    (log, exp)
+}
+
+fn assert_logs_bitwise_equal(a: &RunLog, b: &RunLog, label: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{label}: record counts");
+    for (x, y) in a.records.iter().zip(&b.records) {
+        let r = x.round;
+        assert_eq!(x.round, y.round, "{label} round {r}");
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{label} loss round {r}");
+        assert_eq!(x.bytes_up, y.bytes_up, "{label} bytes round {r}");
+        assert_eq!(
+            x.round_time_s.to_bits(),
+            y.round_time_s.to_bits(),
+            "{label} round_time round {r}"
+        );
+        assert_eq!(
+            x.total_time_s.to_bits(),
+            y.total_time_s.to_bits(),
+            "{label} total_time round {r}"
+        );
+        assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits(), "{label} energy round {r}");
+        assert_eq!(x.money.to_bits(), y.money.to_bits(), "{label} money round {r}");
+        if x.eval_acc.is_nan() || y.eval_acc.is_nan() {
+            assert_eq!(x.eval_acc.is_nan(), y.eval_acc.is_nan(), "{label} eval round {r}");
+        } else {
+            assert_eq!(x.eval_acc.to_bits(), y.eval_acc.to_bits(), "{label} acc round {r}");
+        }
+        assert_eq!(
+            x.finish_p50_s.to_bits(),
+            y.finish_p50_s.to_bits(),
+            "{label} p50 round {r}"
+        );
+        assert_eq!(x.sampled, y.sampled, "{label} sampled round {r}");
+        assert_eq!(x.completed, y.completed, "{label} completed round {r}");
+        assert_eq!(x.dropped_offline, y.dropped_offline, "{label} dropped round {r}");
+    }
+}
+
+/// Acceptance criterion: `FullParticipation` over a materialized population
+/// + batch aggregation reproduces `Experiment::step_round` bit for bit,
+/// across mechanism shapes (sparse LGC, dense FedAvg, packed QSGD, RandK's
+/// per-device RNG streams, the DDPG-controlled mechanism) and seeds.
+#[test]
+fn full_participation_matches_step_round_oracle_bitwise() {
+    for seed in [42u64, 1234] {
+        for (mech, rounds) in [
+            (Mechanism::LgcStatic, 12),
+            (Mechanism::FedAvg, 8),
+            (Mechanism::Qsgd, 8),
+            (Mechanism::RandK, 8),
+            (Mechanism::LgcDrl, 6),
+        ] {
+            let reference = reference_log(base_cfg(mech, rounds, seed));
+            let (cohort, exp) = population_run(full_participation_cfg(mech, rounds, seed));
+            assert_eq!(cohort.records.len(), rounds, "{} seed {seed}", mech.name());
+            assert_logs_bitwise_equal(
+                &reference,
+                &cohort,
+                &format!("{} seed {seed}", mech.name()),
+            );
+            let pop = exp.population.as_ref().unwrap();
+            assert_eq!(pop.materialized(), 0, "everything demobilized after the run");
+            assert!(pop.peak_materialized() <= pop.cohort());
+        }
+    }
+}
+
+/// Oracle equivalence also under a budget early-stop.
+#[test]
+fn full_participation_matches_oracle_under_budget_stop() {
+    let mut legacy = base_cfg(Mechanism::LgcStatic, 30, 42);
+    legacy.energy_budget = 160.0;
+    let mut popcfg = full_participation_cfg(Mechanism::LgcStatic, 30, 42);
+    popcfg.energy_budget = 160.0;
+    let reference = reference_log(legacy);
+    let (cohort, _) = population_run(popcfg);
+    assert!(reference.records.len() < 30, "budget should bite");
+    assert_logs_bitwise_equal(&reference, &cohort, "budget-stop");
+}
+
+/// Acceptance criterion: memory scales with the cohort, not the population.
+/// A 100k-client run at cohort 64 completes with at most 64 devices
+/// materialized at any instant and zero left resident afterwards —
+/// unsampled clients never own dense model replicas.
+#[test]
+fn materialized_devices_bounded_by_cohort_at_100k_clients() {
+    let mut cfg = base_cfg(Mechanism::LgcStatic, 3, 42);
+    cfg.devices = 4;
+    cfg.samples_per_device = 128;
+    cfg.eval_samples = 128;
+    cfg.population = Some(100_000);
+    cfg.cohort = Some(64);
+    cfg.sampler = Some(SamplerKind::UniformK);
+    let (log, exp) = population_run(cfg);
+    assert_eq!(log.records.len(), 3);
+    for rec in &log.records {
+        assert_eq!(rec.sampled, 64, "full cohort every round");
+        assert_eq!(rec.completed, 64, "lossless barrier path delivers all");
+    }
+    let pop = exp.population.as_ref().unwrap();
+    assert_eq!(pop.len(), 100_000);
+    assert!(
+        pop.peak_materialized() <= 64,
+        "peak {} exceeds cohort",
+        pop.peak_materialized()
+    );
+    assert_eq!(pop.materialized(), 0, "no dense replicas survive the run");
+    // Persisted per-client state: only the sampled clients carry residuals,
+    // and a residual never exceeds one dense model (4 B/coordinate).
+    let sampled_max = 3 * 64usize;
+    let mut with_residual = 0usize;
+    for id in 0..pop.len() {
+        let r = &pop.spec(id).residual;
+        if !r.is_empty() {
+            with_residual += 1;
+            assert!(r.bytes() <= 2 * 4 * 7850, "residual beyond compact bound");
+        }
+    }
+    assert!(with_residual <= sampled_max, "{with_residual} residuals");
+}
+
+/// Population runs are deterministic given the seed, and seed-sensitive.
+#[test]
+fn sampler_determinism_given_seed() {
+    let mk = |seed: u64| {
+        let mut cfg = base_cfg(Mechanism::LgcStatic, 8, seed);
+        cfg.devices = 4;
+        cfg.population = Some(64);
+        cfg.cohort = Some(8);
+        cfg.sampler = Some(SamplerKind::UniformK);
+        population_run(cfg).0
+    };
+    let (a, b, c) = (mk(42), mk(42), mk(7));
+    assert_logs_bitwise_equal(&a, &b, "same-seed uniform-k");
+    assert!(
+        a.records
+            .iter()
+            .zip(&c.records)
+            .any(|(x, y)| x.train_loss.to_bits() != y.train_loss.to_bits()),
+        "different seed should sample different cohorts"
+    );
+}
+
+/// Weighted sampling runs end to end and the weighted rule is exercised
+/// through the registry-standard experiment path.
+#[test]
+fn weighted_sampler_cohort_trains() {
+    let mut cfg = base_cfg(Mechanism::LgcStatic, 20, 42);
+    cfg.devices = 4;
+    cfg.dirichlet_alpha = 0.1; // strongly unequal shards
+    cfg.population = Some(24);
+    cfg.cohort = Some(6);
+    cfg.sampler = Some(SamplerKind::WeightedBySamples);
+    let (log, exp) = population_run(cfg);
+    assert_eq!(log.records.len(), 20);
+    assert!(log.final_acc() > 0.4, "acc={}", log.final_acc());
+    assert!(exp.population.as_ref().unwrap().peak_materialized() <= 6);
+}
+
+/// Availability churn: offline clients are never sampled, mid-upload drops
+/// feed the restitution path and are counted per round, and training still
+/// completes.
+#[test]
+fn availability_churn_drops_uploads_and_still_runs() {
+    let mut cfg = base_cfg(Mechanism::LgcStatic, 14, 42);
+    cfg.devices = 4;
+    cfg.population = Some(40);
+    cfg.cohort = Some(8);
+    cfg.sampler = Some(SamplerKind::AvailabilityMarkov);
+    cfg.churn_down = 0.35;
+    cfg.churn_up = 0.5;
+    let (log, exp) = population_run(cfg);
+    assert_eq!(log.records.len(), 14);
+    let dropped: u64 = log.records.iter().map(|r| r.dropped_offline).sum();
+    assert!(dropped > 0, "0.35 mid-upload churn over 14x8 uploads must drop");
+    for rec in &log.records {
+        // Every client that ran either delivered or dropped mid-upload.
+        assert!(rec.completed + rec.dropped_offline <= rec.sampled);
+        assert!(rec.sampled <= 8);
+    }
+    let stats = exp.sim_stats;
+    assert_eq!(
+        stats.dropped_offline, dropped,
+        "engine counter agrees with the per-round records"
+    );
+    // Dropped mass is restituted, not destroyed: residuals exist.
+    assert!(exp.population.as_ref().unwrap().residual_bytes() > 0);
+}
+
+/// Acceptance criterion: streaming aggregation equals batch aggregation to
+/// the documented float tolerance — exercised at the server level and end
+/// to end through the cohort engine.
+#[test]
+fn streaming_aggregation_matches_batch_within_tolerance() {
+    // Server-level: same uploads through both paths.
+    let mut rng = Rng::new(5);
+    let dim = 512;
+    let ups: Vec<LgcUpdate> = (0..7)
+        .map(|_| {
+            let u: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+            lgc_compress(&u, &[16, 48], &mut CompressScratch::default())
+        })
+        .collect();
+    let refs: Vec<&LgcUpdate> = ups.iter().collect();
+    let mut batch = Server::new(vec![0f32; dim]);
+    batch.aggregate_and_apply(&refs);
+    let mut stream = Server::new(vec![0f32; dim]);
+    stream.stream_begin();
+    for u in &ups {
+        stream.stream_accumulate(u, 1.0);
+    }
+    assert!(stream.stream_apply());
+    for i in 0..dim {
+        assert!(
+            (batch.params[i] - stream.params[i]).abs() < 1e-5,
+            "at {i}: batch {} vs stream {}",
+            batch.params[i],
+            stream.params[i]
+        );
+    }
+
+    // End to end: a streaming cohort run trains, and its first round (one
+    // aggregation of identical local work) stays within tolerance of the
+    // batch run's.
+    let mk = |streaming: bool| {
+        let mut cfg = base_cfg(Mechanism::LgcStatic, 25, 42);
+        cfg.devices = 4;
+        cfg.population = Some(12);
+        cfg.cohort = Some(6);
+        cfg.sampler = Some(SamplerKind::UniformK);
+        cfg.streaming = streaming;
+        population_run(cfg).0
+    };
+    let (with_stream, with_batch) = (mk(true), mk(false));
+    assert_eq!(with_stream.records.len(), 25);
+    assert!(
+        (with_stream.records[0].train_loss - with_batch.records[0].train_loss).abs() < 1e-9,
+        "round 0 local work is identical"
+    );
+    assert!(with_stream.final_acc() > 0.5, "acc={}", with_stream.final_acc());
+    assert!(with_batch.final_acc() > 0.5, "acc={}", with_batch.final_acc());
+}
+
+/// The cohort engine also runs under the async sync modes: a semi-async
+/// slot pool over a 300-client population keeps at most `cohort` devices
+/// materialized and emits one record per aggregation.
+#[test]
+fn cohort_semi_async_bounds_materialization() {
+    let mut cfg = base_cfg(Mechanism::LgcStatic, 10, 42);
+    cfg.devices = 4;
+    cfg.population = Some(300);
+    cfg.cohort = Some(8);
+    cfg.sampler = Some(SamplerKind::UniformK);
+    cfg.sync_mode = Some(SyncMode::SemiAsync { buffer_k: 4 });
+    let (log, exp) = population_run(cfg);
+    assert_eq!(log.records.len(), 10);
+    for w in log.records.windows(2) {
+        assert!(w[1].total_time_s >= w[0].total_time_s);
+        assert!(w[1].energy_j >= w[0].energy_j);
+    }
+    let pop = exp.population.as_ref().unwrap();
+    assert!(pop.peak_materialized() <= 8, "peak {}", pop.peak_materialized());
+    assert_eq!(pop.materialized(), 0);
+    assert!(exp.sim_stats.events > 0);
+}
+
+/// Fully-async + streaming over a population: each completed upload is
+/// applied on arrival through the streaming seam.
+#[test]
+fn cohort_fully_async_streaming_runs() {
+    let mut cfg = base_cfg(Mechanism::LgcStatic, 12, 42);
+    cfg.devices = 4;
+    cfg.population = Some(100);
+    cfg.cohort = Some(6);
+    cfg.sampler = Some(SamplerKind::UniformK);
+    cfg.sync_mode = Some(SyncMode::FullyAsync { staleness_decay: 0.8 });
+    cfg.streaming = true;
+    let (log, exp) = population_run(cfg);
+    assert_eq!(log.records.len(), 12);
+    assert!(exp.population.as_ref().unwrap().peak_materialized() <= 6);
+}
+
+/// The builder's sampler override switches on population mode and wins over
+/// the config key.
+#[test]
+fn builder_sampler_override_enables_population_mode() {
+    let cfg = base_cfg(Mechanism::LgcStatic, 4, 42);
+    let trainer = NativeLrTrainer::new(&cfg);
+    let mut exp = ExperimentBuilder::new(cfg)
+        .trainer(&trainer)
+        .sampler(|_ctx| Box::new(lgc::population::FullParticipation::new()))
+        .build()
+        .unwrap();
+    assert!(exp.population.is_some());
+    let mut trainer2 = NativeLrTrainer::new(&exp.cfg);
+    let log = exp.run(&mut trainer2).unwrap();
+    assert_eq!(log.records.len(), 4);
+}
+
+/// Population mode and per-device sync gaps are incompatible concepts.
+#[test]
+fn population_mode_rejects_sync_gaps() {
+    let cfg = full_participation_cfg(Mechanism::LgcStatic, 4, 42);
+    let trainer = NativeLrTrainer::new(&cfg);
+    let err = ExperimentBuilder::new(cfg)
+        .trainer(&trainer)
+        .sync_gaps(vec![1, 2, 3])
+        .build()
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("sync_gaps"));
+}
+
+/// `step_round` is the legacy fully-materialized loop; population-mode
+/// experiments must run through the cohort engine.
+#[test]
+#[should_panic(expected = "population-mode")]
+fn step_round_rejects_population_mode() {
+    let cfg = full_participation_cfg(Mechanism::LgcStatic, 4, 42);
+    let mut trainer = NativeLrTrainer::new(&cfg);
+    let mut exp = Experiment::new(cfg, &trainer);
+    let _ = exp.step_round(0, &mut trainer);
+}

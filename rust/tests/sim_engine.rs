@@ -89,6 +89,12 @@ fn assert_logs_bitwise_equal(a: &RunLog, b: &RunLog, label: &str) {
             "{label} p95 round {r}"
         );
         assert_eq!(x.stale_updates, y.stale_updates, "{label} stale round {r}");
+        assert_eq!(x.sampled, y.sampled, "{label} sampled round {r}");
+        assert_eq!(x.completed, y.completed, "{label} completed round {r}");
+        assert_eq!(
+            x.dropped_offline, y.dropped_offline,
+            "{label} dropped_offline round {r}"
+        );
     }
 }
 
