@@ -3,6 +3,7 @@
 
 use lgc::bench::{bench_auto, Table};
 use lgc::channels::{ChannelType, DeviceChannels, Link};
+use lgc::metrics::columns;
 use lgc::util::Rng;
 
 fn main() {
@@ -53,4 +54,13 @@ fn main() {
         std::hint::black_box(link.expected_cost(1 << 20));
     });
     r.report("");
+
+    // The canonical per-round CSV schema, from the single source of truth
+    // (`metrics::columns`) the writer and tests share — printed here so a
+    // bench consumer never hand-rolls (and drifts from) the column names.
+    println!("\n== round CSV schema ==\n{}", columns::header());
+    assert!(
+        columns::ROUND.contains(&"finish_p50_s") && columns::ROUND.contains(&"down_bytes"),
+        "columns list lost a known field"
+    );
 }

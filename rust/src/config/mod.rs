@@ -9,6 +9,7 @@ use std::path::Path;
 pub use toml::{Document, Value};
 
 use crate::channels::ChannelType;
+use crate::downlink::DownlinkCompression;
 use crate::population::SamplerKind;
 use crate::sim::SyncMode;
 
@@ -194,6 +195,24 @@ pub struct ExperimentConfig {
     pub churn_down: f64,
     /// Per-round/tick probability an offline client comes back online.
     pub churn_up: f64,
+    /// Simulate the downlink (layered model broadcast over fading channels
+    /// with delta compression, staleness tracking, and download
+    /// energy/money charging). `None` defers to the mechanism preset's
+    /// default (e.g. `lgc-downlink` enables it) and ultimately to
+    /// disabled — the free-instant-broadcast legacy semantics, bit-for-bit
+    /// equal to the frozen `step_round` oracle.
+    pub downlink: Option<bool>,
+    /// How the server compresses each device's model delta for broadcast:
+    /// `dense` (exact) or `layered` (LGC base + enhancement layers).
+    /// `None` defers to the preset default, then `dense`. Setting this key
+    /// switches the downlink on (unless `downlink = false` says
+    /// otherwise), mirroring how the population keys enable population
+    /// mode.
+    pub downlink_compression: Option<DownlinkCompression>,
+    /// Money-tariff multiplier for downlink traffic relative to the uplink
+    /// tariff table (operators price downlink data differently; energy is
+    /// charged unscaled — the radio's receive chain draws what it draws).
+    pub downlink_tariff_scale: f64,
     /// Server-side streaming aggregation: fold each upload into the running
     /// aggregate on arrival (O(model) server state) instead of buffering
     /// every decoded update until aggregation. Applies to the population
@@ -271,6 +290,9 @@ impl Default for ExperimentConfig {
             sampler: None,
             churn_down: 0.0,
             churn_up: 0.0,
+            downlink: None,
+            downlink_compression: None,
+            downlink_tariff_scale: 1.0,
             streaming: false,
             drl: DrlConfig::default(),
         }
@@ -400,6 +422,15 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_bool("", "streaming") {
             cfg.streaming = v;
         }
+        if let Some(v) = doc.get_bool("", "downlink") {
+            cfg.downlink = Some(v);
+        }
+        if let Some(s) = doc.get_str("", "downlink_compression") {
+            cfg.downlink_compression = Some(DownlinkCompression::parse(s)?);
+        }
+        if let Some(v) = doc.get_f64("", "downlink_tariff_scale") {
+            cfg.downlink_tariff_scale = v;
+        }
         // [drl]
         if let Some(v) = doc.get_f64("drl", "actor_lr") {
             cfg.drl.actor_lr = v;
@@ -496,6 +527,12 @@ impl ExperimentConfig {
         }
         if !(0.0..=1.0).contains(&self.churn_up) {
             return Err(format!("churn_up must lie in [0, 1], got {}", self.churn_up));
+        }
+        if !(self.downlink_tariff_scale > 0.0 && self.downlink_tariff_scale.is_finite()) {
+            return Err(format!(
+                "downlink_tariff_scale must be finite and > 0, got {}",
+                self.downlink_tariff_scale
+            ));
         }
         Ok(())
     }
@@ -632,6 +669,31 @@ mod tests {
             "sampler = \"lottery\"",
             "churn_down = 1.5",
             "churn_up = -0.1",
+        ] {
+            let doc = Document::parse(bad).unwrap();
+            assert!(ExperimentConfig::from_document(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn downlink_keys_parse() {
+        let doc = Document::parse(
+            "downlink = true\ndownlink_compression = \"layered\"\ndownlink_tariff_scale = 0.5\n",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.downlink, Some(true));
+        assert_eq!(cfg.downlink_compression, Some(DownlinkCompression::Layered));
+        assert!((cfg.downlink_tariff_scale - 0.5).abs() < 1e-12);
+        // Unset keys keep the deferred defaults.
+        let cfg = ExperimentConfig::from_document(&Document::new()).unwrap();
+        assert_eq!(cfg.downlink, None);
+        assert_eq!(cfg.downlink_compression, None);
+        assert_eq!(cfg.downlink_tariff_scale, 1.0);
+        for bad in [
+            "downlink_compression = \"zip\"",
+            "downlink_tariff_scale = 0.0",
+            "downlink_tariff_scale = -2.0",
         ] {
             let doc = Document::parse(bad).unwrap();
             assert!(ExperimentConfig::from_document(&doc).is_err(), "{bad}");

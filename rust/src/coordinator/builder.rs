@@ -33,6 +33,7 @@ use super::trainer::LocalTrainer;
 use crate::channels::DeviceChannels;
 use crate::compression::{Compressor, LgcUpdate};
 use crate::config::ExperimentConfig;
+use crate::downlink::{Downlink, DownlinkCompression};
 use crate::drl::DeviceAgent;
 use crate::population::{self, ClientSampler, DeviceSpec, Population, SamplerKind};
 use crate::resources::{ComputeCostModel, ResourceMeter};
@@ -170,6 +171,20 @@ impl<'a> ExperimentBuilder<'a> {
             SyncMode::Barrier => SyncMode::Barrier,
         };
         sync_mode.validate().map_err(|e| anyhow!("invalid sync mode: {e}"))?;
+        // Downlink resolution, same precedence shape as the sync mode:
+        // explicit config > preset default > disabled, with the standalone
+        // compression key overriding a preset-provided compression. Setting
+        // `downlink_compression` alone enables the downlink (same
+        // convention as the population keys) — a compression choice on a
+        // disabled downlink would otherwise be silently ignored.
+        let preset_downlink = preset.and_then(|p| p.default_downlink);
+        let downlink_enabled = cfg
+            .downlink
+            .unwrap_or(preset_downlink.is_some() || cfg.downlink_compression.is_some());
+        let downlink_compression = cfg
+            .downlink_compression
+            .or(preset_downlink)
+            .unwrap_or(DownlinkCompression::Dense);
 
         let rng = Rng::new(cfg.seed);
         let init = trainer.init_params();
@@ -258,19 +273,42 @@ impl<'a> ExperimentBuilder<'a> {
         let agents: Vec<Option<DeviceAgent>> = (0..n_clients)
             .map(|id| {
                 if policy.needs_agents() && !population_mode {
-                    Some(DeviceAgent::new(
+                    Some(DeviceAgent::new_with(
                         cfg.channel_types.len(),
                         cfg.h_max,
                         d_total,
                         d_min,
                         cfg.drl.clone(),
                         rng.fork(0xD_00 + id as u64),
+                        downlink_enabled,
                     ))
                 } else {
                     None
                 }
             })
             .collect();
+        // The downlink: per-client fading links forked off an independent
+        // stream, plus (legacy engines) one init-model mirror per device
+        // for full-fidelity delta encoding. Population mode runs
+        // accounting-only (see downlink module docs), so no mirrors.
+        let downlink = if downlink_enabled {
+            let mirrors = if population_mode {
+                Vec::new()
+            } else {
+                (0..n_clients).map(|_| init.clone()).collect()
+            };
+            Some(Downlink::new(
+                n_clients,
+                downlink_compression,
+                cfg.downlink_tariff_scale,
+                &cfg.channel_types,
+                &rng,
+                static_ks.clone(),
+                mirrors,
+            ))
+        } else {
+            None
+        };
         let server = Server::with_aggregator(init, aggregator_f(&ctx));
 
         let sync_gap = match self.sync_gaps {
@@ -294,6 +332,7 @@ impl<'a> ExperimentBuilder<'a> {
             policy,
             sync_gap,
             sync_mode,
+            downlink,
             sim_stats: SimStats::default(),
             rng,
             total_time_s: 0.0,
@@ -408,6 +447,65 @@ mod tests {
         let trainer4 = NativeLrTrainer::new(&c4);
         let exp4 = ExperimentBuilder::new(c4).trainer(&trainer4).build().unwrap();
         assert_eq!(exp4.sync_mode, SyncMode::SemiAsync { buffer_k: 4 });
+    }
+
+    #[test]
+    fn downlink_resolution_config_over_preset_over_disabled() {
+        use crate::downlink::DownlinkCompression;
+        // Default: disabled — the frozen free-broadcast semantics.
+        let c = cfg();
+        let trainer = NativeLrTrainer::new(&c);
+        let exp = ExperimentBuilder::new(c).trainer(&trainer).build().unwrap();
+        assert!(exp.downlink.is_none());
+        // The lgc-downlink preset enables the layered downlink by default.
+        let mut c2 = cfg();
+        c2.mechanism = Mechanism::parse("lgc-downlink").unwrap();
+        let trainer2 = NativeLrTrainer::new(&c2);
+        let exp2 = ExperimentBuilder::new(c2).trainer(&trainer2).build().unwrap();
+        let dl = exp2.downlink.as_ref().expect("preset enables downlink");
+        assert_eq!(dl.compression(), DownlinkCompression::Layered);
+        assert!(!dl.accounting_only());
+        // Explicit config wins over the preset default.
+        let mut c3 = cfg();
+        c3.mechanism = Mechanism::parse("lgc-downlink").unwrap();
+        c3.downlink = Some(false);
+        let trainer3 = NativeLrTrainer::new(&c3);
+        let exp3 = ExperimentBuilder::new(c3).trainer(&trainer3).build().unwrap();
+        assert!(exp3.downlink.is_none());
+        // Standalone enable on a preset without a default: dense fallback.
+        let mut c4 = cfg();
+        c4.downlink = Some(true);
+        let trainer4 = NativeLrTrainer::new(&c4);
+        let exp4 = ExperimentBuilder::new(c4).trainer(&trainer4).build().unwrap();
+        assert_eq!(
+            exp4.downlink.as_ref().unwrap().compression(),
+            DownlinkCompression::Dense
+        );
+        // Population mode gets the accounting-only downlink.
+        let mut c5 = cfg();
+        c5.downlink = Some(true);
+        c5.population = Some(6);
+        c5.cohort = Some(2);
+        let trainer5 = NativeLrTrainer::new(&c5);
+        let exp5 = ExperimentBuilder::new(c5).trainer(&trainer5).build().unwrap();
+        assert!(exp5.downlink.as_ref().unwrap().accounting_only());
+        // A bare compression key enables the downlink (population-keys
+        // convention) instead of being silently ignored...
+        let mut c6 = cfg();
+        c6.downlink_compression = Some(DownlinkCompression::Layered);
+        let trainer6 = NativeLrTrainer::new(&c6);
+        let exp6 = ExperimentBuilder::new(c6).trainer(&trainer6).build().unwrap();
+        assert_eq!(
+            exp6.downlink.as_ref().unwrap().compression(),
+            DownlinkCompression::Layered
+        );
+        // ...unless downlink = false says otherwise.
+        let mut c7 = cfg();
+        c7.downlink = Some(false);
+        c7.downlink_compression = Some(DownlinkCompression::Layered);
+        let trainer7 = NativeLrTrainer::new(&c7);
+        let exp7 = ExperimentBuilder::new(c7).trainer(&trainer7).build().unwrap();
+        assert!(exp7.downlink.is_none());
     }
 
     #[test]

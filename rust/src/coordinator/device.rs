@@ -11,7 +11,10 @@ use anyhow::Result;
 
 use super::trainer::{DeviceTrainer, LocalTrainer};
 use crate::channels::{AllocationPlan, DeviceChannels, TransferCost};
-use crate::compression::{CompressScratch, Compressor, ErrorFeedback, LayerBudget, LgcUpdate};
+use crate::compression::{
+    CompressScratch, Compressor, ErrorFeedback, Layer, LayerBudget, LgcUpdate,
+};
+use crate::downlink::SyncState;
 use crate::resources::{ComputeCostModel, ResourceMeter};
 
 /// Fate of one emitted layer of an upload (parallel to the emitted layer
@@ -76,6 +79,7 @@ pub struct DeviceParts {
     pub meter: ResourceMeter,
     pub prev_loss: f64,
     pub last_delta: f64,
+    pub sync_state: SyncState,
 }
 
 /// Persistent device state across rounds.
@@ -94,6 +98,10 @@ pub struct Device {
     pub prev_loss: f64,
     /// Last round's loss improvement δ (DRL state feature).
     pub last_delta: f64,
+    /// Downlink synchronization state (last confirmed sync, layers still
+    /// in flight, staleness gap at round start). Inert — all zeros — when
+    /// the downlink is disabled, so the legacy paths are unaffected.
+    pub sync_state: SyncState,
     scratch: CompressScratch,
     progress_buf: Vec<f32>,
 }
@@ -117,6 +125,7 @@ impl Device {
             compute,
             prev_loss: f64::NAN,
             last_delta: 0.0,
+            sync_state: SyncState::default(),
             scratch: CompressScratch::default(),
             progress_buf: Vec::new(),
         }
@@ -320,6 +329,31 @@ impl Device {
         self.params_sync.copy_from_slice(global);
     }
 
+    /// Begin a downlink resynchronization: collapse `ŵ` back onto
+    /// `w_sync`, discarding the local progress the preceding upload
+    /// already shipped (it lives in `delivered layers + error memory`
+    /// now) — the downlink analogue of the wipe [`Device::sync`] performs
+    /// on the free-broadcast path. Without this, the next round would
+    /// re-upload the same mass the server already aggregated. The engines
+    /// call it exactly when the legacy path would have called `sync`:
+    /// when a post-upload broadcast starts for this device.
+    pub fn begin_downlink_sync(&mut self) {
+        self.params_hat.copy_from_slice(&self.params_sync);
+    }
+
+    /// Apply one arrived downlink delta layer: `params += layer`, to
+    /// **both** replicas — so any *new* local progress `w_sync − ŵ`
+    /// (accumulated after the device restarted on the base layer) is
+    /// invariant (up to f32 rounding) under late-arriving enhancement
+    /// layers. The error-feedback path never double-counts either way,
+    /// because the compressor always reads the *live* `w_sync − ŵ` at
+    /// upload time. Decrements `sync_state.pending_layers`.
+    pub fn apply_downlink_layer(&mut self, layer: &Layer) {
+        crate::downlink::frame::apply_delta(&mut self.params_hat, layer);
+        crate::downlink::frame::apply_delta(&mut self.params_sync, layer);
+        self.sync_state.pending_layers = self.sync_state.pending_layers.saturating_sub(1);
+    }
+
     /// Restitute every coordinate of an already-compressed `update` into the
     /// error memory — the whole-upload analogue of the per-layer loss branch
     /// of [`Device::upload_lossy`]. Used when a client churns offline
@@ -352,6 +386,7 @@ impl Device {
             meter: self.meter,
             prev_loss: self.prev_loss,
             last_delta: self.last_delta,
+            sync_state: self.sync_state,
         }
     }
 
@@ -480,6 +515,53 @@ mod tests {
             }
         }
         assert!(saw_loss, "40 trials in Bad fading should lose something");
+    }
+
+    #[test]
+    fn begin_downlink_sync_wipes_shipped_progress_like_sync() {
+        // After an upload, the progress u = w_sync − ŵ was shipped
+        // (delivered layers + error memory); starting the downlink resync
+        // must wipe it from the replicas, or the next round re-uploads it.
+        let mut dev = mk_device(200);
+        for (i, p) in dev.params_hat.iter_mut().enumerate() {
+            *p = (i as f32) * 1e-3;
+        }
+        let plan = AllocationPlan { counts: vec![10, 20, 30] };
+        let _ = dev.compress_and_upload(&plan);
+        assert!(dev
+            .params_hat
+            .iter()
+            .zip(&dev.params_sync)
+            .any(|(a, b)| a != b));
+        dev.begin_downlink_sync();
+        for (a, b) in dev.params_hat.iter().zip(&dev.params_sync) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Delta layers now move both replicas together: no residual
+        // progress exists to double-count.
+        let layer = Layer { indices: vec![3], values: vec![0.5] };
+        dev.apply_downlink_layer(&layer);
+        assert_eq!(dev.params_hat[3].to_bits(), dev.params_sync[3].to_bits());
+    }
+
+    #[test]
+    fn downlink_layer_applies_to_both_replicas() {
+        let mut dev = mk_device(100);
+        for (i, p) in dev.params_hat.iter_mut().enumerate() {
+            *p = i as f32 * 1e-2;
+        }
+        dev.sync_state.pending_layers = 2;
+        let layer = Layer { indices: vec![0, 7, 99], values: vec![1.0, -2.0, 0.5] };
+        let hat0 = dev.params_hat[7];
+        let sync0 = dev.params_sync[7];
+        dev.apply_downlink_layer(&layer);
+        assert_eq!(dev.sync_state.pending_layers, 1);
+        assert_eq!(dev.params_hat[7], hat0 - 2.0);
+        assert_eq!(dev.params_sync[7], sync0 - 2.0);
+        assert_eq!(dev.params_hat[1], 1e-2); // untouched coordinate
+        dev.apply_downlink_layer(&layer);
+        dev.apply_downlink_layer(&layer); // saturates at zero, no panic
+        assert_eq!(dev.sync_state.pending_layers, 0);
     }
 
     #[test]

@@ -27,6 +27,7 @@ use super::server::Server;
 use super::trainer::LocalTrainer;
 use crate::compression::LgcUpdate;
 use crate::config::ExperimentConfig;
+use crate::downlink::Downlink;
 use crate::drl::DeviceAgent;
 use crate::metrics::{percentile, RoundRecord, RunLog};
 use crate::population::{ClientSampler, Population};
@@ -60,6 +61,10 @@ pub struct Experiment {
     /// Server synchronization discipline (resolved by the builder:
     /// `cfg.sync_mode` > mechanism-preset default > `Barrier`).
     pub sync_mode: SyncMode,
+    /// The simulated downlink (resolved by the builder: `cfg.downlink` >
+    /// mechanism-preset default > disabled). `None` keeps the legacy
+    /// free-instant-broadcast semantics, bit-for-bit.
+    pub downlink: Option<Downlink>,
     /// Event-engine counters from the most recent [`Experiment::run`].
     pub sim_stats: SimStats,
     pub(super) rng: Rng,
@@ -130,6 +135,11 @@ impl Experiment {
             self.population.is_none(),
             "step_round drives the legacy fully-materialized loop; population-mode \
              experiments run their cohort engine via Experiment::run"
+        );
+        assert!(
+            self.downlink.is_none(),
+            "step_round is the frozen pre-downlink reference oracle; downlink-enabled \
+             experiments run the event engine via Experiment::run"
         );
         let m = self.devices.len();
         // 1. Network dynamics advance.
@@ -269,6 +279,11 @@ impl Experiment {
             sampled: active.iter().filter(|&&a| a).count() as u64,
             completed: received_idx.len() as u64,
             dropped_offline: 0,
+            staleness_p50: 0.0,
+            staleness_p95: 0.0,
+            down_bytes: 0,
+            down_energy_j: 0.0,
+            down_money: 0.0,
         }))
     }
 
@@ -291,6 +306,12 @@ impl Experiment {
         }
         if let Some(pop) = &mut self.population {
             pop.reset_episode(self.cfg.energy_budget, self.cfg.money_budget);
+        }
+        if let Some(dl) = &mut self.downlink {
+            dl.reset_episode(&init);
+        }
+        for dev in &mut self.devices {
+            dev.sync_state = Default::default();
         }
         self.total_time_s = 0.0;
     }

@@ -122,7 +122,14 @@ impl RoundPolicy for DdpgPolicy {
         agent: Option<&mut DeviceAgent>,
     ) -> (usize, AllocationPlan) {
         let agent = agent.expect("DdpgPolicy requires per-device agents");
-        let state = agent.observe_state(&dev.meter, &dev.channels, dev.last_delta);
+        // Staleness-aware agents (downlink enabled) see the device's model
+        // age as an extra state feature; legacy agents ignore the argument.
+        let state = agent.observe_state(
+            &dev.meter,
+            &dev.channels,
+            dev.last_delta,
+            dev.sync_state.staleness,
+        );
         let decision = agent.decide(&state, true);
         (decision.local_steps, decision.plan)
     }
@@ -139,7 +146,12 @@ impl RoundPolicy for DdpgPolicy {
             dev.meter.last_round[0].total().max(1e-9),
             dev.meter.last_round[1].total().max(1e-9),
         ];
-        let next_state = agent.observe_state(&dev.meter, &dev.channels, delta);
+        let next_state = agent.observe_state(
+            &dev.meter,
+            &dev.channels,
+            delta,
+            dev.sync_state.staleness,
+        );
         let (r, _) = agent.feedback(delta, &eps, next_state, done);
         Some(r)
     }

@@ -14,6 +14,7 @@ use crate::compression::{
 };
 use crate::compression::quantize::QsgdQuantizer;
 use crate::config::ExperimentConfig;
+use crate::downlink::DownlinkCompression;
 use crate::sim::SyncMode;
 use crate::util::Rng;
 
@@ -54,6 +55,11 @@ pub struct MechanismPreset {
     /// Sync-mode default applied when the config leaves `sync_mode` unset
     /// (`cfg.sync_mode` always wins; `None` here means `Barrier`).
     pub default_sync: Option<SyncMode>,
+    /// Downlink default applied when the config leaves `downlink` unset:
+    /// `Some(compression)` enables the simulated downlink with that delta
+    /// compression (`cfg.downlink` / `cfg.downlink_compression` always
+    /// win; `None` here means disabled — free instant broadcast).
+    pub default_downlink: Option<DownlinkCompression>,
 }
 
 impl MechanismPreset {
@@ -71,12 +77,21 @@ impl MechanismPreset {
             aggregator,
             policy,
             default_sync: None,
+            default_downlink: None,
         }
     }
 
     /// Attach a sync-mode default (builder style).
     pub fn with_default_sync(mut self, mode: SyncMode) -> Self {
         self.default_sync = Some(mode);
+        self
+    }
+
+    /// Attach a downlink default (builder style): the preset runs with the
+    /// simulated downlink enabled under `compression` unless the config
+    /// says otherwise.
+    pub fn with_default_downlink(mut self, compression: DownlinkCompression) -> Self {
+        self.default_downlink = Some(compression);
         self
     }
 }
@@ -197,6 +212,17 @@ impl MechanismRegistry {
 
         reg.register(
             MechanismPreset::new(
+                "lgc-downlink",
+                "LGC (static allocation) with the simulated layered downlink broadcast",
+                ef_lgc_compressor(),
+                mean_aggregator(),
+                static_layered_policy(),
+            )
+            .with_default_downlink(DownlinkCompression::Layered),
+        );
+
+        reg.register(
+            MechanismPreset::new(
                 "lgc-async",
                 "LGC (static allocation) under FedAsync staleness-weighted application",
                 ef_lgc_compressor(),
@@ -270,6 +296,17 @@ mod tests {
             Some(SyncMode::FullyAsync { staleness_decay: 0.5 })
         );
         assert_eq!(reg.get("lgc-static").unwrap().default_sync, None);
+    }
+
+    #[test]
+    fn downlink_preset_carries_downlink_default() {
+        let reg = MechanismRegistry::builtin();
+        assert_eq!(
+            reg.get("lgc-downlink").unwrap().default_downlink,
+            Some(DownlinkCompression::Layered)
+        );
+        assert_eq!(reg.get("lgc-static").unwrap().default_downlink, None);
+        assert_eq!(reg.get("fedavg").unwrap().default_downlink, None);
     }
 
     #[test]

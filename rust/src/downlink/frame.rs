@@ -1,0 +1,288 @@
+//! Wire format of one downlink broadcast layer ("frame").
+//!
+//! Layout (little-endian, single contiguous buffer):
+//!
+//! ```text
+//! [u32 magic "LGCD"] [u32 version] [u32 round] [u16 layer_idx] [u16 n_layers]
+//! [u32 dim] [u32 nnz] [u32 delta_0 ..] [f32 v_0 ..]
+//! ```
+//!
+//! The payload after the 16-byte frame header is exactly the uplink's
+//! sparse chunk ([`crate::compression::wire`]), so the hardened decoder —
+//! checked lengths, overflow-free index reconstruction, duplicate
+//! detection — is reused rather than re-implemented. Like the uplink
+//! format, decoding never panics however adversarial the buffer (the
+//! `tests/properties.rs` fuzz sweep covers truncations and bit flips of
+//! valid frames, mirroring the `wire.rs` sweep).
+
+use crate::compression::wire::{self, DecodeError};
+use crate::compression::Layer;
+
+/// Frame magic: "LGCD" little-endian.
+pub const FRAME_MAGIC: u32 = 0x4443_474C;
+/// Frame header bytes ahead of the sparse-chunk payload.
+pub const FRAME_HEADER: usize = 16;
+
+/// Encoded frame size in bytes for `nnz` payload entries.
+pub fn frame_len(nnz: usize) -> usize {
+    FRAME_HEADER + wire::encoded_len(nnz)
+}
+
+/// Decoded frame header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrameHeader {
+    /// Server model version this broadcast brings the device to.
+    pub version: u32,
+    /// Round / record index at encode time.
+    pub round: u32,
+    /// Which layer of the broadcast this frame carries (0 = base layer).
+    pub layer_idx: u16,
+    /// Total layers in the broadcast.
+    pub n_layers: u16,
+    /// Model dimension.
+    pub dim: usize,
+}
+
+/// Frame decode error — every malformed buffer maps here; no panic path.
+#[derive(Debug, PartialEq, Eq)]
+pub enum FrameError {
+    /// Buffer shorter than the frame header.
+    Truncated,
+    /// Wrong magic (not a downlink frame).
+    BadMagic { got: u32 },
+    /// `layer_idx >= n_layers` (or zero layers claimed).
+    BadLayerIndex { layer_idx: u16, n_layers: u16 },
+    /// The sparse payload failed the hardened wire decoder.
+    Payload(DecodeError),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Truncated => write!(f, "truncated downlink frame"),
+            FrameError::BadMagic { got } => {
+                write!(f, "bad downlink frame magic {got:#010x}")
+            }
+            FrameError::BadLayerIndex { layer_idx, n_layers } => {
+                write!(f, "layer index {layer_idx} out of range for {n_layers} layers")
+            }
+            FrameError::Payload(e) => write!(f, "downlink frame payload: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// Encode one broadcast layer into `out` (cleared first); returns the
+/// number of bytes written, which always equals
+/// [`frame_len`]`(layer.len())` — the byte count the downlink charges.
+pub fn encode_frame(
+    version: u32,
+    round: u32,
+    layer_idx: u16,
+    n_layers: u16,
+    dim: usize,
+    layer: &Layer,
+    out: &mut Vec<u8>,
+) -> usize {
+    debug_assert!(layer_idx < n_layers, "layer_idx {layer_idx} >= n_layers {n_layers}");
+    // `wire::encode_into` clears its buffer, so write the payload first
+    // and rotate the header in front — allocation-free once `out`'s
+    // capacity warms up (this runs per layer per device per broadcast).
+    wire::encode_into(dim, layer, out);
+    let mut header = [0u8; FRAME_HEADER];
+    header[0..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
+    header[4..8].copy_from_slice(&version.to_le_bytes());
+    header[8..12].copy_from_slice(&round.to_le_bytes());
+    header[12..14].copy_from_slice(&layer_idx.to_le_bytes());
+    header[14..16].copy_from_slice(&n_layers.to_le_bytes());
+    out.extend_from_slice(&header);
+    out.rotate_right(FRAME_HEADER);
+    debug_assert_eq!(out.len(), frame_len(layer.len()));
+    out.len()
+}
+
+/// Decode a frame into a reusable `Layer` (vectors cleared and refilled);
+/// returns the frame header. On `Err`, `out`'s contents are unspecified.
+pub fn decode_frame(b: &[u8], out: &mut Layer) -> Result<FrameHeader, FrameError> {
+    if b.len() < FRAME_HEADER {
+        return Err(FrameError::Truncated);
+    }
+    let magic = u32::from_le_bytes(b[0..4].try_into().expect("4-byte slice"));
+    if magic != FRAME_MAGIC {
+        return Err(FrameError::BadMagic { got: magic });
+    }
+    let version = u32::from_le_bytes(b[4..8].try_into().expect("4-byte slice"));
+    let round = u32::from_le_bytes(b[8..12].try_into().expect("4-byte slice"));
+    let layer_idx = u16::from_le_bytes(b[12..14].try_into().expect("2-byte slice"));
+    let n_layers = u16::from_le_bytes(b[14..16].try_into().expect("2-byte slice"));
+    if n_layers == 0 || layer_idx >= n_layers {
+        return Err(FrameError::BadLayerIndex { layer_idx, n_layers });
+    }
+    let dim = wire::decode_into(&b[FRAME_HEADER..], out).map_err(FrameError::Payload)?;
+    Ok(FrameHeader { version, round, layer_idx, n_layers, dim })
+}
+
+/// Apply a decoded delta layer to a parameter vector: `params += layer`.
+/// The engine applies every downlink layer to *both* `params_hat` and
+/// `params_sync`, so the device's pending progress `w_sync − ŵ` is
+/// invariant under late-arriving enhancement layers (the error-feedback
+/// path never double-counts).
+pub fn apply_delta(params: &mut [f32], layer: &Layer) {
+    for (&i, &v) in layer.indices.iter().zip(&layer.values) {
+        params[i as usize] += v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::{lgc_compress, CompressScratch};
+    use crate::testing::{check, gen};
+    use crate::util::Rng;
+
+    fn random_layer(rng: &mut Rng, dim: usize) -> Layer {
+        let u: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        let k = 1 + rng.index(dim / 2);
+        lgc_compress(&u, &[k], &mut CompressScratch::default())
+            .layers
+            .remove(0)
+    }
+
+    /// Property: encode→decode is the identity on layers and headers
+    /// (driven by the in-tree `testing` harness).
+    #[test]
+    fn prop_roundtrip_identity() {
+        check(
+            0xD0,
+            crate::testing::default_cases(),
+            |rng| gen::usize_in(rng, 8, 2000),
+            |&dim| {
+                let mut rng = Rng::new(dim as u64 ^ 0xF0F0);
+                let layer = random_layer(&mut rng, dim);
+                let mut buf = Vec::new();
+                let n = encode_frame(7, 42, 1, 3, dim, &layer, &mut buf);
+                if n != frame_len(layer.len()) {
+                    return Err(format!("byte accounting: {n} != {}", frame_len(layer.len())));
+                }
+                let mut out = Layer { indices: vec![], values: vec![] };
+                let hdr = decode_frame(&buf, &mut out).map_err(|e| e.to_string())?;
+                if hdr != (FrameHeader { version: 7, round: 42, layer_idx: 1, n_layers: 3, dim })
+                {
+                    return Err(format!("header mismatch: {hdr:?}"));
+                }
+                if out != layer {
+                    return Err("layer mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Property: applying the decoded delta to the mirror is a fixed
+    /// point — re-encoding the (dense) delta against the same global
+    /// yields an all-zero payload, and re-applying that zero delta leaves
+    /// the parameters bitwise unchanged (delta-apply idempotence).
+    #[test]
+    fn prop_delta_apply_idempotent() {
+        check(
+            0xD1,
+            crate::testing::default_cases(),
+            |rng| gen::f32_vec(rng, 512, 2.0),
+            |global: &Vec<f32>| {
+                let dim = global.len();
+                let mut mirror = vec![0f32; dim];
+                let delta = Layer {
+                    indices: (0..dim as u32).collect(),
+                    values: global.iter().zip(&mirror).map(|(&g, &m)| g - m).collect(),
+                };
+                let mut buf = Vec::new();
+                encode_frame(1, 0, 0, 1, dim, &delta, &mut buf);
+                let mut out = Layer { indices: vec![], values: vec![] };
+                decode_frame(&buf, &mut out).map_err(|e| e.to_string())?;
+                apply_delta(&mut mirror, &out);
+                // Fixed point: the next delta is all-zero...
+                let next: Vec<f32> =
+                    global.iter().zip(&mirror).map(|(&g, &m)| g - m).collect();
+                if next.iter().any(|&v| v != 0.0) {
+                    return Err("delta not a fixed point after apply".into());
+                }
+                // ...and applying it changes nothing, bitwise.
+                let snapshot: Vec<u32> = mirror.iter().map(|v| v.to_bits()).collect();
+                let zero = Layer { indices: (0..dim as u32).collect(), values: next };
+                apply_delta(&mut mirror, &zero);
+                if mirror
+                    .iter()
+                    .zip(&snapshot)
+                    .any(|(v, &s)| v.to_bits() != s)
+                {
+                    return Err("zero delta mutated parameters".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn bad_magic_and_bad_layer_index_detected() {
+        let layer = Layer { indices: vec![1, 5], values: vec![0.5, -0.5] };
+        let mut buf = Vec::new();
+        encode_frame(0, 0, 0, 2, 10, &layer, &mut buf);
+        let mut out = Layer { indices: vec![], values: vec![] };
+        // Corrupt the magic.
+        let mut bad = buf.clone();
+        bad[0] ^= 0xFF;
+        assert!(matches!(decode_frame(&bad, &mut out), Err(FrameError::BadMagic { .. })));
+        // layer_idx >= n_layers.
+        let mut bad = buf.clone();
+        bad[12] = 9; // layer_idx
+        bad[14] = 2; // n_layers
+        assert_eq!(
+            decode_frame(&bad, &mut out),
+            Err(FrameError::BadLayerIndex { layer_idx: 9, n_layers: 2 })
+        );
+        // Zero layers claimed.
+        let mut bad = buf.clone();
+        bad[14] = 0;
+        bad[15] = 0;
+        assert!(matches!(
+            decode_frame(&bad, &mut out),
+            Err(FrameError::BadLayerIndex { n_layers: 0, .. })
+        ));
+        // Short buffer.
+        assert_eq!(decode_frame(&buf[..10], &mut out), Err(FrameError::Truncated));
+    }
+
+    /// The wire.rs malformed-input sweep, extended to downlink frames:
+    /// random buffers, truncations at every boundary, and single-byte
+    /// mutations of valid frames must return `Ok` or `Err` — never panic,
+    /// never yield an out-of-contract layer.
+    #[test]
+    fn malformed_frame_sweep_never_panics() {
+        let mut rng = Rng::new(0xD0_BEEF);
+        let mut out = Layer { indices: vec![], values: vec![] };
+        for len in 0..80 {
+            let b: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            let _ = decode_frame(&b, &mut out);
+        }
+        for seed in 0..6 {
+            let dim = 32 + rng.index(400);
+            let layer = random_layer(&mut rng, dim);
+            let mut buf = Vec::new();
+            encode_frame(seed, seed * 3, 0, 1, dim, &layer, &mut buf);
+            for cut in 0..buf.len() {
+                let _ = decode_frame(&buf[..cut], &mut out);
+            }
+            for _ in 0..200 {
+                let mut mutated = buf.clone();
+                let pos = rng.index(mutated.len());
+                mutated[pos] ^= 1 << rng.index(8);
+                if let Ok(hdr) = decode_frame(&mutated, &mut out) {
+                    assert!(out.indices.windows(2).all(|w| w[0] < w[1]));
+                    assert!(out.indices.iter().all(|&i| (i as usize) < hdr.dim));
+                    assert_eq!(out.indices.len(), out.values.len());
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,581 @@
+//! The simulated downlink: layered broadcast of the global model over
+//! fading channels, with delta compression and staleness tracking.
+//!
+//! The paper's loop ends with the server "send[ing] the result back to the
+//! devices"; until this module, that broadcast was free and instantaneous —
+//! every device resynced to the fresh global model at time zero. Here the
+//! downlink is a first-class simulated path:
+//!
+//! - the server keeps a per-device **mirror** of what each device currently
+//!   holds, and encodes the *delta* `global − mirror` through the existing
+//!   [`Compressor`] machinery — [`DownlinkCompression::Dense`] ships the
+//!   exact delta (lossless broadcast), [`DownlinkCompression::Layered`]
+//!   ships magnitude-banded LGC layers (base + enhancement), so a device
+//!   can proceed on a *partial* base model while enhancement layers trail;
+//! - each layer rides a per-device downlink [`crate::channels::Link`]
+//!   (the same fading/energy/money machinery as the uplink, with a
+//!   downlink-specific money tariff scale) as its own in-flight transfer
+//!   via [`crate::sim::Event::DownlinkLayerArrived`] /
+//!   [`crate::sim::Event::SyncConfirmed`];
+//! - download energy and money are charged to the device's
+//!   [`crate::resources::ResourceMeter`] (Eq. 10 resources are spent in
+//!   both directions), so `Budget` enforcement counts the downlink toward
+//!   early stop;
+//! - each [`crate::coordinator::Device`] carries a [`SyncState`] — last
+//!   confirmed sync, layers still in flight, and the staleness gap at round
+//!   start — which the DRL observation can consume as an extra state
+//!   feature (only when the downlink is enabled, so the disabled
+//!   configuration stays bit-for-bit equal to the frozen `step_round`
+//!   oracle).
+//!
+//! Delta encoding is self-correcting: the mirror advances by exactly the
+//! layers that were shipped, so whatever a layered (lossy) broadcast leaves
+//! out is still present in the next round's delta — the downlink analogue
+//! of error feedback, with no extra memory. Downlink transfers are modeled
+//! as *reliable* (link-layer ARQ): fading shapes latency, energy and money,
+//! never erasure — erasures would desynchronize mirror and device without
+//! an ACK protocol, which the simulator does not model.
+//!
+//! Population (cohort) engines run the downlink in **accounting-only**
+//! fidelity: a per-client dense mirror would make server memory
+//! O(population × model), defeating the O(model + cohort) bound, so
+//! materialization still hands the client the exact global model while the
+//! broadcast's bytes/energy/money/time are charged from the compression
+//! budget (layer sizes are budget-determined, not value-determined). This
+//! is one of the documented divergences — see DESIGN.md §"Downlink &
+//! staleness".
+
+pub mod frame;
+
+use crate::channels::{ChannelType, DeviceChannels, TransferCost};
+use crate::compression::{lgc_compress, CompressScratch, Layer, LgcUpdate};
+use crate::util::Rng;
+
+/// How the server compresses the per-device model delta for broadcast.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DownlinkCompression {
+    /// Ship the exact dense delta (one layer, 4 B/coordinate): the
+    /// broadcast is lossless and a confirmed device equals the global
+    /// model bitwise.
+    Dense,
+    /// Ship magnitude-banded LGC layers of the delta (base + enhancement,
+    /// same per-layer budgets as the uplink's `layer_fracs`): partial
+    /// broadcast, with the left-out mass self-correcting through the
+    /// mirror into later deltas.
+    Layered,
+}
+
+impl DownlinkCompression {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "dense" | "dense-noop" | "exact" => Ok(DownlinkCompression::Dense),
+            "layered" | "lgc" => Ok(DownlinkCompression::Layered),
+            other => Err(format!("unknown downlink compression `{other}`")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DownlinkCompression::Dense => "dense",
+            DownlinkCompression::Layered => "layered",
+        }
+    }
+}
+
+/// Per-device downlink synchronization state — the sync-state machine of
+/// DESIGN.md §"Downlink & staleness". Lives on
+/// [`crate::coordinator::Device`] and persists across population
+/// demobilization via [`crate::population::DeviceSpec`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SyncState {
+    /// Server model version of the last *fully* confirmed downlink (every
+    /// layer of that broadcast applied).
+    pub synced_version: u64,
+    /// Round / record index of that confirmation.
+    pub synced_round: usize,
+    /// Downlink layers of the current broadcast still in flight toward
+    /// this device (0 = fully synced to `synced_version`).
+    pub pending_layers: usize,
+    /// Version gap `server_version − device_version` observed when the
+    /// device last started a round — the staleness the DRL state feature
+    /// reports.
+    pub staleness: u64,
+}
+
+/// Per-record-window downlink totals, drained into each
+/// [`crate::metrics::RoundRecord`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DownWindow {
+    pub bytes: u64,
+    pub energy_j: f64,
+    pub money: f64,
+}
+
+impl DownWindow {
+    /// Drain the window (returns the totals, resets to zero).
+    pub fn take(&mut self) -> DownWindow {
+        std::mem::take(self)
+    }
+}
+
+/// One encoded broadcast ready to ride the event queue: the layered delta,
+/// the per-layer downlink channel mapping, and the per-channel cost
+/// samples (money already scaled by the downlink tariff).
+#[derive(Clone, Debug)]
+pub struct DownlinkTransfer {
+    /// The compressed delta; layer 0 is the base layer.
+    pub update: LgcUpdate,
+    /// `channels[c]` = downlink link index layer `c` rides.
+    pub channels: Vec<usize>,
+    /// Per-link cost samples (same indexing as the device's downlink
+    /// links; silent links cost zero).
+    pub costs: Vec<TransferCost>,
+    /// Wall-clock of the whole broadcast (max over links).
+    pub wall_time_s: f64,
+    /// Summed bytes across layers.
+    pub bytes: u64,
+    /// Summed energy / money across links (money tariff-scaled).
+    pub energy_j: f64,
+    pub money: f64,
+}
+
+/// The server-side downlink state: per-device links, per-device mirrors
+/// (legacy engines), the delta compressor, and window accounting.
+pub struct Downlink {
+    compression: DownlinkCompression,
+    tariff_scale: f64,
+    /// Per-device/client downlink channel bundles (independent fading
+    /// chains from the uplink's, forked off the experiment seed).
+    links: Vec<DeviceChannels>,
+    /// Per-device model mirrors: what the server believes each device
+    /// currently holds. Empty in accounting-only (population) fidelity.
+    mirrors: Vec<Vec<f32>>,
+    /// Per-layer coordinate budgets for [`DownlinkCompression::Layered`]
+    /// (the uplink's `layer_fracs` applied to the model dimension).
+    layer_ks: Vec<usize>,
+    scratch: CompressScratch,
+    delta_buf: Vec<f32>,
+    frame_buf: Vec<u8>,
+    /// Consumed broadcast payloads handed back by the engines for reuse —
+    /// the dense path refills a spare update in place, so the per-device
+    /// per-round broadcast allocates nothing at steady state.
+    spare: Vec<LgcUpdate>,
+    /// Per-window totals for the metrics columns.
+    pub window: DownWindow,
+}
+
+impl Downlink {
+    /// Build the downlink for `n` devices/clients. `mirrors` carries one
+    /// init-model clone per device for full-fidelity delta encoding
+    /// (legacy engines), or is empty for accounting-only fidelity
+    /// (population mode).
+    pub fn new(
+        n: usize,
+        compression: DownlinkCompression,
+        tariff_scale: f64,
+        channel_types: &[ChannelType],
+        rng: &Rng,
+        layer_ks: Vec<usize>,
+        mirrors: Vec<Vec<f32>>,
+    ) -> Self {
+        assert!(tariff_scale > 0.0 && tariff_scale.is_finite());
+        assert!(mirrors.is_empty() || mirrors.len() == n, "one mirror per device");
+        // A distinct fork tag keeps downlink fading streams independent of
+        // every uplink stream, so enabling the downlink never perturbs
+        // uplink RNG draws.
+        let base = rng.fork(0xD0_17E5);
+        let links = (0..n)
+            .map(|id| DeviceChannels::new(channel_types, &base, id))
+            .collect();
+        Downlink {
+            compression,
+            tariff_scale,
+            links,
+            mirrors,
+            layer_ks,
+            scratch: CompressScratch::default(),
+            delta_buf: Vec::new(),
+            frame_buf: Vec::new(),
+            spare: Vec::new(),
+            window: DownWindow::default(),
+        }
+    }
+
+    /// Hand a fully-applied broadcast payload back for buffer reuse (the
+    /// engines call this when a transfer completes; bounded so a burst
+    /// can't hoard memory).
+    pub fn recycle(&mut self, update: LgcUpdate) {
+        if self.spare.len() < 16 {
+            self.spare.push(update);
+        }
+    }
+
+    pub fn compression(&self) -> DownlinkCompression {
+        self.compression
+    }
+
+    /// Whether this downlink runs in accounting-only fidelity (population
+    /// mode: costs charged, no per-client mirror).
+    pub fn accounting_only(&self) -> bool {
+        self.mirrors.is_empty()
+    }
+
+    /// Mutable access to a device's downlink links (tests / scenario
+    /// setup, e.g. pinning a device to a Bad-fading 3G downlink).
+    pub fn links_mut(&mut self, id: usize) -> &mut DeviceChannels {
+        &mut self.links[id]
+    }
+
+    /// Advance every downlink link's fading chain by one round/tick.
+    pub fn step_round(&mut self) {
+        for ch in &mut self.links {
+            ch.step_round();
+        }
+    }
+
+    /// Fresh FL episode: mirrors return to the init model, window clears.
+    /// Fading chains keep their streams (like the uplink's
+    /// `reset_episode`).
+    pub fn reset_episode(&mut self, init: &[f32]) {
+        for m in &mut self.mirrors {
+            m.copy_from_slice(init);
+        }
+        self.window = DownWindow::default();
+    }
+
+    /// Layer sizes on the wire for a broadcast of a `dim`-sized model under
+    /// the configured compression — budget-determined, value-independent
+    /// (what accounting-only fidelity charges).
+    fn layer_sizes(&self, dim: usize) -> Vec<u64> {
+        match self.compression {
+            // Dense delta: raw f32 stream, no index overhead.
+            DownlinkCompression::Dense => vec![4 * dim as u64],
+            DownlinkCompression::Layered => self
+                .layer_ks
+                .iter()
+                .map(|&k| frame::frame_len(k.min(dim)) as u64)
+                .collect(),
+        }
+    }
+
+    /// Charge `sizes[c]` bytes onto device `id`'s downlink link `c`
+    /// (layer c rides link c; the channel list is fastest-first, so the
+    /// base layer takes the most reliable link — the same layered-coding
+    /// mapping as the uplink). Returns (wall, per-link costs) with money
+    /// tariff-scaled, and folds the totals into the window.
+    fn charge(&mut self, id: usize, sizes: &[u64]) -> (f64, Vec<TransferCost>) {
+        let nlinks = self.links[id].len();
+        let mut per_link = vec![0u64; nlinks];
+        for (c, &b) in sizes.iter().enumerate() {
+            per_link[c.min(nlinks - 1)] += b;
+        }
+        let (wall, mut costs) = self.links[id].parallel_upload(&per_link);
+        for c in &mut costs {
+            c.money *= self.tariff_scale;
+        }
+        let (e, m, b) = TransferCost::fold_totals(&costs);
+        self.window.bytes += b;
+        self.window.energy_j += e;
+        self.window.money += m;
+        (wall, costs)
+    }
+
+    /// Accounting-only broadcast (population mode): charge the
+    /// budget-determined layer sizes for client `id` and return
+    /// `(wall_time, energy, money, bytes)` for the caller's meter.
+    pub fn charge_broadcast(&mut self, id: usize, dim: usize) -> (f64, f64, f64, u64) {
+        let sizes = self.layer_sizes(dim);
+        let (wall, costs) = self.charge(id, &sizes);
+        let (e, m, b) = TransferCost::fold_totals(&costs);
+        (wall, e, m, b)
+    }
+
+    /// Full-fidelity broadcast encode for device `id`: compress the delta
+    /// `global − mirror[id]`, advance the mirror by exactly the shipped
+    /// layers (self-correcting encoding), round-trip every layer through
+    /// the downlink frame format (stamped with the server model `version`
+    /// and `round` this broadcast carries), charge the links, and return
+    /// the transfer for the event engine to schedule.
+    pub fn encode_for(
+        &mut self,
+        id: usize,
+        global: &[f32],
+        version: u64,
+        round: usize,
+    ) -> DownlinkTransfer {
+        assert!(
+            !self.accounting_only(),
+            "encode_for needs per-device mirrors (legacy engines); population \
+             mode charges via charge_broadcast"
+        );
+        let mirror = &self.mirrors[id];
+        assert_eq!(mirror.len(), global.len(), "mirror dim mismatch");
+        self.delta_buf.clear();
+        self.delta_buf
+            .extend(global.iter().zip(mirror).map(|(&g, &m)| g - m));
+        let dim = global.len();
+        let update = match self.compression {
+            DownlinkCompression::Dense => {
+                // Refill a recycled update in place: zero steady-state
+                // allocation once the engines start handing buffers back.
+                let mut update = self
+                    .spare
+                    .pop()
+                    .unwrap_or(LgcUpdate { dim: 0, layers: Vec::new() });
+                update.dim = dim;
+                update.layers.truncate(1);
+                if update.layers.is_empty() {
+                    update.layers.push(Layer { indices: Vec::new(), values: Vec::new() });
+                }
+                let layer = &mut update.layers[0];
+                layer.indices.clear();
+                layer.indices.extend(0..dim as u32);
+                layer.values.clear();
+                layer.values.extend_from_slice(&self.delta_buf);
+                update
+            }
+            DownlinkCompression::Layered => {
+                // Clamp the budget to the model dimension (small test
+                // models), mirroring LayerBudget::from_plan.
+                let ks: Vec<usize> = {
+                    let mut ks: Vec<usize> =
+                        self.layer_ks.iter().map(|&k| k.min(dim)).collect();
+                    let total: usize = ks.iter().sum();
+                    if total > dim {
+                        for k in ks.iter_mut() {
+                            *k = (*k * dim) / total.max(1);
+                        }
+                        if ks.iter().sum::<usize>() == 0 {
+                            ks[0] = 1;
+                        }
+                    }
+                    ks
+                };
+                lgc_compress(&self.delta_buf, &ks, &mut self.scratch)
+            }
+        };
+        // Wire round-trip (layered only — the dense broadcast travels as a
+        // raw f32 stream, like the DenseNoop uplink): what crosses the
+        // channel is the frame encoding, so the frame decoder's hardening
+        // is exercised on the hot path exactly like the uplink's wire
+        // round-trip. The decode targets come from the recycled `spare`
+        // pool, so the layered path is also allocation-free at steady
+        // state.
+        let update = if self.compression == DownlinkCompression::Layered {
+            let n = update.layers.len();
+            let mut rt = self
+                .spare
+                .pop()
+                .unwrap_or(LgcUpdate { dim: 0, layers: Vec::new() });
+            rt.dim = dim;
+            rt.layers.truncate(n);
+            while rt.layers.len() < n {
+                rt.layers.push(Layer { indices: Vec::new(), values: Vec::new() });
+            }
+            for (c, layer) in update.layers.iter().enumerate() {
+                frame::encode_frame(
+                    version as u32,
+                    round as u32,
+                    c as u16,
+                    n as u16,
+                    dim,
+                    layer,
+                    &mut self.frame_buf,
+                );
+                let _hdr = frame::decode_frame(&self.frame_buf, &mut rt.layers[c])
+                    .expect("self-encoded downlink frame must decode");
+                debug_assert_eq!(_hdr.dim, dim);
+            }
+            rt
+        } else {
+            update
+        };
+        // Advance the mirror by exactly what shipped: the next delta
+        // contains whatever this broadcast left out.
+        let mirror = &mut self.mirrors[id];
+        for layer in &update.layers {
+            for (&i, &v) in layer.indices.iter().zip(&layer.values) {
+                mirror[i as usize] += v;
+            }
+        }
+        // Byte accounting matches the frame encoding per layer.
+        let sizes: Vec<u64> = match self.compression {
+            DownlinkCompression::Dense => vec![4 * dim as u64],
+            DownlinkCompression::Layered => update
+                .layers
+                .iter()
+                .map(|l| frame::frame_len(l.len()) as u64)
+                .collect(),
+        };
+        let nlinks = self.links[id].len();
+        let channels: Vec<usize> =
+            (0..update.layers.len()).map(|c| c.min(nlinks - 1)).collect();
+        let (wall, costs) = self.charge(id, &sizes);
+        let (energy_j, money, bytes) = TransferCost::fold_totals(&costs);
+        DownlinkTransfer {
+            update,
+            channels,
+            costs,
+            wall_time_s: wall,
+            bytes,
+            energy_j,
+            money,
+        }
+    }
+
+    /// The mirror the server keeps for device `id` (tests).
+    pub fn mirror(&self, id: usize) -> &[f32] {
+        &self.mirrors[id]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(n: usize, comp: DownlinkCompression, dim: usize) -> Downlink {
+        let rng = Rng::new(7);
+        Downlink::new(
+            n,
+            comp,
+            1.0,
+            &[ChannelType::G5, ChannelType::G4, ChannelType::G3],
+            &rng,
+            vec![4, 8, 16],
+            (0..n).map(|_| vec![0f32; dim]).collect(),
+        )
+    }
+
+    #[test]
+    fn dense_broadcast_converges_mirror_to_global_exactly() {
+        let mut dl = mk(2, DownlinkCompression::Dense, 64);
+        let global: Vec<f32> = (0..64).map(|i| (i as f32) * 0.25 - 3.0).collect();
+        let tr = dl.encode_for(0, &global, 1, 0);
+        assert_eq!(tr.update.layers.len(), 1);
+        assert_eq!(tr.bytes, 4 * 64);
+        assert!(tr.energy_j > 0.0 && tr.money > 0.0 && tr.wall_time_s > 0.0);
+        for (a, b) in dl.mirror(0).iter().zip(&global) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Second encode against the unchanged global ships a zero delta.
+        let tr2 = dl.encode_for(0, &global, 1, 0);
+        assert!(tr2.update.layers[0].values.iter().all(|&v| v == 0.0));
+        // Device 1's mirror is untouched.
+        assert!(dl.mirror(1).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn layered_broadcast_is_partial_but_self_correcting() {
+        let mut dl = mk(1, DownlinkCompression::Layered, 256);
+        let global: Vec<f32> = (0..256).map(|i| ((i * 37) % 101) as f32 / 50.0 - 1.0).collect();
+        let tr = dl.encode_for(0, &global, 1, 0);
+        // 4+8+16 = 28 coordinates shipped — a strict subset of the delta.
+        assert_eq!(tr.update.total_nnz(), 28);
+        let gap0: f64 = dl
+            .mirror(0)
+            .iter()
+            .zip(&global)
+            .map(|(&m, &g)| ((g - m) as f64).powi(2))
+            .sum();
+        assert!(gap0 > 0.0, "layered broadcast must be partial");
+        // Repeated broadcasts against the same global shrink the gap
+        // monotonically: the mirror is the error-feedback memory.
+        let mut prev = gap0;
+        for _ in 0..20 {
+            dl.encode_for(0, &global, 1, 0);
+            let gap: f64 = dl
+                .mirror(0)
+                .iter()
+                .zip(&global)
+                .map(|(&m, &g)| ((g - m) as f64).powi(2))
+                .sum();
+            assert!(gap <= prev + 1e-12, "{gap} > {prev}");
+            prev = gap;
+        }
+        assert!(prev < 1e-9, "mirror should converge, residual {prev}");
+    }
+
+    #[test]
+    fn tariff_scale_multiplies_money_not_energy() {
+        let rng = Rng::new(9);
+        let build = |scale: f64| {
+            Downlink::new(
+                1,
+                DownlinkCompression::Dense,
+                scale,
+                &[ChannelType::G4],
+                &rng,
+                vec![8],
+                vec![vec![0f32; 128]],
+            )
+        };
+        let global = vec![1.0f32; 128];
+        let mut a = build(1.0);
+        let mut b = build(3.0);
+        let ta = a.encode_for(0, &global, 1, 0);
+        let tb = b.encode_for(0, &global, 1, 0);
+        assert!((tb.money / ta.money - 3.0).abs() < 1e-9);
+        assert_eq!(ta.bytes, tb.bytes);
+        // Energy draws come from the same forked stream ⇒ identical.
+        assert_eq!(ta.energy_j.to_bits(), tb.energy_j.to_bits());
+    }
+
+    #[test]
+    fn accounting_only_charges_budget_determined_sizes() {
+        let rng = Rng::new(3);
+        let mut dl = Downlink::new(
+            2,
+            DownlinkCompression::Layered,
+            2.0,
+            &[ChannelType::G5, ChannelType::G3],
+            &rng,
+            vec![10, 30],
+            Vec::new(),
+        );
+        assert!(dl.accounting_only());
+        let (wall, e, m, b) = dl.charge_broadcast(1, 1000);
+        assert_eq!(
+            b,
+            (frame::frame_len(10) + frame::frame_len(30)) as u64
+        );
+        assert!(wall > 0.0 && e > 0.0 && m > 0.0);
+        assert_eq!(dl.window.bytes, b);
+        let w = dl.window.take();
+        assert_eq!(w.bytes, b);
+        assert_eq!(dl.window.bytes, 0);
+    }
+
+    #[test]
+    fn base_layer_rides_the_first_link() {
+        let mut dl = mk(1, DownlinkCompression::Layered, 512);
+        let global: Vec<f32> = (0..512).map(|i| (i as f32 + 1.0) * 1e-3).collect();
+        let tr = dl.encode_for(0, &global, 1, 0);
+        assert_eq!(tr.channels[0], 0, "base layer on the fastest link");
+        assert!(tr.channels.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn compression_parse_roundtrip() {
+        for (s, c) in [
+            ("dense", DownlinkCompression::Dense),
+            ("lgc", DownlinkCompression::Layered),
+            ("layered", DownlinkCompression::Layered),
+        ] {
+            assert_eq!(DownlinkCompression::parse(s).unwrap(), c);
+        }
+        assert!(DownlinkCompression::parse("warp").is_err());
+        assert_eq!(DownlinkCompression::Dense.name(), "dense");
+    }
+
+    #[test]
+    fn reset_episode_restores_mirrors() {
+        let mut dl = mk(1, DownlinkCompression::Dense, 16);
+        let global = vec![2.0f32; 16];
+        dl.encode_for(0, &global, 1, 0);
+        assert!(dl.mirror(0).iter().all(|&x| x == 2.0));
+        let init = vec![0.5f32; 16];
+        dl.reset_episode(&init);
+        assert!(dl.mirror(0).iter().all(|&x| x == 0.5));
+        assert_eq!(dl.window.bytes, 0);
+    }
+}

@@ -35,11 +35,13 @@ pub struct StateScales {
     pub money: f64,
     pub bandwidth: f64,
     pub loss: f64,
+    /// Staleness-gap normalizer (rounds of model age behind the server).
+    pub staleness: f64,
 }
 
 impl Default for StateScales {
     fn default() -> Self {
-        StateScales { energy: 500.0, money: 0.05, bandwidth: 12.0, loss: 2.5 }
+        StateScales { energy: 500.0, money: 0.05, bandwidth: 12.0, loss: 2.5, staleness: 8.0 }
     }
 }
 
@@ -96,6 +98,10 @@ pub struct DeviceAgent {
     last_state: Option<Vec<f32>>,
     last_action: Option<Vec<f32>>,
     pub n_channels: usize,
+    /// Whether the state vector carries the downlink staleness gap as an
+    /// extra feature. Off by default so pre-downlink configurations keep
+    /// the exact network shapes (and RNG draws) of the frozen oracle.
+    pub staleness_aware: bool,
 }
 
 impl DeviceAgent {
@@ -107,7 +113,22 @@ impl DeviceAgent {
         cfg: DrlConfig,
         rng: Rng,
     ) -> Self {
-        let state_dim = Self::state_dim(n_channels);
+        Self::new_with(n_channels, h_max, d_total, d_min, cfg, rng, false)
+    }
+
+    /// [`DeviceAgent::new`] with an explicit staleness-awareness flag —
+    /// the builder passes `true` when the simulated downlink is enabled,
+    /// widening the state by one feature (the device's staleness gap).
+    pub fn new_with(
+        n_channels: usize,
+        h_max: usize,
+        d_total: usize,
+        d_min: usize,
+        cfg: DrlConfig,
+        rng: Rng,
+        staleness_aware: bool,
+    ) -> Self {
+        let state_dim = Self::state_dim_with(n_channels, staleness_aware);
         let action_dim = 1 + n_channels;
         DeviceAgent {
             ddpg: Ddpg::new(state_dim, action_dim, cfg, rng),
@@ -119,23 +140,35 @@ impl DeviceAgent {
             last_state: None,
             last_action: None,
             n_channels,
+            staleness_aware,
         }
     }
 
     /// 2R consumption components + R remaining fracs + N bandwidths + loss δ.
     pub fn state_dim(n_channels: usize) -> usize {
-        2 * RESOURCES.len() + RESOURCES.len() + n_channels + 1
+        Self::state_dim_with(n_channels, false)
     }
 
-    /// Build the Eq. 11 state vector from the meters and channel conditions.
+    /// [`DeviceAgent::state_dim`], plus the staleness feature when aware.
+    pub fn state_dim_with(n_channels: usize, staleness_aware: bool) -> usize {
+        2 * RESOURCES.len() + RESOURCES.len() + n_channels + 1 + usize::from(staleness_aware)
+    }
+
+    /// Build the Eq. 11 state vector from the meters and channel
+    /// conditions. `staleness` is the device's downlink staleness gap
+    /// (`SyncState::staleness`); it enters the state only for
+    /// staleness-aware agents and is ignored otherwise, so pre-downlink
+    /// call sites simply pass 0.
     pub fn observe_state(
         &self,
         meter: &ResourceMeter,
         channels: &DeviceChannels,
         last_loss_delta: f64,
+        staleness: u64,
     ) -> Vec<f32> {
         let s = &self.scales;
-        let mut v = Vec::with_capacity(Self::state_dim(self.n_channels));
+        let mut v =
+            Vec::with_capacity(Self::state_dim_with(self.n_channels, self.staleness_aware));
         // E_{m,r,comm}, E_{m,r,comp} per resource (Eq. 12a/12b).
         for (ri, _r) in RESOURCES.iter().enumerate() {
             let rc = &meter.last_round[ri];
@@ -150,6 +183,9 @@ impl DeviceAgent {
             v.push((link.effective_bandwidth() / s.bandwidth) as f32);
         }
         v.push((last_loss_delta / s.loss) as f32);
+        if self.staleness_aware {
+            v.push((staleness as f64 / s.staleness) as f32);
+        }
         v
     }
 
@@ -219,10 +255,31 @@ mod tests {
             &Rng::new(2),
             0,
         );
-        let s = a.observe_state(&meter, &ch, 0.1);
+        let s = a.observe_state(&meter, &ch, 0.1, 0);
         assert_eq!(s.len(), DeviceAgent::state_dim(3));
         assert_eq!(s.len(), a.ddpg.state_dim());
         assert!(s.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn staleness_aware_agent_has_one_extra_feature() {
+        let a = DeviceAgent::new_with(3, 8, 1000, 16, DrlConfig::default(), Rng::new(1), true);
+        let meter = ResourceMeter::new(1000.0, 1.0);
+        let ch = DeviceChannels::new(
+            &[ChannelType::G5, ChannelType::G4, ChannelType::G3],
+            &Rng::new(2),
+            0,
+        );
+        let s = a.observe_state(&meter, &ch, 0.1, 4);
+        assert_eq!(s.len(), DeviceAgent::state_dim(3) + 1);
+        assert_eq!(s.len(), DeviceAgent::state_dim_with(3, true));
+        assert_eq!(s.len(), a.ddpg.state_dim());
+        assert_eq!(*s.last().unwrap(), (4.0 / 8.0) as f32);
+        // An unaware agent ignores the staleness argument entirely.
+        let b = agent();
+        let s0 = b.observe_state(&meter, &ch, 0.1, 0);
+        let s9 = b.observe_state(&meter, &ch, 0.1, 9);
+        assert_eq!(s0, s9);
     }
 
     #[test]

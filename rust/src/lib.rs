@@ -13,6 +13,15 @@
 //! | round control | [`coordinator::RoundPolicy`] | `StaticLayered`, `FastestSingle`, `DdpgPolicy` |
 //! | client sampling | [`population::ClientSampler`] | `FullParticipation`, `UniformK`, `WeightedBySamples`, `AvailabilityMarkov` |
 //!
+//! The simulated downlink ([`downlink`]) makes the server's model
+//! broadcast a priced, delayed, layered path instead of a free instant
+//! sync: per-device mirrors + delta compression (dense exact or LGC
+//! layered), per-layer in-flight transfers over downlink fading channels,
+//! staleness tracking ([`downlink::SyncState`]), and download energy/money
+//! charged against the same budgets as the uplink. Disabled by default —
+//! and then bit-for-bit identical to the frozen reference loop. See
+//! DESIGN.md §"Downlink & staleness".
+//!
 //! Population mode ([`population`]) makes client count a free parameter:
 //! a `Population` of cheap per-client specs materializes full devices only
 //! for the round's sampled cohort, so resident memory is O(model + cohort)
@@ -84,6 +93,7 @@ pub mod compression;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod downlink;
 pub mod drl;
 pub mod metrics;
 pub mod models;

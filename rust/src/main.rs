@@ -62,7 +62,9 @@ fn print_usage() {
          staleness_decay=F, compute_threads=N (0 = all cores),\n\
          population=N, cohort=K, sampler=full|uniform-k|\
          weighted-by-samples|availability-markov,\n\
-         churn_down=P, churn_up=P, streaming=true|false"
+         churn_down=P, churn_up=P, streaming=true|false,\n\
+         downlink=true|false, downlink_compression=dense|layered,\n\
+         downlink_tariff_scale=F"
     );
 }
 
@@ -111,6 +113,12 @@ fn report(log: &RunLog) {
         println!("total time (s)  : {:.1}", last.total_time_s);
         let bytes: u64 = log.records.iter().map(|r| r.bytes_up).sum();
         println!("total upload    : {:.2} MB", bytes as f64 / (1024.0 * 1024.0));
+        let down: u64 = log.records.iter().map(|r| r.down_bytes).sum();
+        if down > 0 {
+            let down_j: f64 = log.records.iter().map(|r| r.down_energy_j).sum();
+            println!("total download  : {:.2} MB", down as f64 / (1024.0 * 1024.0));
+            println!("download energy : {down_j:.1} J");
+        }
     }
 }
 
@@ -135,6 +143,14 @@ fn cmd_train(args: &[String]) -> Result<()> {
             pop.cohort(),
             sampler.name(),
             if exp.cfg.streaming { ", streaming aggregation" } else { "" }
+        );
+    }
+    if let Some(dl) = &exp.downlink {
+        println!(
+            "downlink: {} delta compression ({} fidelity), tariff x{}",
+            dl.compression().name(),
+            if dl.accounting_only() { "accounting" } else { "full" },
+            exp.cfg.downlink_tariff_scale
         );
     }
     match exp.sync_mode {

@@ -43,6 +43,55 @@ pub struct RoundRecord {
     /// Uploads lost because the client churned offline mid-upload
     /// (population mode with availability churn; 0 elsewhere).
     pub dropped_offline: u64,
+    /// Median staleness (server-version gap) of the updates aggregated
+    /// this round. Always 0 under barrier sync; NaN when nothing
+    /// contributed.
+    pub staleness_p50: f64,
+    /// 95th-percentile staleness — the stale-client profile the downlink
+    /// and async modes surface.
+    pub staleness_p95: f64,
+    /// Downlink (model broadcast) bytes this round/window. 0 when the
+    /// downlink is disabled (the default: broadcast is free and instant).
+    pub down_bytes: u64,
+    /// Downlink energy charged to device meters this round/window (J).
+    pub down_energy_j: f64,
+    /// Downlink money charged this round/window.
+    pub down_money: f64,
+}
+
+/// The single source of truth for per-round CSV column names, shared by
+/// the writer ([`RunLog::to_csv`]), the tests, and every bench that prints
+/// record series — so headers cannot drift between producers.
+pub mod columns {
+    /// Column names of one [`super::RoundRecord`] row, in write order.
+    pub const ROUND: &[&str] = &[
+        "round",
+        "train_loss",
+        "eval_loss",
+        "eval_acc",
+        "energy_j",
+        "money",
+        "round_time_s",
+        "total_time_s",
+        "bytes_up",
+        "drl_reward",
+        "finish_p50_s",
+        "finish_p95_s",
+        "stale_updates",
+        "sampled",
+        "completed",
+        "dropped_offline",
+        "staleness_p50",
+        "staleness_p95",
+        "down_bytes",
+        "down_energy_j",
+        "down_money",
+    ];
+
+    /// The CSV header line (no trailing newline).
+    pub fn header() -> String {
+        ROUND.join(",")
+    }
 }
 
 /// Nearest-rank percentile (`p` in [0, 100]); sorts `xs` in place. NaN for
@@ -122,16 +171,15 @@ impl RunLog {
             .fold(f64::NAN, f64::max)
     }
 
-    /// Render as CSV.
+    /// Render as CSV (header from [`columns::ROUND`]).
     pub fn to_csv(&self) -> String {
         let mut s = String::new();
-        s.push_str(
-            "round,train_loss,eval_loss,eval_acc,energy_j,money,round_time_s,total_time_s,bytes_up,drl_reward,finish_p50_s,finish_p95_s,stale_updates,sampled,completed,dropped_offline\n",
-        );
+        s.push_str(&columns::header());
+        s.push('\n');
         for r in &self.records {
             let _ = writeln!(
                 s,
-                "{},{:.6},{:.6},{:.6},{:.3},{:.6},{:.3},{:.3},{},{:.4},{:.4},{:.4},{},{},{},{}",
+                "{},{:.6},{:.6},{:.6},{:.3},{:.6},{:.3},{:.3},{},{:.4},{:.4},{:.4},{},{},{},{},{:.4},{:.4},{},{:.3},{:.6}",
                 r.round,
                 r.train_loss,
                 r.eval_loss,
@@ -147,7 +195,12 @@ impl RunLog {
                 r.stale_updates,
                 r.sampled,
                 r.completed,
-                r.dropped_offline
+                r.dropped_offline,
+                r.staleness_p50,
+                r.staleness_p95,
+                r.down_bytes,
+                r.down_energy_j,
+                r.down_money
             );
         }
         s
@@ -236,19 +289,40 @@ mod tests {
     }
 
     #[test]
-    fn csv_has_participation_columns() {
+    fn csv_header_is_the_columns_constant() {
+        let mut log = RunLog::new("t");
+        log.push(rec(0, 0.5, 1.0));
+        let csv = log.to_csv();
+        assert_eq!(csv.lines().next().unwrap(), columns::header());
+        // Every data row has exactly one field per declared column — the
+        // writer and the columns list cannot drift apart.
+        let row = csv.lines().nth(1).unwrap();
+        assert_eq!(row.split(',').count(), columns::ROUND.len(), "{row}");
+    }
+
+    #[test]
+    fn csv_has_participation_and_downlink_columns() {
         let mut log = RunLog::new("t");
         let mut r = rec(0, 0.5, 1.0);
         r.sampled = 5;
         r.completed = 4;
         r.dropped_offline = 1;
+        r.staleness_p50 = 1.0;
+        r.staleness_p95 = 3.0;
+        r.down_bytes = 4096;
+        r.down_energy_j = 12.5;
+        r.down_money = 0.125;
         log.push(r);
         let csv = log.to_csv();
+        let header = csv.lines().next().unwrap();
+        for col in ["sampled", "completed", "dropped_offline", "staleness_p50",
+                    "staleness_p95", "down_bytes", "down_energy_j", "down_money"] {
+            assert!(header.split(',').any(|c| c == col), "missing {col}: {header}");
+        }
         assert!(
-            csv.lines().next().unwrap().ends_with("sampled,completed,dropped_offline"),
+            csv.lines().nth(1).unwrap().ends_with(",5,4,1,1.0000,3.0000,4096,12.500,0.125000"),
             "{csv}"
         );
-        assert!(csv.lines().nth(1).unwrap().ends_with(",5,4,1"), "{csv}");
     }
 
     #[test]

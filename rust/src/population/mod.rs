@@ -52,6 +52,7 @@ pub use sampler::{
 use crate::channels::DeviceChannels;
 use crate::compression::{Compressor, ErrorFeedback};
 use crate::coordinator::device::{Device, DeviceParts};
+use crate::downlink::SyncState;
 use crate::resources::{ComputeCostModel, ResourceMeter};
 use crate::util::Rng;
 
@@ -161,6 +162,10 @@ pub struct DeviceSpec {
     /// Training-loss of the client's previous round (DRL δ state).
     pub prev_loss: f64,
     pub last_delta: f64,
+    /// Downlink synchronization state — persists across demobilization so
+    /// a resampled client remembers its last confirmed sync and staleness
+    /// gap (inert zeros when the downlink is disabled).
+    pub sync_state: SyncState,
     /// Availability churn chain state (AvailabilityMarkov sampling).
     pub online: bool,
     /// Private RNG stream of the churn chain.
@@ -190,6 +195,7 @@ impl DeviceSpec {
             residual: Residual::Empty,
             prev_loss: f64::NAN,
             last_delta: 0.0,
+            sync_state: SyncState::default(),
             online: true,
             churn_rng,
         }
@@ -401,6 +407,7 @@ impl Population {
         );
         dev.prev_loss = spec.prev_loss;
         dev.last_delta = spec.last_delta;
+        dev.sync_state = spec.sync_state;
         self.materialized += 1;
         self.peak_materialized = self.peak_materialized.max(self.materialized);
         dev
@@ -436,6 +443,7 @@ impl Population {
             meter,
             prev_loss,
             last_delta,
+            sync_state,
         } = parts;
         if !compressed_since_sync {
             let pending = params_sync
@@ -467,6 +475,7 @@ impl Population {
         spec.meter = meter;
         spec.prev_loss = prev_loss;
         spec.last_delta = last_delta;
+        spec.sync_state = sync_state;
         self.materialized -= 1;
     }
 
@@ -483,6 +492,7 @@ impl Population {
             spec.meter = ResourceMeter::new(energy_budget, money_budget);
             spec.prev_loss = f64::NAN;
             spec.last_delta = 0.0;
+            spec.sync_state = SyncState::default();
             spec.online = true;
         }
     }
@@ -573,6 +583,31 @@ mod tests {
         p.demobilize(b.into_parts(), true);
         p.demobilize(c.into_parts(), true);
         assert_eq!(p.materialized(), 0);
+    }
+
+    #[test]
+    fn sync_state_persists_through_demobilize() {
+        let mut p = pop(3, 1);
+        let global = vec![0f32; 16];
+        let mut dev = p.materialize(2, &global);
+        assert_eq!(dev.sync_state, SyncState::default());
+        dev.sync_state = SyncState {
+            synced_version: 9,
+            synced_round: 4,
+            pending_layers: 1,
+            staleness: 3,
+        };
+        p.demobilize(dev.into_parts(), true);
+        assert_eq!(p.spec(2).sync_state.synced_version, 9);
+        let dev2 = p.materialize(2, &global);
+        assert_eq!(
+            dev2.sync_state,
+            SyncState { synced_version: 9, synced_round: 4, pending_layers: 1, staleness: 3 }
+        );
+        p.demobilize(dev2.into_parts(), true);
+        // reset_episode clears it.
+        p.reset_episode(f64::INFINITY, f64::INFINITY);
+        assert_eq!(p.spec(2).sync_state, SyncState::default());
     }
 
     #[test]

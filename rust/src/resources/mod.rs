@@ -63,6 +63,11 @@ pub struct ResourceMeter {
     pub energy_used: f64,
     pub money_used: f64,
     pub time_used: f64,
+    /// Downlink (model download) share of `energy_used` — Eq. 10 resources
+    /// are spent in both directions once the downlink is simulated.
+    pub down_energy_used: f64,
+    /// Downlink share of `money_used`.
+    pub down_money_used: f64,
     /// Last round's split, per resource — the DRL state (Eq. 11).
     pub last_round: [RoundConsumption; 2],
 }
@@ -75,6 +80,8 @@ impl ResourceMeter {
             energy_used: 0.0,
             money_used: 0.0,
             time_used: 0.0,
+            down_energy_used: 0.0,
+            down_money_used: 0.0,
             last_round: [RoundConsumption::default(); 2],
         }
     }
@@ -94,6 +101,17 @@ impl ResourceMeter {
         self.last_round[0] = RoundConsumption { comp: comp_energy, comm: comm_energy };
         // Money has no computation component in the model (airtime only).
         self.last_round[1] = RoundConsumption { comp: 0.0, comm: comm_money };
+    }
+
+    /// Charge one downlink broadcast (model download). Counts toward the
+    /// same Eq. 10a budgets as the uplink — a device that spends its whole
+    /// energy budget *receiving* stops participating just the same — and is
+    /// additionally tracked in the `down_*` split for the metrics columns.
+    pub fn record_downlink(&mut self, energy: f64, money: f64) {
+        self.energy_used += energy;
+        self.money_used += money;
+        self.down_energy_used += energy;
+        self.down_money_used += money;
     }
 
     pub fn used(&self, r: Resource) -> f64 {
@@ -164,6 +182,20 @@ mod tests {
         assert!(m.can_afford(6.0, 0.5));
         assert!(!m.can_afford(6.1, 0.0));
         assert!(!m.can_afford(0.0, 0.6));
+    }
+
+    #[test]
+    fn downlink_counts_toward_budget_and_is_split_out() {
+        let mut m = ResourceMeter::new(10.0, 1.0);
+        m.record_round(2.0, 3.0, 0.2, 1.0);
+        m.record_downlink(4.0, 0.3);
+        assert_eq!(m.energy_used, 9.0);
+        assert_eq!(m.money_used, 0.5);
+        assert_eq!(m.down_energy_used, 4.0);
+        assert_eq!(m.down_money_used, 0.3);
+        assert!(m.within_budget());
+        m.record_downlink(2.0, 0.0); // download alone exhausts the budget
+        assert!(!m.within_budget());
     }
 
     #[test]

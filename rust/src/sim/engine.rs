@@ -112,6 +112,80 @@ fn barrier_rounds(
     let mut queue = EventQueue::new();
     let mut stats = SimStats::default();
 
+    // Emit one barrier-round record — factored out so the downlink path
+    // (which finalizes a round at the last `SyncConfirmed` instead of at
+    // `Broadcast`) runs the exact same f64 reductions in the exact same
+    // order as the legacy inline code.
+    #[allow(clippy::too_many_arguments)]
+    fn emit_barrier_record(
+        exp: &mut Experiment,
+        trainer: &mut dyn LocalTrainer,
+        log: &mut RunLog,
+        stats: &mut SimStats,
+        round: usize,
+        round_wall: f64,
+        loss_sum: f64,
+        loss_n: usize,
+        reward_acc: f64,
+        reward_n: usize,
+        bytes_up: u64,
+        active: &[bool],
+        walls: &[f64],
+        completed: u64,
+    ) -> Result<()> {
+        let m = active.len();
+        let done = round + 1 == exp.cfg.rounds;
+        // Drain the downlink's per-window totals (zero when disabled).
+        let down = exp
+            .downlink
+            .as_mut()
+            .map(|d| d.window.take())
+            .unwrap_or_default();
+        exp.total_time_s += round_wall;
+        let (eval_loss, eval_acc) = if round % exp.cfg.eval_every == 0 || done {
+            trainer.eval(&exp.server.params)?
+        } else {
+            (f64::NAN, f64::NAN)
+        };
+        let (tot_energy, tot_money) = exp.devices.iter().fold((0.0, 0.0), |acc, d| {
+            (acc.0 + d.meter.energy_used, acc.1 + d.meter.money_used)
+        });
+        let mut finishes: Vec<f64> =
+            (0..m).filter(|&i| active[i]).map(|i| walls[i]).collect();
+        let finish_p50_s = percentile(&mut finishes, 50.0);
+        let finish_p95_s = percentile(&mut finishes, 95.0);
+        log.push(RoundRecord {
+            round,
+            train_loss: loss_sum / loss_n.max(1) as f64,
+            eval_loss,
+            eval_acc,
+            energy_j: tot_energy,
+            money: tot_money,
+            round_time_s: round_wall,
+            total_time_s: exp.total_time_s,
+            bytes_up,
+            drl_reward: if reward_n > 0 {
+                reward_acc / reward_n as f64
+            } else {
+                f64::NAN
+            },
+            finish_p50_s,
+            finish_p95_s,
+            stale_updates: 0,
+            sampled: active.iter().filter(|&&a| a).count() as u64,
+            completed,
+            dropped_offline: 0,
+            // Barrier sync never applies a stale update.
+            staleness_p50: 0.0,
+            staleness_p95: 0.0,
+            down_bytes: down.bytes,
+            down_energy_j: down.energy_j,
+            down_money: down.money,
+        });
+        stats.records += 1;
+        Ok(())
+    }
+
     // The single barrier-round broadcast trigger: once nothing is pending,
     // schedule the Broadcast at the round's wall time (exactly once).
     fn maybe_broadcast(
@@ -144,15 +218,26 @@ fn barrier_rounds(
         let mut pending_compute = 0usize;
         let mut pending_layers = 0usize;
         let mut broadcast_scheduled = false;
+        let mut loss_sum = 0.0f64;
+        let mut loss_n = 0usize;
+        let mut reward_acc = 0.0f64;
+        let mut reward_n = 0usize;
+        // Downlink round state (inert when the downlink is disabled).
+        let mut down_updates: Vec<Option<LgcUpdate>> = (0..m).map(|_| None).collect();
+        let mut pending_down = 0usize;
+        let mut completed_uploads = 0u64;
 
         queue.push(0.0, Event::FadingTick);
-        while let Some((_t, ev)) = queue.pop() {
+        while let Some((t, ev)) = queue.pop() {
             match ev {
                 Event::FadingTick => {
                     // Network dynamics advance for every device (in-budget
                     // or not), exactly like the synchronous loop.
                     for dev in &mut exp.devices {
                         dev.channels.step_round();
+                    }
+                    if let Some(dl) = exp.downlink.as_mut() {
+                        dl.step_round();
                     }
                     for i in 0..m {
                         active[i] = exp.devices[i].meter.within_budget();
@@ -278,10 +363,6 @@ fn barrier_rounds(
                     // Reductions in device order: the f64 accumulation order
                     // of the synchronous loop, preserved.
                     let done = round + 1 == exp.cfg.rounds;
-                    let mut loss_sum = 0.0f64;
-                    let mut loss_n = 0usize;
-                    let mut reward_acc = 0.0f64;
-                    let mut reward_n = 0usize;
                     for i in 0..m {
                         if !active[i] {
                             continue;
@@ -303,6 +384,7 @@ fn barrier_rounds(
                     // seam.
                     let received_idx: Vec<usize> =
                         (0..m).filter(|&i| exp.received[i]).collect();
+                    completed_uploads = received_idx.len() as u64;
                     if !received_idx.is_empty() {
                         let weights: Vec<f64> =
                             received_idx.iter().map(|&i| samples[i] as f64).collect();
@@ -310,47 +392,91 @@ fn barrier_rounds(
                             received_idx.iter().map(|&i| &exp.recv_bufs[i]).collect();
                         exp.server.set_round_weights(&weights);
                         exp.server.aggregate_and_apply(&uploads);
-                        for &i in &received_idx {
-                            exp.devices[i].sync(&exp.server.params);
+                        if exp.downlink.is_none() {
+                            // Legacy free-instant broadcast: the frozen
+                            // `step_round` semantics, bit for bit.
+                            for &i in &received_idx {
+                                exp.devices[i].sync(&exp.server.params);
+                            }
+                        } else {
+                            // Simulated downlink: each device's delta rides
+                            // its downlink links as per-layer in-flight
+                            // transfers; the round finalizes at the last
+                            // `SyncConfirmed`.
+                            for &i in &received_idx {
+                                let dl = exp.downlink.as_mut().expect("downlink enabled");
+                                let tr = dl.encode_for(
+                                    i,
+                                    &exp.server.params,
+                                    round as u64 + 1,
+                                    round,
+                                );
+                                let dev = &mut exp.devices[i];
+                                // The upload was aggregated above: wipe the
+                                // shipped progress (what `sync` did on the
+                                // free path) before the delta streams in.
+                                dev.begin_downlink_sync();
+                                dev.meter.record_downlink(tr.energy_j, tr.money);
+                                if tr.update.layers.is_empty() {
+                                    dev.sync_state.synced_version = round as u64 + 1;
+                                    dev.sync_state.synced_round = round;
+                                    continue;
+                                }
+                                dev.sync_state.pending_layers = tr.update.layers.len();
+                                for (c, &ch) in tr.channels.iter().enumerate() {
+                                    queue.push(
+                                        round_wall + tr.costs[ch].time_s,
+                                        Event::DownlinkLayerArrived {
+                                            device: i,
+                                            channel: ch,
+                                            layer: c,
+                                        },
+                                    );
+                                }
+                                down_updates[i] = Some(tr.update);
+                                pending_down += 1;
+                            }
                         }
                     }
-                    exp.total_time_s += round_wall;
-                    let (eval_loss, eval_acc) = if round % exp.cfg.eval_every == 0 || done {
-                        trainer.eval(&exp.server.params)?
-                    } else {
-                        (f64::NAN, f64::NAN)
-                    };
-                    let (tot_energy, tot_money) =
-                        exp.devices.iter().fold((0.0, 0.0), |acc, d| {
-                            (acc.0 + d.meter.energy_used, acc.1 + d.meter.money_used)
-                        });
-                    let mut finishes: Vec<f64> =
-                        (0..m).filter(|&i| active[i]).map(|i| walls[i]).collect();
-                    let finish_p50_s = percentile(&mut finishes, 50.0);
-                    let finish_p95_s = percentile(&mut finishes, 95.0);
-                    log.push(RoundRecord {
-                        round,
-                        train_loss: loss_sum / loss_n.max(1) as f64,
-                        eval_loss,
-                        eval_acc,
-                        energy_j: tot_energy,
-                        money: tot_money,
-                        round_time_s: round_wall,
-                        total_time_s: exp.total_time_s,
-                        bytes_up,
-                        drl_reward: if reward_n > 0 {
-                            reward_acc / reward_n as f64
-                        } else {
-                            f64::NAN
-                        },
-                        finish_p50_s,
-                        finish_p95_s,
-                        stale_updates: 0,
-                        sampled: active.iter().filter(|&&a| a).count() as u64,
-                        completed: received_idx.len() as u64,
-                        dropped_offline: 0,
-                    });
-                    stats.records += 1;
+                    if pending_down == 0 {
+                        emit_barrier_record(
+                            exp, trainer, log, &mut stats, round, round_wall, loss_sum,
+                            loss_n, reward_acc, reward_n, bytes_up, &active, &walls,
+                            completed_uploads,
+                        )?;
+                    }
+                }
+                Event::DownlinkLayerArrived { device: i, layer, .. } => {
+                    let update = down_updates[i].as_ref().expect("downlink in flight");
+                    exp.devices[i].apply_downlink_layer(&update.layers[layer]);
+                    if exp.devices[i].sync_state.pending_layers == 0 {
+                        // Hand the consumed payload back for buffer reuse.
+                        if let (Some(u), Some(dl)) =
+                            (down_updates[i].take(), exp.downlink.as_mut())
+                        {
+                            dl.recycle(u);
+                        }
+                        // Barrier semantics: confirmation means *every*
+                        // layer landed (the async engines confirm at the
+                        // base layer instead).
+                        queue.push(t, Event::SyncConfirmed { device: i });
+                    }
+                }
+                Event::SyncConfirmed { device: i } => {
+                    let dev = &mut exp.devices[i];
+                    dev.sync_state.synced_version = round as u64 + 1;
+                    dev.sync_state.synced_round = round;
+                    pending_down -= 1;
+                    // The barrier round now ends when the slowest downlink
+                    // confirms, not when the slowest upload lands.
+                    round_wall = round_wall.max(t);
+                    if pending_down == 0 {
+                        emit_barrier_record(
+                            exp, trainer, log, &mut stats, round, round_wall, loss_sum,
+                            loss_n, reward_acc, reward_n, bytes_up, &active, &walls,
+                            completed_uploads,
+                        )?;
+                    }
                 }
             }
         }
@@ -454,6 +580,15 @@ struct DevState {
     expected: usize,
     arrived: usize,
     update: Option<LgcUpdate>,
+    /// In-flight downlink broadcast payload (downlink enabled only).
+    down_update: Option<LgcUpdate>,
+    /// Server version the in-flight (or last confirmed) downlink brings
+    /// the device to.
+    down_version: u64,
+    /// A fresh broadcast fired while the previous downlink's enhancement
+    /// layers were still in flight: re-encode against the then-current
+    /// global the moment the downlink radio frees up.
+    wants_resync: bool,
 }
 
 /// One completed upload parked in the semi-async server buffer.
@@ -476,6 +611,13 @@ struct AsyncCtx {
     buffer: Vec<Buffered>,
     /// Devices with compute or layers still in flight.
     busy: usize,
+    /// Devices with a downlink broadcast in flight toward them — they are
+    /// neither busy nor waiting, but are *guaranteed future producers*
+    /// (they restart at their base-layer `SyncConfirmed`), so the
+    /// "fleet parked" flush heuristics must not fire while any remain or
+    /// semi-async would degrade toward `buffer_k = 1` under slow
+    /// downlinks.
+    downlinking: usize,
     server_version: u64,
     last_record_t: f64,
     window_bytes: u64,
@@ -498,6 +640,7 @@ fn run_async(
         samples: (0..m).map(|i| trainer.device_samples(i)).collect(),
         buffer: Vec::new(),
         busy: 0,
+        downlinking: 0,
         server_version: 0,
         last_record_t: exp.total_time_s,
         window_bytes: 0,
@@ -536,6 +679,9 @@ fn run_async(
                 // device round boundaries.
                 for dev in &mut exp.devices {
                     dev.channels.step_round();
+                }
+                if let Some(dl) = exp.downlink.as_mut() {
+                    dl.step_round();
                 }
                 if st.iter().any(|d| d.alive) {
                     queue.push(t + exp.cfg.fading_tick_s, Event::FadingTick);
@@ -623,7 +769,26 @@ fn run_async(
                 // lost layer's airtime was still spent).
                 let era = log.records.len();
                 for i in 0..m {
-                    if st[i].waiting {
+                    if !st[i].waiting {
+                        continue;
+                    }
+                    if st[i].compressed && exp.downlink.is_some() {
+                        // The fresh model travels over the simulated
+                        // downlink; the device restarts at its base-layer
+                        // `SyncConfirmed`, not here.
+                        if exp.devices[i].sync_state.pending_layers > 0 {
+                            // Previous broadcast's enhancement layers still
+                            // occupy the downlink radio: re-encode once it
+                            // frees (against the then-current global).
+                            st[i].wants_resync = true;
+                            continue;
+                        }
+                        st[i].waiting = false;
+                        let restart_at = t.max(st[i].tx_end);
+                        start_async_downlink(
+                            exp, trainer, &mut st, &mut queue, &mut ctx, i, restart_at, era,
+                        )?;
+                    } else {
                         st[i].waiting = false;
                         if st[i].compressed {
                             exp.devices[i].sync(&exp.server.params);
@@ -636,10 +801,116 @@ fn run_async(
                     }
                 }
             }
+            Event::DownlinkLayerArrived { device: i, layer, .. } => {
+                {
+                    let update = st[i].down_update.as_ref().expect("downlink in flight");
+                    exp.devices[i].apply_downlink_layer(&update.layers[layer]);
+                }
+                if layer == 0 {
+                    // Base layer landed: the device may proceed on a
+                    // partial (base-only) model while enhancement layers
+                    // trail — `SyncState::pending_layers` tracks them.
+                    queue.push(t, Event::SyncConfirmed { device: i });
+                }
+                if exp.devices[i].sync_state.pending_layers == 0 {
+                    // Whole broadcast landed: full confirmation (payload
+                    // goes back to the downlink's buffer pool). Only now
+                    // does the device stop counting as a pending producer —
+                    // a base-restarted device with trailing layers may be
+                    // waiting + wants_resync, which guarantees another
+                    // downlink (and upload) the moment the radio frees.
+                    ctx.downlinking -= 1;
+                    if let (Some(u), Some(dl)) =
+                        (st[i].down_update.take(), exp.downlink.as_mut())
+                    {
+                        dl.recycle(u);
+                    }
+                    let v = st[i].down_version;
+                    let dev = &mut exp.devices[i];
+                    dev.sync_state.synced_version = v;
+                    dev.sync_state.synced_round = log.records.len();
+                    if st[i].wants_resync {
+                        // A newer global is owed: start its downlink now
+                        // that the radio is free.
+                        st[i].wants_resync = false;
+                        st[i].waiting = false;
+                        let era = log.records.len();
+                        start_async_downlink(
+                            exp, trainer, &mut st, &mut queue, &mut ctx, i, t, era,
+                        )?;
+                    } else if let AsyncKind::Semi { buffer_k } = ctx.kind {
+                        // If the device died on its download charges and it
+                        // was the last pending producer, a partial buffer
+                        // would strand forever — flush it now.
+                        if ctx.busy == 0 && ctx.downlinking == 0 && !ctx.buffer.is_empty() {
+                            aggregate_semi_buffer(exp, trainer, &mut ctx, log, t, buffer_k)?;
+                            queue.push(t, Event::Broadcast);
+                        }
+                    }
+                }
+            }
+            Event::SyncConfirmed { device: i } => {
+                // The base model is in: restart the device on it, recording
+                // the staleness gap it starts from (the server may have
+                // aggregated further while the downlink was in flight).
+                // `ctx.downlinking` stays up until the *full* broadcast
+                // lands — the trailing layers keep the device a pending
+                // producer for the flush heuristics.
+                st[i].model_version = st[i].down_version;
+                exp.devices[i].sync_state.staleness =
+                    ctx.server_version - st[i].down_version;
+                let era = log.records.len();
+                begin_device_round(exp, trainer, &mut st, &mut queue, &mut ctx, i, t, era)?;
+            }
         }
     }
     ctx.stats.events = queue.popped();
     exp.sim_stats = ctx.stats;
+    Ok(())
+}
+
+/// Encode device `i`'s downlink broadcast (delta vs the server's mirror)
+/// and schedule one [`Event::DownlinkLayerArrived`] per layer starting at
+/// `now`. The device's downlink radio must be free (no pending layers).
+/// An empty delta confirms instantly: the device restarts without waiting.
+#[allow(clippy::too_many_arguments)]
+fn start_async_downlink(
+    exp: &mut Experiment,
+    trainer: &mut dyn LocalTrainer,
+    st: &mut [DevState],
+    queue: &mut EventQueue,
+    ctx: &mut AsyncCtx,
+    i: usize,
+    now: f64,
+    era: usize,
+) -> Result<()> {
+    debug_assert_eq!(exp.devices[i].sync_state.pending_layers, 0);
+    let dl = exp.downlink.as_mut().expect("downlink enabled");
+    let tr = dl.encode_for(i, &exp.server.params, ctx.server_version, era);
+    let dev = &mut exp.devices[i];
+    // Only compressed (upload-complete) devices reach here: their round's
+    // progress lives in `delivered layers + error memory`, so wipe it from
+    // the replicas — exactly what `Device::sync` did on the free-broadcast
+    // path — before the delta layers stream in.
+    dev.begin_downlink_sync();
+    dev.meter.record_downlink(tr.energy_j, tr.money);
+    st[i].down_version = ctx.server_version;
+    if tr.update.layers.is_empty() {
+        dev.sync_state.synced_version = ctx.server_version;
+        dev.sync_state.synced_round = era;
+        dev.sync_state.staleness = 0;
+        st[i].model_version = ctx.server_version;
+        return begin_device_round(exp, trainer, st, queue, ctx, i, now, era);
+    }
+    dev.sync_state.pending_layers = tr.update.layers.len();
+    for (c, &ch) in tr.channels.iter().enumerate() {
+        queue.push(
+            now + tr.costs[ch].time_s,
+            Event::DownlinkLayerArrived { device: i, channel: ch, layer: c },
+        );
+    }
+    st[i].down_update = Some(tr.update);
+    ctx.downlinking += 1;
     Ok(())
 }
 
@@ -772,12 +1043,14 @@ fn complete_upload(
         queue.push(t, Event::Broadcast);
     }
     if let AsyncKind::Semi { buffer_k } = ctx.kind {
-        if ctx.buffer.len() >= buffer_k || (ctx.busy == 0 && !ctx.buffer.is_empty()) {
+        let fleet_parked = ctx.busy == 0 && ctx.downlinking == 0;
+        if ctx.buffer.len() >= buffer_k || (fleet_parked && !ctx.buffer.is_empty()) {
             // FedBuff trigger — or a flush when the whole fleet is parked on
-            // a buffer that can no longer fill.
+            // a buffer that can no longer fill (devices mid-download still
+            // count as producers: their uploads are coming).
             aggregate_semi_buffer(exp, trainer, ctx, log, t, buffer_k)?;
             queue.push(t, Event::Broadcast);
-        } else if ctx.busy == 0 && ctx.buffer.is_empty() {
+        } else if fleet_parked && ctx.buffer.is_empty() {
             // Everyone waiting, nothing aggregable (all uploads erased):
             // broadcast anyway so the fleet resyncs and retries.
             queue.push(t, Event::Broadcast);
@@ -845,6 +1118,16 @@ fn push_async_record(
     let mut finishes: Vec<f64> = contributions.iter().map(|c| c.1).collect();
     let stale_updates = contributions.iter().filter(|c| c.2 > 0).count() as u64;
     ctx.stats.stale_updates += stale_updates;
+    // Staleness distribution of the window's applied updates, and the
+    // window's downlink totals (zero when the downlink is disabled).
+    let mut stale_vals: Vec<f64> = contributions.iter().map(|c| c.2 as f64).collect();
+    let staleness_p50 = percentile(&mut stale_vals, 50.0);
+    let staleness_p95 = percentile(&mut stale_vals, 95.0);
+    let down = exp
+        .downlink
+        .as_mut()
+        .map(|d| d.window.take())
+        .unwrap_or_default();
     let (eval_loss, eval_acc) = if round % exp.cfg.eval_every == 0 || done {
         trainer.eval(&exp.server.params)?
     } else {
@@ -874,6 +1157,11 @@ fn push_async_record(
         sampled: contributions.len() as u64,
         completed: contributions.len() as u64,
         dropped_offline: 0,
+        staleness_p50,
+        staleness_p95,
+        down_bytes: down.bytes,
+        down_energy_j: down.energy_j,
+        down_money: down.money,
     };
     exp.total_time_s = now;
     ctx.last_record_t = now;
@@ -943,14 +1231,16 @@ fn run_cohort(
 fn ensure_agent(exp: &mut Experiment, id: usize) {
     if exp.policy.needs_agents() && exp.agents[id].is_none() {
         let (d_min, d_total) = exp.d_bounds();
+        let staleness_aware = exp.downlink.is_some();
         let rng = exp.rng().fork(0xD_00 + id as u64);
-        exp.agents[id] = Some(DeviceAgent::new(
+        exp.agents[id] = Some(DeviceAgent::new_with(
             exp.cfg.channel_types.len(),
             exp.cfg.h_max,
             d_total,
             d_min,
             exp.cfg.drl.clone(),
             rng,
+            staleness_aware,
         ));
     }
 }
@@ -981,8 +1271,12 @@ fn cohort_barrier_rounds(
     let mut decoded: Vec<LgcUpdate> = Vec::new();
     'rounds: for round in 0..exp.cfg.rounds {
         // 1. Population-wide dynamics: every demobilized client's fading
-        // chains (nobody is materialized between rounds) + availability.
+        // chains (nobody is materialized between rounds) + availability,
+        // plus every client's downlink fading chain when enabled.
         pop.step_round();
+        if let Some(dl) = exp.downlink.as_mut() {
+            dl.step_round();
+        }
         if !pop.any_within_budget() {
             break 'rounds;
         }
@@ -1087,9 +1381,26 @@ fn cohort_barrier_rounds(
             false
         };
         if applied {
+            let mut down_wall = 0.0f64;
             for &k in &received_live {
-                live[k].0.sync(&exp.server.params);
+                let dev = &mut live[k].0;
+                dev.sync(&exp.server.params);
+                if let Some(dl) = exp.downlink.as_mut() {
+                    // Accounting-only fidelity (see downlink module docs):
+                    // the client got the exact global above; the
+                    // broadcast's bytes/energy/money/time are charged from
+                    // the budget-determined layer sizes.
+                    let (wall, e, mo, _by) =
+                        dl.charge_broadcast(dev.id, exp.server.params.len());
+                    dev.meter.record_downlink(e, mo);
+                    dev.sync_state.synced_version = round as u64 + 1;
+                    dev.sync_state.synced_round = round;
+                    down_wall = down_wall.max(wall);
+                }
             }
+            // The round now ends when the slowest broadcast completes
+            // (the broadcasts start after aggregation, in parallel).
+            round_wall += down_wall;
         }
         // 5. Demobilize the cohort: meters/losses persist to the specs, the
         // error memory drains into the compact residual, the dense replicas
@@ -1106,6 +1417,11 @@ fn cohort_barrier_rounds(
             (f64::NAN, f64::NAN)
         };
         let (tot_energy, tot_money) = pop.meter_totals();
+        let down = exp
+            .downlink
+            .as_mut()
+            .map(|d| d.window.take())
+            .unwrap_or_default();
         log.push(RoundRecord {
             round,
             train_loss: if loss_n == 0 { f64::NAN } else { loss_sum / loss_n as f64 },
@@ -1127,6 +1443,11 @@ fn cohort_barrier_rounds(
             sampled: loss_n as u64,
             completed: nrecv as u64,
             dropped_offline,
+            staleness_p50: 0.0,
+            staleness_p95: 0.0,
+            down_bytes: down.bytes,
+            down_energy_j: down.energy_j,
+            down_money: down.money,
         });
         stats.records += 1;
     }
@@ -1150,6 +1471,9 @@ struct CohortSlot {
     model_version: u64,
     update: Option<LgcUpdate>,
     waiting: bool,
+    /// The slot's broadcast download is in flight (downlink enabled): the
+    /// client demobilizes at its `SyncConfirmed`, not at `Broadcast`.
+    syncing: bool,
     retired: bool,
 }
 
@@ -1167,6 +1491,7 @@ impl CohortSlot {
             model_version: 0,
             update: None,
             waiting: false,
+            syncing: false,
             retired: true,
         }
     }
@@ -1213,6 +1538,7 @@ fn begin_cohort_slot(
     s.model_version = server_version;
     s.update = None;
     s.waiting = false;
+    s.syncing = false;
     s.retired = false;
     queue.push(now + comp_s, Event::ComputeDone { device: slot_idx });
     Ok(())
@@ -1282,6 +1608,14 @@ fn push_cohort_record(
     let mut finishes: Vec<f64> = contributions.iter().map(|c| c.1).collect();
     let stale_updates = contributions.iter().filter(|c| c.2 > 0).count() as u64;
     stats.stale_updates += stale_updates;
+    let mut stale_vals: Vec<f64> = contributions.iter().map(|c| c.2 as f64).collect();
+    let staleness_p50 = percentile(&mut stale_vals, 50.0);
+    let staleness_p95 = percentile(&mut stale_vals, 95.0);
+    let down = exp
+        .downlink
+        .as_mut()
+        .map(|d| d.window.take())
+        .unwrap_or_default();
     let (eval_loss, eval_acc) = if round % exp.cfg.eval_every == 0 || done {
         trainer.eval(&exp.server.params)?
     } else {
@@ -1318,6 +1652,11 @@ fn push_cohort_record(
         sampled: contributions.len() as u64 + window.dropped,
         completed: contributions.len() as u64,
         dropped_offline: window.dropped,
+        staleness_p50,
+        staleness_p95,
+        down_bytes: down.bytes,
+        down_energy_j: down.energy_j,
+        down_money: down.money,
     };
     exp.total_time_s = now;
     *last_record_t = now;
@@ -1351,6 +1690,11 @@ fn cohort_async_rounds(
     let mut slots: Vec<CohortSlot> = (0..n_slots).map(|_| CohortSlot::idle()).collect();
     let mut busy = vec![false; pop.len()];
     let mut in_flight = 0usize;
+    // Slots whose broadcast download is in flight: not in_flight, but
+    // guaranteed to hand their slot to a fresh producer at SyncConfirmed —
+    // the parked-pool flush must wait for them (see the legacy engine's
+    // `downlinking` counter).
+    let mut syncing_count = 0usize;
     let mut server_version = 0u64;
     // Buffered-window state (Semi): record metadata always; payloads and
     // weights only on the batch (non-streaming) path.
@@ -1400,6 +1744,9 @@ fn cohort_async_rounds(
                 // Whole-population dynamics: demobilized specs advance in
                 // the store, live slot devices in place.
                 pop.step_round();
+                if let Some(dl) = exp.downlink.as_mut() {
+                    dl.step_round();
+                }
                 for s in slots.iter_mut() {
                     if let Some(dev) = s.dev.as_mut() {
                         dev.channels.step_round();
@@ -1570,9 +1917,11 @@ fn cohort_async_rounds(
                             t,
                         )?;
                         queue.push(t, Event::Broadcast);
-                    } else if in_flight == 0 {
+                    } else if in_flight == 0 && syncing_count == 0 {
                         // Whole pool parked: flush a partial buffer, or just
-                        // broadcast so everyone resyncs and rotates.
+                        // broadcast so everyone resyncs and rotates. Slots
+                        // mid-download are future producers, so they hold
+                        // the flush open.
                         if !pending.is_empty() {
                             flush_semi_cohort(
                                 exp,
@@ -1599,13 +1948,30 @@ fn cohort_async_rounds(
             Event::Broadcast => {
                 // Every waiting slot: resync (if its progress was absorbed
                 // by a compress), demobilize, and hand the slot to a
-                // sampler-chosen replacement client.
+                // sampler-chosen replacement client. With the downlink
+                // enabled, a compressed slot's resync rides its downlink
+                // first — demobilization moves to its `SyncConfirmed`.
                 for i in 0..slots.len() {
                     if slots[i].retired || !slots[i].waiting {
                         continue;
                     }
                     slots[i].waiting = false;
                     let compressed = slots[i].compressed;
+                    if compressed && exp.downlink.is_some() {
+                        let client = slots[i].client;
+                        let dev = slots[i].dev.as_mut().expect("waiting slot has a device");
+                        dev.sync(&exp.server.params);
+                        let dl = exp.downlink.as_mut().expect("downlink enabled");
+                        let (wall, e, mo, _by) =
+                            dl.charge_broadcast(client, exp.server.params.len());
+                        dev.meter.record_downlink(e, mo);
+                        dev.sync_state.synced_version = server_version;
+                        dev.sync_state.synced_round = log.records.len();
+                        slots[i].syncing = true;
+                        syncing_count += 1;
+                        queue.push(t + wall, Event::SyncConfirmed { device: i });
+                        continue;
+                    }
                     let client = slots[i].client;
                     let mut dev = slots[i].dev.take().expect("waiting slot has a device");
                     if compressed {
@@ -1634,8 +2000,67 @@ fn cohort_async_rounds(
                     }
                 }
             }
-            Event::LayerArrived { .. } => {
-                unreachable!("cohort engine completes uploads via UploadDone")
+            Event::SyncConfirmed { device: i } => {
+                // The slot's broadcast download completed: demobilize the
+                // client (its SyncState persists to the spec) and hand the
+                // slot to a replacement, exactly like the instant path.
+                if !slots[i].syncing {
+                    continue; // drained by the run's end
+                }
+                slots[i].syncing = false;
+                syncing_count -= 1;
+                let client = slots[i].client;
+                let dev = slots[i].dev.take().expect("syncing slot has a device");
+                pop.demobilize(dev.into_parts(), true);
+                busy[client] = false;
+                match sampler.sample_replacement(pop, &busy) {
+                    Some(next) => {
+                        begin_cohort_slot(
+                            exp,
+                            trainer,
+                            pop,
+                            &mut slots,
+                            &mut queue,
+                            i,
+                            next,
+                            t,
+                            log.records.len(),
+                            server_version,
+                        )?;
+                        busy[next] = true;
+                        in_flight += 1;
+                    }
+                    None => slots[i].retired = true,
+                }
+                // If no replacement was eligible and this was the last
+                // pending producer, a partial window would strand — flush.
+                if matches!(kind, AsyncKind::Semi { .. })
+                    && in_flight == 0
+                    && syncing_count == 0
+                    && !pending.is_empty()
+                {
+                    flush_semi_cohort(
+                        exp,
+                        trainer,
+                        pop,
+                        &slots,
+                        log,
+                        &mut stats,
+                        &mut window,
+                        &mut last_record_t,
+                        streaming,
+                        &mut pending,
+                        &mut pending_updates,
+                        &mut pending_weights,
+                        &mut free_bufs,
+                        &mut server_version,
+                        t,
+                    )?;
+                    queue.push(t, Event::Broadcast);
+                }
+            }
+            Event::LayerArrived { .. } | Event::DownlinkLayerArrived { .. } => {
+                unreachable!("cohort engine completes transfers via UploadDone/SyncConfirmed")
             }
         }
     }

@@ -32,6 +32,17 @@ pub enum Event {
     /// The server finished an aggregation and pushes the fresh global model
     /// to the devices that are waiting for it.
     Broadcast,
+    /// One compressed layer of the server's *downlink* broadcast landed at
+    /// `device` after crossing its downlink `channel`. `layer` indexes the
+    /// broadcast's layers (0 = base layer). Only scheduled when the
+    /// downlink is enabled (`cfg.downlink`).
+    DownlinkLayerArrived { device: usize, channel: usize, layer: usize },
+    /// `device` confirmed its downlink synchronization: the base layer
+    /// arrived (legacy engines — enhancement layers may still trail,
+    /// tracked in the device's `SyncState`), or the whole accounting-only
+    /// broadcast completed (population cohort engines, where `device` is
+    /// the cohort slot index). Only scheduled when the downlink is enabled.
+    SyncConfirmed { device: usize },
 }
 
 /// A heap entry: an [`Event`] at a virtual time, with an insertion sequence

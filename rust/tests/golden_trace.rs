@@ -1,0 +1,166 @@
+//! Golden-trace regression suite: one short seeded experiment per
+//! mechanism preset, fingerprinted to a compact per-round hash.
+//!
+//! Purpose: `tests/sim_engine.rs` proves the engine equals the in-repo
+//! `step_round` oracle — but if a future PR changes *both* in the same way
+//! (an accidental numeric drift in a shared helper), oracle equality still
+//! passes. This suite pins the absolute numbers: each preset's per-round
+//! `(train_loss bits, bytes_up, sampled, completed)` stream is folded into
+//! an FNV-1a 64 hash and compared against the blessed value committed in
+//! `tests/golden/traces.txt`, so silent numeric drift fails loudly.
+//!
+//! Blessing protocol: if a preset has no entry in the golden file yet, the
+//! test computes the fingerprint (asserting two independent runs agree —
+//! the determinism half of the contract always runs) and **writes the
+//! entry**, pinning it from the first run onward; commit the updated file.
+//! After an *intentional* numeric change, re-bless by deleting the stale
+//! entries (or running with `LGC_BLESS=1`) and committing the regenerated
+//! file.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use lgc::config::{ExperimentConfig, Mechanism, Workload};
+use lgc::coordinator::{Experiment, NativeLrTrainer};
+use lgc::metrics::RunLog;
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust")
+        .join("tests")
+        .join("golden")
+        .join("traces.txt")
+}
+
+fn cfg(mechanism: Mechanism) -> ExperimentConfig {
+    ExperimentConfig {
+        mechanism,
+        workload: Workload::LrMnist,
+        rounds: 6,
+        devices: 3,
+        samples_per_device: 256,
+        eval_samples: 256,
+        eval_every: 3,
+        lr: 0.05,
+        h_fixed: 2,
+        h_max: 4,
+        seed: 42,
+        use_runtime: false,
+        ..ExperimentConfig::default()
+    }
+}
+
+/// FNV-1a 64 over the trace bytes — tiny, dependency-free, stable.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// The compact per-round fingerprint: exact loss bits (silent numeric
+/// drift changes these first), traffic, and participation counts.
+fn fingerprint(log: &RunLog) -> String {
+    let mut buf = String::new();
+    for r in &log.records {
+        let _ = write!(
+            buf,
+            "{}:{:016x}:{}:{}:{};",
+            r.round,
+            r.train_loss.to_bits(),
+            r.bytes_up,
+            r.sampled,
+            r.completed
+        );
+    }
+    format!("{:016x}", fnv1a(buf.as_bytes()))
+}
+
+fn run_once(mechanism: Mechanism) -> String {
+    let c = cfg(mechanism);
+    let mut trainer = NativeLrTrainer::new(&c);
+    let mut exp = Experiment::new(c, &trainer);
+    let log = exp.run(&mut trainer).expect("run");
+    assert_eq!(log.records.len(), 6, "{}", mechanism.name());
+    fingerprint(&log)
+}
+
+fn load_golden() -> BTreeMap<String, String> {
+    let mut map = BTreeMap::new();
+    if let Ok(text) = std::fs::read_to_string(golden_path()) {
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some((k, v)) = line.split_once('=') {
+                map.insert(k.trim().to_string(), v.trim().to_string());
+            }
+        }
+    }
+    map
+}
+
+fn store_golden(map: &BTreeMap<String, String>) {
+    let path = golden_path();
+    std::fs::create_dir_all(path.parent().unwrap()).expect("mkdir golden");
+    let mut text = String::from(
+        "# Blessed per-preset trace fingerprints (see tests/golden_trace.rs).\n\
+         # Regenerate intentionally with LGC_BLESS=1; commit the result.\n",
+    );
+    for (k, v) in map {
+        let _ = writeln!(text, "{k}={v}");
+    }
+    std::fs::write(&path, text).expect("write golden file");
+}
+
+#[test]
+fn golden_traces_per_mechanism_preset() {
+    let bless_all = std::env::var("LGC_BLESS").map(|v| v == "1").unwrap_or(false);
+    let mut golden = load_golden();
+    let mut blessed_any = false;
+    for mech in [
+        Mechanism::LgcStatic,
+        Mechanism::FedAvg,
+        Mechanism::Qsgd,
+        Mechanism::RandK,
+        Mechanism::LgcDrl,
+    ] {
+        let name = mech.name();
+        // Determinism is the unconditional half of the contract: two
+        // independent builds + runs must fingerprint identically.
+        let a = run_once(mech);
+        let b = run_once(mech);
+        assert_eq!(a, b, "{name}: seeded run is not deterministic");
+        match golden.get(name) {
+            Some(expected) if !bless_all => {
+                assert_eq!(
+                    &a, expected,
+                    "{name}: trace fingerprint drifted from the blessed value in \
+                     tests/golden/traces.txt — if this numeric change is intentional, \
+                     re-bless with LGC_BLESS=1 and commit; otherwise a shared helper \
+                     has silently changed the numbers"
+                );
+            }
+            _ => {
+                golden.insert(name.to_string(), a);
+                blessed_any = true;
+            }
+        }
+    }
+    if blessed_any {
+        store_golden(&golden);
+        eprintln!(
+            "golden_trace: blessed new fingerprints into {} — commit the file",
+            golden_path().display()
+        );
+    }
+    // Distinct mechanisms must not collide: if two presets fingerprint
+    // identically the fingerprint lost its discriminating power.
+    let values: Vec<&String> = golden.values().collect();
+    let unique: std::collections::BTreeSet<&&String> = values.iter().collect();
+    assert_eq!(values.len(), unique.len(), "fingerprint collision across presets");
+}

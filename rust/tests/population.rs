@@ -383,3 +383,85 @@ fn step_round_rejects_population_mode() {
     let mut exp = Experiment::new(cfg, &trainer);
     let _ = exp.step_round(0, &mut trainer);
 }
+
+// ---------------------------------------------------------------------------
+// Downlink (accounting-only fidelity in population mode)
+// ---------------------------------------------------------------------------
+
+/// With the downlink explicitly disabled, the cohort engines stay
+/// bit-for-bit on the frozen oracle (the tentpole's hard constraint,
+/// spelled out rather than relying on the default).
+#[test]
+fn cohort_downlink_disabled_stays_on_oracle() {
+    for mech in [Mechanism::LgcStatic, Mechanism::FedAvg] {
+        let reference = reference_log(base_cfg(mech, 8, 42));
+        let mut cfg = full_participation_cfg(mech, 8, 42);
+        cfg.downlink = Some(false);
+        let (log, _) = population_run(cfg);
+        assert_logs_bitwise_equal(&reference, &log, &format!("downlink-off {}", mech.name()));
+        for r in &log.records {
+            assert_eq!(r.down_bytes, 0);
+            assert_eq!(r.down_energy_j, 0.0);
+        }
+    }
+}
+
+/// Cohort barrier engine with the downlink enabled: every synced client's
+/// broadcast is charged (accounting-only fidelity — budget-determined
+/// sizes), SyncState persists on the demobilized specs, and the download
+/// spend counts toward the budget.
+#[test]
+fn cohort_downlink_charges_broadcasts_and_persists_sync_state() {
+    let mut cfg = full_participation_cfg(Mechanism::LgcStatic, 8, 42);
+    cfg.downlink = Some(true);
+    let (log, exp) = population_run(cfg);
+    assert_eq!(log.records.len(), 8);
+    for r in &log.records {
+        assert!(r.down_bytes > 0, "round {}: {:?}", r.round, r.down_bytes);
+        assert!(r.down_energy_j > 0.0 && r.down_money > 0.0);
+    }
+    let pop = exp.population.as_ref().unwrap();
+    for id in 0..pop.len() {
+        let spec = pop.spec(id);
+        assert!(spec.meter.down_energy_used > 0.0, "client {id}");
+        assert_eq!(spec.sync_state.synced_round, 7, "client {id}");
+        assert_eq!(spec.sync_state.pending_layers, 0, "client {id}");
+    }
+    // Free-broadcast run under the same budget lasts at least as long.
+    let mut tight = full_participation_cfg(Mechanism::LgcStatic, 40, 42);
+    tight.downlink = Some(true);
+    tight.energy_budget = pop.spec(0).meter.energy_used * 1.5;
+    let (short, _) = population_run(tight.clone());
+    let mut free = tight;
+    free.downlink = Some(false);
+    let (long, _) = population_run(free);
+    assert!(
+        long.records.len() >= short.records.len(),
+        "download charges must not extend the budgeted run ({} vs {})",
+        long.records.len(),
+        short.records.len()
+    );
+    assert!(short.records.len() < 40, "budget should bite");
+}
+
+/// Cohort async engine with the downlink: broadcasts ride SyncConfirmed
+/// events, so the run still completes, charges downloads, and keeps the
+/// materialization bound.
+#[test]
+fn cohort_async_downlink_runs_and_charges() {
+    let mut cfg = base_cfg(Mechanism::LgcStatic, 16, 42);
+    cfg.population = Some(8);
+    cfg.cohort = Some(3);
+    cfg.sampler = Some(SamplerKind::UniformK);
+    cfg.sync_mode = Some(SyncMode::SemiAsync { buffer_k: 2 });
+    cfg.downlink = Some(true);
+    let (log, exp) = population_run(cfg);
+    assert_eq!(log.records.len(), 16);
+    let down: u64 = log.records.iter().map(|r| r.down_bytes).sum();
+    assert!(down > 0);
+    let pop = exp.population.as_ref().unwrap();
+    assert!(pop.peak_materialized() <= 3, "bound: {}", pop.peak_materialized());
+    assert_eq!(pop.materialized(), 0, "everyone demobilized after the run");
+    let (te, tm) = pop.meter_totals();
+    assert!(te > 0.0 && tm > 0.0);
+}

@@ -274,3 +274,42 @@ fn prop_fedavg_equals_lgc_full_k() {
         },
     );
 }
+
+#[test]
+fn prop_downlink_frame_roundtrip_and_truncation_safety() {
+    // The downlink frame format honors the same invariants as the uplink
+    // wire format: encode→decode identity on valid frames, and no panic on
+    // any truncation of a valid encoding (DESIGN.md §"Downlink &
+    // staleness").
+    use lgc::downlink::frame;
+    check(
+        0xA9,
+        default_cases() / 2,
+        |rng| {
+            let dim = gen::usize_in(rng, 8, 1024);
+            let u: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+            let k = gen::usize_in(rng, 1, dim / 2);
+            (u, k)
+        },
+        |(u, k)| {
+            let dim = u.len();
+            let upd = lgc_compress(u, &[(*k).max(1).min(dim)], &mut CompressScratch::default());
+            let layer = &upd.layers[0];
+            let mut buf = Vec::new();
+            let n = frame::encode_frame(3, 11, 0, 1, dim, layer, &mut buf);
+            if n != frame::frame_len(layer.len()) {
+                return Err(format!("frame bytes {n} != {}", frame::frame_len(layer.len())));
+            }
+            let mut out = lgc::compression::Layer { indices: vec![], values: vec![] };
+            let hdr = frame::decode_frame(&buf, &mut out).map_err(|e| e.to_string())?;
+            if hdr.dim != dim || &out != layer {
+                return Err("frame roundtrip mismatch".into());
+            }
+            for cut in 0..buf.len() {
+                // Must never panic; any result is acceptable.
+                let _ = frame::decode_frame(&buf[..cut], &mut out);
+            }
+            Ok(())
+        },
+    );
+}

@@ -352,3 +352,176 @@ fn bad_fading_device_with_lossy_uploads_still_converges() {
     let (_, acc) = trainer.eval(&server.params).unwrap();
     assert!(acc > 0.35, "acc={acc}");
 }
+
+// ---------------------------------------------------------------------------
+// Downlink: disabled = frozen oracle; enabled = charged, staleness-tracked
+// ---------------------------------------------------------------------------
+
+/// The tentpole's hard constraint: with the downlink explicitly disabled
+/// (the default, and `downlink = false` spelled out), every engine remains
+/// bit-for-bit equal to the frozen `step_round` oracle.
+#[test]
+fn downlink_disabled_stays_bitwise_equal_to_oracle() {
+    for mech in [Mechanism::LgcStatic, Mechanism::FedAvg, Mechanism::LgcDrl] {
+        let mut cfg = base_cfg(mech, 8);
+        cfg.downlink = Some(false);
+        let reference = reference_log(base_cfg(mech, 8));
+        let engine = engine_log(cfg);
+        assert_logs_bitwise_equal(&reference, &engine, &format!("downlink-off {}", mech.name()));
+        // And the new CSV columns stay at their inert zeros.
+        for r in &engine.records {
+            assert_eq!(r.down_bytes, 0);
+            assert_eq!(r.down_energy_j, 0.0);
+            assert_eq!(r.down_money, 0.0);
+            assert_eq!(r.staleness_p50, 0.0);
+            assert_eq!(r.staleness_p95, 0.0);
+        }
+    }
+}
+
+/// Barrier + dense downlink: the broadcast is exact (devices converge like
+/// the free-broadcast run) but no longer free — download bytes/energy/money
+/// are charged and the round time includes the downlink completion.
+#[test]
+fn barrier_dense_downlink_charges_and_extends_rounds() {
+    let mut cfg = base_cfg(Mechanism::LgcStatic, 12);
+    cfg.downlink = Some(true); // dense fallback compression
+    let free = engine_log(base_cfg(Mechanism::LgcStatic, 12));
+    let mut trainer = NativeLrTrainer::new(&cfg);
+    let mut exp = Experiment::new(cfg, &trainer);
+    let paid = exp.run(&mut trainer).unwrap();
+    assert_eq!(paid.records.len(), 12);
+    let nparams = trainer.nparams() as u64;
+    for r in &paid.records {
+        // Every device that uploaded got a dense delta back: 4 B/param.
+        assert_eq!(r.down_bytes, 4 * nparams * r.completed);
+        assert!(r.down_energy_j > 0.0 && r.down_money > 0.0);
+        assert_eq!(r.staleness_p95, 0.0, "barrier sync is never stale");
+    }
+    // Meters carry the download split and the budget sees it.
+    for dev in &exp.devices {
+        assert!(dev.meter.down_energy_used > 0.0);
+        assert!(dev.meter.energy_used >= dev.meter.down_energy_used);
+        assert_eq!(dev.sync_state.pending_layers, 0, "round ends fully confirmed");
+        assert_eq!(dev.sync_state.synced_round, 11);
+    }
+    // The downlink costs wall time: total simulated time strictly grows.
+    assert!(
+        paid.last().unwrap().total_time_s > free.last().unwrap().total_time_s,
+        "paid {} <= free {}",
+        paid.last().unwrap().total_time_s,
+        free.last().unwrap().total_time_s
+    );
+    // Dense broadcast is exact, so training still converges normally.
+    assert!(paid.final_acc() > 0.5, "acc={}", paid.final_acc());
+}
+
+/// The acceptance scenario: fast uplink, Bad-fading 3G downlink (the
+/// asymmetric link), semi-async server. The downlink delay keeps devices
+/// training on stale models — nonzero `staleness_p95` — and the download
+/// energy/money count toward `Budget` early stop.
+#[test]
+fn asymmetric_downlink_reports_staleness_and_budget_counts_downloads() {
+    let mut cfg = base_cfg(Mechanism::LgcStatic, 30);
+    cfg.mechanism = Mechanism::parse("lgc-downlink").unwrap(); // layered downlink
+    cfg.sync_mode = Some(SyncMode::SemiAsync { buffer_k: 2 });
+    let mut trainer = NativeLrTrainer::new(&cfg);
+    let mut exp = Experiment::new(cfg.clone(), &trainer);
+    // Asymmetry: every device's downlink pinned to Bad-fading 3G links.
+    let dl = exp.downlink.as_mut().expect("preset enables downlink");
+    for i in 0..3 {
+        for link in dl.links_mut(i).links.iter_mut() {
+            link.ty = ChannelType::G3;
+            link.fading = Fading::Bad;
+        }
+    }
+    let log = exp.run(&mut trainer).unwrap();
+    assert_eq!(log.records.len(), 30);
+    let down_bytes: u64 = log.records.iter().map(|r| r.down_bytes).sum();
+    let down_energy: f64 = log.records.iter().map(|r| r.down_energy_j).sum();
+    assert!(down_bytes > 0 && down_energy > 0.0);
+    let max_p95 = log
+        .records
+        .iter()
+        .map(|r| r.staleness_p95)
+        .filter(|v| !v.is_nan())
+        .fold(0.0f64, f64::max);
+    assert!(
+        max_p95 > 0.0,
+        "slow downlink must leave devices training on stale models"
+    );
+    for r in &log.records {
+        if !r.staleness_p50.is_nan() {
+            assert!(r.staleness_p95 >= r.staleness_p50);
+        }
+    }
+    assert!(log.final_acc() > 0.4, "acc={}", log.final_acc());
+
+    // Budget enforcement counts the downloads: an energy budget sized so
+    // that uplink-only training survives longer must stop earlier once the
+    // same budget also pays for (expensive, Bad-3G) downloads.
+    let total_down_energy: f64 =
+        exp.devices.iter().map(|d| d.meter.down_energy_used).sum();
+    assert!(total_down_energy > 0.0);
+    let per_dev_energy = exp.devices[0].meter.energy_used;
+    let mut tight = cfg.clone();
+    tight.energy_budget = per_dev_energy * 0.4;
+    let mut tr2 = NativeLrTrainer::new(&tight);
+    let mut exp2 = Experiment::new(tight.clone(), &tr2);
+    let dl2 = exp2.downlink.as_mut().unwrap();
+    for i in 0..3 {
+        for link in dl2.links_mut(i).links.iter_mut() {
+            link.ty = ChannelType::G3;
+            link.fading = Fading::Bad;
+        }
+    }
+    let short = exp2.run(&mut tr2).unwrap();
+    assert!(
+        short.records.len() < 30,
+        "downlink charges should exhaust the budget early, ran {}",
+        short.records.len()
+    );
+    let mut no_dl = tight;
+    no_dl.downlink = Some(false);
+    let mut tr3 = NativeLrTrainer::new(&no_dl);
+    let mut exp3 = Experiment::new(no_dl, &tr3);
+    let free = exp3.run(&mut tr3).unwrap();
+    assert!(
+        free.records.len() >= short.records.len(),
+        "the same budget without download charges must last at least as long \
+         ({} vs {})",
+        free.records.len(),
+        short.records.len()
+    );
+}
+
+/// Layered downlink under barrier sync: partial broadcasts leave devices
+/// off the exact global, but the mirror-delta encoding is self-correcting,
+/// so training still converges while paying layered (not dense) bytes.
+#[test]
+fn barrier_layered_downlink_trains_with_partial_broadcasts() {
+    let mut cfg = base_cfg(Mechanism::LgcStatic, 20);
+    cfg.mechanism = Mechanism::parse("lgc-downlink").unwrap();
+    let mut trainer = NativeLrTrainer::new(&cfg);
+    let mut exp = Experiment::new(cfg, &trainer);
+    let log = exp.run(&mut trainer).unwrap();
+    assert_eq!(log.records.len(), 20);
+    let nparams = trainer.nparams() as u64;
+    for r in &log.records {
+        assert!(r.down_bytes > 0);
+        assert!(
+            r.down_bytes < 4 * nparams * r.completed,
+            "layered broadcast must ship less than the dense model"
+        );
+    }
+    // Devices are *not* bitwise at the global (partial sync)...
+    let any_gap = exp.devices.iter().any(|d| {
+        d.params_sync
+            .iter()
+            .zip(&exp.server.params)
+            .any(|(a, b)| a.to_bits() != b.to_bits())
+    });
+    assert!(any_gap, "layered downlink should leave a partial-sync gap");
+    // ...yet learning still happens.
+    assert!(log.final_acc() > 0.5, "acc={}", log.final_acc());
+}
