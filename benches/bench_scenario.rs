@@ -1,0 +1,178 @@
+//! Scenario-subsystem bench: event throughput under scenario worlds,
+//! trace-replay vs Markov dynamics at a 10k-client population, and a
+//! handoff-churn sweep.
+//!
+//! ```bash
+//! cargo bench --bench bench_scenario
+//! ```
+//!
+//! Three panels:
+//! 1. **events/s** — the legacy semi-async engine with no scenario vs the
+//!    `stadium-flash-crowd` world (mobility + phase + handoff-drop work on
+//!    top of every tick);
+//! 2. **trace-replay vs Markov at 10k population** — cohort rounds/s with
+//!    the default Markov chain vs the `diurnal` trace world (replay is a
+//!    cursor walk instead of a `choice_weighted` draw per link);
+//! 3. **handoff churn sweep** — move_prob ∈ {0, 0.05, 0.2, 0.5} on a
+//!    two-zone world: handoffs, in-flight drops, and the throughput cost
+//!    of reconfiguration.
+
+use std::time::Instant;
+
+use lgc::bench::Table;
+use lgc::channels::{ChannelType, FadingParams};
+use lgc::config::{ExperimentConfig, Mechanism, Workload};
+use lgc::coordinator::{ExperimentBuilder, NativeLrTrainer};
+use lgc::scenario::{DynamicsKind, ScenarioRegistry, ScenarioSpec, ZoneSpec};
+use lgc::sim::SyncMode;
+
+fn base_cfg(rounds: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        mechanism: Mechanism::LgcStatic,
+        workload: Workload::LrMnist,
+        rounds,
+        devices: 3,
+        samples_per_device: 256,
+        eval_samples: 256,
+        eval_every: 1_000_000, // keep eval out of the timings
+        lr: 0.05,
+        h_fixed: 2,
+        h_max: 4,
+        use_runtime: false,
+        ..ExperimentConfig::default()
+    }
+}
+
+struct RunStats {
+    wall_s: f64,
+    events: u64,
+    records: usize,
+    handoffs: u64,
+    dropped: u64,
+}
+
+fn run(cfg: ExperimentConfig) -> RunStats {
+    let mut trainer = NativeLrTrainer::new(&cfg);
+    let mut exp = ExperimentBuilder::new(cfg)
+        .trainer(&trainer)
+        .build()
+        .expect("build");
+    let t0 = Instant::now();
+    let log = exp.run(&mut trainer).expect("run");
+    RunStats {
+        wall_s: t0.elapsed().as_secs_f64(),
+        events: exp.sim_stats.events,
+        records: log.records.len(),
+        handoffs: exp.sim_stats.handoffs,
+        dropped: exp.sim_stats.dropped_handoff,
+    }
+}
+
+fn two_zone_world(move_prob: f64) -> ScenarioSpec {
+    use ChannelType::{G3, G4, G5};
+    ScenarioSpec {
+        name: format!("churn-{move_prob}"),
+        move_prob,
+        start_spread: true,
+        trace_len: 1024,
+        zones: vec![
+            ZoneSpec {
+                name: "wide".into(),
+                channels: vec![G5, G4, G3],
+                bw_scale: 1.0,
+                fading: FadingParams::default(),
+                dynamics: DynamicsKind::Markov,
+            },
+            ZoneSpec {
+                name: "smallcell".into(),
+                channels: vec![G5, G4],
+                bw_scale: 0.9,
+                fading: FadingParams::default(),
+                dynamics: DynamicsKind::Markov,
+            },
+        ],
+        phases: Vec::new(),
+    }
+}
+
+fn main() {
+    println!("== scenario engine overhead (legacy semi-async, 40 records) ==\n");
+    let mut table = Table::new(&[
+        "world",
+        "records",
+        "events",
+        "events/s",
+        "handoffs",
+        "dropped",
+        "wall (s)",
+    ]);
+    for (label, scenario) in [
+        ("none (oracle world)", None),
+        (
+            "stadium-flash-crowd",
+            Some(ScenarioRegistry::resolve("stadium-flash-crowd").expect("preset")),
+        ),
+    ] {
+        let mut cfg = base_cfg(40);
+        cfg.sync_mode = Some(SyncMode::SemiAsync { buffer_k: 2 });
+        cfg.scenario = scenario;
+        let s = run(cfg);
+        table.row(&[
+            label.to_string(),
+            s.records.to_string(),
+            s.events.to_string(),
+            format!("{:.0}", s.events as f64 / s.wall_s.max(1e-9)),
+            s.handoffs.to_string(),
+            s.dropped.to_string(),
+            format!("{:.3}", s.wall_s),
+        ]);
+    }
+    table.print();
+
+    println!("\n== trace replay vs Markov, population 10k / cohort 64 (3 rounds) ==\n");
+    let mut table = Table::new(&["dynamics", "rounds/s", "handoffs", "wall (s)"]);
+    for (label, scenario) in [
+        ("markov (no scenario)", None),
+        (
+            "diurnal trace replay",
+            Some(ScenarioRegistry::resolve("diurnal").expect("preset")),
+        ),
+    ] {
+        let mut cfg = base_cfg(3);
+        cfg.devices = 8;
+        cfg.population = Some(10_000);
+        cfg.cohort = Some(64);
+        cfg.scenario = scenario;
+        let s = run(cfg);
+        table.row(&[
+            label.to_string(),
+            format!("{:.2}", s.records as f64 / s.wall_s.max(1e-9)),
+            s.handoffs.to_string(),
+            format!("{:.3}", s.wall_s),
+        ]);
+    }
+    table.print();
+
+    println!("\n== handoff churn sweep (two zones, semi-async, 30 records) ==\n");
+    let mut table = Table::new(&[
+        "move_prob",
+        "handoffs",
+        "dropped layers",
+        "events/s",
+        "wall (s)",
+    ]);
+    for move_prob in [0.0, 0.05, 0.2, 0.5] {
+        let mut cfg = base_cfg(30);
+        cfg.sync_mode = Some(SyncMode::SemiAsync { buffer_k: 2 });
+        cfg.scenario = Some(two_zone_world(move_prob));
+        let s = run(cfg);
+        table.row(&[
+            format!("{move_prob}"),
+            s.handoffs.to_string(),
+            s.dropped.to_string(),
+            format!("{:.0}", s.events as f64 / s.wall_s.max(1e-9)),
+            format!("{:.3}", s.wall_s),
+        ]);
+    }
+    table.print();
+}

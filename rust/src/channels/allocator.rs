@@ -46,6 +46,36 @@ impl AllocationPlan {
             .map(|(i, _)| i)
             .collect()
     }
+
+    /// Project the plan onto the channels available in the device's current
+    /// zone (`up[n]` = channel `n` exists): traffic budgeted for a masked
+    /// channel moves to the **first available** channel (fastest-first
+    /// order, so displaced coordinates join the most reliable layer — the
+    /// layered-coding fallback). Returns `None` when every channel is up
+    /// (the zero-cost default) so oracle-path plans are never reallocated.
+    /// The projection preserves the total coordinate budget exactly.
+    ///
+    /// Panics if no channel is up — scenario validation guarantees every
+    /// zone keeps at least one channel, so a handoff can never strand a
+    /// device with zero channels.
+    pub fn project_onto(&self, up: &[bool]) -> Option<AllocationPlan> {
+        debug_assert_eq!(up.len(), self.counts.len(), "one mask entry per channel");
+        if up.iter().all(|&u| u) {
+            return None;
+        }
+        let target = up
+            .iter()
+            .position(|&u| u)
+            .expect("zone validation guarantees at least one available channel");
+        let mut counts = self.counts.clone();
+        for i in 0..counts.len() {
+            if !up.get(i).copied().unwrap_or(true) && counts[i] > 0 {
+                counts[target] += counts[i];
+                counts[i] = 0;
+            }
+        }
+        Some(AllocationPlan { counts })
+    }
 }
 
 /// Project raw per-channel fractions (any reals, e.g. raw DDPG actor output
@@ -126,6 +156,28 @@ mod tests {
         let plan = AllocationPlan { counts: vec![100, 0, 50] };
         assert_eq!(plan.layer_budgets(), vec![100, 50]);
         assert_eq!(plan.layer_channels(), vec![0, 2]);
+    }
+
+    #[test]
+    fn projection_moves_masked_traffic_to_first_up_channel() {
+        let plan = AllocationPlan { counts: vec![100, 50, 25] };
+        // All channels up: no reallocation at all.
+        assert!(plan.project_onto(&[true, true, true]).is_none());
+        // Middle channel vanished: its budget joins channel 0.
+        let p = plan.project_onto(&[true, false, true]).unwrap();
+        assert_eq!(p.counts, vec![150, 0, 25]);
+        assert_eq!(p.total(), plan.total());
+        // Fastest vanished: everything lands on the first surviving link.
+        let p = plan.project_onto(&[false, false, true]).unwrap();
+        assert_eq!(p.counts, vec![0, 0, 175]);
+        assert_eq!(p.total(), plan.total());
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one available channel")]
+    fn projection_rejects_all_masked() {
+        let plan = AllocationPlan { counts: vec![10, 10] };
+        let _ = plan.project_onto(&[false, false]);
     }
 
     #[test]

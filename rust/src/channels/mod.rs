@@ -20,6 +20,7 @@ pub mod allocator;
 
 pub use allocator::{allocate_budget, AllocationPlan};
 
+use crate::scenario::dynamics::ChannelDynamics;
 use crate::util::Rng;
 
 /// Channel technology, with Table-1 energy parameters.
@@ -100,38 +101,87 @@ pub enum Fading {
 }
 
 impl Fading {
-    /// Bandwidth multiplier for the state.
-    pub fn gain(&self) -> f64 {
+    /// Array index of the state (Good 0, Mid 1, Bad 2) into
+    /// [`FadingParams`] tables. The state itself carries no numbers —
+    /// gains and loss probabilities live in the owning link's
+    /// [`FadingParams`] (a bare `Fading` has no way to know which zone's
+    /// constants apply).
+    pub fn index(&self) -> usize {
         match self {
-            Fading::Good => 1.0,
-            Fading::Mid => 0.45,
-            Fading::Bad => 0.12,
+            Fading::Good => 0,
+            Fading::Mid => 1,
+            Fading::Bad => 2,
         }
     }
+}
 
-    /// Probability that a whole transfer is lost in this state (layer-level
-    /// erasure — the premise of layered coding: enhancement layers on shaky
-    /// channels may vanish, the base layer on a good channel survives).
-    pub fn loss_prob(&self) -> f64 {
-        match self {
-            Fading::Good => 0.0,
-            Fading::Mid => 0.03,
-            Fading::Bad => 0.20,
+/// The fading-chain constants, extracted from the formerly hard-coded
+/// `Fading` methods so scenario zones and presets can override them — the
+/// `Default` is the seed's Table-1 chain, bit for bit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FadingParams {
+    /// Bandwidth multiplier per state (Good/Mid/Bad), each in `(0, 1]`.
+    pub gain: [f64; 3],
+    /// Whole-transfer erasure probability per state, each in `[0, 1)`.
+    pub loss: [f64; 3],
+    /// Row-stochastic transition matrix (row = current state).
+    pub transition: [[f64; 3]; 3],
+}
+
+impl Default for FadingParams {
+    fn default() -> Self {
+        // The seed's constants: sticky chain, dwell ~5 rounds (Good row),
+        // Table-1-era gains and loss probabilities.
+        FadingParams {
+            gain: [1.0, 0.45, 0.12],
+            loss: [0.0, 0.03, 0.20],
+            transition: [
+                [0.80, 0.15, 0.05],
+                [0.20, 0.65, 0.15],
+                [0.10, 0.30, 0.60],
+            ],
         }
     }
+}
 
-    /// Row-stochastic transition matrix (sticky chain; dwell ~5 rounds).
-    fn transition(&self, rng: &mut Rng) -> Fading {
-        let rows = match self {
-            Fading::Good => [0.80, 0.15, 0.05],
-            Fading::Mid => [0.20, 0.65, 0.15],
-            Fading::Bad => [0.10, 0.30, 0.60],
-        };
+impl FadingParams {
+    pub fn gain_of(&self, f: Fading) -> f64 {
+        self.gain[f.index()]
+    }
+
+    pub fn loss_of(&self, f: Fading) -> f64 {
+        self.loss[f.index()]
+    }
+
+    /// One chain step from `f` — with default params, the exact RNG draw
+    /// sequence of the frozen oracle (one `choice_weighted` per step).
+    pub fn step(&self, f: Fading, rng: &mut Rng) -> Fading {
+        let rows = self.transition[f.index()];
         match rng.choice_weighted(&rows) {
             0 => Fading::Good,
             1 => Fading::Mid,
             _ => Fading::Bad,
         }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, &g) in self.gain.iter().enumerate() {
+            if !(g > 0.0 && g <= 1.0) {
+                return Err(format!("fading gain[{i}] = {g} not in (0, 1]"));
+            }
+        }
+        for (i, &l) in self.loss.iter().enumerate() {
+            if !(0.0..1.0).contains(&l) {
+                return Err(format!("fading loss[{i}] = {l} not in [0, 1)"));
+            }
+        }
+        for (i, row) in self.transition.iter().enumerate() {
+            let sum: f64 = row.iter().sum();
+            if row.iter().any(|&p| p < 0.0) || (sum - 1.0).abs() > 1e-6 {
+                return Err(format!("fading transition row {i} {row:?} is not stochastic"));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -176,27 +226,131 @@ impl TransferCost {
     }
 }
 
-/// One uplink channel instance of a device, with dynamic fading state.
+/// One uplink channel instance of a device, with dynamic condition state.
+///
+/// What advances the condition is the [`ChannelDynamics`] seam: the default
+/// [`ChannelDynamics::Markov`] chain over the link's [`FadingParams`]
+/// (bit-for-bit the frozen oracle with default params), or a
+/// [`ChannelDynamics::Trace`] replay installed by a scenario zone. The
+/// scenario subsystem additionally controls `up` (does this channel exist
+/// in the device's current zone?) and `bw_scale` (zone/phase congestion
+/// multiplier); both are inert at their defaults (`true`, `1.0`).
 #[derive(Clone, Debug)]
 pub struct Link {
     pub ty: ChannelType,
     pub fading: Fading,
+    /// Fading-chain constants (scenario zones override; Table-1 default).
+    pub params: FadingParams,
+    dynamics: ChannelDynamics,
+    /// Zone/phase bandwidth multiplier in `(0, 1]`.
+    bw_scale: f64,
+    /// Phase multiplier on the dynamics source's loss probability (applies
+    /// to Markov *and* trace dynamics; 1.0 = untouched).
+    loss_scale: f64,
+    /// Whether the channel exists in the device's current zone. A masked
+    /// link reports zero effective bandwidth (the DRL state sees the mask)
+    /// and never carries traffic (plans are projected off it).
+    up: bool,
     rng: Rng,
 }
 
 impl Link {
     pub fn new(ty: ChannelType, seed_rng: &Rng, tag: u64) -> Self {
-        Link { ty, fading: Fading::Good, rng: seed_rng.fork(tag) }
+        Link {
+            ty,
+            fading: Fading::Good,
+            params: FadingParams::default(),
+            dynamics: ChannelDynamics::Markov,
+            bw_scale: 1.0,
+            loss_scale: 1.0,
+            up: true,
+            rng: seed_rng.fork(tag),
+        }
     }
 
-    /// Advance fading by one round (call once per FL round).
+    /// Advance the link condition by one round/tick. Markov dynamics make
+    /// exactly one `choice_weighted` draw from the link's private stream
+    /// (the oracle sequence); trace replay advances its cursor and leaves
+    /// the stream untouched.
     pub fn step_round(&mut self) {
-        self.fading = self.fading.transition(&mut self.rng);
+        match &mut self.dynamics {
+            ChannelDynamics::Markov => {
+                self.fading = self.params.step(self.fading, &mut self.rng);
+            }
+            ChannelDynamics::Trace(tr) => tr.advance(),
+        }
     }
 
-    /// Effective bandwidth right now (MB/s).
+    /// Current bandwidth multiplier from the dynamics source.
+    fn gain(&self) -> f64 {
+        match &self.dynamics {
+            ChannelDynamics::Markov => self.params.gain_of(self.fading),
+            ChannelDynamics::Trace(tr) => tr.bw(),
+        }
+    }
+
+    /// Current whole-transfer erasure probability, with the phase loss
+    /// scale applied uniformly to both dynamics sources. The scale is only
+    /// multiplied in when it differs from 1.0, so the default path stays
+    /// bitwise on the raw constants (and user-specified probabilities are
+    /// never clamped without a phase asking for it).
+    fn current_loss_prob(&self) -> f64 {
+        let raw = match &self.dynamics {
+            ChannelDynamics::Markov => self.params.loss_of(self.fading),
+            ChannelDynamics::Trace(tr) => tr.loss(),
+        };
+        if self.loss_scale == 1.0 {
+            raw
+        } else {
+            (raw * self.loss_scale).clamp(0.0, 0.95)
+        }
+    }
+
+    /// Whether the channel exists in the device's current zone.
+    pub fn is_up(&self) -> bool {
+        self.up
+    }
+
+    /// Mask / unmask the channel (scenario handoff).
+    pub fn set_up(&mut self, up: bool) {
+        self.up = up;
+    }
+
+    /// Current zone/phase bandwidth multiplier.
+    pub fn bw_scale(&self) -> f64 {
+        self.bw_scale
+    }
+
+    /// Install a zone profile in one shot (scenario handoff / phase):
+    /// mask, fading constants, dynamics source, bandwidth scale and loss
+    /// scale. The fading *state* and the link's RNG stream are preserved.
+    pub fn apply_profile(
+        &mut self,
+        up: bool,
+        params: FadingParams,
+        dynamics: ChannelDynamics,
+        bw_scale: f64,
+        loss_scale: f64,
+    ) {
+        assert!(bw_scale > 0.0 && bw_scale <= 1.0, "bw_scale {bw_scale} not in (0, 1]");
+        assert!(
+            loss_scale > 0.0 && loss_scale.is_finite(),
+            "loss_scale {loss_scale} must be finite and > 0"
+        );
+        self.up = up;
+        self.params = params;
+        self.dynamics = dynamics;
+        self.bw_scale = bw_scale;
+        self.loss_scale = loss_scale;
+    }
+
+    /// Effective bandwidth right now (MB/s); zero while the channel is
+    /// masked out of the device's zone.
     pub fn effective_bandwidth(&self) -> f64 {
-        self.ty.bandwidth_mb_s() * self.fading.gain()
+        if !self.up {
+            return 0.0;
+        }
+        self.ty.bandwidth_mb_s() * self.gain() * self.bw_scale
     }
 
     /// Sample the cost of uploading `bytes` over this link now.
@@ -205,6 +359,7 @@ impl Link {
         if bytes == 0 {
             return TransferCost::zero();
         }
+        debug_assert!(self.up, "transfer over a channel masked out of the zone");
         let mb = bytes as f64 / (1024.0 * 1024.0);
         let e_per_mb = self
             .rng
@@ -227,7 +382,7 @@ impl Link {
         if bytes == 0 {
             return (cost, true);
         }
-        let delivered = self.rng.uniform() >= self.fading.loss_prob();
+        let delivered = self.rng.uniform() >= self.current_loss_prob();
         (cost, delivered)
     }
 
@@ -306,7 +461,8 @@ impl DeviceChannels {
         (wall, costs)
     }
 
-    /// Index of the currently fastest link.
+    /// Index of the currently fastest link. Masked links report zero
+    /// bandwidth, so they are never chosen while any channel is up.
     pub fn fastest(&self) -> usize {
         let mut best = 0;
         for (i, l) in self.links.iter().enumerate() {
@@ -315,6 +471,22 @@ impl DeviceChannels {
             }
         }
         best
+    }
+
+    /// Whether every channel exists in the device's current zone (the
+    /// zero-cost default — plan projection is skipped entirely).
+    pub fn all_up(&self) -> bool {
+        self.links.iter().all(Link::is_up)
+    }
+
+    /// Index of the first (fastest-first, most reliable) available link.
+    pub fn first_up(&self) -> Option<usize> {
+        self.links.iter().position(Link::is_up)
+    }
+
+    /// Per-link availability mask, aligned with `links`.
+    pub fn up_mask(&self) -> Vec<bool> {
+        self.links.iter().map(Link::is_up).collect()
     }
 }
 
@@ -432,5 +604,122 @@ mod tests {
     fn money_ordering() {
         assert!(ChannelType::G5.money_per_mb() > ChannelType::G4.money_per_mb());
         assert!(ChannelType::G4.money_per_mb() > ChannelType::G3.money_per_mb());
+    }
+
+    #[test]
+    fn fading_params_default_matches_legacy_constants() {
+        let p = FadingParams::default();
+        assert_eq!(p.gain_of(Fading::Good), 1.0);
+        assert_eq!(p.gain_of(Fading::Mid), 0.45);
+        assert_eq!(p.gain_of(Fading::Bad), 0.12);
+        assert_eq!(p.loss_of(Fading::Good), 0.0);
+        assert_eq!(p.loss_of(Fading::Mid), 0.03);
+        assert_eq!(p.loss_of(Fading::Bad), 0.20);
+        p.validate().unwrap();
+        let mut bad = p;
+        bad.transition[0] = [0.5, 0.0, 0.0];
+        assert!(bad.validate().is_err());
+        bad = p;
+        bad.gain[1] = 0.0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn masked_link_reports_zero_bandwidth_and_is_skipped_by_fastest() {
+        let rng = Rng::new(12);
+        let mut ch = DeviceChannels::new(
+            &[ChannelType::G5, ChannelType::G4, ChannelType::G3],
+            &rng,
+            0,
+        );
+        assert!(ch.all_up());
+        assert_eq!(ch.first_up(), Some(0));
+        ch.links[0].set_up(false);
+        assert!(!ch.all_up());
+        assert_eq!(ch.links[0].effective_bandwidth(), 0.0);
+        assert_eq!(ch.fastest(), 1, "masked 5G must lose to live 4G");
+        assert_eq!(ch.first_up(), Some(1));
+        assert_eq!(ch.up_mask(), vec![false, true, true]);
+        // Zero bytes over a masked link still cost nothing (silent channel).
+        assert_eq!(ch.links[0].transfer(0), TransferCost::zero());
+    }
+
+    #[test]
+    fn trace_dynamics_drive_bandwidth_without_touching_the_rng_stream() {
+        use crate::scenario::dynamics::{diurnal_trace, TraceReplay};
+        let rng = Rng::new(13);
+        let mut markov = Link::new(ChannelType::G4, &rng, 5);
+        let mut traced = Link::new(ChannelType::G4, &rng, 5); // same stream
+        let pts = diurnal_trace(16, 16, 0.25);
+        traced.apply_profile(
+            true,
+            FadingParams::default(),
+            ChannelDynamics::Trace(TraceReplay::new(pts.clone(), 0)),
+            1.0,
+            1.0,
+        );
+        let mut bws = std::collections::BTreeSet::new();
+        for _ in 0..16 {
+            traced.step_round();
+            bws.insert(traced.effective_bandwidth().to_bits());
+        }
+        assert!(bws.len() > 4, "diurnal trace should sweep bandwidths");
+        // The traced link never consumed its RNG: a transfer drawn now
+        // matches the Markov twin's first transfer draw exactly.
+        let a = traced.transfer(1 << 20);
+        let b = markov.transfer(1 << 20);
+        assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+    }
+
+    #[test]
+    fn bw_scale_throttles_effective_bandwidth() {
+        let rng = Rng::new(14);
+        let mut link = Link::new(ChannelType::G5, &rng, 0);
+        let full = link.effective_bandwidth();
+        link.apply_profile(true, FadingParams::default(), ChannelDynamics::Markov, 0.5, 1.0);
+        assert!((link.effective_bandwidth() - 0.5 * full).abs() < 1e-12);
+        assert_eq!(link.bw_scale(), 0.5);
+    }
+
+    #[test]
+    fn loss_scale_applies_to_both_markov_and_trace_dynamics() {
+        use crate::scenario::dynamics::{TracePoint, TraceReplay};
+        let rng = Rng::new(21);
+        // Markov: Bad-state loss 0.20 doubled -> ~0.40 observed loss rate.
+        let mut link = Link::new(ChannelType::G4, &rng, 0);
+        link.apply_profile(
+            true,
+            FadingParams::default(),
+            ChannelDynamics::Markov,
+            1.0,
+            2.0,
+        );
+        link.fading = Fading::Bad;
+        let lost = (0..2000)
+            .filter(|_| !link.transfer_lossy(1 << 16).1)
+            .count();
+        assert!(
+            (lost as f64 / 2000.0 - 0.40).abs() < 0.05,
+            "scaled Markov loss rate: {lost}/2000"
+        );
+        // Trace: a constant-loss trace scales the same way (the stadium
+        // preset's scripted loss spike must reach its trace-driven zone).
+        let pts: std::sync::Arc<[TracePoint]> =
+            vec![TracePoint { bw: 0.5, loss: 0.10 }].into();
+        let mut traced = Link::new(ChannelType::G4, &rng, 1);
+        traced.apply_profile(
+            true,
+            FadingParams::default(),
+            ChannelDynamics::Trace(TraceReplay::new(pts, 0)),
+            1.0,
+            3.0,
+        );
+        let lost = (0..2000)
+            .filter(|_| !traced.transfer_lossy(1 << 16).1)
+            .count();
+        assert!(
+            (lost as f64 / 2000.0 - 0.30).abs() < 0.05,
+            "scaled trace loss rate: {lost}/2000"
+        );
     }
 }

@@ -11,6 +11,7 @@ pub use toml::{Document, Value};
 use crate::channels::ChannelType;
 use crate::downlink::DownlinkCompression;
 use crate::population::SamplerKind;
+use crate::scenario::{ScenarioRegistry, ScenarioSpec};
 use crate::sim::SyncMode;
 
 /// Which FL mechanism to run — a *name* that the coordinator's mechanism
@@ -213,6 +214,13 @@ pub struct ExperimentConfig {
     /// tariff table (operators price downlink data differently; energy is
     /// charged unscaled — the radio's receive chain draws what it draws).
     pub downlink_tariff_scale: f64,
+    /// Network scenario: trace-driven channel dynamics, zone mobility &
+    /// handoff, and the scripted phase timeline. Resolved from (exactly one
+    /// of) the `scenario = "preset"` key, `scenario_file = "world.toml"`,
+    /// or an inline `[scenario]` tree; `scenario = "none"` forces it off.
+    /// `None` (default) is the static single-world oracle — every engine
+    /// stays bit-for-bit on the frozen `step_round` reference.
+    pub scenario: Option<ScenarioSpec>,
     /// Server-side streaming aggregation: fold each upload into the running
     /// aggregate on arrival (O(model) server state) instead of buffering
     /// every decoded update until aggregation. Applies to the population
@@ -293,6 +301,7 @@ impl Default for ExperimentConfig {
             downlink: None,
             downlink_compression: None,
             downlink_tariff_scale: 1.0,
+            scenario: None,
             streaming: false,
             drl: DrlConfig::default(),
         }
@@ -431,6 +440,7 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_f64("", "downlink_tariff_scale") {
             cfg.downlink_tariff_scale = v;
         }
+        cfg.scenario = resolve_scenario(doc)?;
         // [drl]
         if let Some(v) = doc.get_f64("drl", "actor_lr") {
             cfg.drl.actor_lr = v;
@@ -534,8 +544,48 @@ impl ExperimentConfig {
                 self.downlink_tariff_scale
             ));
         }
+        if let Some(spec) = &self.scenario {
+            spec.validate(&self.channel_types)
+                .map_err(|e| format!("scenario `{}`: {e}", spec.name))?;
+        }
         Ok(())
     }
+}
+
+/// Resolve the scenario from a config document. Exactly one source may be
+/// used: the `scenario = "preset"` key (registry lookup; `"none"`/`"off"`
+/// force-disables), `scenario_file = "world.toml"` (that file's
+/// `[scenario]` tree), or an inline `[scenario]` tree in the same
+/// document — mixing them is an error rather than a silent precedence.
+fn resolve_scenario(doc: &Document) -> Result<Option<ScenarioSpec>, String> {
+    let inline = ScenarioSpec::from_document(doc)?;
+    let named = doc.get_str("", "scenario");
+    let file = doc.get_str("", "scenario_file");
+    if let Some(name) = named {
+        if matches!(name.to_ascii_lowercase().as_str(), "none" | "off") {
+            return Ok(None);
+        }
+        if file.is_some() || inline.is_some() {
+            return Err(
+                "set only one of scenario, scenario_file, or an inline [scenario] tree".into(),
+            );
+        }
+        return ScenarioRegistry::resolve(name).map(Some);
+    }
+    if let Some(path) = file {
+        if inline.is_some() {
+            return Err(
+                "set only one of scenario, scenario_file, or an inline [scenario] tree".into(),
+            );
+        }
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read scenario_file {path}: {e}"))?;
+        let fdoc = Document::parse(&text).map_err(|e| format!("scenario_file {path}: {e}"))?;
+        return ScenarioSpec::from_document(&fdoc)?
+            .map(Some)
+            .ok_or_else(|| format!("scenario_file {path} has no [scenario] tree"));
+    }
+    Ok(inline)
 }
 
 /// Apply `--key=value` / `--section.key=value` overrides onto a document.
@@ -694,6 +744,40 @@ mod tests {
             "downlink_compression = \"zip\"",
             "downlink_tariff_scale = 0.0",
             "downlink_tariff_scale = -2.0",
+        ] {
+            let doc = Document::parse(bad).unwrap();
+            assert!(ExperimentConfig::from_document(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn scenario_keys_parse() {
+        // Preset by name.
+        let doc = Document::parse("scenario = \"stadium-flash-crowd\"\n").unwrap();
+        let cfg = ExperimentConfig::from_document(&doc).unwrap();
+        let spec = cfg.scenario.expect("preset resolved");
+        assert_eq!(spec.name, "stadium-flash-crowd");
+        assert_eq!(spec.zones.len(), 2);
+        // Explicit off.
+        let doc = Document::parse("scenario = \"none\"\n").unwrap();
+        assert!(ExperimentConfig::from_document(&doc).unwrap().scenario.is_none());
+        // Inline tree.
+        let doc = Document::parse(
+            "[scenario]\nname = \"inline\"\n[scenario.zone.0]\nchannels = [\"5g\", \"3g\"]\n",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.scenario.unwrap().name, "inline");
+        // Unset -> None (the oracle world).
+        assert!(ExperimentConfig::from_document(&Document::new()).unwrap().scenario.is_none());
+        for bad in [
+            "scenario = \"warp\"",
+            // Mixing sources is an error, not a precedence.
+            "scenario = \"diurnal\"\n[scenario.zone.0]\nchannels = [\"5g\"]",
+            "scenario = \"diurnal\"\nscenario_file = \"x.toml\"",
+            "scenario_file = \"/definitely/not/here.toml\"",
+            // Inline zone referencing a channel the experiment lacks.
+            "channels = [\"3g\"]\n[scenario.zone.0]\nchannels = [\"5g\"]\nname = \"x\"",
         ] {
             let doc = Document::parse(bad).unwrap();
             assert!(ExperimentConfig::from_document(&doc).is_err(), "{bad}");

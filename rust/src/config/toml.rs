@@ -125,6 +125,30 @@ impl Document {
             if line.is_empty() {
                 continue;
             }
+            if let Some(name) = line.strip_prefix("[[") {
+                // Array-of-tables: `[[scenario.phase]]` appends a fresh
+                // numbered section `scenario.phase.<k>` in document order,
+                // readable back via `Document::array_sections`.
+                let name = name.strip_suffix("]]").ok_or_else(|| ParseError {
+                    line: lineno,
+                    msg: "unterminated [[array]] header".into(),
+                })?;
+                let base = name.trim();
+                if base.is_empty() {
+                    return Err(ParseError { line: lineno, msg: "empty section name".into() });
+                }
+                // Next index = one past the highest existing number (not
+                // the count), so an explicit `[base.N]` with a gap can
+                // never silently merge with a later `[[base]]` entry.
+                let idx = doc
+                    .array_sections(base)
+                    .last()
+                    .map(|(n, _)| n + 1)
+                    .unwrap_or(0);
+                section = format!("{base}.{idx}");
+                doc.touch_section(&section);
+                continue;
+            }
             if let Some(name) = line.strip_prefix('[') {
                 let name = name.strip_suffix(']').ok_or_else(|| ParseError {
                     line: lineno,
@@ -198,6 +222,22 @@ impl Document {
         self.order
             .iter()
             .filter_map(|n| self.sections.get(n).map(|s| (n.as_str(), s)))
+    }
+
+    /// The numbered sections `{prefix}.<n>`, sorted by `n` — the read side
+    /// of `[[prefix]]` array-of-tables (explicit `[prefix.2]` headers land
+    /// in the same namespace).
+    pub fn array_sections(&self, prefix: &str) -> Vec<(usize, &BTreeMap<String, Value>)> {
+        let mut out: Vec<(usize, &BTreeMap<String, Value>)> = self
+            .sections
+            .iter()
+            .filter_map(|(name, kvs)| {
+                let rest = name.strip_prefix(prefix)?.strip_prefix('.')?;
+                rest.parse::<usize>().ok().map(|n| (n, kvs))
+            })
+            .collect();
+        out.sort_by_key(|(n, _)| *n);
+        out
     }
 }
 
@@ -376,6 +416,42 @@ layers = [655, 2621, 9830]
         let printed = doc.to_string();
         let doc2 = Document::parse(&printed).unwrap();
         assert_eq!(doc, doc2);
+    }
+
+    #[test]
+    fn array_of_tables_parse_and_read_back() {
+        let text = "[scenario]\nname = \"x\"\n\
+                    [[scenario.phase]]\nat_s = 10.0\nzone = 1\n\
+                    [[scenario.phase]]\nat_s = 20.0\n\
+                    [scenario.zone.0]\nchannels = [\"5g\"]\n";
+        let doc = Document::parse(text).unwrap();
+        let phases = doc.array_sections("scenario.phase");
+        assert_eq!(phases.len(), 2);
+        assert_eq!(phases[0].0, 0);
+        assert_eq!(phases[0].1.get("at_s").and_then(Value::as_f64), Some(10.0));
+        assert_eq!(phases[1].1.get("at_s").and_then(Value::as_f64), Some(20.0));
+        // Explicit numbered headers land in the same namespace.
+        assert_eq!(doc.array_sections("scenario.zone").len(), 1);
+        // A [[...]] entry after an explicit numbered header continues past
+        // the highest number instead of merging into it.
+        let mixed = Document::parse(
+            "[p.1]\na = 1\n[[p]]\na = 2\n",
+        )
+        .unwrap();
+        let ps = mixed.array_sections("p");
+        assert_eq!(ps.len(), 2);
+        assert_eq!(ps[0].0, 1);
+        assert_eq!(ps[1].0, 2);
+        assert_eq!(ps[0].1.get("a").and_then(Value::as_i64), Some(1));
+        assert_eq!(ps[1].1.get("a").and_then(Value::as_i64), Some(2));
+        // `[[x]` unterminated is an error, and the mangled form round-trips.
+        assert!(Document::parse("[[oops]").is_err());
+        let printed = doc.to_string();
+        let doc2 = Document::parse(&printed).unwrap();
+        assert_eq!(doc, doc2);
+        // Unrelated sections don't leak into the array view.
+        assert!(doc.array_sections("scenario").iter().all(|(_, kvs)| !kvs.is_empty()));
+        assert_eq!(doc.array_sections("nope").len(), 0);
     }
 
     #[test]

@@ -37,6 +37,7 @@ use crate::downlink::{Downlink, DownlinkCompression};
 use crate::drl::DeviceAgent;
 use crate::population::{self, ClientSampler, DeviceSpec, Population, SamplerKind};
 use crate::resources::{ComputeCostModel, ResourceMeter};
+use crate::scenario::{Scenario, ScenarioSpec};
 use crate::sim::{SimStats, SyncMode};
 use crate::util::Rng;
 
@@ -126,6 +127,13 @@ impl<'a> ExperimentBuilder<'a> {
     /// Pin the server sync mode (wins over the mechanism preset's default).
     pub fn sync_mode(mut self, mode: SyncMode) -> Self {
         self.cfg.sync_mode = Some(mode);
+        self
+    }
+
+    /// Install a network scenario spec directly (tests / programmatic
+    /// worlds) — equivalent to setting `cfg.scenario`.
+    pub fn scenario(mut self, spec: ScenarioSpec) -> Self {
+        self.cfg.scenario = Some(spec);
         self
     }
 
@@ -291,7 +299,7 @@ impl<'a> ExperimentBuilder<'a> {
         // stream, plus (legacy engines) one init-model mirror per device
         // for full-fidelity delta encoding. Population mode runs
         // accounting-only (see downlink module docs), so no mirrors.
-        let downlink = if downlink_enabled {
+        let mut downlink = if downlink_enabled {
             let mirrors = if population_mode {
                 Vec::new()
             } else {
@@ -308,6 +316,29 @@ impl<'a> ExperimentBuilder<'a> {
             ))
         } else {
             None
+        };
+        // The network scenario: forked-stream runtime plus the initial zone
+        // configuration for every pre-materialized channel bundle (uplink
+        // and downlink). Population-mode clients pick their configuration
+        // up at materialization instead.
+        let mut devices = devices;
+        let scenario = match &cfg.scenario {
+            Some(spec) => {
+                let sc = Scenario::new(spec.clone(), n_clients, &cfg.channel_types, &rng)
+                    .map_err(|e| anyhow!("invalid scenario: {e}"))?;
+                for dev in &mut devices {
+                    sc.configure(dev.id, &mut dev.channels);
+                }
+                if !population_mode {
+                    if let Some(dl) = downlink.as_mut() {
+                        for id in 0..n_clients {
+                            sc.configure(id, dl.links_mut(id));
+                        }
+                    }
+                }
+                Some(sc)
+            }
+            None => None,
         };
         let server = Server::with_aggregator(init, aggregator_f(&ctx));
 
@@ -333,6 +364,7 @@ impl<'a> ExperimentBuilder<'a> {
             sync_gap,
             sync_mode,
             downlink,
+            scenario,
             sim_stats: SimStats::default(),
             rng,
             total_time_s: 0.0,

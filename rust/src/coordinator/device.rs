@@ -248,13 +248,41 @@ impl Device {
         sizes
     }
 
+    /// Project `plan` onto the channels that exist in the device's current
+    /// scenario zone. `None` when every channel is up — the zero-cost
+    /// default, so oracle-path plans are never touched. See
+    /// [`AllocationPlan::project_onto`].
+    fn project_plan(&self, plan: &AllocationPlan) -> Option<AllocationPlan> {
+        if self.channels.all_up() {
+            return None;
+        }
+        plan.project_onto(&self.channels.up_mask())
+    }
+
+    /// The per-layer channel mapping an upload under `plan` actually uses —
+    /// `plan.layer_channels()` after the same zone projection
+    /// [`Device::compress_and_upload`] / [`Device::upload_lossy`] apply
+    /// internally. Engines scheduling per-layer arrival events must use
+    /// this, not the raw plan's mapping, or a scenario mask would leave
+    /// them pointing at silent channels with zero transfer times.
+    pub fn effective_layer_channels(&self, plan: &AllocationPlan) -> Vec<usize> {
+        match self.project_plan(plan) {
+            Some(p) => p.layer_channels(),
+            None => plan.layer_channels(),
+        }
+    }
+
     /// Compress the net progress into layers (lines 8–11) and charge the
     /// channels for the upload (line 10). `plan` maps layer budgets to
-    /// channels; layer c rides channel `plan.layer_channels()[c]`.
+    /// channels; layer c rides channel `plan.layer_channels()[c]`. Budgets
+    /// on channels masked out of the device's zone are first projected onto
+    /// the surviving channels.
     pub fn compress_and_upload(
         &mut self,
         plan: &AllocationPlan,
     ) -> (LgcUpdate, f64, Vec<TransferCost>) {
+        let projected = self.project_plan(plan);
+        let plan = projected.as_ref().unwrap_or(plan);
         let update = self.compress_progress(plan);
         let sizes = self.upload_sizes(&update, plan);
         let (wall, costs) = self.channels.parallel_upload(&sizes);
@@ -274,6 +302,8 @@ impl Device {
     /// `sync`ed to the next broadcast model even if *everything* was lost,
     /// or the restituted mass would be double-counted next round.
     pub fn upload_lossy(&mut self, plan: &AllocationPlan) -> UploadOutcome {
+        let projected = self.project_plan(plan);
+        let plan = projected.as_ref().unwrap_or(plan);
         let dim = self.params_hat.len();
         let update = self.compress_progress(plan);
         let sizes = self.upload_sizes(&update, plan);
@@ -292,11 +322,7 @@ impl Device {
                 // delivered; add the shipped values back so
                 // e' + delivered == u exactly (correct for both the
                 // zeroing-based and the residual-based absorb).
-                if let Some(err) = self.compressor.error_memory_mut() {
-                    for (&i, &v) in layer.indices.iter().zip(&layer.values) {
-                        err.restitute(i as usize, v);
-                    }
-                }
+                self.restitute_layer(&layer);
                 transfers.push(LayerTransfer { channel: ch, delivered: false });
                 lost += 1;
             }
@@ -362,11 +388,22 @@ impl Device {
     /// compressors without error memory (dense baselines genuinely lose the
     /// payload, same as their erasure path).
     pub fn restitute_update(&mut self, update: &LgcUpdate) {
+        for layer in &update.layers {
+            self.restitute_layer(layer);
+        }
+    }
+
+    /// Restitute a single already-compressed layer into the error memory —
+    /// the per-layer form of [`Device::restitute_update`], used when a
+    /// scenario handoff removes the channel an in-flight layer was riding
+    /// (the association is torn down, so the server never receives it; the
+    /// mass is delayed into the next upload, never destroyed).
+    pub fn restitute_layer(&mut self, layer: &Layer) {
+        let dim = self.params_hat.len();
         if let Some(err) = self.compressor.error_memory_mut() {
-            for layer in &update.layers {
-                for (&i, &v) in layer.indices.iter().zip(&layer.values) {
-                    err.restitute(i as usize, v);
-                }
+            err.ensure_dim(dim);
+            for (&i, &v) in layer.indices.iter().zip(&layer.values) {
+                err.restitute(i as usize, v);
             }
         }
     }
@@ -562,6 +599,37 @@ mod tests {
         dev.apply_downlink_layer(&layer);
         dev.apply_downlink_layer(&layer); // saturates at zero, no panic
         assert_eq!(dev.sync_state.pending_layers, 0);
+    }
+
+    #[test]
+    fn masked_channel_traffic_projects_onto_surviving_links() {
+        // A zone without 3G: the plan's 3G budget must ride the first
+        // surviving channel instead, and the masked link stays silent.
+        let mut dev = mk_device(1000);
+        for (i, p) in dev.params_hat.iter_mut().enumerate() {
+            *p = (i as f32 + 1.0) * 1e-3;
+        }
+        dev.channels.links[2].set_up(false); // 3G vanished in a handoff
+        let plan = AllocationPlan { counts: vec![10, 20, 40] };
+        let (update, _, costs) = dev.compress_and_upload(&plan);
+        assert_eq!(update.total_nnz(), 70, "projection preserves the budget");
+        assert_eq!(update.layers.len(), 2, "two surviving channels, two layers");
+        assert_eq!(costs[2].bytes, 0, "masked channel carries nothing");
+        assert!(costs[0].bytes > 0);
+        // Lossy path projects identically.
+        dev.reset_compressor();
+        let outcome = dev.upload_lossy(&plan);
+        assert!(outcome.transfers.iter().all(|t| t.channel != 2));
+    }
+
+    #[test]
+    fn restitute_layer_returns_mass_to_error_memory() {
+        let mut dev = mk_device(100);
+        let layer = Layer { indices: vec![1, 50], values: vec![0.5, -0.25] };
+        dev.restitute_layer(&layer);
+        let mem = dev.error_memory().unwrap().memory();
+        assert_eq!(mem[1], 0.5);
+        assert_eq!(mem[50], -0.25);
     }
 
     #[test]

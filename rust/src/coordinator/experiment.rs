@@ -32,6 +32,7 @@ use crate::drl::DeviceAgent;
 use crate::metrics::{percentile, RoundRecord, RunLog};
 use crate::population::{ClientSampler, Population};
 use crate::resources::ResourceMeter;
+use crate::scenario::Scenario;
 use crate::sim::{SimStats, SyncMode};
 use crate::util::Rng;
 
@@ -65,6 +66,10 @@ pub struct Experiment {
     /// mechanism-preset default > disabled). `None` keeps the legacy
     /// free-instant-broadcast semantics, bit-for-bit.
     pub downlink: Option<Downlink>,
+    /// The live network scenario (trace-driven dynamics, mobility &
+    /// handoff), built from `cfg.scenario`. `None` keeps the static
+    /// single-world oracle semantics, bit-for-bit.
+    pub scenario: Option<Scenario>,
     /// Event-engine counters from the most recent [`Experiment::run`].
     pub sim_stats: SimStats,
     pub(super) rng: Rng,
@@ -114,11 +119,17 @@ impl Experiment {
     /// [`Experiment::sync_mode`]; returns the per-round log (one record per
     /// round under barrier, one per server aggregation in the async modes).
     pub fn run(&mut self, trainer: &mut dyn LocalTrainer) -> Result<RunLog> {
-        let mut log = RunLog::new(&format!(
+        // The scenario suffix keeps `compare` output and CSV names
+        // distinguishable across worlds, not just mechanisms.
+        let mut name = format!(
             "{}-{}",
             self.cfg.mechanism.name(),
             self.cfg.workload.model_name()
-        ));
+        );
+        if let Some(sc) = &self.scenario {
+            name.push_str(&format!("+{}", sc.name()));
+        }
+        let mut log = RunLog::new(&name);
         crate::sim::engine::run(self, trainer, &mut log)?;
         Ok(log)
     }
@@ -139,6 +150,11 @@ impl Experiment {
         assert!(
             self.downlink.is_none(),
             "step_round is the frozen pre-downlink reference oracle; downlink-enabled \
+             experiments run the event engine via Experiment::run"
+        );
+        assert!(
+            self.scenario.is_none(),
+            "step_round is the frozen static-world reference oracle; scenario-enabled \
              experiments run the event engine via Experiment::run"
         );
         let m = self.devices.len();
@@ -284,6 +300,9 @@ impl Experiment {
             down_bytes: 0,
             down_energy_j: 0.0,
             down_money: 0.0,
+            handoffs: 0,
+            dropped_handoff: 0,
+            zone_p50: 0.0,
         }))
     }
 
@@ -309,6 +328,19 @@ impl Experiment {
         }
         if let Some(dl) = &mut self.downlink {
             dl.reset_episode(&init);
+        }
+        if let Some(sc) = &mut self.scenario {
+            sc.reset_episode();
+            // Devices return to their initial zone's channel configuration
+            // (the downlink bundles too); fading chains keep their streams.
+            for dev in &mut self.devices {
+                sc.configure(dev.id, &mut dev.channels);
+            }
+            if let Some(dl) = &mut self.downlink {
+                for id in 0..self.agents.len() {
+                    sc.configure(id, dl.links_mut(id));
+                }
+            }
         }
         for dev in &mut self.devices {
             dev.sync_state = Default::default();

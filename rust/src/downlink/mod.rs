@@ -258,16 +258,32 @@ impl Downlink {
         }
     }
 
-    /// Charge `sizes[c]` bytes onto device `id`'s downlink link `c`
-    /// (layer c rides link c; the channel list is fastest-first, so the
-    /// base layer takes the most reliable link — the same layered-coding
-    /// mapping as the uplink). Returns (wall, per-link costs) with money
-    /// tariff-scaled, and folds the totals into the window.
+    /// Downlink link that carries layer `c` of a broadcast to device `id`:
+    /// positional (layer c rides link c; the channel list is fastest-first,
+    /// so the base layer takes the most reliable link — the same
+    /// layered-coding mapping as the uplink), redirected to the first
+    /// available link when the positional one is masked out of the
+    /// device's current scenario zone (the uplink's projection rule; zone
+    /// validation guarantees at least one live link). The single mapping
+    /// shared by cost charging and arrival scheduling, so they cannot
+    /// drift apart.
+    fn layer_link(&self, id: usize, c: usize) -> usize {
+        let links = &self.links[id];
+        let tgt = c.min(links.len() - 1);
+        if links.links[tgt].is_up() {
+            tgt
+        } else {
+            links.first_up().unwrap_or(0)
+        }
+    }
+
+    /// Charge `sizes[c]` bytes onto device `id`'s downlink link
+    /// [`Downlink::layer_link`]`(id, c)`. Returns (wall, per-link costs)
+    /// with money tariff-scaled, and folds the totals into the window.
     fn charge(&mut self, id: usize, sizes: &[u64]) -> (f64, Vec<TransferCost>) {
-        let nlinks = self.links[id].len();
-        let mut per_link = vec![0u64; nlinks];
+        let mut per_link = vec![0u64; self.links[id].len()];
         for (c, &b) in sizes.iter().enumerate() {
-            per_link[c.min(nlinks - 1)] += b;
+            per_link[self.layer_link(id, c)] += b;
         }
         let (wall, mut costs) = self.links[id].parallel_upload(&per_link);
         for c in &mut costs {
@@ -407,9 +423,10 @@ impl Downlink {
                 .map(|l| frame::frame_len(l.len()) as u64)
                 .collect(),
         };
-        let nlinks = self.links[id].len();
+        // The same masked-link mapping `charge` uses, so each layer's
+        // arrival is scheduled off the link that actually carried it.
         let channels: Vec<usize> =
-            (0..update.layers.len()).map(|c| c.min(nlinks - 1)).collect();
+            (0..update.layers.len()).map(|c| self.layer_link(id, c)).collect();
         let (wall, costs) = self.charge(id, &sizes);
         let (energy_j, money, bytes) = TransferCost::fold_totals(&costs);
         DownlinkTransfer {

@@ -22,6 +22,19 @@
 //! and then bit-for-bit identical to the frozen reference loop. See
 //! DESIGN.md §"Downlink & staleness".
 //!
+//! The scenario subsystem ([`scenario`]) opens the network-world axis:
+//! trace-driven channel dynamics behind the
+//! [`scenario::ChannelDynamics`] seam (Markov chain with overridable
+//! [`channels::FadingParams`], diurnal / congestion-burst /
+//! Gilbert–Elliott / CSV trace replay), client mobility over zones with
+//! mid-run handoff (vanished channels drop in-flight layers into the
+//! error-feedback restitution path), and a scripted TOML timeline DSL
+//! (`[[scenario.phase]]`) with named presets in
+//! [`scenario::ScenarioRegistry`] (`commute`, `stadium-flash-crowd`,
+//! `rural-3g`, `diurnal`). Unconfigured, every engine stays bit-for-bit
+//! on the frozen reference loop. See DESIGN.md §"Scenarios, mobility &
+//! handoff".
+//!
 //! Population mode ([`population`]) makes client count a free parameter:
 //! a `Population` of cheap per-client specs materializes full devices only
 //! for the round's sampled cohort, so resident memory is O(model + cohort)
@@ -100,6 +113,7 @@ pub mod models;
 pub mod population;
 pub mod resources;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod testing;
 pub mod theory;

@@ -51,6 +51,7 @@ fn run(args: Vec<String>) -> Result<()> {
 
 fn print_usage() {
     let mechanisms = MechanismRegistry::builtin().names().join("|");
+    let scenarios = lgc::scenario::ScenarioRegistry::builtin().names().join("|");
     println!(
         "lgc — Layered Gradient Compression FL framework\n\n\
          USAGE:\n  lgc train   [--config=FILE] [--key=value ...]\n  \
@@ -64,7 +65,10 @@ fn print_usage() {
          weighted-by-samples|availability-markov,\n\
          churn_down=P, churn_up=P, streaming=true|false,\n\
          downlink=true|false, downlink_compression=dense|layered,\n\
-         downlink_tariff_scale=F"
+         downlink_tariff_scale=F,\n\
+         scenario=none|{scenarios},\n\
+         scenario_file=FILE (TOML [scenario] tree: zones, mobility,\n\
+         [[scenario.phase]] timeline)"
     );
 }
 
@@ -104,6 +108,11 @@ pub fn make_trainer(cfg: &ExperimentConfig) -> Result<Box<dyn LocalTrainer>> {
 fn report(log: &RunLog) {
     println!("\n== {} ==", log.name);
     println!("rounds run      : {}", log.records.len());
+    let handoffs: u64 = log.records.iter().map(|r| r.handoffs).sum();
+    if handoffs > 0 {
+        let dropped: u64 = log.records.iter().map(|r| r.dropped_handoff).sum();
+        println!("handoffs        : {handoffs} ({dropped} in-flight layers dropped)");
+    }
     if let Some(last) = log.last() {
         println!("final train loss: {:.4}", last.train_loss);
         println!("final eval acc  : {:.4}", log.final_acc());
@@ -153,6 +162,15 @@ fn cmd_train(args: &[String]) -> Result<()> {
             exp.cfg.downlink_tariff_scale
         );
     }
+    if let Some(sc) = &exp.scenario {
+        println!(
+            "scenario: {} ({} zones, {} phases, move_prob {})",
+            sc.name(),
+            sc.n_zones(),
+            sc.n_phases(),
+            sc.move_prob()
+        );
+    }
     match exp.sync_mode {
         lgc::sim::SyncMode::Barrier => println!(
             "sync mode: barrier (compute_threads={})",
@@ -180,6 +198,13 @@ fn cmd_compare(args: &[String]) -> Result<()> {
             .map_err(|e| anyhow::anyhow!(e))?;
         let mut trainer = make_trainer(&cfg)?;
         let mut exp = ExperimentBuilder::new(cfg).trainer(trainer.as_ref()).build()?;
+        // Runs differ by more than mechanism now — say which world each
+        // one ran in (the RunLog name carries the same suffix).
+        println!(
+            "\n[{}] scenario: {}",
+            mech.name(),
+            exp.scenario.as_ref().map_or("none", |s| s.name())
+        );
         let log = exp.run(trainer.as_mut())?;
         report(&log);
         if let Some(base) = &csv {

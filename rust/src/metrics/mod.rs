@@ -57,6 +57,15 @@ pub struct RoundRecord {
     pub down_energy_j: f64,
     /// Downlink money charged this round/window.
     pub down_money: f64,
+    /// Zone changes (mobility + phase-forced relocations) this
+    /// round/window. 0 when no scenario is configured.
+    pub handoffs: u64,
+    /// In-flight uplink layers dropped because a handoff removed their
+    /// channel (restituted into error-feedback memory, never destroyed).
+    pub dropped_handoff: u64,
+    /// Median zone id across the population at record time (scenario
+    /// mobility telemetry; 0 when no scenario is configured).
+    pub zone_p50: f64,
 }
 
 /// The single source of truth for per-round CSV column names, shared by
@@ -86,6 +95,9 @@ pub mod columns {
         "down_bytes",
         "down_energy_j",
         "down_money",
+        "handoffs",
+        "dropped_handoff",
+        "zone_p50",
     ];
 
     /// The CSV header line (no trailing newline).
@@ -179,7 +191,7 @@ impl RunLog {
         for r in &self.records {
             let _ = writeln!(
                 s,
-                "{},{:.6},{:.6},{:.6},{:.3},{:.6},{:.3},{:.3},{},{:.4},{:.4},{:.4},{},{},{},{},{:.4},{:.4},{},{:.3},{:.6}",
+                "{},{:.6},{:.6},{:.6},{:.3},{:.6},{:.3},{:.3},{},{:.4},{:.4},{:.4},{},{},{},{},{:.4},{:.4},{},{:.3},{:.6},{},{},{:.2}",
                 r.round,
                 r.train_loss,
                 r.eval_loss,
@@ -200,7 +212,10 @@ impl RunLog {
                 r.staleness_p95,
                 r.down_bytes,
                 r.down_energy_j,
-                r.down_money
+                r.down_money,
+                r.handoffs,
+                r.dropped_handoff,
+                r.zone_p50
             );
         }
         s
@@ -312,15 +327,22 @@ mod tests {
         r.down_bytes = 4096;
         r.down_energy_j = 12.5;
         r.down_money = 0.125;
+        r.handoffs = 7;
+        r.dropped_handoff = 2;
+        r.zone_p50 = 1.0;
         log.push(r);
         let csv = log.to_csv();
         let header = csv.lines().next().unwrap();
         for col in ["sampled", "completed", "dropped_offline", "staleness_p50",
-                    "staleness_p95", "down_bytes", "down_energy_j", "down_money"] {
+                    "staleness_p95", "down_bytes", "down_energy_j", "down_money",
+                    "handoffs", "dropped_handoff", "zone_p50"] {
             assert!(header.split(',').any(|c| c == col), "missing {col}: {header}");
         }
         assert!(
-            csv.lines().nth(1).unwrap().ends_with(",5,4,1,1.0000,3.0000,4096,12.500,0.125000"),
+            csv.lines()
+                .nth(1)
+                .unwrap()
+                .ends_with(",5,4,1,1.0000,3.0000,4096,12.500,0.125000,7,2,1.00"),
             "{csv}"
         );
     }

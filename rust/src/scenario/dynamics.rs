@@ -1,0 +1,271 @@
+//! The [`ChannelDynamics`] seam: what advances a link's condition.
+//!
+//! The seed simulator drove every link with one hard-coded 3-state Markov
+//! chain. This module makes the per-link dynamics pluggable:
+//!
+//! - [`ChannelDynamics::Markov`] keeps the classic chain, now parameterized
+//!   by [`crate::channels::FadingParams`] (the Table-1 constants are the
+//!   `Default`, bit-for-bit the frozen `step_round` oracle's RNG stream);
+//! - [`ChannelDynamics::Trace`] replays a precomputed
+//!   `(bandwidth multiplier, loss probability)` trace — loaded from CSV or
+//!   produced by the synthetic generators below (diurnal sinusoid,
+//!   congestion bursts, Gilbert–Elliott drive-test).
+//!
+//! Traces are generated **once** per scenario zone from a dedicated forked
+//! RNG and shared across links via `Arc`, so replay is deterministic per
+//! seed and O(1) per link; each link walks the shared trace from its own
+//! phase offset (decorrelating devices without extra memory). The contract
+//! every dynamics source honors (property-tested in `tests/properties.rs`):
+//! bandwidth multipliers lie in `(0, 1]`, loss probabilities in `[0, 1)`.
+
+use std::sync::Arc;
+
+use crate::util::Rng;
+
+/// One sample of a link-condition trace.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TracePoint {
+    /// Bandwidth multiplier in `(0, 1]` (1 = the technology's nominal rate).
+    pub bw: f64,
+    /// Whole-transfer erasure probability in `[0, 1)`.
+    pub loss: f64,
+}
+
+/// Validate the dynamics contract over a candidate trace.
+pub fn validate_points(points: &[TracePoint]) -> Result<(), String> {
+    if points.is_empty() {
+        return Err("trace must have at least one point".into());
+    }
+    for (i, p) in points.iter().enumerate() {
+        if !(p.bw > 0.0 && p.bw <= 1.0) {
+            return Err(format!("trace point {i}: bw multiplier {} not in (0, 1]", p.bw));
+        }
+        if !(0.0..1.0).contains(&p.loss) {
+            return Err(format!("trace point {i}: loss {} not in [0, 1)", p.loss));
+        }
+    }
+    Ok(())
+}
+
+/// A cursor over a shared, immutable trace: the per-link replay state.
+#[derive(Clone, Debug)]
+pub struct TraceReplay {
+    points: Arc<[TracePoint]>,
+    cursor: usize,
+}
+
+impl TraceReplay {
+    /// Replay `points` starting at `offset` (wrapped). Panics on an empty
+    /// trace — construction paths validate first.
+    pub fn new(points: Arc<[TracePoint]>, offset: usize) -> Self {
+        assert!(!points.is_empty(), "trace replay over an empty trace");
+        let cursor = offset % points.len();
+        TraceReplay { points, cursor }
+    }
+
+    /// Advance one tick (wrapping replay).
+    pub fn advance(&mut self) {
+        self.cursor = (self.cursor + 1) % self.points.len();
+    }
+
+    /// Current bandwidth multiplier.
+    pub fn bw(&self) -> f64 {
+        self.points[self.cursor].bw
+    }
+
+    /// Current loss probability.
+    pub fn loss(&self) -> f64 {
+        self.points[self.cursor].loss
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn cursor(&self) -> usize {
+        self.cursor
+    }
+}
+
+/// What advances one [`crate::channels::Link`]'s condition each
+/// round/tick — the scenario subsystem's seam into the channel simulator.
+#[derive(Clone, Debug)]
+pub enum ChannelDynamics {
+    /// The 3-state Markov fading chain over the link's `FadingParams` —
+    /// the default, and with default params **bit-for-bit** the frozen
+    /// oracle's stream (one `choice_weighted` draw per step).
+    Markov,
+    /// Replay a precomputed condition trace; the link's fading state and
+    /// RNG stream are left untouched.
+    Trace(TraceReplay),
+}
+
+/// Parse a CSV trace: one point per non-empty, non-`#` line, either
+/// `bw_multiplier` or `bw_multiplier,loss_prob`.
+pub fn trace_from_csv(text: &str) -> Result<Arc<[TracePoint]>, String> {
+    let mut points = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut cols = line.split(',').map(str::trim);
+        let bw: f64 = cols
+            .next()
+            .unwrap_or("")
+            .parse()
+            .map_err(|e| format!("trace line {}: bad bw: {e}", lineno + 1))?;
+        let loss: f64 = match cols.next() {
+            Some(c) if !c.is_empty() => c
+                .parse()
+                .map_err(|e| format!("trace line {}: bad loss: {e}", lineno + 1))?,
+            _ => 0.0,
+        };
+        points.push(TracePoint { bw, loss });
+    }
+    validate_points(&points)?;
+    Ok(points.into())
+}
+
+/// Diurnal sinusoid: bandwidth swings between `floor` and 1.0 over
+/// `period` ticks (the classic day/night cellular load curve). Lossless —
+/// congestion shapes rate, not erasure. Fully deterministic. The generated
+/// length is rounded up to a whole number of periods so the wrapping
+/// replay is phase-continuous (no mid-cycle jump at the buffer boundary).
+pub fn diurnal_trace(len: usize, period: usize, floor: f64) -> Arc<[TracePoint]> {
+    assert!(len > 0 && period > 0);
+    assert!(floor > 0.0 && floor <= 1.0, "diurnal floor {floor} not in (0, 1]");
+    let len = len.div_ceil(period) * period;
+    (0..len)
+        .map(|i| {
+            let phase = (i % period) as f64 / period as f64;
+            let s = 0.5 * (1.0 + (std::f64::consts::TAU * phase).sin());
+            TracePoint { bw: (floor + (1.0 - floor) * s).min(1.0), loss: 0.0 }
+        })
+        .collect()
+}
+
+/// Congestion bursts: a two-state chain (clear / congested) with geometric
+/// dwell times; congested ticks run at `depth` bandwidth with `burst_loss`
+/// erasure (cell overload drops whole transfers).
+pub fn congestion_burst_trace(
+    len: usize,
+    rng: &mut Rng,
+    enter: f64,
+    exit: f64,
+    depth: f64,
+    burst_loss: f64,
+) -> Arc<[TracePoint]> {
+    assert!(len > 0);
+    assert!((0.0..1.0).contains(&enter) && (0.0..=1.0).contains(&exit));
+    assert!(depth > 0.0 && depth <= 1.0, "burst depth {depth} not in (0, 1]");
+    assert!((0.0..1.0).contains(&burst_loss));
+    let mut congested = false;
+    (0..len)
+        .map(|_| {
+            let u = rng.uniform();
+            if congested {
+                if u < exit {
+                    congested = false;
+                }
+            } else if u < enter {
+                congested = true;
+            }
+            if congested {
+                TracePoint { bw: depth, loss: burst_loss }
+            } else {
+                TracePoint { bw: 1.0, loss: 0.0 }
+            }
+        })
+        .collect()
+}
+
+/// Gilbert–Elliott drive-test: the standard two-state (Good/Bad) burst-loss
+/// channel model; Bad ticks run at `bad_bw` bandwidth with `bad_loss`
+/// erasure — the shape of a vehicular trace through coverage holes.
+pub fn gilbert_elliott_trace(
+    len: usize,
+    rng: &mut Rng,
+    p_gb: f64,
+    p_bg: f64,
+    bad_bw: f64,
+    bad_loss: f64,
+) -> Arc<[TracePoint]> {
+    assert!(len > 0);
+    assert!((0.0..1.0).contains(&p_gb) && (0.0..=1.0).contains(&p_bg));
+    assert!(bad_bw > 0.0 && bad_bw <= 1.0, "bad_bw {bad_bw} not in (0, 1]");
+    assert!((0.0..1.0).contains(&bad_loss));
+    let mut bad = false;
+    (0..len)
+        .map(|_| {
+            let u = rng.uniform();
+            if bad {
+                if u < p_bg {
+                    bad = false;
+                }
+            } else if u < p_gb {
+                bad = true;
+            }
+            if bad {
+                TracePoint { bw: bad_bw, loss: bad_loss }
+            } else {
+                TracePoint { bw: 1.0, loss: 0.0 }
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diurnal_is_deterministic_and_bounded() {
+        let a = diurnal_trace(256, 64, 0.25);
+        let b = diurnal_trace(256, 64, 0.25);
+        assert_eq!(&a[..], &b[..]);
+        validate_points(&a).unwrap();
+        // It actually swings: max near 1, min near the floor.
+        let max = a.iter().map(|p| p.bw).fold(0.0, f64::max);
+        let min = a.iter().map(|p| p.bw).fold(1.0, f64::min);
+        assert!(max > 0.9, "max={max}");
+        assert!(min < 0.35, "min={min}");
+    }
+
+    #[test]
+    fn synthetic_traces_deterministic_per_seed() {
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        let a = congestion_burst_trace(512, &mut r1, 0.1, 0.3, 0.2, 0.25);
+        let b = congestion_burst_trace(512, &mut r2, 0.1, 0.3, 0.2, 0.25);
+        assert_eq!(&a[..], &b[..]);
+        validate_points(&a).unwrap();
+        let mut r3 = Rng::new(9);
+        let c = gilbert_elliott_trace(512, &mut r3, 0.08, 0.4, 0.1, 0.35);
+        validate_points(&c).unwrap();
+        assert!(c.iter().any(|p| p.bw < 1.0), "GE trace never entered Bad");
+    }
+
+    #[test]
+    fn replay_wraps_and_offsets() {
+        let pts = diurnal_trace(8, 8, 0.5);
+        let mut tr = TraceReplay::new(pts.clone(), 6);
+        assert_eq!(tr.cursor(), 6);
+        tr.advance();
+        tr.advance();
+        assert_eq!(tr.cursor(), 0, "replay wraps");
+        assert_eq!(tr.bw(), pts[0].bw);
+        assert_eq!(tr.len(), 8);
+    }
+
+    #[test]
+    fn csv_parses_and_validates() {
+        let pts = trace_from_csv("# drive test\n1.0\n0.5, 0.1\n0.25,0.3\n").unwrap();
+        assert_eq!(pts.len(), 3);
+        assert_eq!(pts[1], TracePoint { bw: 0.5, loss: 0.1 });
+        assert!(trace_from_csv("").is_err());
+        assert!(trace_from_csv("1.5").is_err(), "bw > 1 rejected");
+        assert!(trace_from_csv("0.5, 1.0").is_err(), "loss = 1 rejected");
+        assert!(trace_from_csv("0.0").is_err(), "bw = 0 rejected");
+    }
+}

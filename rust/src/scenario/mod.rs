@@ -1,0 +1,1102 @@
+//! Network scenarios: trace-driven channel dynamics, mobility & handoff,
+//! and a scripted timeline DSL — the ROADMAP's scenario-diversity axis.
+//!
+//! Until this module every run drove one hard-coded 3-state Markov chain
+//! with fixed constants, so the DRL controller and all four engines were
+//! only ever evaluated against a single network world. A scenario describes
+//! a *world*:
+//!
+//! - **Zones** ([`ZoneSpec`]): regions that define which [`ChannelType`]s
+//!   exist there (a mask over the experiment's channel list), the zone's
+//!   [`FadingParams`], a bandwidth scale, and the zone's
+//!   [`dynamics::ChannelDynamics`] source — the classic Markov chain or a
+//!   replayed trace (diurnal sinusoid, congestion bursts, Gilbert–Elliott
+//!   drive-test, or a CSV drive log).
+//! - **Mobility**: every client carries a zone id and moves on a seeded
+//!   per-client chain (`move_prob` per tick, uniform over the other
+//!   zones). A move is a **handoff**: the device's channel set changes
+//!   mid-run. Plans are projected off vanished channels
+//!   ([`crate::channels::AllocationPlan::project_onto`]) and an uplink
+//!   layer caught mid-flight on a vanished channel is dropped into the
+//!   existing error-feedback restitution path (counted as
+//!   `dropped_handoff`).
+//! - **Phases** ([`PhaseSpec`]): a scripted timeline,
+//!   `[[scenario.phase]] at_s = 300.0, zone = 2, bw_scale_4g = 0.5, …` in
+//!   TOML — at virtual time `at_s` the phase can force everyone into a
+//!   zone, change the mobility rate, scale a technology's bandwidth
+//!   globally, or scale loss probabilities (flash crowds, outages, rush
+//!   hours).
+//!
+//! [`ScenarioRegistry`] ships named presets (`commute`,
+//! `stadium-flash-crowd`, `rural-3g`, `diurnal`); `scenario = "name"`,
+//! `scenario_file = "world.toml"`, or an inline `[scenario]` tree in the
+//! config selects one. With no scenario configured, nothing here runs and
+//! every engine stays **bit-for-bit** on the frozen `step_round` oracle
+//! (asserted in `tests/sim_engine.rs` — a trivial single-zone scenario
+//! with default parameters is *also* bitwise on the oracle, which pins the
+//! seam's zero-cost claim). See DESIGN.md §"Scenarios, mobility &
+//! handoff".
+
+pub mod dynamics;
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+pub use dynamics::{
+    congestion_burst_trace, diurnal_trace, gilbert_elliott_trace, trace_from_csv,
+    ChannelDynamics, TracePoint, TraceReplay,
+};
+
+use crate::channels::{ChannelType, DeviceChannels, FadingParams};
+use crate::config::toml::{Document, Value};
+use crate::util::Rng;
+
+/// Stable slot per channel technology for the per-type phase scales
+/// (3G = 0, 4G = 1, 5G = 2 — independent of the experiment's channel
+/// ordering).
+pub(crate) fn type_slot(ty: ChannelType) -> usize {
+    match ty {
+        ChannelType::G3 => 0,
+        ChannelType::G4 => 1,
+        ChannelType::G5 => 2,
+    }
+}
+
+/// Which [`ChannelDynamics`] source a zone installs on its links.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DynamicsKind {
+    /// The parameterized Markov fading chain (the oracle's default).
+    Markov,
+    /// Deterministic day/night sinusoid between `floor` and 1.0.
+    Diurnal { period_ticks: usize, floor: f64 },
+    /// Two-state congestion bursts (cell overload).
+    Bursts { enter: f64, exit: f64, depth: f64, loss: f64 },
+    /// Gilbert–Elliott two-state burst-loss channel (drive-test shape).
+    GilbertElliott { p_gb: f64, p_bg: f64, bad_bw: f64, bad_loss: f64 },
+    /// Replay a CSV trace file (`bw` or `bw,loss` per line).
+    CsvTrace { path: String },
+}
+
+/// One zone of the scenario world.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ZoneSpec {
+    pub name: String,
+    /// Channel technologies that exist in this zone — must be a non-empty
+    /// subset of the experiment's `channel_types`.
+    pub channels: Vec<ChannelType>,
+    /// Zone-wide bandwidth multiplier in `(0, 1]`.
+    pub bw_scale: f64,
+    /// Fading-chain constants for this zone's links.
+    pub fading: FadingParams,
+    pub dynamics: DynamicsKind,
+}
+
+/// One scripted timeline event, applied when virtual time reaches `at_s`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PhaseSpec {
+    pub at_s: f64,
+    /// Force every client into this zone (each actual change is a handoff).
+    pub zone: Option<usize>,
+    /// New per-tick mobility rate from this point on.
+    pub move_prob: Option<f64>,
+    /// Global per-technology bandwidth scales (slots via [`type_slot`]:
+    /// 3G, 4G, 5G), each in `(0, 1]`.
+    pub bw_scale: [Option<f64>; 3],
+    /// Multiplier on every zone's loss probabilities (clamped to stay a
+    /// probability).
+    pub loss_scale: Option<f64>,
+}
+
+/// A parsed, validated-on-build scenario description (pure data — the
+/// runtime state lives in [`Scenario`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioSpec {
+    pub name: String,
+    /// Per-tick probability that a client moves to a uniformly-chosen
+    /// other zone.
+    pub move_prob: f64,
+    /// Start clients spread round-robin over the zones (else all in zone 0).
+    pub start_spread: bool,
+    /// Length of generated synthetic traces (samples; replay wraps).
+    pub trace_len: usize,
+    pub zones: Vec<ZoneSpec>,
+    /// Timeline, sorted by `at_s`.
+    pub phases: Vec<PhaseSpec>,
+}
+
+fn get_f64(kvs: &BTreeMap<String, Value>, key: &str) -> Option<f64> {
+    kvs.get(key).and_then(Value::as_f64)
+}
+
+fn get_usize(kvs: &BTreeMap<String, Value>, key: &str) -> Result<Option<usize>, String> {
+    match kvs.get(key).map(|v| v.as_i64().ok_or_else(|| format!("{key} must be an integer"))) {
+        None => Ok(None),
+        Some(Err(e)) => Err(e),
+        Some(Ok(i)) => {
+            usize::try_from(i).map(Some).map_err(|_| format!("{key} must be >= 0, got {i}"))
+        }
+    }
+}
+
+fn get_triple(kvs: &BTreeMap<String, Value>, key: &str) -> Result<Option<[f64; 3]>, String> {
+    match kvs.get(key) {
+        None => Ok(None),
+        Some(v) => {
+            let arr: Vec<f64> = v
+                .as_array()
+                .map(|a| a.iter().filter_map(Value::as_f64).collect())
+                .unwrap_or_default();
+            if arr.len() != 3 {
+                return Err(format!("{key} must be an array of 3 numbers"));
+            }
+            Ok(Some([arr[0], arr[1], arr[2]]))
+        }
+    }
+}
+
+impl ZoneSpec {
+    fn from_kvs(idx: usize, kvs: &BTreeMap<String, Value>) -> Result<ZoneSpec, String> {
+        let name = kvs
+            .get("name")
+            .and_then(Value::as_str)
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("zone-{idx}"));
+        let channels = match kvs.get("channels") {
+            Some(v) => {
+                let mut out = Vec::new();
+                for item in v.as_array().ok_or("channels must be an array of strings")? {
+                    let s = item.as_str().ok_or("channels must be strings")?;
+                    out.push(ChannelType::parse(s)?);
+                }
+                out
+            }
+            None => return Err(format!("zone {idx} needs a `channels` list")),
+        };
+        let mut fading = FadingParams::default();
+        if let Some(g) = get_triple(kvs, "gain")? {
+            fading.gain = g;
+        }
+        if let Some(l) = get_triple(kvs, "loss")? {
+            fading.loss = l;
+        }
+        for (row, key) in ["t_good", "t_mid", "t_bad"].iter().enumerate() {
+            if let Some(r) = get_triple(kvs, key)? {
+                fading.transition[row] = r;
+            }
+        }
+        let kind = kvs.get("dynamics").and_then(Value::as_str).unwrap_or("markov");
+        let dynamics = match kind.to_ascii_lowercase().as_str() {
+            "markov" => DynamicsKind::Markov,
+            "diurnal" => DynamicsKind::Diurnal {
+                period_ticks: get_usize(kvs, "period_ticks")?.unwrap_or(240),
+                floor: get_f64(kvs, "floor").unwrap_or(0.2),
+            },
+            "bursts" | "congestion" => DynamicsKind::Bursts {
+                enter: get_f64(kvs, "burst_enter").unwrap_or(0.08),
+                exit: get_f64(kvs, "burst_exit").unwrap_or(0.30),
+                depth: get_f64(kvs, "burst_depth").unwrap_or(0.15),
+                loss: get_f64(kvs, "burst_loss").unwrap_or(0.25),
+            },
+            "gilbert-elliott" | "ge" | "drive-test" => DynamicsKind::GilbertElliott {
+                p_gb: get_f64(kvs, "p_gb").unwrap_or(0.06),
+                p_bg: get_f64(kvs, "p_bg").unwrap_or(0.35),
+                bad_bw: get_f64(kvs, "bad_bw").unwrap_or(0.10),
+                bad_loss: get_f64(kvs, "bad_loss").unwrap_or(0.30),
+            },
+            "csv" | "trace" => DynamicsKind::CsvTrace {
+                path: kvs
+                    .get("trace_file")
+                    .and_then(Value::as_str)
+                    .ok_or("dynamics = \"csv\" needs trace_file")?
+                    .to_string(),
+            },
+            other => return Err(format!("unknown zone dynamics `{other}`")),
+        };
+        Ok(ZoneSpec {
+            name,
+            channels,
+            bw_scale: get_f64(kvs, "bw_scale").unwrap_or(1.0),
+            fading,
+            dynamics,
+        })
+    }
+}
+
+impl PhaseSpec {
+    fn from_kvs(idx: usize, kvs: &BTreeMap<String, Value>) -> Result<PhaseSpec, String> {
+        let at_s = get_f64(kvs, "at_s").ok_or_else(|| format!("phase {idx} needs at_s"))?;
+        Ok(PhaseSpec {
+            at_s,
+            zone: get_usize(kvs, "zone")?,
+            move_prob: get_f64(kvs, "move_prob"),
+            bw_scale: [
+                get_f64(kvs, "bw_scale_3g"),
+                get_f64(kvs, "bw_scale_4g"),
+                get_f64(kvs, "bw_scale_5g"),
+            ],
+            loss_scale: get_f64(kvs, "loss_scale"),
+        })
+    }
+}
+
+impl ScenarioSpec {
+    /// Parse the scenario tree of a config document: the `[scenario]`
+    /// section, `[scenario.zone.N]` / `[[scenario.zone]]` zones and
+    /// `[[scenario.phase]]` timeline entries. Returns `Ok(None)` when the
+    /// document carries no scenario at all.
+    pub fn from_document(doc: &Document) -> Result<Option<ScenarioSpec>, String> {
+        let top = doc.sections.get("scenario");
+        let zone_sections = doc.array_sections("scenario.zone");
+        let phase_sections = doc.array_sections("scenario.phase");
+        let has_top = top.map(|s| !s.is_empty()).unwrap_or(false);
+        if !has_top && zone_sections.is_empty() && phase_sections.is_empty() {
+            return Ok(None);
+        }
+        let empty = BTreeMap::new();
+        let top = top.unwrap_or(&empty);
+        let mut zones = Vec::new();
+        for (pos, (n, kvs)) in zone_sections.iter().enumerate() {
+            // Zone ids are positional (phases reference them by index), so
+            // the written numbering must be contiguous from 0 — otherwise
+            // a gap would silently renumber the zones a phase points at.
+            if *n != pos {
+                return Err(format!(
+                    "zone sections must be numbered contiguously from 0: found \
+                     scenario.zone.{n} where scenario.zone.{pos} was expected"
+                ));
+            }
+            zones.push(ZoneSpec::from_kvs(*n, kvs)?);
+        }
+        let mut phases = Vec::new();
+        for (n, kvs) in &phase_sections {
+            phases.push(PhaseSpec::from_kvs(*n, kvs)?);
+        }
+        phases.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+        Ok(Some(ScenarioSpec {
+            name: top
+                .get("name")
+                .and_then(Value::as_str)
+                .unwrap_or("custom")
+                .to_string(),
+            move_prob: get_f64(top, "move_prob").unwrap_or(0.0),
+            start_spread: top.get("start_spread").and_then(Value::as_bool).unwrap_or(false),
+            trace_len: get_usize(top, "trace_len")?.unwrap_or(1024),
+            zones,
+            phases,
+        }))
+    }
+
+    /// Validate against the experiment's channel list. Enforces the
+    /// handoff invariant at the source: every zone keeps at least one
+    /// channel of the experiment's set, so a device can never be left with
+    /// zero channels.
+    pub fn validate(&self, channel_types: &[ChannelType]) -> Result<(), String> {
+        if self.zones.is_empty() {
+            return Err("scenario needs at least one zone".into());
+        }
+        if !(0.0..=1.0).contains(&self.move_prob) {
+            return Err(format!("move_prob {} not in [0, 1]", self.move_prob));
+        }
+        if self.trace_len < 2 {
+            return Err(format!("trace_len must be >= 2, got {}", self.trace_len));
+        }
+        for (zi, z) in self.zones.iter().enumerate() {
+            if z.channels.is_empty() {
+                return Err(format!("zone {zi} ({}) has no channels", z.name));
+            }
+            for &ty in &z.channels {
+                if !channel_types.contains(&ty) {
+                    return Err(format!(
+                        "zone {zi} ({}) lists {} which the experiment's channel set lacks",
+                        z.name,
+                        ty.name()
+                    ));
+                }
+            }
+            if !(z.bw_scale > 0.0 && z.bw_scale <= 1.0) {
+                return Err(format!("zone {zi} bw_scale {} not in (0, 1]", z.bw_scale));
+            }
+            z.fading.validate().map_err(|e| format!("zone {zi}: {e}"))?;
+            match &z.dynamics {
+                DynamicsKind::Markov => {}
+                DynamicsKind::Diurnal { period_ticks, floor } => {
+                    if *period_ticks == 0 {
+                        return Err(format!("zone {zi}: diurnal period_ticks must be > 0"));
+                    }
+                    if !(*floor > 0.0 && *floor <= 1.0) {
+                        return Err(format!("zone {zi}: diurnal floor {floor} not in (0, 1]"));
+                    }
+                }
+                DynamicsKind::Bursts { enter, exit, depth, loss } => {
+                    if !(0.0..1.0).contains(enter) || !(0.0..=1.0).contains(exit) {
+                        return Err(format!("zone {zi}: burst probabilities out of range"));
+                    }
+                    if !(*depth > 0.0 && *depth <= 1.0) {
+                        return Err(format!("zone {zi}: burst_depth {depth} not in (0, 1]"));
+                    }
+                    if !(0.0..1.0).contains(loss) {
+                        return Err(format!("zone {zi}: burst_loss {loss} not in [0, 1)"));
+                    }
+                }
+                DynamicsKind::GilbertElliott { p_gb, p_bg, bad_bw, bad_loss } => {
+                    if !(0.0..1.0).contains(p_gb) || !(0.0..=1.0).contains(p_bg) {
+                        return Err(format!("zone {zi}: GE probabilities out of range"));
+                    }
+                    if !(*bad_bw > 0.0 && *bad_bw <= 1.0) {
+                        return Err(format!("zone {zi}: bad_bw {bad_bw} not in (0, 1]"));
+                    }
+                    if !(0.0..1.0).contains(bad_loss) {
+                        return Err(format!("zone {zi}: bad_loss {bad_loss} not in [0, 1)"));
+                    }
+                }
+                DynamicsKind::CsvTrace { path } => {
+                    if path.is_empty() {
+                        return Err(format!("zone {zi}: empty trace_file path"));
+                    }
+                }
+            }
+        }
+        for (pi, p) in self.phases.iter().enumerate() {
+            if !(p.at_s.is_finite() && p.at_s >= 0.0) {
+                return Err(format!("phase {pi}: at_s {} must be finite and >= 0", p.at_s));
+            }
+            if let Some(z) = p.zone {
+                if z >= self.zones.len() {
+                    return Err(format!(
+                        "phase {pi}: zone {z} out of range ({} zones)",
+                        self.zones.len()
+                    ));
+                }
+            }
+            if let Some(m) = p.move_prob {
+                if !(0.0..=1.0).contains(&m) {
+                    return Err(format!("phase {pi}: move_prob {m} not in [0, 1]"));
+                }
+            }
+            for (slot, s) in p.bw_scale.iter().enumerate() {
+                if let Some(s) = s {
+                    if !(*s > 0.0 && *s <= 1.0) {
+                        return Err(format!(
+                            "phase {pi}: bw_scale slot {slot} value {s} not in (0, 1]"
+                        ));
+                    }
+                }
+            }
+            if let Some(l) = p.loss_scale {
+                if !(l > 0.0 && l.is_finite()) {
+                    return Err(format!("phase {pi}: loss_scale {l} must be finite and > 0"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry of named presets
+// ---------------------------------------------------------------------------
+
+/// Named scenario presets, mirroring the mechanism registry: `scenario =
+/// "stadium-flash-crowd"` in the config (or `--scenario=…` on the CLI)
+/// resolves here.
+pub struct ScenarioRegistry {
+    presets: BTreeMap<String, ScenarioSpec>,
+}
+
+fn zone(
+    name: &str,
+    channels: &[ChannelType],
+    bw_scale: f64,
+    fading: FadingParams,
+    dynamics: DynamicsKind,
+) -> ZoneSpec {
+    ZoneSpec {
+        name: name.to_string(),
+        channels: channels.to_vec(),
+        bw_scale,
+        fading,
+        dynamics,
+    }
+}
+
+impl ScenarioRegistry {
+    pub fn empty() -> Self {
+        ScenarioRegistry { presets: BTreeMap::new() }
+    }
+
+    /// The built-in worlds. All validate against the default channel set
+    /// `[5G, 4G, 3G]` (asserted in tests).
+    pub fn builtin() -> Self {
+        use ChannelType::{G3, G4, G5};
+        let mut reg = Self::empty();
+        let d = FadingParams::default();
+
+        // Day/night load curve on every technology; single zone, no
+        // mobility — pure trace-replay dynamics.
+        reg.register(ScenarioSpec {
+            name: "diurnal".into(),
+            move_prob: 0.0,
+            start_spread: false,
+            trace_len: 1024,
+            zones: vec![zone(
+                "metro",
+                &[G5, G4, G3],
+                1.0,
+                d,
+                DynamicsKind::Diurnal { period_ticks: 240, floor: 0.2 },
+            )],
+            phases: Vec::new(),
+        });
+
+        // Deep-rural coverage: 3G only, long Bad-fading dwells, real
+        // erasure even in Good conditions.
+        let mut rural = d;
+        rural.gain = [1.0, 0.35, 0.08];
+        rural.loss = [0.01, 0.08, 0.35];
+        rural.transition = [
+            [0.70, 0.20, 0.10],
+            [0.15, 0.60, 0.25],
+            [0.05, 0.25, 0.70],
+        ];
+        reg.register(ScenarioSpec {
+            name: "rural-3g".into(),
+            move_prob: 0.0,
+            start_spread: false,
+            trace_len: 1024,
+            zones: vec![zone("countryside", &[G3], 1.0, rural, DynamicsKind::Markov)],
+            phases: Vec::new(),
+        });
+
+        // Home / transit / office loop: diurnal home cell, Gilbert–Elliott
+        // drive-test transit links, clean office smallcell (no 3G indoors);
+        // rush-hour phases spike the mobility rate.
+        reg.register(ScenarioSpec {
+            name: "commute".into(),
+            move_prob: 0.05,
+            start_spread: true,
+            trace_len: 1024,
+            zones: vec![
+                zone(
+                    "home",
+                    &[G4, G3],
+                    1.0,
+                    d,
+                    DynamicsKind::Diurnal { period_ticks: 120, floor: 0.3 },
+                ),
+                zone(
+                    "transit",
+                    &[G5, G4, G3],
+                    0.9,
+                    d,
+                    DynamicsKind::GilbertElliott {
+                        p_gb: 0.08,
+                        p_bg: 0.35,
+                        bad_bw: 0.10,
+                        bad_loss: 0.30,
+                    },
+                ),
+                zone("office", &[G5, G4], 1.0, d, DynamicsKind::Markov),
+            ],
+            phases: vec![
+                PhaseSpec { at_s: 60.0, move_prob: Some(0.30), ..Default::default() },
+                PhaseSpec { at_s: 240.0, move_prob: Some(0.05), ..Default::default() },
+                PhaseSpec { at_s: 480.0, move_prob: Some(0.30), ..Default::default() },
+            ],
+        });
+
+        // Flash crowd: everyone surges into the stadium smallcell zone
+        // (which has no 3G — a handoff there strands slow 3G enhancement
+        // layers mid-flight), the 5G macro layer is throttled, congestion
+        // bursts and a loss spike follow, then the crowd disperses.
+        reg.register(ScenarioSpec {
+            name: "stadium-flash-crowd".into(),
+            move_prob: 0.02,
+            start_spread: false,
+            trace_len: 1024,
+            zones: vec![
+                zone("city", &[G5, G4, G3], 1.0, d, DynamicsKind::Markov),
+                zone(
+                    "stadium",
+                    &[G5, G4],
+                    0.8,
+                    d,
+                    DynamicsKind::Bursts {
+                        enter: 0.12,
+                        exit: 0.25,
+                        depth: 0.15,
+                        loss: 0.25,
+                    },
+                ),
+            ],
+            phases: vec![
+                PhaseSpec {
+                    at_s: 2.0,
+                    zone: Some(1),
+                    move_prob: Some(0.35),
+                    bw_scale: [None, None, Some(0.6)],
+                    ..Default::default()
+                },
+                PhaseSpec { at_s: 60.0, loss_scale: Some(1.5), ..Default::default() },
+                PhaseSpec {
+                    at_s: 150.0,
+                    zone: Some(0),
+                    move_prob: Some(0.05),
+                    ..Default::default()
+                },
+            ],
+        });
+
+        reg
+    }
+
+    /// Register (or replace) a preset under its `name`.
+    pub fn register(&mut self, spec: ScenarioSpec) {
+        self.presets.insert(spec.name.clone(), spec);
+    }
+
+    /// Exact lookup, then case-insensitive (config-file spellings).
+    pub fn get(&self, name: &str) -> Option<&ScenarioSpec> {
+        if let Some(s) = self.presets.get(name) {
+            return Some(s);
+        }
+        self.presets.values().find(|s| s.name.eq_ignore_ascii_case(name))
+    }
+
+    /// Registered preset names, sorted.
+    pub fn names(&self) -> Vec<&str> {
+        self.presets.keys().map(String::as_str).collect()
+    }
+
+    /// Resolve a preset name with an error that lists what exists.
+    pub fn resolve(name: &str) -> Result<ScenarioSpec, String> {
+        let reg = Self::builtin();
+        reg.get(name).cloned().ok_or_else(|| {
+            format!(
+                "unknown scenario `{name}` — registered: {}",
+                reg.names().join(", ")
+            )
+        })
+    }
+}
+
+impl Default for ScenarioRegistry {
+    fn default() -> Self {
+        Self::builtin()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Runtime
+// ---------------------------------------------------------------------------
+
+/// Per-record-window scenario counters, drained into each
+/// [`crate::metrics::RoundRecord`] (same pattern as the downlink window).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ScenarioWindow {
+    /// Zone changes (mobility moves + phase-forced relocations).
+    pub handoffs: u64,
+    /// In-flight uplink layers dropped because their channel vanished in a
+    /// handoff (restituted into error-feedback memory).
+    pub dropped_handoff: u64,
+}
+
+impl ScenarioWindow {
+    pub fn take(&mut self) -> ScenarioWindow {
+        std::mem::take(self)
+    }
+}
+
+/// What one scenario tick asks the engine to do.
+#[derive(Clone, Debug, Default)]
+pub struct TickEffects {
+    /// Ascending client ids whose channel bundles must be re-configured
+    /// (their zone changed, or a phase changed the global scales — then
+    /// every id is listed). Demobilized population clients can be skipped:
+    /// they pick the current configuration up at materialization.
+    pub reconfigure: Vec<usize>,
+}
+
+/// One zone's runtime form: mask aligned to the experiment's channel list
+/// plus the shared generated trace (None = Markov dynamics).
+struct ZoneRuntime {
+    mask: Vec<bool>,
+    bw_scale: f64,
+    fading: FadingParams,
+    trace: Option<Arc<[TracePoint]>>,
+}
+
+/// The live scenario state an [`crate::coordinator::Experiment`] carries:
+/// per-client zones and mobility chains, the phase cursor, global phase
+/// scales, and the metrics windows. All RNG streams are forked off the
+/// experiment seed with scenario-private tags, so enabling a scenario
+/// never perturbs any existing stream.
+///
+/// Cost model: mobility is O(population) per tick — the same population-
+/// wide dynamics budget [`crate::population::Population::step_round`]
+/// already spends on fading/churn chains each tick; per-record telemetry
+/// (`zone_p50`) is O(zones) via an incremental histogram, and per-client
+/// state is a zone id plus one small RNG (no O(model) anything).
+pub struct Scenario {
+    spec: ScenarioSpec,
+    zones: Vec<ZoneRuntime>,
+    zone_of: Vec<usize>,
+    start_zone_of: Vec<usize>,
+    /// Clients per zone, maintained incrementally by `relocate` — keeps
+    /// `zone_p50` O(zones) per record instead of sorting O(population).
+    zone_counts: Vec<u64>,
+    move_rng: Vec<Rng>,
+    move_prob: f64,
+    /// Global per-technology bandwidth scales (slots via [`type_slot`]).
+    type_scale: [f64; 3],
+    loss_scale: f64,
+    next_phase: usize,
+    ticks: u64,
+    pub window: ScenarioWindow,
+    total_handoffs: u64,
+    total_dropped: u64,
+}
+
+impl Scenario {
+    /// Build the runtime for `n_clients` clients against the experiment's
+    /// channel list. Validates the spec, generates each zone's trace from
+    /// a dedicated forked stream, and seeds one mobility chain per client.
+    pub fn new(
+        spec: ScenarioSpec,
+        n_clients: usize,
+        channel_types: &[ChannelType],
+        rng: &Rng,
+    ) -> Result<Self, String> {
+        spec.validate(channel_types)?;
+        let mut zones = Vec::with_capacity(spec.zones.len());
+        for (zi, z) in spec.zones.iter().enumerate() {
+            let mask: Vec<bool> =
+                channel_types.iter().map(|ty| z.channels.contains(ty)).collect();
+            // Multiplied tag mixing (like the per-client mobility forks
+            // below) so zone-trace streams can never structurally collide
+            // with a client's mobility stream.
+            let mut zrng =
+                rng.fork(0x5CE_2000 ^ (zi as u64).wrapping_mul(0xA24B_AED4_963E_E407));
+            let trace = match &z.dynamics {
+                DynamicsKind::Markov => None,
+                DynamicsKind::Diurnal { period_ticks, floor } => {
+                    Some(diurnal_trace(spec.trace_len, *period_ticks, *floor))
+                }
+                DynamicsKind::Bursts { enter, exit, depth, loss } => Some(
+                    congestion_burst_trace(spec.trace_len, &mut zrng, *enter, *exit, *depth, *loss),
+                ),
+                DynamicsKind::GilbertElliott { p_gb, p_bg, bad_bw, bad_loss } => Some(
+                    gilbert_elliott_trace(spec.trace_len, &mut zrng, *p_gb, *p_bg, *bad_bw, *bad_loss),
+                ),
+                DynamicsKind::CsvTrace { path } => {
+                    let text = std::fs::read_to_string(path)
+                        .map_err(|e| format!("zone {zi}: read trace {path}: {e}"))?;
+                    Some(trace_from_csv(&text).map_err(|e| format!("zone {zi}: {e}"))?)
+                }
+            };
+            zones.push(ZoneRuntime { mask, bw_scale: z.bw_scale, fading: z.fading, trace });
+        }
+        let nz = zones.len();
+        let zone_of: Vec<usize> = (0..n_clients)
+            .map(|id| if spec.start_spread { id % nz } else { 0 })
+            .collect();
+        let move_rng = (0..n_clients)
+            .map(|id| rng.fork(0x5CE_0000 ^ (id as u64).wrapping_mul(0x9E37_79B9)))
+            .collect();
+        let move_prob = spec.move_prob;
+        let mut zone_counts = vec![0u64; nz];
+        for &z in &zone_of {
+            zone_counts[z] += 1;
+        }
+        Ok(Scenario {
+            spec,
+            zones,
+            start_zone_of: zone_of.clone(),
+            zone_of,
+            zone_counts,
+            move_rng,
+            move_prob,
+            type_scale: [1.0; 3],
+            loss_scale: 1.0,
+            next_phase: 0,
+            ticks: 0,
+            window: ScenarioWindow::default(),
+            total_handoffs: 0,
+            total_dropped: 0,
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.spec.name
+    }
+
+    pub fn n_zones(&self) -> usize {
+        self.zones.len()
+    }
+
+    pub fn n_phases(&self) -> usize {
+        self.spec.phases.len()
+    }
+
+    pub fn n_clients(&self) -> usize {
+        self.zone_of.len()
+    }
+
+    /// Current mobility rate (phases may have changed it).
+    pub fn move_prob(&self) -> f64 {
+        self.move_prob
+    }
+
+    pub fn zone_of(&self, id: usize) -> usize {
+        self.zone_of[id]
+    }
+
+    /// Run-total handoffs (see also the per-window counters).
+    pub fn handoffs_total(&self) -> u64 {
+        self.total_handoffs
+    }
+
+    /// Run-total in-flight layers dropped to handoffs.
+    pub fn dropped_total(&self) -> u64 {
+        self.total_dropped
+    }
+
+    /// Record `n` in-flight layers dropped by a handoff (engine callback).
+    pub fn note_dropped(&mut self, n: u64) {
+        self.window.dropped_handoff += n;
+        self.total_dropped += n;
+    }
+
+    fn relocate(&mut self, id: usize, z: usize) {
+        let from = self.zone_of[id];
+        if from != z {
+            self.zone_of[id] = z;
+            self.zone_counts[from] -= 1;
+            self.zone_counts[z] += 1;
+            self.window.handoffs += 1;
+            self.total_handoffs += 1;
+        }
+    }
+
+    /// One scenario tick at virtual time `t`: step each client's mobility
+    /// chain, then apply every phase whose `at_s` has been reached (phases
+    /// run last so a forced relocation is the tick's final word). Barrier
+    /// engines call this once per round (with the cumulative round clock),
+    /// async engines on every `FadingTick`.
+    pub fn tick(&mut self, t: f64) -> TickEffects {
+        self.ticks += 1;
+        let nz = self.zones.len();
+        let mut moved: Vec<usize> = Vec::new();
+        if nz > 1 && self.move_prob > 0.0 {
+            for id in 0..self.zone_of.len() {
+                if self.move_rng[id].uniform() < self.move_prob {
+                    // Uniform over the *other* zones.
+                    let mut z = self.move_rng[id].index(nz - 1);
+                    if z >= self.zone_of[id] {
+                        z += 1;
+                    }
+                    self.relocate(id, z);
+                    moved.push(id);
+                }
+            }
+        }
+        let mut phase_fired = false;
+        while self.next_phase < self.spec.phases.len()
+            && self.spec.phases[self.next_phase].at_s <= t
+        {
+            let ph = self.spec.phases[self.next_phase].clone();
+            self.next_phase += 1;
+            phase_fired = true;
+            if let Some(m) = ph.move_prob {
+                self.move_prob = m;
+            }
+            if let Some(l) = ph.loss_scale {
+                self.loss_scale = l;
+            }
+            for (slot, s) in ph.bw_scale.iter().enumerate() {
+                if let Some(s) = s {
+                    self.type_scale[slot] = *s;
+                }
+            }
+            if let Some(z) = ph.zone {
+                for id in 0..self.zone_of.len() {
+                    self.relocate(id, z);
+                }
+            }
+        }
+        let reconfigure = if phase_fired {
+            // A phase changes global scales (or relocates everyone): every
+            // live channel bundle must pick the new world up.
+            (0..self.zone_of.len()).collect()
+        } else {
+            moved
+        };
+        TickEffects { reconfigure }
+    }
+
+    /// Apply client `id`'s current zone configuration onto a channel
+    /// bundle (uplink or downlink): availability mask, fading constants
+    /// (with the phase loss scale), dynamics source, and bandwidth scale.
+    /// Fading state and link RNG streams are preserved; trace cursors are
+    /// re-phased from the scenario clock so repeated configuration stays
+    /// deterministic.
+    pub fn configure(&self, id: usize, ch: &mut DeviceChannels) {
+        let z = &self.zones[self.zone_of[id]];
+        for (i, link) in ch.links.iter_mut().enumerate() {
+            let up = z.mask.get(i).copied().unwrap_or(true);
+            let scale = (z.bw_scale * self.type_scale[type_slot(link.ty)]).min(1.0);
+            let dynamics = match &z.trace {
+                None => ChannelDynamics::Markov,
+                Some(pts) => ChannelDynamics::Trace(TraceReplay::new(
+                    pts.clone(),
+                    id.wrapping_mul(131)
+                        .wrapping_add(i.wrapping_mul(17))
+                        .wrapping_add(self.ticks as usize),
+                )),
+            };
+            // The phase loss scale rides on the link itself so it reaches
+            // Markov *and* trace dynamics uniformly.
+            link.apply_profile(up, z.fading, dynamics, scale, self.loss_scale);
+        }
+        debug_assert!(
+            ch.links.iter().any(crate::channels::Link::is_up),
+            "zone validation guarantees at least one live channel"
+        );
+    }
+
+    /// Median zone id over all clients — the `zone_p50` CSV column.
+    /// Nearest-rank over the incremental per-zone histogram (the same
+    /// convention as [`crate::metrics::percentile`] at p = 50), so the
+    /// per-record cost is O(zones) regardless of population size.
+    pub fn zone_p50(&self) -> f64 {
+        let total: u64 = self.zone_counts.iter().sum();
+        if total == 0 {
+            return f64::NAN;
+        }
+        let rank = total.div_ceil(2).max(1);
+        let mut cum = 0u64;
+        for (z, &c) in self.zone_counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return z as f64;
+            }
+        }
+        (self.zone_counts.len() - 1) as f64
+    }
+
+    /// Fresh FL episode: zones, phase cursor, scales and counters restart;
+    /// mobility chains keep their streams (like the fading chains).
+    pub fn reset_episode(&mut self) {
+        self.zone_of.copy_from_slice(&self.start_zone_of);
+        self.zone_counts.iter_mut().for_each(|c| *c = 0);
+        for &z in &self.zone_of {
+            self.zone_counts[z] += 1;
+        }
+        self.move_prob = self.spec.move_prob;
+        self.type_scale = [1.0; 3];
+        self.loss_scale = 1.0;
+        self.next_phase = 0;
+        self.ticks = 0;
+        self.window = ScenarioWindow::default();
+        self.total_handoffs = 0;
+        self.total_dropped = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn default_types() -> Vec<ChannelType> {
+        vec![ChannelType::G5, ChannelType::G4, ChannelType::G3]
+    }
+
+    #[test]
+    fn builtin_presets_validate_against_default_channels() {
+        let reg = ScenarioRegistry::builtin();
+        let types = default_types();
+        assert_eq!(
+            reg.names(),
+            vec!["commute", "diurnal", "rural-3g", "stadium-flash-crowd"]
+        );
+        for name in reg.names() {
+            let spec = reg.get(name).unwrap();
+            spec.validate(&types).unwrap_or_else(|e| panic!("{name}: {e}"));
+            // And the runtime builds.
+            Scenario::new(spec.clone(), 5, &types, &Rng::new(1)).unwrap();
+        }
+        assert!(ScenarioRegistry::resolve("Stadium-Flash-Crowd").is_ok());
+        let err = ScenarioRegistry::resolve("warp").unwrap_err();
+        assert!(err.contains("rural-3g"), "{err}");
+    }
+
+    #[test]
+    fn spec_parses_from_toml_dsl() {
+        let text = r#"
+[scenario]
+name = "two-world"
+move_prob = 0.1
+start_spread = true
+
+[scenario.zone.0]
+name = "city"
+channels = ["5g", "4g", "3g"]
+
+[[scenario.zone]]
+name = "tunnel"
+channels = ["3g"]
+dynamics = "gilbert-elliott"
+bad_bw = 0.2
+
+[[scenario.phase]]
+at_s = 30.0
+zone = 1
+bw_scale_4g = 0.5
+
+[[scenario.phase]]
+at_s = 10.0
+move_prob = 0.5
+"#;
+        let doc = Document::parse(text).unwrap();
+        let spec = ScenarioSpec::from_document(&doc).unwrap().expect("scenario present");
+        assert_eq!(spec.name, "two-world");
+        assert_eq!(spec.zones.len(), 2);
+        assert_eq!(spec.zones[1].name, "tunnel");
+        assert!(matches!(
+            spec.zones[1].dynamics,
+            DynamicsKind::GilbertElliott { bad_bw, .. } if (bad_bw - 0.2).abs() < 1e-12
+        ));
+        // Phases sorted by at_s regardless of document order.
+        assert_eq!(spec.phases.len(), 2);
+        assert!(spec.phases[0].at_s < spec.phases[1].at_s);
+        assert_eq!(spec.phases[1].zone, Some(1));
+        assert_eq!(spec.phases[1].bw_scale[1], Some(0.5));
+        spec.validate(&default_types()).unwrap();
+        // No scenario tree at all -> None.
+        assert!(ScenarioSpec::from_document(&Document::parse("rounds = 3").unwrap())
+            .unwrap()
+            .is_none());
+        // Zone numbering gaps are an error, not a silent renumbering
+        // (phases reference zones positionally).
+        let gap = Document::parse("[scenario.zone.1]\nchannels = [\"5g\"]\n").unwrap();
+        let err = ScenarioSpec::from_document(&gap).unwrap_err();
+        assert!(err.contains("contiguously"), "{err}");
+    }
+
+    #[test]
+    fn validation_rejects_broken_worlds() {
+        let types = default_types();
+        let reg = ScenarioRegistry::builtin();
+        let base = reg.get("diurnal").unwrap().clone();
+        // Zone with a channel the experiment lacks.
+        let mut bad = base.clone();
+        bad.zones[0].channels = vec![ChannelType::G5];
+        assert!(bad.validate(&[ChannelType::G3]).is_err());
+        // Empty zone list / empty channels.
+        let mut bad = base.clone();
+        bad.zones.clear();
+        assert!(bad.validate(&types).is_err());
+        let mut bad = base.clone();
+        bad.zones[0].channels.clear();
+        assert!(bad.validate(&types).is_err());
+        // Phase referencing a missing zone.
+        let mut bad = base.clone();
+        bad.phases.push(PhaseSpec { at_s: 1.0, zone: Some(7), ..Default::default() });
+        assert!(bad.validate(&types).is_err());
+        // Out-of-range scales.
+        let mut bad = base.clone();
+        bad.zones[0].bw_scale = 1.5;
+        assert!(bad.validate(&types).is_err());
+        let mut bad = base;
+        bad.move_prob = -0.1;
+        assert!(bad.validate(&types).is_err());
+    }
+
+    #[test]
+    fn forced_phase_relocates_everyone_and_counts_handoffs() {
+        let spec = ScenarioRegistry::resolve("stadium-flash-crowd").unwrap();
+        let mut sc = Scenario::new(spec, 4, &default_types(), &Rng::new(3)).unwrap();
+        assert_eq!(sc.zone_p50(), 0.0);
+        // Before the phase: nothing moves at t < 2 with move_prob 0.02
+        // (draws may move someone, but the forced phase is the sure thing).
+        let fx = sc.tick(2.5);
+        assert_eq!(fx.reconfigure.len(), 4, "phase fire reconfigures everyone");
+        assert!((0..4).all(|id| sc.zone_of(id) == 1));
+        assert!(sc.handoffs_total() >= 4);
+        assert_eq!(sc.zone_p50(), 1.0);
+        assert!((sc.move_prob() - 0.35).abs() < 1e-12);
+        // The 5G throttle phase applied.
+        assert!((sc.type_scale[type_slot(ChannelType::G5)] - 0.6).abs() < 1e-12);
+        let w = sc.window.take();
+        assert!(w.handoffs >= 4);
+        // Reset restores the initial world.
+        sc.reset_episode();
+        assert!((0..4).all(|id| sc.zone_of(id) == 0));
+        assert!((sc.move_prob() - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn configure_masks_channels_and_is_deterministic() {
+        let spec = ScenarioRegistry::resolve("stadium-flash-crowd").unwrap();
+        let types = default_types();
+        let mut sc = Scenario::new(spec, 2, &types, &Rng::new(5)).unwrap();
+        sc.tick(3.0); // force everyone into the stadium (no 3G)
+        let rng = Rng::new(9);
+        let mut ch = DeviceChannels::new(&types, &rng, 0);
+        sc.configure(0, &mut ch);
+        assert_eq!(ch.up_mask(), vec![true, true, false], "stadium masks 3G");
+        assert!(ch.first_up().is_some());
+        // Stadium runs congestion-burst traces: bandwidth comes from the
+        // trace, deterministically for the same scenario seed and clock.
+        let mut ch2 = DeviceChannels::new(&types, &rng, 0);
+        sc.configure(0, &mut ch2);
+        for (a, b) in ch.links.iter().zip(&ch2.links) {
+            assert_eq!(
+                a.effective_bandwidth().to_bits(),
+                b.effective_bandwidth().to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn mobility_chain_moves_clients_between_zones() {
+        let spec = ScenarioSpec {
+            name: "pair".into(),
+            move_prob: 0.5,
+            start_spread: false,
+            trace_len: 64,
+            zones: vec![
+                zone(
+                    "a",
+                    &[ChannelType::G5, ChannelType::G4, ChannelType::G3],
+                    1.0,
+                    FadingParams::default(),
+                    DynamicsKind::Markov,
+                ),
+                zone(
+                    "b",
+                    &[ChannelType::G4],
+                    1.0,
+                    FadingParams::default(),
+                    DynamicsKind::Markov,
+                ),
+            ],
+            phases: Vec::new(),
+        };
+        let mut sc = Scenario::new(spec, 8, &default_types(), &Rng::new(11)).unwrap();
+        let mut moves = 0u64;
+        for t in 0..40 {
+            let fx = sc.tick(t as f64);
+            moves += fx.reconfigure.len() as u64;
+        }
+        assert!(moves > 20, "move_prob 0.5 over 8x40 draws moved only {moves}");
+        assert_eq!(sc.handoffs_total(), moves);
+        // Determinism: a twin scenario replays the same move sequence.
+        let spec2 = ScenarioRegistry::resolve("commute").unwrap();
+        let a = Scenario::new(spec2.clone(), 6, &default_types(), &Rng::new(2));
+        let b = Scenario::new(spec2, 6, &default_types(), &Rng::new(2));
+        let (mut a, mut b) = (a.unwrap(), b.unwrap());
+        for t in 0..30 {
+            assert_eq!(a.tick(t as f64).reconfigure, b.tick(t as f64).reconfigure);
+        }
+    }
+}

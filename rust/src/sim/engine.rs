@@ -29,13 +29,14 @@ use anyhow::Result;
 use super::event::{Event, EventQueue};
 use super::{SimStats, SyncMode};
 use crate::channels::{AllocationPlan, TransferCost};
-use crate::compression::LgcUpdate;
-use crate::coordinator::device::Device;
+use crate::compression::{Layer, LgcUpdate};
+use crate::coordinator::device::{Device, LayerTransfer};
 use crate::coordinator::experiment::Experiment;
 use crate::coordinator::trainer::{DeviceTrainer, LocalTrainer};
 use crate::drl::DeviceAgent;
 use crate::metrics::{percentile, RoundRecord, RunLog};
 use crate::population::{ClientSampler, Population};
+use crate::scenario::Scenario;
 
 /// Drive `exp` to completion under its resolved sync mode, appending one
 /// [`RoundRecord`] per round (barrier) or per server aggregation (async).
@@ -47,17 +48,63 @@ pub fn run(
     trainer: &mut dyn LocalTrainer,
     log: &mut RunLog,
 ) -> Result<()> {
-    if exp.population.is_some() {
-        return run_cohort(exp, trainer, log);
+    // Scenario totals are scenario-lifetime counters; snapshot them so
+    // `sim_stats` reports *this run's* share even across repeated `run`
+    // calls on one experiment (multi-episode DRL).
+    let scenario0 = exp
+        .scenario
+        .as_ref()
+        .map(|s| (s.handoffs_total(), s.dropped_total()))
+        .unwrap_or((0, 0));
+    let result = if exp.population.is_some() {
+        run_cohort(exp, trainer, log)
+    } else {
+        match exp.sync_mode {
+            SyncMode::Barrier => run_barrier(exp, trainer, log),
+            SyncMode::SemiAsync { buffer_k } => {
+                run_async(exp, trainer, log, AsyncKind::Semi { buffer_k })
+            }
+            SyncMode::FullyAsync { staleness_decay } => {
+                run_async(exp, trainer, log, AsyncKind::Fully { staleness_decay })
+            }
+        }
+    };
+    if let Some(sc) = exp.scenario.as_ref() {
+        exp.sim_stats.handoffs = sc.handoffs_total() - scenario0.0;
+        exp.sim_stats.dropped_handoff = sc.dropped_total() - scenario0.1;
     }
-    match exp.sync_mode {
-        SyncMode::Barrier => run_barrier(exp, trainer, log),
-        SyncMode::SemiAsync { buffer_k } => {
-            run_async(exp, trainer, log, AsyncKind::Semi { buffer_k })
+    result
+}
+
+/// Advance the scenario world by one tick at virtual time `t` and re-apply
+/// zone configuration to every affected **legacy** (pre-materialized)
+/// device's uplink bundle, plus its downlink bundle when the downlink is
+/// simulated. The cohort engines reconfigure their live slots themselves —
+/// demobilized clients pick the current world up at materialization.
+fn scenario_tick_legacy(exp: &mut Experiment, t: f64) {
+    let Some(sc) = exp.scenario.as_mut() else { return };
+    let fx = sc.tick(t);
+    for &id in &fx.reconfigure {
+        sc.configure(id, &mut exp.devices[id].channels);
+        if let Some(dl) = exp.downlink.as_mut() {
+            sc.configure(id, dl.links_mut(id));
         }
-        SyncMode::FullyAsync { staleness_decay } => {
-            run_async(exp, trainer, log, AsyncKind::Fully { staleness_decay })
-        }
+    }
+}
+
+/// Tear down one delivered uplink layer caught on a channel a handoff
+/// removed: restitute its mass into the device's error-feedback memory,
+/// empty it **in place** (callers rely on position stability against their
+/// layer→channel maps and purge the empties before the server sees the
+/// payload), and count the drop. The single tear-down sequence shared by
+/// the legacy async engine (lazily, at the layer's `LayerArrived`) and the
+/// cohort engine (batched, at the slot's `UploadDone`) — so the two paths
+/// cannot drift apart.
+fn drop_handoff_layer(dev: &mut Device, scenario: &mut Option<Scenario>, layer: &mut Layer) {
+    let torn = std::mem::replace(layer, Layer { indices: Vec::new(), values: Vec::new() });
+    dev.restitute_layer(&torn);
+    if let Some(sc) = scenario.as_mut() {
+        sc.note_dropped(1);
     }
 }
 
@@ -141,6 +188,13 @@ fn barrier_rounds(
             .as_mut()
             .map(|d| d.window.take())
             .unwrap_or_default();
+        // And the scenario's (zero when no scenario is configured).
+        let sw = exp
+            .scenario
+            .as_mut()
+            .map(|s| s.window.take())
+            .unwrap_or_default();
+        let zone_p50 = exp.scenario.as_ref().map(|s| s.zone_p50()).unwrap_or(0.0);
         exp.total_time_s += round_wall;
         let (eval_loss, eval_acc) = if round % exp.cfg.eval_every == 0 || done {
             trainer.eval(&exp.server.params)?
@@ -181,6 +235,9 @@ fn barrier_rounds(
             down_bytes: down.bytes,
             down_energy_j: down.energy_j,
             down_money: down.money,
+            handoffs: sw.handoffs,
+            dropped_handoff: sw.dropped_handoff,
+            zone_p50,
         });
         stats.records += 1;
         Ok(())
@@ -239,6 +296,12 @@ fn barrier_rounds(
                     if let Some(dl) = exp.downlink.as_mut() {
                         dl.step_round();
                     }
+                    // Scenario world: mobility & phases at round start.
+                    // Barrier rounds never carry in-flight layers across a
+                    // tick, so a barrier handoff can never drop one (the
+                    // documented barrier/async divergence).
+                    let clock = exp.total_time_s;
+                    scenario_tick_legacy(exp, clock);
                     for i in 0..m {
                         active[i] = exp.devices[i].meter.within_budget();
                     }
@@ -301,9 +364,10 @@ fn barrier_rounds(
                         if !update.layers.is_empty() {
                             // One in-flight transfer per emitted layer:
                             // layer c rides the plan's c-th active channel
-                            // and lands after that channel's sampled
-                            // transfer time.
-                            let channels = plan.layer_channels();
+                            // (after zone projection — the mapping the
+                            // device actually uploaded on) and lands after
+                            // that channel's sampled transfer time.
+                            let channels = exp.devices[i].effective_layer_channels(&plan);
                             for (layer_idx, &ch) in
                                 channels.iter().take(update.layers.len()).enumerate()
                             {
@@ -579,6 +643,9 @@ struct DevState {
     /// Delivered layers still in flight (scheduled arrivals outstanding).
     expected: usize,
     arrived: usize,
+    /// Per-emitted-layer fates of the in-flight upload (scenario mode uses
+    /// the channel mapping to resolve handoff drops; empty otherwise).
+    transfers: Vec<LayerTransfer>,
     update: Option<LgcUpdate>,
     /// In-flight downlink broadcast payload (downlink enabled only).
     down_update: Option<LgcUpdate>,
@@ -683,6 +750,11 @@ fn run_async(
                 if let Some(dl) = exp.downlink.as_mut() {
                     dl.step_round();
                 }
+                // Scenario mobility & phases run on the same virtual
+                // period; a handoff here may strand in-flight layers on a
+                // vanished channel — they resolve (restitute + drop) at
+                // their scheduled arrival.
+                scenario_tick_legacy(exp, t);
                 if st.iter().any(|d| d.alive) {
                     queue.push(t + exp.cfg.fading_tick_s, Event::FadingTick);
                 }
@@ -740,6 +812,7 @@ fn run_async(
                     }
                 }
                 st[i].update = Some(outcome.update);
+                st[i].transfers = outcome.transfers;
                 st[i].expected = expected;
                 st[i].arrived = 0;
                 st[i].tx_end = t + outcome.wall_time_s;
@@ -754,7 +827,29 @@ fn run_async(
                     complete_upload(exp, trainer, &mut st, &mut queue, &mut ctx, log, i, tx_end)?;
                 }
             }
-            Event::LayerArrived { device: i, .. } => {
+            Event::LayerArrived { device: i, channel: ch, layer } => {
+                // Scenario handoff drop: if a zone change tore down the
+                // channel this layer was riding while it was in flight, the
+                // layer never completes — its mass is restituted into the
+                // device's error memory (the lost-layer path) and it leaves
+                // the pending payload. Resolved lazily at the scheduled
+                // arrival time, so no queue surgery is needed.
+                if exp.scenario.is_some() && !exp.devices[i].channels.links[ch].is_up() {
+                    // Emitted-layer index -> delivered-layer position:
+                    // `update.layers` holds delivered layers in emitted
+                    // order, so the position is the delivered-prefix count.
+                    let pos = st[i].transfers[..layer]
+                        .iter()
+                        .filter(|tr| tr.delivered)
+                        .count();
+                    if let Some(update) = st[i].update.as_mut() {
+                        if let Some(l) = update.layers.get_mut(pos) {
+                            if !l.values.is_empty() {
+                                drop_handoff_layer(&mut exp.devices[i], &mut exp.scenario, l);
+                            }
+                        }
+                    }
+                }
                 st[i].arrived += 1;
                 if st[i].arrived == st[i].expected {
                     complete_upload(exp, trainer, &mut st, &mut queue, &mut ctx, log, i, t)?;
@@ -968,6 +1063,9 @@ fn complete_upload(
     let duration = t - st[i].started_at;
     let staleness = ctx.server_version - st[i].model_version;
     let mut update = st[i].update.take().expect("upload in flight");
+    // Layers emptied by a handoff drop are already restituted — purge them
+    // so the server never sees (or decodes) a torn-down layer.
+    update.layers.retain(|l| !l.values.is_empty());
     // Round-trip through the wire format, as the server sees it (reusing the
     // per-device decode buffer).
     if !update.layers.is_empty() && exp.devices[i].sparse_wire() {
@@ -1128,6 +1226,12 @@ fn push_async_record(
         .as_mut()
         .map(|d| d.window.take())
         .unwrap_or_default();
+    let sw = exp
+        .scenario
+        .as_mut()
+        .map(|s| s.window.take())
+        .unwrap_or_default();
+    let zone_p50 = exp.scenario.as_ref().map(|s| s.zone_p50()).unwrap_or(0.0);
     let (eval_loss, eval_acc) = if round % exp.cfg.eval_every == 0 || done {
         trainer.eval(&exp.server.params)?
     } else {
@@ -1162,6 +1266,9 @@ fn push_async_record(
         down_bytes: down.bytes,
         down_energy_j: down.energy_j,
         down_money: down.money,
+        handoffs: sw.handoffs,
+        dropped_handoff: sw.dropped_handoff,
+        zone_p50,
     };
     exp.total_time_s = now;
     ctx.last_record_t = now;
@@ -1277,6 +1384,13 @@ fn cohort_barrier_rounds(
         if let Some(dl) = exp.downlink.as_mut() {
             dl.step_round();
         }
+        // Scenario mobility & phases advance once per round. Nobody is
+        // materialized between rounds, so no live bundle needs immediate
+        // reconfiguration — each sampled client's channels are configured
+        // to its current zone at materialization below.
+        if let Some(sc) = exp.scenario.as_mut() {
+            let _ = sc.tick(exp.total_time_s);
+        }
         if !pop.any_within_budget() {
             break 'rounds;
         }
@@ -1305,6 +1419,15 @@ fn cohort_barrier_rounds(
             }
             ensure_agent(exp, id);
             let mut dev = pop.materialize(id, &exp.server.params);
+            // The client wakes up in its *current* zone: availability mask,
+            // fading params, dynamics and scales applied to the uplink and
+            // (accounting-only) downlink bundles.
+            if let Some(sc) = exp.scenario.as_ref() {
+                sc.configure(id, &mut dev.channels);
+                if let Some(dl) = exp.downlink.as_mut() {
+                    sc.configure(id, dl.links_mut(id));
+                }
+            }
             let (h, plan) = exp.policy.decide(round, &dev, exp.agents[id].as_mut());
             let loss = dev.local_steps_sharded(trainer, pop.shard(id), h, exp.cfg.lr)?;
             loss_sum += loss;
@@ -1422,6 +1545,12 @@ fn cohort_barrier_rounds(
             .as_mut()
             .map(|d| d.window.take())
             .unwrap_or_default();
+        let sw = exp
+            .scenario
+            .as_mut()
+            .map(|s| s.window.take())
+            .unwrap_or_default();
+        let zone_p50 = exp.scenario.as_ref().map(|s| s.zone_p50()).unwrap_or(0.0);
         log.push(RoundRecord {
             round,
             train_loss: if loss_n == 0 { f64::NAN } else { loss_sum / loss_n as f64 },
@@ -1448,6 +1577,9 @@ fn cohort_barrier_rounds(
             down_bytes: down.bytes,
             down_energy_j: down.energy_j,
             down_money: down.money,
+            handoffs: sw.handoffs,
+            dropped_handoff: sw.dropped_handoff,
+            zone_p50,
         });
         stats.records += 1;
     }
@@ -1470,6 +1602,9 @@ struct CohortSlot {
     compressed: bool,
     model_version: u64,
     update: Option<LgcUpdate>,
+    /// Channel each *delivered* layer of the in-flight upload rode
+    /// (aligned with `update.layers`; scenario handoff-drop bookkeeping).
+    layer_channels: Vec<usize>,
     waiting: bool,
     /// The slot's broadcast download is in flight (downlink enabled): the
     /// client demobilizes at its `SyncConfirmed`, not at `Broadcast`.
@@ -1490,6 +1625,7 @@ impl CohortSlot {
             compressed: false,
             model_version: 0,
             update: None,
+            layer_channels: Vec::new(),
             waiting: false,
             syncing: false,
             retired: true,
@@ -1523,6 +1659,14 @@ fn begin_cohort_slot(
 ) -> Result<()> {
     ensure_agent(exp, client);
     let mut dev = pop.materialize(client, &exp.server.params);
+    // Wake the client up in its current scenario zone (uplink and
+    // accounting-only downlink bundles).
+    if let Some(sc) = exp.scenario.as_ref() {
+        sc.configure(client, &mut dev.channels);
+        if let Some(dl) = exp.downlink.as_mut() {
+            sc.configure(client, dl.links_mut(client));
+        }
+    }
     let (h, plan) = exp.policy.decide(era, &dev, exp.agents[client].as_mut());
     let loss = dev.local_steps_sharded(trainer, pop.shard(client), h, exp.cfg.lr)?;
     let (comp_j, comp_s) = dev.compute_cost(h);
@@ -1537,6 +1681,7 @@ fn begin_cohort_slot(
     s.compressed = false;
     s.model_version = server_version;
     s.update = None;
+    s.layer_channels.clear();
     s.waiting = false;
     s.syncing = false;
     s.retired = false;
@@ -1616,6 +1761,12 @@ fn push_cohort_record(
         .as_mut()
         .map(|d| d.window.take())
         .unwrap_or_default();
+    let sw = exp
+        .scenario
+        .as_mut()
+        .map(|s| s.window.take())
+        .unwrap_or_default();
+    let zone_p50 = exp.scenario.as_ref().map(|s| s.zone_p50()).unwrap_or(0.0);
     let (eval_loss, eval_acc) = if round % exp.cfg.eval_every == 0 || done {
         trainer.eval(&exp.server.params)?
     } else {
@@ -1657,6 +1808,9 @@ fn push_cohort_record(
         down_bytes: down.bytes,
         down_energy_j: down.energy_j,
         down_money: down.money,
+        handoffs: sw.handoffs,
+        dropped_handoff: sw.dropped_handoff,
+        zone_p50,
     };
     exp.total_time_s = now;
     *last_record_t = now;
@@ -1752,6 +1906,29 @@ fn cohort_async_rounds(
                         dev.channels.step_round();
                     }
                 }
+                // Scenario mobility & phases: only *live* slot devices
+                // need immediate reconfiguration (their in-flight layers
+                // resolve at `UploadDone`); demobilized clients — the vast
+                // majority of a large population — pick their new zone up
+                // when next materialized (`begin_cohort_slot` configures
+                // both the uplink and downlink bundles). `reconfigure` is
+                // ascending, so one scan over the O(cohort) slots suffices.
+                if let Some(sc) = exp.scenario.as_mut() {
+                    let fx = sc.tick(t);
+                    if !fx.reconfigure.is_empty() {
+                        for s in slots.iter_mut() {
+                            if s.retired || fx.reconfigure.binary_search(&s.client).is_err() {
+                                continue;
+                            }
+                            if let Some(dev) = s.dev.as_mut() {
+                                sc.configure(s.client, &mut dev.channels);
+                            }
+                            if let Some(dl) = exp.downlink.as_mut() {
+                                sc.configure(s.client, dl.links_mut(s.client));
+                            }
+                        }
+                    }
+                }
                 // Revive retired slots: a slot retires when the sampler
                 // finds nobody eligible at broadcast time, but churn (or a
                 // budget refill in future samplers) can bring clients back
@@ -1810,6 +1987,15 @@ fn cohort_async_rounds(
                     window.rewards += r;
                     window.reward_n += 1;
                 }
+                // Channel mapping of the delivered layers (aligned with
+                // `update.layers`) — the handoff-drop check at `UploadDone`
+                // needs it to spot layers whose channel has since vanished.
+                let layer_channels: Vec<usize> = outcome
+                    .transfers
+                    .iter()
+                    .filter(|tr| tr.delivered)
+                    .map(|tr| tr.channel)
+                    .collect();
                 let mut update = outcome.update;
                 if !update.layers.is_empty() && pop.midround_offline(client) {
                     // Mid-upload churn: the server never ACKs, so every
@@ -1820,6 +2006,7 @@ fn cohort_async_rounds(
                     window.dropped += 1;
                 }
                 s.update = Some(update);
+                s.layer_channels = layer_channels;
                 queue.push(t + outcome.wall_time_s, Event::UploadDone { device: i });
             }
             Event::UploadDone { device: i } => {
@@ -1829,7 +2016,31 @@ fn cohort_async_rounds(
                 let loss = slots[i].loss;
                 slots[i].waiting = true;
                 in_flight -= 1;
-                let update = slots[i].update.take().expect("upload in flight");
+                let mut update = slots[i].update.take().expect("upload in flight");
+                // Scenario handoff drop: the slot's radio just went quiet —
+                // any delivered layer whose channel has since vanished from
+                // the client's zone never completed its association;
+                // restitute it and purge it from the payload.
+                if exp.scenario.is_some() && !update.layers.is_empty() {
+                    let s = &mut slots[i];
+                    if let Some(dev) = s.dev.as_mut() {
+                        let mut any_dropped = false;
+                        for (pos, &ch) in s.layer_channels.iter().enumerate() {
+                            if pos >= update.layers.len() {
+                                break;
+                            }
+                            if !dev.channels.links[ch].is_up()
+                                && !update.layers[pos].values.is_empty()
+                            {
+                                drop_handoff_layer(dev, &mut exp.scenario, &mut update.layers[pos]);
+                                any_dropped = true;
+                            }
+                        }
+                        if any_dropped {
+                            update.layers.retain(|l| !l.values.is_empty());
+                        }
+                    }
+                }
                 let delivered = !update.layers.is_empty();
                 if delivered {
                     // Wire round-trip into the shared decode buffer.

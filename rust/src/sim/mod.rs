@@ -40,4 +40,9 @@ pub struct SimStats {
     pub lost_layers: u64,
     /// Uploads lost to mid-upload availability churn (population mode).
     pub dropped_offline: u64,
+    /// Zone changes over the run (scenario mobility + forced phases).
+    pub handoffs: u64,
+    /// In-flight uplink layers dropped because a handoff removed their
+    /// channel (scenario mode; restituted into error-feedback memory).
+    pub dropped_handoff: u64,
 }

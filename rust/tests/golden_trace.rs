@@ -61,19 +61,24 @@ fn fnv1a(bytes: &[u8]) -> u64 {
     h
 }
 
-/// The compact per-round fingerprint: exact loss bits (silent numeric
-/// drift changes these first), traffic, and participation counts.
+/// The compact per-round fingerprint: exact loss and round-time bits
+/// (silent numeric drift changes these first; scenario worlds that alter
+/// only the timing profile still discriminate), traffic, participation
+/// counts, and handoff telemetry.
 fn fingerprint(log: &RunLog) -> String {
     let mut buf = String::new();
     for r in &log.records {
         let _ = write!(
             buf,
-            "{}:{:016x}:{}:{}:{};",
+            "{}:{:016x}:{:016x}:{}:{}:{}:{}:{};",
             r.round,
             r.train_loss.to_bits(),
+            r.round_time_s.to_bits(),
             r.bytes_up,
             r.sampled,
-            r.completed
+            r.completed,
+            r.handoffs,
+            r.dropped_handoff
         );
     }
     format!("{:016x}", fnv1a(buf.as_bytes()))
@@ -85,6 +90,25 @@ fn run_once(mechanism: Mechanism) -> String {
     let mut exp = Experiment::new(c, &trainer);
     let log = exp.run(&mut trainer).expect("run");
     assert_eq!(log.records.len(), 6, "{}", mechanism.name());
+    fingerprint(&log)
+}
+
+/// One short seeded lgc-static run inside a named scenario preset — pins
+/// the trace generators, mobility chains, phase application and handoff
+/// accounting alongside the per-mechanism numerics.
+fn run_once_scenario(preset: &str) -> String {
+    let mut c = cfg(Mechanism::LgcStatic);
+    // Ten rounds (vs six for the mechanism runs): the virtual clock
+    // reliably crosses the stadium preset's first phase boundary (2 s), so
+    // every preset's fingerprint captures real scenario action.
+    c.rounds = 10;
+    c.scenario = Some(
+        lgc::scenario::ScenarioRegistry::resolve(preset).expect("builtin preset"),
+    );
+    let mut trainer = NativeLrTrainer::new(&c);
+    let mut exp = Experiment::new(c, &trainer);
+    let log = exp.run(&mut trainer).expect("scenario run");
+    assert_eq!(log.records.len(), 10, "{preset}");
     fingerprint(&log)
 }
 
@@ -147,6 +171,27 @@ fn golden_traces_per_mechanism_preset() {
             }
             _ => {
                 golden.insert(name.to_string(), a);
+                blessed_any = true;
+            }
+        }
+    }
+    // Scenario presets: the same blessing protocol, keyed `scenario-<name>`
+    // (lgc-static inside each preset world).
+    for preset in ["diurnal", "rural-3g", "commute", "stadium-flash-crowd"] {
+        let key = format!("scenario-{preset}");
+        let a = run_once_scenario(preset);
+        let b = run_once_scenario(preset);
+        assert_eq!(a, b, "{key}: seeded scenario run is not deterministic");
+        match golden.get(&key) {
+            Some(expected) if !bless_all => {
+                assert_eq!(
+                    &a, expected,
+                    "{key}: scenario trace fingerprint drifted from the blessed value — \
+                     re-bless with LGC_BLESS=1 if intentional"
+                );
+            }
+            _ => {
+                golden.insert(key, a);
                 blessed_any = true;
             }
         }

@@ -1,10 +1,14 @@
 //! Property-based tests over the library invariants (DESIGN.md §7), using
 //! the in-repo mini-proptest harness (`lgc::testing`).
 
-use lgc::channels::allocate_budget;
+use lgc::channels::{allocate_budget, AllocationPlan, ChannelType, DeviceChannels};
 use lgc::compression::{lgc_compress, wire, CompressScratch, ErrorFeedback};
 use lgc::config::toml::Document;
 use lgc::coordinator::Server;
+use lgc::scenario::{
+    congestion_burst_trace, diurnal_trace, dynamics, gilbert_elliott_trace, DynamicsKind,
+    Scenario, ScenarioSpec, TraceReplay, ZoneSpec,
+};
 use lgc::testing::{check, default_cases, gen, Shrink};
 use lgc::util::{norm2, Rng};
 
@@ -269,6 +273,231 @@ fn prop_fedavg_equals_lgc_full_k() {
             let dec = upd.decode();
             if &dec != progress {
                 return Err("full-K LGC is not identity".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Scenario subsystem: the ChannelDynamics contract (DESIGN.md §"Scenarios,
+// mobility & handoff")
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+struct TraceCase {
+    seed: u64,
+    len: usize,
+    period: usize,
+    floor: f64,
+    enter: f64,
+    exit: f64,
+    depth: f64,
+    loss: f64,
+}
+
+impl Shrink for TraceCase {}
+
+/// Every dynamics source keeps bandwidth multipliers in (0, 1] and loss
+/// probabilities in [0, 1) — the contract the channel simulator relies on.
+#[test]
+fn prop_trace_generators_obey_dynamics_contract() {
+    check(
+        0xB1,
+        default_cases(),
+        |rng| TraceCase {
+            seed: rng.next_u64(),
+            len: gen::usize_in(rng, 2, 600),
+            period: gen::usize_in(rng, 1, 512),
+            floor: rng.range(0.01, 1.0),
+            enter: rng.range(0.0, 0.99),
+            exit: rng.range(0.0, 1.0),
+            depth: rng.range(0.01, 1.0),
+            loss: rng.range(0.0, 0.9),
+        },
+        |c| {
+            let d = diurnal_trace(c.len, c.period, c.floor);
+            dynamics::validate_points(&d).map_err(|e| format!("diurnal: {e}"))?;
+            let mut r1 = Rng::new(c.seed);
+            let b = congestion_burst_trace(c.len, &mut r1, c.enter, c.exit, c.depth, c.loss);
+            dynamics::validate_points(&b).map_err(|e| format!("bursts: {e}"))?;
+            let mut r2 = Rng::new(c.seed ^ 0xDEAD);
+            let g = gilbert_elliott_trace(c.len, &mut r2, c.enter, c.exit, c.depth, c.loss);
+            dynamics::validate_points(&g).map_err(|e| format!("GE: {e}"))?;
+            Ok(())
+        },
+    );
+}
+
+/// Trace replay is deterministic per seed: the same seed produces the same
+/// trace, and two replays starting at the same offset walk identically.
+#[test]
+fn prop_trace_replay_deterministic_per_seed() {
+    check(
+        0xB2,
+        default_cases(),
+        |rng| TraceCase {
+            seed: rng.next_u64(),
+            len: gen::usize_in(rng, 2, 300),
+            period: 1,
+            floor: 0.5,
+            enter: rng.range(0.0, 0.5),
+            exit: rng.range(0.1, 1.0),
+            depth: rng.range(0.01, 1.0),
+            loss: rng.range(0.0, 0.5),
+        },
+        |c| {
+            let mut ra = Rng::new(c.seed);
+            let mut rb = Rng::new(c.seed);
+            let a = congestion_burst_trace(c.len, &mut ra, c.enter, c.exit, c.depth, c.loss);
+            let b = congestion_burst_trace(c.len, &mut rb, c.enter, c.exit, c.depth, c.loss);
+            if a[..] != b[..] {
+                return Err("same seed produced different traces".into());
+            }
+            let offset = (c.seed as usize) % c.len;
+            let mut pa = TraceReplay::new(a, offset);
+            let mut pb = TraceReplay::new(b, offset);
+            for step in 0..3 * c.len {
+                if pa.bw().to_bits() != pb.bw().to_bits()
+                    || pa.loss().to_bits() != pb.loss().to_bits()
+                {
+                    return Err(format!("replay diverged at step {step}"));
+                }
+                pa.advance();
+                pb.advance();
+            }
+            Ok(())
+        },
+    );
+}
+
+#[derive(Clone, Debug)]
+struct ProjCase {
+    counts: Vec<usize>,
+    mask: Vec<bool>,
+}
+
+impl Shrink for ProjCase {}
+
+/// Plan projection onto the zone's channel mask preserves the coordinate
+/// budget exactly and silences every masked channel.
+#[test]
+fn prop_plan_projection_preserves_budget() {
+    check(
+        0xB3,
+        default_cases() * 2,
+        |rng| {
+            let n = gen::usize_in(rng, 1, 6);
+            let counts: Vec<usize> = (0..n).map(|_| rng.index(5000)).collect();
+            let mut mask: Vec<bool> = (0..n).map(|_| rng.uniform() < 0.5).collect();
+            let force = rng.index(n);
+            mask[force] = true; // the zone invariant: never zero channels
+            ProjCase { counts, mask }
+        },
+        |c| {
+            let plan = AllocationPlan { counts: c.counts.clone() };
+            match plan.project_onto(&c.mask) {
+                None => {
+                    if c.mask.iter().all(|&u| u) {
+                        Ok(())
+                    } else {
+                        Err("projection skipped despite a masked channel".into())
+                    }
+                }
+                Some(p) => {
+                    if p.counts.len() != c.counts.len() {
+                        return Err("projection changed channel count".into());
+                    }
+                    if p.total() != plan.total() {
+                        return Err(format!(
+                            "budget not preserved: {} -> {}",
+                            plan.total(),
+                            p.total()
+                        ));
+                    }
+                    for (i, (&cnt, &up)) in p.counts.iter().zip(&c.mask).enumerate() {
+                        if !up && cnt > 0 {
+                            return Err(format!("masked channel {i} still carries {cnt}"));
+                        }
+                    }
+                    Ok(())
+                }
+            }
+        },
+    );
+}
+
+#[derive(Clone, Debug)]
+struct ZonesCase {
+    seed: u64,
+    /// Per zone: non-empty subset of the 3 default channel types.
+    subsets: Vec<Vec<usize>>,
+}
+
+impl Shrink for ZonesCase {
+    fn shrink(&self) -> Vec<Self> {
+        if self.subsets.len() <= 1 {
+            return vec![];
+        }
+        vec![ZonesCase { seed: self.seed, subsets: self.subsets[..1].to_vec() }]
+    }
+}
+
+/// A handoff never leaves a device with zero channels: any scenario built
+/// from non-empty zone channel sets keeps at least one link up under every
+/// mobility/phase history.
+#[test]
+fn prop_handoff_never_strands_a_device() {
+    let types = [ChannelType::G5, ChannelType::G4, ChannelType::G3];
+    check(
+        0xB4,
+        default_cases() / 2,
+        |rng| {
+            let nz = gen::usize_in(rng, 1, 4);
+            let subsets = (0..nz)
+                .map(|_| {
+                    let mut s: Vec<usize> = (0..3).filter(|_| rng.uniform() < 0.5).collect();
+                    if s.is_empty() {
+                        s.push(rng.index(3));
+                    }
+                    s
+                })
+                .collect();
+            ZonesCase { seed: rng.next_u64(), subsets }
+        },
+        |c| {
+            let zones: Vec<ZoneSpec> = c
+                .subsets
+                .iter()
+                .enumerate()
+                .map(|(i, subset)| ZoneSpec {
+                    name: format!("z{i}"),
+                    channels: subset.iter().map(|&k| types[k]).collect(),
+                    bw_scale: 1.0,
+                    fading: Default::default(),
+                    dynamics: DynamicsKind::Markov,
+                })
+                .collect();
+            let spec = ScenarioSpec {
+                name: "prop".into(),
+                move_prob: 0.5,
+                start_spread: true,
+                trace_len: 16,
+                zones,
+                phases: Vec::new(),
+            };
+            let mut sc = Scenario::new(spec, 4, &types, &Rng::new(c.seed))
+                .map_err(|e| format!("build: {e}"))?;
+            let rng = Rng::new(c.seed ^ 1);
+            let mut ch = DeviceChannels::new(&types, &rng, 0);
+            for t in 0..12 {
+                sc.tick(t as f64);
+                for id in 0..4 {
+                    sc.configure(id, &mut ch);
+                    if ch.first_up().is_none() {
+                        return Err(format!("device {id} stranded with zero channels"));
+                    }
+                }
             }
             Ok(())
         },
