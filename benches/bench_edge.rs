@@ -1,0 +1,148 @@
+//! Edge-tier bench: the cost and effect of hierarchical per-zone
+//! aggregation on the stadium-flash-crowd world.
+//!
+//! ```bash
+//! cargo bench --bench bench_edge [-- --json]
+//! ```
+//!
+//! Two panels:
+//! 1. **flat vs edge** — the legacy semi-async engine on
+//!    `stadium-flash-crowd` without and with the edge tier (5G backhaul):
+//!    events/s overhead of holding/flushing/migrating, plus the
+//!    deterministic backhaul + migration telemetry;
+//! 2. **backhaul throttle sweep** — bw_scale ∈ {1.0, 0.2, 0.05} on a 3G
+//!    backhaul: how the simulated finish time and the count of
+//!    backhaul-bound rounds grow as the cloud leg starves.
+//!
+//! With `--json` the deterministic counters land in `BENCH_edge.json` for
+//! the CI baseline diff (python/bench_diff.py).
+
+use std::time::Instant;
+
+use lgc::bench::{JsonSink, Table};
+use lgc::channels::ChannelType;
+use lgc::config::{ExperimentConfig, Mechanism, Workload};
+use lgc::coordinator::{ExperimentBuilder, NativeLrTrainer};
+use lgc::edge::EdgeSettings;
+use lgc::scenario::ScenarioRegistry;
+use lgc::sim::SyncMode;
+
+fn base_cfg(rounds: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        mechanism: Mechanism::LgcStatic,
+        workload: Workload::LrMnist,
+        rounds,
+        devices: 6,
+        samples_per_device: 256,
+        eval_samples: 256,
+        eval_every: 1_000_000, // keep eval out of the timings
+        lr: 0.05,
+        h_fixed: 2,
+        h_max: 4,
+        use_runtime: false,
+        sync_mode: Some(SyncMode::SemiAsync { buffer_k: 2 }),
+        ..ExperimentConfig::default()
+    }
+}
+
+struct RunStats {
+    wall_s: f64,
+    sim_s: f64,
+    events: u64,
+    records: usize,
+    backhaul_bytes: u64,
+    migrated: u64,
+    bound_rounds: u64,
+}
+
+fn run(cfg: ExperimentConfig) -> RunStats {
+    let mut trainer = NativeLrTrainer::new(&cfg);
+    let mut exp = ExperimentBuilder::new(cfg)
+        .trainer(&trainer)
+        .build()
+        .expect("build");
+    let t0 = Instant::now();
+    let log = exp.run(&mut trainer).expect("run");
+    RunStats {
+        wall_s: t0.elapsed().as_secs_f64(),
+        sim_s: log.records.last().map_or(0.0, |r| r.total_time_s),
+        events: exp.sim_stats.events,
+        records: log.records.len(),
+        backhaul_bytes: log.records.iter().map(|r| r.backhaul_bytes).sum(),
+        migrated: log.records.iter().map(|r| r.migrated_handoff).sum(),
+        bound_rounds: log.records.iter().map(|r| r.edge_rounds_bound).sum(),
+    }
+}
+
+fn main() {
+    let mut json = JsonSink::from_args("edge");
+
+    println!("== flat vs edge (stadium-flash-crowd, semi-async, 40 records) ==\n");
+    let mut table = Table::new(&[
+        "topology",
+        "records",
+        "events/s",
+        "backhaul MB",
+        "migrated",
+        "bound rounds",
+        "wall (s)",
+    ]);
+    for (label, edge) in [
+        ("flat", None),
+        (
+            "edge (5G backhaul)",
+            Some(EdgeSettings { flush_k: 2, ..EdgeSettings::default() }),
+        ),
+    ] {
+        let mut cfg = base_cfg(40);
+        cfg.scenario = Some(ScenarioRegistry::resolve("stadium-flash-crowd").expect("preset"));
+        cfg.edge_settings = edge;
+        let s = run(cfg);
+        let slug = if label == "flat" { "flat" } else { "edge" };
+        json.push(&format!("topology/{slug}/events_per_s"),
+            s.events as f64 / s.wall_s.max(1e-9), "events/s");
+        json.push(&format!("topology/{slug}/backhaul_bytes"), s.backhaul_bytes as f64, "bytes");
+        json.push(&format!("topology/{slug}/migrated"), s.migrated as f64, "count");
+        table.row(&[
+            label.to_string(),
+            s.records.to_string(),
+            format!("{:.0}", s.events as f64 / s.wall_s.max(1e-9)),
+            format!("{:.2}", s.backhaul_bytes as f64 / (1024.0 * 1024.0)),
+            s.migrated.to_string(),
+            s.bound_rounds.to_string(),
+            format!("{:.3}", s.wall_s),
+        ]);
+    }
+    table.print();
+
+    println!("\n== backhaul throttle sweep (3G backhaul, 30 records) ==\n");
+    let mut table = Table::new(&[
+        "bw_scale",
+        "sim time (s)",
+        "bound rounds",
+        "backhaul MB",
+        "wall (s)",
+    ]);
+    for bw_scale in [1.0, 0.2, 0.05] {
+        let mut cfg = base_cfg(30);
+        cfg.scenario = Some(ScenarioRegistry::resolve("stadium-flash-crowd").expect("preset"));
+        cfg.edge_settings = Some(EdgeSettings {
+            backhaul: ChannelType::G3,
+            bw_scale,
+            flush_k: 2,
+            ..EdgeSettings::default()
+        });
+        let s = run(cfg);
+        json.push(&format!("throttle/{bw_scale}/bound_rounds"), s.bound_rounds as f64, "count");
+        json.push(&format!("throttle/{bw_scale}/sim_s"), s.sim_s, "sim_s");
+        table.row(&[
+            format!("{bw_scale}"),
+            format!("{:.1}", s.sim_s),
+            s.bound_rounds.to_string(),
+            format!("{:.2}", s.backhaul_bytes as f64 / (1024.0 * 1024.0)),
+            format!("{:.3}", s.wall_s),
+        ]);
+    }
+    table.print();
+    json.finish();
+}

@@ -16,7 +16,7 @@
 
 use std::time::Instant;
 
-use lgc::bench::Table;
+use lgc::bench::{JsonSink, Table};
 use lgc::config::{ExperimentConfig, Mechanism, Workload};
 use lgc::coordinator::{ExperimentBuilder, NativeLrTrainer};
 use lgc::population::SamplerKind;
@@ -78,6 +78,7 @@ fn run_case(population: usize, mode: SyncMode) -> Case {
 }
 
 fn main() {
+    let mut json = JsonSink::from_args("population_scale");
     println!("== population scale (LgcStatic / LR, cohort 64, 3 rounds) ==\n");
     let mut table = Table::new(&[
         "mode",
@@ -95,6 +96,11 @@ fn main() {
         ] {
             let r = run_case(population, mode);
             assert_eq!(r.records, 3);
+            let slug = if matches!(mode, SyncMode::Barrier) { "barrier" } else { "semi-async" };
+            json.push(&format!("pop/{population}/{slug}/rounds_per_s"),
+                r.records as f64 / r.wall_s.max(1e-9), "rounds/s");
+            json.push(&format!("pop/{population}/{slug}/peak_materialized"),
+                r.peak_materialized as f64, "count");
             table.row(&[
                 name.to_string(),
                 population.to_string(),
@@ -107,6 +113,7 @@ fn main() {
         }
     }
     table.print();
+    json.finish();
     println!(
         "\npeak materialized stays at the cohort size regardless of population; the\n\
          population cost is the spec store (+ residuals of sampled clients), visible\n\

@@ -19,7 +19,7 @@
 
 use std::time::Instant;
 
-use lgc::bench::Table;
+use lgc::bench::{JsonSink, Table};
 use lgc::channels::{ChannelType, FadingParams};
 use lgc::config::{ExperimentConfig, Mechanism, Workload};
 use lgc::coordinator::{ExperimentBuilder, NativeLrTrainer};
@@ -96,6 +96,7 @@ fn two_zone_world(move_prob: f64) -> ScenarioSpec {
 }
 
 fn main() {
+    let mut json = JsonSink::from_args("scenario");
     println!("== scenario engine overhead (legacy semi-async, 40 records) ==\n");
     let mut table = Table::new(&[
         "world",
@@ -117,6 +118,12 @@ fn main() {
         cfg.sync_mode = Some(SyncMode::SemiAsync { buffer_k: 2 });
         cfg.scenario = scenario;
         let s = run(cfg);
+        let slug = if label.starts_with("none") { "none" } else { label };
+        json.push(&format!("overhead/{slug}/events_per_s"),
+            s.events as f64 / s.wall_s.max(1e-9), "events/s");
+        json.push(&format!("overhead/{slug}/events"), s.events as f64, "count");
+        json.push(&format!("overhead/{slug}/handoffs"), s.handoffs as f64, "count");
+        json.push(&format!("overhead/{slug}/dropped"), s.dropped as f64, "count");
         table.row(&[
             label.to_string(),
             s.records.to_string(),
@@ -144,6 +151,10 @@ fn main() {
         cfg.cohort = Some(64);
         cfg.scenario = scenario;
         let s = run(cfg);
+        let slug = if label.starts_with("markov") { "markov" } else { "diurnal" };
+        json.push(&format!("dynamics/{slug}/rounds_per_s"),
+            s.records as f64 / s.wall_s.max(1e-9), "rounds/s");
+        json.push(&format!("dynamics/{slug}/handoffs"), s.handoffs as f64, "count");
         table.row(&[
             label.to_string(),
             format!("{:.2}", s.records as f64 / s.wall_s.max(1e-9)),
@@ -166,6 +177,10 @@ fn main() {
         cfg.sync_mode = Some(SyncMode::SemiAsync { buffer_k: 2 });
         cfg.scenario = Some(two_zone_world(move_prob));
         let s = run(cfg);
+        json.push(&format!("churn/{move_prob}/handoffs"), s.handoffs as f64, "count");
+        json.push(&format!("churn/{move_prob}/dropped"), s.dropped as f64, "count");
+        json.push(&format!("churn/{move_prob}/events_per_s"),
+            s.events as f64 / s.wall_s.max(1e-9), "events/s");
         table.row(&[
             format!("{move_prob}"),
             s.handoffs.to_string(),
@@ -175,4 +190,5 @@ fn main() {
         ]);
     }
     table.print();
+    json.finish();
 }

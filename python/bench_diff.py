@@ -1,0 +1,142 @@
+#!/usr/bin/env python3
+"""Diff bench JSON records against the committed baseline.
+
+The bench binaries (``cargo bench --bench bench_scenario -- --json`` etc.)
+write ``BENCH_<name>.json`` files of ``{bench, case, value, unit}`` records.
+This script compares them against ``BENCH_BASELINE.json`` (same schema) and
+exits nonzero on an out-of-tolerance regression, so CI pins the bench
+trajectory alongside the golden traces.
+
+Tolerance policy by unit:
+
+* ``count`` / ``bytes`` — deterministic simulation counters: must match the
+  baseline exactly.
+* ``sim_s`` — deterministic simulated time: 1e-6 relative (float printing).
+* anything else (``events/s``, ``rounds/s``, wall times) — host-dependent
+  throughput: banded at +-RELATIVE_BAND (default 0.60; CI runners are
+  noisy), failing only on *regressions* below the band. Speedups never
+  fail.
+
+Bless convention (bootstrap): a baseline entry whose value is ``null`` (or
+a record with no baseline entry at all) is blessed from the current run
+instead of compared. With ``--update`` the merged baseline is written back;
+regenerate locally and commit it after an intentional perf change:
+
+    cargo bench --bench bench_scenario -- --json
+    cargo bench --bench bench_population_scale -- --json
+    cargo bench --bench bench_edge -- --json
+    python3 python/bench_diff.py --update BENCH_*.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+RELATIVE_BAND = 0.60
+EXACT_UNITS = {"count", "bytes"}
+SIM_UNITS = {"sim_s"}
+
+
+def key(rec):
+    return (rec["bench"], rec["case"])
+
+
+def load_records(path):
+    with open(path) as f:
+        data = json.load(f)
+    if not isinstance(data, list):
+        raise SystemExit(f"{path}: expected a JSON array of records")
+    for rec in data:
+        for field in ("bench", "case", "unit"):
+            if field not in rec:
+                raise SystemExit(f"{path}: record missing `{field}`: {rec}")
+    return data
+
+
+def compare(baseline, current, band):
+    """Return (failures, blessed) comparing current records to baseline."""
+    failures, blessed = [], []
+    by_key = {key(r): r for r in baseline}
+    for rec in current:
+        k = rec["bench"], rec["case"]
+        base = by_key.get(k)
+        if base is None or base.get("value") is None:
+            blessed.append(rec)
+            by_key[k] = dict(rec)
+            continue
+        unit, got, want = rec["unit"], rec["value"], base["value"]
+        name = f"{k[0]}:{k[1]} [{unit}]"
+        if unit in EXACT_UNITS:
+            if got != want:
+                failures.append(f"{name}: {got} != baseline {want} (exact)")
+        elif unit in SIM_UNITS:
+            if abs(got - want) > 1e-6 * max(1.0, abs(want)):
+                failures.append(f"{name}: {got} != baseline {want} (sim-exact)")
+        else:
+            # Throughput-style: only a drop below the band is a regression.
+            floor = want * (1.0 - band)
+            if got < floor:
+                failures.append(
+                    f"{name}: {got:.2f} < {floor:.2f} "
+                    f"(baseline {want:.2f}, band -{band:.0%})"
+                )
+    return failures, blessed
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="+", help="BENCH_*.json record files")
+    ap.add_argument("--baseline", default="BENCH_BASELINE.json")
+    ap.add_argument(
+        "--band", type=float, default=RELATIVE_BAND,
+        help="relative tolerance for throughput units (default %(default)s)",
+    )
+    ap.add_argument(
+        "--update", action="store_true",
+        help="write the merged (blessed) baseline back to --baseline",
+    )
+    args = ap.parse_args(argv)
+
+    try:
+        baseline = load_records(args.baseline)
+    except FileNotFoundError:
+        print(f"note: no baseline at {args.baseline}; blessing everything")
+        baseline = []
+
+    current = []
+    for path in args.files:
+        if path == args.baseline:
+            continue
+        current.extend(load_records(path))
+    if not current:
+        raise SystemExit("no bench records to compare")
+
+    failures, blessed = compare(baseline, current, args.band)
+
+    for rec in blessed:
+        print(f"bless: {rec['bench']}:{rec['case']} = "
+              f"{rec['value']} [{rec['unit']}]")
+    if args.update:
+        # Refresh every measured key (intentional change), keep stale ones.
+        by_key = {key(r): r for r in baseline}
+        by_key.update({key(r): dict(r) for r in current})
+        merged = sorted(by_key.values(), key=key)
+        with open(args.baseline, "w") as f:
+            json.dump(merged, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.baseline} ({len(merged)} records)")
+
+    if failures:
+        print(f"\n{len(failures)} bench regression(s):", file=sys.stderr)
+        for msg in failures:
+            print(f"  FAIL {msg}", file=sys.stderr)
+        return 1
+    compared = len(current) - len(blessed)
+    print(f"ok: {compared} compared, {len(blessed)} blessed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

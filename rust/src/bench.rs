@@ -2,6 +2,7 @@
 //! mean / p50 / p99 and throughput reporting, and a tiny table printer used
 //! by the figure benches to emit paper-style rows.
 
+use std::fmt::Write as _;
 use std::time::Instant;
 
 /// Timing summary of one benchmark.
@@ -75,6 +76,66 @@ pub fn bench_auto<F: FnMut()>(name: &str, target_ms: f64, mut f: F) -> BenchResu
     let once_ns = t0.elapsed().as_nanos().max(1) as f64;
     let iters = ((target_ms * 1e6 / once_ns).ceil() as usize).clamp(3, 10_000);
     bench(name, (iters / 10).max(1), iters, f)
+}
+
+/// Machine-readable bench records, opt-in via `--json` on the bench argv:
+/// each bench collects `{bench, case, value, unit}` rows and writes them to
+/// `BENCH_<name>.json` in the working directory. CI diffs these against the
+/// committed `BENCH_BASELINE.json` with `python/bench_diff.py` (counts must
+/// match exactly, timing/throughput gets a tolerance band; `null` baseline
+/// values bless instead of compare).
+pub struct JsonSink {
+    bench: String,
+    records: Vec<(String, f64, String)>,
+    enabled: bool,
+}
+
+impl JsonSink {
+    /// Build from the bench binary's argv (`--json` enables emission).
+    pub fn from_args(bench: &str) -> Self {
+        JsonSink {
+            bench: bench.to_string(),
+            records: Vec::new(),
+            enabled: std::env::args().any(|a| a == "--json"),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Record one measurement. `case` should be a stable slash-separated
+    /// path (`"overhead/stadium/events_per_s"`); `unit` drives the diff
+    /// policy in bench_diff.py (`count`/`bytes` exact, the rest banded).
+    pub fn push(&mut self, case: &str, value: f64, unit: &str) {
+        self.records.push((case.to_string(), value, unit.to_string()));
+    }
+
+    /// The serialized record array (valid JSON; values clamped finite).
+    pub fn render(&self) -> String {
+        let mut out = String::from("[\n");
+        for (i, (case, value, unit)) in self.records.iter().enumerate() {
+            let sep = if i + 1 == self.records.len() { "" } else { "," };
+            let v = if value.is_finite() { *value } else { 0.0 };
+            let _ = writeln!(
+                out,
+                "  {{\"bench\": \"{}\", \"case\": \"{}\", \"value\": {v:.6}, \"unit\": \"{}\"}}{sep}",
+                self.bench, case, unit
+            );
+        }
+        out.push_str("]\n");
+        out
+    }
+
+    /// Write `BENCH_<bench>.json`; no-op without `--json`.
+    pub fn finish(&self) {
+        if !self.enabled {
+            return;
+        }
+        let path = format!("BENCH_{}.json", self.bench);
+        std::fs::write(&path, self.render()).expect("write bench json");
+        println!("wrote {path} ({} records)", self.records.len());
+    }
 }
 
 /// Simple fixed-width table printer for figure benches.
@@ -249,6 +310,27 @@ mod tests {
             std::hint::black_box(42u64.wrapping_mul(7));
         });
         assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn json_sink_renders_valid_records() {
+        let mut sink = JsonSink {
+            bench: "probe".into(),
+            records: Vec::new(),
+            enabled: false,
+        };
+        sink.push("a/b/events_per_s", 1234.5, "events/s");
+        sink.push("a/b/handoffs", 7.0, "count");
+        let text = sink.render();
+        assert!(text.starts_with("[\n") && text.ends_with("]\n"));
+        assert!(text.contains(
+            "{\"bench\": \"probe\", \"case\": \"a/b/events_per_s\", \
+             \"value\": 1234.500000, \"unit\": \"events/s\"},"
+        ));
+        assert!(text.contains("\"case\": \"a/b/handoffs\", \"value\": 7.000000"));
+        // Last record carries no trailing comma.
+        assert!(text.contains("\"unit\": \"count\"}\n]"));
+        sink.finish(); // disabled: must not write anything
     }
 
     #[test]

@@ -10,6 +10,7 @@ pub use toml::{Document, Value};
 
 use crate::channels::ChannelType;
 use crate::downlink::DownlinkCompression;
+use crate::edge::{BackhaulDynamics, EdgeSettings};
 use crate::population::SamplerKind;
 use crate::scenario::{ScenarioRegistry, ScenarioSpec};
 use crate::sim::SyncMode;
@@ -221,6 +222,19 @@ pub struct ExperimentConfig {
     /// `None` (default) is the static single-world oracle — every engine
     /// stays bit-for-bit on the frozen `step_round` reference.
     pub scenario: Option<ScenarioSpec>,
+    /// Hierarchical edge aggregation: one edge node per scenario zone
+    /// terminates device uplinks locally and streams partial-aggregate
+    /// frames to the cloud over its own backhaul link (`[edge]` tree).
+    /// `None` defers to the mechanism preset's default (`lgc-edge` enables
+    /// it) and ultimately to disabled — the flat single-server topology,
+    /// bit-for-bit equal to the frozen `step_round` oracle. Setting any
+    /// `[edge]` parameter key switches the tier on (unless `edge = false`),
+    /// mirroring how the population/downlink keys enable their seams.
+    pub edge: Option<bool>,
+    /// `[edge]` parameters: `backhaul` (channel technology), `bw_scale`,
+    /// `flush_k`, `cache_downlink`, `dynamics`. `None` = no `[edge]` key
+    /// was set (defaults apply if a preset enables the tier).
+    pub edge_settings: Option<EdgeSettings>,
     /// Server-side streaming aggregation: fold each upload into the running
     /// aggregate on arrival (O(model) server state) instead of buffering
     /// every decoded update until aggregation. Applies to the population
@@ -302,6 +316,8 @@ impl Default for ExperimentConfig {
             downlink_compression: None,
             downlink_tariff_scale: 1.0,
             scenario: None,
+            edge: None,
+            edge_settings: None,
             streaming: false,
             drl: DrlConfig::default(),
         }
@@ -441,6 +457,40 @@ impl ExperimentConfig {
             cfg.downlink_tariff_scale = v;
         }
         cfg.scenario = resolve_scenario(doc)?;
+        // Edge tier: top-level `edge = bool` plus the `[edge]` tree. Any
+        // parameter key materializes the settings (which switches the tier
+        // on unless `edge = false`), mirroring the downlink convention.
+        if let Some(v) = doc.get_bool("", "edge") {
+            cfg.edge = Some(v);
+        }
+        {
+            let mut settings = EdgeSettings::default();
+            let mut any = false;
+            if let Some(s) = doc.get_str("edge", "backhaul") {
+                settings.backhaul = ChannelType::parse(s)?;
+                any = true;
+            }
+            if let Some(v) = doc.get_f64("edge", "bw_scale") {
+                settings.bw_scale = v;
+                any = true;
+            }
+            if let Some(v) = doc.get_i64("edge", "flush_k") {
+                settings.flush_k = usize::try_from(v)
+                    .map_err(|_| format!("edge flush_k must be >= 1, got {v}"))?;
+                any = true;
+            }
+            if let Some(v) = doc.get_bool("edge", "cache_downlink") {
+                settings.cache_downlink = v;
+                any = true;
+            }
+            if let Some(s) = doc.get_str("edge", "dynamics") {
+                settings.dynamics = BackhaulDynamics::parse(s)?;
+                any = true;
+            }
+            if any {
+                cfg.edge_settings = Some(settings);
+            }
+        }
         // [drl]
         if let Some(v) = doc.get_f64("drl", "actor_lr") {
             cfg.drl.actor_lr = v;
@@ -547,6 +597,9 @@ impl ExperimentConfig {
         if let Some(spec) = &self.scenario {
             spec.validate(&self.channel_types)
                 .map_err(|e| format!("scenario `{}`: {e}", spec.name))?;
+        }
+        if let Some(settings) = &self.edge_settings {
+            settings.validate()?;
         }
         Ok(())
     }
@@ -744,6 +797,52 @@ mod tests {
             "downlink_compression = \"zip\"",
             "downlink_tariff_scale = 0.0",
             "downlink_tariff_scale = -2.0",
+        ] {
+            let doc = Document::parse(bad).unwrap();
+            assert!(ExperimentConfig::from_document(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn edge_keys_parse() {
+        let doc = Document::parse(
+            "edge = true\n[edge]\nbackhaul = \"4g\"\nbw_scale = 0.25\nflush_k = 2\ncache_downlink = true\ndynamics = \"diurnal\"\n",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.edge, Some(true));
+        let s = cfg.edge_settings.expect("edge tree parsed");
+        assert_eq!(s.backhaul, ChannelType::G4);
+        assert!((s.bw_scale - 0.25).abs() < 1e-12);
+        assert_eq!(s.flush_k, 2);
+        assert!(s.cache_downlink);
+        assert_eq!(s.dynamics, BackhaulDynamics::Diurnal);
+        // A parameter key alone materializes settings (enable-on-parameter,
+        // like the downlink/population keys); `edge` itself stays deferred.
+        let doc = Document::parse("[edge]\nflush_k = 8\n").unwrap();
+        let cfg = ExperimentConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.edge, None);
+        assert_eq!(cfg.edge_settings.unwrap().flush_k, 8);
+        // Unset keys keep the deferred defaults.
+        let cfg = ExperimentConfig::from_document(&Document::new()).unwrap();
+        assert_eq!(cfg.edge, None);
+        assert!(cfg.edge_settings.is_none());
+        // CLI overrides reach the [edge] section.
+        let mut doc = Document::new();
+        apply_overrides(
+            &mut doc,
+            &["--edge=true".to_string(), "--edge.bw_scale=0.5".to_string()],
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.edge, Some(true));
+        assert!((cfg.edge_settings.unwrap().bw_scale - 0.5).abs() < 1e-12);
+        for bad in [
+            "[edge]\nbw_scale = 0.0",
+            "[edge]\nbw_scale = 1.5",
+            "[edge]\nflush_k = 0",
+            "[edge]\ndynamics = \"warp\"",
+            "[edge]\nbackhaul = \"6g\"",
         ] {
             let doc = Document::parse(bad).unwrap();
             assert!(ExperimentConfig::from_document(&doc).is_err(), "{bad}");

@@ -96,8 +96,10 @@ impl Aggregator for MeanAggregator {
 
 /// Sample-count-weighted mean (McMahan et al. 2017): upload `m` contributes
 /// with weight `n_m / Σ n`. Falls back to the uniform mean when no (or
-/// mismatched) weights were announced for the round, so it degrades to
-/// [`MeanAggregator`] rather than misweighting.
+/// mismatched/invalid) weights were announced for the round, so it degrades
+/// to [`MeanAggregator`] rather than misweighting. An *announced* all-zero
+/// cohort applies nothing (no samples, no descent) — the same answer the
+/// streaming finalize produces from its zero accumulator.
 #[derive(Clone, Debug, Default)]
 pub struct WeightedBySamples {
     round_weights: Vec<f64>,
@@ -122,13 +124,16 @@ impl Aggregator for WeightedBySamples {
     fn aggregate(&mut self, uploads: &[&LgcUpdate], out: &mut [f32]) {
         out.iter_mut().for_each(|x| *x = 0.0);
         let total: f64 = self.round_weights.iter().sum();
-        let usable = self.round_weights.len() == uploads.len()
-            && total > 0.0
+        let announced = self.round_weights.len() == uploads.len()
             && self.round_weights.iter().all(|&w| w >= 0.0 && w.is_finite());
-        if usable {
+        if announced && total > 0.0 {
             for (upd, &w) in uploads.iter().zip(&self.round_weights) {
                 upd.add_into(out, (w / total) as f32);
             }
+        } else if announced {
+            // A zero-total-weight cohort contributed no samples: apply
+            // nothing, exactly like the streaming path (zero accumulator
+            // scaled at finalize) — so stream ≡ batch holds here too.
         } else {
             let scale = 1.0 / uploads.len() as f32;
             for upd in uploads {

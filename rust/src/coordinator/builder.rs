@@ -35,6 +35,7 @@ use crate::compression::{Compressor, LgcUpdate};
 use crate::config::ExperimentConfig;
 use crate::downlink::{Downlink, DownlinkCompression};
 use crate::drl::DeviceAgent;
+use crate::edge::Edge;
 use crate::population::{self, ClientSampler, DeviceSpec, Population, SamplerKind};
 use crate::resources::{ComputeCostModel, ResourceMeter};
 use crate::scenario::{Scenario, ScenarioSpec};
@@ -340,6 +341,22 @@ impl<'a> ExperimentBuilder<'a> {
             }
             None => None,
         };
+        // The edge tier, resolved with the same precedence shape as the
+        // downlink: explicit config > preset default > disabled, with any
+        // `[edge]` key enabling the tier (a backhaul tuned on a disabled
+        // edge would otherwise be silently ignored). One node per scenario
+        // zone; a scenario-less world is a single zone behind one backhaul.
+        let edge_enabled = cfg.edge.unwrap_or(
+            preset.map_or(false, |p| p.default_edge) || cfg.edge_settings.is_some(),
+        );
+        let edge = if edge_enabled {
+            let settings = cfg.edge_settings.clone().unwrap_or_default();
+            let n_zones = scenario.as_ref().map_or(1, |sc| sc.n_zones());
+            Some(Edge::new(settings, n_zones, n_clients, nparams, &rng))
+        } else {
+            None
+        };
+
         let server = Server::with_aggregator(init, aggregator_f(&ctx));
 
         let sync_gap = match self.sync_gaps {
@@ -365,6 +382,7 @@ impl<'a> ExperimentBuilder<'a> {
             sync_mode,
             downlink,
             scenario,
+            edge,
             sim_stats: SimStats::default(),
             rng,
             total_time_s: 0.0,
@@ -538,6 +556,59 @@ mod tests {
         let trainer7 = NativeLrTrainer::new(&c7);
         let exp7 = ExperimentBuilder::new(c7).trainer(&trainer7).build().unwrap();
         assert!(exp7.downlink.is_none());
+    }
+
+    #[test]
+    fn edge_resolution_config_over_preset_over_disabled() {
+        use crate::edge::EdgeSettings;
+        // Default: disabled — the frozen flat-topology semantics.
+        let c = cfg();
+        let trainer = NativeLrTrainer::new(&c);
+        let exp = ExperimentBuilder::new(c).trainer(&trainer).build().unwrap();
+        assert!(exp.edge.is_none());
+        // The lgc-edge preset enables the tier (and semi-async) by default.
+        let mut c2 = cfg();
+        c2.mechanism = Mechanism::parse("lgc-edge").unwrap();
+        let trainer2 = NativeLrTrainer::new(&c2);
+        let exp2 = ExperimentBuilder::new(c2).trainer(&trainer2).build().unwrap();
+        let edge = exp2.edge.as_ref().expect("preset enables the edge tier");
+        assert_eq!(edge.n_zones(), 1, "scenario-less world is one zone");
+        assert_eq!(exp2.sync_mode, SyncMode::SemiAsync { buffer_k: 2 });
+        // Explicit config wins over the preset default.
+        let mut c3 = cfg();
+        c3.mechanism = Mechanism::parse("lgc-edge").unwrap();
+        c3.edge = Some(false);
+        let trainer3 = NativeLrTrainer::new(&c3);
+        let exp3 = ExperimentBuilder::new(c3).trainer(&trainer3).build().unwrap();
+        assert!(exp3.edge.is_none());
+        // A bare [edge] parameter enables the tier on any preset.
+        let mut c4 = cfg();
+        c4.edge_settings = Some(EdgeSettings { flush_k: 3, ..EdgeSettings::default() });
+        let trainer4 = NativeLrTrainer::new(&c4);
+        let exp4 = ExperimentBuilder::new(c4).trainer(&trainer4).build().unwrap();
+        assert_eq!(exp4.edge.as_ref().unwrap().settings().flush_k, 3);
+        // With a scenario, the tier gets one node per zone.
+        let mut c5 = cfg();
+        c5.edge = Some(true);
+        c5.scenario = Some(crate::scenario::ScenarioRegistry::resolve("commute").unwrap());
+        let trainer5 = NativeLrTrainer::new(&c5);
+        let exp5 = ExperimentBuilder::new(c5).trainer(&trainer5).build().unwrap();
+        assert_eq!(exp5.edge.as_ref().unwrap().n_zones(), 3);
+    }
+
+    #[test]
+    fn run_label_composes_active_seams() {
+        let mut c = cfg();
+        c.mechanism = Mechanism::parse("lgc-edge").unwrap();
+        c.downlink = Some(true);
+        c.scenario = Some(crate::scenario::ScenarioRegistry::resolve("commute").unwrap());
+        let trainer = NativeLrTrainer::new(&c);
+        let exp = ExperimentBuilder::new(c).trainer(&trainer).build().unwrap();
+        assert_eq!(exp.run_label(), "lgc-edge-lr+downlink+edge+commute");
+        let c2 = cfg();
+        let trainer2 = NativeLrTrainer::new(&c2);
+        let exp2 = ExperimentBuilder::new(c2).trainer(&trainer2).build().unwrap();
+        assert_eq!(exp2.run_label(), "lgc-static-lr");
     }
 
     #[test]

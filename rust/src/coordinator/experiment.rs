@@ -29,6 +29,7 @@ use crate::compression::LgcUpdate;
 use crate::config::ExperimentConfig;
 use crate::downlink::Downlink;
 use crate::drl::DeviceAgent;
+use crate::edge::Edge;
 use crate::metrics::{percentile, RoundRecord, RunLog};
 use crate::population::{ClientSampler, Population};
 use crate::resources::ResourceMeter;
@@ -70,6 +71,11 @@ pub struct Experiment {
     /// handoff), built from `cfg.scenario`. `None` keeps the static
     /// single-world oracle semantics, bit-for-bit.
     pub scenario: Option<Scenario>,
+    /// The hierarchical edge tier (per-zone aggregation nodes with their
+    /// own backhaul links), resolved by the builder: `cfg.edge` >
+    /// mechanism-preset default > disabled. `None` keeps the flat
+    /// device-to-cloud topology, bit-for-bit.
+    pub edge: Option<Edge>,
     /// Event-engine counters from the most recent [`Experiment::run`].
     pub sim_stats: SimStats,
     pub(super) rng: Rng,
@@ -119,19 +125,32 @@ impl Experiment {
     /// [`Experiment::sync_mode`]; returns the per-round log (one record per
     /// round under barrier, one per server aggregation in the async modes).
     pub fn run(&mut self, trainer: &mut dyn LocalTrainer) -> Result<RunLog> {
-        // The scenario suffix keeps `compare` output and CSV names
-        // distinguishable across worlds, not just mechanisms.
+        let mut log = RunLog::new(&self.run_label());
+        crate::sim::engine::run(self, trainer, &mut log)?;
+        Ok(log)
+    }
+
+    /// The run label: `mechanism-model` plus one `+suffix` per active seam
+    /// (`+downlink`, `+edge`, `+<scenario>`), in that fixed order. The
+    /// single source of truth for `compare` output and CSV names — two runs
+    /// that differ in any seam never collide on a label, and no other code
+    /// path appends its own suffixes.
+    pub fn run_label(&self) -> String {
         let mut name = format!(
             "{}-{}",
             self.cfg.mechanism.name(),
             self.cfg.workload.model_name()
         );
+        if self.downlink.is_some() {
+            name.push_str("+downlink");
+        }
+        if self.edge.is_some() {
+            name.push_str("+edge");
+        }
         if let Some(sc) = &self.scenario {
             name.push_str(&format!("+{}", sc.name()));
         }
-        let mut log = RunLog::new(&name);
-        crate::sim::engine::run(self, trainer, &mut log)?;
-        Ok(log)
+        name
     }
 
     /// Execute one round of the **synchronous reference loop** (the
@@ -155,6 +174,11 @@ impl Experiment {
         assert!(
             self.scenario.is_none(),
             "step_round is the frozen static-world reference oracle; scenario-enabled \
+             experiments run the event engine via Experiment::run"
+        );
+        assert!(
+            self.edge.is_none(),
+            "step_round is the frozen flat-topology reference oracle; edge-enabled \
              experiments run the event engine via Experiment::run"
         );
         let m = self.devices.len();
@@ -303,6 +327,10 @@ impl Experiment {
             handoffs: 0,
             dropped_handoff: 0,
             zone_p50: 0.0,
+            backhaul_bytes: 0,
+            backhaul_p95_s: 0.0,
+            migrated_handoff: 0,
+            edge_rounds_bound: 0,
         }))
     }
 
@@ -328,6 +356,9 @@ impl Experiment {
         }
         if let Some(dl) = &mut self.downlink {
             dl.reset_episode(&init);
+        }
+        if let Some(edge) = &mut self.edge {
+            edge.reset_episode();
         }
         if let Some(sc) = &mut self.scenario {
             sc.reset_episode();

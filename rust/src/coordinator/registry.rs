@@ -60,6 +60,11 @@ pub struct MechanismPreset {
     /// compression (`cfg.downlink` / `cfg.downlink_compression` always
     /// win; `None` here means disabled — free instant broadcast).
     pub default_downlink: Option<DownlinkCompression>,
+    /// Edge-tier default applied when the config leaves `edge` unset:
+    /// `true` runs the preset with the hierarchical edge aggregation tier
+    /// (`cfg.edge` / any `[edge]` key always wins; `false` here means the
+    /// flat single-server topology).
+    pub default_edge: bool,
 }
 
 impl MechanismPreset {
@@ -78,6 +83,7 @@ impl MechanismPreset {
             policy,
             default_sync: None,
             default_downlink: None,
+            default_edge: false,
         }
     }
 
@@ -92,6 +98,14 @@ impl MechanismPreset {
     /// says otherwise.
     pub fn with_default_downlink(mut self, compression: DownlinkCompression) -> Self {
         self.default_downlink = Some(compression);
+        self
+    }
+
+    /// Attach an edge-tier default (builder style): the preset runs with
+    /// hierarchical edge aggregation enabled unless the config says
+    /// otherwise.
+    pub fn with_default_edge(mut self) -> Self {
+        self.default_edge = true;
         self
     }
 }
@@ -223,6 +237,19 @@ impl MechanismRegistry {
 
         reg.register(
             MechanismPreset::new(
+                "lgc-edge",
+                "LGC (static allocation) over the hierarchical per-zone edge tier \
+                 with backhaul links, under semi-async buffered aggregation",
+                ef_lgc_compressor(),
+                mean_aggregator(),
+                static_layered_policy(),
+            )
+            .with_default_sync(SyncMode::SemiAsync { buffer_k: 2 })
+            .with_default_edge(),
+        );
+
+        reg.register(
+            MechanismPreset::new(
                 "lgc-async",
                 "LGC (static allocation) under FedAsync staleness-weighted application",
                 ef_lgc_compressor(),
@@ -307,6 +334,16 @@ mod tests {
         );
         assert_eq!(reg.get("lgc-static").unwrap().default_downlink, None);
         assert_eq!(reg.get("fedavg").unwrap().default_downlink, None);
+    }
+
+    #[test]
+    fn edge_preset_carries_edge_default() {
+        let reg = MechanismRegistry::builtin();
+        let p = reg.get("lgc-edge").unwrap();
+        assert!(p.default_edge);
+        assert_eq!(p.default_sync, Some(SyncMode::SemiAsync { buffer_k: 2 }));
+        assert!(!reg.get("lgc-static").unwrap().default_edge);
+        assert!(!reg.get("lgc-downlink").unwrap().default_edge);
     }
 
     #[test]

@@ -1,0 +1,636 @@
+//! Hierarchical edge aggregation: a per-zone edge tier between devices and
+//! the cloud.
+//!
+//! Until this module every upload terminated at a single flat server — the
+//! scenario subsystem gave the world zones, mobility and handoff, but no
+//! topology underneath them. Here each scenario zone hosts an [`EdgeNode`]
+//! that terminates device uplinks locally and streams *partial aggregates*
+//! to the cloud over its own **backhaul** link:
+//!
+//! - a device's delivered upload is **held** at its zone's edge node (a
+//!   [`HeldContribution`]: payload, weight, the metadata the sync mode
+//!   needs later);
+//! - when a node holds `flush_k` contributions — or the fleet would
+//!   otherwise go idle — the node **flushes**: the held set is folded into
+//!   one partial-aggregate frame (`4·dim + 32` bytes on the wire,
+//!   *independent* of how many contributions were folded — the hierarchical
+//!   bandwidth win) and rides the zone's backhaul link as a first-class
+//!   in-flight transfer ([`crate::sim::Event::BackhaulArrived`]), so a
+//!   round can be backhaul-bound rather than access-bound;
+//! - **handoff upgrades from drop-to-restitution to migration**: when a
+//!   device changes zone, its contributions still held at the old zone's
+//!   edge transfer to the new zone's node over the (free, wired)
+//!   edge-to-edge path and are counted `migrated_handoff`; only layers
+//!   caught mid-flight on a vanished *access* channel still fall back to
+//!   the existing `restitute_layer` path, and frames already on the
+//!   backhaul wire never migrate;
+//! - with the downlink enabled, broadcasts may be **edge-cached**
+//!   ([`Edge::down_fetch`]): the cloud ships each model version once per
+//!   zone over the backhaul, devices then fetch from their edge — the
+//!   cloud-to-edge leg is charged once per `(zone, version)` instead of
+//!   once per device.
+//!
+//! Aggregation numerics: [`Edge::fold_partial`] is the two-level fold —
+//! `sum_i w_i·u_i` plus the weight sum, exactly the streaming
+//! [`crate::coordinator::Aggregator`] accumulate step — and the unit /
+//! property tests pin edge-partial-then-cloud-finalize ≡ flat aggregation
+//! within streaming f32 tolerance. The engines deliver the folded frame's
+//! *addends* to the existing per-upload server logic at backhaul-arrival
+//! time (linear aggregation makes the two orders equivalent; the
+//! fully-async staleness weighting is per-contribution by construction),
+//! so the backhaul frame models the wire while the server math stays the
+//! audited one. With `edge` disabled (the default) none of this code runs
+//! and every engine stays bit-for-bit on the frozen `step_round` oracle.
+//! See DESIGN.md §"Hierarchical edge aggregation".
+
+use std::collections::BTreeMap;
+
+use crate::channels::{ChannelType, FadingParams, Link};
+use crate::compression::LgcUpdate;
+use crate::scenario::{diurnal_trace, ChannelDynamics, TraceReplay};
+use crate::util::Rng;
+
+/// Which dynamics source drives the backhaul fading chains.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackhaulDynamics {
+    /// The parameterized Markov chain (default).
+    Markov,
+    /// Deterministic day/night sinusoid (metro backhaul load curve).
+    Diurnal,
+}
+
+impl BackhaulDynamics {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "markov" => Ok(BackhaulDynamics::Markov),
+            "diurnal" => Ok(BackhaulDynamics::Diurnal),
+            other => Err(format!("unknown edge dynamics `{other}` (markov|diurnal)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackhaulDynamics::Markov => "markov",
+            BackhaulDynamics::Diurnal => "diurnal",
+        }
+    }
+}
+
+/// Validated `[edge]` configuration (the config module parses the TOML
+/// tree into this).
+#[derive(Clone, Debug, PartialEq)]
+pub struct EdgeSettings {
+    /// Backhaul technology per zone (one link per zone).
+    pub backhaul: ChannelType,
+    /// Static backhaul bandwidth scale in `(0, 1]` (throttled backhaul).
+    pub bw_scale: f64,
+    /// Contributions a node folds before streaming one partial-aggregate
+    /// frame to the cloud (≥ 1).
+    pub flush_k: usize,
+    /// Cache downlink broadcasts at the edge (one cloud→edge transfer per
+    /// zone per model version).
+    pub cache_downlink: bool,
+    pub dynamics: BackhaulDynamics,
+}
+
+impl Default for EdgeSettings {
+    fn default() -> Self {
+        EdgeSettings {
+            backhaul: ChannelType::G5,
+            bw_scale: 1.0,
+            flush_k: 4,
+            cache_downlink: false,
+            dynamics: BackhaulDynamics::Markov,
+        }
+    }
+}
+
+impl EdgeSettings {
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.bw_scale > 0.0 && self.bw_scale <= 1.0) {
+            return Err(format!("edge bw_scale {} not in (0, 1]", self.bw_scale));
+        }
+        if self.flush_k == 0 {
+            return Err("edge flush_k must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// One device contribution parked at an edge node, carrying everything the
+/// sync mode needs when the backhaul frame lands at the cloud.
+#[derive(Clone, Debug)]
+pub struct HeldContribution {
+    pub device: usize,
+    pub update: LgcUpdate,
+    /// Aggregation weight (sample count under `WeightedBySamples`).
+    pub weight: f64,
+    /// Server model version the device trained on (staleness at apply).
+    pub version: u64,
+    pub loss: f64,
+    pub reward: f64,
+    /// Device-side finish wall of the contribution (compute + access
+    /// upload), for the finish-percentile columns.
+    pub finish_s: f64,
+}
+
+/// A flush en route to the cloud: identified by its flush id so reordered
+/// backhaul arrivals (fading makes transfer times non-monotonic) pick the
+/// right payload back up.
+struct InFlight {
+    zone: usize,
+    held: Vec<HeldContribution>,
+}
+
+/// Per-record-window edge counters, drained into each
+/// [`crate::metrics::RoundRecord`] (same pattern as the downlink and
+/// scenario windows).
+#[derive(Clone, Debug, Default)]
+pub struct EdgeWindow {
+    /// Backhaul bytes this window (partial-aggregate frames + edge-cached
+    /// downlink fetches).
+    pub backhaul_bytes: u64,
+    /// Wall-clock of each backhaul transfer this window (p95 at record
+    /// time: a round is *backhaul-bound* when this exceeds the access-link
+    /// finish p95).
+    pub backhaul_walls: Vec<f64>,
+    /// Held contributions migrated edge-to-edge on handoff.
+    pub migrated: u64,
+}
+
+impl EdgeWindow {
+    pub fn take(&mut self) -> EdgeWindow {
+        std::mem::take(self)
+    }
+}
+
+/// One zone's edge aggregation point: the held-contribution buffer and the
+/// zone's backhaul link to the cloud.
+pub struct EdgeNode {
+    backhaul: Link,
+    held: Vec<HeldContribution>,
+    /// Last `(version, ready_time)` fetched into the zone's downlink cache.
+    down_cached: Option<(u64, f64)>,
+}
+
+/// The edge tier: one [`EdgeNode`] per scenario zone (a zone-less world
+/// gets a single node), the in-flight flush registry, per-device zone
+/// tracking for migration, and window/total accounting.
+pub struct Edge {
+    settings: EdgeSettings,
+    nodes: Vec<EdgeNode>,
+    in_flight: BTreeMap<u64, InFlight>,
+    next_flush: u64,
+    /// Zone each device's held/in-flight work is currently homed at —
+    /// compared against the scenario's `zone_of` to detect handoffs.
+    device_zone: Vec<usize>,
+    dim: usize,
+    /// Phase-scripted backhaul scale (`[[scenario.phase]] backhaul_scale`),
+    /// multiplied onto the static `bw_scale`.
+    phase_scale: f64,
+    fading: FadingParams,
+    trace: Option<std::sync::Arc<[crate::scenario::TracePoint]>>,
+    ticks: u64,
+    pub window: EdgeWindow,
+    migrated_total: u64,
+    backhaul_bytes_total: u64,
+}
+
+impl Edge {
+    /// Build the tier for `n_zones` zones and `n_devices` devices over a
+    /// `dim`-parameter model. Backhaul RNG streams fork off the experiment
+    /// seed with an edge-private tag, so enabling the tier never perturbs
+    /// any existing stream.
+    pub fn new(settings: EdgeSettings, n_zones: usize, n_devices: usize, dim: usize, rng: &Rng) -> Self {
+        assert!(n_zones >= 1, "edge tier needs at least one zone");
+        let trace = match settings.dynamics {
+            BackhaulDynamics::Markov => None,
+            BackhaulDynamics::Diurnal => Some(diurnal_trace(1024, 240, 0.2)),
+        };
+        let fading = FadingParams::default();
+        let mut nodes = Vec::with_capacity(n_zones);
+        for zi in 0..n_zones {
+            let link = Link::new(
+                settings.backhaul,
+                rng,
+                0xED6E_0000 ^ (zi as u64).wrapping_mul(0x9E37_79B9),
+            );
+            nodes.push(EdgeNode { backhaul: link, held: Vec::new(), down_cached: None });
+        }
+        let mut edge = Edge {
+            settings,
+            nodes,
+            in_flight: BTreeMap::new(),
+            next_flush: 0,
+            device_zone: vec![0; n_devices],
+            dim,
+            phase_scale: 1.0,
+            fading,
+            trace,
+            ticks: 0,
+            window: EdgeWindow::default(),
+            migrated_total: 0,
+            backhaul_bytes_total: 0,
+        };
+        edge.apply_profiles();
+        edge
+    }
+
+    fn apply_profiles(&mut self) {
+        let scale = (self.settings.bw_scale * self.phase_scale).min(1.0);
+        for (zi, node) in self.nodes.iter_mut().enumerate() {
+            let dynamics = match &self.trace {
+                None => ChannelDynamics::Markov,
+                Some(pts) => ChannelDynamics::Trace(TraceReplay::new(
+                    pts.clone(),
+                    zi.wrapping_mul(131).wrapping_add(self.ticks as usize),
+                )),
+            };
+            node.backhaul.apply_profile(true, self.fading, dynamics, scale, 1.0);
+        }
+    }
+
+    pub fn settings(&self) -> &EdgeSettings {
+        &self.settings
+    }
+
+    pub fn n_zones(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Bytes of one partial-aggregate frame on the backhaul wire: the
+    /// dense folded delta plus a fixed header (version, round, zone, fold
+    /// count, weight sum) — independent of how many contributions folded.
+    pub fn frame_bytes(&self) -> u64 {
+        4 * self.dim as u64 + 32
+    }
+
+    /// Advance every backhaul fading chain one round/tick.
+    pub fn step_round(&mut self) {
+        self.ticks += 1;
+        for node in &mut self.nodes {
+            node.backhaul.step_round();
+        }
+    }
+
+    /// Apply a phase-scripted backhaul scale (`backhaul_scale` in the
+    /// `[[scenario.phase]]` DSL). No-op when unchanged.
+    pub fn set_phase_scale(&mut self, scale: f64) {
+        if (scale - self.phase_scale).abs() > f64::EPSILON {
+            self.phase_scale = scale;
+            self.apply_profiles();
+        }
+    }
+
+    /// Park a delivered contribution at `zone`'s node and home the device
+    /// there.
+    pub fn hold(&mut self, zone: usize, c: HeldContribution) {
+        self.device_zone[c.device] = zone;
+        self.nodes[zone].held.push(c);
+    }
+
+    pub fn held_count(&self, zone: usize) -> usize {
+        self.nodes[zone].held.len()
+    }
+
+    /// Contributions parked or on the backhaul wire — the fleet-idle gate:
+    /// the engine must not park the fleet while the edge still owes the
+    /// cloud work.
+    pub fn pending_total(&self) -> usize {
+        self.nodes.iter().map(|n| n.held.len()).sum::<usize>()
+            + self.in_flight.values().map(|f| f.held.len()).sum::<usize>()
+    }
+
+    /// Whether `zone`'s node has reached its fold threshold.
+    pub fn ready_to_flush(&self, zone: usize) -> bool {
+        self.nodes[zone].held.len() >= self.settings.flush_k
+    }
+
+    /// Fold `zone`'s held set into one partial-aggregate frame and put it
+    /// on the backhaul wire. Returns `(flush_id, arrival_time, bytes)` for
+    /// the engine to schedule [`crate::sim::Event::BackhaulArrived`], or
+    /// `None` when nothing is held.
+    pub fn begin_flush(&mut self, zone: usize, now: f64) -> Option<(u64, f64, u64)> {
+        if self.nodes[zone].held.is_empty() {
+            return None;
+        }
+        let held = std::mem::take(&mut self.nodes[zone].held);
+        let bytes = self.frame_bytes();
+        let cost = self.nodes[zone].backhaul.transfer(bytes);
+        self.window.backhaul_bytes += bytes;
+        self.backhaul_bytes_total += bytes;
+        self.window.backhaul_walls.push(cost.time_s);
+        let id = self.next_flush;
+        self.next_flush += 1;
+        self.in_flight.insert(id, InFlight { zone, held });
+        Some((id, now + cost.time_s, bytes))
+    }
+
+    /// Flush every non-empty node (round teardown / fleet-idle flush).
+    /// Returns the scheduled `(zone, flush_id, arrival_time, bytes)` rows.
+    pub fn flush_all(&mut self, now: f64) -> Vec<(usize, u64, f64, u64)> {
+        (0..self.nodes.len())
+            .filter_map(|z| self.begin_flush(z, now).map(|(id, at, by)| (z, id, at, by)))
+            .collect()
+    }
+
+    /// Claim the payload of an arrived flush (engine's `BackhaulArrived`
+    /// handler).
+    pub fn take_arrived(&mut self, flush: u64) -> Vec<HeldContribution> {
+        self.in_flight
+            .remove(&flush)
+            .map(|f| f.held)
+            .expect("BackhaulArrived without a matching in-flight flush")
+    }
+
+    /// Zone the engine last homed `device` at.
+    pub fn zone_of(&self, device: usize) -> usize {
+        self.device_zone[device]
+    }
+
+    /// Handoff: move `device`'s held contributions from their current edge
+    /// to `to_zone`'s node (edge-to-edge migration; frames already on the
+    /// backhaul wire stay put). Returns the number migrated.
+    pub fn migrate(&mut self, device: usize, to_zone: usize) -> u64 {
+        let from = self.device_zone[device];
+        self.device_zone[device] = to_zone;
+        if from == to_zone {
+            return 0;
+        }
+        let (src, dst) = if from < to_zone {
+            let (a, b) = self.nodes.split_at_mut(to_zone);
+            (&mut a[from], &mut b[0])
+        } else {
+            let (a, b) = self.nodes.split_at_mut(from);
+            (&mut b[0], &mut a[to_zone])
+        };
+        let mut moved = 0u64;
+        let mut i = 0;
+        while i < src.held.len() {
+            if src.held[i].device == device {
+                dst.held.push(src.held.remove(i));
+                moved += 1;
+            } else {
+                i += 1;
+            }
+        }
+        self.window.migrated += moved;
+        self.migrated_total += moved;
+        moved
+    }
+
+    /// Count an accounting-only migration (cohort engines: the slot's
+    /// contribution is re-homed without a materialized held buffer).
+    pub fn note_migrated(&mut self, n: u64) {
+        self.window.migrated += n;
+        self.migrated_total += n;
+    }
+
+    /// Accounting-only flush for the cohort engines: charge one
+    /// partial-aggregate frame on `zone`'s backhaul and return its wall
+    /// time (no event, no payload).
+    pub fn charge_flush(&mut self, zone: usize) -> f64 {
+        let bytes = self.frame_bytes();
+        let cost = self.nodes[zone].backhaul.transfer(bytes);
+        self.window.backhaul_bytes += bytes;
+        self.backhaul_bytes_total += bytes;
+        self.window.backhaul_walls.push(cost.time_s);
+        cost.time_s
+    }
+
+    /// Edge-cached downlink fetch: the time at which model `version` is
+    /// available at `zone`'s edge for device broadcast. The first request
+    /// per `(zone, version)` charges one dense frame on the backhaul;
+    /// subsequent requests hit the cache.
+    pub fn down_fetch(&mut self, zone: usize, version: u64, now: f64) -> f64 {
+        if let Some((v, ready)) = self.nodes[zone].down_cached {
+            if v == version {
+                return ready.max(now);
+            }
+        }
+        let bytes = self.frame_bytes();
+        let cost = self.nodes[zone].backhaul.transfer(bytes);
+        self.window.backhaul_bytes += bytes;
+        self.backhaul_bytes_total += bytes;
+        self.window.backhaul_walls.push(cost.time_s);
+        let ready = now + cost.time_s;
+        self.nodes[zone].down_cached = Some((version, ready));
+        ready
+    }
+
+    /// Whether edge-side downlink caching is on.
+    pub fn cache_downlink(&self) -> bool {
+        self.settings.cache_downlink
+    }
+
+    /// Two-level fold of a held set: `(sum_i w_i·u_i, sum_i w_i, n)` —
+    /// the streaming-aggregator accumulate step run at the edge. The
+    /// composition test pins edge-partial-then-cloud-finalize ≡ flat.
+    pub fn fold_partial(held: &[HeldContribution], dim: usize) -> (Vec<f32>, f64, usize) {
+        let mut acc = vec![0f32; dim];
+        let mut wsum = 0f64;
+        for c in held {
+            c.update.add_into(&mut acc, c.weight as f32);
+            wsum += c.weight;
+        }
+        (acc, wsum, held.len())
+    }
+
+    /// Run-total migrated contributions (SimStats).
+    pub fn migrated_total(&self) -> u64 {
+        self.migrated_total
+    }
+
+    /// Run-total backhaul bytes.
+    pub fn backhaul_bytes_total(&self) -> u64 {
+        self.backhaul_bytes_total
+    }
+
+    /// Fresh FL episode: buffers, caches, windows and totals clear; the
+    /// backhaul fading streams keep their position (like every other link).
+    pub fn reset_episode(&mut self) {
+        for node in &mut self.nodes {
+            node.held.clear();
+            node.down_cached = None;
+        }
+        self.in_flight.clear();
+        self.device_zone.iter_mut().for_each(|z| *z = 0);
+        self.phase_scale = 1.0;
+        self.window = EdgeWindow::default();
+        self.migrated_total = 0;
+        self.backhaul_bytes_total = 0;
+        self.apply_profiles();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::Layer;
+
+    fn upd(dim: usize, vals: &[(u32, f32)]) -> LgcUpdate {
+        LgcUpdate {
+            dim,
+            layers: vec![Layer {
+                indices: vals.iter().map(|&(i, _)| i).collect(),
+                values: vals.iter().map(|&(_, v)| v).collect(),
+            }],
+        }
+    }
+
+    fn held(device: usize, dim: usize, vals: &[(u32, f32)], weight: f64) -> HeldContribution {
+        HeldContribution {
+            device,
+            update: upd(dim, vals),
+            weight,
+            version: 0,
+            loss: 0.0,
+            reward: f64::NAN,
+            finish_s: 1.0,
+        }
+    }
+
+    fn mk(zones: usize, devices: usize) -> Edge {
+        Edge::new(EdgeSettings::default(), zones, devices, 8, &Rng::new(7))
+    }
+
+    #[test]
+    fn flush_charges_one_frame_regardless_of_fold_count() {
+        let mut e = mk(1, 4);
+        for d in 0..4 {
+            e.hold(0, held(d, 8, &[(d as u32, 1.0)], 1.0));
+        }
+        assert!(e.ready_to_flush(0));
+        let (id, arrive, bytes) = e.begin_flush(0, 10.0).unwrap();
+        assert_eq!(bytes, 4 * 8 + 32, "frame size independent of fold count");
+        assert!(arrive > 10.0);
+        assert_eq!(e.pending_total(), 4, "in-flight work still pending");
+        let got = e.take_arrived(id);
+        assert_eq!(got.len(), 4);
+        assert_eq!(e.pending_total(), 0);
+        assert_eq!(e.window.backhaul_bytes, bytes);
+        assert_eq!(e.window.backhaul_walls.len(), 1);
+        assert!(e.begin_flush(0, 11.0).is_none(), "nothing held after flush");
+    }
+
+    #[test]
+    fn migration_moves_only_the_handed_off_device() {
+        let mut e = mk(2, 3);
+        e.hold(0, held(0, 8, &[(0, 1.0)], 1.0));
+        e.hold(0, held(1, 8, &[(1, 1.0)], 1.0));
+        e.hold(0, held(0, 8, &[(2, 1.0)], 1.0));
+        assert_eq!(e.migrate(0, 1), 2, "both of device 0's holds move");
+        assert_eq!(e.held_count(0), 1);
+        assert_eq!(e.held_count(1), 2);
+        assert_eq!(e.zone_of(0), 1);
+        assert_eq!(e.migrated_total(), 2);
+        assert_eq!(e.window.migrated, 2);
+        // Same-zone "move" is a no-op.
+        assert_eq!(e.migrate(1, 0), 0);
+        // In-flight frames never migrate.
+        let (id, _, _) = e.begin_flush(1, 0.0).unwrap();
+        assert_eq!(e.migrate(0, 0), 0);
+        assert_eq!(e.take_arrived(id).len(), 2);
+    }
+
+    #[test]
+    fn two_level_fold_matches_flat_weighted_aggregation() {
+        let dim = 16;
+        let mk_held = |device: usize, seed: u32, weight: f64| {
+            let vals: Vec<(u32, f32)> = (0..dim as u32)
+                .map(|i| (i, ((i * 7 + seed * 13) % 23) as f32 / 11.0 - 1.0))
+                .collect();
+            held(device, dim, &vals, weight)
+        };
+        let all: Vec<HeldContribution> =
+            (0..6).map(|d| mk_held(d, d as u32 + 1, (d + 1) as f64 * 10.0)).collect();
+        // Flat: one streaming fold over everything.
+        let (flat_acc, flat_w, _) = Edge::fold_partial(&all, dim);
+        // Two-level: zone partials summed at the cloud.
+        let (acc_a, w_a, _) = Edge::fold_partial(&all[..3], dim);
+        let (acc_b, w_b, _) = Edge::fold_partial(&all[3..], dim);
+        let cloud: Vec<f32> = acc_a.iter().zip(&acc_b).map(|(a, b)| a + b).collect();
+        assert!((flat_w - (w_a + w_b)).abs() < 1e-9);
+        for (f, c) in flat_acc.iter().zip(&cloud) {
+            let rel = (f - c).abs() / f.abs().max(1.0);
+            assert!(rel < 1e-6, "two-level fold diverged: {f} vs {c}");
+        }
+        // Finalize (1/weight_sum) is a shared scalar, so partial-then-
+        // finalize equals flat-then-finalize within the same tolerance.
+        let scale = 1.0 / flat_w as f32;
+        for (f, c) in flat_acc.iter().zip(&cloud) {
+            assert!((f * scale - c * scale).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn down_fetch_charges_once_per_zone_version() {
+        let mut e = mk(2, 1);
+        let bytes = e.frame_bytes();
+        let r1 = e.down_fetch(0, 3, 5.0);
+        assert!(r1 > 5.0);
+        assert_eq!(e.window.backhaul_bytes, bytes);
+        // Cache hit: same version, no new charge, ready clamped to now.
+        let r2 = e.down_fetch(0, 3, 100.0);
+        assert_eq!(r2, 100.0);
+        assert_eq!(e.window.backhaul_bytes, bytes);
+        // New version refetches; other zone charges separately.
+        e.down_fetch(0, 4, 101.0);
+        e.down_fetch(1, 4, 101.0);
+        assert_eq!(e.window.backhaul_bytes, 3 * bytes);
+    }
+
+    #[test]
+    fn throttled_backhaul_is_slower_and_phase_scale_applies() {
+        let mut fast = Edge::new(EdgeSettings::default(), 1, 1, 1024, &Rng::new(3));
+        let slow_cfg = EdgeSettings { bw_scale: 0.05, ..EdgeSettings::default() };
+        let mut slow = Edge::new(slow_cfg, 1, 1, 1024, &Rng::new(3));
+        let wf = fast.charge_flush(0);
+        let ws = slow.charge_flush(0);
+        assert!(ws > wf, "throttled backhaul must be slower: {ws} vs {wf}");
+        // Phase-scripted throttle slows the same edge further.
+        let w0 = fast.charge_flush(0);
+        fast.set_phase_scale(0.1);
+        let w1 = fast.charge_flush(0);
+        assert!(w1 > w0, "backhaul_scale phase must slow the backhaul");
+    }
+
+    #[test]
+    fn reset_episode_clears_state_and_determinism_holds() {
+        let mk_run = || {
+            let mut e = mk(2, 2);
+            e.hold(0, held(0, 8, &[(0, 1.0)], 1.0));
+            let (_, a1, _) = e.begin_flush(0, 0.0).unwrap();
+            e.step_round();
+            e.hold(1, held(1, 8, &[(1, 1.0)], 2.0));
+            let (_, a2, _) = e.begin_flush(1, 1.0).unwrap();
+            (a1, a2)
+        };
+        let (a, b) = (mk_run(), mk_run());
+        assert_eq!(a.0.to_bits(), b.0.to_bits());
+        assert_eq!(a.1.to_bits(), b.1.to_bits());
+        let mut e = mk(1, 1);
+        e.hold(0, held(0, 8, &[(0, 1.0)], 1.0));
+        e.begin_flush(0, 0.0);
+        e.down_fetch(0, 1, 0.0);
+        e.note_migrated(3);
+        e.reset_episode();
+        assert_eq!(e.pending_total(), 0);
+        assert_eq!(e.migrated_total(), 0);
+        assert_eq!(e.backhaul_bytes_total(), 0);
+        assert_eq!(e.window.backhaul_bytes, 0);
+        assert!(e.window.backhaul_walls.is_empty());
+    }
+
+    #[test]
+    fn settings_validate_and_parse() {
+        assert!(EdgeSettings::default().validate().is_ok());
+        let bad = EdgeSettings { bw_scale: 0.0, ..EdgeSettings::default() };
+        assert!(bad.validate().is_err());
+        let bad = EdgeSettings { flush_k: 0, ..EdgeSettings::default() };
+        assert!(bad.validate().is_err());
+        assert_eq!(BackhaulDynamics::parse("Diurnal").unwrap(), BackhaulDynamics::Diurnal);
+        assert_eq!(BackhaulDynamics::parse("markov").unwrap().name(), "markov");
+        assert!(BackhaulDynamics::parse("warp").is_err());
+    }
+}

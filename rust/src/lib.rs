@@ -108,6 +108,7 @@ pub mod coordinator;
 pub mod data;
 pub mod downlink;
 pub mod drl;
+pub mod edge;
 pub mod metrics;
 pub mod models;
 pub mod population;

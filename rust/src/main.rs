@@ -66,6 +66,9 @@ fn print_usage() {
          churn_down=P, churn_up=P, streaming=true|false,\n\
          downlink=true|false, downlink_compression=dense|layered,\n\
          downlink_tariff_scale=F,\n\
+         edge=true|false, edge.backhaul=3g|4g|5g,\n\
+         edge.bw_scale=F, edge.flush_k=N, edge.cache_downlink=true|false,\n\
+         edge.dynamics=markov|diurnal,\n\
          scenario=none|{scenarios},\n\
          scenario_file=FILE (TOML [scenario] tree: zones, mobility,\n\
          [[scenario.phase]] timeline)"
@@ -112,6 +115,16 @@ fn report(log: &RunLog) {
     if handoffs > 0 {
         let dropped: u64 = log.records.iter().map(|r| r.dropped_handoff).sum();
         println!("handoffs        : {handoffs} ({dropped} in-flight layers dropped)");
+    }
+    let migrated: u64 = log.records.iter().map(|r| r.migrated_handoff).sum();
+    let backhaul: u64 = log.records.iter().map(|r| r.backhaul_bytes).sum();
+    if backhaul > 0 || migrated > 0 {
+        let bound: u64 = log.records.iter().map(|r| r.edge_rounds_bound).sum();
+        println!(
+            "edge backhaul   : {:.2} MB ({bound} backhaul-bound rounds)",
+            backhaul as f64 / (1024.0 * 1024.0)
+        );
+        println!("migrated_handoff: {migrated}");
     }
     if let Some(last) = log.last() {
         println!("final train loss: {:.4}", last.train_loss);
@@ -169,6 +182,18 @@ fn cmd_train(args: &[String]) -> Result<()> {
             sc.n_zones(),
             sc.n_phases(),
             sc.move_prob()
+        );
+    }
+    if let Some(edge) = &exp.edge {
+        let s = edge.settings();
+        println!(
+            "edge: {} zones, backhaul {} x{} ({}), flush_k {}{}",
+            edge.n_zones(),
+            s.backhaul.name(),
+            s.bw_scale,
+            s.dynamics.name(),
+            s.flush_k,
+            if s.cache_downlink { ", cached downlink" } else { "" }
         );
     }
     match exp.sync_mode {

@@ -66,6 +66,19 @@ pub struct RoundRecord {
     /// Median zone id across the population at record time (scenario
     /// mobility telemetry; 0 when no scenario is configured).
     pub zone_p50: f64,
+    /// Edge-tier backhaul bytes this round/window (partial-aggregate
+    /// frames plus edge-cached downlink fetches; 0 when the edge tier is
+    /// disabled).
+    pub backhaul_bytes: u64,
+    /// 95th-percentile backhaul transfer wall this round/window (0 when
+    /// nothing crossed the backhaul).
+    pub backhaul_p95_s: f64,
+    /// Held edge contributions migrated edge-to-edge on handoff this
+    /// round/window (the migration upgrade over drop-to-restitution).
+    pub migrated_handoff: u64,
+    /// 1 when this record was backhaul-bound: `backhaul_p95_s` exceeded
+    /// the access-link `finish_p95_s`.
+    pub edge_rounds_bound: u64,
 }
 
 /// The single source of truth for per-round CSV column names, shared by
@@ -98,6 +111,10 @@ pub mod columns {
         "handoffs",
         "dropped_handoff",
         "zone_p50",
+        "backhaul_bytes",
+        "backhaul_p95_s",
+        "migrated_handoff",
+        "edge_rounds_bound",
     ];
 
     /// The CSV header line (no trailing newline).
@@ -191,7 +208,7 @@ impl RunLog {
         for r in &self.records {
             let _ = writeln!(
                 s,
-                "{},{:.6},{:.6},{:.6},{:.3},{:.6},{:.3},{:.3},{},{:.4},{:.4},{:.4},{},{},{},{},{:.4},{:.4},{},{:.3},{:.6},{},{},{:.2}",
+                "{},{:.6},{:.6},{:.6},{:.3},{:.6},{:.3},{:.3},{},{:.4},{:.4},{:.4},{},{},{},{},{:.4},{:.4},{},{:.3},{:.6},{},{},{:.2},{},{:.4},{},{}",
                 r.round,
                 r.train_loss,
                 r.eval_loss,
@@ -215,7 +232,11 @@ impl RunLog {
                 r.down_money,
                 r.handoffs,
                 r.dropped_handoff,
-                r.zone_p50
+                r.zone_p50,
+                r.backhaul_bytes,
+                r.backhaul_p95_s,
+                r.migrated_handoff,
+                r.edge_rounds_bound
             );
         }
         s
@@ -330,19 +351,24 @@ mod tests {
         r.handoffs = 7;
         r.dropped_handoff = 2;
         r.zone_p50 = 1.0;
+        r.backhaul_bytes = 2080;
+        r.backhaul_p95_s = 0.75;
+        r.migrated_handoff = 3;
+        r.edge_rounds_bound = 1;
         log.push(r);
         let csv = log.to_csv();
         let header = csv.lines().next().unwrap();
         for col in ["sampled", "completed", "dropped_offline", "staleness_p50",
                     "staleness_p95", "down_bytes", "down_energy_j", "down_money",
-                    "handoffs", "dropped_handoff", "zone_p50"] {
+                    "handoffs", "dropped_handoff", "zone_p50", "backhaul_bytes",
+                    "backhaul_p95_s", "migrated_handoff", "edge_rounds_bound"] {
             assert!(header.split(',').any(|c| c == col), "missing {col}: {header}");
         }
         assert!(
             csv.lines()
                 .nth(1)
                 .unwrap()
-                .ends_with(",5,4,1,1.0000,3.0000,4096,12.500,0.125000,7,2,1.00"),
+                .ends_with(",5,4,1,1.0000,3.0000,4096,12.500,0.125000,7,2,1.00,2080,0.7500,3,1"),
             "{csv}"
         );
     }

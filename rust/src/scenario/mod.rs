@@ -105,6 +105,9 @@ pub struct PhaseSpec {
     /// Multiplier on every zone's loss probabilities (clamped to stay a
     /// probability).
     pub loss_scale: Option<f64>,
+    /// Edge-tier backhaul bandwidth scale in `(0, 1]` from this point on
+    /// (ignored when the edge tier is disabled).
+    pub backhaul_scale: Option<f64>,
 }
 
 /// A parsed, validated-on-build scenario description (pure data — the
@@ -235,6 +238,7 @@ impl PhaseSpec {
                 get_f64(kvs, "bw_scale_5g"),
             ],
             loss_scale: get_f64(kvs, "loss_scale"),
+            backhaul_scale: get_f64(kvs, "backhaul_scale"),
         })
     }
 }
@@ -385,6 +389,11 @@ impl ScenarioSpec {
             if let Some(l) = p.loss_scale {
                 if !(l > 0.0 && l.is_finite()) {
                     return Err(format!("phase {pi}: loss_scale {l} must be finite and > 0"));
+                }
+            }
+            if let Some(b) = p.backhaul_scale {
+                if !(b > 0.0 && b <= 1.0) {
+                    return Err(format!("phase {pi}: backhaul_scale {b} not in (0, 1]"));
                 }
             }
         }
@@ -649,6 +658,9 @@ pub struct Scenario {
     /// Global per-technology bandwidth scales (slots via [`type_slot`]).
     type_scale: [f64; 3],
     loss_scale: f64,
+    /// Phase-scripted edge backhaul scale (read by the engines when the
+    /// edge tier is enabled; inert otherwise).
+    backhaul_scale: f64,
     next_phase: usize,
     ticks: u64,
     pub window: ScenarioWindow,
@@ -717,6 +729,7 @@ impl Scenario {
             move_prob,
             type_scale: [1.0; 3],
             loss_scale: 1.0,
+            backhaul_scale: 1.0,
             next_phase: 0,
             ticks: 0,
             window: ScenarioWindow::default(),
@@ -748,6 +761,12 @@ impl Scenario {
 
     pub fn zone_of(&self, id: usize) -> usize {
         self.zone_of[id]
+    }
+
+    /// Current phase-scripted edge backhaul scale (1.0 until a
+    /// `backhaul_scale` phase fires).
+    pub fn backhaul_scale(&self) -> f64 {
+        self.backhaul_scale
     }
 
     /// Run-total handoffs (see also the per-window counters).
@@ -811,6 +830,9 @@ impl Scenario {
             }
             if let Some(l) = ph.loss_scale {
                 self.loss_scale = l;
+            }
+            if let Some(b) = ph.backhaul_scale {
+                self.backhaul_scale = b;
             }
             for (slot, s) in ph.bw_scale.iter().enumerate() {
                 if let Some(s) = s {
@@ -894,6 +916,7 @@ impl Scenario {
         self.move_prob = self.spec.move_prob;
         self.type_scale = [1.0; 3];
         self.loss_scale = 1.0;
+        self.backhaul_scale = 1.0;
         self.next_phase = 0;
         self.ticks = 0;
         self.window = ScenarioWindow::default();
@@ -951,6 +974,7 @@ bad_bw = 0.2
 at_s = 30.0
 zone = 1
 bw_scale_4g = 0.5
+backhaul_scale = 0.3
 
 [[scenario.phase]]
 at_s = 10.0
@@ -970,6 +994,7 @@ move_prob = 0.5
         assert!(spec.phases[0].at_s < spec.phases[1].at_s);
         assert_eq!(spec.phases[1].zone, Some(1));
         assert_eq!(spec.phases[1].bw_scale[1], Some(0.5));
+        assert_eq!(spec.phases[1].backhaul_scale, Some(0.3));
         spec.validate(&default_types()).unwrap();
         // No scenario tree at all -> None.
         assert!(ScenarioSpec::from_document(&Document::parse("rounds = 3").unwrap())

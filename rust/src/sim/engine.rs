@@ -34,6 +34,7 @@ use crate::coordinator::device::{Device, LayerTransfer};
 use crate::coordinator::experiment::Experiment;
 use crate::coordinator::trainer::{DeviceTrainer, LocalTrainer};
 use crate::drl::DeviceAgent;
+use crate::edge::HeldContribution;
 use crate::metrics::{percentile, RoundRecord, RunLog};
 use crate::population::{ClientSampler, Population};
 use crate::scenario::Scenario;
@@ -56,6 +57,7 @@ pub fn run(
         .as_ref()
         .map(|s| (s.handoffs_total(), s.dropped_total()))
         .unwrap_or((0, 0));
+    let edge0 = exp.edge.as_ref().map(|e| e.migrated_total()).unwrap_or(0);
     let result = if exp.population.is_some() {
         run_cohort(exp, trainer, log)
     } else {
@@ -73,7 +75,29 @@ pub fn run(
         exp.sim_stats.handoffs = sc.handoffs_total() - scenario0.0;
         exp.sim_stats.dropped_handoff = sc.dropped_total() - scenario0.1;
     }
+    if let Some(edge) = exp.edge.as_ref() {
+        exp.sim_stats.migrated_handoff = edge.migrated_total() - edge0;
+    }
     result
+}
+
+/// Drain the edge tier's record-window counters into the four edge record
+/// fields `(backhaul_bytes, backhaul_p95_s, migrated_handoff,
+/// edge_rounds_bound)` — all zero when the tier is disabled. A window is
+/// *backhaul-bound* when its backhaul p95 exceeds the access-side finish
+/// p95 the caller computed for the same window.
+fn drain_edge_window(exp: &mut Experiment, finish_p95_s: f64) -> (u64, f64, u64, u64) {
+    let Some(edge) = exp.edge.as_mut() else {
+        return (0, 0.0, 0, 0);
+    };
+    let mut w = edge.window.take();
+    let p95 = if w.backhaul_walls.is_empty() {
+        0.0
+    } else {
+        percentile(&mut w.backhaul_walls, 95.0)
+    };
+    let bound = (finish_p95_s.is_finite() && p95 > finish_p95_s) as u64;
+    (w.backhaul_bytes, p95, w.migrated, bound)
 }
 
 /// Advance the scenario world by one tick at virtual time `t` and re-apply
@@ -89,6 +113,21 @@ fn scenario_tick_legacy(exp: &mut Experiment, t: f64) {
         if let Some(dl) = exp.downlink.as_mut() {
             sc.configure(id, dl.links_mut(id));
         }
+        // Edge tier: the device's contributions still held at its old
+        // zone's node follow it to the new zone (migration, not the
+        // restitution fallback — frames already on the backhaul wire stay
+        // put, and in-flight *access* layers still restitute).
+        if let Some(edge) = exp.edge.as_mut() {
+            let zone = sc.zone_of(id);
+            if edge.zone_of(id) != zone {
+                edge.migrate(id, zone);
+            }
+        }
+    }
+    if let Some(edge) = exp.edge.as_mut() {
+        // Phase-scripted backhaul throttle (`backhaul_scale` in the
+        // scenario DSL) lands on every zone's backhaul link.
+        edge.set_phase_scale(sc.backhaul_scale());
     }
 }
 
@@ -208,6 +247,8 @@ fn barrier_rounds(
             (0..m).filter(|&i| active[i]).map(|i| walls[i]).collect();
         let finish_p50_s = percentile(&mut finishes, 50.0);
         let finish_p95_s = percentile(&mut finishes, 95.0);
+        let (backhaul_bytes, backhaul_p95_s, migrated_handoff, edge_rounds_bound) =
+            drain_edge_window(exp, finish_p95_s);
         log.push(RoundRecord {
             round,
             train_loss: loss_sum / loss_n.max(1) as f64,
@@ -238,23 +279,67 @@ fn barrier_rounds(
             handoffs: sw.handoffs,
             dropped_handoff: sw.dropped_handoff,
             zone_p50,
+            backhaul_bytes,
+            backhaul_p95_s,
+            migrated_handoff,
+            edge_rounds_bound,
         });
         stats.records += 1;
         Ok(())
     }
 
-    // The single barrier-round broadcast trigger: once nothing is pending,
-    // schedule the Broadcast at the round's wall time (exactly once).
+    // The single barrier-round broadcast trigger: once nothing is pending
+    // on the access side, either schedule the Broadcast at the round's wall
+    // time (flat topology — exactly once), or, with the edge tier, hold
+    // every received upload at its zone's node and put the per-zone
+    // partial-aggregate frames on the backhaul — the Broadcast then fires
+    // at the last `BackhaulArrived` instead, so the round can be
+    // backhaul-bound. Payloads stay in `recv_bufs` (the barrier aggregates
+    // all-at-once anyway); the held entries mark which zones owe a frame.
+    #[allow(clippy::too_many_arguments)]
     fn maybe_broadcast(
+        exp: &mut Experiment,
         queue: &mut EventQueue,
         pending_compute: usize,
         pending_layers: usize,
         scheduled: &mut bool,
         round_wall: f64,
+        pending_backhaul: &mut usize,
     ) {
-        if pending_compute == 0 && pending_layers == 0 && !*scheduled {
+        if pending_compute != 0 || pending_layers != 0 || *scheduled {
+            return;
+        }
+        *scheduled = true;
+        let Some(edge) = exp.edge.as_mut() else {
             queue.push(round_wall, Event::Broadcast);
-            *scheduled = true;
+            return;
+        };
+        for i in 0..exp.received.len() {
+            if !exp.received[i] {
+                continue;
+            }
+            let zone = exp.scenario.as_ref().map_or(0, |sc| sc.zone_of(i));
+            edge.hold(
+                zone,
+                HeldContribution {
+                    device: i,
+                    update: LgcUpdate { dim: 0, layers: Vec::new() },
+                    weight: 0.0,
+                    version: 0,
+                    loss: 0.0,
+                    reward: f64::NAN,
+                    finish_s: 0.0,
+                },
+            );
+        }
+        let flushes = edge.flush_all(round_wall);
+        if flushes.is_empty() {
+            queue.push(round_wall, Event::Broadcast);
+            return;
+        }
+        for (zone, flush, arrive, _bytes) in flushes {
+            queue.push(arrive, Event::BackhaulArrived { zone, flush });
+            *pending_backhaul += 1;
         }
     }
 
@@ -274,6 +359,7 @@ fn barrier_rounds(
         let mut bytes_up = 0u64;
         let mut pending_compute = 0usize;
         let mut pending_layers = 0usize;
+        let mut pending_backhaul = 0usize;
         let mut broadcast_scheduled = false;
         let mut loss_sum = 0.0f64;
         let mut loss_n = 0usize;
@@ -296,10 +382,15 @@ fn barrier_rounds(
                     if let Some(dl) = exp.downlink.as_mut() {
                         dl.step_round();
                     }
+                    if let Some(edge) = exp.edge.as_mut() {
+                        edge.step_round();
+                    }
                     // Scenario world: mobility & phases at round start.
                     // Barrier rounds never carry in-flight layers across a
                     // tick, so a barrier handoff can never drop one (the
-                    // documented barrier/async divergence).
+                    // documented barrier/async divergence) — and held edge
+                    // contributions never straddle a tick either, so
+                    // barrier migration is structurally zero.
                     let clock = exp.total_time_s;
                     scenario_tick_legacy(exp, clock);
                     for i in 0..m {
@@ -403,22 +494,40 @@ fn barrier_rounds(
                     dev.last_delta = delta;
                     bytes_up += bytes;
                     maybe_broadcast(
+                        exp,
                         &mut queue,
                         pending_compute,
                         pending_layers,
                         &mut broadcast_scheduled,
                         round_wall,
+                        &mut pending_backhaul,
                     );
                 }
                 Event::LayerArrived { .. } => {
                     pending_layers -= 1;
                     maybe_broadcast(
+                        exp,
                         &mut queue,
                         pending_compute,
                         pending_layers,
                         &mut broadcast_scheduled,
                         round_wall,
+                        &mut pending_backhaul,
                     );
+                }
+                Event::BackhaulArrived { flush, .. } => {
+                    // A zone's partial-aggregate frame landed at the cloud.
+                    // Barrier payloads ride `recv_bufs`; the held entries
+                    // are markers, so just retire the flush. The round's
+                    // wall now extends to the slowest backhaul, and the
+                    // Broadcast fires when the last frame is in.
+                    let edge = exp.edge.as_mut().expect("edge enabled");
+                    drop(edge.take_arrived(flush));
+                    pending_backhaul -= 1;
+                    round_wall = round_wall.max(t);
+                    if pending_backhaul == 0 {
+                        queue.push(round_wall, Event::Broadcast);
+                    }
                 }
                 Event::UploadDone { .. } => {
                     unreachable!("UploadDone is only scheduled by the cohort engines")
@@ -475,6 +584,21 @@ fn barrier_rounds(
                                     round as u64 + 1,
                                     round,
                                 );
+                                // Edge-cached broadcast: the first fetch per
+                                // (zone, version) pulls the model over the
+                                // backhaul once; every other device in the
+                                // zone streams from the edge cache and only
+                                // pays its access-side cost.
+                                let start = match exp.edge.as_mut() {
+                                    Some(edge) if edge.cache_downlink() => {
+                                        let zone = exp
+                                            .scenario
+                                            .as_ref()
+                                            .map_or(0, |sc| sc.zone_of(i));
+                                        edge.down_fetch(zone, round as u64 + 1, round_wall)
+                                    }
+                                    _ => round_wall,
+                                };
                                 let dev = &mut exp.devices[i];
                                 // The upload was aggregated above: wipe the
                                 // shipped progress (what `sync` did on the
@@ -489,7 +613,7 @@ fn barrier_rounds(
                                 dev.sync_state.pending_layers = tr.update.layers.len();
                                 for (c, &ch) in tr.channels.iter().enumerate() {
                                     queue.push(
-                                        round_wall + tr.costs[ch].time_s,
+                                        start + tr.costs[ch].time_s,
                                         Event::DownlinkLayerArrived {
                                             device: i,
                                             channel: ch,
@@ -750,10 +874,15 @@ fn run_async(
                 if let Some(dl) = exp.downlink.as_mut() {
                     dl.step_round();
                 }
+                if let Some(edge) = exp.edge.as_mut() {
+                    edge.step_round();
+                }
                 // Scenario mobility & phases run on the same virtual
                 // period; a handoff here may strand in-flight layers on a
                 // vanished channel — they resolve (restitute + drop) at
-                // their scheduled arrival.
+                // their scheduled arrival. A handoff also migrates the
+                // device's contributions held at its old zone's edge node
+                // (see `scenario_tick_legacy`).
                 scenario_tick_legacy(exp, t);
                 if st.iter().any(|d| d.alive) {
                     queue.push(t + exp.cfg.fading_tick_s, Event::FadingTick);
@@ -855,6 +984,91 @@ fn run_async(
                     complete_upload(exp, trainer, &mut st, &mut queue, &mut ctx, log, i, t)?;
                 }
             }
+            Event::BackhaulArrived { flush, .. } => {
+                // A zone's partial-aggregate frame landed at the cloud: the
+                // folded contributions now flow through the sync-mode server
+                // logic, with staleness measured here (the server may have
+                // advanced while the frame crossed the backhaul).
+                let edge = exp.edge.as_mut().expect("edge enabled");
+                let arrived = edge.take_arrived(flush);
+                match ctx.kind {
+                    AsyncKind::Semi { buffer_k } => {
+                        for c in arrived {
+                            let staleness = ctx.server_version - c.version;
+                            if exp.cfg.streaming {
+                                if ctx.buffer.is_empty() {
+                                    exp.server.stream_begin();
+                                }
+                                exp.server.stream_accumulate(&c.update, c.weight);
+                                exp.recv_bufs[c.device] = c.update;
+                                ctx.buffer.push(Buffered {
+                                    device: c.device,
+                                    update: LgcUpdate { dim: 0, layers: Vec::new() },
+                                    weight: c.weight,
+                                    loss: c.loss,
+                                    staleness,
+                                    duration: c.finish_s,
+                                });
+                            } else {
+                                ctx.buffer.push(Buffered {
+                                    device: c.device,
+                                    update: c.update,
+                                    weight: c.weight,
+                                    loss: c.loss,
+                                    staleness,
+                                    duration: c.finish_s,
+                                });
+                            }
+                        }
+                        // Same FedBuff trigger as the flat path; "parked"
+                        // additionally requires an idle edge (a pending
+                        // frame is a guaranteed future producer).
+                        let fleet_parked = ctx.busy == 0
+                            && ctx.downlinking == 0
+                            && !edge_kick_idle(exp, &mut queue, t);
+                        if ctx.buffer.len() >= buffer_k
+                            || (fleet_parked && !ctx.buffer.is_empty())
+                        {
+                            aggregate_semi_buffer(exp, trainer, &mut ctx, log, t, buffer_k)?;
+                            queue.push(t, Event::Broadcast);
+                        } else if fleet_parked && ctx.buffer.is_empty() {
+                            queue.push(t, Event::Broadcast);
+                        }
+                    }
+                    AsyncKind::Fully { staleness_decay } => {
+                        // FedAsync applies each folded contribution as its
+                        // own single-upload batch, in held (arrival) order.
+                        for mut c in arrived {
+                            let staleness = ctx.server_version - c.version;
+                            let w = staleness_decay.powf(staleness as f64) as f32;
+                            for layer in &mut c.update.layers {
+                                for v in &mut layer.values {
+                                    *v *= w;
+                                }
+                            }
+                            if exp.cfg.streaming {
+                                exp.server.stream_begin();
+                                exp.server.stream_accumulate(&c.update, c.weight);
+                                exp.server.stream_apply();
+                            } else {
+                                exp.server.set_round_weights(&[c.weight]);
+                                exp.server.aggregate_and_apply(&[&c.update]);
+                            }
+                            exp.recv_bufs[c.device] = c.update;
+                            ctx.server_version += 1;
+                            push_async_record(
+                                exp,
+                                trainer,
+                                &mut ctx,
+                                log,
+                                t,
+                                &[(c.loss, c.finish_s, staleness)],
+                            )?;
+                        }
+                        queue.push(t, Event::Broadcast);
+                    }
+                }
+            }
             Event::UploadDone { .. } => {
                 unreachable!("UploadDone is only scheduled by the cohort engines")
             }
@@ -936,8 +1150,14 @@ fn run_async(
                     } else if let AsyncKind::Semi { buffer_k } = ctx.kind {
                         // If the device died on its download charges and it
                         // was the last pending producer, a partial buffer
-                        // would strand forever — flush it now.
-                        if ctx.busy == 0 && ctx.downlinking == 0 && !ctx.buffer.is_empty() {
+                        // would strand forever — flush it now. (A pending
+                        // edge frame still counts as a producer; the kick
+                        // puts any sub-threshold partials on the backhaul.)
+                        if ctx.busy == 0
+                            && ctx.downlinking == 0
+                            && !edge_kick_idle(exp, &mut queue, t)
+                            && !ctx.buffer.is_empty()
+                        {
                             aggregate_semi_buffer(exp, trainer, &mut ctx, log, t, buffer_k)?;
                             queue.push(t, Event::Broadcast);
                         }
@@ -998,9 +1218,19 @@ fn start_async_downlink(
         return begin_device_round(exp, trainer, st, queue, ctx, i, now, era);
     }
     dev.sync_state.pending_layers = tr.update.layers.len();
+    // Edge-cached broadcast: the first fetch per (zone, version) pulls the
+    // model over the backhaul once; later devices in the zone stream from
+    // the edge cache and only pay the access-side cost.
+    let start = match exp.edge.as_mut() {
+        Some(edge) if edge.cache_downlink() => {
+            let zone = exp.scenario.as_ref().map_or(0, |sc| sc.zone_of(i));
+            edge.down_fetch(zone, ctx.server_version, now)
+        }
+        _ => now,
+    };
     for (c, &ch) in tr.channels.iter().enumerate() {
         queue.push(
-            now + tr.costs[ch].time_s,
+            start + tr.costs[ch].time_s,
             Event::DownlinkLayerArrived { device: i, channel: ch, layer: c },
         );
     }
@@ -1076,7 +1306,32 @@ fn complete_upload(
         exp.server.decode_from_wire_into(&update, &mut buf)?;
         update = buf;
     }
-    if !update.layers.is_empty() {
+    if !update.layers.is_empty() && exp.edge.is_some() {
+        // Edge tier: the upload terminates at the device's zone node, not
+        // at the cloud. The contribution is held (with the metadata the
+        // server will need at application time) until the zone's partial
+        // aggregate crosses the backhaul — the sync-mode server logic then
+        // runs at `BackhaulArrived`, with staleness measured there.
+        let zone = exp.scenario.as_ref().map_or(0, |sc| sc.zone_of(i));
+        let edge = exp.edge.as_mut().expect("edge enabled");
+        edge.hold(
+            zone,
+            HeldContribution {
+                device: i,
+                update,
+                weight: ctx.samples[i] as f64,
+                version: st[i].model_version,
+                loss: st[i].loss,
+                reward: f64::NAN,
+                finish_s: duration,
+            },
+        );
+        if edge.ready_to_flush(zone) {
+            if let Some((flush, arrive, _bytes)) = edge.begin_flush(zone, t) {
+                queue.push(arrive, Event::BackhaulArrived { zone, flush });
+            }
+        }
+    } else if !update.layers.is_empty() {
         match ctx.kind {
             AsyncKind::Semi { buffer_k: _ } => {
                 if exp.cfg.streaming {
@@ -1140,7 +1395,21 @@ fn complete_upload(
         // progress sits in the error memory now).
         queue.push(t, Event::Broadcast);
     }
-    if let AsyncKind::Semi { buffer_k } = ctx.kind {
+    if exp.edge.is_some() {
+        // With the edge tier, the buffer only fills at `BackhaulArrived`;
+        // here the sole risk is a parked fleet with partials stranded below
+        // their zones' flush thresholds. Kick them onto the backhaul — if
+        // nothing was pending at all, fall through to the flat parked-fleet
+        // handling so the run still makes progress.
+        if ctx.busy == 0 && ctx.downlinking == 0 && !edge_kick_idle(exp, queue, t) {
+            if let AsyncKind::Semi { buffer_k } = ctx.kind {
+                if !ctx.buffer.is_empty() {
+                    aggregate_semi_buffer(exp, trainer, ctx, log, t, buffer_k)?;
+                }
+            }
+            queue.push(t, Event::Broadcast);
+        }
+    } else if let AsyncKind::Semi { buffer_k } = ctx.kind {
         let fleet_parked = ctx.busy == 0 && ctx.downlinking == 0;
         if ctx.buffer.len() >= buffer_k || (fleet_parked && !ctx.buffer.is_empty()) {
             // FedBuff trigger — or a flush when the whole fleet is parked on
@@ -1155,6 +1424,20 @@ fn complete_upload(
         }
     }
     Ok(())
+}
+
+/// With the whole fleet parked, no future upload can push a zone past its
+/// flush threshold — put every held partial on the backhaul now. Returns
+/// true while any edge work is still pending (frames just flushed, or
+/// already in flight): a `BackhaulArrived` is then guaranteed to drive the
+/// run forward, so the caller must not force a flush/broadcast. Always
+/// false when the edge tier is disabled.
+fn edge_kick_idle(exp: &mut Experiment, queue: &mut EventQueue, now: f64) -> bool {
+    let Some(edge) = exp.edge.as_mut() else { return false };
+    for (zone, flush, arrive, _bytes) in edge.flush_all(now) {
+        queue.push(arrive, Event::BackhaulArrived { zone, flush });
+    }
+    edge.pending_total() > 0
 }
 
 /// Aggregate the first `min(len, buffer_k)` buffered uploads through the
@@ -1240,6 +1523,10 @@ fn push_async_record(
     let (tot_energy, tot_money) = exp.devices.iter().fold((0.0, 0.0), |acc, d| {
         (acc.0 + d.meter.energy_used, acc.1 + d.meter.money_used)
     });
+    let finish_p50_s = percentile(&mut finishes, 50.0);
+    let finish_p95_s = percentile(&mut finishes, 95.0);
+    let (backhaul_bytes, backhaul_p95_s, migrated_handoff, edge_rounds_bound) =
+        drain_edge_window(exp, finish_p95_s);
     let rec = RoundRecord {
         round,
         train_loss,
@@ -1255,8 +1542,8 @@ fn push_async_record(
         } else {
             f64::NAN
         },
-        finish_p50_s: percentile(&mut finishes, 50.0),
-        finish_p95_s: percentile(&mut finishes, 95.0),
+        finish_p50_s,
+        finish_p95_s,
         stale_updates,
         sampled: contributions.len() as u64,
         completed: contributions.len() as u64,
@@ -1269,6 +1556,10 @@ fn push_async_record(
         handoffs: sw.handoffs,
         dropped_handoff: sw.dropped_handoff,
         zone_p50,
+        backhaul_bytes,
+        backhaul_p95_s,
+        migrated_handoff,
+        edge_rounds_bound,
     };
     exp.total_time_s = now;
     ctx.last_record_t = now;
@@ -1384,12 +1675,18 @@ fn cohort_barrier_rounds(
         if let Some(dl) = exp.downlink.as_mut() {
             dl.step_round();
         }
+        if let Some(edge) = exp.edge.as_mut() {
+            edge.step_round();
+        }
         // Scenario mobility & phases advance once per round. Nobody is
         // materialized between rounds, so no live bundle needs immediate
         // reconfiguration — each sampled client's channels are configured
         // to its current zone at materialization below.
         if let Some(sc) = exp.scenario.as_mut() {
             let _ = sc.tick(exp.total_time_s);
+            if let Some(edge) = exp.edge.as_mut() {
+                edge.set_phase_scale(sc.backhaul_scale());
+            }
         }
         if !pop.any_within_budget() {
             break 'rounds;
@@ -1408,6 +1705,10 @@ fn cohort_barrier_rounds(
         let mut finishes: Vec<f64> = Vec::with_capacity(cohort.len());
         let mut dropped_offline = 0u64;
         let mut nrecv = 0usize;
+        // Zones with at least one received upload this round: each owes one
+        // partial-aggregate frame on its backhaul (accounting-only, like
+        // the cohort downlink — see the edge module docs).
+        let mut zones_uploaded: Vec<usize> = Vec::new();
         if streaming {
             exp.server.stream_begin();
         }
@@ -1466,6 +1767,12 @@ fn cohort_barrier_rounds(
                     }
                     nrecv += 1;
                     received = true;
+                    if exp.edge.is_some() {
+                        let z = exp.scenario.as_ref().map_or(0, |sc| sc.zone_of(id));
+                        if !zones_uploaded.contains(&z) {
+                            zones_uploaded.push(z);
+                        }
+                    }
                 }
             }
             let (comm_j, comm_money, bytes) = TransferCost::fold_totals(&costs);
@@ -1504,6 +1811,16 @@ fn cohort_barrier_rounds(
             false
         };
         if applied {
+            // Each contributing zone's partial crossed the backhaul before
+            // the cloud could aggregate: the round extends by the slowest
+            // frame (the per-zone flushes run in parallel).
+            if let Some(edge) = exp.edge.as_mut() {
+                let mut bh_wall = 0.0f64;
+                for &z in &zones_uploaded {
+                    bh_wall = bh_wall.max(edge.charge_flush(z));
+                }
+                round_wall += bh_wall;
+            }
             let mut down_wall = 0.0f64;
             for &k in &received_live {
                 let dev = &mut live[k].0;
@@ -1513,8 +1830,20 @@ fn cohort_barrier_rounds(
                     // the client got the exact global above; the
                     // broadcast's bytes/energy/money/time are charged from
                     // the budget-determined layer sizes.
-                    let (wall, e, mo, _by) =
+                    let (mut wall, e, mo, _by) =
                         dl.charge_broadcast(dev.id, exp.server.params.len());
+                    // Edge-cached broadcast: the zone's first fetch of this
+                    // version pulls the model over the backhaul once; the
+                    // zone's other clients stream from the cache.
+                    if let Some(edge) = exp.edge.as_mut() {
+                        if edge.cache_downlink() {
+                            let z = exp
+                                .scenario
+                                .as_ref()
+                                .map_or(0, |sc| sc.zone_of(dev.id));
+                            wall += edge.down_fetch(z, round as u64 + 1, 0.0);
+                        }
+                    }
                     dev.meter.record_downlink(e, mo);
                     dev.sync_state.synced_version = round as u64 + 1;
                     dev.sync_state.synced_round = round;
@@ -1551,6 +1880,10 @@ fn cohort_barrier_rounds(
             .map(|s| s.window.take())
             .unwrap_or_default();
         let zone_p50 = exp.scenario.as_ref().map(|s| s.zone_p50()).unwrap_or(0.0);
+        let finish_p50_s = percentile(&mut finishes, 50.0);
+        let finish_p95_s = percentile(&mut finishes, 95.0);
+        let (backhaul_bytes, backhaul_p95_s, migrated_handoff, edge_rounds_bound) =
+            drain_edge_window(exp, finish_p95_s);
         log.push(RoundRecord {
             round,
             train_loss: if loss_n == 0 { f64::NAN } else { loss_sum / loss_n as f64 },
@@ -1566,8 +1899,8 @@ fn cohort_barrier_rounds(
             } else {
                 f64::NAN
             },
-            finish_p50_s: percentile(&mut finishes, 50.0),
-            finish_p95_s: percentile(&mut finishes, 95.0),
+            finish_p50_s,
+            finish_p95_s,
             stale_updates: 0,
             sampled: loss_n as u64,
             completed: nrecv as u64,
@@ -1580,6 +1913,10 @@ fn cohort_barrier_rounds(
             handoffs: sw.handoffs,
             dropped_handoff: sw.dropped_handoff,
             zone_p50,
+            backhaul_bytes,
+            backhaul_p95_s,
+            migrated_handoff,
+            edge_rounds_bound,
         });
         stats.records += 1;
     }
@@ -1706,6 +2043,7 @@ fn flush_semi_cohort(
     pending: &mut Vec<(f64, f64, u64)>,
     pending_updates: &mut Vec<LgcUpdate>,
     pending_weights: &mut Vec<f64>,
+    window_zones: &mut Vec<usize>,
     free_bufs: &mut Vec<LgcUpdate>,
     server_version: &mut u64,
     t: f64,
@@ -1717,6 +2055,14 @@ fn flush_semi_cohort(
         exp.server.set_round_weights(&pending_weights[..]);
         exp.server.aggregate_and_apply(&uploads);
     }
+    // Every zone that buffered a contribution this window shipped one
+    // partial-aggregate frame over its backhaul (accounting-only).
+    if let Some(edge) = exp.edge.as_mut() {
+        for &z in window_zones.iter() {
+            let _ = edge.charge_flush(z);
+        }
+    }
+    window_zones.clear();
     *server_version += 1;
     let contributions = std::mem::take(pending);
     // Drained window buffers go back to the free list for reuse.
@@ -1779,6 +2125,10 @@ fn push_cohort_record(
             tot_money += d.meter.money_used;
         }
     }
+    let finish_p50_s = percentile(&mut finishes, 50.0);
+    let finish_p95_s = percentile(&mut finishes, 95.0);
+    let (backhaul_bytes, backhaul_p95_s, migrated_handoff, edge_rounds_bound) =
+        drain_edge_window(exp, finish_p95_s);
     let rec = RoundRecord {
         round,
         train_loss,
@@ -1794,8 +2144,8 @@ fn push_cohort_record(
         } else {
             f64::NAN
         },
-        finish_p50_s: percentile(&mut finishes, 50.0),
-        finish_p95_s: percentile(&mut finishes, 95.0),
+        finish_p50_s,
+        finish_p95_s,
         stale_updates,
         // Invariant shared with the barrier engine: every sampled upload
         // either completed or dropped offline (completed + dropped_offline
@@ -1811,6 +2161,10 @@ fn push_cohort_record(
         handoffs: sw.handoffs,
         dropped_handoff: sw.dropped_handoff,
         zone_p50,
+        backhaul_bytes,
+        backhaul_p95_s,
+        migrated_handoff,
+        edge_rounds_bound,
     };
     exp.total_time_s = now;
     *last_record_t = now;
@@ -1856,6 +2210,9 @@ fn cohort_async_rounds(
     let mut pending_updates: Vec<LgcUpdate> = Vec::new();
     let mut pending_weights: Vec<f64> = Vec::new();
     let mut window = CohortWindow::default();
+    // Zones with a buffered (Semi) contribution this window — each owes one
+    // partial-aggregate backhaul frame, charged at the flush.
+    let mut window_zones: Vec<usize> = Vec::new();
     let mut last_record_t = exp.total_time_s;
     let mut decode_buf = LgcUpdate { dim: 0, layers: Vec::new() };
     // Recycled update buffers for the batch window (see the Semi arm).
@@ -1901,6 +2258,9 @@ fn cohort_async_rounds(
                 if let Some(dl) = exp.downlink.as_mut() {
                     dl.step_round();
                 }
+                if let Some(edge) = exp.edge.as_mut() {
+                    edge.step_round();
+                }
                 for s in slots.iter_mut() {
                     if let Some(dev) = s.dev.as_mut() {
                         dev.channels.step_round();
@@ -1926,7 +2286,24 @@ fn cohort_async_rounds(
                             if let Some(dl) = exp.downlink.as_mut() {
                                 sc.configure(s.client, dl.links_mut(s.client));
                             }
+                            // Accounting-only migration (nothing is ever
+                            // physically held in the cohort engines): a
+                            // waiting slot's completed upload logically sat
+                            // at its old zone's edge awaiting the next
+                            // flush — count its move.
+                            if let Some(edge) = exp.edge.as_mut() {
+                                let z = sc.zone_of(s.client);
+                                if edge.zone_of(s.client) != z {
+                                    edge.migrate(s.client, z);
+                                    if s.waiting {
+                                        edge.note_migrated(1);
+                                    }
+                                }
+                            }
                         }
+                    }
+                    if let Some(edge) = exp.edge.as_mut() {
+                        edge.set_phase_scale(sc.backhaul_scale());
                     }
                 }
                 // Revive retired slots: a slot retires when the sampler
@@ -2050,8 +2427,12 @@ fn cohort_async_rounds(
                         decode_buf = update;
                     }
                     let weight = pop.samples(client) as f64;
+                    let zone = exp.scenario.as_ref().map_or(0, |sc| sc.zone_of(client));
                     match kind {
                         AsyncKind::Semi { .. } => {
+                            if exp.edge.is_some() && !window_zones.contains(&zone) {
+                                window_zones.push(zone);
+                            }
                             if streaming {
                                 if pending.is_empty() {
                                     exp.server.stream_begin();
@@ -2089,6 +2470,12 @@ fn cohort_async_rounds(
                                 exp.server.aggregate_and_apply(&[&decode_buf]);
                             }
                             server_version += 1;
+                            // Fully-async: each applied contribution rode
+                            // its zone's backhaul as its own frame
+                            // (accounting-only, no event).
+                            if let Some(edge) = exp.edge.as_mut() {
+                                let _ = edge.charge_flush(zone);
+                            }
                             push_cohort_record(
                                 exp,
                                 trainer,
@@ -2123,6 +2510,7 @@ fn cohort_async_rounds(
                             &mut pending,
                             &mut pending_updates,
                             &mut pending_weights,
+                            &mut window_zones,
                             &mut free_bufs,
                             &mut server_version,
                             t,
@@ -2147,6 +2535,7 @@ fn cohort_async_rounds(
                                 &mut pending,
                                 &mut pending_updates,
                                 &mut pending_weights,
+                                &mut window_zones,
                                 &mut free_bufs,
                                 &mut server_version,
                                 t,
@@ -2263,6 +2652,7 @@ fn cohort_async_rounds(
                         &mut pending,
                         &mut pending_updates,
                         &mut pending_weights,
+                        &mut window_zones,
                         &mut free_bufs,
                         &mut server_version,
                         t,
@@ -2270,8 +2660,13 @@ fn cohort_async_rounds(
                     queue.push(t, Event::Broadcast);
                 }
             }
-            Event::LayerArrived { .. } | Event::DownlinkLayerArrived { .. } => {
-                unreachable!("cohort engine completes transfers via UploadDone/SyncConfirmed")
+            Event::LayerArrived { .. }
+            | Event::DownlinkLayerArrived { .. }
+            | Event::BackhaulArrived { .. } => {
+                unreachable!(
+                    "cohort engine completes transfers via UploadDone/SyncConfirmed \
+                     (edge backhaul is accounting-only here)"
+                )
             }
         }
     }

@@ -37,6 +37,13 @@ pub enum Event {
     /// broadcast's layers (0 = base layer). Only scheduled when the
     /// downlink is enabled (`cfg.downlink`).
     DownlinkLayerArrived { device: usize, channel: usize, layer: usize },
+    /// One partial-aggregate frame from zone `zone`'s edge node crossed
+    /// its backhaul link and landed at the cloud (`flush` identifies the
+    /// flush so reordered arrivals pick up the right payload). Only
+    /// scheduled by the legacy engines when the edge tier is enabled
+    /// (`cfg.edge`); the population cohort engines run the backhaul in
+    /// accounting-only fidelity and never schedule it.
+    BackhaulArrived { zone: usize, flush: u64 },
     /// `device` confirmed its downlink synchronization: the base layer
     /// arrived (legacy engines — enhancement layers may still trail,
     /// tracked in the device's `SyncState`), or the whole accounting-only

@@ -45,4 +45,7 @@ pub struct SimStats {
     /// In-flight uplink layers dropped because a handoff removed their
     /// channel (scenario mode; restituted into error-feedback memory).
     pub dropped_handoff: u64,
+    /// Held edge contributions migrated edge-to-edge on handoff instead of
+    /// being dropped (edge tier; 0 when the edge is disabled).
+    pub migrated_handoff: u64,
 }

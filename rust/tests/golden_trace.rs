@@ -112,6 +112,47 @@ fn run_once_scenario(preset: &str) -> String {
     fingerprint(&log)
 }
 
+/// The same seeded scenario run with the hierarchical edge tier active
+/// (throttled 3G backhaul, semi-async buffering) — pins the backhaul link
+/// simulation, partial-aggregate flush cadence and migration accounting.
+/// The fingerprint extends the per-round row with the edge telemetry so
+/// drift in backhaul timing or migration counts fails even when the model
+/// trajectory is unchanged.
+fn run_once_edge(preset: &str) -> String {
+    let mut c = cfg(Mechanism::LgcStatic);
+    c.rounds = 10;
+    c.scenario = Some(
+        lgc::scenario::ScenarioRegistry::resolve(preset).expect("builtin preset"),
+    );
+    c.sync_mode = Some(lgc::sim::SyncMode::SemiAsync { buffer_k: 2 });
+    c.edge_settings = Some(lgc::edge::EdgeSettings {
+        backhaul: lgc::channels::ChannelType::G3,
+        bw_scale: 0.2,
+        flush_k: 2,
+        ..lgc::edge::EdgeSettings::default()
+    });
+    let mut trainer = NativeLrTrainer::new(&c);
+    let mut exp = Experiment::new(c, &trainer);
+    assert!(exp.edge.is_some(), "{preset}: edge tier must build");
+    let log = exp.run(&mut trainer).expect("edge scenario run");
+    assert_eq!(log.records.len(), 10, "edge {preset}");
+    let mut buf = String::new();
+    for r in &log.records {
+        let _ = write!(
+            buf,
+            "{}:{:016x}:{:016x}:{}:{}:{}:{:016x};",
+            r.round,
+            r.train_loss.to_bits(),
+            r.round_time_s.to_bits(),
+            r.bytes_up,
+            r.backhaul_bytes,
+            r.migrated_handoff,
+            r.backhaul_p95_s.to_bits(),
+        );
+    }
+    format!("{:016x}", fnv1a(buf.as_bytes()))
+}
+
 fn load_golden() -> BTreeMap<String, String> {
     let mut map = BTreeMap::new();
     if let Ok(text) = std::fs::read_to_string(golden_path()) {
@@ -187,6 +228,26 @@ fn golden_traces_per_mechanism_preset() {
                 assert_eq!(
                     &a, expected,
                     "{key}: scenario trace fingerprint drifted from the blessed value — \
+                     re-bless with LGC_BLESS=1 if intentional"
+                );
+            }
+            _ => {
+                golden.insert(key, a);
+                blessed_any = true;
+            }
+        }
+    }
+    // Edge-tier scenario runs: same protocol, keyed `scenario-edge-<name>`.
+    for preset in ["commute", "stadium-flash-crowd"] {
+        let key = format!("scenario-edge-{preset}");
+        let a = run_once_edge(preset);
+        let b = run_once_edge(preset);
+        assert_eq!(a, b, "{key}: seeded edge run is not deterministic");
+        match golden.get(&key) {
+            Some(expected) if !bless_all => {
+                assert_eq!(
+                    &a, expected,
+                    "{key}: edge trace fingerprint drifted from the blessed value — \
                      re-bless with LGC_BLESS=1 if intentional"
                 );
             }

@@ -4,7 +4,8 @@
 use lgc::channels::{allocate_budget, AllocationPlan, ChannelType, DeviceChannels};
 use lgc::compression::{lgc_compress, wire, CompressScratch, ErrorFeedback};
 use lgc::config::toml::Document;
-use lgc::coordinator::Server;
+use lgc::coordinator::{Aggregator, Server, WeightedBySamples};
+use lgc::edge::{Edge, HeldContribution};
 use lgc::scenario::{
     congestion_burst_trace, diurnal_trace, dynamics, gilbert_elliott_trace, DynamicsKind,
     Scenario, ScenarioSpec, TraceReplay, ZoneSpec,
@@ -537,6 +538,186 @@ fn prop_downlink_frame_roundtrip_and_truncation_safety() {
             for cut in 0..buf.len() {
                 // Must never panic; any result is acceptable.
                 let _ = frame::decode_frame(&buf[..cut], &mut out);
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Streaming aggregation & the edge two-level fold (DESIGN.md §"Hierarchical
+// edge aggregation")
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+struct WeightedCase {
+    dim: usize,
+    updates: Vec<lgc::compression::LgcUpdate>,
+    weights: Vec<f64>,
+}
+
+impl Shrink for WeightedCase {
+    fn shrink(&self) -> Vec<Self> {
+        if self.updates.len() <= 1 {
+            return vec![];
+        }
+        vec![WeightedCase {
+            dim: self.dim,
+            updates: self.updates[..1].to_vec(),
+            weights: self.weights[..1].to_vec(),
+        }]
+    }
+}
+
+fn gen_weighted_case(rng: &mut Rng) -> WeightedCase {
+    let dim = gen::usize_in(rng, 8, 256);
+    let m = gen::usize_in(rng, 1, 6);
+    let all_zero = rng.uniform() < 0.2;
+    let mut updates = Vec::new();
+    let mut weights = Vec::new();
+    for _ in 0..m {
+        let u: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        let k = gen::usize_in(rng, 1, dim);
+        updates.push(lgc_compress(&u, &[k], &mut CompressScratch::default()));
+        weights.push(if all_zero || rng.uniform() < 0.25 {
+            0.0
+        } else {
+            gen::usize_in(rng, 1, 1000) as f64
+        });
+    }
+    WeightedCase { dim, updates, weights }
+}
+
+/// `WeightedBySamples` streaming ≡ batch within the documented ~1e-6
+/// relative (~1e-5 absolute) tolerance — including degenerate
+/// zero-total-weight cohorts, where both paths must apply *nothing*.
+#[test]
+fn prop_weighted_stream_equals_batch_incl_zero_weight_cohorts() {
+    check(
+        0xC1,
+        default_cases() / 2,
+        gen_weighted_case,
+        |case| {
+            let refs: Vec<&lgc::compression::LgcUpdate> = case.updates.iter().collect();
+            let mut batch_agg = WeightedBySamples::new();
+            batch_agg.set_round_weights(&case.weights);
+            let mut batch = vec![0f32; case.dim];
+            batch_agg.aggregate(&refs, &mut batch);
+
+            let mut agg = WeightedBySamples::new();
+            if !agg.stream_begin(case.dim) {
+                return Err("WeightedBySamples must stream natively".into());
+            }
+            let mut acc = vec![0f32; case.dim];
+            for (u, &w) in case.updates.iter().zip(&case.weights) {
+                agg.stream_accumulate(u, w, &mut acc);
+            }
+            agg.stream_finalize(&mut acc, case.updates.len(), case.weights.iter().sum());
+
+            for i in 0..case.dim {
+                let (s, b) = (acc[i], batch[i]);
+                if (s - b).abs() > 1e-5 + 1e-6 * b.abs() {
+                    return Err(format!("at {i}: stream {s} vs batch {b}"));
+                }
+            }
+            let wsum: f64 = case.weights.iter().sum();
+            if wsum == 0.0 && batch.iter().any(|&x| x != 0.0) {
+                return Err("zero-total-weight cohort must apply nothing".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[derive(Clone, Debug)]
+struct TwoLevelCase {
+    dim: usize,
+    held: Vec<HeldContribution>,
+    zones: Vec<usize>,
+    n_zones: usize,
+}
+
+impl Shrink for TwoLevelCase {}
+
+/// The edge tier's two-level fold composes: per-zone
+/// [`Edge::fold_partial`] partials summed and normalized at the cloud
+/// equal the flat weighted aggregation of the same contributions, within
+/// streaming f32 tolerance — regardless of how devices shard over zones.
+#[test]
+fn prop_edge_two_level_fold_composes_to_flat_aggregation() {
+    check(
+        0xC2,
+        default_cases() / 2,
+        |rng| {
+            let dim = gen::usize_in(rng, 8, 256);
+            let m = gen::usize_in(rng, 1, 8);
+            let n_zones = gen::usize_in(rng, 1, 4);
+            let mut held = Vec::new();
+            let mut zones = Vec::new();
+            for d in 0..m {
+                let u: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+                let k = gen::usize_in(rng, 1, dim);
+                held.push(HeldContribution {
+                    device: d,
+                    update: lgc_compress(&u, &[k], &mut CompressScratch::default()),
+                    weight: gen::usize_in(rng, 1, 1000) as f64,
+                    version: 0,
+                    loss: 0.0,
+                    reward: f64::NAN,
+                    finish_s: 0.0,
+                });
+                zones.push(rng.index(n_zones));
+            }
+            TwoLevelCase { dim, held, zones, n_zones }
+        },
+        |case| {
+            // Edge tier: fold each zone's held set, ship the partials, and
+            // finalize at the cloud by the total weight.
+            let mut acc = vec![0f64; case.dim];
+            let mut wsum = 0f64;
+            let mut folded = 0usize;
+            for z in 0..case.n_zones {
+                let zone_held: Vec<HeldContribution> = case
+                    .held
+                    .iter()
+                    .zip(&case.zones)
+                    .filter(|(_, &zz)| zz == z)
+                    .map(|(c, _)| c.clone())
+                    .collect();
+                if zone_held.is_empty() {
+                    continue;
+                }
+                let (partial, w, n) = Edge::fold_partial(&zone_held, case.dim);
+                if n != zone_held.len() {
+                    return Err(format!("zone {z}: folded {n} of {}", zone_held.len()));
+                }
+                for (a, &p) in acc.iter_mut().zip(&partial) {
+                    *a += p as f64;
+                }
+                wsum += w;
+                folded += n;
+            }
+            if folded != case.held.len() {
+                return Err("zones must partition the held set".into());
+            }
+            // Flat reference: Σ w_i·u_i / Σ w in f64 over the decodes.
+            let decodes: Vec<Vec<f32>> = case.held.iter().map(|c| c.update.decode()).collect();
+            let wref: f64 = case.held.iter().map(|c| c.weight).sum();
+            if (wsum - wref).abs() > 1e-9 * wref.max(1.0) {
+                return Err(format!("weight sums differ: {wsum} vs {wref}"));
+            }
+            for i in 0..case.dim {
+                let flat: f64 = case
+                    .held
+                    .iter()
+                    .zip(&decodes)
+                    .map(|(c, d)| c.weight * d[i] as f64)
+                    .sum::<f64>()
+                    / wref;
+                let two_level = acc[i] / wsum;
+                if (two_level - flat).abs() > 1e-5 + 1e-6 * flat.abs() {
+                    return Err(format!("at {i}: two-level {two_level} vs flat {flat}"));
+                }
             }
             Ok(())
         },

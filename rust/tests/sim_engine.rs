@@ -9,6 +9,7 @@ use lgc::config::{ExperimentConfig, Mechanism, Workload};
 use lgc::coordinator::{
     Device, Experiment, ExperimentBuilder, LocalTrainer, NativeLrTrainer, Server,
 };
+use lgc::edge::EdgeSettings;
 use lgc::metrics::RunLog;
 use lgc::resources::{ComputeCostModel, ResourceMeter};
 use lgc::scenario::{DynamicsKind, ScenarioRegistry, ScenarioSpec, ZoneSpec};
@@ -698,4 +699,158 @@ fn barrier_layered_downlink_trains_with_partial_broadcasts() {
     assert!(any_gap, "layered downlink should leave a partial-sync gap");
     // ...yet learning still happens.
     assert!(log.final_acc() > 0.5, "acc={}", log.final_acc());
+}
+
+// ---------------------------------------------------------------------------
+// Hierarchical edge tier
+// ---------------------------------------------------------------------------
+
+/// The edge tier's hard constraint: with the tier disabled (explicitly or by
+/// default) every engine stays bit-for-bit on the frozen oracle, and the new
+/// edge telemetry columns are identically zero.
+#[test]
+fn edge_disabled_stays_bitwise_on_oracle() {
+    for mech in [Mechanism::LgcStatic, Mechanism::FedAvg] {
+        let reference = reference_log(base_cfg(mech, 10));
+        let mut cfg = base_cfg(mech, 10);
+        cfg.edge = Some(false);
+        let mut trainer = NativeLrTrainer::new(&cfg);
+        let mut exp = Experiment::new(cfg, &trainer);
+        assert!(exp.edge.is_none(), "edge=false must not build the tier");
+        let engine = exp.run(&mut trainer).unwrap();
+        assert_logs_bitwise_equal(&reference, &engine, &format!("edge-off {}", mech.name()));
+        for r in &engine.records {
+            assert_eq!(r.backhaul_bytes, 0);
+            assert_eq!(r.backhaul_p95_s, 0.0);
+            assert_eq!(r.migrated_handoff, 0);
+            assert_eq!(r.edge_rounds_bound, 0);
+        }
+        assert_eq!(exp.sim_stats.migrated_handoff, 0);
+    }
+}
+
+fn stadium_edge_cfg() -> ExperimentConfig {
+    let mut cfg = base_cfg(Mechanism::LgcStatic, 60);
+    cfg.devices = 6;
+    cfg.scenario = Some(ScenarioRegistry::resolve("stadium-flash-crowd").unwrap());
+    cfg.sync_mode = Some(SyncMode::SemiAsync { buffer_k: 2 });
+    // A starved 3G backhaul (x0.02) makes each ~31 KB partial-aggregate
+    // frame cost seconds, so rounds go backhaul-bound; flush_k above the
+    // fleet size keeps contributions held at the edge until the fleet
+    // parks, so handoffs catch them mid-hold and must migrate them.
+    cfg.edge_settings = Some(EdgeSettings {
+        backhaul: ChannelType::G3,
+        bw_scale: 0.02,
+        flush_k: 8,
+        ..EdgeSettings::default()
+    });
+    cfg
+}
+
+/// The acceptance scenario for the edge tier: `stadium-flash-crowd` under
+/// semi-async with a throttled 3G backhaul. The run must pin deterministic
+/// nonzero `migrated_handoff` (held contributions follow their device
+/// through handoff) and at least one backhaul-bound round (the partial
+/// aggregate's p95 backhaul wall exceeds the access-tier finish p95).
+#[test]
+fn stadium_flash_crowd_edge_migrates_and_goes_backhaul_bound() {
+    let cfg = stadium_edge_cfg();
+    let mut trainer = NativeLrTrainer::new(&cfg);
+    let mut exp = Experiment::new(cfg, &trainer);
+    assert!(exp.edge.is_some(), "[edge] settings alone must enable the tier");
+    let log = exp.run(&mut trainer).unwrap();
+    assert_eq!(log.records.len(), 60, "run completes under the edge tier");
+    let migrated: u64 = log.records.iter().map(|r| r.migrated_handoff).sum();
+    assert!(migrated > 0, "flash-crowd handoffs must migrate held contributions");
+    assert_eq!(exp.sim_stats.migrated_handoff, migrated);
+    let backhaul: u64 = log.records.iter().map(|r| r.backhaul_bytes).sum();
+    assert!(backhaul > 0, "partial aggregates must cross the backhaul");
+    let bound: u64 = log.records.iter().map(|r| r.edge_rounds_bound).sum();
+    assert!(
+        bound >= 1,
+        "starved backhaul must bound at least one round \
+         (backhaul={backhaul} B, migrated={migrated})"
+    );
+    assert!(log.records.iter().any(|r| r.backhaul_p95_s > 0.0));
+    // Restitution-free migration keeps the mass in play: training works.
+    assert!(log.final_acc() > 0.4, "acc={}", log.final_acc());
+    // Determinism: the same seed replays the same two-tier world.
+    let cfg2 = stadium_edge_cfg();
+    let mut trainer2 = NativeLrTrainer::new(&cfg2);
+    let mut exp2 = Experiment::new(cfg2, &trainer2);
+    let log2 = exp2.run(&mut trainer2).unwrap();
+    assert_logs_bitwise_equal(&log, &log2, "edge stadium determinism");
+    for (x, y) in log.records.iter().zip(&log2.records) {
+        assert_eq!(x.migrated_handoff, y.migrated_handoff, "round {}", x.round);
+        assert_eq!(x.backhaul_bytes, y.backhaul_bytes, "round {}", x.round);
+        assert_eq!(
+            x.backhaul_p95_s.to_bits(),
+            y.backhaul_p95_s.to_bits(),
+            "round {}",
+            x.round
+        );
+    }
+}
+
+/// Under barrier sync the edge tier only re-times the round — the cloud
+/// aggregates the exact same updates in the same order — so a rural-3g run
+/// over a throttled backhaul must finish strictly later in simulated time
+/// than the flat topology while landing on bitwise-identical accuracy.
+#[test]
+fn rural_3g_throttled_backhaul_is_slower_at_equal_accuracy() {
+    let flat = {
+        let mut cfg = base_cfg(Mechanism::LgcStatic, 14);
+        cfg.scenario = Some(ScenarioRegistry::resolve("rural-3g").unwrap());
+        let mut trainer = NativeLrTrainer::new(&cfg);
+        let mut exp = Experiment::new(cfg, &trainer);
+        exp.run(&mut trainer).unwrap()
+    };
+    let edge = {
+        let mut cfg = base_cfg(Mechanism::LgcStatic, 14);
+        cfg.scenario = Some(ScenarioRegistry::resolve("rural-3g").unwrap());
+        cfg.edge_settings = Some(EdgeSettings {
+            backhaul: ChannelType::G3,
+            bw_scale: 0.05,
+            flush_k: 2,
+            ..EdgeSettings::default()
+        });
+        let mut trainer = NativeLrTrainer::new(&cfg);
+        let mut exp = Experiment::new(cfg, &trainer);
+        exp.run(&mut trainer).unwrap()
+    };
+    assert_eq!(flat.records.len(), edge.records.len());
+    for (f, e) in flat.records.iter().zip(&edge.records) {
+        // Same model trajectory, bit for bit...
+        assert_eq!(f.train_loss.to_bits(), e.train_loss.to_bits(), "round {}", f.round);
+        if !(f.eval_acc.is_nan() && e.eval_acc.is_nan()) {
+            assert_eq!(f.eval_acc.to_bits(), e.eval_acc.to_bits(), "round {}", f.round);
+        }
+        assert_eq!(f.bytes_up, e.bytes_up, "round {}", f.round);
+        assert!(e.backhaul_bytes > 0, "round {}", f.round);
+    }
+    assert_eq!(flat.final_acc().to_bits(), edge.final_acc().to_bits());
+    // ...paid for with strictly more simulated wall time.
+    let t_flat = flat.records.last().unwrap().total_time_s;
+    let t_edge = edge.records.last().unwrap().total_time_s;
+    assert!(
+        t_edge > t_flat,
+        "throttled backhaul must slow the run: edge {t_edge} vs flat {t_flat}"
+    );
+}
+
+/// The `lgc-edge` registry preset is runnable end to end: it enables the
+/// tier and semi-async buffering by default, and the run label carries the
+/// `+edge` seam.
+#[test]
+fn lgc_edge_preset_runs_end_to_end() {
+    let mut cfg = base_cfg(Mechanism::parse("lgc-edge").unwrap(), 12);
+    cfg.scenario = Some(trivial_scenario());
+    let mut trainer = NativeLrTrainer::new(&cfg);
+    let mut exp = Experiment::new(cfg, &trainer);
+    assert!(exp.edge.is_some());
+    assert!(exp.run_label().contains("+edge"), "label {}", exp.run_label());
+    let log = exp.run(&mut trainer).unwrap();
+    assert_eq!(log.records.len(), 12);
+    assert!(log.records.iter().map(|r| r.backhaul_bytes).sum::<u64>() > 0);
+    assert!(log.final_acc() > 0.4, "acc={}", log.final_acc());
 }
