@@ -12,7 +12,7 @@
 
 use std::time::Instant;
 
-use lgc::bench::Table;
+use lgc::bench::{JsonSink, Table};
 use lgc::config::{ExperimentConfig, Mechanism, Workload};
 use lgc::coordinator::{ExperimentBuilder, NativeLrTrainer};
 use lgc::sim::SyncMode;
@@ -79,14 +79,26 @@ fn main() {
         "sim s",
         "final acc",
     ]);
-    let cases: Vec<(&str, SyncMode, usize)> = vec![
-        ("barrier", SyncMode::Barrier, 1),
-        ("barrier", SyncMode::Barrier, auto),
-        ("semi-async k=4", SyncMode::SemiAsync { buffer_k: 4 }, 1),
-        ("fully-async d=.7", SyncMode::FullyAsync { staleness_decay: 0.7 }, 1),
+    let mut json = JsonSink::from_args("async_throughput");
+    // Slugs keep the auto case machine-independent ("autothreads", not the
+    // resolved core count) so baselines diff across hosts.
+    let cases: Vec<(&str, &str, SyncMode, usize)> = vec![
+        ("barrier", "barrier/t1", SyncMode::Barrier, 1),
+        ("barrier", "barrier/autothreads", SyncMode::Barrier, auto),
+        ("semi-async k=4", "semi-async-k4", SyncMode::SemiAsync { buffer_k: 4 }, 1),
+        (
+            "fully-async d=.7",
+            "fully-async-d07",
+            SyncMode::FullyAsync { staleness_decay: 0.7 },
+            1,
+        ),
     ];
-    for (name, mode, threads) in cases {
+    for (name, slug, mode, threads) in cases {
         let r = run_one(mode, threads, devices, rounds);
+        json.push(&format!("{slug}/events"), r.events as f64, "count");
+        json.push(&format!("{slug}/sim_s"), r.sim_s, "sim_s");
+        json.push(&format!("{slug}/events_per_s"), r.events as f64 / r.wall_s.max(1e-9), "events/s");
+        json.push(&format!("{slug}/rounds_per_s"), r.records as f64 / r.wall_s.max(1e-9), "rounds/s");
         table.row(&[
             name.to_string(),
             threads.to_string(),
@@ -99,6 +111,7 @@ fn main() {
         ]);
     }
     table.print();
+    json.finish();
     println!(
         "\nbarrier x{auto} threads parallelizes device local compute (bit-identical \
          results); async modes trade per-event work for straggler immunity — compare \

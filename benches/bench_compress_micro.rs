@@ -6,7 +6,7 @@
 
 use std::path::Path;
 
-use lgc::bench::{bench_auto, Table};
+use lgc::bench::{bench_auto, JsonSink, Table};
 use lgc::compression::{
     lgc_compress, lgc_compress_radix, wire, CompressScratch, Compressor, LayerBudget, LgcTopAB,
 };
@@ -22,6 +22,7 @@ fn sort_based_topk(u: &[f32], k: usize) -> Vec<(u32, f32)> {
 
 fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(7);
+    let mut json = JsonSink::from_args("compress_micro");
     println!("== compression hot path: native lgc_compress (ks = 1/4/15% of D) ==\n");
     let mut table = Table::new(&[
         "D",
@@ -45,6 +46,8 @@ fn main() -> anyhow::Result<()> {
         let rs = bench_auto(&format!("sort-topk D={d}"), 120.0, || {
             std::hint::black_box(sort_based_topk(&u, k_total));
         });
+        json.push(&format!("topk/{d}/gib_per_s"), r.gib_per_s(4 * d), "gib/s");
+        json.push(&format!("topk/{d}/radix_gib_per_s"), rp.gib_per_s(4 * d), "gib/s");
         table.row(&[
             d.to_string(),
             format!("{:.1}", r.mean_us()),
@@ -77,6 +80,7 @@ fn main() -> anyhow::Result<()> {
         });
         let overhead = (rb.mean_ns / rd.mean_ns - 1.0) * 100.0;
         rb.report(&format!("dyn-dispatch overhead {overhead:+.2}% (budget <= 2%)"));
+        json.push("dyn_dispatch/gib_per_s", rb.gib_per_s(4 * d), "gib/s");
     }
 
     println!("\n== wire encode/decode ==");
@@ -87,11 +91,14 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(wire::encode(d, &upd.layers[0]));
     });
     r.report(&format!("{:.2} GB/s", r.gib_per_s(upd.layers[0].wire_bytes() as usize)));
+    json.push("wire/encode_gib_per_s", r.gib_per_s(upd.layers[0].wire_bytes() as usize), "gib/s");
     let chunk = wire::encode(d, &upd.layers[0]);
     let r = bench_auto("wire decode (13k entries)", 80.0, || {
         std::hint::black_box(wire::decode(&chunk).unwrap());
     });
     r.report(&format!("{:.2} GB/s", r.gib_per_s(chunk.bytes.len())));
+    json.push("wire/decode_gib_per_s", r.gib_per_s(chunk.bytes.len()), "gib/s");
+    json.finish();
 
     // A2: artifact path vs native path at the artifact's D.
     if Path::new("artifacts/manifest.toml").exists() {

@@ -1,18 +1,19 @@
-//! Population-scale bench: rounds/s and peak resident memory vs population
-//! size {1k, 10k, 100k} at a fixed cohort of 64, barrier vs semi-async.
+//! Population-scale bench: rounds/s, events/s and peak resident memory vs
+//! population size {1k, 10k, 100k, 1M} at a fixed cohort of 64, barrier vs
+//! semi-async.
 //!
 //! ```bash
 //! cargo bench --bench bench_population_scale
 //! ```
 //!
 //! The claim under test: resident state is O(model + cohort), not
-//! O(population × model) — only `DeviceSpec` records (plus compact
-//! error-feedback residuals of previously sampled clients) scale with the
-//! population, so "peak RSS" should grow far slower than 2 dense model
-//! replicas per client would (7850-param LR: ~63 KB/client materialized vs
-//! a few hundred bytes as a spec). Cases run smallest population first, so
-//! the VmHWM column (a process-lifetime high-water mark) is attributable to
-//! the first case that pushes it up.
+//! O(population × model) — only the struct-of-arrays population columns
+//! (plus compact error-feedback residuals of previously sampled clients)
+//! scale with the population, so "peak RSS" should grow far slower than 2
+//! dense model replicas per client would (7850-param LR: ~63 KB/client
+//! materialized vs ~600 B as SoA columns + channel state). Cases run
+//! smallest population first, so the VmHWM column (a process-lifetime
+//! high-water mark) is attributable to the first case that pushes it up.
 
 use std::time::Instant;
 
@@ -55,6 +56,7 @@ fn cfg(population: usize, mode: SyncMode) -> ExperimentConfig {
 struct Case {
     wall_s: f64,
     records: usize,
+    events: u64,
     peak_materialized: usize,
     residual_kb: f64,
 }
@@ -72,12 +74,21 @@ fn run_case(population: usize, mode: SyncMode) -> Case {
     Case {
         wall_s: t0.elapsed().as_secs_f64(),
         records: log.records.len(),
+        events: exp.sim_stats.events,
         peak_materialized: pop.peak_materialized(),
         residual_kb: pop.residual_bytes() as f64 / 1024.0,
     }
 }
 
 fn main() {
+    // `--quick` (CI smoke) stops at 100k; the full sweep ends on the
+    // million-client stadium-scale case.
+    let quick = std::env::args().any(|a| a == "--quick");
+    let populations: &[usize] = if quick {
+        &[1_000, 10_000, 100_000]
+    } else {
+        &[1_000, 10_000, 100_000, 1_000_000]
+    };
     let mut json = JsonSink::from_args("population_scale");
     println!("== population scale (LgcStatic / LR, cohort 64, 3 rounds) ==\n");
     let mut table = Table::new(&[
@@ -85,11 +96,12 @@ fn main() {
         "population",
         "wall ms",
         "rounds/s",
+        "events/s",
         "peak materialized",
         "residuals KB",
         "peak RSS MB",
     ]);
-    for &population in &[1_000usize, 10_000, 100_000] {
+    for &population in populations {
         for (name, mode) in [
             ("barrier", SyncMode::Barrier),
             ("semi-async k=16", SyncMode::SemiAsync { buffer_k: 16 }),
@@ -97,15 +109,21 @@ fn main() {
             let r = run_case(population, mode);
             assert_eq!(r.records, 3);
             let slug = if matches!(mode, SyncMode::Barrier) { "barrier" } else { "semi-async" };
-            json.push(&format!("pop/{population}/{slug}/rounds_per_s"),
-                r.records as f64 / r.wall_s.max(1e-9), "rounds/s");
+            let rounds_per_s = r.records as f64 / r.wall_s.max(1e-9);
+            let events_per_s = r.events as f64 / r.wall_s.max(1e-9);
+            json.push(&format!("pop/{population}/{slug}/rounds_per_s"), rounds_per_s, "rounds/s");
+            json.push(&format!("pop/{population}/{slug}/events_per_s"), events_per_s, "events/s");
             json.push(&format!("pop/{population}/{slug}/peak_materialized"),
                 r.peak_materialized as f64, "count");
+            if let Some(mb) = peak_rss_mb() {
+                json.push(&format!("pop/{population}/{slug}/peak_rss_mb"), mb, "mb");
+            }
             table.row(&[
                 name.to_string(),
                 population.to_string(),
                 format!("{:.1}", r.wall_s * 1e3),
-                format!("{:.2}", r.records as f64 / r.wall_s.max(1e-9)),
+                format!("{rounds_per_s:.2}"),
+                format!("{events_per_s:.0}"),
                 r.peak_materialized.to_string(),
                 format!("{:.1}", r.residual_kb),
                 peak_rss_mb().map_or("n/a".to_string(), |m| format!("{m:.0}")),
@@ -116,7 +134,7 @@ fn main() {
     json.finish();
     println!(
         "\npeak materialized stays at the cohort size regardless of population; the\n\
-         population cost is the spec store (+ residuals of sampled clients), visible\n\
-         as the slow RSS growth from 1k to 100k clients."
+         population cost is the SoA column store (+ residuals of sampled clients),\n\
+         visible as the slow RSS growth from 1k clients up to the 1M case."
     );
 }

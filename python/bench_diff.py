@@ -12,10 +12,13 @@ Tolerance policy by unit:
 * ``count`` / ``bytes`` — deterministic simulation counters: must match the
   baseline exactly.
 * ``sim_s`` — deterministic simulated time: 1e-6 relative (float printing).
-* anything else (``events/s``, ``rounds/s``, wall times) — host-dependent
-  throughput: banded at +-RELATIVE_BAND (default 0.60; CI runners are
-  noisy), failing only on *regressions* below the band. Speedups never
-  fail.
+* ``mb`` — peak memory (RSS high-water): banded like throughput but in the
+  *opposite* direction — only an increase above the band fails (an
+  O(population) leak shows up as a blowup here; shrinking is always fine).
+* anything else (``events/s``, ``rounds/s``, ``gib/s``, wall times) —
+  host-dependent throughput: banded at +-RELATIVE_BAND (default 0.60; CI
+  runners are noisy), failing only on *regressions* below the band.
+  Speedups never fail.
 
 Bless convention (bootstrap): a baseline entry whose value is ``null`` (or
 a record with no baseline entry at all) is blessed from the current run
@@ -37,6 +40,8 @@ import sys
 RELATIVE_BAND = 0.60
 EXACT_UNITS = {"count", "bytes"}
 SIM_UNITS = {"sim_s"}
+# Peak-memory units: regressions are *increases*, not drops.
+MEM_UNITS = {"mb"}
 
 
 def key(rec):
@@ -74,6 +79,14 @@ def compare(baseline, current, band):
         elif unit in SIM_UNITS:
             if abs(got - want) > 1e-6 * max(1.0, abs(want)):
                 failures.append(f"{name}: {got} != baseline {want} (sim-exact)")
+        elif unit in MEM_UNITS:
+            # Memory: only growth above the band is a regression.
+            ceiling = want * (1.0 + band)
+            if got > ceiling:
+                failures.append(
+                    f"{name}: {got:.2f} > {ceiling:.2f} "
+                    f"(baseline {want:.2f}, band +{band:.0%})"
+                )
         else:
             # Throughput-style: only a drop below the band is a regression.
             floor = want * (1.0 - band)

@@ -27,6 +27,32 @@ use super::quantize::{wire_bits, QsgdQuantizer};
 use super::rand_k::RandK;
 use super::{lgc_compress, lgc_compress_radix, CompressScratch, Layer, LgcUpdate};
 use crate::channels::AllocationPlan;
+use crate::util::Rng;
+
+/// Compact cross-round compressor state, exported when a population client
+/// is demobilized so the store keeps O(1) bytes per client instead of a
+/// resident `Box<dyn Compressor>` (the error memory travels separately, as
+/// the population's [`Residual`](crate::population::Residual)).
+#[derive(Clone, Debug, Default)]
+pub enum CompressorSeed {
+    /// No cross-round state beyond the (separately drained) error memory.
+    #[default]
+    Stateless,
+    /// A private RNG stream: the current position plus the episode-reset
+    /// base, so both the next draw and a future `reset` replay exactly.
+    Stream { cur: Rng, base: Rng },
+}
+
+impl CompressorSeed {
+    /// Episode reset without a live compressor box: rewind the stream to
+    /// its construction state (the seed-side mirror of
+    /// [`Compressor::reset`]).
+    pub fn reset(&mut self) {
+        if let CompressorSeed::Stream { cur, base } = self {
+            *cur = base.clone();
+        }
+    }
+}
 
 /// Per-round coordinate budget, one entry per layer (Eq. 2's `K_c`).
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -152,6 +178,33 @@ pub trait Compressor: Send {
     /// costs O(1) in the model dimension. Default: no-op (stateless
     /// compressors hold nothing).
     fn trim_working_memory(&mut self) {}
+
+    /// Export the compact cross-round state for seed-based rehydration.
+    /// The population store keeps one [`CompressorSeed`] per client and a
+    /// small shared pool of boxes (≤ cohort per distinct
+    /// [`Compressor::name`]) instead of a resident box per client.
+    ///
+    /// Contract for `Some`: two instances reporting the same `name()` must
+    /// be configuration-identical up to the seed — after
+    /// [`Compressor::restore_seed`] their future output is bitwise equal.
+    /// The error memory is NOT part of the seed (it is drained separately
+    /// into the population's residual store).
+    ///
+    /// Return `None` to opt out: the store then keeps this client's box
+    /// resident, exactly like the pre-seed behavior — for working state
+    /// that cannot be captured compactly (e.g. [`RandK`]'s reused
+    /// partial-Fisher-Yates permutation, whose content is history-
+    /// dependent across rounds).
+    fn export_seed(&self) -> Option<CompressorSeed> {
+        Some(CompressorSeed::Stateless)
+    }
+
+    /// Restore state exported by [`Compressor::export_seed`] onto a
+    /// configuration-identical instance (the rehydration half of the
+    /// pooling contract). Default: no-op (stateless).
+    fn restore_seed(&mut self, seed: &CompressorSeed) {
+        let _ = seed;
+    }
 }
 
 /// Banded `Top_{α,β}` via the partition hot path — the paper's production
@@ -256,6 +309,15 @@ impl Compressor for RandK {
     fn reset(&mut self) {
         self.reset_stream();
     }
+
+    /// RandK's partial-Fisher-Yates permutation is reused (not rebuilt)
+    /// between rounds, so its content is part of the per-client draw
+    /// history — no compact seed can capture it without changing the
+    /// blessed golden traces. Opt out: the population store keeps RandK
+    /// boxes resident per client.
+    fn export_seed(&self) -> Option<CompressorSeed> {
+        None
+    }
 }
 
 /// QSGD stochastic quantization adapted to the layered-update interface:
@@ -322,6 +384,17 @@ impl Compressor for Qsgd {
     /// [`RandK`]'s reset for the rationale).
     fn reset(&mut self) {
         self.quantizer.reset_stream();
+    }
+
+    fn export_seed(&self) -> Option<CompressorSeed> {
+        let (cur, base) = self.quantizer.export_streams();
+        Some(CompressorSeed::Stream { cur, base })
+    }
+
+    fn restore_seed(&mut self, seed: &CompressorSeed) {
+        if let CompressorSeed::Stream { cur, base } = seed {
+            self.quantizer.restore_streams(cur.clone(), base.clone());
+        }
     }
 }
 
@@ -409,6 +482,16 @@ impl<C: Compressor> Compressor for ErrorCompensated<C> {
     fn trim_working_memory(&mut self) {
         self.u_buf = Vec::new();
         self.inner.trim_working_memory();
+    }
+
+    /// The wrapper adds no seed state of its own: the error memory travels
+    /// as the population residual, `u_buf` is per-compress scratch.
+    fn export_seed(&self) -> Option<CompressorSeed> {
+        self.inner.export_seed()
+    }
+
+    fn restore_seed(&mut self, seed: &CompressorSeed) {
+        self.inner.restore_seed(seed);
     }
 }
 

@@ -17,7 +17,7 @@ pub mod rand_k;
 pub mod wire;
 
 pub use compressor::{
-    Compressor, DenseNoop, ErrorCompensated, LayerBudget, LgcRadix, LgcTopAB, Qsgd,
+    Compressor, CompressorSeed, DenseNoop, ErrorCompensated, LayerBudget, LgcRadix, LgcTopAB, Qsgd,
 };
 pub use error_feedback::ErrorFeedback;
 pub use rand_k::RandK;

@@ -61,6 +61,18 @@ impl QsgdQuantizer {
         self.rng = self.rng0.clone();
     }
 
+    /// Snapshot both RNG streams `(current, base)` so a demobilized client's
+    /// quantizer can be rebuilt from a compact seed (see `CompressorSeed`).
+    pub(crate) fn export_streams(&self) -> (Rng, Rng) {
+        (self.rng.clone(), self.rng0.clone())
+    }
+
+    /// Restore both RNG streams from a seed snapshot.
+    pub(crate) fn restore_streams(&mut self, cur: Rng, base: Rng) {
+        self.rng = cur;
+        self.rng0 = base;
+    }
+
     pub fn quantize(&mut self, u: &[f32]) -> QuantizedVec {
         let norm = (crate::util::norm2(u) as f32).sqrt();
         let s = self.levels as f32;

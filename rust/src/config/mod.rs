@@ -173,11 +173,18 @@ pub struct ExperimentConfig {
     /// sequential, 0 = one per available core, n = n. Thread count never
     /// changes results (per-device forked RNG streams).
     pub compute_threads: usize,
+    /// Event-queue shards and population-sweep worker threads: 0 = one per
+    /// available core (auto), n = n. Device events hash to `client %
+    /// (shards − 1)` with control-plane events on a dedicated shard; the
+    /// merge key `(time, shard, seq)` keeps pop order identical to a single
+    /// heap, so the shard count never changes results.
+    pub shards: usize,
     /// Virtual period of channel-fading transitions in the async sync modes
     /// (barrier mode keeps the one-transition-per-round semantics).
     pub fading_tick_s: f64,
-    /// Total client population (population mode). Clients are cheap
-    /// [`crate::population::DeviceSpec`] records mapped onto the trainer's
+    /// Total client population (population mode). Demobilized clients are
+    /// cheap per-client columns of the struct-of-arrays
+    /// [`crate::population::Population`] store, mapped onto the trainer's
     /// `devices` data shards (`id % devices`); a full `Device` is
     /// materialized only while a client sits in the round's cohort. `None`
     /// (default) keeps the legacy fully-materialized path with `devices`
@@ -306,6 +313,7 @@ impl Default for ExperimentConfig {
             buffer_k: None,
             staleness_decay: None,
             compute_threads: 1,
+            shards: 0,
             fading_tick_s: 0.5,
             population: None,
             cohort: None,
@@ -422,6 +430,10 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_i64("", "compute_threads") {
             cfg.compute_threads = usize::try_from(v)
                 .map_err(|_| format!("compute_threads must be >= 0 (0 = all cores), got {v}"))?;
+        }
+        if let Some(v) = doc.get_i64("", "shards") {
+            cfg.shards = usize::try_from(v)
+                .map_err(|_| format!("shards must be >= 0 (0 = auto), got {v}"))?;
         }
         if let Some(v) = doc.get_f64("", "fading_tick_s") {
             cfg.fading_tick_s = v;
@@ -717,11 +729,14 @@ mod tests {
 
     #[test]
     fn sync_mode_keys_parse() {
-        let doc = Document::parse("sync_mode = \"semi-async\"\nbuffer_k = 3\ncompute_threads = 4\n")
-            .unwrap();
+        let doc = Document::parse(
+            "sync_mode = \"semi-async\"\nbuffer_k = 3\ncompute_threads = 4\nshards = 8\n",
+        )
+        .unwrap();
         let cfg = ExperimentConfig::from_document(&doc).unwrap();
         assert_eq!(cfg.sync_mode, Some(SyncMode::SemiAsync { buffer_k: 3 }));
         assert_eq!(cfg.compute_threads, 4);
+        assert_eq!(cfg.shards, 8);
         let doc = Document::parse("sync_mode = \"fully-async\"\nstaleness_decay = 0.7\n").unwrap();
         let cfg = ExperimentConfig::from_document(&doc).unwrap();
         assert_eq!(cfg.sync_mode, Some(SyncMode::FullyAsync { staleness_decay: 0.7 }));
@@ -740,6 +755,7 @@ mod tests {
             "staleness_decay = 0.0",
             "fading_tick_s = 0.0",
             "compute_threads = -1",
+            "shards = -2",
         ] {
             let doc = Document::parse(bad).unwrap();
             assert!(ExperimentConfig::from_document(&doc).is_err(), "{bad}");

@@ -36,7 +36,7 @@ use crate::config::ExperimentConfig;
 use crate::downlink::{Downlink, DownlinkCompression};
 use crate::drl::DeviceAgent;
 use crate::edge::Edge;
-use crate::population::{self, ClientSampler, DeviceSpec, Population, SamplerKind};
+use crate::population::{self, ClientSampler, Population, SamplerKind, SpecSeed};
 use crate::resources::{ComputeCostModel, ResourceMeter};
 use crate::scenario::{Scenario, ScenarioSpec};
 use crate::sim::{SimStats, SyncMode};
@@ -229,25 +229,6 @@ impl<'a> ExperimentBuilder<'a> {
                 ));
             }
             let cohort_n = cfg.cohort.unwrap_or(pop_n);
-            // Specs are built with the exact same per-id construction calls
-            // as the legacy device loop below, so FullParticipation over a
-            // population of size `devices` replays the reference loop bit
-            // for bit (tests/population.rs).
-            let specs: Vec<DeviceSpec> = (0..pop_n)
-                .map(|id| {
-                    let shard = id % cfg.devices;
-                    DeviceSpec::new(
-                        id,
-                        shard,
-                        trainer.device_samples(shard),
-                        DeviceChannels::new(&cfg.channel_types, &rng, id),
-                        ResourceMeter::new(cfg.energy_budget, cfg.money_budget),
-                        compute,
-                        compressor_f(&ctx, id),
-                        rng.fork(0xC4EA_0000 ^ (id as u64).wrapping_mul(0x9E37_79B9)),
-                    )
-                })
-                .collect();
             let kind = cfg.sampler.unwrap_or(if cohort_n < pop_n {
                 SamplerKind::UniformK
             } else {
@@ -257,7 +238,32 @@ impl<'a> ExperimentBuilder<'a> {
                 Some(f) => f(&ctx),
                 None => population::build_sampler(kind, cohort_n, rng.fork(0x5A3D_17E5)),
             };
-            let pop = Population::new(specs, cohort_n, cfg.churn_down, cfg.churn_up);
+            // Seeds are built with the exact same per-id construction calls
+            // (and per-id RNG draw order: channels → compressor → churn
+            // fork) as the legacy device loop below, so FullParticipation
+            // over a population of size `devices` replays the reference
+            // loop bit for bit (tests/population.rs). The iterator is lazy:
+            // the store admits seeds one at a time, pooling or dropping
+            // each compressor box immediately, so build-time memory stays
+            // O(model + cohort) even at a million clients.
+            let pop = Population::new(
+                (0..pop_n).map(|id| {
+                    let shard = id % cfg.devices;
+                    SpecSeed::new(
+                        id,
+                        DeviceChannels::new(&cfg.channel_types, &rng, id),
+                        compressor_f(&ctx, id),
+                        rng.fork(0xC4EA_0000 ^ (id as u64).wrapping_mul(0x9E37_79B9)),
+                    )
+                    .shard(shard)
+                    .samples(trainer.device_samples(shard))
+                    .meter(ResourceMeter::new(cfg.energy_budget, cfg.money_budget))
+                    .compute(compute)
+                }),
+                cohort_n,
+                cfg.churn_down,
+                cfg.churn_up,
+            );
             (Vec::new(), Some(pop), Some(sampler))
         } else {
             let devices: Vec<Device> = (0..cfg.devices)

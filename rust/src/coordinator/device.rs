@@ -80,6 +80,11 @@ pub struct DeviceParts {
     pub prev_loss: f64,
     pub last_delta: f64,
     pub sync_state: SyncState,
+    /// Compression workspace, returned so the population store can recycle
+    /// it into the next materialization (zero-alloc steady state).
+    pub scratch: CompressScratch,
+    /// Net-progress staging buffer, recycled the same way.
+    pub progress_buf: Vec<f32>,
 }
 
 /// Persistent device state across rounds.
@@ -131,6 +136,43 @@ impl Device {
         }
     }
 
+    /// [`Device::new`] with the two replicas provided separately — the
+    /// population store's entry point, which fills both from recycled
+    /// buffers instead of cloning one allocation into the other.
+    pub(crate) fn from_replicas(
+        id: usize,
+        params_hat: Vec<f32>,
+        params_sync: Vec<f32>,
+        compressor: Box<dyn Compressor>,
+        channels: DeviceChannels,
+        meter: ResourceMeter,
+        compute: ComputeCostModel,
+    ) -> Self {
+        debug_assert_eq!(params_hat.len(), params_sync.len());
+        Device {
+            id,
+            params_hat,
+            params_sync,
+            compressor,
+            channels,
+            meter,
+            compute,
+            prev_loss: f64::NAN,
+            last_delta: 0.0,
+            sync_state: SyncState::default(),
+            scratch: CompressScratch::default(),
+            progress_buf: Vec::new(),
+        }
+    }
+
+    /// Install a recycled compression workspace (population store pool) in
+    /// place of the empty defaults — capacity carries over, contents are
+    /// rebuilt from scratch on every compress call.
+    pub(crate) fn install_scratch(&mut self, scratch: CompressScratch, progress_buf: Vec<f32>) {
+        self.scratch = scratch;
+        self.progress_buf = progress_buf;
+    }
+
     /// The compressor's display name (for logs/tests).
     pub fn compressor_name(&self) -> String {
         self.compressor.name()
@@ -179,7 +221,7 @@ impl Device {
 
     /// [`Device::local_steps`] against an explicit trainer data shard —
     /// population mode maps many clients onto `cfg.devices` shards
-    /// ([`crate::population::DeviceSpec::shard`]); the legacy path is the
+    /// ([`crate::population::SpecSeed::shard`]); the legacy path is the
     /// identity mapping `shard == id`.
     pub fn local_steps_sharded(
         &mut self,
@@ -408,11 +450,12 @@ impl Device {
         }
     }
 
-    /// Decompose into the parts a [`crate::population::DeviceSpec`]
-    /// persists, dropping the compression scratch and progress buffers. The
-    /// dense `params_hat`/`params_sync` replicas ride along so the
-    /// population store can fold un-compressed pending progress into the
-    /// error memory before they are freed.
+    /// Decompose into the parts the population store persists
+    /// (see [`crate::population::Population::demobilize`]). The dense
+    /// `params_hat`/`params_sync` replicas ride along so the store can fold
+    /// un-compressed pending progress into the error memory before
+    /// recycling them; the compression scratch rides along to be pooled for
+    /// the next materialization.
     pub fn into_parts(self) -> DeviceParts {
         DeviceParts {
             id: self.id,
@@ -424,6 +467,8 @@ impl Device {
             prev_loss: self.prev_loss,
             last_delta: self.last_delta,
             sync_state: self.sync_state,
+            scratch: self.scratch,
+            progress_buf: self.progress_buf,
         }
     }
 

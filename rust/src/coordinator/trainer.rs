@@ -6,7 +6,7 @@
 //! A trainer serves `cfg.devices` data shards. The legacy path maps device
 //! `i` to shard `i`; population mode maps many clients onto the same shards
 //! (`client_id % cfg.devices`, see
-//! [`crate::population::DeviceSpec::shard`]), so the dataset does not grow
+//! [`crate::population::SpecSeed::shard`]), so the dataset does not grow
 //! with the client population — `local_step(shard, ...)` is indexed by
 //! shard, whichever client is training on it.
 //!

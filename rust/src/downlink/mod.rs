@@ -85,7 +85,7 @@ impl DownlinkCompression {
 /// Per-device downlink synchronization state — the sync-state machine of
 /// DESIGN.md §"Downlink & staleness". Lives on
 /// [`crate::coordinator::Device`] and persists across population
-/// demobilization via [`crate::population::DeviceSpec`].
+/// demobilization via [`crate::population::Population`].
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct SyncState {
     /// Server model version of the last *fully* confirmed downlink (every

@@ -61,6 +61,7 @@ fn print_usage() {
          money_budget=F, seed=N, use_runtime=true|false, csv=FILE,\n\
          sync_mode=barrier|semi-async|fully-async, buffer_k=N,\n\
          staleness_decay=F, compute_threads=N (0 = all cores),\n\
+         shards=N (event-queue shards, 0 = auto),\n\
          population=N, cohort=K, sampler=full|uniform-k|\
          weighted-by-samples|availability-markov,\n\
          churn_down=P, churn_up=P, streaming=true|false,\n\
@@ -108,6 +109,14 @@ pub fn make_trainer(cfg: &ExperimentConfig) -> Result<Box<dyn LocalTrainer>> {
     }
 }
 
+/// Process peak resident set (VmHWM) in MB, Linux only.
+fn peak_rss_mb() -> Option<f64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: f64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb / 1024.0)
+}
+
 fn report(log: &RunLog) {
     println!("\n== {} ==", log.name);
     println!("rounds run      : {}", log.records.len());
@@ -141,6 +150,11 @@ fn report(log: &RunLog) {
             println!("total download  : {:.2} MB", down as f64 / (1024.0 * 1024.0));
             println!("download energy : {down_j:.1} J");
         }
+    }
+    // Stable `key: value` line for scripts/CI to grep (stadium smoke pins
+    // an upper bound on it at 250k clients).
+    if let Some(mb) = peak_rss_mb() {
+        println!("peak_rss_mb: {mb:.0}");
     }
 }
 

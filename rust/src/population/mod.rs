@@ -1,5 +1,5 @@
-//! Population-scale client virtualization: lazy device cohorts over a store
-//! of cheap per-client records.
+//! Population-scale client virtualization: lazy device cohorts over a
+//! struct-of-arrays client store.
 //!
 //! The paper evaluates LGC on a handful of always-on edge devices, where
 //! every [`Device`](crate::coordinator::Device) permanently owns two dense
@@ -7,20 +7,40 @@
 //! model_dim) resident state. Real cross-device FL runs a small sampled
 //! cohort per round over a vast, churning population (cf. "To Talk or to
 //! Work", arXiv:2012.11804). This module makes population size a free
-//! parameter:
+//! parameter, and keeps the per-tick population sweeps cache-linear at
+//! millions of clients:
 //!
-//! - [`DeviceSpec`] is the *demobilized* form of a client: seeded channel
-//!   state (the fading chains keep advancing while unsampled), compute
-//!   profile, resource meter, data-shard id, the compressor box (cross-round
-//!   RNG streams) and a **compact persisted error-feedback [`Residual`]** —
-//!   everything O(1) in the model dimension except the residual, which is
-//!   empty until the client first participates and never larger than one
-//!   dense model.
-//! - [`Population`] holds one spec per client and **materializes** a full
-//!   `Device` (dense `params_hat`/`params_sync` replicas, working buffers)
-//!   only when that client is sampled into the round's cohort, demobilizing
-//!   it back to a spec afterwards. Resident memory is O(model + cohort), not
-//!   O(population × model); `peak_materialized` proves the bound.
+//! - [`SpecSeed`] is the builder for one client's demobilized state: seeded
+//!   channel bundle, compute profile, resource meter, data-shard id, the
+//!   freshly-constructed compressor and the private availability-churn RNG.
+//! - [`Population`] stores clients as **parallel arrays** (struct of
+//!   arrays): one column each for shard / samples / online / prev-loss /
+//!   sync state / meters / compute profiles / channel bundles / churn RNGs.
+//!   The per-tick fading and churn sweeps walk these columns linearly (and
+//!   in parallel across [`Population::set_sweep_threads`] workers when the
+//!   population is large — bit-identical for any worker count, because
+//!   every client's RNG streams are private).
+//! - Persisted error-feedback residuals live in a shared **arena** (one
+//!   sparse `(index, value)` pool plus one dense `f32` pool) with a
+//!   three-word `{kind, offset, len}` reference per client — no per-client
+//!   `Vec` allocations, and the arena compacts itself once dead spans
+//!   outweigh live ones. The standalone [`Residual`] enum remains the
+//!   documented compact encoding (and the unit-tested drain/restore
+//!   contract); the store is its arena-backed bulk form.
+//! - Compressor state is **rehydrated from a compact
+//!   [`CompressorSeed`]** instead of keeping a resident
+//!   `Box<dyn Compressor>` per client: demobilization exports the seed and
+//!   parks the box in a small per-`name()` pool (at most `cohort` boxes per
+//!   distinct compressor name), and materialization pops a pooled box and
+//!   restores the client's seed into it. A compressor whose output depends
+//!   on draw *history* (RandK's reused permutation) opts out via
+//!   `export_seed() == None` and stays resident per client — bit-for-bit
+//!   legacy behavior.
+//! - Materialization and demobilization recycle every O(model) buffer
+//!   through internal free lists (dense replicas, error-memory vectors,
+//!   compression scratch), so a steady-state cohort round performs no
+//!   population- or model-sized heap allocation (`tests/alloc_steady.rs`
+//!   asserts this with a counting allocator).
 //! - [`ClientSampler`] ([`sampler`]) is the pluggable cohort-selection seam:
 //!   [`FullParticipation`] reproduces the fully-materialized reference loop
 //!   bit for bit (proven against the frozen `Experiment::step_round` oracle
@@ -33,14 +53,14 @@
 //!   never destroyed.
 //!
 //! Demobilization contract: when a client leaves the cohort, its error
-//! memory is drained into the spec's [`Residual`] and its O(model) working
-//! buffers are released ([`crate::compression::Compressor::trim_working_memory`]).
-//! If the round ended *without* the compressor running (an all-silent plan),
-//! the pending local progress `w_sync − ŵ` is folded into the error memory
-//! first so nothing is lost; if the compressor *did* run, the progress
-//! already lives in `delivered layers + error memory` and folding would
-//! double-count — the `compressed_since_sync` flag keeps the two cases
-//! straight. See DESIGN.md §"Population, sampling & streaming aggregation".
+//! memory is drained into the arena-backed residual and its O(model)
+//! working buffers are recycled. If the round ended *without* the
+//! compressor running (an all-silent plan), the pending local progress
+//! `w_sync − ŵ` is folded into the error memory first so nothing is lost;
+//! if the compressor *did* run, the progress already lives in `delivered
+//! layers + error memory` and folding would double-count — the
+//! `compressed_since_sync` flag keeps the two cases straight. See
+//! DESIGN.md §"Sharded event engine & SoA population".
 
 pub mod sampler;
 
@@ -50,11 +70,16 @@ pub use sampler::{
 };
 
 use crate::channels::DeviceChannels;
-use crate::compression::{Compressor, ErrorFeedback};
+use crate::compression::{Compressor, CompressorSeed, ErrorFeedback};
 use crate::coordinator::device::{Device, DeviceParts};
 use crate::downlink::SyncState;
 use crate::resources::{ComputeCostModel, ResourceMeter};
 use crate::util::Rng;
+
+/// Below this population size the fading/churn sweeps stay sequential —
+/// thread-spawn overhead would dominate, and the parallel path is only a
+/// wall-clock optimization (per-client RNG streams make it bit-identical).
+const PAR_SWEEP_MIN: usize = 4096;
 
 /// Compact persisted error-feedback residual of a demobilized client.
 ///
@@ -64,6 +89,10 @@ use crate::util::Rng;
 /// persisted state never exceeds one dense model and is empty for clients
 /// that have not participated yet. Export/restore is bitwise lossless
 /// (signed zeros included).
+///
+/// [`Population`] stores residuals in a shared arena with the same
+/// encoding rule; this standalone enum is the single-client form (and the
+/// unit-tested reference for the drain/restore contract).
 #[derive(Clone, Debug, Default, PartialEq)]
 pub enum Residual {
     /// No dropped mass carried (client never compressed, or compressed
@@ -138,75 +167,116 @@ impl Residual {
     }
 }
 
-/// The demobilized form of one client: everything that must persist across
-/// sampling epochs, and nothing that scales with the model dimension except
-/// the [`Residual`].
-pub struct DeviceSpec {
-    pub id: usize,
-    /// Trainer data shard this client draws batches from (population mode
-    /// maps many clients onto `cfg.devices` shards, `id % cfg.devices`).
-    pub shard: usize,
-    /// Local sample count n_m of the shard (weighted sampling/aggregation).
-    pub samples: usize,
-    /// Multi-channel uplink state — `None` while the client is materialized
-    /// (the channels move into the live `Device` and back).
-    pub channels: Option<DeviceChannels>,
-    pub meter: ResourceMeter,
-    pub compute: ComputeCostModel,
-    /// The compressor box (cross-round RNG streams persist; the error
-    /// memory is drained into `residual` while demobilized) — `None` while
-    /// materialized.
-    pub compressor: Option<Box<dyn Compressor>>,
-    /// Compact persisted error-feedback residual.
-    pub residual: Residual,
-    /// Training-loss of the client's previous round (DRL δ state).
-    pub prev_loss: f64,
-    pub last_delta: f64,
-    /// Downlink synchronization state — persists across demobilization so
-    /// a resampled client remembers its last confirmed sync and staleness
-    /// gap (inert zeros when the downlink is disabled).
-    pub sync_state: SyncState,
-    /// Availability churn chain state (AvailabilityMarkov sampling).
-    pub online: bool,
-    /// Private RNG stream of the churn chain.
+/// Builder for one client's demobilized record — the construction-time form
+/// [`Population::new`] consumes (both population init and the internal
+/// demobilization path funnel through the same column writes, replacing the
+/// old eight-argument `DeviceSpec::new`).
+///
+/// Required state goes through [`SpecSeed::new`]; everything else defaults
+/// (legacy identity shard mapping, one sample, unbounded meter) and chains:
+///
+/// ```ignore
+/// SpecSeed::new(id, channels, compressor, churn_rng)
+///     .shard(id % devices)
+///     .samples(n_m)
+///     .meter(ResourceMeter::new(e, m))
+///     .compute(profile)
+/// ```
+pub struct SpecSeed {
+    id: usize,
+    shard: usize,
+    samples: usize,
+    channels: DeviceChannels,
+    meter: ResourceMeter,
+    compute: ComputeCostModel,
+    compressor: Box<dyn Compressor>,
     churn_rng: Rng,
 }
 
-impl DeviceSpec {
-    #[allow(clippy::too_many_arguments)]
+impl SpecSeed {
     pub fn new(
         id: usize,
-        shard: usize,
-        samples: usize,
         channels: DeviceChannels,
-        meter: ResourceMeter,
-        compute: ComputeCostModel,
         compressor: Box<dyn Compressor>,
         churn_rng: Rng,
     ) -> Self {
-        DeviceSpec {
+        SpecSeed {
             id,
-            shard,
-            samples,
-            channels: Some(channels),
-            meter,
-            compute,
-            compressor: Some(compressor),
-            residual: Residual::Empty,
-            prev_loss: f64::NAN,
-            last_delta: 0.0,
-            sync_state: SyncState::default(),
-            online: true,
+            shard: id,
+            samples: 1,
+            channels,
+            meter: ResourceMeter::new(f64::INFINITY, f64::INFINITY),
+            compute: ComputeCostModel::for_params(1),
+            compressor,
             churn_rng,
         }
     }
+
+    /// Trainer data shard this client draws batches from (population mode
+    /// maps many clients onto `cfg.devices` shards, `id % cfg.devices`;
+    /// default: the legacy identity mapping).
+    pub fn shard(mut self, shard: usize) -> Self {
+        self.shard = shard;
+        self
+    }
+
+    /// Local sample count n_m of the shard (weighted sampling/aggregation).
+    pub fn samples(mut self, samples: usize) -> Self {
+        self.samples = samples;
+        self
+    }
+
+    pub fn meter(mut self, meter: ResourceMeter) -> Self {
+        self.meter = meter;
+        self
+    }
+
+    pub fn compute(mut self, compute: ComputeCostModel) -> Self {
+        self.compute = compute;
+        self
+    }
 }
 
-/// The client store: one [`DeviceSpec`] per client, with materialization
-/// bookkeeping and the population-wide dynamics (channel fading for every
-/// client, availability churn).
+/// Residual encoding of one client's arena span.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ResKind {
+    Empty,
+    Sparse,
+    Dense,
+}
+
+/// Per-client reference into the shared residual arena: `len` entries of
+/// the `kind` pool starting at `off`. Three words instead of a `Vec` per
+/// client.
+#[derive(Clone, Copy, Debug)]
+struct ResRef {
+    kind: ResKind,
+    off: usize,
+    len: usize,
+}
+
+impl ResRef {
+    const EMPTY: ResRef = ResRef { kind: ResKind::Empty, off: 0, len: 0 };
+}
+
+/// Where a demobilized client's compressor state lives.
+enum CompressorSlot {
+    /// Rehydratable: the compact seed, plus the index of the per-name box
+    /// pool a pooled instance is popped from at materialization (assigned
+    /// once at admission; `restore_seed` makes any same-name box this
+    /// client's, bit for bit).
+    Seeded { pool: u16, seed: CompressorSeed },
+    /// Resident: this compressor's output depends on draw history beyond
+    /// any seed (`export_seed() == None`, e.g. RandK's reused permutation),
+    /// so the client keeps its own box. `None` while materialized.
+    Resident(Option<Box<dyn Compressor>>),
+}
+
+/// The client store: struct-of-arrays columns, one entry per client, with
+/// materialization bookkeeping, arena-backed residuals, pooled compressor
+/// boxes, recycled O(model) buffers, and the population-wide dynamics
+/// (channel fading for every client, availability churn).
 pub struct Population {
-    specs: Vec<DeviceSpec>,
     cohort: usize,
     /// Per-tick probability that an online client drops offline (0 = no
     /// churn; also gates the mid-upload dropout draw).
@@ -215,29 +285,152 @@ pub struct Population {
     churn_up: f64,
     materialized: usize,
     peak_materialized: usize,
+    /// Worker threads for the O(population) sweeps (1 = sequential; the
+    /// engine wires the resolved `shards` config here).
+    sweep_threads: usize,
+
+    // --- per-client columns (all `len()` long) ---
+    shard: Vec<u32>,
+    samples: Vec<u32>,
+    online: Vec<bool>,
+    prev_loss: Vec<f64>,
+    last_delta: Vec<f64>,
+    sync_states: Vec<SyncState>,
+    meters: Vec<ResourceMeter>,
+    computes: Vec<ComputeCostModel>,
+    /// Multi-channel uplink state — `None` while the client is materialized
+    /// (the channels move into the live `Device` and back).
+    channels: Vec<Option<DeviceChannels>>,
+    /// Private RNG stream of each client's churn chain.
+    churn_rng: Vec<Rng>,
+    res: Vec<ResRef>,
+    comp: Vec<CompressorSlot>,
+
+    // --- shared residual arena ---
+    sparse: Vec<(u32, f32)>,
+    dense: Vec<f32>,
+    dead_sparse: usize,
+    dead_dense: usize,
+    /// Ping-pong buffers for arena compaction (retained capacity, so the
+    /// amortized compaction allocates nothing once warmed up).
+    sparse_spare: Vec<(u32, f32)>,
+    dense_spare: Vec<f32>,
+
+    // --- recycled O(model) buffers and pooled compressor boxes ---
+    /// Per-`name()` pools of interchangeable seeded compressor boxes, at
+    /// most `cohort` each.
+    pools: Vec<(String, Vec<Box<dyn Compressor>>)>,
+    /// Recycled dense f32 buffers (model replicas, error-memory vectors).
+    f32_pool: Vec<Vec<f32>>,
+    /// Recycled per-device compression workspaces.
+    scratch_pool: Vec<(crate::compression::CompressScratch, Vec<f32>)>,
 }
 
 impl Population {
-    pub fn new(specs: Vec<DeviceSpec>, cohort: usize, churn_down: f64, churn_up: f64) -> Self {
-        assert!(!specs.is_empty(), "population needs at least one client");
-        assert!(
-            cohort >= 1 && cohort <= specs.len(),
-            "cohort {cohort} out of range for population {}",
-            specs.len()
-        );
+    /// Build the store from per-client seeds (ids must be dense and
+    /// ascending from 0). Seeds are consumed one at a time, so a lazy
+    /// iterator keeps peak build memory at one compressor box per pool
+    /// slot rather than one per client.
+    pub fn new(
+        seeds: impl IntoIterator<Item = SpecSeed>,
+        cohort: usize,
+        churn_down: f64,
+        churn_up: f64,
+    ) -> Self {
         assert!((0.0..=1.0).contains(&churn_down) && (0.0..=1.0).contains(&churn_up));
-        Population {
-            specs,
+        let mut p = Population {
             cohort,
             churn_down,
             churn_up,
             materialized: 0,
             peak_materialized: 0,
+            sweep_threads: 1,
+            shard: Vec::new(),
+            samples: Vec::new(),
+            online: Vec::new(),
+            prev_loss: Vec::new(),
+            last_delta: Vec::new(),
+            sync_states: Vec::new(),
+            meters: Vec::new(),
+            computes: Vec::new(),
+            channels: Vec::new(),
+            churn_rng: Vec::new(),
+            res: Vec::new(),
+            comp: Vec::new(),
+            sparse: Vec::new(),
+            dense: Vec::new(),
+            dead_sparse: 0,
+            dead_dense: 0,
+            sparse_spare: Vec::new(),
+            dense_spare: Vec::new(),
+            pools: Vec::new(),
+            f32_pool: Vec::new(),
+            scratch_pool: Vec::new(),
+        };
+        for seed in seeds {
+            p.admit(seed);
         }
+        assert!(!p.channels.is_empty(), "population needs at least one client");
+        assert!(
+            cohort >= 1 && cohort <= p.channels.len(),
+            "cohort {cohort} out of range for population {}",
+            p.channels.len()
+        );
+        p
+    }
+
+    /// Append one client's columns. The compressor is seeded into a
+    /// per-name pool when it supports rehydration, else kept resident.
+    fn admit(&mut self, seed: SpecSeed) {
+        let SpecSeed { id, shard, samples, channels, meter, compute, compressor, churn_rng } =
+            seed;
+        assert_eq!(
+            id,
+            self.channels.len(),
+            "SpecSeed ids must be dense and ascending (got {id})"
+        );
+        let slot = match compressor.export_seed() {
+            Some(s) => {
+                let name = compressor.name();
+                let pool = self.pool_index(&name);
+                let boxes = &mut self.pools[pool as usize].1;
+                if boxes.len() < self.cohort {
+                    boxes.push(compressor);
+                }
+                // else: drop the box — `restore_seed` rebuilds this
+                // client's state inside any pooled same-name instance.
+                CompressorSlot::Seeded { pool, seed: s }
+            }
+            None => CompressorSlot::Resident(Some(compressor)),
+        };
+        self.comp.push(slot);
+        self.shard.push(u32::try_from(shard).expect("shard exceeds u32"));
+        self.samples.push(u32::try_from(samples).expect("samples exceed u32"));
+        self.online.push(true);
+        self.prev_loss.push(f64::NAN);
+        self.last_delta.push(0.0);
+        self.sync_states.push(SyncState::default());
+        self.meters.push(meter);
+        self.computes.push(compute);
+        self.channels.push(Some(channels));
+        self.churn_rng.push(churn_rng);
+        self.res.push(ResRef::EMPTY);
+    }
+
+    fn pool_index(&mut self, name: &str) -> u16 {
+        if let Some(i) = self.pools.iter().position(|(n, _)| n == name) {
+            return i as u16;
+        }
+        self.pools.push((name.to_string(), Vec::new()));
+        u16::try_from(self.pools.len() - 1).expect("more than 65k distinct compressor names")
     }
 
     pub fn len(&self) -> usize {
-        self.specs.len()
+        self.channels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.channels.is_empty()
     }
 
     /// Target cohort size per round.
@@ -245,45 +438,96 @@ impl Population {
         self.cohort
     }
 
-    pub fn spec(&self, id: usize) -> &DeviceSpec {
-        &self.specs[id]
+    /// Worker threads for the O(population) fading/churn sweeps. Purely a
+    /// wall-clock knob: every client's RNG streams are private, so the
+    /// result is bit-identical for any count (and small populations stay
+    /// sequential regardless).
+    pub fn set_sweep_threads(&mut self, threads: usize) {
+        self.sweep_threads = threads.max(1);
     }
 
     pub fn shard(&self, id: usize) -> usize {
-        self.specs[id].shard
+        self.shard[id] as usize
     }
 
     pub fn samples(&self, id: usize) -> usize {
-        self.specs[id].samples
+        self.samples[id] as usize
     }
 
     pub fn online(&self, id: usize) -> bool {
-        self.specs[id].online
+        self.online[id]
     }
 
     pub fn within_budget(&self, id: usize) -> bool {
-        self.specs[id].meter.within_budget()
+        self.meters[id].within_budget()
     }
 
     pub fn is_materialized(&self, id: usize) -> bool {
-        self.specs[id].channels.is_none()
+        self.channels[id].is_none()
+    }
+
+    /// The client's persisted resource meter (a stale copy while the client
+    /// is materialized — the live meter travels with its `Device`).
+    pub fn meter(&self, id: usize) -> &ResourceMeter {
+        &self.meters[id]
+    }
+
+    /// The client's persisted downlink synchronization state.
+    pub fn sync_state(&self, id: usize) -> SyncState {
+        self.sync_states[id]
+    }
+
+    pub fn residual_is_empty(&self, id: usize) -> bool {
+        self.res[id].kind == ResKind::Empty
+    }
+
+    /// Nonzero coordinates of the client's persisted residual.
+    pub fn residual_nnz(&self, id: usize) -> usize {
+        let r = self.res[id];
+        match r.kind {
+            ResKind::Empty => 0,
+            ResKind::Sparse => r.len,
+            ResKind::Dense => self.dense[r.off..r.off + r.len]
+                .iter()
+                .filter(|x| x.to_bits() != 0)
+                .count(),
+        }
+    }
+
+    /// Arena bytes of the client's persisted residual (same accounting as
+    /// [`Residual::bytes`]).
+    pub fn residual_bytes_of(&self, id: usize) -> usize {
+        let r = self.res[id];
+        match r.kind {
+            ResKind::Empty => 0,
+            ResKind::Sparse => r.len * 8,
+            ResKind::Dense => r.len * 4,
+        }
     }
 
     /// Can this client be sampled right now? Demobilized, within budget,
     /// and online.
     pub fn eligible(&self, id: usize) -> bool {
-        let s = &self.specs[id];
-        s.channels.is_some() && s.online && s.meter.within_budget()
+        self.channels[id].is_some() && self.online[id] && self.meters[id].within_budget()
     }
 
-    /// Ascending ids of all currently eligible clients (O(population) scan —
-    /// the per-round cost sampling is allowed to pay; specs are cheap).
+    /// Fill `out` with the ascending ids of all currently eligible clients
+    /// — the allocation-free form samplers use every round (O(population)
+    /// scan over the store's columns).
+    pub fn eligible_into(&self, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend((0..self.len()).filter(|&i| self.eligible(i)));
+    }
+
+    /// Ascending ids of all currently eligible clients.
     pub fn eligible_ids(&self) -> Vec<usize> {
-        (0..self.specs.len()).filter(|&i| self.eligible(i)).collect()
+        let mut out = Vec::new();
+        self.eligible_into(&mut out);
+        out
     }
 
     pub fn any_within_budget(&self) -> bool {
-        self.specs.iter().any(|s| s.meter.within_budget())
+        self.meters.iter().any(|m| m.within_budget())
     }
 
     /// Could an ineligible population become eligible again without engine
@@ -292,9 +536,10 @@ impl Population {
     /// its clock alive on this, so a transient everybody-offline moment
     /// pauses the pool instead of ending the run.
     pub fn may_become_eligible(&self) -> bool {
-        self.specs
+        self.meters
             .iter()
-            .any(|s| s.meter.within_budget() && (s.online || self.churn_up > 0.0))
+            .zip(&self.online)
+            .any(|(m, &on)| m.within_budget() && (on || self.churn_up > 0.0))
     }
 
     /// Currently materialized client count.
@@ -308,55 +553,122 @@ impl Population {
         self.peak_materialized
     }
 
-    /// Total heap bytes of all persisted residuals.
+    /// Total live arena bytes of all persisted residuals (dead spans
+    /// awaiting compaction excluded).
     pub fn residual_bytes(&self) -> usize {
-        self.specs.iter().map(|s| s.residual.bytes()).sum()
+        (0..self.len()).map(|i| self.residual_bytes_of(i)).sum()
+    }
+
+    /// Total boxed compressors resident in the store (per-name pools plus
+    /// the resident lane) — the bound the seed-rehydration design is
+    /// proven against: O(cohort × distinct names + opt-out clients), not
+    /// O(population).
+    pub fn pooled_boxes(&self) -> usize {
+        let pooled: usize = self.pools.iter().map(|(_, b)| b.len()).sum();
+        let resident = self
+            .comp
+            .iter()
+            .filter(|c| matches!(c, CompressorSlot::Resident(Some(_))))
+            .count();
+        pooled + resident
     }
 
     /// Cumulative (energy, money) across every client's meter. Exact once
-    /// all clients are demobilized (a materialized client's spec meter is a
-    /// stale copy — the live meter travels with its `Device`).
+    /// all clients are demobilized (a materialized client's meter column is
+    /// a stale copy — the live meter travels with its `Device`).
     pub fn meter_totals(&self) -> (f64, f64) {
-        self.specs.iter().fold((0.0, 0.0), |acc, s| {
-            (acc.0 + s.meter.energy_used, acc.1 + s.meter.money_used)
-        })
+        self.meters
+            .iter()
+            .fold((0.0, 0.0), |acc, m| (acc.0 + m.energy_used, acc.1 + m.money_used))
     }
 
     /// [`Population::meter_totals`] restricted to demobilized clients —
     /// async drivers add the live devices' meters on top.
     pub fn demobilized_meter_totals(&self) -> (f64, f64) {
-        self.specs
+        self.meters
             .iter()
-            .filter(|s| s.channels.is_some())
-            .fold((0.0, 0.0), |acc, s| {
-                (acc.0 + s.meter.energy_used, acc.1 + s.meter.money_used)
+            .zip(&self.channels)
+            .filter(|(_, ch)| ch.is_some())
+            .fold((0.0, 0.0), |acc, (m, _)| {
+                (acc.0 + m.energy_used, acc.1 + m.money_used)
             })
     }
 
     /// Advance the population-wide dynamics by one round/tick: every
     /// demobilized client's fading chains (materialized clients' channels
-    /// advance inside their live `Device`, exactly like the reference loop)
-    /// and, when churn is enabled, every demobilized client's availability
-    /// chain. With churn disabled this makes the exact same RNG draws as
+    /// advance inside their live `Device`, exactly like the reference
+    /// loop) and, when churn is enabled, every demobilized client's
+    /// availability chain. With churn disabled the second sweep is skipped
+    /// outright, and the fading sweep makes the exact same RNG draws as
     /// the fully-materialized loop's `channels.step_round()` sweep.
+    ///
+    /// Both sweeps are linear scans over the store's columns and run
+    /// chunked across [`Population::set_sweep_threads`] workers for large
+    /// populations. Splitting fading from churn (the legacy store
+    /// interleaved them per client) and parallelizing are both invisible
+    /// bitwise: every client's link RNGs and churn RNG are private
+    /// streams, so per-client draw order is unchanged and no draw crosses
+    /// clients.
     pub fn step_round(&mut self) {
-        let (down, up) = (self.churn_down, self.churn_up);
-        let churn = down > 0.0 || up > 0.0;
-        for spec in &mut self.specs {
-            if let Some(ch) = &mut spec.channels {
+        self.step_fading();
+        if self.churn_down > 0.0 || self.churn_up > 0.0 {
+            self.step_churn();
+        }
+    }
+
+    fn step_fading(&mut self) {
+        let n = self.channels.len();
+        let threads = self.sweep_threads;
+        if threads > 1 && n >= PAR_SWEEP_MIN {
+            let chunk = n.div_ceil(threads);
+            std::thread::scope(|s| {
+                for part in self.channels.chunks_mut(chunk) {
+                    s.spawn(move || {
+                        for ch in part.iter_mut().flatten() {
+                            ch.step_round();
+                        }
+                    });
+                }
+            });
+        } else {
+            for ch in self.channels.iter_mut().flatten() {
                 ch.step_round();
-            } else {
-                continue; // materialized: the live Device owns the dynamics
             }
-            if churn {
-                if spec.online {
-                    if spec.churn_rng.uniform() < down {
-                        spec.online = false;
+        }
+    }
+
+    fn step_churn(&mut self) {
+        let n = self.online.len();
+        let (down, up) = (self.churn_down, self.churn_up);
+        let threads = self.sweep_threads;
+        let run = |online: &mut [bool], rngs: &mut [Rng], chs: &[Option<DeviceChannels>]| {
+            for i in 0..online.len() {
+                if chs[i].is_none() {
+                    continue; // materialized: the live Device owns the draw
+                }
+                if online[i] {
+                    if rngs[i].uniform() < down {
+                        online[i] = false;
                     }
-                } else if spec.churn_rng.uniform() < up {
-                    spec.online = true;
+                } else if rngs[i].uniform() < up {
+                    online[i] = true;
                 }
             }
+        };
+        if threads > 1 && n >= PAR_SWEEP_MIN {
+            let chunk = n.div_ceil(threads);
+            std::thread::scope(|s| {
+                for ((online, rngs), chs) in self
+                    .online
+                    .chunks_mut(chunk)
+                    .zip(self.churn_rng.chunks_mut(chunk))
+                    .zip(self.channels.chunks(chunk))
+                {
+                    s.spawn(move || run(online, rngs, chs));
+                }
+            });
+        } else {
+            run(&mut self.online, &mut self.churn_rng, &self.channels);
         }
     }
 
@@ -368,54 +680,119 @@ impl Population {
         if self.churn_down <= 0.0 {
             return false;
         }
-        let spec = &mut self.specs[id];
-        if spec.churn_rng.uniform() < self.churn_down {
-            spec.online = false;
+        if self.churn_rng[id].uniform() < self.churn_down {
+            self.online[id] = false;
             true
         } else {
             false
         }
     }
 
-    /// Wake a client up into a full [`Device`], synchronized to `global`:
-    /// dense replicas allocated now, channel/compressor state moved in, the
-    /// persisted residual rehydrated into the error memory.
-    pub fn materialize(&mut self, id: usize, global: &[f32]) -> Device {
-        let spec = &mut self.specs[id];
-        let channels = spec
-            .channels
-            .take()
-            .unwrap_or_else(|| panic!("client {id} is already materialized"));
-        let mut compressor = spec
-            .compressor
-            .take()
-            .unwrap_or_else(|| panic!("client {id} is already materialized"));
-        let residual = std::mem::take(&mut spec.residual);
-        if !residual.is_empty() {
-            let ef = compressor
-                .error_memory_mut()
-                .expect("residual persisted for a compressor without error memory");
-            residual.restore_into(ef, global.len());
+    /// Pop a recycled dense buffer (empty, capacity retained) or start a
+    /// fresh one.
+    fn take_buf(&mut self) -> Vec<f32> {
+        self.f32_pool.pop().unwrap_or_default()
+    }
+
+    fn recycle_buf(&mut self, mut v: Vec<f32>) {
+        if v.capacity() > 0 {
+            v.clear();
+            self.f32_pool.push(v);
         }
-        let mut dev = Device::new(
+    }
+
+    /// Wake a client up into a full [`Device`], synchronized to `global`:
+    /// dense replicas filled from the recycled buffer pool, channel state
+    /// moved in, a pooled compressor rehydrated from the client's seed (or
+    /// its resident box moved in), the arena residual scattered into the
+    /// error memory.
+    pub fn materialize(&mut self, id: usize, global: &[f32]) -> Device {
+        let dim = global.len();
+        let channels = self.channels[id]
+            .take()
+            .unwrap_or_else(|| panic!("client {id} is already materialized"));
+        let mut compressor = match &mut self.comp[id] {
+            CompressorSlot::Seeded { pool, seed } => {
+                let mut b = self.pools[*pool as usize].1.pop().unwrap_or_else(|| {
+                    panic!(
+                        "compressor pool underflow for client {id}: more than `cohort` \
+                         clients materialized at once"
+                    )
+                });
+                b.restore_seed(seed);
+                b
+            }
+            CompressorSlot::Resident(slot) => slot
+                .take()
+                .unwrap_or_else(|| panic!("client {id} is already materialized")),
+        };
+        // Rehydrate the persisted residual from the arena; the client's
+        // span dies here (it is re-encoded at demobilization).
+        let r = std::mem::replace(&mut self.res[id], ResRef::EMPTY);
+        match r.kind {
+            ResKind::Empty => {
+                // Pre-fill the error memory from the buffer pool (bitwise
+                // equal to the lazy `ensure_dim` zeros, but recycled):
+                // demobilization drained the box's memory vector, so
+                // without this every Empty-residual materialization would
+                // re-allocate a dense model inside the first compress.
+                if let Some(ef) = compressor.error_memory_mut() {
+                    let mut e = self.take_buf();
+                    e.resize(dim, 0.0);
+                    ef.set_memory(e);
+                }
+            }
+            ResKind::Sparse => {
+                let mut e = self.take_buf();
+                e.resize(dim, 0.0);
+                for &(i, v) in &self.sparse[r.off..r.off + r.len] {
+                    e[i as usize] = v;
+                }
+                self.dead_sparse += r.len;
+                let ef = compressor
+                    .error_memory_mut()
+                    .expect("residual persisted for a compressor without error memory");
+                ef.set_memory(e);
+            }
+            ResKind::Dense => {
+                assert_eq!(r.len, dim, "dense residual dim mismatch");
+                let mut e = self.take_buf();
+                e.extend_from_slice(&self.dense[r.off..r.off + r.len]);
+                self.dead_dense += r.len;
+                let ef = compressor
+                    .error_memory_mut()
+                    .expect("residual persisted for a compressor without error memory");
+                ef.set_memory(e);
+            }
+        }
+        let mut hat = self.take_buf();
+        hat.extend_from_slice(global);
+        let mut sync = self.take_buf();
+        sync.extend_from_slice(global);
+        let mut dev = Device::from_replicas(
             id,
-            global.to_vec(),
+            hat,
+            sync,
             compressor,
             channels,
-            spec.meter.clone(),
-            spec.compute,
+            self.meters[id].clone(),
+            self.computes[id],
         );
-        dev.prev_loss = spec.prev_loss;
-        dev.last_delta = spec.last_delta;
-        dev.sync_state = spec.sync_state;
+        if let Some((scratch, progress)) = self.scratch_pool.pop() {
+            dev.install_scratch(scratch, progress);
+        }
+        dev.prev_loss = self.prev_loss[id];
+        dev.last_delta = self.last_delta[id];
+        dev.sync_state = self.sync_states[id];
         self.materialized += 1;
         self.peak_materialized = self.peak_materialized.max(self.materialized);
         dev
     }
 
-    /// Put a client back to rest: persist meter/loss state, drain the error
-    /// memory into the compact residual, release O(model) buffers, drop the
-    /// dense replicas (they go out of scope with `parts`).
+    /// Put a client back to rest: persist meter/loss state to the columns,
+    /// drain the error memory into the residual arena, export the
+    /// compressor's seed back to its pool (or park the resident box), and
+    /// recycle every O(model) buffer.
     ///
     /// `compressed_since_sync`: whether the compressor ran after the
     /// device's last `sync`. If it did, the round's net progress already
@@ -444,6 +821,8 @@ impl Population {
             prev_loss,
             last_delta,
             sync_state,
+            scratch,
+            progress_buf,
         } = parts;
         if !compressed_since_sync {
             let pending = params_sync
@@ -462,38 +841,137 @@ impl Population {
                 }
             }
         }
-        let residual = compressor
-            .error_memory_mut()
-            .map(Residual::drain_from)
-            .unwrap_or(Residual::Empty);
-        compressor.trim_working_memory();
-        let spec = &mut self.specs[id];
-        debug_assert!(spec.channels.is_none(), "demobilizing a client twice");
-        spec.residual = residual;
-        spec.compressor = Some(compressor);
-        spec.channels = Some(channels);
-        spec.meter = meter;
-        spec.prev_loss = prev_loss;
-        spec.last_delta = last_delta;
-        spec.sync_state = sync_state;
+        // Drain the error memory into the arena (the [`Residual`] encoding
+        // rule, without a per-client Vec) and recycle its dense vector.
+        debug_assert!(matches!(self.res[id].kind, ResKind::Empty), "span leaked");
+        if let Some(ef) = compressor.error_memory_mut() {
+            let e = ef.take_memory();
+            let nnz = e.iter().filter(|v| v.to_bits() != 0).count();
+            self.res[id] = if nnz == 0 {
+                ResRef::EMPTY
+            } else if nnz * 2 > e.len() {
+                let off = self.dense.len();
+                self.dense.extend_from_slice(&e);
+                ResRef { kind: ResKind::Dense, off, len: e.len() }
+            } else {
+                let off = self.sparse.len();
+                self.sparse.extend(
+                    e.iter()
+                        .enumerate()
+                        .filter(|(_, v)| v.to_bits() != 0)
+                        .map(|(i, &v)| (i as u32, v)),
+                );
+                ResRef { kind: ResKind::Sparse, off, len: nnz }
+            };
+            self.recycle_buf(e);
+        } else {
+            self.res[id] = ResRef::EMPTY;
+        }
+        // Route the compressor home. Pooled boxes keep their working
+        // memory (the pool holds at most `cohort` boxes per name, so the
+        // retained capacity is O(cohort × model), the same order as the
+        // live cohort); resident boxes are per-client — O(population) —
+        // and must trim to O(1).
+        match &mut self.comp[id] {
+            CompressorSlot::Seeded { pool, seed } => {
+                *seed = compressor
+                    .export_seed()
+                    .expect("seeded compressor stopped exporting a seed");
+                self.pools[*pool as usize].1.push(compressor);
+            }
+            CompressorSlot::Resident(slot) => {
+                compressor.trim_working_memory();
+                debug_assert!(slot.is_none(), "demobilizing a client twice");
+                *slot = Some(compressor);
+            }
+        }
+        debug_assert!(self.channels[id].is_none(), "demobilizing a client twice");
+        self.channels[id] = Some(channels);
+        self.meters[id] = meter;
+        self.prev_loss[id] = prev_loss;
+        self.last_delta[id] = last_delta;
+        self.sync_states[id] = sync_state;
+        self.recycle_buf(params_hat);
+        self.recycle_buf(params_sync);
+        if self.scratch_pool.len() < self.cohort {
+            self.scratch_pool.push((scratch, progress_buf));
+        }
         self.materialized -= 1;
+        // Amortized arena compaction: once dead spans outweigh live ones,
+        // ping-pong the pool into its spare buffer (retained capacity —
+        // no steady-state allocation) and rewrite the live offsets.
+        if self.dead_sparse * 2 > self.sparse.len() && self.dead_sparse > 0 {
+            self.compact_sparse();
+        }
+        if self.dead_dense * 2 > self.dense.len() && self.dead_dense > 0 {
+            self.compact_dense();
+        }
+    }
+
+    fn compact_sparse(&mut self) {
+        let mut out = std::mem::take(&mut self.sparse_spare);
+        out.clear();
+        for r in self.res.iter_mut() {
+            if r.kind == ResKind::Sparse {
+                let new_off = out.len();
+                out.extend_from_slice(&self.sparse[r.off..r.off + r.len]);
+                r.off = new_off;
+            }
+        }
+        self.sparse_spare = std::mem::replace(&mut self.sparse, out);
+        self.dead_sparse = 0;
+    }
+
+    fn compact_dense(&mut self) {
+        let mut out = std::mem::take(&mut self.dense_spare);
+        out.clear();
+        for r in self.res.iter_mut() {
+            if r.kind == ResKind::Dense {
+                let new_off = out.len();
+                out.extend_from_slice(&self.dense[r.off..r.off + r.len]);
+                r.off = new_off;
+            }
+        }
+        self.dense_spare = std::mem::replace(&mut self.dense, out);
+        self.dead_dense = 0;
     }
 
     /// Fresh FL episode: meters, residuals, compressor episode state and
     /// availability restart; channel fading chains keep their streams (like
-    /// the fully-materialized `reset_episode`).
+    /// the fully-materialized `reset_episode`). Seeds rewind via
+    /// [`CompressorSeed::reset`]; pooled boxes need no touch-up — the next
+    /// materialization's `restore_seed` overwrites any stream state, and
+    /// their error memories were drained at demobilization.
     pub fn reset_episode(&mut self, energy_budget: f64, money_budget: f64) {
         assert_eq!(self.materialized, 0, "reset_episode with clients in flight");
-        for spec in &mut self.specs {
-            spec.residual = Residual::Empty;
-            if let Some(c) = spec.compressor.as_mut() {
-                c.reset();
+        self.sparse.clear();
+        self.dense.clear();
+        self.dead_sparse = 0;
+        self.dead_dense = 0;
+        for r in &mut self.res {
+            *r = ResRef::EMPTY;
+        }
+        for slot in &mut self.comp {
+            match slot {
+                CompressorSlot::Seeded { seed, .. } => seed.reset(),
+                CompressorSlot::Resident(Some(c)) => c.reset(),
+                CompressorSlot::Resident(None) => unreachable!("materialized == 0"),
             }
-            spec.meter = ResourceMeter::new(energy_budget, money_budget);
-            spec.prev_loss = f64::NAN;
-            spec.last_delta = 0.0;
-            spec.sync_state = SyncState::default();
-            spec.online = true;
+        }
+        for m in &mut self.meters {
+            *m = ResourceMeter::new(energy_budget, money_budget);
+        }
+        for x in &mut self.prev_loss {
+            *x = f64::NAN;
+        }
+        for x in &mut self.last_delta {
+            *x = 0.0;
+        }
+        for s in &mut self.sync_states {
+            *s = SyncState::default();
+        }
+        for o in &mut self.online {
+            *o = true;
         }
     }
 }
@@ -502,24 +980,24 @@ impl Population {
 mod tests {
     use super::*;
     use crate::channels::ChannelType;
-    use crate::compression::{ErrorCompensated, LgcTopAB};
+    use crate::compression::{ErrorCompensated, LgcTopAB, Qsgd};
 
-    fn spec(id: usize, seed: u64) -> DeviceSpec {
+    fn seed(id: usize, seed: u64) -> SpecSeed {
         let rng = Rng::new(seed);
-        DeviceSpec::new(
+        SpecSeed::new(
             id,
-            id % 2,
-            100 + id,
             DeviceChannels::new(&[ChannelType::G5, ChannelType::G3], &rng, id),
-            ResourceMeter::new(f64::INFINITY, f64::INFINITY),
-            ComputeCostModel::for_params(1000),
             Box::new(ErrorCompensated::new(LgcTopAB)),
             rng.fork(0xC0FFEE ^ id as u64),
         )
+        .shard(id % 2)
+        .samples(100 + id)
+        .meter(ResourceMeter::new(f64::INFINITY, f64::INFINITY))
+        .compute(ComputeCostModel::for_params(1000))
     }
 
     fn pop(n: usize, cohort: usize) -> Population {
-        Population::new((0..n).map(|i| spec(i, 7)).collect(), cohort, 0.0, 0.0)
+        Population::new((0..n).map(|i| seed(i, 7)), cohort, 0.0, 0.0)
     }
 
     #[test]
@@ -539,7 +1017,7 @@ mod tests {
         assert!(mem_before.iter().any(|&x| x != 0.0));
         p.demobilize(dev.into_parts(), true);
         assert_eq!(p.materialized(), 0);
-        assert!(!p.spec(1).residual.is_empty());
+        assert!(!p.residual_is_empty(1));
         // Rematerialize: the error memory must come back bit-for-bit.
         let dev2 = p.materialize(1, &global);
         let mem_after = dev2.error_memory().unwrap().memory().to_vec();
@@ -560,8 +1038,7 @@ mod tests {
             *x -= 0.125;
         }
         p.demobilize(dev.into_parts(), false);
-        let r = &p.spec(0).residual;
-        assert_eq!(r.nnz(), 32, "all 32 coordinates moved");
+        assert_eq!(p.residual_nnz(0), 32, "all 32 coordinates moved");
         // u = w_sync − ŵ = +0.125 per coordinate.
         let dev2 = p.materialize(0, &global);
         let mem = dev2.error_memory().unwrap().memory().to_vec();
@@ -598,7 +1075,7 @@ mod tests {
             staleness: 3,
         };
         p.demobilize(dev.into_parts(), true);
-        assert_eq!(p.spec(2).sync_state.synced_version, 9);
+        assert_eq!(p.sync_state(2).synced_version, 9);
         let dev2 = p.materialize(2, &global);
         assert_eq!(
             dev2.sync_state,
@@ -607,13 +1084,13 @@ mod tests {
         p.demobilize(dev2.into_parts(), true);
         // reset_episode clears it.
         p.reset_episode(f64::INFINITY, f64::INFINITY);
-        assert_eq!(p.spec(2).sync_state, SyncState::default());
+        assert_eq!(p.sync_state(2), SyncState::default());
     }
 
     #[test]
     fn churn_chain_moves_clients_on_and_off() {
-        let specs = (0..50).map(|i| spec(i, 11)).collect();
-        let mut p = Population::new(specs, 10, 0.4, 0.5);
+        let seeds = (0..50).map(|i| seed(i, 11));
+        let mut p = Population::new(seeds, 10, 0.4, 0.5);
         let mut saw_offline = false;
         let mut saw_back_online = false;
         let mut was_offline = vec![false; 50];
@@ -656,5 +1133,148 @@ mod tests {
         // Empty stays empty.
         let mut ef4 = ErrorFeedback::new(10);
         assert!(Residual::drain_from(&mut ef4).is_empty());
+    }
+
+    #[test]
+    fn compressor_boxes_bounded_by_cohort_not_population() {
+        // 100 seeded (ErrorCompensated<LgcTopAB>) clients share one pool of
+        // at most `cohort` boxes.
+        let p = pop(100, 4);
+        assert!(p.pooled_boxes() <= 4, "pooled {}", p.pooled_boxes());
+        // RandK opts out of seeding (history-dependent permutation) and
+        // stays resident per client.
+        let rk = Population::new(
+            (0..10).map(|i| {
+                let rng = Rng::new(3);
+                SpecSeed::new(
+                    i,
+                    DeviceChannels::new(&[ChannelType::G5], &rng, i),
+                    Box::new(crate::compression::RandK::new(rng.fork(i as u64), false)),
+                    rng.fork(0xC0FFEE ^ i as u64),
+                )
+            }),
+            2,
+            0.0,
+            0.0,
+        );
+        assert_eq!(rk.pooled_boxes(), 10);
+    }
+
+    #[test]
+    fn qsgd_seed_rehydration_is_bitwise() {
+        // Two clients share one pooled Qsgd box (cohort 1); their private
+        // quantization streams must interleave exactly as if each kept its
+        // own box: advance A, advance B, then A again — A's second draw
+        // must continue A's stream, not B's.
+        let mk = |n: usize, cohort: usize| {
+            Population::new(
+                (0..n).map(|i| {
+                    let rng = Rng::new(21);
+                    SpecSeed::new(
+                        i,
+                        DeviceChannels::new(&[ChannelType::G5], &rng, i),
+                        Box::new(Qsgd::new(crate::compression::quantize::QsgdQuantizer::new(
+                            4,
+                            rng.fork(0x0561D ^ ((i as u64) << 8)),
+                        ))),
+                        rng.fork(0xC0FFEE ^ i as u64),
+                    )
+                }),
+                cohort,
+                0.0,
+                0.0,
+            )
+        };
+        let global = vec![0f32; 64];
+        let u: Vec<f32> = (0..64).map(|i| (i as f32 - 31.5) * 1e-2).collect();
+        let plan = crate::channels::AllocationPlan { counts: vec![64] };
+        let round = |p: &mut Population, id: usize| {
+            let mut d = p.materialize(id, &global);
+            for (x, &v) in d.params_hat.iter_mut().zip(&u) {
+                *x -= v;
+            }
+            let (up, _, _) = d.compress_and_upload(&plan);
+            d.sync(&global);
+            p.demobilize(d.into_parts(), true);
+            up.decode()
+        };
+        // Pooled (cohort 1 — both clients share a single box) vs. a fresh
+        // population where each client got its own box (cohort 2 keeps
+        // both boxes pooled, but the first two materializations pop
+        // distinct boxes).
+        let mut pooled = mk(2, 1);
+        let a1 = round(&mut pooled, 0);
+        let b1 = round(&mut pooled, 1);
+        let a2 = round(&mut pooled, 0);
+        let mut fresh = mk(2, 2);
+        let fa1 = round(&mut fresh, 0);
+        let fb1 = round(&mut fresh, 1);
+        let fa2 = round(&mut fresh, 0);
+        for (x, y) in [(a1, fa1), (b1, fb1), (a2, fa2)] {
+            assert_eq!(x.len(), y.len());
+            for (a, b) in x.iter().zip(&y) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn residual_arena_compacts_and_roundtrips_under_churn() {
+        let mut p = pop(6, 3);
+        let global = vec![0.5f32; 48];
+        let plan = crate::channels::AllocationPlan { counts: vec![3, 3] };
+        let mut expected: Vec<Option<Vec<f32>>> = vec![None; 6];
+        for cycle in 0..8 {
+            for id in 0..3 {
+                let client = (cycle + id * 2) % 6;
+                let mut dev = p.materialize(client, &global);
+                if let Some(mem) = &expected[client] {
+                    let got = dev.error_memory().unwrap().memory();
+                    assert_eq!(got.len(), mem.len(), "client {client} cycle {cycle}");
+                    for (a, b) in got.iter().zip(mem) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "client {client} cycle {cycle}");
+                    }
+                }
+                for (i, x) in dev.params_hat.iter_mut().enumerate() {
+                    *x += ((i + client + cycle) as f32 + 1.0) * 1e-3;
+                }
+                let _ = dev.compress_and_upload(&plan);
+                dev.sync(&global);
+                expected[client] = Some(dev.error_memory().unwrap().memory().to_vec());
+                p.demobilize(dev.into_parts(), true);
+            }
+        }
+        // Live accounting matches the per-client view after compactions.
+        let total: usize = (0..6).map(|i| p.residual_bytes_of(i)).sum();
+        assert_eq!(p.residual_bytes(), total);
+    }
+
+    #[test]
+    fn steady_state_buffers_are_recycled() {
+        // After one warmup cycle the store's free lists feed every
+        // materialization: replicas, error memory, and scratch all come
+        // from the pools, so the pool sizes reach a fixed point.
+        let mut p = pop(4, 2);
+        let global = vec![0.1f32; 32];
+        let plan = crate::channels::AllocationPlan { counts: vec![2, 2] };
+        let mut cycle = |p: &mut Population| {
+            for id in 0..2 {
+                let mut dev = p.materialize(id, &global);
+                for x in dev.params_hat.iter_mut() {
+                    *x += 1e-3;
+                }
+                let _ = dev.compress_and_upload(&plan);
+                dev.sync(&global);
+                p.demobilize(dev.into_parts(), true);
+            }
+        };
+        cycle(&mut p);
+        let bufs = p.f32_pool.len();
+        let scratch = p.scratch_pool.len();
+        for _ in 0..5 {
+            cycle(&mut p);
+            assert_eq!(p.f32_pool.len(), bufs);
+            assert_eq!(p.scratch_pool.len(), scratch);
+        }
     }
 }

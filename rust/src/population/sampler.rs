@@ -80,8 +80,19 @@ pub trait ClientSampler: Send {
     /// Short human-readable name for logs.
     fn name(&self) -> String;
 
-    /// Select the round's cohort.
-    fn sample(&mut self, round: usize, pop: &Population) -> Vec<usize>;
+    /// Select the round's cohort into `out` (cleared first) — the
+    /// allocation-free form the engines drive with a hoisted buffer, so
+    /// steady-state rounds reuse one cohort allocation. Implementations
+    /// keep any eligible-id scan in internal scratch for the same reason.
+    fn sample_into(&mut self, round: usize, pop: &Population, out: &mut Vec<usize>);
+
+    /// Select the round's cohort (convenience wrapper over
+    /// [`ClientSampler::sample_into`]).
+    fn sample(&mut self, round: usize, pop: &Population) -> Vec<usize> {
+        let mut out = Vec::new();
+        self.sample_into(round, pop, &mut out);
+        out
+    }
 
     /// Pick one replacement client for a freed async slot. `busy[id]` marks
     /// clients currently in flight (also excluded by eligibility — the
@@ -109,8 +120,9 @@ impl ClientSampler for FullParticipation {
         "full".to_string()
     }
 
-    fn sample(&mut self, _round: usize, pop: &Population) -> Vec<usize> {
-        (0..pop.len()).collect()
+    fn sample_into(&mut self, _round: usize, pop: &Population, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend(0..pop.len());
     }
 
     fn sample_replacement(&mut self, pop: &Population, busy: &[bool]) -> Option<usize> {
@@ -132,12 +144,14 @@ impl ClientSampler for FullParticipation {
 pub struct UniformK {
     pub k: usize,
     rng: Rng,
+    /// Eligible-id scratch, reused across rounds (no steady-state alloc).
+    elig: Vec<usize>,
 }
 
 impl UniformK {
     pub fn new(k: usize, rng: Rng) -> Self {
         assert!(k >= 1, "cohort must be >= 1");
-        UniformK { k, rng }
+        UniformK { k, rng, elig: Vec::new() }
     }
 }
 
@@ -165,19 +179,20 @@ fn uniform_replacement(pop: &Population, busy: &[bool], rng: &mut Rng) -> Option
     }
 }
 
-fn uniform_among(elig: Vec<usize>, k: usize, rng: &mut Rng) -> Vec<usize> {
+/// In-place partial Fisher–Yates: keep `k` uniform-without-replacement
+/// entries of `elig` (all of them if `k >= len`), sorted ascending. Draw
+/// order is the classic `rng.index(n - i)` per kept slot.
+fn uniform_among(elig: &mut Vec<usize>, k: usize, rng: &mut Rng) {
     let n = elig.len();
     if n <= k {
-        return elig; // already ascending
+        return; // already ascending
     }
-    let mut elig = elig;
     for i in 0..k {
         let j = i + rng.index(n - i);
         elig.swap(i, j);
     }
     elig.truncate(k);
     elig.sort_unstable();
-    elig
 }
 
 impl ClientSampler for UniformK {
@@ -185,8 +200,11 @@ impl ClientSampler for UniformK {
         format!("uniform-k({})", self.k)
     }
 
-    fn sample(&mut self, _round: usize, pop: &Population) -> Vec<usize> {
-        uniform_among(pop.eligible_ids(), self.k, &mut self.rng)
+    fn sample_into(&mut self, _round: usize, pop: &Population, out: &mut Vec<usize>) {
+        pop.eligible_into(&mut self.elig);
+        uniform_among(&mut self.elig, self.k, &mut self.rng);
+        out.clear();
+        out.extend_from_slice(&self.elig);
     }
 
     fn sample_replacement(&mut self, pop: &Population, busy: &[bool]) -> Option<usize> {
@@ -201,12 +219,16 @@ impl ClientSampler for UniformK {
 pub struct WeightedBySamples {
     pub k: usize,
     rng: Rng,
+    /// Eligible-id scratch, reused across rounds (no steady-state alloc).
+    elig: Vec<usize>,
+    /// A-Res key scratch, reused the same way.
+    keyed: Vec<(f64, usize)>,
 }
 
 impl WeightedBySamples {
     pub fn new(k: usize, rng: Rng) -> Self {
         assert!(k >= 1, "cohort must be >= 1");
-        WeightedBySamples { k, rng }
+        WeightedBySamples { k, rng, elig: Vec::new(), keyed: Vec::new() }
     }
 }
 
@@ -215,23 +237,22 @@ impl ClientSampler for WeightedBySamples {
         format!("weighted-by-samples({})", self.k)
     }
 
-    fn sample(&mut self, _round: usize, pop: &Population) -> Vec<usize> {
-        let elig = pop.eligible_ids();
-        if elig.len() <= self.k {
-            return elig;
+    fn sample_into(&mut self, _round: usize, pop: &Population, out: &mut Vec<usize>) {
+        pop.eligible_into(&mut self.elig);
+        out.clear();
+        if self.elig.len() <= self.k {
+            out.extend_from_slice(&self.elig);
+            return;
         }
-        let mut keyed: Vec<(f64, usize)> = elig
-            .into_iter()
-            .map(|i| {
-                let w = pop.samples(i).max(1) as f64;
-                let u = self.rng.uniform().max(1e-300);
-                (u.powf(1.0 / w), i)
-            })
-            .collect();
-        keyed.sort_by(|a, b| b.0.total_cmp(&a.0));
-        let mut ids: Vec<usize> = keyed[..self.k].iter().map(|&(_, i)| i).collect();
-        ids.sort_unstable();
-        ids
+        self.keyed.clear();
+        for &i in &self.elig {
+            let w = pop.samples(i).max(1) as f64;
+            let u = self.rng.uniform().max(1e-300);
+            self.keyed.push((u.powf(1.0 / w), i));
+        }
+        self.keyed.sort_by(|a, b| b.0.total_cmp(&a.0));
+        out.extend(self.keyed[..self.k].iter().map(|&(_, i)| i));
+        out.sort_unstable();
     }
 
     fn sample_replacement(&mut self, pop: &Population, busy: &[bool]) -> Option<usize> {
@@ -264,12 +285,14 @@ impl ClientSampler for WeightedBySamples {
 pub struct AvailabilityMarkov {
     pub k: usize,
     rng: Rng,
+    /// Eligible-id scratch, reused across rounds (no steady-state alloc).
+    elig: Vec<usize>,
 }
 
 impl AvailabilityMarkov {
     pub fn new(k: usize, rng: Rng) -> Self {
         assert!(k >= 1, "cohort must be >= 1");
-        AvailabilityMarkov { k, rng }
+        AvailabilityMarkov { k, rng, elig: Vec::new() }
     }
 }
 
@@ -278,9 +301,12 @@ impl ClientSampler for AvailabilityMarkov {
         format!("availability-markov({})", self.k)
     }
 
-    fn sample(&mut self, _round: usize, pop: &Population) -> Vec<usize> {
+    fn sample_into(&mut self, _round: usize, pop: &Population, out: &mut Vec<usize>) {
         // Eligibility already excludes offline clients.
-        uniform_among(pop.eligible_ids(), self.k, &mut self.rng)
+        pop.eligible_into(&mut self.elig);
+        uniform_among(&mut self.elig, self.k, &mut self.rng);
+        out.clear();
+        out.extend_from_slice(&self.elig);
     }
 
     fn sample_replacement(&mut self, pop: &Population, busy: &[bool]) -> Option<usize> {
@@ -293,28 +319,27 @@ mod tests {
     use super::*;
     use crate::channels::{ChannelType, DeviceChannels};
     use crate::compression::DenseNoop;
-    use crate::population::DeviceSpec;
+    use crate::population::SpecSeed;
     use crate::resources::{ComputeCostModel, ResourceMeter};
 
     fn synthetic_pop(samples: &[usize]) -> Population {
         let rng = Rng::new(3);
-        let specs = samples
-            .iter()
-            .enumerate()
-            .map(|(id, &n)| {
-                DeviceSpec::new(
+        Population::new(
+            samples.iter().enumerate().map(|(id, &n)| {
+                SpecSeed::new(
                     id,
-                    id,
-                    n,
                     DeviceChannels::new(&[ChannelType::G5], &rng, id),
-                    ResourceMeter::new(f64::INFINITY, f64::INFINITY),
-                    ComputeCostModel::for_params(100),
                     Box::new(DenseNoop),
                     rng.fork(id as u64),
                 )
-            })
-            .collect();
-        Population::new(specs, samples.len().min(4), 0.0, 0.0)
+                .samples(n)
+                .meter(ResourceMeter::new(f64::INFINITY, f64::INFINITY))
+                .compute(ComputeCostModel::for_params(100))
+            }),
+            samples.len().min(4),
+            0.0,
+            0.0,
+        )
     }
 
     #[test]
@@ -380,6 +405,27 @@ mod tests {
         for _ in 0..14 {
             let id = f.sample_replacement(&pop, &busy).unwrap();
             assert_ne!(id, 2);
+        }
+    }
+
+    #[test]
+    fn sample_into_matches_sample_for_every_builtin() {
+        // The in-place form the engines drive must make the exact same RNG
+        // draws as the allocating wrapper.
+        let pop = synthetic_pop(&[10, 1000, 10, 500, 10, 10, 250, 10, 10, 10]);
+        for kind in [
+            SamplerKind::Full,
+            SamplerKind::UniformK,
+            SamplerKind::WeightedBySamples,
+            SamplerKind::AvailabilityMarkov,
+        ] {
+            let mut a = build_sampler(kind, 3, Rng::new(77));
+            let mut b = build_sampler(kind, 3, Rng::new(77));
+            let mut buf = Vec::new();
+            for round in 0..5 {
+                a.sample_into(round, &pop, &mut buf);
+                assert_eq!(buf, b.sample(round, &pop), "{}", kind.name());
+            }
         }
     }
 }

@@ -155,6 +155,18 @@ fn resolve_threads(cfg_threads: usize) -> usize {
     }
 }
 
+/// `shards` semantics: 0 = auto (one event-queue shard per available
+/// core), n = n. Purely a throughput knob — the sharded queue's
+/// `(time, shard, seq)` merge reproduces the single-heap order exactly,
+/// so any value is bit-identical (tests/scale_engine.rs). The same count
+/// drives the population store's parallel fading/churn sweeps.
+fn resolve_shards(cfg_shards: usize) -> usize {
+    match cfg_shards {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        n => n,
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Barrier mode
 // ---------------------------------------------------------------------------
@@ -195,7 +207,7 @@ fn barrier_rounds(
             h.len()
         );
     }
-    let mut queue = EventQueue::new();
+    let mut queue = EventQueue::with_shards(resolve_shards(exp.cfg.shards));
     let mut stats = SimStats::default();
 
     // Emit one barrier-round record — factored out so the downlink path
@@ -343,18 +355,32 @@ fn barrier_rounds(
         }
     }
 
+    // Per-round state, indexed by device — hoisted out of the round loop
+    // and reset-filled each round, so steady-state rounds reuse the same
+    // nine allocations instead of remaking them. Event times within a
+    // round are offsets from the round start, so the f64 arithmetic
+    // matches the synchronous loop exactly; the virtual clock is
+    // `exp.total_time_s`.
+    let mut active = vec![false; m];
+    let mut syncs = vec![false; m];
+    let mut hs = vec![0usize; m];
+    let mut plans: Vec<Option<AllocationPlan>> = (0..m).map(|_| None).collect();
+    let mut losses = vec![0.0f64; m];
+    let mut comp_s = vec![0.0f64; m];
+    let mut comp_j = vec![0.0f64; m];
+    let mut walls = vec![0.0f64; m];
+    // Downlink round state (inert when the downlink is disabled).
+    let mut down_updates: Vec<Option<LgcUpdate>> = (0..m).map(|_| None).collect();
     'rounds: for round in 0..exp.cfg.rounds {
-        // Per-round state, indexed by device. Event times within a round are
-        // offsets from the round start, so the f64 arithmetic matches the
-        // synchronous loop exactly; the virtual clock is `exp.total_time_s`.
-        let mut active = vec![false; m];
-        let mut syncs = vec![false; m];
-        let mut hs = vec![0usize; m];
-        let mut plans: Vec<Option<AllocationPlan>> = (0..m).map(|_| None).collect();
-        let mut losses = vec![0.0f64; m];
-        let mut comp_s = vec![0.0f64; m];
-        let mut comp_j = vec![0.0f64; m];
-        let mut walls = vec![0.0f64; m];
+        active.iter_mut().for_each(|x| *x = false);
+        syncs.iter_mut().for_each(|x| *x = false);
+        hs.iter_mut().for_each(|x| *x = 0);
+        plans.iter_mut().for_each(|x| *x = None);
+        losses.iter_mut().for_each(|x| *x = 0.0);
+        comp_s.iter_mut().for_each(|x| *x = 0.0);
+        comp_j.iter_mut().for_each(|x| *x = 0.0);
+        walls.iter_mut().for_each(|x| *x = 0.0);
+        down_updates.iter_mut().for_each(|x| *x = None);
         let mut round_wall = 0.0f64;
         let mut bytes_up = 0u64;
         let mut pending_compute = 0usize;
@@ -365,8 +391,6 @@ fn barrier_rounds(
         let mut loss_n = 0usize;
         let mut reward_acc = 0.0f64;
         let mut reward_n = 0usize;
-        // Downlink round state (inert when the downlink is disabled).
-        let mut down_updates: Vec<Option<LgcUpdate>> = (0..m).map(|_| None).collect();
         let mut pending_down = 0usize;
         let mut completed_uploads = 0u64;
 
@@ -824,7 +848,7 @@ fn run_async(
     kind: AsyncKind,
 ) -> Result<()> {
     let m = exp.devices.len();
-    let mut queue = EventQueue::new();
+    let mut queue = EventQueue::with_shards(resolve_shards(exp.cfg.shards));
     let mut st: Vec<DevState> = (0..m).map(|_| DevState::default()).collect();
     let mut ctx = AsyncCtx {
         kind,
@@ -1664,9 +1688,21 @@ fn cohort_barrier_rounds(
 ) -> Result<()> {
     let mut stats = SimStats::default();
     let streaming = exp.cfg.streaming;
+    // The O(population) sweeps in step_round() run chunked across the
+    // resolved shard count (bit-identical for any value — private
+    // per-client RNG streams).
+    pop.set_sweep_threads(resolve_shards(exp.cfg.shards));
     // Reusable decode buffers: one per received upload (batch) or a single
     // shared one (streaming — the upload is folded the moment it decodes).
     let mut decoded: Vec<LgcUpdate> = Vec::new();
+    // Per-round cohort state, hoisted and cleared each round so a
+    // steady-state round reuses the same six allocations.
+    let mut cohort: Vec<usize> = Vec::new();
+    let mut live: Vec<(Device, bool, bool)> = Vec::new();
+    let mut received_live: Vec<usize> = Vec::new();
+    let mut weights: Vec<f64> = Vec::new();
+    let mut finishes: Vec<f64> = Vec::new();
+    let mut zones_uploaded: Vec<usize> = Vec::new();
     'rounds: for round in 0..exp.cfg.rounds {
         // 1. Population-wide dynamics: every demobilized client's fading
         // chains (nobody is materialized between rounds) + availability,
@@ -1691,30 +1727,31 @@ fn cohort_barrier_rounds(
         if !pop.any_within_budget() {
             break 'rounds;
         }
-        // 2. Cohort selection: the sampler seam.
-        let cohort = sampler.sample(round, pop);
-        let mut live: Vec<(Device, bool, bool)> = Vec::with_capacity(cohort.len());
-        let mut received_live: Vec<usize> = Vec::new();
-        let mut weights: Vec<f64> = Vec::new();
+        // 2. Cohort selection: the sampler seam (in-place, reusing the
+        // hoisted buffer).
+        sampler.sample_into(round, pop, &mut cohort);
+        live.clear();
+        received_live.clear();
+        weights.clear();
+        finishes.clear();
+        // Zones with at least one received upload this round: each owes one
+        // partial-aggregate frame on its backhaul (accounting-only, like
+        // the cohort downlink — see the edge module docs).
+        zones_uploaded.clear();
         let mut round_wall = 0.0f64;
         let mut loss_sum = 0.0f64;
         let mut loss_n = 0usize;
         let mut bytes_up = 0u64;
         let mut reward_acc = 0.0f64;
         let mut reward_n = 0usize;
-        let mut finishes: Vec<f64> = Vec::with_capacity(cohort.len());
         let mut dropped_offline = 0u64;
         let mut nrecv = 0usize;
-        // Zones with at least one received upload this round: each owes one
-        // partial-aggregate frame on its backhaul (accounting-only, like
-        // the cohort downlink — see the edge module docs).
-        let mut zones_uploaded: Vec<usize> = Vec::new();
         if streaming {
             exp.server.stream_begin();
         }
         // 3. Per-client round, in ascending id order (the reference loop's
         // device order): materialize, decide, train, upload, account.
-        for id in cohort {
+        for &id in &cohort {
             if pop.is_materialized(id) || !pop.within_budget(id) || !pop.online(id) {
                 continue; // the reference loop's per-device budget skip
             }
@@ -1754,7 +1791,7 @@ fn cohort_barrier_rounds(
                     } else {
                         decoded[slot] = update;
                     }
-                    // `DeviceSpec::samples` caches `device_samples(shard)`
+                    // `SpecSeed::samples` caches `device_samples(shard)`
                     // at build time (shard sizes are static), so this is
                     // the reference loop's exact weight without re-querying
                     // the trainer — the one weight convention of every
@@ -1854,10 +1891,10 @@ fn cohort_barrier_rounds(
             // (the broadcasts start after aggregation, in parallel).
             round_wall += down_wall;
         }
-        // 5. Demobilize the cohort: meters/losses persist to the specs, the
-        // error memory drains into the compact residual, the dense replicas
-        // are freed.
-        for (dev, compressed, _) in live {
+        // 5. Demobilize the cohort: meters/losses persist to the store's
+        // columns, the error memory drains into the residual arena, the
+        // dense replicas and scratch recycle into the store's pools.
+        for (dev, compressed, _) in live.drain(..) {
             pop.demobilize(dev.into_parts(), compressed);
         }
         // 6. Evaluate + record — the reference loop's exact bookkeeping.
@@ -2193,7 +2230,10 @@ fn cohort_async_rounds(
 ) -> Result<()> {
     let n_slots = pop.cohort();
     let streaming = exp.cfg.streaming;
-    let mut queue = EventQueue::new();
+    let mut queue = EventQueue::with_shards(resolve_shards(exp.cfg.shards));
+    // The O(population) sweeps at each FadingTick run chunked across the
+    // same shard count (bit-identical for any value).
+    pop.set_sweep_threads(resolve_shards(exp.cfg.shards));
     let mut stats = SimStats::default();
     let mut slots: Vec<CohortSlot> = (0..n_slots).map(|_| CohortSlot::idle()).collect();
     let mut busy = vec![false; pop.len()];

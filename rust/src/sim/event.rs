@@ -1,10 +1,21 @@
-//! Discrete events and the virtual-time event queue.
+//! Discrete events and the sharded virtual-time event queue.
 //!
-//! The simulation core is a binary min-heap of [`Scheduled`] entries ordered
-//! by `(time, seq)`: virtual seconds first, insertion sequence second. The
-//! `seq` tie-break makes event ordering *total* and deterministic — two
-//! events at the same instant pop in the order they were scheduled, so a
-//! seeded run replays identically regardless of heap internals.
+//! The simulation core is a set of per-shard binary min-heaps of
+//! [`Scheduled`] entries merged by `(time, shard, seq)`: virtual seconds
+//! first, insertion sequence second (the shard component is vacuous — see
+//! below). Device-owned events hash to a shard by client id; control-plane
+//! events (fading ticks, broadcasts, backhaul arrivals) ride a dedicated
+//! shard 0, so the per-tick population-wide work they trigger can fan out
+//! in parallel while per-device causality stays within one shard.
+//!
+//! **Determinism argument.** `seq` is a single global counter assigned at
+//! push time, so every scheduled entry carries a globally unique `(time,
+//! seq)` key and the cross-shard merge (pop the minimum key among the shard
+//! heads) reproduces the total order of a single heap *exactly*, for any
+//! shard count. The `shard` component of the merge key never breaks a tie
+//! because no two entries share `(time, seq)` — sharding is a layout
+//! choice, not a semantic one, which is what keeps all four engines
+//! bitwise-identical for `shards ∈ {1, 2, …, auto}`.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -52,6 +63,22 @@ pub enum Event {
     SyncConfirmed { device: usize },
 }
 
+impl Event {
+    /// The client id that owns this event, or `None` for control-plane
+    /// events (fading ticks, server broadcasts, edge backhaul frames) that
+    /// live on the dedicated shard 0.
+    fn device(&self) -> Option<usize> {
+        match *self {
+            Event::ComputeDone { device }
+            | Event::LayerArrived { device, .. }
+            | Event::UploadDone { device }
+            | Event::DownlinkLayerArrived { device, .. }
+            | Event::SyncConfirmed { device } => Some(device),
+            Event::FadingTick | Event::Broadcast | Event::BackhaulArrived { .. } => None,
+        }
+    }
+}
+
 /// A heap entry: an [`Event`] at a virtual time, with an insertion sequence
 /// number for deterministic tie-breaking.
 #[derive(Clone, Debug)]
@@ -86,12 +113,22 @@ impl PartialOrd for Scheduled {
     }
 }
 
-/// Min-heap event queue over virtual time.
-#[derive(Default)]
+/// Sharded min-heap event queue over virtual time.
+///
+/// [`EventQueue::new`] keeps the classic single-heap layout; the engines
+/// construct [`EventQueue::with_shards`] from the `shards` config key.
+/// Either way the pop order is the total `(time, seq)` order (see the
+/// module docs for why the merge is exact).
 pub struct EventQueue {
-    heap: BinaryHeap<Scheduled>,
+    shards: Vec<BinaryHeap<Scheduled>>,
     next_seq: u64,
     popped: u64,
+}
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        Self::with_shards(1)
+    }
 }
 
 impl EventQueue {
@@ -99,18 +136,63 @@ impl EventQueue {
         Self::default()
     }
 
+    /// A queue of `shards` per-shard heaps (clamped to at least 1). Shard 0
+    /// is the control-plane shard; device events hash over the rest (or
+    /// share shard 0 when `shards == 1`).
+    pub fn with_shards(shards: usize) -> Self {
+        let shards = shards.max(1);
+        EventQueue {
+            shards: (0..shards).map(|_| BinaryHeap::new()).collect(),
+            next_seq: 0,
+            popped: 0,
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard an event lands on: control-plane events on shard 0,
+    /// device events on `1 + device % (shards − 1)`.
+    fn shard_of(&self, event: &Event) -> usize {
+        let n = self.shards.len();
+        match event.device() {
+            Some(device) if n > 1 => 1 + device % (n - 1),
+            _ => 0,
+        }
+    }
+
     /// Schedule `event` at virtual time `time` (seconds). Events at equal
-    /// times pop in scheduling order.
+    /// times pop in scheduling order, regardless of the shard they hash to.
     pub fn push(&mut self, time: f64, event: Event) {
         debug_assert!(time.is_finite(), "event scheduled at non-finite time");
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.heap.push(Scheduled { time, seq, event });
+        let shard = self.shard_of(&event);
+        self.shards[shard].push(Scheduled { time, seq, event });
     }
 
-    /// Pop the earliest event, if any.
+    /// Pop the earliest event across all shards, if any: an O(shards) scan
+    /// of the shard heads for the minimum `(time, seq)` key.
     pub fn pop(&mut self) -> Option<(f64, Event)> {
-        let s = self.heap.pop()?;
+        let mut best: Option<(f64, u64, usize)> = None;
+        for (shard, heap) in self.shards.iter().enumerate() {
+            if let Some(head) = heap.peek() {
+                let better = match best {
+                    None => true,
+                    Some((t, seq, _)) => match head.time.total_cmp(&t) {
+                        Ordering::Less => true,
+                        Ordering::Equal => head.seq < seq,
+                        Ordering::Greater => false,
+                    },
+                };
+                if better {
+                    best = Some((head.time, head.seq, shard));
+                }
+            }
+        }
+        let (_, _, shard) = best?;
+        let s = self.shards[shard].pop().expect("peeked head vanished");
         self.popped += 1;
         Some((s.time, s.event))
     }
@@ -188,5 +270,68 @@ mod tests {
         q.push(3.0, Event::ComputeDone { device: 0 });
         assert_eq!(q.pop().unwrap().1, Event::FadingTick);
         assert_eq!(q.pop().unwrap().1, Event::ComputeDone { device: 0 });
+    }
+
+    /// The tentpole contract: any shard count replays the single-heap total
+    /// order exactly, on an adversarial interleaving of pushes and pops with
+    /// heavy time collisions across many devices.
+    #[test]
+    fn any_shard_count_matches_single_heap_order() {
+        let trace = |shards: usize| {
+            let mut q = EventQueue::with_shards(shards);
+            let mut rng = Rng::new(99);
+            let mut out = Vec::new();
+            for step in 0..500 {
+                // Coarse times force cross-device and cross-kind ties.
+                let t = (rng.index(16) as f64) * 0.25;
+                let dev = rng.index(37);
+                let ev = match step % 7 {
+                    0 => Event::FadingTick,
+                    1 => Event::Broadcast,
+                    2 => Event::BackhaulArrived { zone: dev % 3, flush: step as u64 },
+                    3 => Event::ComputeDone { device: dev },
+                    4 => Event::LayerArrived { device: dev, channel: dev % 2, layer: 0 },
+                    5 => Event::UploadDone { device: dev },
+                    _ => Event::SyncConfirmed { device: dev },
+                };
+                q.push(t, ev);
+                if step % 3 == 0 {
+                    out.push(q.pop().unwrap());
+                }
+            }
+            while let Some(e) = q.pop() {
+                out.push(e);
+            }
+            out
+        };
+        let reference = trace(1);
+        for shards in [2, 3, 8, 64] {
+            let got = trace(shards);
+            assert_eq!(got.len(), reference.len());
+            for (i, (a, b)) in reference.iter().zip(&got).enumerate() {
+                assert_eq!(a.0.to_bits(), b.0.to_bits(), "time at pop {i}, {shards} shards");
+                assert_eq!(a.1, b.1, "event at pop {i}, {shards} shards");
+            }
+        }
+    }
+
+    #[test]
+    fn control_events_ride_shard_zero_and_device_events_hash() {
+        let q = EventQueue::with_shards(4);
+        assert_eq!(q.shard_count(), 4);
+        assert_eq!(q.shard_of(&Event::FadingTick), 0);
+        assert_eq!(q.shard_of(&Event::Broadcast), 0);
+        assert_eq!(q.shard_of(&Event::BackhaulArrived { zone: 2, flush: 1 }), 0);
+        // Device events spread over shards 1..=3, stable per client.
+        assert_eq!(q.shard_of(&Event::ComputeDone { device: 0 }), 1);
+        assert_eq!(q.shard_of(&Event::ComputeDone { device: 1 }), 2);
+        assert_eq!(q.shard_of(&Event::ComputeDone { device: 3 }), 1);
+        assert_eq!(
+            q.shard_of(&Event::UploadDone { device: 5 }),
+            q.shard_of(&Event::SyncConfirmed { device: 5 }),
+        );
+        // Single-shard queue folds everything onto shard 0.
+        let q1 = EventQueue::new();
+        assert_eq!(q1.shard_of(&Event::ComputeDone { device: 9 }), 0);
     }
 }

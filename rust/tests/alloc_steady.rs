@@ -1,0 +1,117 @@
+//! Steady-state allocation accounting for the cohort engine.
+//!
+//! A counting `#[global_allocator]` measures how many heap allocations a
+//! steady-state round performs. Strict zero is not the contract — the
+//! policy still returns a fresh `AllocationPlan` and each compressed
+//! layer owns its output vectors (both cohort-sized; see DESIGN.md
+//! §"Sharded event engine & SoA population" for the exclusion list).
+//! The contract under test is that the per-round allocation count is
+//! *population-independent*: wire buffers, cohort scratch, residual
+//! arenas, and compression scratch are all recycled, so growing the
+//! population 10× must not grow the steady-state allocation rate.
+//!
+//! This file must stay a single-test binary: the counter is global, and
+//! a sibling test allocating concurrently would corrupt the measurement.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use lgc::config::{ExperimentConfig, Mechanism, Workload};
+use lgc::coordinator::{Experiment, NativeLrTrainer};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn cohort_cfg(population: usize, rounds: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        mechanism: Mechanism::LgcStatic,
+        workload: Workload::LrMnist,
+        rounds,
+        devices: 4,
+        samples_per_device: 128,
+        eval_samples: 128,
+        // No eval rounds inside the measured window: eval materializes
+        // fresh trainer state and is an explicit steady-state exclusion.
+        eval_every: rounds + 1,
+        lr: 0.05,
+        h_fixed: 2,
+        h_max: 4,
+        use_runtime: false,
+        population: Some(population),
+        cohort: Some(8),
+        // Single shard / single sweep thread: scoped-thread spawns
+        // allocate, and the measurement wants the serial code path.
+        shards: 1,
+        compute_threads: 1,
+        ..ExperimentConfig::default()
+    }
+}
+
+/// Total allocation count of a seeded cohort-barrier run.
+fn allocs_for_run(population: usize, rounds: usize) -> u64 {
+    let cfg = cohort_cfg(population, rounds);
+    let mut trainer = NativeLrTrainer::new(&cfg);
+    let mut exp = Experiment::new(cfg, &trainer);
+    let before = ALLOCS.load(Ordering::Relaxed);
+    let log = exp.run(&mut trainer).unwrap();
+    let after = ALLOCS.load(Ordering::Relaxed);
+    assert_eq!(log.records.len(), rounds);
+    after - before
+}
+
+/// Marginal per-round allocation count once the run is warm: runs of 4
+/// and 12 rounds share their first 4 rounds bit for bit (same seed), so
+/// the difference isolates 8 steady-state rounds after the buffer pools,
+/// recycled wire buffers, and cohort scratch have reached fixed point.
+fn marginal_allocs_per_round(population: usize) -> u64 {
+    let short = allocs_for_run(population, 4);
+    let long = allocs_for_run(population, 12);
+    assert!(long > short, "longer run must allocate at least as much");
+    (long - short) / 8
+}
+
+/// The zero-alloc steady-state criterion, stated scale-invariantly: the
+/// warm per-round allocation count must not scale with the population.
+/// Every per-client structure a round touches (availability churn sweep,
+/// fading sweep, SoA columns) is either allocation-free or pool-recycled,
+/// so 10× the clients must cost (within slack) the same allocations per
+/// round — only cohort-sized work may allocate.
+#[test]
+fn steady_state_allocations_are_population_independent() {
+    let small = marginal_allocs_per_round(64);
+    let large = marginal_allocs_per_round(640);
+    // Identical cohort size, identical per-round work: the counts should
+    // be near-equal. The slack absorbs hash/Vec growth-pattern jitter
+    // from value-dependent layer sizes, never O(population) terms —
+    // a single per-client allocation per round would add ~576.
+    assert!(
+        large <= small + small / 2 + 64,
+        "steady-state rounds must not allocate per client: \
+         {small} allocs/round at population 64 vs {large} at 640"
+    );
+}

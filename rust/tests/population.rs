@@ -173,10 +173,12 @@ fn materialized_devices_bounded_by_cohort_at_100k_clients() {
     let sampled_max = 3 * 64usize;
     let mut with_residual = 0usize;
     for id in 0..pop.len() {
-        let r = &pop.spec(id).residual;
-        if !r.is_empty() {
+        if !pop.residual_is_empty(id) {
             with_residual += 1;
-            assert!(r.bytes() <= 2 * 4 * 7850, "residual beyond compact bound");
+            assert!(
+                pop.residual_bytes_of(id) <= 2 * 4 * 7850,
+                "residual beyond compact bound"
+            );
         }
     }
     assert!(with_residual <= sampled_max, "{with_residual} residuals");
@@ -422,15 +424,14 @@ fn cohort_downlink_charges_broadcasts_and_persists_sync_state() {
     }
     let pop = exp.population.as_ref().unwrap();
     for id in 0..pop.len() {
-        let spec = pop.spec(id);
-        assert!(spec.meter.down_energy_used > 0.0, "client {id}");
-        assert_eq!(spec.sync_state.synced_round, 7, "client {id}");
-        assert_eq!(spec.sync_state.pending_layers, 0, "client {id}");
+        assert!(pop.meter(id).down_energy_used > 0.0, "client {id}");
+        assert_eq!(pop.sync_state(id).synced_round, 7, "client {id}");
+        assert_eq!(pop.sync_state(id).pending_layers, 0, "client {id}");
     }
     // Free-broadcast run under the same budget lasts at least as long.
     let mut tight = full_participation_cfg(Mechanism::LgcStatic, 40, 42);
     tight.downlink = Some(true);
-    tight.energy_budget = pop.spec(0).meter.energy_used * 1.5;
+    tight.energy_budget = pop.meter(0).energy_used * 1.5;
     let (short, _) = population_run(tight.clone());
     let mut free = tight;
     free.downlink = Some(false);

@@ -1,0 +1,161 @@
+//! Sharded-engine equivalence suite: the event queue's shard count is a
+//! pure performance knob. For every engine (barrier, semi-async, and the
+//! population cohort variants) and for the LgcStatic / Qsgd / LgcDrl
+//! presets, runs with `shards ∈ {1, 2, 8, 0 (auto)}` must be bitwise
+//! identical — the per-shard heaps merge on the global `(time, seq)`
+//! order, so shard routing can never reorder two events.
+//!
+//! See DESIGN.md §"Sharded event engine & SoA population".
+
+use lgc::config::{ExperimentConfig, Mechanism, Workload};
+use lgc::coordinator::{Experiment, NativeLrTrainer};
+use lgc::metrics::RunLog;
+use lgc::sim::SyncMode;
+
+fn base_cfg(mechanism: Mechanism, rounds: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        mechanism,
+        workload: Workload::LrMnist,
+        rounds,
+        devices: 3,
+        samples_per_device: 256,
+        eval_samples: 256,
+        eval_every: 3,
+        lr: 0.05,
+        h_fixed: 2,
+        h_max: 4,
+        use_runtime: false,
+        ..ExperimentConfig::default()
+    }
+}
+
+fn run_log(cfg: ExperimentConfig) -> RunLog {
+    let mut trainer = NativeLrTrainer::new(&cfg);
+    let mut exp = Experiment::new(cfg, &trainer);
+    exp.run(&mut trainer).unwrap()
+}
+
+fn assert_logs_bitwise_equal(a: &RunLog, b: &RunLog, label: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{label}: record counts");
+    for (x, y) in a.records.iter().zip(&b.records) {
+        let r = x.round;
+        assert_eq!(x.round, y.round, "{label} round {r}");
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{label} loss round {r}");
+        assert_eq!(x.bytes_up, y.bytes_up, "{label} bytes round {r}");
+        assert_eq!(
+            x.round_time_s.to_bits(),
+            y.round_time_s.to_bits(),
+            "{label} round_time round {r}"
+        );
+        assert_eq!(
+            x.total_time_s.to_bits(),
+            y.total_time_s.to_bits(),
+            "{label} total_time round {r}"
+        );
+        assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits(), "{label} energy round {r}");
+        assert_eq!(x.money.to_bits(), y.money.to_bits(), "{label} money round {r}");
+        if x.eval_acc.is_nan() || y.eval_acc.is_nan() {
+            assert_eq!(x.eval_acc.is_nan(), y.eval_acc.is_nan(), "{label} eval round {r}");
+        } else {
+            assert_eq!(x.eval_acc.to_bits(), y.eval_acc.to_bits(), "{label} acc round {r}");
+        }
+        assert_eq!(x.stale_updates, y.stale_updates, "{label} stale round {r}");
+        assert_eq!(x.sampled, y.sampled, "{label} sampled round {r}");
+        assert_eq!(x.completed, y.completed, "{label} completed round {r}");
+        assert_eq!(
+            x.dropped_offline, y.dropped_offline,
+            "{label} dropped_offline round {r}"
+        );
+        assert_eq!(x.down_bytes, y.down_bytes, "{label} down_bytes round {r}");
+    }
+}
+
+/// Shard counts to sweep against the `shards = 1` baseline; `0` resolves
+/// to one shard per core, so the auto path is covered on any CI box.
+const SHARD_SWEEP: [usize; 3] = [2, 8, 0];
+
+const PRESETS: [Mechanism; 3] = [Mechanism::LgcStatic, Mechanism::Qsgd, Mechanism::LgcDrl];
+
+/// Permanent-fleet engines: barrier and semi-async runs replay bitwise
+/// for every shard count and preset.
+#[test]
+fn shard_count_is_invisible_for_barrier_and_semi_async() {
+    for mech in PRESETS {
+        for (mode, mode_name) in [
+            (None, "barrier"),
+            (Some(SyncMode::SemiAsync { buffer_k: 2 }), "semi-async"),
+        ] {
+            let mk = |shards: usize| {
+                let mut cfg = base_cfg(mech, 6);
+                cfg.shards = shards;
+                cfg.sync_mode = mode;
+                cfg
+            };
+            let baseline = run_log(mk(1));
+            assert_eq!(baseline.records.len(), 6);
+            for shards in SHARD_SWEEP {
+                let swept = run_log(mk(shards));
+                assert_logs_bitwise_equal(
+                    &baseline,
+                    &swept,
+                    &format!("{} {mode_name} shards={shards}", mech.name()),
+                );
+            }
+        }
+    }
+}
+
+/// Population cohort engines (the SoA store + sharded queue together):
+/// cohort-barrier and cohort-semi-async runs with availability churn
+/// replay bitwise for every shard count and preset. Churn draws live in
+/// per-client private RNG streams, so neither the shard routing nor the
+/// sweep thread count can touch them.
+#[test]
+fn shard_count_is_invisible_for_cohort_engines() {
+    for mech in PRESETS {
+        for (mode, mode_name) in [
+            (None, "cohort-barrier"),
+            (Some(SyncMode::SemiAsync { buffer_k: 2 }), "cohort-semi-async"),
+        ] {
+            let mk = |shards: usize| {
+                let mut cfg = base_cfg(mech, 6);
+                cfg.population = Some(12);
+                cfg.cohort = Some(4);
+                cfg.churn_down = 0.2;
+                cfg.churn_up = 0.5;
+                cfg.shards = shards;
+                cfg.sync_mode = mode;
+                cfg
+            };
+            let baseline = run_log(mk(1));
+            assert_eq!(baseline.records.len(), 6);
+            for shards in SHARD_SWEEP {
+                let swept = run_log(mk(shards));
+                assert_logs_bitwise_equal(
+                    &baseline,
+                    &swept,
+                    &format!("{} {mode_name} shards={shards}", mech.name()),
+                );
+            }
+        }
+    }
+}
+
+/// The cohort memory bound survives the SoA refactor: a churning
+/// population run materializes at most `cohort` devices at any instant,
+/// and the pooled compressor boxes stay bounded by the cohort too.
+#[test]
+fn cohort_memory_bound_holds_under_churn() {
+    let mut cfg = base_cfg(Mechanism::LgcStatic, 10);
+    cfg.population = Some(24);
+    cfg.cohort = Some(4);
+    cfg.churn_down = 0.2;
+    cfg.churn_up = 0.5;
+    let mut trainer = NativeLrTrainer::new(&cfg);
+    let mut exp = Experiment::new(cfg, &trainer);
+    let log = exp.run(&mut trainer).unwrap();
+    assert_eq!(log.records.len(), 10);
+    let pop = exp.population.as_ref().unwrap();
+    assert!(pop.peak_materialized() <= 4, "peak {}", pop.peak_materialized());
+    assert!(pop.pooled_boxes() <= 4, "pooled boxes {}", pop.pooled_boxes());
+}
