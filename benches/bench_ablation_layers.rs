@@ -2,7 +2,7 @@
 //! coordinate budget, sweeping the budget — the design choice at the heart
 //! of the paper (one layer per channel, Eq. 2).
 
-use lgc::bench::Table;
+use lgc::bench::{JsonSink, Table};
 use lgc::config::{ExperimentConfig, Mechanism, Workload};
 use lgc::coordinator::{Experiment, NativeLrTrainer};
 
@@ -31,6 +31,9 @@ fn run(mech: Mechanism, fracs: Vec<f64>) -> anyhow::Result<(f64, f64, f64, f64)>
 
 fn main() -> anyhow::Result<()> {
     println!("== A1: layered (3-channel) vs single-channel top-k, equal budget ==\n");
+    // `--json` pins the whole ablation grid: every cell is a seeded
+    // simulation output, so the rows diff under the exact `sim_s` policy.
+    let mut json = JsonSink::from_args("ablation_layers");
     let mut table = Table::new(&[
         "total budget",
         "variant",
@@ -40,8 +43,12 @@ fn main() -> anyhow::Result<()> {
         "sim time (s)",
     ]);
     for &budget in &[0.02f64, 0.05, 0.10, 0.20, 0.40] {
+        let pct = (budget * 100.0).round() as u32;
         let layered = vec![budget * 0.05, budget * 0.20, budget * 0.75];
         let (acc, e, m, t) = run(Mechanism::LgcStatic, layered)?;
+        for (metric, v) in [("acc", acc), ("energy_j", e), ("money", m), ("sim_time_s", t)] {
+            json.push(&format!("b{pct}pct/lgc_layered/{metric}"), v, "sim_s");
+        }
         table.row(&[
             format!("{:.0}%", budget * 100.0),
             "LGC layered".into(),
@@ -51,6 +58,9 @@ fn main() -> anyhow::Result<()> {
             format!("{t:.1}"),
         ]);
         let (acc, e, m, t) = run(Mechanism::TopK, vec![budget])?;
+        for (metric, v) in [("acc", acc), ("energy_j", e), ("money", m), ("sim_time_s", t)] {
+            json.push(&format!("b{pct}pct/topk/{metric}"), v, "sim_s");
+        }
         table.row(&[
             format!("{:.0}%", budget * 100.0),
             "single-ch topk".into(),
@@ -61,6 +71,7 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     table.print();
+    json.finish();
     println!(
         "\nexpected shape: equal accuracy at equal budget; layered LGC pays\n\
          less energy/money (bulk rides the cheap channel), single-channel\n\

@@ -1,12 +1,16 @@
 //! Table 1 + channel-simulator microbench: prints the energy table, verifies
 //! sampled means, and times the hot channel-simulation operations.
+//! `--json` emits `BENCH_channels.json`: the sampled Table-1 means as
+//! deterministic `sim_s` rows (seeded Rng → exact across hosts) and the
+//! micro-bench timings as banded throughput rows.
 
-use lgc::bench::{bench_auto, Table};
+use lgc::bench::{bench_auto, JsonSink, Table};
 use lgc::channels::{ChannelType, DeviceChannels, Link};
 use lgc::metrics::columns;
 use lgc::util::Rng;
 
 fn main() {
+    let mut json = JsonSink::from_args("channels");
     println!("== Table 1: energy consumption per communication channel ==\n");
     let mut table = Table::new(&[
         "Channel Type",
@@ -22,6 +26,7 @@ fn main() {
         let n = 20_000;
         let mb = 1024 * 1024;
         let mean = (0..n).map(|_| link.transfer(mb).energy_j).sum::<f64>() / n as f64;
+        json.push(&format!("table1/{}/sampled_j_per_mb", ty.name()), mean, "sim_s");
         table.row(&[
             ty.name().to_string(),
             format!("{:.1}", ty.energy_mean_j_per_mb()),
@@ -44,16 +49,20 @@ fn main() {
         std::hint::black_box(ch.parallel_upload(&[1 << 20, 1 << 20, 1 << 20]));
     });
     r.report("");
+    // iters/s (not us): the drops-only diff band then fails on slowdowns.
+    json.push("micro/parallel_upload_iters_per_s", 1e9 / r.mean_ns.max(1.0), "iters/s");
     let mut ch2 = ch.clone();
     let r = bench_auto("fading step_round (3 links)", 50.0, || {
         ch2.step_round();
     });
     r.report("");
+    json.push("micro/step_round_iters_per_s", 1e9 / r.mean_ns.max(1.0), "iters/s");
     let link = ch.links[0].clone();
     let r = bench_auto("expected_cost", 50.0, || {
         std::hint::black_box(link.expected_cost(1 << 20));
     });
     r.report("");
+    json.push("micro/expected_cost_iters_per_s", 1e9 / r.mean_ns.max(1.0), "iters/s");
 
     // The canonical per-round CSV schema, from the single source of truth
     // (`metrics::columns`) the writer and tests share — printed here so a
@@ -63,4 +72,5 @@ fn main() {
         columns::ROUND.contains(&"finish_p50_s") && columns::ROUND.contains(&"down_bytes"),
         "columns list lost a known field"
     );
+    json.finish();
 }

@@ -1,0 +1,145 @@
+//! Kernel micro-bench: the seed's scalar loops vs. the blocked kernels on
+//! the train / compress / aggregate hot path.
+//!
+//! ```bash
+//! cargo bench --bench bench_kernels -- --json [--quick]
+//! ```
+//!
+//! Every case times the scalar reference (`kernels::reference`, the exact
+//! loops the kernels replaced) and the blocked kernel on identical inputs,
+//! then reports the speedup. `--quick` shrinks the timing targets for CI.
+//! JSON rows land in `BENCH_kernels.json` and diff against
+//! `BENCH_BASELINE.json`: timing and ratio rows get the drops-only band,
+//! so a kernel performance regression fails the gate while host jitter
+//! does not. The scatter and streaming-accumulate rows are parity checks —
+//! those kernels centralize the loop for determinism, not speed — while
+//! the fused LR forward/backward row is the headline (target: ≥2× over
+//! the seed's skip-branch loop on ~50%-dense generator images).
+
+use std::hint::black_box;
+
+use lgc::bench::{bench_auto, BenchResult, JsonSink, Table};
+use lgc::compression::{Layer, LgcUpdate};
+use lgc::coordinator::{Aggregator, MeanAggregator};
+use lgc::data::MnistGen;
+use lgc::kernels;
+use lgc::models::{NativeLr, LR_PARAMS};
+use lgc::util::Rng;
+
+/// Aggregator / population scale: ~1M coordinates.
+const BIG: usize = 1 << 20;
+
+fn duel(
+    json: &mut JsonSink,
+    table: &mut Table,
+    slug: &str,
+    scalar: &BenchResult,
+    kernel: &BenchResult,
+) {
+    let speedup = scalar.mean_ns / kernel.mean_ns.max(1.0);
+    // Throughput-style rows (iterations/s) so the drops-only diff band
+    // points the right way: getting slower fails, getting faster blesses.
+    json.push(&format!("{slug}/scalar_iters_per_s"), 1e9 / scalar.mean_ns.max(1.0), "iters/s");
+    json.push(&format!("{slug}/kernel_iters_per_s"), 1e9 / kernel.mean_ns.max(1.0), "iters/s");
+    json.push(&format!("{slug}/speedup"), speedup, "ratio");
+    table.row(&[
+        slug.to_string(),
+        format!("{:.2}", scalar.mean_us()),
+        format!("{:.2}", kernel.mean_us()),
+        format!("{speedup:.2}x"),
+    ]);
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let target_ms = if quick { 6.0 } else { 40.0 };
+    let mut json = JsonSink::from_args("kernels");
+    let mut table = Table::new(&["case", "scalar us", "kernel us", "speedup"]);
+    let mut rng = Rng::new(23);
+
+    // Fused LR forward/backward: the training hot loop, real generator
+    // images (~50% zero pixels — the regime where the seed's skip branch
+    // looked attractive and the branch-free 4-bank GEMV must still win).
+    let data = MnistGen::new(11).dataset(0, 32);
+    let params: Vec<f32> = (0..LR_PARAMS).map(|_| rng.normal() as f32 * 0.05).collect();
+    let model = NativeLr::new();
+    let mut grad = vec![0f32; LR_PARAMS];
+    let scalar = bench_auto("lr fwd/bwd scalar (skip-branch)", target_ms, || {
+        black_box(model.loss_grad_reference(&params, &data.x, &data.y, &mut grad));
+    });
+    let kernel = bench_auto("lr fwd/bwd blocked (4-bank gemv)", target_ms, || {
+        black_box(model.loss_grad(&params, &data.x, &data.y, &mut grad));
+    });
+    duel(&mut json, &mut table, "lr_fwd_bwd/b32", &scalar, &kernel);
+
+    // Dot product at model dim and aggregator dim.
+    for (slug, n) in [("dot/7850", LR_PARAMS), ("dot/1m", BIG)] {
+        let a: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let scalar = bench_auto(&format!("dot scalar n={n}"), target_ms, || {
+            black_box(kernels::reference::dot(&a, &b));
+        });
+        let kernel = bench_auto(&format!("dot 8-lane n={n}"), target_ms, || {
+            black_box(kernels::dot(&a, &b));
+        });
+        duel(&mut json, &mut table, slug, &scalar, &kernel);
+    }
+
+    // Sparse scatter-add: residual-arena / EF / delta-apply shape (1M
+    // dense target, ~105k nonzeros). Parity check, not a speedup claim.
+    let indices: Vec<u32> = (0..BIG as u32).step_by(10).collect();
+    let values: Vec<f32> = indices.iter().map(|_| rng.normal() as f32).collect();
+    let mut out = vec![0f32; BIG];
+    let scalar = bench_auto("scatter-add inline", target_ms, || {
+        for (&i, &v) in indices.iter().zip(&values) {
+            out[i as usize] += 0.25 * v;
+        }
+        black_box(out[0]);
+    });
+    let kernel = bench_auto("scatter-add kernel", target_ms, || {
+        kernels::scatter_add(&mut out, &indices, &values, 0.25);
+        black_box(out[0]);
+    });
+    duel(&mut json, &mut table, "scatter_add/1m_nnz105k", &scalar, &kernel);
+
+    // Streaming aggregation: one layered upload folded into a 1M-dim
+    // accumulator through MeanAggregator (the server's streaming path).
+    let third = indices.len().div_ceil(3);
+    let layers: Vec<Layer> = indices
+        .chunks(third)
+        .zip(values.chunks(third))
+        .map(|(i, v)| Layer { indices: i.to_vec(), values: v.to_vec() })
+        .collect();
+    let upd = LgcUpdate { dim: BIG, layers };
+    let mut acc = vec![0f32; BIG];
+    let mut agg = MeanAggregator;
+    let scalar = bench_auto("stream-accumulate inline", target_ms, || {
+        for layer in &upd.layers {
+            for (&i, &v) in layer.indices.iter().zip(&layer.values) {
+                acc[i as usize] += v;
+            }
+        }
+        black_box(acc[0]);
+    });
+    let kernel = bench_auto("stream-accumulate kernel", target_ms, || {
+        agg.stream_accumulate(&upd, 1.0, &mut acc);
+        black_box(acc[0]);
+    });
+    duel(&mut json, &mut table, "stream_accumulate/1m", &scalar, &kernel);
+
+    // Chunked parallel norm: sequential baseline vs. auto thread count
+    // (bit-identical results; the win is wall-clock only).
+    let v: Vec<f32> = (0..BIG).map(|_| rng.normal() as f32 * 0.01).collect();
+    let scalar = bench_auto("par_norm2 t=1", target_ms, || {
+        black_box(kernels::reduce::par_norm2(&v, 1));
+    });
+    let kernel = bench_auto("par_norm2 t=auto", target_ms, || {
+        black_box(kernels::reduce::par_norm2(&v, 0));
+    });
+    duel(&mut json, &mut table, "par_norm2/1m_t1_vs_auto", &scalar, &kernel);
+
+    let tag = if quick { " (quick)" } else { "" };
+    println!("== blocked kernels vs scalar reference{tag} ==\n");
+    table.print();
+    json.finish();
+}

@@ -3,7 +3,7 @@
 //! (monotone in H, anti-monotone in gamma, decaying in T) and that it
 //! dominates the measurement.
 
-use lgc::bench::Table;
+use lgc::bench::{JsonSink, Table};
 use lgc::compression::{lgc_compress, CompressScratch, ErrorFeedback};
 use lgc::theory::BoundParams;
 use lgc::util::Rng;
@@ -76,10 +76,15 @@ fn run_quadratic(dim: usize, m: usize, h: usize, k: usize, t_rounds: usize) -> (
 
 fn main() {
     println!("== A3: Theorem-1 bound vs measured gap (federated quadratic, M=3, D=64) ==\n");
+    // `--json` pins the sweep: gap and bound are seeded, pure-arithmetic
+    // outputs, so they diff under the exact `sim_s` policy.
+    let mut json = JsonSink::from_args("theory");
     let mut table = Table::new(&["H", "gamma", "T", "measured gap", "Eq.6 bound", "bound/gap"]);
     for &(h, k) in &[(1usize, 16usize), (1, 32), (2, 8), (2, 32), (4, 16), (4, 32)] {
         for &t in &[500usize, 2000] {
             let (gap, bound) = run_quadratic(64, 3, h, k, t);
+            json.push(&format!("h{h}/k{k}/t{t}/gap"), gap, "sim_s");
+            json.push(&format!("h{h}/k{k}/t{t}/bound"), bound, "sim_s");
             table.row(&[
                 h.to_string(),
                 format!("{:.3}", k as f64 / 64.0),
@@ -92,6 +97,7 @@ fn main() {
         }
     }
     table.print();
+    json.finish();
     println!("\nbound dominates every measurement; gap decays in T, grows in H,");
     println!("shrinks as gamma -> 1 (lighter compression) — the Corollary-1 shape.");
 }

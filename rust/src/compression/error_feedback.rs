@@ -44,7 +44,10 @@ impl ErrorFeedback {
     pub fn compensate(&self, progress: &[f32], u_buf: &mut Vec<f32>) {
         assert_eq!(progress.len(), self.e.len());
         u_buf.clear();
-        u_buf.extend(self.e.iter().zip(progress).map(|(&e, &p)| e + p));
+        u_buf.extend_from_slice(&self.e);
+        // u = e + progress via the blocked add — bitwise-identical to the
+        // old zipped `e + p` extend.
+        crate::kernels::add_assign(u_buf, progress);
     }
 
     /// Absorb what the compressor dropped (line 11): `e' = u − decode(g)`,
@@ -54,9 +57,7 @@ impl ErrorFeedback {
         assert_eq!(shipped.dim, self.e.len());
         self.e.copy_from_slice(u);
         for layer in &shipped.layers {
-            for &i in &layer.indices {
-                self.e[i as usize] = 0.0;
-            }
+            crate::kernels::scatter_zero(&mut self.e, &layer.indices);
         }
     }
 
@@ -70,9 +71,7 @@ impl ErrorFeedback {
         assert_eq!(shipped.dim, self.e.len());
         self.e.copy_from_slice(u);
         for layer in &shipped.layers {
-            for (&i, &v) in layer.indices.iter().zip(&layer.values) {
-                self.e[i as usize] -= v;
-            }
+            crate::kernels::scatter_sub(&mut self.e, &layer.indices, &layer.values);
         }
     }
 
@@ -112,7 +111,7 @@ impl ErrorFeedback {
 
     /// Reset (e.g., FedAvg has no memory).
     pub fn reset(&mut self) {
-        self.e.iter_mut().for_each(|x| *x = 0.0);
+        crate::kernels::fill(&mut self.e, 0.0);
     }
 }
 

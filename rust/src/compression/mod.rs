@@ -66,13 +66,13 @@ impl LgcUpdate {
         out
     }
 
-    /// Accumulate `scale * decode(self)` into `out` without allocating.
+    /// Accumulate `scale * decode(self)` into `out` without allocating —
+    /// the streaming-aggregation hot path, on the sparse scatter kernel
+    /// (bitwise-identical to the old inline loop).
     pub fn add_into(&self, out: &mut [f32], scale: f32) {
         assert_eq!(out.len(), self.dim);
         for layer in &self.layers {
-            for (&i, &v) in layer.indices.iter().zip(&layer.values) {
-                out[i as usize] += scale * v;
-            }
+            crate::kernels::scatter_add(out, &layer.indices, &layer.values, scale);
         }
     }
 }

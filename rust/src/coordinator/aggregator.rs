@@ -70,7 +70,7 @@ impl Aggregator for MeanAggregator {
     }
 
     fn aggregate(&mut self, uploads: &[&LgcUpdate], out: &mut [f32]) {
-        out.iter_mut().for_each(|x| *x = 0.0);
+        crate::kernels::fill(out, 0.0);
         let scale = 1.0 / uploads.len() as f32;
         for upd in uploads {
             upd.add_into(out, scale);
@@ -90,7 +90,7 @@ impl Aggregator for MeanAggregator {
 
     fn stream_finalize(&mut self, acc: &mut [f32], uploads: usize, _weight_sum: f64) {
         let scale = 1.0 / uploads.max(1) as f32;
-        acc.iter_mut().for_each(|x| *x *= scale);
+        crate::kernels::scale(scale, acc);
     }
 }
 
@@ -122,7 +122,7 @@ impl Aggregator for WeightedBySamples {
     }
 
     fn aggregate(&mut self, uploads: &[&LgcUpdate], out: &mut [f32]) {
-        out.iter_mut().for_each(|x| *x = 0.0);
+        crate::kernels::fill(out, 0.0);
         let total: f64 = self.round_weights.iter().sum();
         let announced = self.round_weights.len() == uploads.len()
             && self.round_weights.iter().all(|&w| w >= 0.0 && w.is_finite());
@@ -168,7 +168,7 @@ impl Aggregator for WeightedBySamples {
             // this only matters for NaN/inf hygiene).
             1.0 / uploads.max(1) as f32
         };
-        acc.iter_mut().for_each(|x| *x *= scale);
+        crate::kernels::scale(scale, acc);
     }
 }
 

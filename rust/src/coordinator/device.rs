@@ -254,13 +254,11 @@ impl Device {
         if plan.is_silent() {
             return LgcUpdate { dim, layers: Vec::new() };
         }
+        // progress = w_sync − ŵ via the blocked subtract — bitwise
+        // identical to the old zipped `w - wh` extend.
         self.progress_buf.clear();
-        self.progress_buf.extend(
-            self.params_sync
-                .iter()
-                .zip(&self.params_hat)
-                .map(|(&w, &wh)| w - wh),
-        );
+        self.progress_buf.extend_from_slice(&self.params_sync);
+        crate::kernels::sub_assign(&mut self.progress_buf, &self.params_hat);
         let budget = LayerBudget::from_plan(plan, dim);
         self.compressor
             .compress(&self.progress_buf, &budget, &mut self.scratch)

@@ -261,9 +261,9 @@ fn lr_local_step(
     sampler.next_batch(batch, idx_buf);
     train.gather(idx_buf, xb, yb);
     let loss = model.loss_grad(params, xb, yb, grad_buf);
-    for (p, &g) in params.iter_mut().zip(grad_buf.iter()) {
-        *p -= lr * g;
-    }
+    // p += (-lr)·g via the blocked axpy — bitwise-identical to the old
+    // `p -= lr * g` loop ((-lr)·g == -(lr·g) and a + (-b) == a - b exactly).
+    crate::kernels::axpy(-lr, grad_buf, params);
     loss
 }
 
@@ -422,19 +422,29 @@ impl LocalTrainer for NativeLrTrainer {
         self.data.device_samples(device)
     }
 
+    /// Allocation-free eval: walks the held-out set as borrowed slices
+    /// straight into the shared forward kernel — no per-batch `Vec` clones
+    /// like the generic [`WorkloadData::eval_batches`] path (which the
+    /// PJRT trainer keeps for its buffer-upload ABI). Batch boundaries and
+    /// accumulation order are identical, so results are bitwise-unchanged;
+    /// `tests/alloc_steady.rs` pins the zero-allocation claim.
     fn eval(&mut self, params: &[f32]) -> Result<(f64, f64)> {
+        let WorkloadData::Mnist { eval_x, eval_y, batch, train, .. } = &self.data else {
+            unreachable!("NativeLrTrainer only supports the LR workload")
+        };
+        let batch = *batch;
+        let feat = train.features;
+        let nb = eval_y.len() / batch;
         let mut loss_sum = 0.0;
         let mut correct = 0.0;
         let mut n = 0usize;
-        for (x, y, npos) in self.data.eval_batches() {
-            let x = match x {
-                BatchX::F32(v) => v,
-                _ => unreachable!(),
-            };
-            let (ls, c) = self.model.eval(params, &x, &y);
+        for i in 0..nb {
+            let x = &eval_x[i * batch * feat..(i + 1) * batch * feat];
+            let y = &eval_y[i * batch..(i + 1) * batch];
+            let (ls, c) = self.model.eval(params, x, y);
             loss_sum += ls;
             correct += c;
-            n += npos;
+            n += batch;
         }
         anyhow::ensure!(n > 0, "empty eval set");
         Ok((loss_sum / n as f64, correct / n as f64))

@@ -129,9 +129,7 @@ pub fn decode_frame(b: &[u8], out: &mut Layer) -> Result<FrameHeader, FrameError
 /// invariant under late-arriving enhancement layers (the error-feedback
 /// path never double-counts).
 pub fn apply_delta(params: &mut [f32], layer: &Layer) {
-    for (&i, &v) in layer.indices.iter().zip(&layer.values) {
-        params[i as usize] += v;
-    }
+    crate::kernels::scatter_add_unit(params, &layer.indices, &layer.values);
 }
 
 #[cfg(test)]

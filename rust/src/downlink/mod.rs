@@ -326,9 +326,11 @@ impl Downlink {
         );
         let mirror = &self.mirrors[id];
         assert_eq!(mirror.len(), global.len(), "mirror dim mismatch");
+        // delta = global − mirror via the blocked subtract — bitwise
+        // identical to the old zipped `g - m` extend.
         self.delta_buf.clear();
-        self.delta_buf
-            .extend(global.iter().zip(mirror).map(|(&g, &m)| g - m));
+        self.delta_buf.extend_from_slice(global);
+        crate::kernels::sub_assign(&mut self.delta_buf, mirror);
         let dim = global.len();
         let update = match self.compression {
             DownlinkCompression::Dense => {
@@ -410,9 +412,7 @@ impl Downlink {
         // contains whatever this broadcast left out.
         let mirror = &mut self.mirrors[id];
         for layer in &update.layers {
-            for (&i, &v) in layer.indices.iter().zip(&layer.values) {
-                mirror[i as usize] += v;
-            }
+            crate::kernels::scatter_add_unit(mirror, &layer.indices, &layer.values);
         }
         // Byte accounting matches the frame encoding per layer.
         let sizes: Vec<u64> = match self.compression {

@@ -49,18 +49,14 @@ impl Adam {
         }
     }
 
+    /// The per-coordinate update lives in [`crate::kernels::adam_step`]
+    /// (same expression, bitwise-identical — hoisted so it vectorizes).
     #[allow(clippy::too_many_arguments)]
     fn step_tensor(
         p: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32],
         lr: f32, beta1: f32, beta2: f32, eps: f32, b1t: f32, b2t: f32,
     ) {
-        for i in 0..p.len() {
-            m[i] = beta1 * m[i] + (1.0 - beta1) * g[i];
-            v[i] = beta2 * v[i] + (1.0 - beta2) * g[i] * g[i];
-            let mhat = m[i] / b1t;
-            let vhat = v[i] / b2t;
-            p[i] -= lr * mhat / (vhat.sqrt() + eps);
-        }
+        crate::kernels::adam_step(p, g, m, v, lr, beta1, beta2, eps, b1t, b2t);
     }
 }
 

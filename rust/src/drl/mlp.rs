@@ -2,10 +2,13 @@
 //!
 //! No autograd crate exists offline, so forward/backward are hand-written
 //! and verified against finite differences in the tests. Shapes are tiny
-//! (state/action dims < 16, hidden <= 128), so plain row-major loops are
-//! fast enough; the perf pass pins batch scratch buffers to avoid
-//! allocation in the training loop.
+//! (state/action dims < 16, hidden <= 128); the inner loops run on the
+//! blocked kernels from [`crate::kernels`] — the forward `dot` is the
+//! 8-lane reduction (reassociated, deterministic), while backward,
+//! soft-update and grad scaling are per-coordinate kernels and stay
+//! bitwise-identical to the plain loops they replaced.
 
+use crate::kernels;
 use crate::util::Rng;
 
 /// Activation for a layer's output.
@@ -99,9 +102,7 @@ impl Grads {
 
     pub fn scale(&mut self, a: f32) {
         for g in self.dw.iter_mut().chain(self.db.iter_mut()) {
-            for x in g.iter_mut() {
-                *x *= a;
-            }
+            kernels::scale(a, g);
         }
     }
 }
@@ -147,10 +148,7 @@ impl Mlp {
                 let orow = &mut out[bi * layer.out_dim..(bi + 1) * layer.out_dim];
                 for (o, orow_o) in orow.iter_mut().enumerate() {
                     let wrow = &layer.w[o * layer.in_dim..(o + 1) * layer.in_dim];
-                    let mut z = layer.b[o];
-                    for (wi, xi) in wrow.iter().zip(xrow) {
-                        z += wi * xi;
-                    }
+                    let z = layer.b[o] + kernels::dot(wrow, xrow);
                     *orow_o = layer.act.apply(z);
                 }
             }
@@ -190,10 +188,11 @@ impl Mlp {
                     db[o] += dz;
                     let wrow = &layer.w[o * layer.in_dim..(o + 1) * layer.in_dim];
                     let dwrow = &mut dw[o * layer.in_dim..(o + 1) * layer.in_dim];
-                    for i in 0..layer.in_dim {
-                        dwrow[i] += dz * xrow[i];
-                        dxrow[i] += dz * wrow[i];
-                    }
+                    // Two per-coordinate axpys — bitwise-identical to the
+                    // old fused loop (each output coordinate sees the same
+                    // op sequence).
+                    kernels::axpy(dz, xrow, dwrow);
+                    kernels::axpy(dz, wrow, dxrow);
                 }
             }
             delta = dx;
@@ -204,12 +203,8 @@ impl Mlp {
     /// Soft update toward `src`: θ ← (1−τ)θ + τ·θ_src (DDPG target nets).
     pub fn soft_update_from(&mut self, src: &Mlp, tau: f32) {
         for (dst, s) in self.layers.iter_mut().zip(&src.layers) {
-            for (d, &x) in dst.w.iter_mut().zip(&s.w) {
-                *d = (1.0 - tau) * *d + tau * x;
-            }
-            for (d, &x) in dst.b.iter_mut().zip(&s.b) {
-                *d = (1.0 - tau) * *d + tau * x;
-            }
+            kernels::scale_add(1.0 - tau, &mut dst.w, tau, &s.w);
+            kernels::scale_add(1.0 - tau, &mut dst.b, tau, &s.b);
         }
     }
 }

@@ -424,8 +424,10 @@ impl Edge {
     }
 
     /// Two-level fold of a held set: `(sum_i w_i·u_i, sum_i w_i, n)` —
-    /// the streaming-aggregator accumulate step run at the edge. The
-    /// composition test pins edge-partial-then-cloud-finalize ≡ flat.
+    /// the streaming-aggregator accumulate step run at the edge, on the
+    /// sparse scatter kernel via [`crate::compression::LgcUpdate::add_into`]
+    /// (bitwise-identical per coordinate). The composition test pins
+    /// edge-partial-then-cloud-finalize ≡ flat.
     pub fn fold_partial(held: &[HeldContribution], dim: usize) -> (Vec<f32>, f64, usize) {
         let mut acc = vec![0f32; dim];
         let mut wsum = 0f64;

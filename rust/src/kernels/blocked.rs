@@ -1,0 +1,190 @@
+//! Dense blocked kernels over contiguous f32 slices.
+//!
+//! Per-coordinate kernels (everything except [`dot`]) are bitwise-identical
+//! to the naive scalar loop: blocking only removes bounds checks and lets
+//! LLVM vectorize; the arithmetic per output coordinate is unchanged.
+//! [`dot`] is a reduction and reassociates — see the module docs in
+//! [`crate::kernels`].
+
+use super::LANES;
+
+/// `y[i] += a * x[i]`.
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() - x.len() % LANES;
+    for (yc, xc) in y[..n].chunks_exact_mut(LANES).zip(x[..n].chunks_exact(LANES)) {
+        for l in 0..LANES {
+            yc[l] += a * xc[l];
+        }
+    }
+    for (yi, &xi) in y[n..].iter_mut().zip(&x[n..]) {
+        *yi += a * xi;
+    }
+}
+
+/// `x[i] *= a`.
+pub fn scale(a: f32, x: &mut [f32]) {
+    let n = x.len() - x.len() % LANES;
+    for xc in x[..n].chunks_exact_mut(LANES) {
+        for l in 0..LANES {
+            xc[l] *= a;
+        }
+    }
+    for xi in &mut x[n..] {
+        *xi *= a;
+    }
+}
+
+/// `y[i] = a * y[i] + b * x[i]` — the soft-update / Polyak shape.
+pub fn scale_add(a: f32, y: &mut [f32], b: f32, x: &[f32]) {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() - x.len() % LANES;
+    for (yc, xc) in y[..n].chunks_exact_mut(LANES).zip(x[..n].chunks_exact(LANES)) {
+        for l in 0..LANES {
+            yc[l] = a * yc[l] + b * xc[l];
+        }
+    }
+    for (yi, &xi) in y[n..].iter_mut().zip(&x[n..]) {
+        *yi = a * *yi + b * xi;
+    }
+}
+
+/// `y[i] += x[i]`.
+pub fn add_assign(y: &mut [f32], x: &[f32]) {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() - x.len() % LANES;
+    for (yc, xc) in y[..n].chunks_exact_mut(LANES).zip(x[..n].chunks_exact(LANES)) {
+        for l in 0..LANES {
+            yc[l] += xc[l];
+        }
+    }
+    for (yi, &xi) in y[n..].iter_mut().zip(&x[n..]) {
+        *yi += xi;
+    }
+}
+
+/// `y[i] -= x[i]`.
+pub fn sub_assign(y: &mut [f32], x: &[f32]) {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() - x.len() % LANES;
+    for (yc, xc) in y[..n].chunks_exact_mut(LANES).zip(x[..n].chunks_exact(LANES)) {
+        for l in 0..LANES {
+            yc[l] -= xc[l];
+        }
+    }
+    for (yi, &xi) in y[n..].iter_mut().zip(&x[n..]) {
+        *yi -= xi;
+    }
+}
+
+/// `x[i] = v`.
+pub fn fill(x: &mut [f32], v: f32) {
+    for xi in x.iter_mut() {
+        *xi = v;
+    }
+}
+
+/// 8-lane dot product with a fixed pairwise combine tree.
+///
+/// Deterministic for a given input, but **reassociated** vs. the
+/// sequential scalar sum: lane `l` accumulates coordinates `i ≡ l
+/// (mod 8)`, the tail (`len % 8` coordinates) folds into lanes `0..rem`,
+/// and the eight lanes combine as
+/// `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))` — never a function of thread
+/// count or call context.
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    assert_eq!(x.len(), y.len());
+    let mut acc = [0.0f32; LANES];
+    let n = x.len() - x.len() % LANES;
+    for (xc, yc) in x[..n].chunks_exact(LANES).zip(y[..n].chunks_exact(LANES)) {
+        for l in 0..LANES {
+            acc[l] += xc[l] * yc[l];
+        }
+    }
+    for (l, (&xi, &yi)) in x[n..].iter().zip(&y[n..]).enumerate() {
+        acc[l] += xi * yi;
+    }
+    fold_lanes(&acc)
+}
+
+/// The fixed combine tree shared by every 8-lane reduction in this crate.
+#[inline]
+pub(crate) fn fold_lanes(acc: &[f32; LANES]) -> f32 {
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+/// One Adam step over a flat tensor — the exact per-coordinate expression
+/// the DRL optimizer has always used (bitwise), hoisted here so the update
+/// loop vectorizes.
+#[allow(clippy::too_many_arguments)]
+pub fn adam_step(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    b1t: f32,
+    b2t: f32,
+) {
+    assert_eq!(p.len(), g.len());
+    assert_eq!(p.len(), m.len());
+    assert_eq!(p.len(), v.len());
+    for i in 0..p.len() {
+        m[i] = beta1 * m[i] + (1.0 - beta1) * g[i];
+        v[i] = beta2 * v[i] + (1.0 - beta2) * g[i] * g[i];
+        let mhat = m[i] / b1t;
+        let vhat = v[i] / b2t;
+        p[i] -= lr * mhat / (vhat.sqrt() + eps);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_matches_scalar_bitwise() {
+        for len in [0usize, 1, 7, 8, 9, 16, 23] {
+            let x: Vec<f32> = (0..len).map(|i| (i as f32 + 0.25) * 1.7).collect();
+            let mut y: Vec<f32> = (0..len).map(|i| i as f32 * -0.3).collect();
+            let mut yr = y.clone();
+            axpy(0.37, &x, &mut y);
+            for (yi, &xi) in yr.iter_mut().zip(&x) {
+                *yi += 0.37 * xi;
+            }
+            assert_eq!(
+                y.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                yr.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "len {len}"
+            );
+        }
+    }
+
+    #[test]
+    fn dot_tail_folds_into_low_lanes() {
+        // len = 11: lanes 0..3 get two terms, lanes 3..8 one.
+        let x: Vec<f32> = (0..11).map(|i| i as f32 + 1.0).collect();
+        let y = vec![1.0f32; 11];
+        // Reconstruct the documented lane order by hand.
+        let mut acc = [0.0f32; LANES];
+        for l in 0..LANES {
+            acc[l] += x[l];
+        }
+        for (l, &xi) in x[8..].iter().enumerate() {
+            acc[l] += xi;
+        }
+        assert_eq!(dot(&x, &y).to_bits(), fold_lanes(&acc).to_bits());
+    }
+
+    #[test]
+    fn fill_and_scale() {
+        let mut x = vec![3.0f32; 13];
+        scale(2.0, &mut x);
+        assert!(x.iter().all(|&v| v == 6.0));
+        fill(&mut x, 0.0);
+        assert!(x.iter().all(|&v| v.to_bits() == 0));
+    }
+}

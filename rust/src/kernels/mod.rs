@@ -1,0 +1,56 @@
+//! Portable blocked numeric kernels — the single home for every f32 hot
+//! loop in the train/compress/aggregate path.
+//!
+//! Everything here is safe, dependency-free Rust written so LLVM's
+//! auto-vectorizer can do the work: fixed-width lane accumulators
+//! ([`LANES`] = 8), `chunks_exact` bodies with no bounds checks and no
+//! data-dependent branches, and remainders handled in a separate scalar
+//! tail. No `unsafe`, no intrinsics, no feature detection — the same
+//! source is correct on every target and fast wherever LLVM has vector
+//! units to aim at.
+//!
+//! # Determinism policy (see DESIGN.md §"Numeric kernels")
+//!
+//! Kernels fall into two classes, and the split is load-bearing for the
+//! golden traces and the frozen `step_round` oracle:
+//!
+//! * **Per-coordinate kernels** ([`axpy`], [`scale`], [`scale_add`],
+//!   [`add_assign`], [`sub_assign`], [`fill`], [`adam_step`], the
+//!   `scatter_*` family, [`lr::rank1_acc`]) touch each output coordinate
+//!   with exactly the arithmetic expression of the scalar loop they
+//!   replaced — same ops, same order per coordinate — so they are
+//!   **bitwise-identical** to their predecessors. Contract tests in
+//!   `tests/kernels.rs` pin this with `to_bits` equality against the
+//!   [`reference`] implementations.
+//! * **Reduction kernels** ([`dot`], [`lr::gemv_wide`], the
+//!   [`reduce`] chunked reductions) reassociate: partial sums live in a
+//!   fixed lane/bank array and are combined by a fixed tree. The result is
+//!   a *different* (but fully deterministic) rounding than the sequential
+//!   scalar sum. Lane count, chunk boundaries ([`reduce::CHUNK`]), and the
+//!   combine order are compile-time constants — never a function of thread
+//!   count, shard count, or input values — so every engine stays
+//!   bit-identical across `compute_threads`/`shards` settings.
+//!
+//! The reassociating kernels changed the LR/DRL numeric streams once, at
+//! the PR that introduced this module; golden traces were re-blessed at
+//! that point and `tests/kernels.rs::kernel_and_scalar_training_agree`
+//! guards the re-bless (scalar-vs-kernel final accuracy within 1e-3).
+//!
+//! Note `f32::mul_add` is deliberately never used: fused multiply-add
+//! rounds once instead of twice, which would silently change results
+//! between targets with and without FMA units. Separate mul + add is
+//! bit-stable everywhere.
+#![forbid(unsafe_code)]
+
+pub mod blocked;
+pub mod lr;
+pub mod reduce;
+pub mod reference;
+pub mod sparse;
+
+pub use blocked::{add_assign, adam_step, axpy, dot, fill, scale, scale_add, sub_assign};
+pub use sparse::{scatter_add, scatter_add_unit, scatter_set_pairs, scatter_sub, scatter_zero};
+
+/// Lane width of the fixed accumulator arrays. Eight f32 lanes fill one
+/// AVX2 register (or two NEON quads); wider targets simply unroll.
+pub const LANES: usize = 8;

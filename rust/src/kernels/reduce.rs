@@ -1,0 +1,169 @@
+//! Deterministic chunked reductions, sequential or parallel.
+//!
+//! The discipline (same as PR 7's fading sweeps): the input is cut at
+//! **fixed** [`CHUNK`]-sized boundaries, each chunk's partial is computed
+//! by the same 8-lane kernel regardless of who computes it, and partials
+//! are combined strictly in ascending chunk order. Thread count only
+//! decides *which worker* computes a partial, never the value of any
+//! partial or the combine order — so `par_*` with any `threads` (0 =
+//! auto) is bit-identical to the sequential `*_chunked` form.
+
+use super::blocked;
+use super::LANES;
+
+/// Fixed reduction chunk: 4096 f32 = 16 KiB per chunk, small enough to
+/// stay in L1 while a worker folds it, large enough to amortize spawn
+/// bookkeeping. Never derived from thread count.
+pub const CHUNK: usize = 4096;
+
+fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        threads
+    }
+}
+
+/// Chunked 8-lane dot product: per-chunk [`blocked::dot`] partials summed
+/// in chunk order. Reassociated vs. a sequential scalar sum, deterministic
+/// for a given input.
+pub fn dot_chunked(x: &[f32], y: &[f32]) -> f32 {
+    assert_eq!(x.len(), y.len());
+    let mut total = 0.0f32;
+    for (xc, yc) in x.chunks(CHUNK).zip(y.chunks(CHUNK)) {
+        total += blocked::dot(xc, yc);
+    }
+    total
+}
+
+/// Parallel [`dot_chunked`]: bit-identical to it for every `threads`
+/// value (0 = auto).
+pub fn par_dot(x: &[f32], y: &[f32], threads: usize) -> f32 {
+    assert_eq!(x.len(), y.len());
+    let nchunks = x.len().div_ceil(CHUNK);
+    let t = resolve_threads(threads).min(nchunks.max(1));
+    if t <= 1 {
+        return dot_chunked(x, y);
+    }
+    let mut partials = vec![0f32; nchunks];
+    fill_partials(&mut partials, t, x.len(), |lo, hi, band| {
+        for ((xc, yc), p) in x[lo..hi]
+            .chunks(CHUNK)
+            .zip(y[lo..hi].chunks(CHUNK))
+            .zip(band.iter_mut())
+        {
+            *p = blocked::dot(xc, yc);
+        }
+    });
+    let mut total = 0.0f32;
+    for p in partials {
+        total += p;
+    }
+    total
+}
+
+/// Chunked squared L2 norm in f64 (each chunk: 8 f64 lanes, fixed tree;
+/// chunks summed in order). Reassociated vs. the old sequential
+/// `util::norm2`, deterministic for a given input.
+pub fn norm2_chunked(x: &[f32]) -> f64 {
+    let mut total = 0.0f64;
+    for xc in x.chunks(CHUNK) {
+        total += norm2_lanes(xc);
+    }
+    total
+}
+
+/// Parallel [`norm2_chunked`]: bit-identical to it for every `threads`
+/// value (0 = auto).
+pub fn par_norm2(x: &[f32], threads: usize) -> f64 {
+    let nchunks = x.len().div_ceil(CHUNK);
+    let t = resolve_threads(threads).min(nchunks.max(1));
+    if t <= 1 {
+        return norm2_chunked(x);
+    }
+    let mut partials = vec![0f64; nchunks];
+    fill_partials(&mut partials, t, x.len(), |lo, hi, band| {
+        for (xc, p) in x[lo..hi].chunks(CHUNK).zip(band.iter_mut()) {
+            *p = norm2_lanes(xc);
+        }
+    });
+    let mut total = 0.0f64;
+    for p in partials {
+        total += p;
+    }
+    total
+}
+
+/// 8-lane f64 sum of squares over one chunk, fixed combine tree.
+fn norm2_lanes(x: &[f32]) -> f64 {
+    let mut acc = [0.0f64; LANES];
+    let n = x.len() - x.len() % LANES;
+    for xc in x[..n].chunks_exact(LANES) {
+        for l in 0..LANES {
+            let v = xc[l] as f64;
+            acc[l] += v * v;
+        }
+    }
+    for (l, &xi) in x[n..].iter().enumerate() {
+        let v = xi as f64;
+        acc[l] += v * v;
+    }
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+/// Split `partials` (one slot per chunk) into `t` contiguous bands of
+/// whole chunks and let scoped workers fill them. Each band covers the
+/// element range `[band_start * CHUNK, min(band_end * CHUNK, len))` —
+/// boundaries depend only on [`CHUNK`] and the band split, and every slot
+/// is written with the same per-chunk kernel, so the values are
+/// independent of `t`.
+fn fill_partials<T: Send>(
+    partials: &mut [T],
+    t: usize,
+    len: usize,
+    work: impl Fn(usize, usize, &mut [T]) + Sync,
+) {
+    let per = partials.len().div_ceil(t);
+    std::thread::scope(|s| {
+        let mut rest = &mut *partials;
+        let mut chunk_off = 0usize;
+        let work = &work;
+        while !rest.is_empty() {
+            let take = per.min(rest.len());
+            let (band, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let lo = chunk_off * CHUNK;
+            let hi = ((chunk_off + take) * CHUNK).min(len);
+            chunk_off += take;
+            s.spawn(move || work(lo, hi, band));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn par_matches_sequential_bitwise_across_threads() {
+        let mut rng = Rng::new(42);
+        for len in [0usize, 5, CHUNK - 1, CHUNK, CHUNK + 1, 3 * CHUNK + 17] {
+            let x: Vec<f32> = (0..len).map(|_| rng.normal() as f32).collect();
+            let y: Vec<f32> = (0..len).map(|_| rng.normal() as f32).collect();
+            let d1 = dot_chunked(&x, &y);
+            let n1 = norm2_chunked(&x);
+            for threads in [1usize, 2, 8, 0] {
+                assert_eq!(par_dot(&x, &y, threads).to_bits(), d1.to_bits(), "len {len}");
+                assert_eq!(par_norm2(&x, threads).to_bits(), n1.to_bits(), "len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn norm2_matches_simple_cases() {
+        assert_eq!(norm2_chunked(&[3.0, 4.0]), 25.0);
+        assert_eq!(norm2_chunked(&[]), 0.0);
+        assert_eq!(par_norm2(&[3.0, 4.0], 0), 25.0);
+    }
+}

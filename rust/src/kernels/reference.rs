@@ -1,0 +1,81 @@
+//! Scalar reference implementations — the exact loops the blocked kernels
+//! replaced, kept (not deleted) for three consumers:
+//!
+//! 1. `tests/kernels.rs` contract tests: per-coordinate kernels must match
+//!    these **bitwise**; reduction kernels must match within tolerance.
+//! 2. `benches/bench_kernels.rs`: the scalar-vs-blocked speedup rows.
+//! 3. `NativeLr::loss_grad_reference`: the scalar-oracle training path
+//!    behind the kernel-vs-scalar accuracy-equivalence test.
+//!
+//! Nothing in the production path calls these. They are deliberately the
+//! *old* idiom — sequential sums, `xi == 0.0` skip branches — so they keep
+//! measuring what we moved away from.
+
+/// Sequential scalar dot product (the reassociation baseline for
+/// [`super::dot`]).
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    assert_eq!(x.len(), y.len());
+    let mut acc = 0.0f32;
+    for (&xi, &yi) in x.iter().zip(y) {
+        acc += xi * yi;
+    }
+    acc
+}
+
+/// `y += a*x`, plain loop — bitwise target for [`super::axpy`].
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// `x *= a`, plain loop — bitwise target for [`super::scale`].
+pub fn scale(a: f32, x: &mut [f32]) {
+    for xi in x.iter_mut() {
+        *xi *= a;
+    }
+}
+
+/// `y = a*y + b*x`, plain loop — bitwise target for [`super::scale_add`].
+pub fn scale_add(a: f32, y: &mut [f32], b: f32, x: &[f32]) {
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi = a * *yi + b * xi;
+    }
+}
+
+/// The seed's forward logits loop, skip branch and all: sequential
+/// accumulation over nonzero inputs only.
+pub fn gemv_wide_skip<const C: usize>(w: &[f32], bias: &[f32], x: &[f32], out: &mut [f32; C]) {
+    assert_eq!(w.len(), x.len() * C);
+    out.copy_from_slice(&bias[..C]);
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let wrow = &w[i * C..(i + 1) * C];
+        for c in 0..C {
+            out[c] += xi * wrow[c];
+        }
+    }
+}
+
+/// The seed's backward rank-1 loop with the skip branch — bitwise target
+/// for [`super::lr::rank1_acc`] on finite inputs.
+pub fn rank1_skip<const C: usize>(gw: &mut [f32], x: &[f32], d: &[f32; C]) {
+    assert_eq!(gw.len(), x.len() * C);
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let gwrow = &mut gw[i * C..(i + 1) * C];
+        for c in 0..C {
+            gwrow[c] += xi * d[c];
+        }
+    }
+}
+
+/// Sequential f64 squared norm (the old `util::norm2` body) — the
+/// reassociation baseline for [`super::reduce::norm2_chunked`].
+pub fn norm2(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum()
+}

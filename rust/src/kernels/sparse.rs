@@ -1,0 +1,74 @@
+//! Sparse scatter kernels — the index/value fan-out shared by update
+//! decode (`LgcUpdate::add_into`), error-feedback absorb, downlink delta
+//! apply / mirror advance, and the population residual arena.
+//!
+//! All of these are per-coordinate and **bitwise-identical** to the loops
+//! they replaced; centralizing them buys bounds-check-free bodies and one
+//! place to reason about aliasing (indices within one call are unique by
+//! construction of the compressors, but the kernels stay correct — last
+//! write / accumulated add wins — even if they were not).
+
+/// `out[indices[k]] += scale * values[k]`.
+pub fn scatter_add(out: &mut [f32], indices: &[u32], values: &[f32], scale: f32) {
+    assert_eq!(indices.len(), values.len());
+    for (&i, &v) in indices.iter().zip(values) {
+        out[i as usize] += scale * v;
+    }
+}
+
+/// `out[indices[k]] += values[k]` — the unscaled form. Kept separate from
+/// [`scatter_add`] with `scale == 1.0` so call sites that were plain `+= v`
+/// stay literally the same expression (no `1.0 * v`, which differs only
+/// for signaling NaNs but costs a multiply everywhere).
+pub fn scatter_add_unit(out: &mut [f32], indices: &[u32], values: &[f32]) {
+    assert_eq!(indices.len(), values.len());
+    for (&i, &v) in indices.iter().zip(values) {
+        out[i as usize] += v;
+    }
+}
+
+/// `out[indices[k]] -= values[k]` — the error-feedback residual absorb.
+pub fn scatter_sub(out: &mut [f32], indices: &[u32], values: &[f32]) {
+    assert_eq!(indices.len(), values.len());
+    for (&i, &v) in indices.iter().zip(values) {
+        out[i as usize] -= v;
+    }
+}
+
+/// `out[indices[k]] = 0.0` — the exact telescoping absorb.
+pub fn scatter_zero(out: &mut [f32], indices: &[u32]) {
+    for &i in indices {
+        out[i as usize] = 0.0;
+    }
+}
+
+/// `out[i] = v` for every `(i, v)` pair — the residual-arena restore shape.
+pub fn scatter_set_pairs(out: &mut [f32], pairs: &[(u32, f32)]) {
+    for &(i, v) in pairs {
+        out[i as usize] = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scatter_roundtrip() {
+        let mut out = vec![0f32; 16];
+        let idx = [3u32, 7, 3, 15];
+        let vals = [1.0f32, -2.0, 0.5, 4.0];
+        scatter_add_unit(&mut out, &idx, &vals);
+        assert_eq!(out[3], 1.5);
+        assert_eq!(out[7], -2.0);
+        assert_eq!(out[15], 4.0);
+        scatter_sub(&mut out, &idx, &vals);
+        assert!(out.iter().all(|&v| v == 0.0));
+        scatter_add(&mut out, &idx, &vals, 2.0);
+        assert_eq!(out[7], -4.0);
+        scatter_zero(&mut out, &idx);
+        assert!(out.iter().all(|&v| v.to_bits() == 0));
+        scatter_set_pairs(&mut out, &[(2, 9.0), (2, 8.0)]);
+        assert_eq!(out[2], 8.0); // last write wins
+    }
+}

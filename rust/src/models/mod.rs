@@ -7,6 +7,7 @@
 //! without compiled artifacts, and (3) the strongly-convex problem for the
 //! Theorem-1 validation (with L2 regularization it is strongly convex).
 
+use crate::kernels;
 use crate::runtime::BatchX;
 
 pub const IMG: usize = 784;
@@ -45,17 +46,9 @@ impl NativeLr {
         let mut probs = [0f32; NCLASS];
         for bi in 0..b {
             let xr = &x[bi * IMG..(bi + 1) * IMG];
-            // logits = x W + b  (W stored [IMG, NCLASS] row-major like jax)
-            logits.copy_from_slice(&bias[..NCLASS]);
-            for (i, &xi) in xr.iter().enumerate() {
-                if xi == 0.0 {
-                    continue;
-                }
-                let wrow = &w[i * NCLASS..(i + 1) * NCLASS];
-                for c in 0..NCLASS {
-                    logits[c] += xi * wrow[c];
-                }
-            }
+            // logits = x W + b  (W stored [IMG, NCLASS] row-major like jax):
+            // the dense 4-bank GEMV kernel — branch-free, reassociated.
+            kernels::lr::gemv_wide::<NCLASS>(w, bias, xr, &mut logits);
             // softmax + xent
             let maxl = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
             let mut z = 0f32;
@@ -69,15 +62,60 @@ impl NativeLr {
             for c in 0..NCLASS {
                 probs[c] = probs[c] / z - if c == label { 1.0 } else { 0.0 };
             }
-            for (i, &xi) in xr.iter().enumerate() {
-                if xi == 0.0 {
-                    continue;
-                }
-                let gwrow = &mut gw[i * NCLASS..(i + 1) * NCLASS];
-                for c in 0..NCLASS {
-                    gwrow[c] += xi * probs[c];
-                }
+            // Dense rank-1 backward — bitwise-identical to the old skip loop.
+            kernels::lr::rank1_acc::<NCLASS>(gw, xr, &probs);
+            for c in 0..NCLASS {
+                gb[c] += probs[c];
             }
+        }
+        let scale = 1.0 / b as f32;
+        kernels::scale(scale, grad);
+        let mut total = loss / b as f64;
+        if self.l2 > 0.0 {
+            kernels::axpy(self.l2, params, grad);
+            total += 0.5 * self.l2 as f64 * crate::util::norm2(params);
+        }
+        total
+    }
+
+    /// The seed's scalar `loss_grad` — sequential sums and `xi == 0.0`
+    /// skip branches, kept verbatim as the reassociation oracle for the
+    /// kernel-vs-scalar accuracy-equivalence test (`tests/kernels.rs`)
+    /// and the `bench_kernels` speedup baseline. Not a production path.
+    #[doc(hidden)]
+    pub fn loss_grad_reference(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        grad: &mut [f32],
+    ) -> f64 {
+        assert_eq!(params.len(), LR_PARAMS);
+        assert_eq!(grad.len(), LR_PARAMS);
+        let b = y.len();
+        assert_eq!(x.len(), b * IMG);
+        let (w, bias) = params.split_at(IMG * NCLASS);
+        grad.iter_mut().for_each(|g| *g = 0.0);
+        let (gw, gb) = grad.split_at_mut(IMG * NCLASS);
+
+        let mut loss = 0.0f64;
+        let mut logits = [0f32; NCLASS];
+        let mut probs = [0f32; NCLASS];
+        for bi in 0..b {
+            let xr = &x[bi * IMG..(bi + 1) * IMG];
+            kernels::reference::gemv_wide_skip::<NCLASS>(w, bias, xr, &mut logits);
+            let maxl = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0f32;
+            for c in 0..NCLASS {
+                probs[c] = (logits[c] - maxl).exp();
+                z += probs[c];
+            }
+            let label = y[bi] as usize;
+            loss += -(((probs[label] / z).max(1e-30) as f64).ln());
+            for c in 0..NCLASS {
+                probs[c] = probs[c] / z - if c == label { 1.0 } else { 0.0 };
+            }
+            kernels::reference::rank1_skip::<NCLASS>(gw, xr, &probs);
             for c in 0..NCLASS {
                 gb[c] += probs[c];
             }
@@ -91,12 +129,14 @@ impl NativeLr {
             for (g, &p) in grad.iter_mut().zip(params) {
                 *g += self.l2 * p;
             }
-            total += 0.5 * self.l2 as f64 * crate::util::norm2(params);
+            total += 0.5 * self.l2 as f64 * kernels::reference::norm2(params);
         }
         total
     }
 
-    /// Eval: (loss_sum, correct) like the PJRT eval graph.
+    /// Eval: (loss_sum, correct) like the PJRT eval graph. Shares the
+    /// forward GEMV kernel with [`NativeLr::loss_grad`] (the seed
+    /// duplicated the logits loop here).
     pub fn eval(&self, params: &[f32], x: &[f32], y: &[i32]) -> (f64, f64) {
         let b = y.len();
         let (w, bias) = params.split_at(IMG * NCLASS);
@@ -105,16 +145,7 @@ impl NativeLr {
         let mut logits = [0f32; NCLASS];
         for bi in 0..b {
             let xr = &x[bi * IMG..(bi + 1) * IMG];
-            logits.copy_from_slice(&bias[..NCLASS]);
-            for (i, &xi) in xr.iter().enumerate() {
-                if xi == 0.0 {
-                    continue;
-                }
-                let wrow = &w[i * NCLASS..(i + 1) * NCLASS];
-                for c in 0..NCLASS {
-                    logits[c] += xi * wrow[c];
-                }
-            }
+            kernels::lr::gemv_wide::<NCLASS>(w, bias, xr, &mut logits);
             let maxl = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
             let z: f32 = logits.iter().map(|l| (l - maxl).exp()).sum();
             let label = y[bi] as usize;
@@ -231,6 +262,27 @@ mod tests {
         }
         let (_, c2) = model.eval(&params, &x, &y);
         assert!(c2 >= 7.0, "correct={c2}");
+    }
+
+    #[test]
+    fn kernel_grad_close_to_scalar_reference() {
+        let mut rng = Rng::new(7);
+        let params: Vec<f32> = (0..LR_PARAMS).map(|_| rng.normal() as f32 * 0.05).collect();
+        let (x, y) = toy_batch(8, 8);
+        let model = NativeLr::with_l2(0.01);
+        let mut g = vec![0f32; LR_PARAMS];
+        let mut gr = vec![0f32; LR_PARAMS];
+        let l = model.loss_grad(&params, &x, &y, &mut g);
+        let lr = model.loss_grad_reference(&params, &x, &y, &mut gr);
+        assert!((l - lr).abs() < 1e-6 * (1.0 + lr.abs()), "loss {l} vs {lr}");
+        for i in 0..LR_PARAMS {
+            assert!(
+                (g[i] - gr[i]).abs() < 1e-5,
+                "grad {i}: kernel {} vs reference {}",
+                g[i],
+                gr[i]
+            );
+        }
     }
 
     #[test]

@@ -132,9 +132,7 @@ impl Residual {
             Residual::Empty => {}
             Residual::Sparse(pairs) => {
                 let mut e = vec![0.0f32; dim];
-                for (i, v) in pairs {
-                    e[i as usize] = v;
-                }
+                crate::kernels::scatter_set_pairs(&mut e, &pairs);
                 ef.set_memory(e);
             }
             Residual::Dense(e) => {
@@ -745,9 +743,7 @@ impl Population {
             ResKind::Sparse => {
                 let mut e = self.take_buf();
                 e.resize(dim, 0.0);
-                for &(i, v) in &self.sparse[r.off..r.off + r.len] {
-                    e[i as usize] = v;
-                }
+                crate::kernels::scatter_set_pairs(&mut e, &self.sparse[r.off..r.off + r.len]);
                 self.dead_sparse += r.len;
                 let ef = compressor
                     .error_memory_mut()
@@ -832,6 +828,11 @@ impl Population {
             if pending {
                 if let Some(ef) = compressor.error_memory_mut() {
                     ef.ensure_dim(params_hat.len());
+                    // Deliberately NOT the dense kernel: the `d != 0.0`
+                    // skip keeps an existing −0.0 in the error memory from
+                    // being flushed to +0.0 by `e += +0.0` — the Residual
+                    // nnz/bytes accounting and the bitwise demobilize
+                    // round-trip test depend on the sign bit surviving.
                     for (i, (&w, &wh)) in params_sync.iter().zip(&params_hat).enumerate() {
                         let d = w - wh;
                         if d != 0.0 {

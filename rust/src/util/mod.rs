@@ -4,27 +4,26 @@ pub mod rng;
 
 pub use rng::Rng;
 
-/// Euclidean norm squared of an f32 slice.
+/// Euclidean norm squared of an f32 slice — the chunked 8-lane kernel
+/// (reassociated vs. a sequential sum, deterministic for a given input;
+/// see [`crate::kernels::reduce`]).
 #[inline]
 pub fn norm2(xs: &[f32]) -> f64 {
-    xs.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    crate::kernels::reduce::norm2_chunked(xs)
 }
 
-/// In-place axpy: y += a * x.
+/// In-place axpy: y += a * x (delegates to the blocked kernel — bitwise
+/// identical to the plain loop).
 #[inline]
 pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (yi, &xi) in y.iter_mut().zip(x) {
-        *yi += a * xi;
-    }
+    crate::kernels::axpy(a, x, y);
 }
 
-/// In-place scale: x *= a.
+/// In-place scale: x *= a (delegates to the blocked kernel — bitwise
+/// identical to the plain loop).
 #[inline]
 pub fn scale(a: f32, x: &mut [f32]) {
-    for xi in x.iter_mut() {
-        *xi *= a;
-    }
+    crate::kernels::scale(a, x);
 }
 
 /// Mean of an f64 slice (0 for empty).

@@ -1,0 +1,302 @@
+//! Contract tests for the blocked numeric kernel layer
+//! (`rust/src/kernels/`), pinning the determinism policy from DESIGN.md
+//! §"Numeric kernels":
+//!
+//! * per-coordinate kernels are **bitwise-identical** to the scalar loops
+//!   they replaced — across lengths straddling the 8-lane remainder and
+//!   under NaN/±inf/denormal inputs;
+//! * reduction kernels are deterministic with thread-count-independent
+//!   chunking ({1, 2, 8, auto} all bit-identical);
+//! * the kernel training path and the retained scalar reference path reach
+//!   the same final accuracy (within 1e-3) over a seeded LR run — the
+//!   guard on the one-time golden-trace re-bless.
+
+use lgc::data::MnistGen;
+use lgc::kernels::{self, reference};
+use lgc::models::{NativeLr, IMG, LR_PARAMS};
+use lgc::util::Rng;
+
+/// Lengths straddling every 8-lane / 4-bank remainder class, plus the
+/// parallel-reduction chunk boundary (CHUNK = 4096).
+fn sweep_lengths() -> Vec<usize> {
+    let mut lens: Vec<usize> = (0..=40).collect();
+    lens.extend([255, 256, 257, 783, 784, 785, 4095, 4096, 4097]);
+    lens
+}
+
+fn randv(n: usize, rng: &mut Rng) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+/// Values exercising the IEEE edge cases the kernels must pass through
+/// untouched: NaN, ±inf, ±0.0, and f32 denormals.
+fn edge_values() -> Vec<f32> {
+    vec![
+        f32::NAN,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        0.0,
+        -0.0,
+        1e-41,  // denormal
+        -1e-41, // denormal
+        f32::MIN_POSITIVE,
+        1.5,
+        -2.25e20,
+    ]
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what} at {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn per_coordinate_kernels_bitwise_across_remainders() {
+    let mut rng = Rng::new(0xBEEF);
+    for len in sweep_lengths() {
+        let x = randv(len, &mut rng);
+        let base = randv(len, &mut rng);
+
+        let mut y = base.clone();
+        let mut yr = base.clone();
+        kernels::axpy(0.73, &x, &mut y);
+        reference::axpy(0.73, &x, &mut yr);
+        assert_bits_eq(&y, &yr, &format!("axpy len {len}"));
+
+        let mut y = base.clone();
+        let mut yr = base.clone();
+        kernels::scale(-1.37, &mut y);
+        reference::scale(-1.37, &mut yr);
+        assert_bits_eq(&y, &yr, &format!("scale len {len}"));
+
+        let mut y = base.clone();
+        let mut yr = base.clone();
+        kernels::scale_add(0.995, &mut y, 0.005, &x);
+        reference::scale_add(0.995, &mut yr, 0.005, &x);
+        assert_bits_eq(&y, &yr, &format!("scale_add len {len}"));
+
+        let mut y = base.clone();
+        let mut yr = base.clone();
+        kernels::add_assign(&mut y, &x);
+        for (a, &b) in yr.iter_mut().zip(&x) {
+            *a += b;
+        }
+        assert_bits_eq(&y, &yr, &format!("add_assign len {len}"));
+
+        let mut y = base.clone();
+        let mut yr = base.clone();
+        kernels::sub_assign(&mut y, &x);
+        for (a, &b) in yr.iter_mut().zip(&x) {
+            *a -= b;
+        }
+        assert_bits_eq(&y, &yr, &format!("sub_assign len {len}"));
+    }
+}
+
+#[test]
+fn per_coordinate_kernels_bitwise_on_ieee_edge_cases() {
+    let edges = edge_values();
+    // Every (x, y) pair of edge values, as length-1 and padded slices.
+    for &xv in &edges {
+        for &yv in &edges {
+            for pad in [0usize, 7, 8] {
+                let mut x = vec![1.0f32; pad];
+                x.push(xv);
+                let mut y = vec![2.0f32; pad];
+                y.push(yv);
+
+                let mut k = y.clone();
+                let mut r = y.clone();
+                kernels::axpy(0.5, &x, &mut k);
+                reference::axpy(0.5, &x, &mut r);
+                assert_bits_eq(&k, &r, &format!("axpy edge ({xv}, {yv}) pad {pad}"));
+
+                let mut k = y.clone();
+                let mut r = y.clone();
+                kernels::scale_add(0.9, &mut k, 0.1, &x);
+                reference::scale_add(0.9, &mut r, 0.1, &x);
+                assert_bits_eq(&k, &r, &format!("scale_add edge ({xv}, {yv}) pad {pad}"));
+
+                let mut k = x.clone();
+                let mut r = x.clone();
+                kernels::scale(f32::INFINITY, &mut k);
+                reference::scale(f32::INFINITY, &mut r);
+                assert_bits_eq(&k, &r, &format!("scale edge {xv} pad {pad}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn adam_step_bitwise_vs_inline_expression() {
+    let mut rng = Rng::new(0xADA);
+    for len in [1usize, 7, 8, 9, 64, 129] {
+        let g = randv(len, &mut rng);
+        let p0 = randv(len, &mut rng);
+        let m0 = randv(len, &mut rng);
+        let v0: Vec<f32> = randv(len, &mut rng).iter().map(|v| v * v).collect();
+        let (lr, b1, b2, eps, b1t, b2t) = (0.003f32, 0.9f32, 0.999f32, 1e-8f32, 0.1f32, 0.002f32);
+
+        let (mut p, mut m, mut v) = (p0.clone(), m0.clone(), v0.clone());
+        kernels::adam_step(&mut p, &g, &mut m, &mut v, lr, b1, b2, eps, b1t, b2t);
+
+        let (mut pr, mut mr, mut vr) = (p0, m0, v0);
+        for i in 0..len {
+            mr[i] = b1 * mr[i] + (1.0 - b1) * g[i];
+            vr[i] = b2 * vr[i] + (1.0 - b2) * g[i] * g[i];
+            let mhat = mr[i] / b1t;
+            let vhat = vr[i] / b2t;
+            pr[i] -= lr * mhat / (vhat.sqrt() + eps);
+        }
+        assert_bits_eq(&p, &pr, &format!("adam p len {len}"));
+        assert_bits_eq(&m, &mr, &format!("adam m len {len}"));
+        assert_bits_eq(&v, &vr, &format!("adam v len {len}"));
+    }
+}
+
+#[test]
+fn scatter_kernels_bitwise_vs_inline_loops() {
+    let mut rng = Rng::new(0x5CA7);
+    let dim = 300;
+    let idx: Vec<u32> = (0..64).map(|_| rng.index(dim) as u32).collect();
+    let vals = randv(idx.len(), &mut rng);
+    let base = randv(dim, &mut rng);
+
+    let mut k = base.clone();
+    let mut r = base.clone();
+    kernels::scatter_add(&mut k, &idx, &vals, 0.25);
+    for (&i, &v) in idx.iter().zip(&vals) {
+        r[i as usize] += 0.25 * v;
+    }
+    assert_bits_eq(&k, &r, "scatter_add");
+
+    let mut k = base.clone();
+    let mut r = base.clone();
+    kernels::scatter_add_unit(&mut k, &idx, &vals);
+    for (&i, &v) in idx.iter().zip(&vals) {
+        r[i as usize] += v;
+    }
+    assert_bits_eq(&k, &r, "scatter_add_unit");
+
+    let mut k = base.clone();
+    let mut r = base.clone();
+    kernels::scatter_sub(&mut k, &idx, &vals);
+    for (&i, &v) in idx.iter().zip(&vals) {
+        r[i as usize] -= v;
+    }
+    assert_bits_eq(&k, &r, "scatter_sub");
+
+    let mut k = base.clone();
+    let mut r = base.clone();
+    kernels::scatter_zero(&mut k, &idx);
+    for &i in &idx {
+        r[i as usize] = 0.0;
+    }
+    assert_bits_eq(&k, &r, "scatter_zero");
+
+    let pairs: Vec<(u32, f32)> = idx.iter().zip(&vals).map(|(&i, &v)| (i, v)).collect();
+    let mut k = base.clone();
+    let mut r = base;
+    kernels::scatter_set_pairs(&mut k, &pairs);
+    for &(i, v) in &pairs {
+        r[i as usize] = v;
+    }
+    assert_bits_eq(&k, &r, "scatter_set_pairs");
+}
+
+#[test]
+fn rank1_backward_bitwise_vs_skip_loop_on_sparse_rows() {
+    let mut rng = Rng::new(0x0B1);
+    for n in [1usize, 3, 4, 5, 97, IMG] {
+        // Half-zero rows like the synthetic MNIST pixels, plus a -0.0.
+        let mut x: Vec<f32> = (0..n)
+            .map(|_| if rng.index(2) == 0 { 0.0 } else { rng.uniform_f32() })
+            .collect();
+        if n > 2 {
+            x[2] = -0.0;
+        }
+        let mut d = [0f32; 10];
+        for dc in d.iter_mut() {
+            *dc = rng.normal() as f32;
+        }
+        let mut gw = vec![0f32; n * 10];
+        let mut gw_ref = vec![0f32; n * 10];
+        kernels::lr::rank1_acc::<10>(&mut gw, &x, &d);
+        reference::rank1_skip::<10>(&mut gw_ref, &x, &d);
+        assert_bits_eq(&gw, &gw_ref, &format!("rank1 n {n}"));
+    }
+}
+
+#[test]
+fn chunked_reductions_bit_identical_across_thread_counts() {
+    let mut rng = Rng::new(0x9A9);
+    for len in [0usize, 1, 4095, 4096, 4097, 3 * 4096 + 5, 40_000] {
+        let x = randv(len, &mut rng);
+        let y = randv(len, &mut rng);
+        let d_seq = kernels::reduce::dot_chunked(&x, &y);
+        let n_seq = kernels::reduce::norm2_chunked(&x);
+        for threads in [1usize, 2, 8, 0] {
+            let d = kernels::reduce::par_dot(&x, &y, threads);
+            let n = kernels::reduce::par_norm2(&x, threads);
+            assert_eq!(d.to_bits(), d_seq.to_bits(), "par_dot len {len} threads {threads}");
+            assert_eq!(n.to_bits(), n_seq.to_bits(), "par_norm2 len {len} threads {threads}");
+        }
+        // Reassociated, but still within numerical shouting distance of the
+        // scalar reference.
+        let scalar = reference::dot(&x, &y);
+        assert!(
+            (d_seq - scalar).abs() <= 1e-3 * (1.0 + scalar.abs()),
+            "len {len}: chunked {d_seq} vs scalar {scalar}"
+        );
+    }
+}
+
+/// The guard on the one-time golden-trace re-bless: training with the
+/// blocked kernels and training with the retained scalar reference path
+/// must land at the same final accuracy (within 1e-3) on a seeded LR run.
+#[test]
+fn kernel_and_scalar_training_agree() {
+    let mnist = MnistGen::new(17);
+    let train = mnist.dataset(0, 640);
+    let eval = mnist.dataset(50_000, 2_000);
+    let model = NativeLr::new();
+    let batch = 32;
+    let nb = train.y.len() / batch;
+
+    let mut p_kernel = vec![0f32; LR_PARAMS];
+    let mut p_scalar = vec![0f32; LR_PARAMS];
+    let mut grad = vec![0f32; LR_PARAMS];
+    for _epoch in 0..15 {
+        for b in 0..nb {
+            let x = &train.x[b * batch * IMG..(b + 1) * batch * IMG];
+            let y = &train.y[b * batch..(b + 1) * batch];
+            model.loss_grad(&p_kernel, x, y, &mut grad);
+            kernels::axpy(-0.1, &grad, &mut p_kernel);
+            model.loss_grad_reference(&p_scalar, x, y, &mut grad);
+            for (p, &g) in p_scalar.iter_mut().zip(&grad) {
+                *p -= 0.1 * g;
+            }
+        }
+    }
+
+    // The parameter trajectories drift only by reassociation rounding.
+    let mut max_rel = 0.0f64;
+    for (a, b) in p_kernel.iter().zip(&p_scalar) {
+        let rel = ((a - b).abs() / (1e-3 + b.abs())) as f64;
+        max_rel = max_rel.max(rel);
+    }
+    assert!(max_rel < 1e-2, "kernel vs scalar param drift {max_rel}");
+
+    let n = eval.y.len() as f64;
+    let (_, correct_k) = model.eval(&p_kernel, &eval.x, &eval.y);
+    let (_, correct_s) = model.eval(&p_scalar, &eval.x, &eval.y);
+    let acc_k = correct_k / n;
+    let acc_s = correct_s / n;
+    assert!(acc_k > 0.5, "kernel path failed to learn: acc {acc_k}");
+    assert!(
+        (acc_k - acc_s).abs() <= 1e-3,
+        "kernel acc {acc_k} vs scalar acc {acc_s}"
+    );
+}

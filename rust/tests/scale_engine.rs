@@ -141,6 +141,40 @@ fn shard_count_is_invisible_for_cohort_engines() {
     }
 }
 
+/// Compute-thread count is equally invisible across the kernel paths:
+/// the blocked kernels fix lane/chunk boundaries and combine order at
+/// compile time (never from thread count), and barrier-round parallel
+/// device compute only splits per-device work across workers — so runs
+/// with `compute_threads ∈ {2, 8, 0 (auto)}` replay the single-threaded
+/// baseline bitwise for every preset, in both the permanent-fleet and
+/// cohort engines.
+#[test]
+fn compute_thread_count_is_invisible_across_kernel_paths() {
+    for mech in PRESETS {
+        for (population, cohort, mode_name) in
+            [(None, None, "barrier"), (Some(12), Some(4), "cohort-barrier")]
+        {
+            let mk = |threads: usize| {
+                let mut cfg = base_cfg(mech, 6);
+                cfg.population = population;
+                cfg.cohort = cohort;
+                cfg.compute_threads = threads;
+                cfg
+            };
+            let baseline = run_log(mk(1));
+            assert_eq!(baseline.records.len(), 6);
+            for threads in [2usize, 8, 0] {
+                let swept = run_log(mk(threads));
+                assert_logs_bitwise_equal(
+                    &baseline,
+                    &swept,
+                    &format!("{} {mode_name} compute_threads={threads}", mech.name()),
+                );
+            }
+        }
+    }
+}
+
 /// The cohort memory bound survives the SoA refactor: a churning
 /// population run materializes at most `cohort` devices at any instant,
 /// and the pooled compressor boxes stay bounded by the cohort too.
