@@ -5,15 +5,19 @@
 
 use std::path::Path;
 
-use lgc::bench::figures;
+use lgc::bench::{figures, JsonSink};
 use lgc::config::{ExperimentConfig, Mechanism, Workload};
 use lgc::coordinator::{Experiment, PjrtTrainer};
 use lgc::metrics::RunLog;
 use lgc::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
+    let mut json = JsonSink::from_args("fig4_cnn_mnist");
     if !Path::new("artifacts/manifest.toml").exists() {
         println!("Figure 4 needs the CNN artifacts — run `make artifacts` first. Skipping.");
+        // Still write the (empty) record file so the CI diff step's file
+        // list never 404s on an artifact-less runner.
+        json.finish();
         return Ok(());
     }
     let rounds = std::env::var("LGC_ROUNDS")
@@ -43,8 +47,16 @@ fn main() -> anyhow::Result<()> {
         let log = exp.run(&mut trainer)?;
         log.write_csv(Path::new(&format!("results/fig4_{}.csv", mech.name())))?;
         println!("  {} done: final acc {:.4}", mech.name(), log.final_acc());
+        let m = mech.name();
+        json.push(&format!("{m}/final_acc"), log.final_acc(), "sim");
+        if let Some(last) = log.last() {
+            json.push(&format!("{m}/total_time"), last.total_time_s, "sim_s");
+        }
+        let bytes: u64 = log.records.iter().map(|r| r.bytes_up).sum();
+        json.push(&format!("{m}/bytes_up"), bytes as f64, "bytes");
         logs.push(log);
     }
+    json.finish();
 
     figures::print_convergence(&logs);
     figures::print_budget_panel(&logs, 0, &figures::budget_grid(&logs, 0, 8), "J");

@@ -7,7 +7,7 @@
 
 use std::path::Path;
 
-use lgc::bench::Table;
+use lgc::bench::{JsonSink, Table};
 use lgc::config::{ExperimentConfig, Mechanism, Workload};
 use lgc::coordinator::{Experiment, NativeLrTrainer};
 use lgc::drl::Transition;
@@ -37,8 +37,10 @@ fn main() -> anyhow::Result<()> {
     let mut trainer = NativeLrTrainer::new(&cfg);
     let mut exp = Experiment::new(cfg, &trainer);
 
+    let mut json = JsonSink::from_args("fig5_drl");
     let mut table = Table::new(&["episode", "mean reward", "critic loss", "actor Q", "episode energy (J)"]);
     let mut csv = String::from("episode,mean_reward,critic_loss,actor_q,episode_energy_j\n");
+    let mut final_ep = (f64::NAN, f64::NAN);
     for ep in 0..episodes {
         // Fresh FL problem each episode; the DDPG agents persist (Fig. 5).
         exp.reset_episode(&trainer);
@@ -80,8 +82,14 @@ fn main() -> anyhow::Result<()> {
             format!("{energy:.1}"),
         ]);
         csv.push_str(&format!("{ep},{mr:.6},{closs:.6},{aq:.6},{energy:.1}\n"));
+        final_ep = (mr, energy);
     }
     table.print();
+    // Sim-deterministic trajectory rows (the DDPG path is fully seeded);
+    // the raw learn-step timing stays out — wall time isn't comparable
+    // across runners.
+    json.push("ddpg/final_mean_reward", final_ep.0, "sim");
+    json.push("ddpg/final_episode_energy", final_ep.1, "sim");
     std::fs::create_dir_all("results")?;
     std::fs::write(Path::new("results/fig5_drl.csv"), csv)?;
     println!("\nCSV series in results/fig5_drl.csv");
@@ -119,6 +127,8 @@ fn main() -> anyhow::Result<()> {
         }
     }
     println!("critic loss {first:.5} -> {last:.5} (should fall)");
+    json.push("ddpg/toy_critic_loss_last", last, "sim");
+    json.finish();
 
     // §Perf: one DDPG learn step (batch 32, hidden 32) — target < 200 us.
     let r = lgc::bench::bench_auto("ddpg learn step", 100.0, || {

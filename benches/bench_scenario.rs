@@ -92,6 +92,7 @@ fn two_zone_world(move_prob: f64) -> ScenarioSpec {
             },
         ],
         phases: Vec::new(),
+        noma: false,
     }
 }
 

@@ -11,7 +11,8 @@ Tolerance policy by unit:
 
 * ``count`` / ``bytes`` — deterministic simulation counters: must match the
   baseline exactly.
-* ``sim_s`` — deterministic simulated time: 1e-6 relative (float printing).
+* ``sim_s`` / ``sim`` — deterministic simulated quantities (simulated
+  seconds, eval accuracy, rewards): 1e-6 relative (float printing).
 * ``mb`` — peak memory (RSS high-water): banded like throughput but in the
   *opposite* direction — only an increase above the band fails (an
   O(population) leak shows up as a blowup here; shrinking is always fine).
@@ -19,6 +20,15 @@ Tolerance policy by unit:
   host-dependent throughput: banded at +-RELATIVE_BAND (default 0.60; CI
   runners are noisy), failing only on *regressions* below the band.
   Speedups never fail.
+
+Relative bands are meaningless against a (near-)zero baseline: a zero
+throughput baseline would make the floor 0 and silently wave any
+regression through, and a zero memory baseline would fail every positive
+measurement with a misleading band message. Baselines with
+``|value| <= ZERO_EPS`` therefore take an explicit absolute branch: the
+current value must also be (near-)zero, anything else fails with a
+``zero baseline`` message telling you to re-bless (set the baseline entry
+to ``null``) or ``--update``.
 
 Bless convention (bootstrap): a baseline entry whose value is ``null`` (or
 a record with no baseline entry at all) is blessed from the current run
@@ -39,9 +49,11 @@ import sys
 
 RELATIVE_BAND = 0.60
 EXACT_UNITS = {"count", "bytes"}
-SIM_UNITS = {"sim_s"}
+SIM_UNITS = {"sim_s", "sim"}
 # Peak-memory units: regressions are *increases*, not drops.
 MEM_UNITS = {"mb"}
+# Below this magnitude a baseline is "zero" and relative bands don't apply.
+ZERO_EPS = 1e-9
 
 
 def key(rec):
@@ -79,6 +91,15 @@ def compare(baseline, current, band):
         elif unit in SIM_UNITS:
             if abs(got - want) > 1e-6 * max(1.0, abs(want)):
                 failures.append(f"{name}: {got} != baseline {want} (sim-exact)")
+        elif abs(want) <= ZERO_EPS:
+            # Banded units against a zero baseline: the band is degenerate
+            # (floor/ceiling of 0), so require zero-stays-zero explicitly.
+            if abs(got) > ZERO_EPS:
+                failures.append(
+                    f"{name}: {got} vs zero baseline — relative band "
+                    f"undefined; re-bless (null the baseline entry) or "
+                    f"run with --update"
+                )
         elif unit in MEM_UNITS:
             # Memory: only growth above the band is a regression.
             ceiling = want * (1.0 + band)

@@ -1,0 +1,125 @@
+"""Fixture-driven tests for bench_diff.py — tolerance bands, the
+zero-baseline guard, and the null-bless/--update bootstrap path.
+
+Stdlib-only (no jax/pytest required): runs under pytest or directly via
+``python3 python/tests/test_bench_diff.py``.
+"""
+
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import bench_diff  # noqa: E402
+
+
+def rec(bench, case, value, unit):
+    return {"bench": bench, "case": case, "value": value, "unit": unit}
+
+
+class CompareTolerances(unittest.TestCase):
+    def test_throughput_band_fails_only_on_regression(self):
+        base = [rec("b", "c", 100.0, "events/s")]
+        ok, _ = bench_diff.compare(base, [rec("b", "c", 41.0, "events/s")], 0.6)
+        self.assertEqual(ok, [])
+        fail, _ = bench_diff.compare(base, [rec("b", "c", 39.0, "events/s")], 0.6)
+        self.assertEqual(len(fail), 1)
+        # Speedups never fail.
+        ok, _ = bench_diff.compare(base, [rec("b", "c", 900.0, "events/s")], 0.6)
+        self.assertEqual(ok, [])
+
+    def test_memory_band_fails_only_on_growth(self):
+        base = [rec("b", "c", 100.0, "mb")]
+        ok, _ = bench_diff.compare(base, [rec("b", "c", 10.0, "mb")], 0.6)
+        self.assertEqual(ok, [])
+        fail, _ = bench_diff.compare(base, [rec("b", "c", 161.0, "mb")], 0.6)
+        self.assertEqual(len(fail), 1)
+
+    def test_exact_and_sim_units(self):
+        base = [rec("b", "n", 7, "count"), rec("b", "t", 1.5, "sim_s")]
+        cur = [rec("b", "n", 7, "count"), rec("b", "t", 1.5 + 1e-9, "sim_s")]
+        ok, _ = bench_diff.compare(base, cur, 0.6)
+        self.assertEqual(ok, [])
+        fail, _ = bench_diff.compare(base, [rec("b", "n", 8, "count")], 0.6)
+        self.assertEqual(len(fail), 1)
+
+
+class ZeroBaselineGuard(unittest.TestCase):
+    """A legitimately-zero baseline must neither crash, silently pass a
+    regression (throughput floor 0), nor fail with a misleading band
+    message (memory ceiling 0)."""
+
+    def test_zero_throughput_baseline_flags_positive_current(self):
+        base = [rec("b", "c", 0.0, "events/s")]
+        fail, _ = bench_diff.compare(base, [rec("b", "c", 50.0, "events/s")], 0.6)
+        self.assertEqual(len(fail), 1)
+        self.assertIn("zero baseline", fail[0])
+
+    def test_zero_memory_baseline_gets_zero_message_not_band(self):
+        base = [rec("b", "c", 0.0, "mb")]
+        fail, _ = bench_diff.compare(base, [rec("b", "c", 3.0, "mb")], 0.6)
+        self.assertEqual(len(fail), 1)
+        self.assertIn("zero baseline", fail[0])
+        self.assertNotIn("band +", fail[0])
+
+    def test_zero_stays_zero_passes(self):
+        base = [rec("b", "c", 0.0, "rounds/s")]
+        ok, _ = bench_diff.compare(base, [rec("b", "c", 0.0, "rounds/s")], 0.6)
+        self.assertEqual(ok, [])
+
+    def test_near_zero_baseline_counts_as_zero(self):
+        base = [rec("b", "c", 1e-12, "events/s")]
+        fail, _ = bench_diff.compare(base, [rec("b", "c", 50.0, "events/s")], 0.6)
+        self.assertEqual(len(fail), 1)
+        self.assertIn("zero baseline", fail[0])
+
+    def test_exact_units_unaffected_by_guard(self):
+        # A zero count baseline stays an exact comparison.
+        base = [rec("b", "c", 0, "count")]
+        fail, _ = bench_diff.compare(base, [rec("b", "c", 1, "count")], 0.6)
+        self.assertEqual(len(fail), 1)
+        self.assertIn("exact", fail[0])
+
+
+class BlessAndUpdate(unittest.TestCase):
+    def test_null_and_missing_baseline_entries_bless(self):
+        base = [rec("b", "old", None, "events/s")]
+        cur = [rec("b", "old", 10.0, "events/s"), rec("b", "new", 5.0, "events/s")]
+        fail, blessed = bench_diff.compare(base, cur, 0.6)
+        self.assertEqual(fail, [])
+        self.assertEqual(len(blessed), 2)
+
+    def test_main_update_merges_blessed_baseline(self):
+        with tempfile.TemporaryDirectory() as d:
+            baseline = os.path.join(d, "BENCH_BASELINE.json")
+            current = os.path.join(d, "BENCH_x.json")
+            with open(baseline, "w") as f:
+                json.dump(
+                    [rec("b", "keep", 1, "count"), rec("b", "fill", None, "sim_s")],
+                    f,
+                )
+            with open(current, "w") as f:
+                json.dump([rec("b", "fill", 2.5, "sim_s")], f)
+            code = bench_diff.main([current, "--baseline", baseline, "--update"])
+            self.assertEqual(code, 0)
+            with open(baseline) as f:
+                merged = {bench_diff.key(r): r["value"] for r in json.load(f)}
+            self.assertEqual(merged[("b", "keep")], 1)
+            self.assertEqual(merged[("b", "fill")], 2.5)
+
+    def test_main_zero_baseline_exits_nonzero(self):
+        with tempfile.TemporaryDirectory() as d:
+            baseline = os.path.join(d, "BENCH_BASELINE.json")
+            current = os.path.join(d, "BENCH_x.json")
+            with open(baseline, "w") as f:
+                json.dump([rec("b", "c", 0.0, "events/s")], f)
+            with open(current, "w") as f:
+                json.dump([rec("b", "c", 50.0, "events/s")], f)
+            self.assertEqual(bench_diff.main([current, "--baseline", baseline]), 1)
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -229,6 +229,15 @@ pub struct ExperimentConfig {
     /// `None` (default) is the static single-world oracle — every engine
     /// stays bit-for-bit on the frozen `step_round` reference.
     pub scenario: Option<ScenarioSpec>,
+    /// NOMA shared-uplink mode (arXiv 2003.01344): co-zone devices contend
+    /// for one carrier per technology — each link's bandwidth is divided by
+    /// the zone's current population. `None` defers to the mechanism
+    /// preset's default (`lgc-noma` enables it), then to the scenario
+    /// spec's own `noma` key, and ultimately to off — the independent-links
+    /// model, bit-for-bit equal to the frozen `step_round` oracle. Enabling
+    /// it with no scenario configured synthesizes a single shared-cell
+    /// world.
+    pub noma: Option<bool>,
     /// Hierarchical edge aggregation: one edge node per scenario zone
     /// terminates device uplinks locally and streams partial-aggregate
     /// frames to the cloud over its own backhaul link (`[edge]` tree).
@@ -324,6 +333,7 @@ impl Default for ExperimentConfig {
             downlink_compression: None,
             downlink_tariff_scale: 1.0,
             scenario: None,
+            noma: None,
             edge: None,
             edge_settings: None,
             streaming: false,
@@ -461,6 +471,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_bool("", "downlink") {
             cfg.downlink = Some(v);
+        }
+        if let Some(v) = doc.get_bool("", "noma") {
+            cfg.noma = Some(v);
         }
         if let Some(s) = doc.get_str("", "downlink_compression") {
             cfg.downlink_compression = Some(DownlinkCompression::parse(s)?);
@@ -817,6 +830,22 @@ mod tests {
             let doc = Document::parse(bad).unwrap();
             assert!(ExperimentConfig::from_document(&doc).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn noma_key_parses() {
+        let doc = Document::parse("noma = true\n").unwrap();
+        let cfg = ExperimentConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.noma, Some(true));
+        let doc = Document::parse("noma = false\n").unwrap();
+        assert_eq!(ExperimentConfig::from_document(&doc).unwrap().noma, Some(false));
+        // Unset keeps the deferred default (preset, then scenario spec).
+        let cfg = ExperimentConfig::from_document(&Document::new()).unwrap();
+        assert_eq!(cfg.noma, None);
+        // CLI override path.
+        let mut doc = Document::new();
+        apply_overrides(&mut doc, &["--noma=true".to_string()]).unwrap();
+        assert_eq!(ExperimentConfig::from_document(&doc).unwrap().noma, Some(true));
     }
 
     #[test]

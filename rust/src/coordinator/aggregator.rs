@@ -172,6 +172,87 @@ impl Aggregator for WeightedBySamples {
     }
 }
 
+/// Layer-divergence-feedback aggregation (arXiv 2404.08324): the server
+/// measures, per LGC layer, how *aligned* the devices' contributions are and
+/// reweights layers accordingly — a layer where devices agree (low
+/// inter-device divergence) is trusted more than one where they cancel.
+///
+/// Alignment is `rho_l = ||Σ_m g_{m,l}||² / (M · Σ_m ||g_{m,l}||²)`, which
+/// Cauchy–Schwarz pins to `[0, 1]`: `1` when all devices ship the same
+/// direction, `→ 1/M` when contributions are mutually orthogonal, `→ 0` when
+/// they cancel. Weights are `rho` normalized to mean 1 over the non-empty
+/// layers, so uniform alignment reproduces the plain mean exactly and the
+/// total step magnitude stays comparable across rounds.
+///
+/// Batch-only on purpose: the rule needs every upload's layer norms before
+/// any weight is known, so `stream_begin` keeps the default `false` and the
+/// server falls back to buffering clones and driving this at finalize time —
+/// the documented fallback path for non-streaming rules.
+#[derive(Clone, Debug, Default)]
+pub struct LayerDivergence {
+    /// Reusable per-layer dense accumulators (one model-sized buffer per
+    /// LGC layer, grown lazily, zeroed each round).
+    acc: Vec<Vec<f32>>,
+}
+
+impl LayerDivergence {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Aggregator for LayerDivergence {
+    fn name(&self) -> String {
+        "layer-divergence".to_string()
+    }
+
+    fn aggregate(&mut self, uploads: &[&LgcUpdate], out: &mut [f32]) {
+        crate::kernels::fill(out, 0.0);
+        if uploads.is_empty() {
+            return;
+        }
+        let m = uploads.len() as f64;
+        let n_layers = uploads.iter().map(|u| u.layers.len()).max().unwrap_or(0);
+        while self.acc.len() < n_layers {
+            self.acc.push(Vec::new());
+        }
+        for buf in self.acc.iter_mut().take(n_layers) {
+            buf.resize(out.len(), 0.0);
+            crate::kernels::fill(buf, 0.0);
+        }
+        // acc_l = Σ_m g_{m,l} (dense) and sum_sq_l = Σ_m ||g_{m,l}||² (from
+        // the sparse values directly — no dense pass per upload).
+        let mut sum_sq = vec![0f64; n_layers];
+        for upd in uploads {
+            for (l, layer) in upd.layers.iter().enumerate() {
+                crate::kernels::scatter_add(&mut self.acc[l], &layer.indices, &layer.values, 1.0);
+                sum_sq[l] += layer.values.iter().map(|&v| v as f64 * v as f64).sum::<f64>();
+            }
+        }
+        let mut rho = vec![0f64; n_layers];
+        let mut rho_sum = 0f64;
+        let mut active = 0usize;
+        for l in 0..n_layers {
+            if sum_sq[l] > 0.0 {
+                let norm_sq = crate::kernels::reduce::norm2_chunked(&self.acc[l]);
+                rho[l] = (norm_sq / (m * sum_sq[l])).clamp(0.0, 1.0);
+                rho_sum += rho[l];
+                active += 1;
+            }
+        }
+        for l in 0..n_layers {
+            if sum_sq[l] <= 0.0 {
+                continue; // empty layer: nothing accumulated
+            }
+            // Mean-1 normalization over active layers; if every alignment
+            // collapsed to ~0 (perfect cancellation) fall back to uniform
+            // weights — the accumulators are ~zero anyway.
+            let w = if rho_sum > 0.0 { rho[l] * active as f64 / rho_sum } else { 1.0 };
+            crate::kernels::axpy((w / m) as f32, &self.acc[l], out);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -253,6 +334,78 @@ mod tests {
                 batch[i]
             );
         }
+    }
+
+    #[test]
+    fn layer_divergence_identical_uploads_is_mean() {
+        // All devices ship the same update: every layer's alignment is 1,
+        // mean-1 normalization makes every weight 1 — exactly the mean.
+        let a = upd(64, 11, 8);
+        let same = a.clone();
+        let mut ld_out = vec![0f32; 64];
+        let mut m_out = vec![0f32; 64];
+        LayerDivergence::new().aggregate(&[&a, &same], &mut ld_out);
+        MeanAggregator.aggregate(&[&a, &same], &mut m_out);
+        for i in 0..64 {
+            assert!(
+                (ld_out[i] - m_out[i]).abs() < 1e-6,
+                "at {i}: {} vs {}",
+                ld_out[i],
+                m_out[i]
+            );
+        }
+    }
+
+    #[test]
+    fn layer_divergence_single_upload_is_identity() {
+        let a = upd(32, 12, 6);
+        let mut out = vec![999.0f32; 32];
+        LayerDivergence::new().aggregate(&[&a], &mut out);
+        let da = a.decode();
+        for i in 0..32 {
+            assert!((out[i] - da[i]).abs() < 1e-6, "at {i}: {} vs {}", out[i], da[i]);
+        }
+    }
+
+    #[test]
+    fn layer_divergence_upweights_aligned_layers() {
+        use crate::compression::Layer;
+        // Two uploads, two layers. Layer 0 agrees across devices (alignment
+        // 1); layer 1 cancels exactly (alignment 0). The aligned layer must
+        // carry more than its mean share, the cancelled one contributes the
+        // zero its accumulator holds.
+        let mk = |v1: f32| LgcUpdate {
+            dim: 4,
+            layers: vec![
+                Layer { indices: vec![0], values: vec![2.0] },
+                Layer { indices: vec![1], values: vec![v1] },
+            ],
+        };
+        let a = mk(1.0);
+        let b = mk(-1.0);
+        let mut out = vec![0f32; 4];
+        LayerDivergence::new().aggregate(&[&a, &b], &mut out);
+        // Layer 0: rho = 1; layer 1: rho = 0 -> weights (2, 0) after mean-1
+        // normalization over the two active layers. acc_0[0] = 4, so
+        // out[0] = (w0/M) * 4 = (2/2) * 4 = 4 (the plain mean would give 2).
+        assert!((out[0] - 4.0).abs() < 1e-6, "aligned layer doubled: {}", out[0]);
+        assert!(out[1].abs() < 1e-6, "cancelled layer silent: {}", out[1]);
+        assert_eq!(out[2], 0.0);
+        assert_eq!(out[3], 0.0);
+    }
+
+    #[test]
+    fn layer_divergence_overwrites_stale_out_and_reuses_buffers() {
+        let a = upd(16, 13, 4);
+        let b = upd(16, 14, 4);
+        let mut agg = LayerDivergence::new();
+        let mut first = vec![999.0f32; 16];
+        agg.aggregate(&[&a, &b], &mut first);
+        // Second round through the same instance (dirty accumulators) must
+        // produce the identical answer.
+        let mut second = vec![-7.0f32; 16];
+        agg.aggregate(&[&a, &b], &mut second);
+        assert_eq!(first, second);
     }
 
     #[test]

@@ -30,7 +30,7 @@ use super::registry::{
 };
 use super::server::Server;
 use super::trainer::LocalTrainer;
-use crate::channels::DeviceChannels;
+use crate::channels::{DeviceChannels, FadingParams};
 use crate::compression::{Compressor, LgcUpdate};
 use crate::config::ExperimentConfig;
 use crate::downlink::{Downlink, DownlinkCompression};
@@ -38,7 +38,7 @@ use crate::drl::DeviceAgent;
 use crate::edge::Edge;
 use crate::population::{self, ClientSampler, Population, SamplerKind, SpecSeed};
 use crate::resources::{ComputeCostModel, ResourceMeter};
-use crate::scenario::{Scenario, ScenarioSpec};
+use crate::scenario::{DynamicsKind, Scenario, ScenarioSpec, ZoneSpec};
 use crate::sim::{SimStats, SyncMode};
 use crate::util::Rng;
 
@@ -329,9 +329,41 @@ impl<'a> ExperimentBuilder<'a> {
         // and downlink). Population-mode clients pick their configuration
         // up at materialization instead.
         let mut devices = devices;
-        let scenario = match &cfg.scenario {
+        // NOMA shared-uplink resolution, same precedence shape as the
+        // downlink/edge seams: explicit config > preset default > the
+        // scenario spec's own `noma` key > off. Enabling NOMA without a
+        // scenario synthesizes a trivial single-zone "shared-cell" world so
+        // the contention divisor (the zone population) exists.
+        let noma = cfg.noma.unwrap_or(
+            preset.map_or(false, |p| p.default_noma)
+                || cfg.scenario.as_ref().map_or(false, |s| s.noma),
+        );
+        let effective_scenario = match &cfg.scenario {
             Some(spec) => {
-                let sc = Scenario::new(spec.clone(), n_clients, &cfg.channel_types, &rng)
+                let mut spec = spec.clone();
+                spec.noma = noma;
+                Some(spec)
+            }
+            None if noma => Some(ScenarioSpec {
+                name: "shared-cell".to_string(),
+                move_prob: 0.0,
+                start_spread: false,
+                trace_len: 1024,
+                zones: vec![ZoneSpec {
+                    name: "cell".to_string(),
+                    channels: cfg.channel_types.clone(),
+                    bw_scale: 1.0,
+                    fading: FadingParams::default(),
+                    dynamics: DynamicsKind::Markov,
+                }],
+                phases: Vec::new(),
+                noma: true,
+            }),
+            None => None,
+        };
+        let scenario = match effective_scenario {
+            Some(spec) => {
+                let sc = Scenario::new(spec, n_clients, &cfg.channel_types, &rng)
                     .map_err(|e| anyhow!("invalid scenario: {e}"))?;
                 for dev in &mut devices {
                     sc.configure(dev.id, &mut dev.channels);
@@ -600,6 +632,46 @@ mod tests {
         let trainer5 = NativeLrTrainer::new(&c5);
         let exp5 = ExperimentBuilder::new(c5).trainer(&trainer5).build().unwrap();
         assert_eq!(exp5.edge.as_ref().unwrap().n_zones(), 3);
+    }
+
+    #[test]
+    fn noma_resolution_config_over_preset_over_scenario_over_off() {
+        // Default: off — no scenario, no NOMA, the frozen oracle world.
+        let c = cfg();
+        let trainer = NativeLrTrainer::new(&c);
+        let exp = ExperimentBuilder::new(c).trainer(&trainer).build().unwrap();
+        assert!(exp.scenario.is_none());
+        // The lgc-noma preset synthesizes the single shared-cell world.
+        let mut c2 = cfg();
+        c2.mechanism = Mechanism::parse("lgc-noma").unwrap();
+        let trainer2 = NativeLrTrainer::new(&c2);
+        let exp2 = ExperimentBuilder::new(c2).trainer(&trainer2).build().unwrap();
+        let sc = exp2.scenario.as_ref().expect("preset synthesizes a world");
+        assert!(sc.noma());
+        assert_eq!(sc.name(), "shared-cell");
+        assert_eq!(sc.n_zones(), 1);
+        // Explicit config wins over the preset default.
+        let mut c3 = cfg();
+        c3.mechanism = Mechanism::parse("lgc-noma").unwrap();
+        c3.noma = Some(false);
+        let trainer3 = NativeLrTrainer::new(&c3);
+        let exp3 = ExperimentBuilder::new(c3).trainer(&trainer3).build().unwrap();
+        assert!(exp3.scenario.is_none(), "noma = false suppresses the synthesized world");
+        // `noma = true` rides an existing scenario instead of synthesizing.
+        let mut c4 = cfg();
+        c4.noma = Some(true);
+        c4.scenario = Some(crate::scenario::ScenarioRegistry::resolve("commute").unwrap());
+        let trainer4 = NativeLrTrainer::new(&c4);
+        let exp4 = ExperimentBuilder::new(c4).trainer(&trainer4).build().unwrap();
+        let sc4 = exp4.scenario.as_ref().unwrap();
+        assert!(sc4.noma());
+        assert_eq!(sc4.name(), "commute");
+        // And an explicit scenario stays independent-links without the key.
+        let mut c5 = cfg();
+        c5.scenario = Some(crate::scenario::ScenarioRegistry::resolve("commute").unwrap());
+        let trainer5 = NativeLrTrainer::new(&c5);
+        let exp5 = ExperimentBuilder::new(c5).trainer(&trainer5).build().unwrap();
+        assert!(!exp5.scenario.as_ref().unwrap().noma());
     }
 
     #[test]

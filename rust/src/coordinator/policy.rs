@@ -10,6 +10,7 @@
 use super::device::Device;
 use crate::channels::AllocationPlan;
 use crate::drl::DeviceAgent;
+use crate::resources::Resource;
 
 /// Per-round control decisions for one experiment.
 ///
@@ -100,6 +101,90 @@ impl RoundPolicy for FastestSingle {
     }
 }
 
+/// Energy-adaptive compression-ratio control ("To Talk or to Work", arXiv
+/// 2012.11804): the per-round upload budget scales with the device's
+/// remaining energy fraction, so a device near exhaustion talks less and
+/// spends its remaining joules on computation. Deterministic — reads only
+/// the device's [`crate::resources::ResourceMeter`], no RNG.
+#[derive(Clone, Debug)]
+pub struct EnergyAdaptive {
+    pub h: usize,
+    /// Full-budget per-channel coordinate counts (zero = silent channel).
+    pub counts: Vec<usize>,
+    /// Lower bound on the scaling fraction, so a drained device still ships
+    /// a sliver of every active layer instead of going silent.
+    pub floor: f64,
+}
+
+impl RoundPolicy for EnergyAdaptive {
+    fn name(&self) -> String {
+        format!("energy-adaptive(h={})", self.h)
+    }
+
+    fn decide(
+        &mut self,
+        _round: usize,
+        dev: &Device,
+        _agent: Option<&mut DeviceAgent>,
+    ) -> (usize, AllocationPlan) {
+        let frac = dev.meter.remaining_frac(Resource::Energy).max(self.floor);
+        let counts = self
+            .counts
+            .iter()
+            .map(|&k| if k == 0 { 0 } else { ((k as f64 * frac).round() as usize).max(1) })
+            .collect();
+        (self.h, AllocationPlan { counts })
+    }
+}
+
+/// FedGreen-style fine-grained device-side compression selection (arXiv
+/// 2111.06146): each device quantizes its current per-channel quality
+/// (effective bandwidth relative to the technology's nominal rate) into one
+/// of `levels` compression levels and sizes that channel's layer
+/// accordingly — a weak link carries a heavily-compressed layer, a clean
+/// link the full budget. Reads link state only (no RNG consumption), so it
+/// never perturbs any existing stream.
+#[derive(Clone, Debug)]
+pub struct FedGreen {
+    pub h: usize,
+    /// Full-budget per-channel coordinate counts (zero = silent channel).
+    pub counts: Vec<usize>,
+    /// Number of discrete compression levels per channel (>= 1).
+    pub levels: usize,
+}
+
+impl RoundPolicy for FedGreen {
+    fn name(&self) -> String {
+        format!("fedgreen(h={},levels={})", self.h, self.levels)
+    }
+
+    fn decide(
+        &mut self,
+        _round: usize,
+        dev: &Device,
+        _agent: Option<&mut DeviceAgent>,
+    ) -> (usize, AllocationPlan) {
+        let levels = self.levels.max(1) as f64;
+        let mut counts = vec![0usize; dev.channels.len()];
+        for (c, slot) in counts.iter_mut().enumerate() {
+            let k = self.counts.get(c).copied().unwrap_or(0);
+            if k == 0 {
+                continue;
+            }
+            let link = &dev.channels.links[c];
+            if !link.is_up() {
+                continue;
+            }
+            let q = (link.effective_bandwidth() / link.ty.bandwidth_mb_s()).clamp(0.0, 1.0);
+            // Quantize up: quality in ((l-1)/levels, l/levels] selects level
+            // l, so even a barely-alive link keeps its smallest layer.
+            let lvl = ((q * levels).ceil()).max(1.0) / levels;
+            *slot = ((k as f64 * lvl).round() as usize).max(1);
+        }
+        (self.h, AllocationPlan { counts })
+    }
+}
+
 /// The paper's DDPG controller (Sec. 3.2–3.3): each device's agent observes
 /// the Eq. 11 state, emits the `(H_m, D_{m,n})` action, and learns from the
 /// Eq. 16 reward after the round.
@@ -154,5 +239,87 @@ impl RoundPolicy for DdpgPolicy {
         );
         let (r, _) = agent.feedback(delta, &eps, next_state, done);
         Some(r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channels::{ChannelType, DeviceChannels};
+    use crate::compression::DenseNoop;
+    use crate::resources::{ComputeCostModel, ResourceMeter};
+    use crate::util::Rng;
+
+    fn device(energy_budget: f64) -> Device {
+        let types = vec![ChannelType::G5, ChannelType::G4, ChannelType::G3];
+        Device::new(
+            0,
+            vec![0.0; 16],
+            Box::new(DenseNoop),
+            DeviceChannels::new(&types, &Rng::new(7), 0),
+            ResourceMeter::new(energy_budget, f64::INFINITY),
+            ComputeCostModel::for_params(16),
+        )
+    }
+
+    #[test]
+    fn energy_adaptive_scales_with_remaining_budget() {
+        let mut pol = EnergyAdaptive { h: 2, counts: vec![100, 40, 0], floor: 0.1 };
+        let mut dev = device(100.0);
+        // Full budget: the full counts, zeros staying silent.
+        let (h, plan) = pol.decide(0, &dev, None);
+        assert_eq!(h, 2);
+        assert_eq!(plan.counts, vec![100, 40, 0]);
+        // Half the budget burned: counts halve.
+        dev.meter.record_round(30.0, 20.0, 0.0, 1.0);
+        let (_, plan) = pol.decide(1, &dev, None);
+        assert_eq!(plan.counts, vec![50, 20, 0]);
+        // Exhausted: the floor keeps a sliver of every active layer.
+        dev.meter.record_round(100.0, 0.0, 0.0, 1.0);
+        let (_, plan) = pol.decide(2, &dev, None);
+        assert_eq!(plan.counts, vec![10, 4, 0]);
+    }
+
+    #[test]
+    fn energy_adaptive_unbudgeted_is_static() {
+        let mut pol = EnergyAdaptive { h: 3, counts: vec![64, 32, 16], floor: 0.1 };
+        let mut dev = device(f64::INFINITY);
+        dev.meter.record_round(1e9, 1e9, 0.0, 1.0);
+        let (_, plan) = pol.decide(0, &dev, None);
+        assert_eq!(plan.counts, vec![64, 32, 16], "infinite budget never throttles");
+    }
+
+    #[test]
+    fn fedgreen_full_quality_keeps_full_counts_and_down_links_go_silent() {
+        let mut pol = FedGreen { h: 2, counts: vec![100, 40, 20], levels: 4 };
+        let mut dev = device(f64::INFINITY);
+        // Fresh links start in the Good fading state (gain 1): level 4/4.
+        let (h, plan) = pol.decide(0, &dev, None);
+        assert_eq!(h, 2);
+        assert_eq!(plan.counts, vec![100, 40, 20]);
+        // A masked link carries nothing; the rest are untouched.
+        dev.channels.links[1].set_up(false);
+        let (_, plan) = pol.decide(1, &dev, None);
+        assert_eq!(plan.counts, vec![100, 0, 20]);
+    }
+
+    #[test]
+    fn fedgreen_quantizes_degraded_links_down() {
+        let mut pol = FedGreen { h: 2, counts: vec![100, 40, 20], levels: 4 };
+        let mut dev = device(f64::INFINITY);
+        // Throttle the 5G link to 30% of nominal: ceil(0.3 * 4)/4 = 1/2.
+        let params = dev.channels.links[0].params;
+        dev.channels.links[0].apply_profile(
+            true,
+            params,
+            crate::scenario::ChannelDynamics::Markov,
+            0.3,
+            1.0,
+        );
+        let (_, plan) = pol.decide(0, &dev, None);
+        assert_eq!(plan.counts, vec![50, 40, 20]);
+        // Decisions consume no RNG: twin devices decide identically twice.
+        let (_, again) = pol.decide(1, &dev, None);
+        assert_eq!(again.counts, plan.counts);
     }
 }

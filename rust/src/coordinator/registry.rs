@@ -7,8 +7,10 @@
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use super::aggregator::{Aggregator, MeanAggregator};
-use super::policy::{DdpgPolicy, FastestSingle, RoundPolicy, StaticLayered};
+use super::aggregator::{Aggregator, LayerDivergence, MeanAggregator};
+use super::policy::{
+    DdpgPolicy, EnergyAdaptive, FastestSingle, FedGreen, RoundPolicy, StaticLayered,
+};
 use crate::compression::{
     Compressor, DenseNoop, ErrorCompensated, LgcRadix, LgcTopAB, Qsgd, RandK,
 };
@@ -65,6 +67,10 @@ pub struct MechanismPreset {
     /// (`cfg.edge` / any `[edge]` key always wins; `false` here means the
     /// flat single-server topology).
     pub default_edge: bool,
+    /// NOMA shared-uplink default applied when the config leaves `noma`
+    /// unset: `true` runs the preset with co-zone carrier contention
+    /// (`cfg.noma` always wins; `false` here means independent links).
+    pub default_noma: bool,
 }
 
 impl MechanismPreset {
@@ -84,6 +90,7 @@ impl MechanismPreset {
             default_sync: None,
             default_downlink: None,
             default_edge: false,
+            default_noma: false,
         }
     }
 
@@ -106,6 +113,14 @@ impl MechanismPreset {
     /// otherwise.
     pub fn with_default_edge(mut self) -> Self {
         self.default_edge = true;
+        self
+    }
+
+    /// Attach a NOMA default (builder style): the preset runs with the
+    /// shared-uplink carrier-contention model unless the config says
+    /// otherwise.
+    pub fn with_default_noma(mut self) -> Self {
+        self.default_noma = true;
         self
     }
 }
@@ -259,6 +274,57 @@ impl MechanismRegistry {
             .with_default_sync(SyncMode::FullyAsync { staleness_decay: 0.5 }),
         );
 
+        reg.register(MechanismPreset::new(
+            "energy-adaptive",
+            "LGC with the upload budget scaled by remaining energy \
+             (\"To Talk or to Work\", arXiv 2012.11804)",
+            ef_lgc_compressor(),
+            mean_aggregator(),
+            Arc::new(|ctx| {
+                let mut counts = vec![0usize; ctx.cfg.channel_types.len()];
+                for (c, &k) in ctx.static_ks.iter().enumerate() {
+                    counts[c] = k;
+                }
+                Box::new(EnergyAdaptive { h: ctx.cfg.h_fixed, counts, floor: 0.1 })
+            }),
+        ));
+
+        reg.register(MechanismPreset::new(
+            "fedgreen",
+            "LGC with per-device per-channel compression levels picked from \
+             local link quality (FedGreen, arXiv 2111.06146)",
+            ef_lgc_compressor(),
+            mean_aggregator(),
+            Arc::new(|ctx| {
+                let mut counts = vec![0usize; ctx.cfg.channel_types.len()];
+                for (c, &k) in ctx.static_ks.iter().enumerate() {
+                    counts[c] = k;
+                }
+                Box::new(FedGreen { h: ctx.cfg.h_fixed, counts, levels: 4 })
+            }),
+        ));
+
+        reg.register(MechanismPreset::new(
+            "lgc-divergence",
+            "LGC with server-side layer-divergence-feedback reweighting \
+             (arXiv 2404.08324)",
+            ef_lgc_compressor(),
+            Arc::new(|_ctx| Box::new(LayerDivergence::new())),
+            static_layered_policy(),
+        ));
+
+        reg.register(
+            MechanismPreset::new(
+                "lgc-noma",
+                "LGC (static allocation) over a NOMA shared uplink: co-zone \
+                 devices contend for one carrier (arXiv 2003.01344)",
+                ef_lgc_compressor(),
+                mean_aggregator(),
+                static_layered_policy(),
+            )
+            .with_default_noma(),
+        );
+
         reg
     }
 
@@ -344,6 +410,20 @@ mod tests {
         assert_eq!(p.default_sync, Some(SyncMode::SemiAsync { buffer_k: 2 }));
         assert!(!reg.get("lgc-static").unwrap().default_edge);
         assert!(!reg.get("lgc-downlink").unwrap().default_edge);
+    }
+
+    #[test]
+    fn competitor_presets_registered_with_expected_parts() {
+        let reg = MechanismRegistry::builtin();
+        for key in ["energy-adaptive", "fedgreen", "lgc-divergence", "lgc-noma"] {
+            assert!(reg.get(key).is_some(), "no preset for {key}");
+        }
+        assert!(reg.get("lgc-noma").unwrap().default_noma);
+        for key in ["lgc-static", "energy-adaptive", "fedgreen", "lgc-divergence"] {
+            assert!(!reg.get(key).unwrap().default_noma, "{key} must not default noma on");
+        }
+        // The full registry carries at least the 11 originals + 4 new ones.
+        assert!(reg.names().len() >= 15, "registry shrank: {:?}", reg.names());
     }
 
     #[test]

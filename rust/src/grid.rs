@@ -1,0 +1,477 @@
+//! One-command comparison grid over mechanism × scenario × sync-mode.
+//!
+//! `lgc compare-grid` drives every cell from the [`MechanismRegistry`]
+//! (no hard-coded mechanism list — new presets join the grid the moment
+//! they register), runs them all from one seed, and emits a ranked table
+//! to stdout plus CSV and an EXPERIMENTS.md-ready markdown block.
+//!
+//! Ranking metrics (see DESIGN.md §"Competitor mechanisms & comparison
+//! grid"):
+//!
+//! - **acc@budget** — best eval accuracy reached while cumulative energy
+//!   stays within a shared joule budget (`--budget_j=F`, defaulting to the
+//!   smallest total spend across the grid so every cell is scored on a
+//!   budget all of them reached).
+//! - **time-to-target** — simulated seconds until eval accuracy first
+//!   reaches `--target_acc=F` (cells that never reach it sort last).
+//! - **J/round** — total energy divided by rounds run, the steady-state
+//!   per-round cost.
+//!
+//! Cells are ranked by acc@budget (desc), then time-to-target (asc),
+//! then J/round (asc), then name — all on simulated quantities, so the
+//! ranked output is bit-identical across repeat runs of the same seed.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::bench::Table;
+use crate::config::ExperimentConfig;
+use crate::coordinator::{ExperimentBuilder, LocalTrainer, MechanismRegistry};
+use crate::metrics::RunLog;
+
+/// Which cells to run. Built by the CLI from `--mechanisms=`,
+/// `--scenarios=`, `--sync_modes=`, `--target_acc=`, `--budget_j=`.
+#[derive(Clone, Debug)]
+pub struct GridSpec {
+    /// Mechanism registry keys (canonical spelling).
+    pub mechanisms: Vec<String>,
+    /// Scenario names (`"none"` is the static reference world).
+    pub scenarios: Vec<String>,
+    /// Sync modes, as config `sync_mode` values.
+    pub sync_modes: Vec<String>,
+    /// Accuracy target for the time-to-target column.
+    pub target_acc: f64,
+    /// Shared energy budget for acc@budget; `None` defaults to the
+    /// smallest total spend across the grid.
+    pub budget_j: Option<f64>,
+}
+
+impl GridSpec {
+    /// The default grid: every registered mechanism, the static world plus
+    /// one mobile/fading world, both synchronous sync modes.
+    pub fn default_for(registry: &MechanismRegistry) -> Self {
+        GridSpec {
+            mechanisms: select_mechanisms(None, registry).expect("full registry is valid"),
+            scenarios: vec!["none".to_string(), "diurnal".to_string()],
+            sync_modes: vec!["barrier".to_string(), "semi-async".to_string()],
+            target_acc: 0.8,
+            budget_j: None,
+        }
+    }
+}
+
+/// Resolve a `--mechanisms=a,b,c` subset against the registry, or
+/// enumerate every registered preset when no subset is given.
+///
+/// This is the single source of truth for "run all mechanisms": both
+/// `lgc compare` and `lgc compare-grid` call it, so the covered set can
+/// never drift from the registry again.
+pub fn select_mechanisms(
+    subset: Option<&str>,
+    registry: &MechanismRegistry,
+) -> Result<Vec<String>, String> {
+    match subset {
+        None => Ok(registry.names().iter().map(|s| s.to_string()).collect()),
+        Some(csv) => {
+            let mut out = Vec::new();
+            for raw in csv.split(',') {
+                let name = raw.trim();
+                if name.is_empty() {
+                    continue;
+                }
+                let preset = registry.get(name).ok_or_else(|| {
+                    format!(
+                        "unknown mechanism `{name}` (registered: {})",
+                        registry.names().join(", ")
+                    )
+                })?;
+                if !out.contains(&preset.key) {
+                    out.push(preset.key.clone());
+                }
+            }
+            if out.is_empty() {
+                return Err("empty --mechanisms= list".to_string());
+            }
+            Ok(out)
+        }
+    }
+}
+
+/// One finished grid cell with its ranking metrics.
+#[derive(Clone, Debug)]
+pub struct GridCell {
+    pub mechanism: String,
+    pub scenario: String,
+    pub sync_mode: String,
+    pub rounds: usize,
+    pub final_acc: f64,
+    pub best_acc: f64,
+    /// Best eval accuracy within the shared energy budget (NaN if the
+    /// first evaluated round already overshot it).
+    pub acc_at_budget: f64,
+    /// Simulated seconds to first reach the target accuracy.
+    pub time_to_target_s: Option<f64>,
+    pub j_per_round: f64,
+    pub total_energy_j: f64,
+    pub total_time_s: f64,
+    pub upload_mb: f64,
+}
+
+/// The full grid result, cells already in ranked order.
+#[derive(Clone, Debug)]
+pub struct GridReport {
+    pub cells: Vec<GridCell>,
+    pub budget_j: f64,
+    pub target_acc: f64,
+}
+
+/// Run every cell of `spec` (same seed per cell — only `mechanism`,
+/// `scenario`, `sync_mode` differ), score, and rank. `make_trainer` is
+/// injected so the CLI's PJRT-or-native choice applies per cell.
+pub fn run_grid<F>(
+    spec: &GridSpec,
+    config: Option<&Path>,
+    overrides: &[String],
+    make_trainer: F,
+) -> Result<GridReport>
+where
+    F: Fn(&ExperimentConfig) -> Result<Box<dyn LocalTrainer>>,
+{
+    let mut runs: Vec<(String, String, String, RunLog)> = Vec::new();
+    for mech in &spec.mechanisms {
+        for scen in &spec.scenarios {
+            for mode in &spec.sync_modes {
+                let mut ov = overrides.to_vec();
+                ov.push(format!("--mechanism={mech}"));
+                ov.push(format!("--scenario={scen}"));
+                ov.push(format!("--sync_mode={mode}"));
+                let cell = format!("{mech}/{scen}/{mode}");
+                let cfg = ExperimentConfig::load(config, &ov)
+                    .map_err(|e| anyhow!("grid cell {cell}: {e}"))?;
+                let mut trainer = make_trainer(&cfg)?;
+                let mut exp = ExperimentBuilder::new(cfg).trainer(trainer.as_ref()).build()?;
+                let log = exp.run(trainer.as_mut())?;
+                runs.push((mech.clone(), scen.clone(), mode.clone(), log));
+            }
+        }
+    }
+    if runs.is_empty() {
+        return Err(anyhow!("empty grid: no mechanism/scenario/sync_mode cells"));
+    }
+
+    // Score every cell on the budget all of them reached, unless the
+    // caller pinned one.
+    let budget_j = spec.budget_j.unwrap_or_else(|| {
+        runs.iter()
+            .filter_map(|(_, _, _, log)| log.last().map(|r| r.energy_j))
+            .fold(f64::INFINITY, f64::min)
+    });
+
+    let mut cells: Vec<GridCell> = runs
+        .into_iter()
+        .map(|(mechanism, scenario, sync_mode, log)| {
+            let rounds = log.records.len();
+            let last_energy = log.last().map_or(0.0, |r| r.energy_j);
+            GridCell {
+                final_acc: log.final_acc(),
+                best_acc: log.best_acc(),
+                acc_at_budget: log.acc_under_budget(0, budget_j),
+                time_to_target_s: log.cost_to_accuracy(spec.target_acc).map(|t| t.3),
+                j_per_round: if rounds > 0 { last_energy / rounds as f64 } else { 0.0 },
+                total_energy_j: last_energy,
+                total_time_s: log.last().map_or(0.0, |r| r.total_time_s),
+                upload_mb: log.records.iter().map(|r| r.bytes_up).sum::<u64>() as f64
+                    / (1024.0 * 1024.0),
+                rounds,
+                mechanism,
+                scenario,
+                sync_mode,
+            }
+        })
+        .collect();
+
+    cells.sort_by(rank_cmp);
+
+    Ok(GridReport { cells, budget_j, target_acc: spec.target_acc })
+}
+
+/// The ranking contract: acc@budget (desc, NaN last), then time-to-target
+/// (asc, unreached last), then J/round (asc), then name — a total order,
+/// so equal metrics still rank deterministically.
+pub fn rank_cmp(a: &GridCell, b: &GridCell) -> std::cmp::Ordering {
+    let acc = |c: &GridCell| {
+        if c.acc_at_budget.is_nan() { f64::NEG_INFINITY } else { c.acc_at_budget }
+    };
+    acc(b)
+        .total_cmp(&acc(a))
+        .then_with(|| {
+            a.time_to_target_s
+                .unwrap_or(f64::INFINITY)
+                .total_cmp(&b.time_to_target_s.unwrap_or(f64::INFINITY))
+        })
+        .then_with(|| a.j_per_round.total_cmp(&b.j_per_round))
+        .then_with(|| {
+            (&a.mechanism, &a.scenario, &a.sync_mode)
+                .cmp(&(&b.mechanism, &b.scenario, &b.sync_mode))
+        })
+}
+
+/// NaN-aware fixed-precision float cell ("-" for NaN).
+fn fmt_f(v: f64, prec: usize) -> String {
+    if v.is_nan() {
+        "-".to_string()
+    } else {
+        format!("{v:.prec$}")
+    }
+}
+
+fn fmt_opt(v: Option<f64>, prec: usize) -> String {
+    v.map_or_else(|| "-".to_string(), |v| format!("{v:.prec$}"))
+}
+
+impl GridReport {
+    /// Ranked table on stdout. Every quantity is simulated (no wall clock,
+    /// no RSS), so two runs of the same grid print identical bytes — CI
+    /// diffs this output to pin rank determinism.
+    pub fn print_table(&self) {
+        println!(
+            "== compare-grid: {} cells | budget {:.1} J | target acc {:.2} ==",
+            self.cells.len(),
+            self.budget_j,
+            self.target_acc
+        );
+        let mut t = Table::new(&[
+            "rank",
+            "mechanism",
+            "scenario",
+            "sync",
+            "acc@budget",
+            "final_acc",
+            "best_acc",
+            "t_target_s",
+            "J/round",
+            "total_J",
+            "sim_s",
+            "up_MB",
+        ]);
+        for (i, c) in self.cells.iter().enumerate() {
+            t.row(&[
+                (i + 1).to_string(),
+                c.mechanism.clone(),
+                c.scenario.clone(),
+                c.sync_mode.clone(),
+                fmt_f(c.acc_at_budget, 4),
+                fmt_f(c.final_acc, 4),
+                fmt_f(c.best_acc, 4),
+                fmt_opt(c.time_to_target_s, 1),
+                fmt_f(c.j_per_round, 2),
+                fmt_f(c.total_energy_j, 1),
+                fmt_f(c.total_time_s, 1),
+                fmt_f(c.upload_mb, 2),
+            ]);
+        }
+        t.print();
+    }
+
+    /// CSV with one row per ranked cell.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "rank,mechanism,scenario,sync_mode,acc_at_budget,final_acc,best_acc,\
+             time_to_target_s,j_per_round,total_energy_j,total_time_s,upload_mb,rounds\n",
+        );
+        for (i, c) in self.cells.iter().enumerate() {
+            let _ = writeln!(
+                s,
+                "{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                i + 1,
+                c.mechanism,
+                c.scenario,
+                c.sync_mode,
+                fmt_f(c.acc_at_budget, 6),
+                fmt_f(c.final_acc, 6),
+                fmt_f(c.best_acc, 6),
+                fmt_opt(c.time_to_target_s, 3),
+                fmt_f(c.j_per_round, 4),
+                fmt_f(c.total_energy_j, 3),
+                fmt_f(c.total_time_s, 3),
+                fmt_f(c.upload_mb, 4),
+                c.rounds,
+            );
+        }
+        s
+    }
+
+    /// EXPERIMENTS.md-ready markdown block (ranked table + metric caption).
+    pub fn to_markdown(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "| rank | mechanism | scenario | sync | acc@budget | final acc | \
+             time-to-target (s) | J/round |"
+        );
+        let _ = writeln!(s, "|---:|---|---|---|---:|---:|---:|---:|");
+        for (i, c) in self.cells.iter().enumerate() {
+            let _ = writeln!(
+                s,
+                "| {} | {} | {} | {} | {} | {} | {} | {} |",
+                i + 1,
+                c.mechanism,
+                c.scenario,
+                c.sync_mode,
+                fmt_f(c.acc_at_budget, 4),
+                fmt_f(c.final_acc, 4),
+                fmt_opt(c.time_to_target_s, 1),
+                fmt_f(c.j_per_round, 2),
+            );
+        }
+        let _ = writeln!(
+            s,
+            "\nacc@budget at {:.1} J shared energy budget; time-to-target at eval \
+             accuracy ≥ {:.2}; all quantities simulated (deterministic per seed).",
+            self.budget_j, self.target_acc
+        );
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::NativeLrTrainer;
+
+    fn registry() -> MechanismRegistry {
+        MechanismRegistry::builtin()
+    }
+
+    /// Regression for the `lgc compare` drift bug: with no subset, the
+    /// selection IS the registry enumeration — every registered preset is
+    /// covered, including ones registered after this test was written.
+    #[test]
+    fn select_none_covers_every_registered_preset() {
+        let reg = registry();
+        let selected = select_mechanisms(None, &reg).unwrap();
+        let registered: Vec<String> = reg.names().iter().map(|s| s.to_string()).collect();
+        assert_eq!(selected, registered);
+        assert!(selected.len() >= 15, "registry shrank? {selected:?}");
+        for key in ["energy-adaptive", "fedgreen", "lgc-divergence", "lgc-noma"] {
+            assert!(selected.contains(&key.to_string()), "missing {key}");
+        }
+    }
+
+    #[test]
+    fn select_subset_canonicalizes_and_rejects_unknown() {
+        let reg = registry();
+        let got = select_mechanisms(Some("fedavg, LGC-STATIC,fedavg"), &reg).unwrap();
+        assert_eq!(got, vec!["fedavg".to_string(), "lgc-static".to_string()]);
+        let err = select_mechanisms(Some("warp-drive"), &reg).unwrap_err();
+        assert!(err.contains("warp-drive") && err.contains("fedavg"), "{err}");
+        assert!(select_mechanisms(Some(" , "), &reg).is_err());
+    }
+
+    fn tiny_overrides() -> Vec<String> {
+        [
+            "--workload=lr",
+            "--rounds=2",
+            "--devices=2",
+            "--samples_per_device=64",
+            "--eval_samples=64",
+            "--eval_every=1",
+            "--use_runtime=false",
+            "--seed=42",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect()
+    }
+
+    #[test]
+    fn grid_runs_every_cell_and_ranks_deterministically() {
+        let spec = GridSpec {
+            mechanisms: vec!["fedavg".to_string(), "lgc-static".to_string()],
+            scenarios: vec!["none".to_string()],
+            sync_modes: vec!["barrier".to_string(), "semi-async".to_string()],
+            target_acc: 0.5,
+            budget_j: None,
+        };
+        let run = || {
+            run_grid(&spec, None, &tiny_overrides(), |cfg| {
+                Ok(Box::new(NativeLrTrainer::new(cfg)) as Box<dyn LocalTrainer>)
+            })
+            .unwrap()
+        };
+        let a = run();
+        assert_eq!(a.cells.len(), 4);
+        // Budget defaults to the cheapest cell's total spend, so at least
+        // one cell scored the full budget.
+        assert!(a.budget_j.is_finite() && a.budget_j > 0.0);
+        assert!(a
+            .cells
+            .iter()
+            .any(|c| (c.total_energy_j - a.budget_j).abs() < 1e-9));
+        // Ranked order is a permutation of the requested cells.
+        let mut names: Vec<String> = a
+            .cells
+            .iter()
+            .map(|c| format!("{}/{}/{}", c.mechanism, c.scenario, c.sync_mode))
+            .collect();
+        names.sort();
+        assert_eq!(
+            names,
+            vec![
+                "fedavg/none/barrier",
+                "fedavg/none/semi-async",
+                "lgc-static/none/barrier",
+                "lgc-static/none/semi-async"
+            ]
+        );
+        // Same spec, same seed → bit-identical report (CSV covers every
+        // rendered quantity).
+        let b = run();
+        assert_eq!(a.to_csv(), b.to_csv());
+        assert_eq!(a.to_markdown(), b.to_markdown());
+    }
+
+    #[test]
+    fn ranking_orders_nan_and_missing_targets_last() {
+        let cell = |m: &str, acc: f64, t: Option<f64>, j: f64| GridCell {
+            mechanism: m.to_string(),
+            scenario: "none".to_string(),
+            sync_mode: "barrier".to_string(),
+            rounds: 1,
+            final_acc: acc,
+            best_acc: acc,
+            acc_at_budget: acc,
+            time_to_target_s: t,
+            j_per_round: j,
+            total_energy_j: j,
+            total_time_s: 1.0,
+            upload_mb: 1.0,
+        };
+        let mut cells = vec![
+            cell("never-evaluated", f64::NAN, None, 1.0),
+            cell("slow-but-best", 0.9, Some(10.0), 5.0),
+            cell("tied-acc-faster", 0.8, Some(3.0), 5.0),
+            cell("tied-acc-slower", 0.8, Some(7.0), 1.0),
+            cell("tied-all-but-cheaper", 0.8, Some(7.0), 0.5),
+            cell("no-target", 0.7, None, 1.0),
+        ];
+        cells.sort_by(rank_cmp);
+        let order: Vec<&str> = cells.iter().map(|c| c.mechanism.as_str()).collect();
+        assert_eq!(
+            order,
+            vec![
+                "slow-but-best",
+                "tied-acc-faster",
+                "tied-all-but-cheaper",
+                "tied-acc-slower",
+                "no-target",
+                "never-evaluated"
+            ]
+        );
+        let report = GridReport { cells, budget_j: 10.0, target_acc: 0.8 };
+        assert!(report.to_csv().lines().next().unwrap().contains("acc_at_budget"));
+        assert!(report.to_markdown().contains("| rank |"));
+    }
+}

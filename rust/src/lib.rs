@@ -109,6 +109,7 @@ pub mod data;
 pub mod downlink;
 pub mod drl;
 pub mod edge;
+pub mod grid;
 pub mod kernels;
 pub mod metrics;
 pub mod models;

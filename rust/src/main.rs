@@ -1,9 +1,11 @@
 //! `lgc` — launcher CLI for the LGC federated-learning framework.
 //!
 //! ```text
-//! lgc train [--config=FILE] [--key=value ...]   run one experiment
-//! lgc compare [--key=value ...]                 run all mechanisms, same seed
-//! lgc info                                      runtime / artifact info
+//! lgc train [--config=FILE] [--key=value ...]         run one experiment
+//! lgc compare [--mechanisms=a,b] [--key=value ...]    run registered mechanisms, same seed
+//! lgc compare-grid [--mechanisms=..] [--scenarios=..] mechanism × scenario × sync grid,
+//!                  [--sync_modes=..]                  ranked table + CSV + markdown
+//! lgc info                                            runtime / artifact info
 //! ```
 //!
 //! Overrides use the config keys (see `ExperimentConfig`), e.g.:
@@ -12,11 +14,12 @@
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
-use anyhow::{bail, Context, Result};
-use lgc::config::{ExperimentConfig, Mechanism};
+use anyhow::{anyhow, bail, Context, Result};
+use lgc::config::ExperimentConfig;
 use lgc::coordinator::{
     ExperimentBuilder, LocalTrainer, MechanismRegistry, NativeLrTrainer, PjrtTrainer,
 };
+use lgc::grid::{run_grid, select_mechanisms, GridSpec};
 use lgc::metrics::RunLog;
 use lgc::runtime::Runtime;
 
@@ -40,6 +43,7 @@ fn run(args: Vec<String>) -> Result<()> {
     match cmd.as_str() {
         "train" => cmd_train(rest),
         "compare" => cmd_compare(rest),
+        "compare-grid" => cmd_compare_grid(rest),
         "info" => cmd_info(rest),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -55,7 +59,16 @@ fn print_usage() {
     println!(
         "lgc — Layered Gradient Compression FL framework\n\n\
          USAGE:\n  lgc train   [--config=FILE] [--key=value ...]\n  \
-         lgc compare [--key=value ...]\n  lgc info [--artifacts_dir=DIR]\n\n\
+         lgc compare [--mechanisms=a,b,c] [--key=value ...]\n  \
+         lgc compare-grid [--mechanisms=a,b,c] [--scenarios=s1,s2]\n  \
+                   [--sync_modes=m1,m2] [--target_acc=F] [--budget_j=F]\n  \
+                   [--csv=FILE] [--key=value ...]\n  \
+         lgc info [--artifacts_dir=DIR]\n\n\
+         compare runs every registered mechanism (subset via --mechanisms=)\n\
+         with the same seed; compare-grid crosses mechanisms with scenarios\n\
+         (default none,diurnal) and sync modes (default barrier,semi-async)\n\
+         and prints a ranked table (acc@budget, time-to-target, J/round),\n\
+         CSV, and an EXPERIMENTS.md-ready block.\n\n\
          Common keys: mechanism={mechanisms}, workload=lr|cnn|rnn,\n\
          rounds=N, devices=M, lr=F, h_fixed=N, h_max=N, energy_budget=F,\n\
          money_budget=F, seed=N, use_runtime=true|false, csv=FILE,\n\
@@ -228,11 +241,27 @@ fn cmd_train(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Pull a `--name=value` flag out of the override list (the remaining
+/// overrides pass straight through to the config layer).
+fn take_flag(overrides: &mut Vec<String>, name: &str) -> Option<String> {
+    let prefix = format!("--{name}=");
+    let pos = overrides.iter().position(|a| a.starts_with(&prefix))?;
+    let flag = overrides.remove(pos);
+    Some(flag[prefix.len()..].to_string())
+}
+
 fn cmd_compare(args: &[String]) -> Result<()> {
-    let (config, csv, overrides) = parse_common(args);
-    for mech in [Mechanism::FedAvg, Mechanism::LgcStatic, Mechanism::LgcDrl] {
+    let (config, csv, mut overrides) = parse_common(args);
+    // The covered set comes from the registry, never a hard-coded list —
+    // a newly registered preset joins `lgc compare` automatically.
+    let subset = take_flag(&mut overrides, "mechanisms");
+    let registry = MechanismRegistry::builtin();
+    let mechanisms =
+        select_mechanisms(subset.as_deref(), &registry).map_err(|e| anyhow!(e))?;
+    println!("comparing {} mechanisms: {}", mechanisms.len(), mechanisms.join(", "));
+    for mech in &mechanisms {
         let mut ov = overrides.clone();
-        ov.push(format!("--mechanism={}", mech.name()));
+        ov.push(format!("--mechanism={mech}"));
         let cfg = ExperimentConfig::load(config.as_deref(), &ov)
             .map_err(|e| anyhow::anyhow!(e))?;
         let mut trainer = make_trainer(&cfg)?;
@@ -241,7 +270,7 @@ fn cmd_compare(args: &[String]) -> Result<()> {
         // one ran in (the RunLog name carries the same suffix).
         println!(
             "\n[{}] scenario: {}",
-            mech.name(),
+            mech,
             exp.scenario.as_ref().map_or("none", |s| s.name())
         );
         let log = exp.run(trainer.as_mut())?;
@@ -250,11 +279,68 @@ fn cmd_compare(args: &[String]) -> Result<()> {
             let path = base.with_file_name(format!(
                 "{}_{}.csv",
                 base.file_stem().and_then(|s| s.to_str()).unwrap_or("run"),
-                mech.name()
+                mech
             ));
             log.write_csv(&path)?;
             println!("wrote {}", path.display());
         }
+    }
+    Ok(())
+}
+
+fn cmd_compare_grid(args: &[String]) -> Result<()> {
+    let (config, csv, mut overrides) = parse_common(args);
+    let registry = MechanismRegistry::builtin();
+    let mut spec = GridSpec::default_for(&registry);
+    if let Some(subset) = take_flag(&mut overrides, "mechanisms") {
+        spec.mechanisms =
+            select_mechanisms(Some(&subset), &registry).map_err(|e| anyhow!(e))?;
+    }
+    if let Some(list) = take_flag(&mut overrides, "scenarios") {
+        let scenarios: Vec<String> = list
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect();
+        if scenarios.is_empty() {
+            bail!("empty --scenarios= list");
+        }
+        spec.scenarios = scenarios;
+    }
+    if let Some(list) = take_flag(&mut overrides, "sync_modes") {
+        let modes: Vec<String> = list
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect();
+        if modes.is_empty() {
+            bail!("empty --sync_modes= list");
+        }
+        spec.sync_modes = modes;
+    }
+    if let Some(v) = take_flag(&mut overrides, "target_acc") {
+        spec.target_acc = v.parse().with_context(|| format!("bad --target_acc={v}"))?;
+    }
+    if let Some(v) = take_flag(&mut overrides, "budget_j") {
+        spec.budget_j =
+            Some(v.parse().with_context(|| format!("bad --budget_j={v}"))?);
+    }
+    println!(
+        "compare-grid: {} mechanisms x {} scenarios x {} sync modes",
+        spec.mechanisms.len(),
+        spec.scenarios.len(),
+        spec.sync_modes.len()
+    );
+    let grid = run_grid(&spec, config.as_deref(), &overrides, make_trainer)?;
+    // Everything below is simulated/deterministic — CI diffs two runs of
+    // this stdout to pin rank stability, so no wall clock or RSS here.
+    grid.print_table();
+    println!("\n-- EXPERIMENTS.md block --\n{}", grid.to_markdown());
+    if let Some(path) = csv {
+        std::fs::write(&path, grid.to_csv())?;
+        println!("wrote {}", path.display());
     }
     Ok(())
 }

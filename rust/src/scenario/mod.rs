@@ -125,6 +125,12 @@ pub struct ScenarioSpec {
     pub zones: Vec<ZoneSpec>,
     /// Timeline, sorted by `at_s`.
     pub phases: Vec<PhaseSpec>,
+    /// NOMA shared-uplink mode (arXiv 2003.01344): co-zone devices contend
+    /// for one carrier per technology, so each link's bandwidth scale is
+    /// further divided by the device's current zone population. `false`
+    /// (the default everywhere) keeps the independent-links model
+    /// bit-for-bit.
+    pub noma: bool,
 }
 
 fn get_f64(kvs: &BTreeMap<String, Value>, key: &str) -> Option<f64> {
@@ -287,6 +293,7 @@ impl ScenarioSpec {
             trace_len: get_usize(top, "trace_len")?.unwrap_or(1024),
             zones,
             phases,
+            noma: top.get("noma").and_then(Value::as_bool).unwrap_or(false),
         }))
     }
 
@@ -455,6 +462,7 @@ impl ScenarioRegistry {
                 DynamicsKind::Diurnal { period_ticks: 240, floor: 0.2 },
             )],
             phases: Vec::new(),
+            noma: false,
         });
 
         // Deep-rural coverage: 3G only, long Bad-fading dwells, real
@@ -474,6 +482,7 @@ impl ScenarioRegistry {
             trace_len: 1024,
             zones: vec![zone("countryside", &[G3], 1.0, rural, DynamicsKind::Markov)],
             phases: Vec::new(),
+            noma: false,
         });
 
         // Home / transit / office loop: diurnal home cell, Gilbert–Elliott
@@ -511,6 +520,7 @@ impl ScenarioRegistry {
                 PhaseSpec { at_s: 240.0, move_prob: Some(0.05), ..Default::default() },
                 PhaseSpec { at_s: 480.0, move_prob: Some(0.30), ..Default::default() },
             ],
+            noma: false,
         });
 
         // Flash crowd: everyone surges into the stadium smallcell zone
@@ -553,6 +563,7 @@ impl ScenarioRegistry {
                     ..Default::default()
                 },
             ],
+            noma: false,
         });
 
         reg
@@ -763,6 +774,16 @@ impl Scenario {
         self.zone_of[id]
     }
 
+    /// Whether this world runs the NOMA shared-uplink model.
+    pub fn noma(&self) -> bool {
+        self.spec.noma
+    }
+
+    /// Current client count of zone `zi` (the NOMA contention divisor).
+    pub fn zone_count(&self, zi: usize) -> u64 {
+        self.zone_counts[zi]
+    }
+
     /// Current phase-scripted edge backhaul scale (1.0 until a
     /// `backhaul_scale` phase fires).
     pub fn backhaul_scale(&self) -> f64 {
@@ -845,9 +866,12 @@ impl Scenario {
                 }
             }
         }
-        let reconfigure = if phase_fired {
+        let reconfigure = if phase_fired || (self.spec.noma && !moved.is_empty()) {
             // A phase changes global scales (or relocates everyone): every
-            // live channel bundle must pick the new world up.
+            // live channel bundle must pick the new world up. Under NOMA a
+            // single move changes the per-device carrier share in both the
+            // source and destination zones, so everyone re-reads the world
+            // there too.
             (0..self.zone_of.len()).collect()
         } else {
             moved
@@ -862,10 +886,20 @@ impl Scenario {
     /// re-phased from the scenario clock so repeated configuration stays
     /// deterministic.
     pub fn configure(&self, id: usize, ch: &mut DeviceChannels) {
-        let z = &self.zones[self.zone_of[id]];
+        let zi = self.zone_of[id];
+        let z = &self.zones[zi];
+        // NOMA shared uplink: the zone's carrier is one medium per
+        // technology, so each co-zone device gets an equal share of it.
+        // With one device in the zone the share is 1 and this reduces to
+        // the independent-links model exactly.
+        let share = if self.spec.noma {
+            1.0 / (self.zone_counts[zi] as f64).max(1.0)
+        } else {
+            1.0
+        };
         for (i, link) in ch.links.iter_mut().enumerate() {
             let up = z.mask.get(i).copied().unwrap_or(true);
-            let scale = (z.bw_scale * self.type_scale[type_slot(link.ty)]).min(1.0);
+            let scale = (z.bw_scale * self.type_scale[type_slot(link.ty)] * share).min(1.0);
             let dynamics = match &z.trace {
                 None => ChannelDynamics::Markov,
                 Some(pts) => ChannelDynamics::Trace(TraceReplay::new(
@@ -1083,6 +1117,43 @@ move_prob = 0.5
     }
 
     #[test]
+    fn noma_shares_the_carrier_among_co_zone_devices() {
+        let types = default_types();
+        let mut spec = ScenarioRegistry::resolve("diurnal").unwrap();
+        spec.noma = true;
+        let n = 4;
+        let sc = Scenario::new(spec.clone(), n, &types, &Rng::new(21)).unwrap();
+        let rng = Rng::new(33);
+        // All n clients share zone 0: each link's bandwidth is 1/n of what
+        // the same world hands a lone device.
+        let mut shared = DeviceChannels::new(&types, &rng, 0);
+        sc.configure(0, &mut shared);
+        let mut alone_spec = spec.clone();
+        alone_spec.noma = false;
+        let alone_sc = Scenario::new(alone_spec, n, &types, &Rng::new(21)).unwrap();
+        let mut alone = DeviceChannels::new(&types, &rng, 0);
+        alone_sc.configure(0, &mut alone);
+        for (s, a) in shared.links.iter().zip(&alone.links) {
+            let want = a.effective_bandwidth() / n as f64;
+            assert!(
+                (s.effective_bandwidth() - want).abs() < 1e-12,
+                "shared {} vs {want}",
+                s.effective_bandwidth()
+            );
+        }
+        // One device per zone: NOMA reduces to the independent-links model
+        // bit-for-bit.
+        let solo = Scenario::new(spec, 1, &types, &Rng::new(21)).unwrap();
+        let mut noma_ch = DeviceChannels::new(&types, &rng, 0);
+        solo.configure(0, &mut noma_ch);
+        let mut plain_ch = DeviceChannels::new(&types, &rng, 0);
+        alone_sc.configure(0, &mut plain_ch);
+        for (a, b) in noma_ch.links.iter().zip(&plain_ch.links) {
+            assert_eq!(a.effective_bandwidth().to_bits(), b.effective_bandwidth().to_bits());
+        }
+    }
+
+    #[test]
     fn mobility_chain_moves_clients_between_zones() {
         let spec = ScenarioSpec {
             name: "pair".into(),
@@ -1106,6 +1177,7 @@ move_prob = 0.5
                 ),
             ],
             phases: Vec::new(),
+            noma: false,
         };
         let mut sc = Scenario::new(spec, 8, &default_types(), &Rng::new(11)).unwrap();
         let mut moves = 0u64;

@@ -20,10 +20,15 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::path::PathBuf;
+use std::sync::Mutex;
 
 use lgc::config::{ExperimentConfig, Mechanism, Workload};
-use lgc::coordinator::{Experiment, NativeLrTrainer};
+use lgc::coordinator::{Experiment, ExperimentBuilder, MechanismRegistry, NativeLrTrainer};
 use lgc::metrics::RunLog;
+
+/// Both golden tests read-modify-write `tests/golden/traces.txt`; the test
+/// harness runs them on parallel threads, so serialize the file access.
+static GOLDEN_LOCK: Mutex<()> = Mutex::new(());
 
 fn golden_path() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR"))
@@ -184,6 +189,7 @@ fn store_golden(map: &BTreeMap<String, String>) {
 
 #[test]
 fn golden_traces_per_mechanism_preset() {
+    let _guard = GOLDEN_LOCK.lock().unwrap_or_else(|e| e.into_inner());
     let bless_all = std::env::var("LGC_BLESS").map(|v| v == "1").unwrap_or(false);
     let mut golden = load_golden();
     let mut blessed_any = false;
@@ -265,8 +271,76 @@ fn golden_traces_per_mechanism_preset() {
         );
     }
     // Distinct mechanisms must not collide: if two presets fingerprint
-    // identically the fingerprint lost its discriminating power.
-    let values: Vec<&String> = golden.values().collect();
+    // identically the fingerprint lost its discriminating power. The
+    // `registry-` entries are excluded — several registry presets are the
+    // same numerics under a forced sync mode by design (lgc-semi-async
+    // under barrier IS lgc-static; energy-adaptive with an infinite
+    // budget IS its static allocation), so collisions there are expected.
+    let values: Vec<&String> =
+        golden.iter().filter(|(k, _)| !k.starts_with("registry-")).map(|(_, v)| v).collect();
     let unique: std::collections::BTreeSet<&&String> = values.iter().collect();
     assert_eq!(values.len(), unique.len(), "fingerprint collision across presets");
+}
+
+/// Registry-completeness suite: every registered mechanism preset must
+/// build through [`ExperimentBuilder`] and run under both barrier and
+/// semi-async sync, and each (preset, mode) cell gets its own blessed
+/// fingerprint keyed `registry-<preset>-<mode>` — auto-blessed on the
+/// first CI run (commit the regenerated file), compared forever after.
+/// A preset that registers without joining this file shows up as a
+/// blessed-entry diff in review, so the suite can't silently go stale.
+#[test]
+fn registry_completeness_every_preset_runs_and_fingerprints() {
+    let _guard = GOLDEN_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let bless_all = std::env::var("LGC_BLESS").map(|v| v == "1").unwrap_or(false);
+    let mut golden = load_golden();
+    let mut blessed_any = false;
+    let registry = MechanismRegistry::builtin();
+    let names: Vec<String> = registry.names().iter().map(|s| s.to_string()).collect();
+    assert!(names.len() >= 15, "registry shrank: {names:?}");
+    let modes = [
+        ("barrier", lgc::sim::SyncMode::Barrier),
+        ("semi-async", lgc::sim::SyncMode::SemiAsync { buffer_k: 2 }),
+    ];
+    for name in &names {
+        for (mode_name, mode) in &modes {
+            let key = format!("registry-{name}-{mode_name}");
+            let run = || {
+                let mut c = cfg(Mechanism::parse(name).expect("registry key parses"));
+                c.rounds = 3;
+                c.sync_mode = Some(*mode);
+                let mut trainer = NativeLrTrainer::new(&c);
+                let mut exp = ExperimentBuilder::new(c)
+                    .trainer(&trainer)
+                    .build()
+                    .unwrap_or_else(|e| panic!("{key}: preset must build: {e:#}"));
+                let log = exp.run(&mut trainer).unwrap_or_else(|e| panic!("{key}: {e:#}"));
+                assert!(!log.records.is_empty(), "{key}: ran zero rounds");
+                fingerprint(&log)
+            };
+            let a = run();
+            let b = run();
+            assert_eq!(a, b, "{key}: seeded run is not deterministic");
+            match golden.get(&key) {
+                Some(expected) if !bless_all => {
+                    assert_eq!(
+                        &a, expected,
+                        "{key}: trace fingerprint drifted from the blessed value — \
+                         re-bless with LGC_BLESS=1 if this numeric change is intentional"
+                    );
+                }
+                _ => {
+                    golden.insert(key, a);
+                    blessed_any = true;
+                }
+            }
+        }
+    }
+    if blessed_any {
+        store_golden(&golden);
+        eprintln!(
+            "golden_trace: blessed registry fingerprints into {} — commit the file",
+            golden_path().display()
+        );
+    }
 }

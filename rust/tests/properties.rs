@@ -486,6 +486,7 @@ fn prop_handoff_never_strands_a_device() {
                 trace_len: 16,
                 zones,
                 phases: Vec::new(),
+                noma: false,
             };
             let mut sc = Scenario::new(spec, 4, &types, &Rng::new(c.seed))
                 .map_err(|e| format!("build: {e}"))?;
@@ -497,6 +498,103 @@ fn prop_handoff_never_strands_a_device() {
                     sc.configure(id, &mut ch);
                     if ch.first_up().is_none() {
                         return Err(format!("device {id} stranded with zero channels"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// NOMA shared-uplink contention (arXiv 2003.01344): with `noma = true`
+/// co-zone devices split one carrier per technology, so the *aggregate*
+/// effective bandwidth across a zone never exceeds the single-carrier
+/// capacity — under any seed, zone count, mobility history, and fading
+/// state. And with a single device (1 device/zone), NOMA must reduce to
+/// independent links: bit-for-bit the same bandwidths as `noma = false`.
+#[test]
+fn prop_noma_co_zone_aggregate_bounded_by_carrier_capacity() {
+    let types = [ChannelType::G5, ChannelType::G4, ChannelType::G3];
+    check(
+        0xC7,
+        default_cases() / 2,
+        |rng| {
+            let nz = gen::usize_in(rng, 1, 3);
+            let n = gen::usize_in(rng, 2, 6);
+            (rng.next_u64(), nz, n)
+        },
+        |(seed, nz, n)| {
+            let spec = |noma: bool| ScenarioSpec {
+                name: "noma-prop".into(),
+                move_prob: 0.4,
+                start_spread: true,
+                trace_len: 16,
+                zones: (0..*nz)
+                    .map(|i| ZoneSpec {
+                        name: format!("z{i}"),
+                        channels: types.to_vec(),
+                        bw_scale: 1.0,
+                        fading: Default::default(),
+                        dynamics: DynamicsKind::Markov,
+                    })
+                    .collect(),
+                phases: Vec::new(),
+                noma,
+            };
+            let mut sc = Scenario::new(spec(true), *n, &types, &Rng::new(*seed))
+                .map_err(|e| format!("build: {e}"))?;
+            if !sc.noma() {
+                return Err("noma flag lost in the built scenario".into());
+            }
+            let rng = Rng::new(seed ^ 1);
+            let mut ch = DeviceChannels::new(&types, &rng, 0);
+            for t in 0..8 {
+                sc.tick(t as f64);
+                let mut agg = vec![[0f64; 3]; *nz];
+                for id in 0..*n {
+                    sc.configure(id, &mut ch);
+                    let z = sc.zone_of(id);
+                    for link in &ch.links {
+                        let slot =
+                            types.iter().position(|&ty| ty == link.ty).expect("known type");
+                        agg[z][slot] += link.effective_bandwidth();
+                    }
+                }
+                for z in 0..*nz {
+                    for (slot, ty) in types.iter().enumerate() {
+                        let cap = ty.bandwidth_mb_s();
+                        if agg[z][slot] > cap + 1e-9 {
+                            return Err(format!(
+                                "tick {t}: zone {z} {:?} aggregate {} exceeds the \
+                                 single-carrier capacity {cap}",
+                                ty, agg[z][slot]
+                            ));
+                        }
+                    }
+                }
+            }
+            // One device total ⇒ every zone count is ≤ 1, and NOMA must be
+            // indistinguishable from independent links.
+            let mut sa = Scenario::new(spec(true), 1, &types, &Rng::new(*seed))
+                .map_err(|e| format!("build noma: {e}"))?;
+            let mut sb = Scenario::new(spec(false), 1, &types, &Rng::new(*seed))
+                .map_err(|e| format!("build plain: {e}"))?;
+            let mut cha = DeviceChannels::new(&types, &Rng::new(seed ^ 2), 0);
+            let mut chb = DeviceChannels::new(&types, &Rng::new(seed ^ 2), 0);
+            for t in 0..8 {
+                sa.tick(t as f64);
+                sb.tick(t as f64);
+                sa.configure(0, &mut cha);
+                sb.configure(0, &mut chb);
+                for (la, lb) in cha.links.iter().zip(&chb.links) {
+                    if la.effective_bandwidth().to_bits() != lb.effective_bandwidth().to_bits()
+                    {
+                        return Err(format!(
+                            "tick {t}: single-device NOMA diverged from independent \
+                             links ({} vs {})",
+                            la.effective_bandwidth(),
+                            lb.effective_bandwidth()
+                        ));
                     }
                 }
             }

@@ -530,6 +530,7 @@ fn trivial_scenario() -> ScenarioSpec {
             dynamics: DynamicsKind::Markov,
         }],
         phases: Vec::new(),
+        noma: false,
     }
 }
 
