@@ -110,6 +110,40 @@ fn main() {
             format!("{:.3}", r.acc),
         ]);
     }
+    // Recorder overhead: the same semi-async case with the JSONL trace
+    // buffering in memory. The trace-off rows above are the band guard
+    // (trace defaults off); this row quantifies what turning it on costs,
+    // and the record count is a deterministic counter pinned exactly.
+    {
+        let c = cfg(1, devices, rounds);
+        let mut trainer = NativeLrTrainer::new(&c);
+        let mut exp = ExperimentBuilder::new(c)
+            .trainer(&trainer)
+            .sync_mode(SyncMode::SemiAsync { buffer_k: 4 })
+            .build()
+            .expect("build");
+        exp.recorder = lgc::obs::Recorder::to_buffer();
+        let t0 = Instant::now();
+        let log = exp.run(&mut trainer).expect("run");
+        let wall_s = t0.elapsed().as_secs_f64();
+        let slug = "semi-async-k4-traced";
+        json.push(&format!("{slug}/trace_records"), exp.recorder.events() as f64, "count");
+        json.push(
+            &format!("{slug}/events_per_s"),
+            exp.sim_stats.events as f64 / wall_s.max(1e-9),
+            "events/s",
+        );
+        table.row(&[
+            "semi-async k=4 +trace".to_string(),
+            "1".to_string(),
+            format!("{:.1}", wall_s * 1e3),
+            exp.sim_stats.events.to_string(),
+            format!("{:.0}", exp.sim_stats.events as f64 / wall_s.max(1e-9)),
+            format!("{:.1}", log.records.len() as f64 / wall_s.max(1e-9)),
+            format!("{:.2}", log.last().map_or(0.0, |r| r.total_time_s)),
+            format!("{:.3}", log.final_acc()),
+        ]);
+    }
     table.print();
     json.finish();
     println!(

@@ -1,0 +1,173 @@
+#!/usr/bin/env python3
+"""Schema validator for the lgc JSONL event trace (and its Chrome export).
+
+Stdlib-only, mirroring the Rust side from the outside: the recorder
+(`rust/src/obs/mod.rs`) serializes flat JSON objects with a fixed key
+vocabulary, and this script re-checks every line independently so format
+drift on either side fails CI.
+
+Usage:
+    python3 python/trace_check.py trace.jsonl [more.jsonl ...]
+    python3 python/trace_check.py --chrome chrome_trace.json
+
+Checks (JSONL mode):
+  - every non-empty line is a flat JSON object (no nesting)
+  - `t` present, finite, >= 0; `kind` present and in the known vocabulary
+  - integer keys (round/client/zone/layer/channel/bytes) are ints >= 0
+  - span keys (`dur`) and attribution components are finite and >= 0
+  - `round` records: compute+uplink+backhaul+downlink+wait == dur (1e-6)
+    and `bound` names a component (or is empty for a zero-duration round)
+  - round records appear in increasing round order
+
+Deliberately NOT checked: global monotonicity of `t`. Span records are
+emitted at scheduling time with a future-dated arrival `t`, so the trace
+interleaves by causal order, not timestamp order.
+"""
+
+import json
+import math
+import sys
+
+KINDS = {
+    "compute_start",
+    "compute_done",
+    "uplink_arrive",
+    "uplink_drop",
+    "backhaul_enqueue",
+    "backhaul_arrive",
+    "edge_fold",
+    "downlink_arrive",
+    "sync_confirm",
+    "aggregate",
+    "handoff",
+    "migrate",
+    "churn_drop",
+    "client_offline",
+    "round",
+}
+
+INT_KEYS = ("round", "client", "zone", "layer", "channel", "bytes")
+FLOAT_KEYS = ("dur", "compute", "uplink", "backhaul", "downlink", "wait")
+COMPONENTS = ("compute", "uplink", "backhaul", "downlink", "wait")
+BOUND_LABELS = set(COMPONENTS) | {""}
+KNOWN_KEYS = {"t", "kind", "bound", "crit_client", "crit_channel"} | set(
+    INT_KEYS
+) | set(FLOAT_KEYS)
+
+
+def fail(path, lineno, msg):
+    raise SystemExit(f"{path}:{lineno}: {msg}")
+
+
+def check_trace(path):
+    n_records = 0
+    n_rounds = 0
+    last_round = -1
+    with open(path, encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError as e:
+                fail(path, lineno, f"not JSON: {e}")
+            if not isinstance(rec, dict):
+                fail(path, lineno, "line is not a JSON object")
+            for key, value in rec.items():
+                if key not in KNOWN_KEYS:
+                    fail(path, lineno, f"unknown key `{key}`")
+                if isinstance(value, (dict, list)):
+                    fail(path, lineno, f"nested value under `{key}`")
+            t = rec.get("t")
+            if not isinstance(t, (int, float)) or not math.isfinite(t) or t < 0:
+                fail(path, lineno, f"bad t: {t!r}")
+            kind = rec.get("kind")
+            if kind not in KINDS:
+                fail(path, lineno, f"unknown kind: {kind!r}")
+            for key in INT_KEYS:
+                if key in rec:
+                    v = rec[key]
+                    if not isinstance(v, int) or isinstance(v, bool) or v < 0:
+                        fail(path, lineno, f"bad {key}: {v!r}")
+            for key in FLOAT_KEYS:
+                if key in rec:
+                    v = rec[key]
+                    if (
+                        not isinstance(v, (int, float))
+                        or not math.isfinite(v)
+                        or v < 0
+                    ):
+                        fail(path, lineno, f"bad {key}: {v!r}")
+            for key in ("crit_client", "crit_channel"):
+                if key in rec:
+                    v = rec[key]
+                    if not isinstance(v, int) or isinstance(v, bool) or v < -1:
+                        fail(path, lineno, f"bad {key}: {v!r}")
+            if kind == "round":
+                for key in ("round", "dur", *COMPONENTS, "bound"):
+                    if key not in rec:
+                        fail(path, lineno, f"round record missing `{key}`")
+                if rec["bound"] not in BOUND_LABELS:
+                    fail(path, lineno, f"bad bound: {rec['bound']!r}")
+                total = sum(rec[c] for c in COMPONENTS)
+                if abs(total - rec["dur"]) > 1e-6:
+                    fail(
+                        path,
+                        lineno,
+                        f"attribution components sum {total} != dur {rec['dur']}",
+                    )
+                if rec["round"] <= last_round:
+                    fail(
+                        path,
+                        lineno,
+                        f"round {rec['round']} out of order (after {last_round})",
+                    )
+                last_round = rec["round"]
+                n_rounds += 1
+            n_records += 1
+    if n_records == 0:
+        raise SystemExit(f"{path}: empty trace")
+    print(f"{path}: OK ({n_records} records, {n_rounds} rounds)")
+
+
+def check_chrome(path):
+    with open(path, encoding="utf-8") as fh:
+        try:
+            doc = json.load(fh)
+        except json.JSONDecodeError as e:
+            raise SystemExit(f"{path}: not JSON: {e}")
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        raise SystemExit(f"{path}: missing traceEvents")
+    events = doc["traceEvents"]
+    if not isinstance(events, list) or not events:
+        raise SystemExit(f"{path}: traceEvents must be a non-empty array")
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            raise SystemExit(f"{path}: traceEvents[{i}] is not an object")
+        for key in ("name", "ph", "ts", "pid", "tid"):
+            if key not in ev:
+                raise SystemExit(f"{path}: traceEvents[{i}] missing `{key}`")
+        if ev["ph"] not in ("X", "i"):
+            raise SystemExit(f"{path}: traceEvents[{i}] bad ph {ev['ph']!r}")
+        if ev["ph"] == "X" and ("dur" not in ev or ev["dur"] < 0):
+            raise SystemExit(f"{path}: traceEvents[{i}] X event needs dur >= 0")
+        if not math.isfinite(ev["ts"]):
+            raise SystemExit(f"{path}: traceEvents[{i}] non-finite ts")
+    print(f"{path}: OK ({len(events)} trace events)")
+
+
+def main(argv):
+    args = [a for a in argv if a != "--chrome"]
+    chrome = len(args) != len(argv)
+    if not args:
+        raise SystemExit(__doc__.strip().splitlines()[0])
+    for path in args:
+        if chrome:
+            check_chrome(path)
+        else:
+            check_trace(path)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

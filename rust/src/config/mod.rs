@@ -258,6 +258,21 @@ pub struct ExperimentConfig {
     /// aggregation to the documented float tolerance. Default false (the
     /// batch path is the bit-for-bit reference).
     pub streaming: bool,
+    /// Structured event tracing ([`crate::obs::Recorder`]): record the
+    /// full per-event lifecycle (compute, per-layer uplink, downlink,
+    /// edge/backhaul, handoff, churn, aggregation) as JSONL in virtual sim
+    /// time. Default off — and then strictly zero-cost: every engine stays
+    /// bit-for-bit on the frozen `step_round` oracle with an unchanged
+    /// warm-round allocation count.
+    pub trace: bool,
+    /// Trace destination path. Setting this key implies `trace = true`;
+    /// bare `trace = true` defaults to `trace.jsonl`.
+    pub trace_file: Option<String>,
+    /// Wall-clock phase timers (event-loop / train / compress /
+    /// aggregate), reported as `profile/<phase>_ms` lines and
+    /// bench-compatible JSON rows. Independent of `trace` and never part
+    /// of the deterministic JSONL stream.
+    pub profile: bool,
     /// DRL hyperparameters.
     pub drl: DrlConfig,
 }
@@ -337,6 +352,9 @@ impl Default for ExperimentConfig {
             edge: None,
             edge_settings: None,
             streaming: false,
+            trace: false,
+            trace_file: None,
+            profile: false,
             drl: DrlConfig::default(),
         }
     }
@@ -468,6 +486,21 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_bool("", "streaming") {
             cfg.streaming = v;
+        }
+        if let Some(v) = doc.get_bool("", "trace") {
+            cfg.trace = v;
+        }
+        if let Some(s) = doc.get_str("", "trace_file") {
+            // Naming a destination implies tracing (unless `trace = false`
+            // was set explicitly), mirroring the enable-on-parameter
+            // convention of the downlink/edge/population keys.
+            cfg.trace_file = Some(s.to_string());
+            if doc.get_bool("", "trace").is_none() {
+                cfg.trace = true;
+            }
+        }
+        if let Some(v) = doc.get_bool("", "profile") {
+            cfg.profile = v;
         }
         if let Some(v) = doc.get_bool("", "downlink") {
             cfg.downlink = Some(v);
@@ -723,6 +756,26 @@ mod tests {
         assert_eq!(cfg.rounds, 5);
         assert_eq!(cfg.mechanism, Mechanism::LgcDrl);
         assert!((cfg.drl.tau - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trace_keys_parse() {
+        let cfg = ExperimentConfig::default();
+        assert!(!cfg.trace && cfg.trace_file.is_none() && !cfg.profile);
+        // Naming a destination implies tracing...
+        let doc = Document::parse("trace_file = \"run.jsonl\"\nprofile = true\n").unwrap();
+        let cfg = ExperimentConfig::from_document(&doc).unwrap();
+        assert!(cfg.trace);
+        assert_eq!(cfg.trace_file.as_deref(), Some("run.jsonl"));
+        assert!(cfg.profile);
+        // ...unless `trace = false` says otherwise.
+        let doc = Document::parse("trace = false\ntrace_file = \"run.jsonl\"\n").unwrap();
+        let cfg = ExperimentConfig::from_document(&doc).unwrap();
+        assert!(!cfg.trace);
+        // Bare `trace = true` defaults the destination.
+        let doc = Document::parse("trace = true\n").unwrap();
+        let cfg = ExperimentConfig::from_document(&doc).unwrap();
+        assert!(cfg.trace && cfg.trace_file.is_none());
     }
 
     #[test]

@@ -422,6 +422,7 @@ impl<'a> ExperimentBuilder<'a> {
             scenario,
             edge,
             sim_stats: SimStats::default(),
+            recorder: crate::obs::Recorder::from_cfg(&cfg),
             rng,
             total_time_s: 0.0,
             d_total,

@@ -78,6 +78,12 @@ pub struct Experiment {
     pub edge: Option<Edge>,
     /// Event-engine counters from the most recent [`Experiment::run`].
     pub sim_stats: SimStats,
+    /// The telemetry seam: a zero-cost no-op by default (`trace` off), a
+    /// buffered JSONL recorder + wall-clock phase timers when the config
+    /// enables them. The engines take it out for the duration of a run
+    /// (like the population store) and hand it back with the buffered
+    /// trace and timers filled.
+    pub recorder: crate::obs::Recorder,
     pub(super) rng: Rng,
     pub(crate) total_time_s: f64,
     pub(super) d_total: usize,
@@ -331,6 +337,9 @@ impl Experiment {
             backhaul_p95_s: 0.0,
             migrated_handoff: 0,
             edge_rounds_bound: 0,
+            bound_by: "",
+            crit_client: -1,
+            crit_channel: -1,
         }))
     }
 

@@ -113,6 +113,7 @@ pub mod grid;
 pub mod kernels;
 pub mod metrics;
 pub mod models;
+pub mod obs;
 pub mod population;
 pub mod resources;
 pub mod runtime;

@@ -5,6 +5,7 @@
 //! lgc compare [--mechanisms=a,b] [--key=value ...]    run registered mechanisms, same seed
 //! lgc compare-grid [--mechanisms=..] [--scenarios=..] mechanism × scenario × sync grid,
 //!                  [--sync_modes=..]                  ranked table + CSV + markdown
+//! lgc report <trace.jsonl> [--topk=N] [--chrome=F]    drill into a recorded trace
 //! lgc info                                            runtime / artifact info
 //! ```
 //!
@@ -44,6 +45,7 @@ fn run(args: Vec<String>) -> Result<()> {
         "train" => cmd_train(rest),
         "compare" => cmd_compare(rest),
         "compare-grid" => cmd_compare_grid(rest),
+        "report" => cmd_report(rest),
         "info" => cmd_info(rest),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -63,7 +65,12 @@ fn print_usage() {
          lgc compare-grid [--mechanisms=a,b,c] [--scenarios=s1,s2]\n  \
                    [--sync_modes=m1,m2] [--target_acc=F] [--budget_j=F]\n  \
                    [--csv=FILE] [--key=value ...]\n  \
+         lgc report <trace.jsonl> [--topk=N] [--chrome=FILE]\n  \
          lgc info [--artifacts_dir=DIR]\n\n\
+         report reads a trace recorded with --trace=true (or\n\
+         --trace_file=FILE) and prints round-time attribution, channel\n\
+         utilization, backhaul occupancy, and a straggler top-k;\n\
+         --chrome= exports Chrome trace-event JSON for Perfetto.\n\n\
          compare runs every registered mechanism (subset via --mechanisms=)\n\
          with the same seed; compare-grid crosses mechanisms with scenarios\n\
          (default none,diurnal) and sync modes (default barrier,semi-async)\n\
@@ -85,7 +92,9 @@ fn print_usage() {
          edge.dynamics=markov|diurnal,\n\
          scenario=none|{scenarios},\n\
          scenario_file=FILE (TOML [scenario] tree: zones, mobility,\n\
-         [[scenario.phase]] timeline)"
+         [[scenario.phase]] timeline),\n\
+         trace=true|false, trace_file=FILE (JSONL event trace),\n\
+         profile=true|false (wall-clock phase timers)"
     );
 }
 
@@ -130,44 +139,103 @@ fn peak_rss_mb() -> Option<f64> {
     Some(kb / 1024.0)
 }
 
+/// Assemble the end-of-run summary — every line routes through one
+/// [`lgc::obs::Report`] so the `key: value` contract (greppable by
+/// scripts/CI) has a single owner.
 fn report(log: &RunLog) {
-    println!("\n== {} ==", log.name);
-    println!("rounds run      : {}", log.records.len());
+    let mut rep = lgc::obs::Report::new();
+    rep.gap();
+    rep.raw(format!("== {} ==", log.name));
+    rep.push("rounds run      ", log.records.len());
     let handoffs: u64 = log.records.iter().map(|r| r.handoffs).sum();
     if handoffs > 0 {
         let dropped: u64 = log.records.iter().map(|r| r.dropped_handoff).sum();
-        println!("handoffs        : {handoffs} ({dropped} in-flight layers dropped)");
+        rep.push(
+            "handoffs        ",
+            format!("{handoffs} ({dropped} in-flight layers dropped)"),
+        );
     }
     let migrated: u64 = log.records.iter().map(|r| r.migrated_handoff).sum();
     let backhaul: u64 = log.records.iter().map(|r| r.backhaul_bytes).sum();
     if backhaul > 0 || migrated > 0 {
         let bound: u64 = log.records.iter().map(|r| r.edge_rounds_bound).sum();
-        println!(
-            "edge backhaul   : {:.2} MB ({bound} backhaul-bound rounds)",
-            backhaul as f64 / (1024.0 * 1024.0)
+        rep.push(
+            "edge backhaul   ",
+            format!(
+                "{:.2} MB ({bound} backhaul-bound rounds)",
+                backhaul as f64 / (1024.0 * 1024.0)
+            ),
         );
-        println!("migrated_handoff: {migrated}");
+        rep.push("migrated_handoff", migrated);
     }
     if let Some(last) = log.last() {
-        println!("final train loss: {:.4}", last.train_loss);
-        println!("final eval acc  : {:.4}", log.final_acc());
-        println!("best eval acc   : {:.4}", log.best_acc());
-        println!("total energy (J): {:.1}", last.energy_j);
-        println!("total money     : {:.4}", last.money);
-        println!("total time (s)  : {:.1}", last.total_time_s);
+        rep.push("final train loss", format!("{:.4}", last.train_loss));
+        rep.push("final eval acc  ", format!("{:.4}", log.final_acc()));
+        rep.push("best eval acc   ", format!("{:.4}", log.best_acc()));
+        rep.push("total energy (J)", format!("{:.1}", last.energy_j));
+        rep.push("total money     ", format!("{:.4}", last.money));
+        rep.push("total time (s)  ", format!("{:.1}", last.total_time_s));
         let bytes: u64 = log.records.iter().map(|r| r.bytes_up).sum();
-        println!("total upload    : {:.2} MB", bytes as f64 / (1024.0 * 1024.0));
+        rep.push(
+            "total upload    ",
+            format!("{:.2} MB", bytes as f64 / (1024.0 * 1024.0)),
+        );
         let down: u64 = log.records.iter().map(|r| r.down_bytes).sum();
         if down > 0 {
             let down_j: f64 = log.records.iter().map(|r| r.down_energy_j).sum();
-            println!("total download  : {:.2} MB", down as f64 / (1024.0 * 1024.0));
-            println!("download energy : {down_j:.1} J");
+            rep.push(
+                "total download  ",
+                format!("{:.2} MB", down as f64 / (1024.0 * 1024.0)),
+            );
+            rep.push("download energy ", format!("{down_j:.1} J"));
         }
     }
+    attribution_summary(&mut rep, log);
     // Stable `key: value` line for scripts/CI to grep (stadium smoke pins
-    // an upper bound on it at 250k clients).
-    if let Some(mb) = peak_rss_mb() {
-        println!("peak_rss_mb: {mb:.0}");
+    // an upper bound on it at 250k clients). Degrades explicitly off-Linux
+    // rather than vanishing.
+    match peak_rss_mb() {
+        Some(mb) => rep.push("peak_rss_mb", format!("{mb:.0}")),
+        None => rep.push("peak_rss_mb", "unavailable"),
+    }
+    rep.print();
+}
+
+/// Fold the per-round attribution columns into the summary: how many
+/// rounds each component dominated, and the most frequent critical-path
+/// client. Silent when no engine filled the columns (frozen reference
+/// loop).
+fn attribution_summary(rep: &mut lgc::obs::Report, log: &RunLog) {
+    let mut by_label: Vec<(&str, usize)> = Vec::new();
+    let mut by_client: Vec<(i64, usize)> = Vec::new();
+    for r in &log.records {
+        if r.bound_by.is_empty() {
+            continue;
+        }
+        match by_label.iter_mut().find(|(l, _)| *l == r.bound_by) {
+            Some(e) => e.1 += 1,
+            None => by_label.push((r.bound_by, 1)),
+        }
+        if r.crit_client >= 0 {
+            match by_client.iter_mut().find(|(c, _)| *c == r.crit_client) {
+                Some(e) => e.1 += 1,
+                None => by_client.push((r.crit_client, 1)),
+            }
+        }
+    }
+    if by_label.is_empty() {
+        return;
+    }
+    by_label.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+    let parts: Vec<String> =
+        by_label.iter().map(|(l, n)| format!("{l} {n}")).collect();
+    rep.push("rounds bound by ", parts.join(", "));
+    by_client.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    if let Some((client, n)) = by_client.first() {
+        rep.push(
+            "top straggler   ",
+            format!("client {client} (critical in {n} rounds)"),
+        );
     }
 }
 
@@ -232,11 +300,64 @@ fn cmd_train(args: &[String]) -> Result<()> {
         // event handling — don't advertise a thread count that isn't used.
         mode => println!("sync mode: {} (device compute inline)", mode.name()),
     }
+    if exp.recorder.on() {
+        match exp.cfg.trace_file.as_deref() {
+            Some(path) => println!("trace: recording to {path}"),
+            None => println!("trace: recording in memory (set trace_file=FILE to persist)"),
+        }
+    }
     let log = exp.run(trainer.as_mut())?;
     report(&log);
+    if exp.recorder.on() {
+        match exp.cfg.trace_file.as_deref() {
+            Some(path) => println!(
+                "trace: {} records written to {path} (drill down with `lgc report {path}`)",
+                exp.recorder.events()
+            ),
+            None => {
+                println!("trace: {} records buffered (discarded at exit)", exp.recorder.events())
+            }
+        }
+    }
+    // Wall-clock phase timers, in the bench JSON row shape so the same
+    // tooling (python/bench_diff.py) can consume them.
+    if exp.recorder.profiling() {
+        for ph in lgc::obs::phase::PHASES {
+            println!(
+                "{{\"bench\": \"profile\", \"case\": \"{}_ms\", \"value\": {:.3}, \"unit\": \"ms\"}}",
+                ph.name(),
+                exp.recorder.timers.ms(ph)
+            );
+        }
+    }
     if let Some(path) = csv {
         log.write_csv(&path)?;
         println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &[String]) -> Result<()> {
+    let Some(path) = args.iter().find(|a| !a.starts_with("--")) else {
+        bail!("usage: lgc report <trace.jsonl> [--topk=N] [--chrome=FILE]");
+    };
+    let mut topk = 5usize;
+    let mut chrome: Option<PathBuf> = None;
+    for a in args {
+        if let Some(v) = a.strip_prefix("--topk=") {
+            topk = v.parse().with_context(|| format!("bad --topk={v}"))?;
+        } else if let Some(v) = a.strip_prefix("--chrome=") {
+            chrome = Some(PathBuf::from(v));
+        } else if a != path && a.starts_with("--") {
+            bail!("unknown report flag `{a}` (try --topk=N or --chrome=FILE)");
+        }
+    }
+    let trace = lgc::obs::report::load(path).map_err(|e| anyhow!(e))?;
+    print!("{}", lgc::obs::report::render(&trace, topk.max(1)));
+    if let Some(out) = chrome {
+        std::fs::write(&out, lgc::obs::report::chrome_export(&trace))
+            .with_context(|| format!("write chrome export to {}", out.display()))?;
+        println!("wrote {} (load in chrome://tracing or Perfetto)", out.display());
     }
     Ok(())
 }

@@ -79,6 +79,15 @@ pub struct RoundRecord {
     /// 1 when this record was backhaul-bound: `backhaul_p95_s` exceeded
     /// the access-link `finish_p95_s`.
     pub edge_rounds_bound: u64,
+    /// The dominant round-time component per the attribution pass
+    /// (`compute` / `uplink` / `backhaul` / `downlink` / `wait`; empty for
+    /// the frozen reference loop, which predates attribution).
+    pub bound_by: &'static str,
+    /// The critical-path client of this round/window (-1 when none — no
+    /// participants, or the frozen reference loop).
+    pub crit_client: i64,
+    /// The slowest uplink channel of the critical-path client (-1 none).
+    pub crit_channel: i64,
 }
 
 /// The single source of truth for per-round CSV column names, shared by
@@ -115,6 +124,9 @@ pub mod columns {
         "backhaul_p95_s",
         "migrated_handoff",
         "edge_rounds_bound",
+        "bound_by",
+        "crit_client",
+        "crit_channel",
     ];
 
     /// The CSV header line (no trailing newline).
@@ -123,17 +135,49 @@ pub mod columns {
     }
 }
 
-/// Nearest-rank percentile (`p` in [0, 100]); sorts `xs` in place. NaN for
-/// an empty slice. Shared by the engine and the synchronous reference loop
+/// Nearest-rank percentile (`p` in [0, 100]); sorts `xs` in place. NaN
+/// inputs are ignored (they sort to the end under `total_cmp` and are
+/// excluded from the rank, so a single NaN sample no longer poisons the
+/// high percentiles); NaN is returned only when no finite sample exists.
+/// Shared by the engine, the synchronous reference loop, and `lgc report`
 /// so straggler stats agree bit-for-bit.
 pub fn percentile(xs: &mut [f64], p: f64) -> f64 {
-    if xs.is_empty() {
+    xs.sort_by(f64::total_cmp);
+    let valid = xs.len() - xs.iter().rev().take_while(|x| x.is_nan()).count();
+    if valid == 0 {
         return f64::NAN;
     }
-    xs.sort_by(f64::total_cmp);
-    let n = xs.len();
-    let rank = ((p / 100.0) * n as f64).ceil() as usize;
-    xs[rank.clamp(1, n) - 1]
+    let rank = ((p.clamp(0.0, 100.0) / 100.0) * valid as f64).ceil() as usize;
+    xs[rank.clamp(1, valid) - 1]
+}
+
+/// Fixed-width histogram over the finite entries of `xs`: returns
+/// (per-bin counts, lo, hi) with `bins` equal-width buckets spanning
+/// `[lo, hi]` = the finite min/max. Degenerate inputs are well-defined:
+/// no finite samples → all-zero counts with `lo = hi = 0`; a single
+/// distinct value → everything in bin 0 with `lo = hi`. Shared by
+/// `lgc report`'s utilization sections.
+pub fn histogram(xs: &[f64], bins: usize) -> (Vec<u64>, f64, f64) {
+    let bins = bins.max(1);
+    let mut counts = vec![0u64; bins];
+    let finite = xs.iter().copied().filter(|x| x.is_finite());
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for x in finite {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if lo > hi {
+        return (counts, 0.0, 0.0);
+    }
+    for &x in xs.iter().filter(|x| x.is_finite()) {
+        let idx = if hi > lo {
+            (((x - lo) / (hi - lo)) * bins as f64) as usize
+        } else {
+            0
+        };
+        counts[idx.min(bins - 1)] += 1;
+    }
+    (counts, lo, hi)
 }
 
 /// A whole training run's log.
@@ -208,7 +252,7 @@ impl RunLog {
         for r in &self.records {
             let _ = writeln!(
                 s,
-                "{},{:.6},{:.6},{:.6},{:.3},{:.6},{:.3},{:.3},{},{:.4},{:.4},{:.4},{},{},{},{},{:.4},{:.4},{},{:.3},{:.6},{},{},{:.2},{},{:.4},{},{}",
+                "{},{:.6},{:.6},{:.6},{:.3},{:.6},{:.3},{:.3},{},{:.4},{:.4},{:.4},{},{},{},{},{:.4},{:.4},{},{:.3},{:.6},{},{},{:.2},{},{:.4},{},{},{},{},{}",
                 r.round,
                 r.train_loss,
                 r.eval_loss,
@@ -236,7 +280,10 @@ impl RunLog {
                 r.backhaul_bytes,
                 r.backhaul_p95_s,
                 r.migrated_handoff,
-                r.edge_rounds_bound
+                r.edge_rounds_bound,
+                r.bound_by,
+                r.crit_client,
+                r.crit_channel
             );
         }
         s
@@ -280,6 +327,34 @@ mod tests {
         let mut one = vec![7.5];
         assert_eq!(percentile(&mut one, 50.0), 7.5);
         assert!(percentile(&mut [], 50.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_ignores_nan_samples() {
+        // A NaN straggler (e.g. a client that never finished) must not
+        // poison the high percentiles: NaNs sort last and are excluded.
+        let mut xs = vec![3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&mut xs, 95.0), 3.0);
+        assert_eq!(percentile(&mut xs, 50.0), 2.0);
+        let mut all_nan = vec![f64::NAN, f64::NAN];
+        assert!(percentile(&mut all_nan, 50.0).is_nan());
+        // Out-of-range p clamps instead of indexing out of bounds.
+        let mut xs = vec![1.0, 2.0];
+        assert_eq!(percentile(&mut xs, 150.0), 2.0);
+        assert_eq!(percentile(&mut xs, -5.0), 1.0);
+    }
+
+    #[test]
+    fn histogram_edge_cases() {
+        // Empty / all-NaN input: zero counts, zero range.
+        assert_eq!(histogram(&[], 4), (vec![0, 0, 0, 0], 0.0, 0.0));
+        assert_eq!(histogram(&[f64::NAN], 4), (vec![0, 0, 0, 0], 0.0, 0.0));
+        // Single sample: one bucket, degenerate range.
+        assert_eq!(histogram(&[2.5], 4), (vec![1, 0, 0, 0], 2.5, 2.5));
+        // NaN entries are skipped, max lands in the last bin.
+        let (counts, lo, hi) = histogram(&[0.0, f64::NAN, 1.0, 1.0, 0.49], 2);
+        assert_eq!((lo, hi), (0.0, 1.0));
+        assert_eq!(counts, vec![2, 2]);
     }
 
     #[test]
@@ -355,20 +430,23 @@ mod tests {
         r.backhaul_p95_s = 0.75;
         r.migrated_handoff = 3;
         r.edge_rounds_bound = 1;
+        r.bound_by = "uplink";
+        r.crit_client = 2;
+        r.crit_channel = 1;
         log.push(r);
         let csv = log.to_csv();
         let header = csv.lines().next().unwrap();
         for col in ["sampled", "completed", "dropped_offline", "staleness_p50",
                     "staleness_p95", "down_bytes", "down_energy_j", "down_money",
                     "handoffs", "dropped_handoff", "zone_p50", "backhaul_bytes",
-                    "backhaul_p95_s", "migrated_handoff", "edge_rounds_bound"] {
+                    "backhaul_p95_s", "migrated_handoff", "edge_rounds_bound",
+                    "bound_by", "crit_client", "crit_channel"] {
             assert!(header.split(',').any(|c| c == col), "missing {col}: {header}");
         }
         assert!(
-            csv.lines()
-                .nth(1)
-                .unwrap()
-                .ends_with(",5,4,1,1.0000,3.0000,4096,12.500,0.125000,7,2,1.00,2080,0.7500,3,1"),
+            csv.lines().nth(1).unwrap().ends_with(
+                ",5,4,1,1.0000,3.0000,4096,12.500,0.125000,7,2,1.00,2080,0.7500,3,1,uplink,2,1"
+            ),
             "{csv}"
         );
     }

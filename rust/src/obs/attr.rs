@@ -1,0 +1,159 @@
+//! Round-time attribution: decompose one round's simulated wall time into
+//! named components along the critical path.
+//!
+//! The engines fill an [`Attribution`] per record with whatever they can
+//! measure exactly and call [`Attribution::finalize`], which closes the
+//! books: components are clamped non-negative, rescaled if they overshoot
+//! (an async window can start a contribution before the window opens), and
+//! the residual lands in `wait` — so the five components **always** sum to
+//! `round_time_s` within float tolerance, and 100% of every round's time is
+//! attributed to a named component.
+//!
+//! - **Barrier engines**: the critical device is the argmax of per-device
+//!   finish walls; `compute` is its local-step time, `uplink` the rest of
+//!   its wall, and the backhaul/downlink extensions of the round (edge
+//!   flush arrivals, layered broadcast + sync confirms) are exact deltas
+//!   beyond the access wall. `wait` is zero by construction.
+//! - **Async engines**: a record covers one aggregation window; the
+//!   critical contribution is the one with the longest compute+uplink
+//!   duration, and `wait` absorbs the server-side pacing (buffer fill,
+//!   downlink overlap) the window spent outside that path.
+
+/// Per-round (or per-aggregation-window) time attribution.
+#[derive(Clone, Copy, Debug)]
+pub struct Attribution {
+    /// Local-step compute time of the critical-path client (s).
+    pub compute: f64,
+    /// Uplink transfer time of the critical-path client (s).
+    pub uplink: f64,
+    /// Edge→cloud backhaul time extending the round beyond access (s).
+    pub backhaul: f64,
+    /// Model broadcast + sync-confirm time extending the round (s).
+    pub downlink: f64,
+    /// Residual barrier/buffer wait (s); filled by [`Attribution::finalize`].
+    pub wait: f64,
+    /// The critical-path client id (`-1` when no client participated).
+    pub crit_client: i64,
+    /// The slowest uplink channel of the critical-path client (`-1` none).
+    pub crit_channel: i64,
+}
+
+impl Default for Attribution {
+    fn default() -> Self {
+        Attribution::none()
+    }
+}
+
+impl Attribution {
+    /// The empty attribution (all components zero, no critical client).
+    pub fn none() -> Self {
+        Attribution {
+            compute: 0.0,
+            uplink: 0.0,
+            backhaul: 0.0,
+            downlink: 0.0,
+            wait: 0.0,
+            crit_client: -1,
+            crit_channel: -1,
+        }
+    }
+
+    /// Close the books against the recorded `round_time_s`: clamp components
+    /// to `[0, ∞)`, scale down proportionally if they exceed the round time,
+    /// and assign the residual to `wait` so the components sum exactly.
+    pub fn finalize(&mut self, round_time_s: f64) {
+        let rt = if round_time_s.is_finite() { round_time_s.max(0.0) } else { 0.0 };
+        let clamp = |x: f64| if x.is_finite() { x.max(0.0) } else { 0.0 };
+        self.compute = clamp(self.compute);
+        self.uplink = clamp(self.uplink);
+        self.backhaul = clamp(self.backhaul);
+        self.downlink = clamp(self.downlink);
+        let named = self.compute + self.uplink + self.backhaul + self.downlink;
+        if named > rt && named > 0.0 {
+            let scale = rt / named;
+            self.compute *= scale;
+            self.uplink *= scale;
+            self.backhaul *= scale;
+            self.downlink *= scale;
+        }
+        self.wait =
+            (rt - (self.compute + self.uplink + self.backhaul + self.downlink)).max(0.0);
+    }
+
+    /// The dominant component's label — the `bound_by` CSV column. Empty
+    /// when the round spent no time at all (e.g. the zero-duration record
+    /// of a fully-drained run).
+    pub fn bound_by(&self) -> &'static str {
+        let parts = [
+            (self.compute, "compute"),
+            (self.uplink, "uplink"),
+            (self.backhaul, "backhaul"),
+            (self.downlink, "downlink"),
+            (self.wait, "wait"),
+        ];
+        let mut best = 0.0;
+        let mut label = "";
+        for (v, name) in parts {
+            if v > best {
+                best = v;
+                label = name;
+            }
+        }
+        label
+    }
+
+    /// Sum of all five components (equals `round_time_s` after finalize).
+    pub fn total(&self) -> f64 {
+        self.compute + self.uplink + self.backhaul + self.downlink + self.wait
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finalize_assigns_residual_to_wait() {
+        let mut a = Attribution::none();
+        a.compute = 1.0;
+        a.uplink = 0.5;
+        a.finalize(2.0);
+        assert!((a.wait - 0.5).abs() < 1e-12);
+        assert!((a.total() - 2.0).abs() < 1e-12);
+        assert_eq!(a.bound_by(), "compute");
+    }
+
+    #[test]
+    fn finalize_rescales_overshoot() {
+        let mut a = Attribution::none();
+        a.compute = 3.0;
+        a.uplink = 1.0;
+        a.finalize(2.0);
+        assert!((a.total() - 2.0).abs() < 1e-12);
+        assert!((a.compute - 1.5).abs() < 1e-12);
+        assert!((a.uplink - 0.5).abs() < 1e-12);
+        assert_eq!(a.wait, 0.0);
+    }
+
+    #[test]
+    fn finalize_clamps_garbage() {
+        let mut a = Attribution::none();
+        a.compute = f64::NAN;
+        a.uplink = -1.0;
+        a.backhaul = f64::INFINITY;
+        a.finalize(1.0);
+        assert_eq!(a.compute, 0.0);
+        assert_eq!(a.uplink, 0.0);
+        assert_eq!(a.backhaul, 0.0);
+        assert!((a.wait - 1.0).abs() < 1e-12);
+        assert_eq!(a.bound_by(), "wait");
+    }
+
+    #[test]
+    fn empty_round_has_no_bound() {
+        let mut a = Attribution::none();
+        a.finalize(0.0);
+        assert_eq!(a.bound_by(), "");
+        assert_eq!(a.total(), 0.0);
+    }
+}

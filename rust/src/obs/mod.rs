@@ -1,0 +1,376 @@
+//! Structured simulation telemetry behind the [`Recorder`] seam.
+//!
+//! The recorder is **off by default** (config keys `trace` / `trace_file`)
+//! and then strictly zero-cost: every emission site guards on
+//! [`Recorder::on`], no buffer exists, and all engines stay bit-for-bit on
+//! the frozen `step_round` oracle (the golden-trace suite and the
+//! steady-state allocation test pin this). Enabled, it appends one JSON
+//! object per line (JSONL) to an in-memory buffer in **virtual sim time**,
+//! causally keyed by `(round, client, zone, layer, channel, kind)`, and
+//! flushes to `trace_file` when the run ends. Because the engines are
+//! deterministic and the serialization has a fixed key order, two identical
+//! seeded runs emit byte-identical traces.
+//!
+//! Three consumers sit on top:
+//!
+//! - [`attr::Attribution`] — in-process round-time attribution (compute /
+//!   uplink / backhaul / downlink / wait, plus the critical-path client and
+//!   channel), surfaced as the `bound_by` / `crit_client` / `crit_channel`
+//!   columns of [`crate::metrics::RoundRecord`].
+//! - [`report`] — the `lgc report <trace.jsonl>` drill-down: attribution
+//!   tables, channel-utilization histograms, per-zone backhaul occupancy,
+//!   straggler top-k, and a Chrome trace-event (Perfetto-loadable) export.
+//! - [`phase::PhaseTimers`] — wall-clock scoped phase timers (config key
+//!   `profile`), reported as bench-compatible JSON rows.
+//!
+//! See DESIGN.md §"Observability & trace schema".
+
+pub mod attr;
+pub mod phase;
+pub mod report;
+
+use std::fmt::Write as _;
+
+pub use attr::Attribution;
+pub use phase::{Phase, PhaseTimers};
+
+/// Sentinel for "field not set" in an [`Ev`]; serialized fields with this
+/// value are omitted from the JSONL line.
+pub const NONE: i64 = -1;
+
+/// One trace record under construction — a tiny `Copy` builder so emission
+/// sites read as `rec.push(Ev::new("uplink_arrive", t).client(i).layer(l))`.
+/// Unset fields are omitted from the serialized line.
+#[derive(Clone, Copy, Debug)]
+pub struct Ev {
+    pub kind: &'static str,
+    pub t: f64,
+    pub round: i64,
+    pub client: i64,
+    pub zone: i64,
+    pub layer: i64,
+    pub channel: i64,
+    /// Span duration in sim seconds ending at `t`; NaN = point event.
+    pub dur_s: f64,
+    pub bytes: i64,
+}
+
+impl Ev {
+    pub fn new(kind: &'static str, t: f64) -> Self {
+        Ev {
+            kind,
+            t,
+            round: NONE,
+            client: NONE,
+            zone: NONE,
+            layer: NONE,
+            channel: NONE,
+            dur_s: f64::NAN,
+            bytes: NONE,
+        }
+    }
+
+    pub fn round(mut self, r: usize) -> Self {
+        self.round = r as i64;
+        self
+    }
+    pub fn client(mut self, c: usize) -> Self {
+        self.client = c as i64;
+        self
+    }
+    pub fn zone(mut self, z: usize) -> Self {
+        self.zone = z as i64;
+        self
+    }
+    pub fn layer(mut self, l: usize) -> Self {
+        self.layer = l as i64;
+        self
+    }
+    pub fn channel(mut self, ch: usize) -> Self {
+        self.channel = ch as i64;
+        self
+    }
+    pub fn dur(mut self, s: f64) -> Self {
+        self.dur_s = s;
+        self
+    }
+    pub fn bytes(mut self, b: u64) -> Self {
+        self.bytes = b as i64;
+        self
+    }
+}
+
+/// The recorder seam: a no-op by default, a buffered JSONL writer when the
+/// config enables tracing, plus the wall-clock phase timers (`profile`).
+#[derive(Debug, Default)]
+pub struct Recorder {
+    enabled: bool,
+    profile: bool,
+    path: Option<String>,
+    buf: String,
+    events: u64,
+    pub timers: PhaseTimers,
+}
+
+impl Recorder {
+    /// The zero-cost default: nothing is buffered, nothing is written.
+    pub fn disabled() -> Self {
+        Recorder::default()
+    }
+
+    /// Buffer JSONL in memory without a file destination (tests/benches).
+    pub fn to_buffer() -> Self {
+        Recorder { enabled: true, ..Recorder::default() }
+    }
+
+    /// Buffer JSONL and flush it to `path` when the run ends.
+    pub fn to_file(path: &str) -> Self {
+        Recorder {
+            enabled: true,
+            path: Some(path.to_string()),
+            ..Recorder::default()
+        }
+    }
+
+    /// Resolve from the config keys: `trace` is the master switch (the
+    /// parser flips it on when `trace_file` names a destination),
+    /// `trace_file` the destination (default `trace.jsonl`); `profile`
+    /// switches the phase timers on independently.
+    pub fn from_cfg(cfg: &crate::config::ExperimentConfig) -> Self {
+        let mut rec = if cfg.trace {
+            Recorder::to_file(cfg.trace_file.as_deref().unwrap_or("trace.jsonl"))
+        } else {
+            Recorder::disabled()
+        };
+        rec.profile = cfg.profile;
+        rec
+    }
+
+    /// Whether trace emission is live. Every emission site guards on this
+    /// so the disabled recorder costs one predictable branch.
+    #[inline]
+    pub fn on(&self) -> bool {
+        self.enabled
+    }
+
+    /// Whether the wall-clock phase timers are live.
+    #[inline]
+    pub fn profiling(&self) -> bool {
+        self.profile
+    }
+
+    /// Force the phase timers on/off (bench harness convenience).
+    pub fn set_profiling(&mut self, on: bool) {
+        self.profile = on;
+    }
+
+    /// Records emitted so far.
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    /// The buffered JSONL bytes (byte-identical across identical seeded
+    /// runs — the trace-determinism contract).
+    pub fn buffer(&self) -> &str {
+        &self.buf
+    }
+
+    /// Append one record. Key order is fixed (`t`, `kind`, then the set
+    /// causal keys in declaration order) so serialization is deterministic.
+    pub fn push(&mut self, ev: Ev) {
+        if !self.enabled {
+            return;
+        }
+        self.events += 1;
+        let _ = write!(self.buf, "{{\"t\":{:?},\"kind\":\"{}\"", ev.t, ev.kind);
+        if ev.round >= 0 {
+            let _ = write!(self.buf, ",\"round\":{}", ev.round);
+        }
+        if ev.client >= 0 {
+            let _ = write!(self.buf, ",\"client\":{}", ev.client);
+        }
+        if ev.zone >= 0 {
+            let _ = write!(self.buf, ",\"zone\":{}", ev.zone);
+        }
+        if ev.layer >= 0 {
+            let _ = write!(self.buf, ",\"layer\":{}", ev.layer);
+        }
+        if ev.channel >= 0 {
+            let _ = write!(self.buf, ",\"channel\":{}", ev.channel);
+        }
+        if ev.dur_s.is_finite() {
+            let _ = write!(self.buf, ",\"dur\":{:?}", ev.dur_s);
+        }
+        if ev.bytes >= 0 {
+            let _ = write!(self.buf, ",\"bytes\":{}", ev.bytes);
+        }
+        self.buf.push_str("}\n");
+    }
+
+    /// Append the per-round attribution record — the one the `lgc report`
+    /// attribution table and the attribution-sums property test read back.
+    pub fn push_round(&mut self, t: f64, round: usize, round_time_s: f64, a: &Attribution) {
+        if !self.enabled {
+            return;
+        }
+        self.events += 1;
+        let fin = |x: f64| if x.is_finite() { x } else { 0.0 };
+        let _ = write!(
+            self.buf,
+            "{{\"t\":{:?},\"kind\":\"round\",\"round\":{round},\"dur\":{:?},\
+             \"compute\":{:?},\"uplink\":{:?},\"backhaul\":{:?},\"downlink\":{:?},\
+             \"wait\":{:?},\"bound\":\"{}\",\"crit_client\":{},\"crit_channel\":{}}}",
+            t,
+            fin(round_time_s),
+            fin(a.compute),
+            fin(a.uplink),
+            fin(a.backhaul),
+            fin(a.downlink),
+            fin(a.wait),
+            a.bound_by(),
+            a.crit_client,
+            a.crit_channel,
+        );
+        self.buf.push('\n');
+    }
+
+    /// Start a wall-clock phase measurement (None when profiling is off).
+    #[inline]
+    pub fn phase_start(&self) -> Option<std::time::Instant> {
+        if self.profile {
+            Some(std::time::Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Close a phase measurement opened by [`Recorder::phase_start`].
+    #[inline]
+    pub fn phase_end(&mut self, phase: Phase, t0: Option<std::time::Instant>) {
+        if let Some(t0) = t0 {
+            self.timers.add(phase, t0.elapsed().as_nanos() as u64);
+        }
+    }
+
+    /// Write the buffered trace to `trace_file`, if one was configured.
+    /// Returns the destination path when a file was written.
+    pub fn flush(&mut self) -> std::io::Result<Option<&str>> {
+        match &self.path {
+            Some(path) if self.enabled => {
+                std::fs::write(path, &self.buf)?;
+                Ok(Some(path))
+            }
+            _ => Ok(None),
+        }
+    }
+}
+
+/// The consolidated end-of-run summary: `lgc train`'s banner and report
+/// lines collected behind one render path (`key: value` per line) instead
+/// of scattered `println!`s, so greppable lines like `peak_rss_mb:` have a
+/// single owner and degrade explicitly (never silently omitted).
+#[derive(Debug, Default)]
+pub struct Report {
+    lines: Vec<(String, String)>,
+}
+
+impl Report {
+    pub fn new() -> Self {
+        Report::default()
+    }
+
+    /// Append one `key: value` line.
+    pub fn push(&mut self, key: &str, value: impl std::fmt::Display) {
+        self.lines.push((key.to_string(), value.to_string()));
+    }
+
+    /// Append a section separator (blank line).
+    pub fn gap(&mut self) {
+        self.lines.push((String::new(), String::new()));
+    }
+
+    /// Append a raw line verbatim (headers like `== name ==`).
+    pub fn raw(&mut self, line: impl Into<String>) {
+        self.lines.push((String::new(), line.into()));
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lines.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.lines {
+            if k.is_empty() && v.is_empty() {
+                out.push('\n');
+            } else if k.is_empty() {
+                let _ = writeln!(out, "{v}");
+            } else {
+                let _ = writeln!(out, "{k}: {v}");
+            }
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_emits_nothing() {
+        let mut rec = Recorder::disabled();
+        rec.push(Ev::new("compute_done", 1.0).client(3));
+        rec.push_round(2.0, 0, 2.0, &Attribution::none());
+        assert!(!rec.on());
+        assert_eq!(rec.events(), 0);
+        assert!(rec.buffer().is_empty());
+        assert!(rec.flush().unwrap().is_none());
+    }
+
+    #[test]
+    fn push_serializes_fixed_key_order_and_omits_unset() {
+        let mut rec = Recorder::to_buffer();
+        rec.push(Ev::new("uplink_arrive", 1.5).round(2).client(7).layer(1).channel(0).dur(0.25));
+        rec.push(Ev::new("fading_tick", 2.0));
+        let lines: Vec<&str> = rec.buffer().lines().collect();
+        assert_eq!(
+            lines[0],
+            "{\"t\":1.5,\"kind\":\"uplink_arrive\",\"round\":2,\"client\":7,\
+             \"layer\":1,\"channel\":0,\"dur\":0.25}"
+        );
+        assert_eq!(lines[1], "{\"t\":2.0,\"kind\":\"fading_tick\"}");
+        assert_eq!(rec.events(), 2);
+    }
+
+    #[test]
+    fn round_record_carries_attribution() {
+        let mut rec = Recorder::to_buffer();
+        let mut a = Attribution::none();
+        a.compute = 1.0;
+        a.uplink = 2.0;
+        a.crit_client = 4;
+        a.crit_channel = 1;
+        a.finalize(3.5);
+        rec.push_round(10.0, 7, 3.5, &a);
+        let line = rec.buffer().lines().next().unwrap();
+        assert!(line.contains("\"kind\":\"round\""), "{line}");
+        assert!(line.contains("\"compute\":1.0"), "{line}");
+        assert!(line.contains("\"wait\":0.5"), "{line}");
+        assert!(line.contains("\"bound\":\"uplink\""), "{line}");
+        assert!(line.contains("\"crit_client\":4"), "{line}");
+    }
+
+    #[test]
+    fn report_renders_one_line_per_kv() {
+        let mut r = Report::new();
+        r.push("peak_rss_mb", "unavailable");
+        r.gap();
+        r.push("rounds", 12);
+        assert_eq!(r.render(), "peak_rss_mb: unavailable\n\nrounds: 12\n");
+    }
+}

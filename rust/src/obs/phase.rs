@@ -1,0 +1,104 @@
+//! Wall-clock scoped phase timers (config key `profile`): how much real
+//! time the run spent in each engine phase, accumulated per process and
+//! reported as `profile/<phase>_ms` lines and bench-compatible JSON rows.
+//!
+//! These measure **wall time**, never sim time — they exist to localize
+//! host-side hot spots (is the run event-loop-bound or train-bound?) and
+//! to land trace-overhead shifts in the bench trajectory. They are
+//! deliberately excluded from the JSONL trace, which must stay
+//! deterministic across runs.
+
+/// The coarse engine phases the timers distinguish.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Everything inside the discrete-event loop (superset of the rest).
+    EventLoop,
+    /// Device local training steps.
+    Train,
+    /// Gradient compression + upload encoding.
+    Compress,
+    /// Server aggregation + model apply.
+    Aggregate,
+}
+
+pub const PHASES: [Phase; 4] = [Phase::EventLoop, Phase::Train, Phase::Compress, Phase::Aggregate];
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::EventLoop => "event_loop",
+            Phase::Train => "train",
+            Phase::Compress => "compress",
+            Phase::Aggregate => "aggregate",
+        }
+    }
+
+    fn idx(&self) -> usize {
+        match self {
+            Phase::EventLoop => 0,
+            Phase::Train => 1,
+            Phase::Compress => 2,
+            Phase::Aggregate => 3,
+        }
+    }
+}
+
+/// Accumulated wall-clock nanoseconds per phase.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseTimers {
+    ns: [u64; 4],
+}
+
+impl PhaseTimers {
+    pub fn add(&mut self, phase: Phase, ns: u64) {
+        self.ns[phase.idx()] += ns;
+    }
+
+    pub fn ns(&self, phase: Phase) -> u64 {
+        self.ns[phase.idx()]
+    }
+
+    pub fn ms(&self, phase: Phase) -> f64 {
+        self.ns[phase.idx()] as f64 / 1e6
+    }
+
+    /// Whether any phase recorded time (i.e. profiling actually ran).
+    pub fn any(&self) -> bool {
+        self.ns.iter().any(|&n| n > 0)
+    }
+
+    /// Fold another accumulator in (per-shard timers merge here).
+    pub fn merge(&mut self, other: &PhaseTimers) {
+        for (a, b) in self.ns.iter_mut().zip(&other.ns) {
+            *a += b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_merges_per_phase() {
+        let mut t = PhaseTimers::default();
+        assert!(!t.any());
+        t.add(Phase::Train, 1_500_000);
+        t.add(Phase::Train, 500_000);
+        t.add(Phase::Aggregate, 1_000_000);
+        assert_eq!(t.ns(Phase::Train), 2_000_000);
+        assert!((t.ms(Phase::Train) - 2.0).abs() < 1e-12);
+        assert_eq!(t.ns(Phase::EventLoop), 0);
+        let mut u = PhaseTimers::default();
+        u.add(Phase::Train, 1_000_000);
+        t.merge(&u);
+        assert_eq!(t.ns(Phase::Train), 3_000_000);
+        assert!(t.any());
+    }
+
+    #[test]
+    fn phase_names_are_stable() {
+        let names: Vec<&str> = PHASES.iter().map(|p| p.name()).collect();
+        assert_eq!(names, ["event_loop", "train", "compress", "aggregate"]);
+    }
+}

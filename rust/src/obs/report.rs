@@ -1,0 +1,436 @@
+//! The `lgc report <trace.jsonl>` drill-down: parse a recorded trace back
+//! into [`TraceRec`]s and post-process it into per-channel utilization
+//! histograms, per-zone backhaul occupancy, a straggler top-k, the
+//! round-time attribution table, and a Chrome trace-event export that
+//! loads in `chrome://tracing` / Perfetto.
+//!
+//! The parser is a deliberately minimal flat-object JSON reader matched to
+//! the recorder's fixed serialization (string and number values only, no
+//! nesting, no escapes) — the vendored-only rule means no serde, and the
+//! schema validator in `python/trace_check.py` guards the format from the
+//! other side.
+
+use std::fmt::Write as _;
+
+use crate::metrics::{histogram, percentile};
+
+/// One parsed trace record. Unset integer keys are `-1`, unset floats NaN.
+#[derive(Clone, Debug)]
+pub struct TraceRec {
+    pub t: f64,
+    pub kind: String,
+    pub round: i64,
+    pub client: i64,
+    pub zone: i64,
+    pub layer: i64,
+    pub channel: i64,
+    pub dur: f64,
+    pub bytes: i64,
+    pub compute: f64,
+    pub uplink: f64,
+    pub backhaul: f64,
+    pub downlink: f64,
+    pub wait: f64,
+    pub bound: String,
+    pub crit_client: i64,
+    pub crit_channel: i64,
+}
+
+impl Default for TraceRec {
+    fn default() -> Self {
+        TraceRec {
+            t: f64::NAN,
+            kind: String::new(),
+            round: -1,
+            client: -1,
+            zone: -1,
+            layer: -1,
+            channel: -1,
+            dur: f64::NAN,
+            bytes: -1,
+            compute: f64::NAN,
+            uplink: f64::NAN,
+            backhaul: f64::NAN,
+            downlink: f64::NAN,
+            wait: f64::NAN,
+            bound: String::new(),
+            crit_client: -1,
+            crit_channel: -1,
+        }
+    }
+}
+
+/// Parse one JSONL line of the recorder's flat-object format.
+pub fn parse_line(line: &str) -> Result<TraceRec, String> {
+    let s = line.trim();
+    let body = s
+        .strip_prefix('{')
+        .and_then(|s| s.strip_suffix('}'))
+        .ok_or_else(|| format!("not a JSON object: {s}"))?;
+    let mut rec = TraceRec::default();
+    let mut rest = body;
+    while !rest.is_empty() {
+        rest = rest.trim_start_matches([',', ' ']);
+        if rest.is_empty() {
+            break;
+        }
+        let rest2 = rest
+            .strip_prefix('"')
+            .ok_or_else(|| format!("expected key quote in: {rest}"))?;
+        let kq = rest2.find('"').ok_or_else(|| format!("unterminated key in: {rest}"))?;
+        let key = &rest2[..kq];
+        let after = rest2[kq + 1..]
+            .strip_prefix(':')
+            .ok_or_else(|| format!("expected `:` after key {key}"))?;
+        let (value, tail) = if let Some(sv) = after.strip_prefix('"') {
+            let vq = sv.find('"').ok_or_else(|| format!("unterminated value for {key}"))?;
+            (Val::Str(&sv[..vq]), &sv[vq + 1..])
+        } else {
+            let end = after.find(',').unwrap_or(after.len());
+            let raw = after[..end].trim();
+            let num = raw
+                .parse::<f64>()
+                .map_err(|_| format!("bad number `{raw}` for key {key}"))?;
+            (Val::Num(num), &after[end..])
+        };
+        rec.set(key, value)?;
+        rest = tail;
+    }
+    if rec.kind.is_empty() || !rec.t.is_finite() {
+        return Err(format!("record missing t/kind: {s}"));
+    }
+    Ok(rec)
+}
+
+enum Val<'a> {
+    Str(&'a str),
+    Num(f64),
+}
+
+impl TraceRec {
+    fn set(&mut self, key: &str, value: Val) -> Result<(), String> {
+        let num = |v: &Val| match v {
+            Val::Num(n) => Ok(*n),
+            Val::Str(_) => Err(format!("key {key} expects a number")),
+        };
+        match key {
+            "t" => self.t = num(&value)?,
+            "kind" => match value {
+                Val::Str(s) => self.kind = s.to_string(),
+                Val::Num(_) => return Err("kind expects a string".into()),
+            },
+            "bound" => match value {
+                Val::Str(s) => self.bound = s.to_string(),
+                Val::Num(_) => return Err("bound expects a string".into()),
+            },
+            "round" => self.round = num(&value)? as i64,
+            "client" => self.client = num(&value)? as i64,
+            "zone" => self.zone = num(&value)? as i64,
+            "layer" => self.layer = num(&value)? as i64,
+            "channel" => self.channel = num(&value)? as i64,
+            "bytes" => self.bytes = num(&value)? as i64,
+            "dur" => self.dur = num(&value)?,
+            "compute" => self.compute = num(&value)?,
+            "uplink" => self.uplink = num(&value)?,
+            "backhaul" => self.backhaul = num(&value)?,
+            "downlink" => self.downlink = num(&value)?,
+            "wait" => self.wait = num(&value)?,
+            "crit_client" => self.crit_client = num(&value)? as i64,
+            "crit_channel" => self.crit_channel = num(&value)? as i64,
+            other => return Err(format!("unknown trace key `{other}`")),
+        }
+        Ok(())
+    }
+}
+
+/// Parse a whole JSONL buffer (empty lines skipped).
+pub fn parse(buf: &str) -> Result<Vec<TraceRec>, String> {
+    let mut out = Vec::new();
+    for (i, line) in buf.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        out.push(parse_line(line).map_err(|e| format!("line {}: {e}", i + 1))?);
+    }
+    Ok(out)
+}
+
+/// Load + parse a trace file.
+pub fn load(path: &str) -> Result<Vec<TraceRec>, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    parse(&text)
+}
+
+fn bar(frac: f64, width: usize) -> String {
+    let n = ((frac.clamp(0.0, 1.0)) * width as f64).round() as usize;
+    format!("{:#<n$}{:.<rest$}", "", "", n = n, rest = width - n)
+}
+
+/// Render the full drill-down report.
+pub fn render(trace: &[TraceRec], topk: usize) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "trace records: {}", trace.len());
+    let span = trace.last().map(|r| r.t).unwrap_or(0.0) - trace.first().map(|r| r.t).unwrap_or(0.0);
+    let _ = writeln!(out, "sim span: {span:.3} s");
+
+    // -- round-time attribution ---------------------------------------
+    let rounds: Vec<&TraceRec> = trace.iter().filter(|r| r.kind == "round").collect();
+    let _ = writeln!(out, "\n== round-time attribution ==");
+    if rounds.is_empty() {
+        let _ = writeln!(out, "(no round records in trace)");
+    } else {
+        let total: f64 = rounds.iter().map(|r| r.dur.max(0.0)).sum();
+        let comp = |f: fn(&TraceRec) -> f64| -> f64 {
+            rounds.iter().map(|r| { let v = f(r); if v.is_finite() { v } else { 0.0 } }).sum()
+        };
+        let parts = [
+            ("compute", comp(|r| r.compute)),
+            ("uplink", comp(|r| r.uplink)),
+            ("backhaul", comp(|r| r.backhaul)),
+            ("downlink", comp(|r| r.downlink)),
+            ("wait", comp(|r| r.wait)),
+        ];
+        let named: f64 = parts.iter().map(|(_, v)| v).sum();
+        for (name, v) in parts {
+            let pct = if total > 0.0 { 100.0 * v / total } else { 0.0 };
+            let bound = rounds.iter().filter(|r| r.bound == name).count();
+            let _ = writeln!(
+                out,
+                "{name:<9} {v:>10.3} s  {pct:>5.1}%  |{}|  bound in {bound} rounds",
+                bar(pct / 100.0, 24)
+            );
+        }
+        let cov = if total > 0.0 { 100.0 * named / total } else { 100.0 };
+        let _ = writeln!(out, "attributed: {cov:.2}% of {total:.3} s over {} rounds", rounds.len());
+        // Slowest rounds, with their dominant component.
+        let mut slow: Vec<&&TraceRec> = rounds.iter().collect();
+        slow.sort_by(|a, b| b.dur.total_cmp(&a.dur).then(a.round.cmp(&b.round)));
+        let _ = writeln!(out, "slowest rounds:");
+        for r in slow.iter().take(topk.min(5)) {
+            let _ = writeln!(
+                out,
+                "  round {:>4}  {:>8.3} s  bound_by {:<8}  crit_client {}  crit_channel {}",
+                r.round, r.dur, r.bound, r.crit_client, r.crit_channel
+            );
+        }
+    }
+
+    // -- channel utilization ------------------------------------------
+    let _ = writeln!(out, "\n== channel utilization ==");
+    let max_ch = trace.iter().map(|r| r.channel).max().unwrap_or(-1);
+    if max_ch < 0 {
+        let _ = writeln!(out, "(no per-channel records in trace)");
+    }
+    for ch in 0..=max_ch.max(-1) {
+        for (label, kind) in [("uplink", "uplink_arrive"), ("downlink", "downlink_arrive")] {
+            let mut durs: Vec<f64> = trace
+                .iter()
+                .filter(|r| r.channel == ch && r.kind == kind && r.dur.is_finite())
+                .map(|r| r.dur)
+                .collect();
+            if durs.is_empty() {
+                continue;
+            }
+            let busy: f64 = durs.iter().sum();
+            let util = if span > 0.0 { 100.0 * busy / span } else { 0.0 };
+            let p95 = percentile(&mut durs, 95.0);
+            let _ = writeln!(
+                out,
+                "ch{ch} {label:<8} {:>6} transfers  busy {busy:>9.3} s ({util:>5.1}% of span)  p95 {p95:.4} s",
+                durs.len()
+            );
+            let (counts, lo, hi) = histogram(&durs, 8);
+            let peak = counts.iter().copied().max().unwrap_or(1).max(1);
+            for (b, &c) in counts.iter().enumerate() {
+                let x0 = lo + (hi - lo) * b as f64 / counts.len() as f64;
+                let x1 = lo + (hi - lo) * (b + 1) as f64 / counts.len() as f64;
+                let _ = writeln!(
+                    out,
+                    "    [{x0:>8.4},{x1:>8.4}) {:<24} {c}",
+                    bar(c as f64 / peak as f64, 24)
+                );
+            }
+        }
+    }
+
+    // -- backhaul occupancy -------------------------------------------
+    let _ = writeln!(out, "\n== backhaul occupancy (per zone) ==");
+    // Bytes ride the enqueue record, the transit span rides the arrival —
+    // fold both kinds into the per-zone row.
+    let max_zone = trace
+        .iter()
+        .filter(|r| r.kind == "backhaul_arrive" || r.kind == "backhaul_enqueue")
+        .map(|r| r.zone)
+        .max()
+        .unwrap_or(-1);
+    if max_zone < 0 {
+        let _ = writeln!(out, "(no backhaul records in trace)");
+    }
+    for z in 0..=max_zone.max(-1) {
+        let frames: Vec<&TraceRec> = trace
+            .iter()
+            .filter(|r| r.kind == "backhaul_arrive" && r.zone == z)
+            .collect();
+        let bytes: i64 = trace
+            .iter()
+            .filter(|r| {
+                (r.kind == "backhaul_enqueue" || r.kind == "backhaul_arrive") && r.zone == z
+            })
+            .map(|r| r.bytes.max(0))
+            .sum();
+        if frames.is_empty() && bytes == 0 {
+            continue;
+        }
+        let busy: f64 = frames.iter().map(|r| if r.dur.is_finite() { r.dur } else { 0.0 }).sum();
+        let occ = if span > 0.0 { 100.0 * busy / span } else { 0.0 };
+        let _ = writeln!(
+            out,
+            "zone {z:<3} {:>6} frames  {bytes:>12} B  busy {busy:>9.3} s  |{}| {occ:>5.1}%",
+            frames.len(),
+            bar(occ / 100.0, 24)
+        );
+    }
+
+    // -- straggler top-k ----------------------------------------------
+    let _ = writeln!(out, "\n== straggler top-{topk} (critical-path clients) ==");
+    let mut per_client: Vec<(i64, usize, f64)> = Vec::new();
+    for r in &rounds {
+        if r.crit_client < 0 {
+            continue;
+        }
+        match per_client.iter_mut().find(|(c, _, _)| *c == r.crit_client) {
+            Some(e) => {
+                e.1 += 1;
+                e.2 += r.dur.max(0.0);
+            }
+            None => per_client.push((r.crit_client, 1, r.dur.max(0.0))),
+        }
+    }
+    per_client.sort_by(|a, b| b.1.cmp(&a.1).then(b.2.total_cmp(&a.2)).then(a.0.cmp(&b.0)));
+    if per_client.is_empty() {
+        let _ = writeln!(out, "(no critical-path clients recorded)");
+    }
+    for (client, n, time) in per_client.iter().take(topk) {
+        let _ = writeln!(
+            out,
+            "client {client:<6} critical in {n:>4} rounds  {time:>9.3} s of round time"
+        );
+    }
+    out
+}
+
+/// Serialize the trace as a Chrome trace-event JSON document
+/// (`chrome://tracing` / Perfetto "JSON" format): span records become
+/// complete (`ph:"X"`) events starting at `t - dur`, points become
+/// instants (`ph:"i"`). `pid` maps the zone, `tid` the client.
+pub fn chrome_export(trace: &[TraceRec]) -> String {
+    let mut out = String::from("{\"traceEvents\":[\n");
+    let mut first = true;
+    for r in trace {
+        if !first {
+            out.push_str(",\n");
+        }
+        first = false;
+        let pid = r.zone.max(0);
+        let tid = r.client.max(0);
+        if r.dur.is_finite() && r.dur > 0.0 {
+            let ts = (r.t - r.dur) * 1e6;
+            let _ = write!(
+                out,
+                "{{\"name\":\"{}\",\"ph\":\"X\",\"ts\":{ts:.3},\"dur\":{:.3},\
+                 \"pid\":{pid},\"tid\":{tid}}}",
+                r.kind,
+                r.dur * 1e6
+            );
+        } else {
+            let _ = write!(
+                out,
+                "{{\"name\":\"{}\",\"ph\":\"i\",\"s\":\"t\",\"ts\":{:.3},\
+                 \"pid\":{pid},\"tid\":{tid}}}",
+                r.kind,
+                r.t * 1e6
+            );
+        }
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_recorder_output() {
+        let mut rec = crate::obs::Recorder::to_buffer();
+        rec.push(
+            crate::obs::Ev::new("uplink_arrive", 1.5)
+                .round(2)
+                .client(7)
+                .layer(1)
+                .channel(0)
+                .dur(0.25)
+                .bytes(4096),
+        );
+        let mut a = crate::obs::Attribution::none();
+        a.compute = 1.0;
+        a.uplink = 0.5;
+        a.crit_client = 7;
+        a.crit_channel = 0;
+        a.finalize(1.5);
+        rec.push_round(1.5, 2, 1.5, &a);
+        let recs = parse(rec.buffer()).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].kind, "uplink_arrive");
+        assert_eq!(recs[0].client, 7);
+        assert_eq!(recs[0].bytes, 4096);
+        assert!((recs[0].dur - 0.25).abs() < 1e-12);
+        assert_eq!(recs[1].kind, "round");
+        assert_eq!(recs[1].bound, "compute");
+        assert!((recs[1].compute + recs[1].uplink + recs[1].wait - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_lines() {
+        assert!(parse_line("not json").is_err());
+        assert!(parse_line("{\"t\":1.0}").is_err(), "missing kind");
+        assert!(parse_line("{\"t\":1.0,\"kind\":\"x\",\"mystery\":3}").is_err());
+    }
+
+    #[test]
+    fn report_names_all_sections() {
+        let mut rec = crate::obs::Recorder::to_buffer();
+        rec.push(crate::obs::Ev::new("uplink_arrive", 1.0).client(0).channel(0).dur(0.5));
+        rec.push(crate::obs::Ev::new("backhaul_arrive", 2.0).zone(0).dur(0.25).bytes(100));
+        let mut a = crate::obs::Attribution::none();
+        a.uplink = 2.0;
+        a.crit_client = 0;
+        a.finalize(2.0);
+        rec.push_round(2.0, 0, 2.0, &a);
+        let recs = parse(rec.buffer()).unwrap();
+        let text = render(&recs, 5);
+        for section in [
+            "round-time attribution",
+            "channel utilization",
+            "backhaul occupancy",
+            "straggler top-5",
+        ] {
+            assert!(text.contains(section), "missing {section} in:\n{text}");
+        }
+        assert!(text.contains("attributed: 100.00%"), "{text}");
+    }
+
+    #[test]
+    fn chrome_export_is_structurally_sound() {
+        let mut rec = crate::obs::Recorder::to_buffer();
+        rec.push(crate::obs::Ev::new("uplink_arrive", 1.0).client(3).zone(1).channel(0).dur(0.5));
+        rec.push(crate::obs::Ev::new("fading_tick", 2.0));
+        let recs = parse(rec.buffer()).unwrap();
+        let text = chrome_export(&recs);
+        assert!(text.starts_with("{\"traceEvents\":[\n"));
+        assert!(text.trim_end().ends_with("]}"));
+        assert!(text.contains("\"ph\":\"X\""));
+        assert!(text.contains("\"ph\":\"i\""));
+        assert!(text.contains("\"ts\":500000.000")); // 1.0 - 0.5 → µs
+    }
+}

@@ -36,6 +36,7 @@ use crate::coordinator::trainer::{DeviceTrainer, LocalTrainer};
 use crate::drl::DeviceAgent;
 use crate::edge::HeldContribution;
 use crate::metrics::{percentile, RoundRecord, RunLog};
+use crate::obs::{Attribution, Ev, Phase, Recorder};
 use crate::population::{ClientSampler, Population};
 use crate::scenario::Scenario;
 
@@ -58,25 +59,36 @@ pub fn run(
         .map(|s| (s.handoffs_total(), s.dropped_total()))
         .unwrap_or((0, 0));
     let edge0 = exp.edge.as_ref().map(|e| e.migrated_total()).unwrap_or(0);
+    // Take the recorder out for the run (the engines borrow `exp`'s fields
+    // piecemeal, and the recorder must stay writable throughout); flushed
+    // and handed back below, even on an engine error.
+    let mut rec = std::mem::take(&mut exp.recorder);
+    let loop_t0 = rec.phase_start();
     let result = if exp.population.is_some() {
-        run_cohort(exp, trainer, log)
+        run_cohort(exp, trainer, log, &mut rec)
     } else {
         match exp.sync_mode {
-            SyncMode::Barrier => run_barrier(exp, trainer, log),
+            SyncMode::Barrier => run_barrier(exp, trainer, log, &mut rec),
             SyncMode::SemiAsync { buffer_k } => {
-                run_async(exp, trainer, log, AsyncKind::Semi { buffer_k })
+                run_async(exp, trainer, log, AsyncKind::Semi { buffer_k }, &mut rec)
             }
             SyncMode::FullyAsync { staleness_decay } => {
-                run_async(exp, trainer, log, AsyncKind::Fully { staleness_decay })
+                run_async(exp, trainer, log, AsyncKind::Fully { staleness_decay }, &mut rec)
             }
         }
     };
+    rec.phase_end(Phase::EventLoop, loop_t0);
+    let flush_err = rec.flush().map(|_| ()).err();
+    exp.recorder = rec;
     if let Some(sc) = exp.scenario.as_ref() {
         exp.sim_stats.handoffs = sc.handoffs_total() - scenario0.0;
         exp.sim_stats.dropped_handoff = sc.dropped_total() - scenario0.1;
     }
     if let Some(edge) = exp.edge.as_ref() {
         exp.sim_stats.migrated_handoff = edge.migrated_total() - edge0;
+    }
+    if let Some(e) = flush_err {
+        return result.and(Err(anyhow::anyhow!("failed to write trace file: {e}")));
     }
     result
 }
@@ -105,13 +117,16 @@ fn drain_edge_window(exp: &mut Experiment, finish_p95_s: f64) -> (u64, f64, u64,
 /// device's uplink bundle, plus its downlink bundle when the downlink is
 /// simulated. The cohort engines reconfigure their live slots themselves —
 /// demobilized clients pick the current world up at materialization.
-fn scenario_tick_legacy(exp: &mut Experiment, t: f64) {
+fn scenario_tick_legacy(exp: &mut Experiment, t: f64, rec: &mut Recorder) {
     let Some(sc) = exp.scenario.as_mut() else { return };
     let fx = sc.tick(t);
     for &id in &fx.reconfigure {
         sc.configure(id, &mut exp.devices[id].channels);
         if let Some(dl) = exp.downlink.as_mut() {
             sc.configure(id, dl.links_mut(id));
+        }
+        if rec.on() {
+            rec.push(Ev::new("handoff", t).client(id).zone(sc.zone_of(id)));
         }
         // Edge tier: the device's contributions still held at its old
         // zone's node follow it to the new zone (migration, not the
@@ -121,6 +136,9 @@ fn scenario_tick_legacy(exp: &mut Experiment, t: f64) {
             let zone = sc.zone_of(id);
             if edge.zone_of(id) != zone {
                 edge.migrate(id, zone);
+                if rec.on() {
+                    rec.push(Ev::new("migrate", t).client(id).zone(zone));
+                }
             }
         }
     }
@@ -175,6 +193,7 @@ fn run_barrier(
     exp: &mut Experiment,
     trainer: &mut dyn LocalTrainer,
     log: &mut RunLog,
+    rec: &mut Recorder,
 ) -> Result<()> {
     let m = exp.devices.len();
     let samples: Vec<usize> = (0..m).map(|i| trainer.device_samples(i)).collect();
@@ -184,7 +203,7 @@ fn run_barrier(
     // happens, hand the handles back afterwards so the trainer stays usable
     // for further runs (with the advanced sampler state).
     let mut handles = if threads > 1 { trainer.split_device_trainers() } else { None };
-    let result = barrier_rounds(exp, trainer, log, &mut handles, threads, &samples);
+    let result = barrier_rounds(exp, trainer, log, &mut handles, threads, &samples, rec);
     if let Some(h) = handles.take() {
         trainer.restore_device_trainers(h);
     }
@@ -198,6 +217,7 @@ fn barrier_rounds(
     handles: &mut Option<Vec<Box<dyn DeviceTrainer>>>,
     threads: usize,
     samples: &[usize],
+    rec: &mut Recorder,
 ) -> Result<()> {
     let m = exp.devices.len();
     if let Some(h) = handles.as_ref() {
@@ -230,9 +250,36 @@ fn barrier_rounds(
         active: &[bool],
         walls: &[f64],
         completed: u64,
+        comp_s: &[f64],
+        slow_chs: &[i64],
+        bh_wall: f64,
+        rec: &mut Recorder,
     ) -> Result<()> {
         let m = active.len();
         let done = round + 1 == exp.cfg.rounds;
+        // Round-time attribution: the critical device is the slowest
+        // upload (compute + access transfer); the backhaul segment is
+        // whatever the slowest zone frame added past the access side, the
+        // downlink segment whatever the slowest broadcast added past both.
+        // The four named segments tile `round_wall` exactly (wait = 0 in
+        // barrier mode — nothing idles inside a barrier round).
+        let mut attr = Attribution::none();
+        let mut crit = usize::MAX;
+        for i in 0..m {
+            if active[i] && (crit == usize::MAX || walls[i] > walls[crit]) {
+                crit = i;
+            }
+        }
+        if crit != usize::MAX {
+            let access = walls[crit];
+            attr.compute = comp_s[crit];
+            attr.uplink = (access - comp_s[crit]).max(0.0);
+            attr.backhaul = (bh_wall - access).max(0.0);
+            attr.downlink = (round_wall - access.max(bh_wall)).max(0.0);
+            attr.crit_client = crit as i64;
+            attr.crit_channel = slow_chs[crit];
+        }
+        attr.finalize(round_wall);
         // Drain the downlink's per-window totals (zero when disabled).
         let down = exp
             .downlink
@@ -295,7 +342,11 @@ fn barrier_rounds(
             backhaul_p95_s,
             migrated_handoff,
             edge_rounds_bound,
+            bound_by: attr.bound_by(),
+            crit_client: attr.crit_client,
+            crit_channel: attr.crit_channel,
         });
+        rec.push_round(exp.total_time_s, round, round_wall, &attr);
         stats.records += 1;
         Ok(())
     }
@@ -317,11 +368,13 @@ fn barrier_rounds(
         scheduled: &mut bool,
         round_wall: f64,
         pending_backhaul: &mut usize,
+        rec: &mut Recorder,
     ) {
         if pending_compute != 0 || pending_layers != 0 || *scheduled {
             return;
         }
         *scheduled = true;
+        let base = exp.total_time_s;
         let Some(edge) = exp.edge.as_mut() else {
             queue.push(round_wall, Event::Broadcast);
             return;
@@ -349,7 +402,16 @@ fn barrier_rounds(
             queue.push(round_wall, Event::Broadcast);
             return;
         }
-        for (zone, flush, arrive, _bytes) in flushes {
+        for (zone, flush, arrive, bytes) in flushes {
+            if rec.on() {
+                // Transfer spans are emitted at scheduling time: the
+                // enqueue carries the frame's bytes, the (future-dated)
+                // arrival its backhaul crossing as `dur`.
+                rec.push(Ev::new("backhaul_enqueue", base + round_wall).zone(zone).bytes(bytes));
+                rec.push(
+                    Ev::new("backhaul_arrive", base + arrive).zone(zone).dur(arrive - round_wall),
+                );
+            }
             queue.push(arrive, Event::BackhaulArrived { zone, flush });
             *pending_backhaul += 1;
         }
@@ -369,6 +431,9 @@ fn barrier_rounds(
     let mut comp_s = vec![0.0f64; m];
     let mut comp_j = vec![0.0f64; m];
     let mut walls = vec![0.0f64; m];
+    // Slowest active channel of each device's upload this round (-1 when it
+    // did not sync) — the `crit_channel` attribution column.
+    let mut slow_chs = vec![-1i64; m];
     // Downlink round state (inert when the downlink is disabled).
     let mut down_updates: Vec<Option<LgcUpdate>> = (0..m).map(|_| None).collect();
     'rounds: for round in 0..exp.cfg.rounds {
@@ -380,8 +445,10 @@ fn barrier_rounds(
         comp_s.iter_mut().for_each(|x| *x = 0.0);
         comp_j.iter_mut().for_each(|x| *x = 0.0);
         walls.iter_mut().for_each(|x| *x = 0.0);
+        slow_chs.iter_mut().for_each(|x| *x = -1);
         down_updates.iter_mut().for_each(|x| *x = None);
         let mut round_wall = 0.0f64;
+        let mut bh_wall = 0.0f64;
         let mut bytes_up = 0u64;
         let mut pending_compute = 0usize;
         let mut pending_layers = 0usize;
@@ -416,7 +483,7 @@ fn barrier_rounds(
                     // contributions never straddle a tick either, so
                     // barrier migration is structurally zero.
                     let clock = exp.total_time_s;
-                    scenario_tick_legacy(exp, clock);
+                    scenario_tick_legacy(exp, clock, rec);
                     for i in 0..m {
                         active[i] = exp.devices[i].meter.within_budget();
                     }
@@ -438,9 +505,17 @@ fn barrier_rounds(
                         hs[i] = h;
                         plans[i] = Some(plan);
                     }
+                    if rec.on() {
+                        for i in 0..m {
+                            if active[i] {
+                                rec.push(Ev::new("compute_start", clock).round(round).client(i));
+                            }
+                        }
+                    }
                     // Local compute (Alg. 1 lines 5-7): parallel when the
                     // trainer split off per-device handles, else sequential.
                     // Both paths are bit-identical (per-device RNG streams).
+                    let train_t0 = rec.phase_start();
                     if let Some(hnds) = handles.as_mut() {
                         parallel_local_steps(
                             &mut exp.devices,
@@ -459,6 +534,7 @@ fn barrier_rounds(
                             }
                         }
                     }
+                    rec.phase_end(Phase::Train, train_t0);
                     for i in 0..m {
                         if !active[i] {
                             continue;
@@ -472,10 +548,29 @@ fn barrier_rounds(
                 }
                 Event::ComputeDone { device: i } => {
                     pending_compute -= 1;
+                    let base = exp.total_time_s;
+                    if rec.on() {
+                        rec.push(
+                            Ev::new("compute_done", base + comp_s[i])
+                                .round(round)
+                                .client(i)
+                                .dur(comp_s[i]),
+                        );
+                    }
                     let plan = plans[i].take().expect("plan decided at round start");
                     // Communication (lines 8-11): the compressor seam.
                     let (mut wall, comm_j, comm_money, bytes) = if syncs[i] {
+                        let cp_t0 = rec.phase_start();
                         let (update, wall, costs) = exp.devices[i].compress_and_upload(&plan);
+                        rec.phase_end(Phase::Compress, cp_t0);
+                        for (ch, c) in costs.iter().enumerate() {
+                            if c.time_s > 0.0
+                                && (slow_chs[i] < 0
+                                    || c.time_s > costs[slow_chs[i] as usize].time_s)
+                            {
+                                slow_chs[i] = ch as i64;
+                            }
+                        }
                         if !update.layers.is_empty() {
                             // One in-flight transfer per emitted layer:
                             // layer c rides the plan's c-th active channel
@@ -486,6 +581,17 @@ fn barrier_rounds(
                             for (layer_idx, &ch) in
                                 channels.iter().take(update.layers.len()).enumerate()
                             {
+                                if rec.on() {
+                                    let arrive = base + comp_s[i] + costs[ch].time_s;
+                                    rec.push(
+                                        Ev::new("uplink_arrive", arrive)
+                                            .round(round)
+                                            .client(i)
+                                            .layer(layer_idx)
+                                            .channel(ch)
+                                            .dur(costs[ch].time_s),
+                                    );
+                                }
                                 queue.push(
                                     comp_s[i] + costs[ch].time_s,
                                     Event::LayerArrived { device: i, channel: ch, layer: layer_idx },
@@ -525,6 +631,7 @@ fn barrier_rounds(
                         &mut broadcast_scheduled,
                         round_wall,
                         &mut pending_backhaul,
+                        rec,
                     );
                 }
                 Event::LayerArrived { .. } => {
@@ -537,6 +644,7 @@ fn barrier_rounds(
                         &mut broadcast_scheduled,
                         round_wall,
                         &mut pending_backhaul,
+                        rec,
                     );
                 }
                 Event::BackhaulArrived { flush, .. } => {
@@ -548,13 +656,14 @@ fn barrier_rounds(
                     let edge = exp.edge.as_mut().expect("edge enabled");
                     drop(edge.take_arrived(flush));
                     pending_backhaul -= 1;
+                    bh_wall = bh_wall.max(t);
                     round_wall = round_wall.max(t);
                     if pending_backhaul == 0 {
                         queue.push(round_wall, Event::Broadcast);
                     }
                 }
-                Event::UploadDone { .. } => {
-                    unreachable!("UploadDone is only scheduled by the cohort engines")
+                ev @ Event::UploadDone { .. } => {
+                    unreachable!("{ev} is only scheduled by the cohort engines")
                 }
                 Event::Broadcast => {
                     // Reductions in device order: the f64 accumulation order
@@ -582,13 +691,20 @@ fn barrier_rounds(
                     let received_idx: Vec<usize> =
                         (0..m).filter(|&i| exp.received[i]).collect();
                     completed_uploads = received_idx.len() as u64;
+                    let base = exp.total_time_s;
                     if !received_idx.is_empty() {
                         let weights: Vec<f64> =
                             received_idx.iter().map(|&i| samples[i] as f64).collect();
                         let uploads: Vec<&LgcUpdate> =
                             received_idx.iter().map(|&i| &exp.recv_bufs[i]).collect();
+                        let ag_t0 = rec.phase_start();
                         exp.server.set_round_weights(&weights);
                         exp.server.aggregate_and_apply(&uploads);
+                        rec.phase_end(Phase::Aggregate, ag_t0);
+                        if rec.on() {
+                            let ev = Ev::new("aggregate", base + round_wall);
+                            rec.push(ev.round(round).bytes(bytes_up));
+                        }
                         if exp.downlink.is_none() {
                             // Legacy free-instant broadcast: the frozen
                             // `step_round` semantics, bit for bit.
@@ -636,6 +752,19 @@ fn barrier_rounds(
                                 }
                                 dev.sync_state.pending_layers = tr.update.layers.len();
                                 for (c, &ch) in tr.channels.iter().enumerate() {
+                                    if rec.on() {
+                                        rec.push(
+                                            Ev::new(
+                                                "downlink_arrive",
+                                                base + start + tr.costs[ch].time_s,
+                                            )
+                                            .round(round)
+                                            .client(i)
+                                            .layer(c)
+                                            .channel(ch)
+                                            .dur(tr.costs[ch].time_s),
+                                        );
+                                    }
                                     queue.push(
                                         start + tr.costs[ch].time_s,
                                         Event::DownlinkLayerArrived {
@@ -654,7 +783,7 @@ fn barrier_rounds(
                         emit_barrier_record(
                             exp, trainer, log, &mut stats, round, round_wall, loss_sum,
                             loss_n, reward_acc, reward_n, bytes_up, &active, &walls,
-                            completed_uploads,
+                            completed_uploads, &comp_s, &slow_chs, bh_wall, rec,
                         )?;
                     }
                 }
@@ -675,6 +804,11 @@ fn barrier_rounds(
                     }
                 }
                 Event::SyncConfirmed { device: i } => {
+                    if rec.on() {
+                        rec.push(
+                            Ev::new("sync_confirm", exp.total_time_s + t).round(round).client(i),
+                        );
+                    }
                     let dev = &mut exp.devices[i];
                     dev.sync_state.synced_version = round as u64 + 1;
                     dev.sync_state.synced_round = round;
@@ -686,7 +820,7 @@ fn barrier_rounds(
                         emit_barrier_record(
                             exp, trainer, log, &mut stats, round, round_wall, loss_sum,
                             loss_n, reward_acc, reward_n, bytes_up, &active, &walls,
-                            completed_uploads,
+                            completed_uploads, &comp_s, &slow_chs, bh_wall, rec,
                         )?;
                     }
                 }
@@ -804,6 +938,9 @@ struct DevState {
     /// layers were still in flight: re-encode against the then-current
     /// global the moment the downlink radio frees up.
     wants_resync: bool,
+    /// Slowest delivered channel of the in-flight upload (-1 when nothing
+    /// was delivered) — the `crit_channel` attribution column.
+    slow_ch: i64,
 }
 
 /// One completed upload parked in the semi-async server buffer.
@@ -839,6 +976,13 @@ struct AsyncCtx {
     window_rewards: f64,
     window_reward_n: usize,
     stats: SimStats,
+    /// Critical contribution of the current record window (the longest
+    /// completed upload): its duration, compute share, client and slowest
+    /// channel. Reset at every record; -1 sentinels mean "none yet".
+    win_crit_dur: f64,
+    win_crit_comp: f64,
+    win_crit_client: i64,
+    win_crit_channel: i64,
 }
 
 fn run_async(
@@ -846,6 +990,7 @@ fn run_async(
     trainer: &mut dyn LocalTrainer,
     log: &mut RunLog,
     kind: AsyncKind,
+    rec: &mut Recorder,
 ) -> Result<()> {
     let m = exp.devices.len();
     let mut queue = EventQueue::with_shards(resolve_shards(exp.cfg.shards));
@@ -862,11 +1007,15 @@ fn run_async(
         window_rewards: 0.0,
         window_reward_n: 0,
         stats: SimStats::default(),
+        win_crit_dur: -1.0,
+        win_crit_comp: 0.0,
+        win_crit_client: -1,
+        win_crit_channel: -1,
     };
     let clock0 = exp.total_time_s;
 
     for i in 0..m {
-        begin_device_round(exp, trainer, &mut st, &mut queue, &mut ctx, i, clock0, 0)?;
+        begin_device_round(exp, trainer, &mut st, &mut queue, &mut ctx, i, clock0, 0, rec)?;
     }
     if ctx.busy == 0 {
         exp.sim_stats = ctx.stats;
@@ -907,7 +1056,7 @@ fn run_async(
                 // their scheduled arrival. A handoff also migrates the
                 // device's contributions held at its old zone's edge node
                 // (see `scenario_tick_legacy`).
-                scenario_tick_legacy(exp, t);
+                scenario_tick_legacy(exp, t, rec);
                 if st.iter().any(|d| d.alive) {
                     queue.push(t + exp.cfg.fading_tick_s, Event::FadingTick);
                 }
@@ -922,7 +1071,9 @@ fn run_async(
                 // The lossy per-layer path: fading erasures happen, and lost
                 // layers were restituted into the error memory by the
                 // device (never silently discarded).
+                let cp_t0 = rec.phase_start();
                 let outcome = exp.devices[i].upload_lossy(&plan);
+                rec.phase_end(Phase::Compress, cp_t0);
                 let (comm_j, comm_money, bytes) = TransferCost::fold_totals(&outcome.costs);
                 exp.devices[i].meter.record_round(
                     st[i].comp_j,
@@ -950,6 +1101,39 @@ fn run_async(
                     ctx.window_reward_n += 1;
                 }
                 // One in-flight transfer per *delivered* layer.
+                st[i].slow_ch = -1;
+                for tr in &outcome.transfers {
+                    if tr.delivered
+                        && (st[i].slow_ch < 0
+                            || outcome.costs[tr.channel].time_s
+                                > outcome.costs[st[i].slow_ch as usize].time_s)
+                    {
+                        st[i].slow_ch = tr.channel as i64;
+                    }
+                }
+                if rec.on() {
+                    rec.push(Ev::new("compute_done", t).client(i).dur(st[i].comp_s));
+                    for (layer_idx, tr) in outcome.transfers.iter().enumerate() {
+                        if tr.delivered {
+                            rec.push(
+                                Ev::new("uplink_arrive", t + outcome.costs[tr.channel].time_s)
+                                    .client(i)
+                                    .layer(layer_idx)
+                                    .channel(tr.channel)
+                                    .dur(outcome.costs[tr.channel].time_s),
+                            );
+                        } else {
+                            // Fading erasure: the layer's airtime was spent
+                            // but it never arrives.
+                            rec.push(
+                                Ev::new("uplink_drop", t)
+                                    .client(i)
+                                    .layer(layer_idx)
+                                    .channel(tr.channel),
+                            );
+                        }
+                    }
+                }
                 let mut expected = 0usize;
                 for (layer_idx, tr) in outcome.transfers.iter().enumerate() {
                     if tr.delivered {
@@ -977,7 +1161,9 @@ fn run_async(
                     // progress was absorbed into delivered layers + error
                     // memory.
                     let tx_end = st[i].tx_end;
-                    complete_upload(exp, trainer, &mut st, &mut queue, &mut ctx, log, i, tx_end)?;
+                    complete_upload(
+                        exp, trainer, &mut st, &mut queue, &mut ctx, log, i, tx_end, rec,
+                    )?;
                 }
             }
             Event::LayerArrived { device: i, channel: ch, layer } => {
@@ -999,13 +1185,21 @@ fn run_async(
                         if let Some(l) = update.layers.get_mut(pos) {
                             if !l.values.is_empty() {
                                 drop_handoff_layer(&mut exp.devices[i], &mut exp.scenario, l);
+                                if rec.on() {
+                                    rec.push(
+                                        Ev::new("uplink_drop", t)
+                                            .client(i)
+                                            .layer(layer)
+                                            .channel(ch),
+                                    );
+                                }
                             }
                         }
                     }
                 }
                 st[i].arrived += 1;
                 if st[i].arrived == st[i].expected {
-                    complete_upload(exp, trainer, &mut st, &mut queue, &mut ctx, log, i, t)?;
+                    complete_upload(exp, trainer, &mut st, &mut queue, &mut ctx, log, i, t, rec)?;
                 }
             }
             Event::BackhaulArrived { flush, .. } => {
@@ -1049,11 +1243,11 @@ fn run_async(
                         // frame is a guaranteed future producer).
                         let fleet_parked = ctx.busy == 0
                             && ctx.downlinking == 0
-                            && !edge_kick_idle(exp, &mut queue, t);
+                            && !edge_kick_idle(exp, &mut queue, t, rec);
                         if ctx.buffer.len() >= buffer_k
                             || (fleet_parked && !ctx.buffer.is_empty())
                         {
-                            aggregate_semi_buffer(exp, trainer, &mut ctx, log, t, buffer_k)?;
+                            aggregate_semi_buffer(exp, trainer, &mut ctx, log, t, buffer_k, rec)?;
                             queue.push(t, Event::Broadcast);
                         } else if fleet_parked && ctx.buffer.is_empty() {
                             queue.push(t, Event::Broadcast);
@@ -1087,14 +1281,15 @@ fn run_async(
                                 log,
                                 t,
                                 &[(c.loss, c.finish_s, staleness)],
+                                rec,
                             )?;
                         }
                         queue.push(t, Event::Broadcast);
                     }
                 }
             }
-            Event::UploadDone { .. } => {
-                unreachable!("UploadDone is only scheduled by the cohort engines")
+            ev @ Event::UploadDone { .. } => {
+                unreachable!("{ev} is only scheduled by the cohort engines")
             }
             Event::Broadcast => {
                 // Resync + restart every device waiting on a fresh model —
@@ -1119,7 +1314,7 @@ fn run_async(
                         st[i].waiting = false;
                         let restart_at = t.max(st[i].tx_end);
                         start_async_downlink(
-                            exp, trainer, &mut st, &mut queue, &mut ctx, i, restart_at, era,
+                            exp, trainer, &mut st, &mut queue, &mut ctx, i, restart_at, era, rec,
                         )?;
                     } else {
                         st[i].waiting = false;
@@ -1129,7 +1324,7 @@ fn run_async(
                         }
                         let restart_at = t.max(st[i].tx_end);
                         begin_device_round(
-                            exp, trainer, &mut st, &mut queue, &mut ctx, i, restart_at, era,
+                            exp, trainer, &mut st, &mut queue, &mut ctx, i, restart_at, era, rec,
                         )?;
                     }
                 }
@@ -1169,7 +1364,7 @@ fn run_async(
                         st[i].waiting = false;
                         let era = log.records.len();
                         start_async_downlink(
-                            exp, trainer, &mut st, &mut queue, &mut ctx, i, t, era,
+                            exp, trainer, &mut st, &mut queue, &mut ctx, i, t, era, rec,
                         )?;
                     } else if let AsyncKind::Semi { buffer_k } = ctx.kind {
                         // If the device died on its download charges and it
@@ -1179,10 +1374,10 @@ fn run_async(
                         // puts any sub-threshold partials on the backhaul.)
                         if ctx.busy == 0
                             && ctx.downlinking == 0
-                            && !edge_kick_idle(exp, &mut queue, t)
+                            && !edge_kick_idle(exp, &mut queue, t, rec)
                             && !ctx.buffer.is_empty()
                         {
-                            aggregate_semi_buffer(exp, trainer, &mut ctx, log, t, buffer_k)?;
+                            aggregate_semi_buffer(exp, trainer, &mut ctx, log, t, buffer_k, rec)?;
                             queue.push(t, Event::Broadcast);
                         }
                     }
@@ -1195,11 +1390,14 @@ fn run_async(
                 // `ctx.downlinking` stays up until the *full* broadcast
                 // lands — the trailing layers keep the device a pending
                 // producer for the flush heuristics.
+                if rec.on() {
+                    rec.push(Ev::new("sync_confirm", t).client(i));
+                }
                 st[i].model_version = st[i].down_version;
                 exp.devices[i].sync_state.staleness =
                     ctx.server_version - st[i].down_version;
                 let era = log.records.len();
-                begin_device_round(exp, trainer, &mut st, &mut queue, &mut ctx, i, t, era)?;
+                begin_device_round(exp, trainer, &mut st, &mut queue, &mut ctx, i, t, era, rec)?;
             }
         }
     }
@@ -1222,6 +1420,7 @@ fn start_async_downlink(
     i: usize,
     now: f64,
     era: usize,
+    rec: &mut Recorder,
 ) -> Result<()> {
     debug_assert_eq!(exp.devices[i].sync_state.pending_layers, 0);
     let dl = exp.downlink.as_mut().expect("downlink enabled");
@@ -1239,7 +1438,7 @@ fn start_async_downlink(
         dev.sync_state.synced_round = era;
         dev.sync_state.staleness = 0;
         st[i].model_version = ctx.server_version;
-        return begin_device_round(exp, trainer, st, queue, ctx, i, now, era);
+        return begin_device_round(exp, trainer, st, queue, ctx, i, now, era, rec);
     }
     dev.sync_state.pending_layers = tr.update.layers.len();
     // Edge-cached broadcast: the first fetch per (zone, version) pulls the
@@ -1253,6 +1452,15 @@ fn start_async_downlink(
         _ => now,
     };
     for (c, &ch) in tr.channels.iter().enumerate() {
+        if rec.on() {
+            rec.push(
+                Ev::new("downlink_arrive", start + tr.costs[ch].time_s)
+                    .client(i)
+                    .layer(c)
+                    .channel(ch)
+                    .dur(tr.costs[ch].time_s),
+            );
+        }
         queue.push(
             start + tr.costs[ch].time_s,
             Event::DownlinkLayerArrived { device: i, channel: ch, layer: c },
@@ -1275,13 +1483,22 @@ fn begin_device_round(
     i: usize,
     now: f64,
     era: usize,
+    rec: &mut Recorder,
 ) -> Result<()> {
     if !exp.devices[i].meter.within_budget() {
+        if st[i].alive && rec.on() {
+            rec.push(Ev::new("client_offline", now).client(i));
+        }
         st[i].alive = false;
         return Ok(());
     }
+    if rec.on() {
+        rec.push(Ev::new("compute_start", now).round(era).client(i));
+    }
     let (h, plan) = exp.policy.decide(era, &exp.devices[i], exp.agents[i].as_mut());
+    let train_t0 = rec.phase_start();
     let loss = exp.devices[i].local_steps(trainer, h, exp.cfg.lr)?;
+    rec.phase_end(Phase::Train, train_t0);
     let (comp_j, comp_s) = exp.devices[i].compute_cost(h);
     let s = &mut st[i];
     s.alive = true;
@@ -1311,11 +1528,21 @@ fn complete_upload(
     log: &mut RunLog,
     i: usize,
     t: f64,
+    rec: &mut Recorder,
 ) -> Result<()> {
     st[i].waiting = true;
     ctx.busy -= 1;
     let duration = t - st[i].started_at;
     let staleness = ctx.server_version - st[i].model_version;
+    // Window attribution: remember the longest completed upload — it is
+    // the record window's critical path (compute + uplink; the rest of the
+    // window is `wait`).
+    if duration > ctx.win_crit_dur {
+        ctx.win_crit_dur = duration;
+        ctx.win_crit_comp = st[i].comp_s;
+        ctx.win_crit_client = i as i64;
+        ctx.win_crit_channel = st[i].slow_ch;
+    }
     let mut update = st[i].update.take().expect("upload in flight");
     // Layers emptied by a handoff drop are already restituted — purge them
     // so the server never sees (or decodes) a torn-down layer.
@@ -1337,6 +1564,9 @@ fn complete_upload(
         // aggregate crosses the backhaul — the sync-mode server logic then
         // runs at `BackhaulArrived`, with staleness measured there.
         let zone = exp.scenario.as_ref().map_or(0, |sc| sc.zone_of(i));
+        if rec.on() {
+            rec.push(Ev::new("edge_fold", t).client(i).zone(zone));
+        }
         let edge = exp.edge.as_mut().expect("edge enabled");
         edge.hold(
             zone,
@@ -1351,7 +1581,11 @@ fn complete_upload(
             },
         );
         if edge.ready_to_flush(zone) {
-            if let Some((flush, arrive, _bytes)) = edge.begin_flush(zone, t) {
+            if let Some((flush, arrive, bytes)) = edge.begin_flush(zone, t) {
+                if rec.on() {
+                    rec.push(Ev::new("backhaul_enqueue", t).zone(zone).bytes(bytes));
+                    rec.push(Ev::new("backhaul_arrive", arrive).zone(zone).dur(arrive - t));
+                }
                 queue.push(arrive, Event::BackhaulArrived { zone, flush });
             }
         }
@@ -1410,7 +1644,15 @@ fn complete_upload(
                 // Hand the decode buffer back for reuse by the next upload.
                 exp.recv_bufs[i] = update;
                 ctx.server_version += 1;
-                push_async_record(exp, trainer, ctx, log, t, &[(st[i].loss, duration, staleness)])?;
+                push_async_record(
+                    exp,
+                    trainer,
+                    ctx,
+                    log,
+                    t,
+                    &[(st[i].loss, duration, staleness)],
+                    rec,
+                )?;
                 queue.push(t, Event::Broadcast);
             }
         }
@@ -1425,10 +1667,10 @@ fn complete_upload(
         // their zones' flush thresholds. Kick them onto the backhaul — if
         // nothing was pending at all, fall through to the flat parked-fleet
         // handling so the run still makes progress.
-        if ctx.busy == 0 && ctx.downlinking == 0 && !edge_kick_idle(exp, queue, t) {
+        if ctx.busy == 0 && ctx.downlinking == 0 && !edge_kick_idle(exp, queue, t, rec) {
             if let AsyncKind::Semi { buffer_k } = ctx.kind {
                 if !ctx.buffer.is_empty() {
-                    aggregate_semi_buffer(exp, trainer, ctx, log, t, buffer_k)?;
+                    aggregate_semi_buffer(exp, trainer, ctx, log, t, buffer_k, rec)?;
                 }
             }
             queue.push(t, Event::Broadcast);
@@ -1439,7 +1681,7 @@ fn complete_upload(
             // FedBuff trigger — or a flush when the whole fleet is parked on
             // a buffer that can no longer fill (devices mid-download still
             // count as producers: their uploads are coming).
-            aggregate_semi_buffer(exp, trainer, ctx, log, t, buffer_k)?;
+            aggregate_semi_buffer(exp, trainer, ctx, log, t, buffer_k, rec)?;
             queue.push(t, Event::Broadcast);
         } else if fleet_parked && ctx.buffer.is_empty() {
             // Everyone waiting, nothing aggregable (all uploads erased):
@@ -1456,9 +1698,18 @@ fn complete_upload(
 /// already in flight): a `BackhaulArrived` is then guaranteed to drive the
 /// run forward, so the caller must not force a flush/broadcast. Always
 /// false when the edge tier is disabled.
-fn edge_kick_idle(exp: &mut Experiment, queue: &mut EventQueue, now: f64) -> bool {
+fn edge_kick_idle(
+    exp: &mut Experiment,
+    queue: &mut EventQueue,
+    now: f64,
+    rec: &mut Recorder,
+) -> bool {
     let Some(edge) = exp.edge.as_mut() else { return false };
-    for (zone, flush, arrive, _bytes) in edge.flush_all(now) {
+    for (zone, flush, arrive, bytes) in edge.flush_all(now) {
+        if rec.on() {
+            rec.push(Ev::new("backhaul_enqueue", now).zone(zone).bytes(bytes));
+            rec.push(Ev::new("backhaul_arrive", arrive).zone(zone).dur(arrive - now));
+        }
         queue.push(arrive, Event::BackhaulArrived { zone, flush });
     }
     edge.pending_total() > 0
@@ -1473,6 +1724,7 @@ fn aggregate_semi_buffer(
     log: &mut RunLog,
     t: f64,
     buffer_k: usize,
+    rec: &mut Recorder,
 ) -> Result<()> {
     // Streaming folds every buffered upload on arrival, so a flush always
     // drains the whole buffer; the batch path takes at most `buffer_k`.
@@ -1484,6 +1736,7 @@ fn aggregate_semi_buffer(
     let batch: Vec<Buffered> = ctx.buffer.drain(..take).collect();
     let contributions: Vec<(f64, f64, u64)> =
         batch.iter().map(|b| (b.loss, b.duration, b.staleness)).collect();
+    let ag_t0 = rec.phase_start();
     if exp.cfg.streaming {
         exp.server.stream_apply();
         // Decode buffers were already handed back on arrival; the parked
@@ -1499,8 +1752,9 @@ fn aggregate_semi_buffer(
             exp.recv_bufs[b.device] = b.update;
         }
     }
+    rec.phase_end(Phase::Aggregate, ag_t0);
     ctx.server_version += 1;
-    push_async_record(exp, trainer, ctx, log, t, &contributions)
+    push_async_record(exp, trainer, ctx, log, t, &contributions, rec)
 }
 
 /// Emit one async-mode [`RoundRecord`]: one per server aggregation, with the
@@ -1512,6 +1766,7 @@ fn push_async_record(
     log: &mut RunLog,
     now: f64,
     contributions: &[(f64, f64, u64)],
+    rec: &mut Recorder,
 ) -> Result<()> {
     let round = log.records.len();
     let done = round + 1 >= exp.cfg.rounds;
@@ -1551,14 +1806,25 @@ fn push_async_record(
     let finish_p95_s = percentile(&mut finishes, 95.0);
     let (backhaul_bytes, backhaul_p95_s, migrated_handoff, edge_rounds_bound) =
         drain_edge_window(exp, finish_p95_s);
-    let rec = RoundRecord {
+    // Window attribution: the longest completed upload is the critical
+    // path; everything past it is `wait` (server idle / buffer residency).
+    let round_time = now - ctx.last_record_t;
+    let mut attr = Attribution::none();
+    if ctx.win_crit_client >= 0 {
+        attr.compute = ctx.win_crit_comp;
+        attr.uplink = (ctx.win_crit_dur - ctx.win_crit_comp).max(0.0);
+        attr.crit_client = ctx.win_crit_client;
+        attr.crit_channel = ctx.win_crit_channel;
+    }
+    attr.finalize(round_time);
+    let record = RoundRecord {
         round,
         train_loss,
         eval_loss,
         eval_acc,
         energy_j: tot_energy,
         money: tot_money,
-        round_time_s: now - ctx.last_record_t,
+        round_time_s: round_time,
         total_time_s: now,
         bytes_up: ctx.window_bytes,
         drl_reward: if ctx.window_reward_n > 0 {
@@ -1584,13 +1850,24 @@ fn push_async_record(
         backhaul_p95_s,
         migrated_handoff,
         edge_rounds_bound,
+        bound_by: attr.bound_by(),
+        crit_client: attr.crit_client,
+        crit_channel: attr.crit_channel,
     };
+    if rec.on() {
+        rec.push(Ev::new("aggregate", now).round(round).bytes(ctx.window_bytes));
+        rec.push_round(now, round, round_time, &attr);
+    }
     exp.total_time_s = now;
     ctx.last_record_t = now;
     ctx.window_bytes = 0;
     ctx.window_rewards = 0.0;
     ctx.window_reward_n = 0;
-    log.push(rec);
+    ctx.win_crit_dur = -1.0;
+    ctx.win_crit_comp = 0.0;
+    ctx.win_crit_client = -1;
+    ctx.win_crit_channel = -1;
+    log.push(record);
     ctx.stats.records += 1;
     Ok(())
 }
@@ -1613,6 +1890,7 @@ fn run_cohort(
     exp: &mut Experiment,
     trainer: &mut dyn LocalTrainer,
     log: &mut RunLog,
+    rec: &mut Recorder,
 ) -> Result<()> {
     let mut pop = exp.population.take().expect("population mode");
     let mut sampler = exp
@@ -1620,7 +1898,9 @@ fn run_cohort(
         .take()
         .expect("population mode always carries a sampler");
     let result = match exp.sync_mode {
-        SyncMode::Barrier => cohort_barrier_rounds(exp, trainer, log, &mut pop, sampler.as_mut()),
+        SyncMode::Barrier => {
+            cohort_barrier_rounds(exp, trainer, log, &mut pop, sampler.as_mut(), rec)
+        }
         SyncMode::SemiAsync { buffer_k } => cohort_async_rounds(
             exp,
             trainer,
@@ -1628,6 +1908,7 @@ fn run_cohort(
             &mut pop,
             sampler.as_mut(),
             AsyncKind::Semi { buffer_k },
+            rec,
         ),
         SyncMode::FullyAsync { staleness_decay } => cohort_async_rounds(
             exp,
@@ -1636,6 +1917,7 @@ fn run_cohort(
             &mut pop,
             sampler.as_mut(),
             AsyncKind::Fully { staleness_decay },
+            rec,
         ),
     };
     exp.population = Some(pop);
@@ -1685,6 +1967,7 @@ fn cohort_barrier_rounds(
     log: &mut RunLog,
     pop: &mut Population,
     sampler: &mut dyn ClientSampler,
+    rec: &mut Recorder,
 ) -> Result<()> {
     let mut stats = SimStats::default();
     let streaming = exp.cfg.streaming;
@@ -1738,7 +2021,15 @@ fn cohort_barrier_rounds(
         // partial-aggregate frame on its backhaul (accounting-only, like
         // the cohort downlink — see the edge module docs).
         zones_uploaded.clear();
+        let base = exp.total_time_s;
         let mut round_wall = 0.0f64;
+        // Critical-path tracking for the attribution columns.
+        let mut crit_wall = -1.0f64;
+        let mut crit_comp = 0.0f64;
+        let mut crit_client = -1i64;
+        let mut crit_ch = -1i64;
+        let mut attr_backhaul = 0.0f64;
+        let mut attr_downlink = 0.0f64;
         let mut loss_sum = 0.0f64;
         let mut loss_n = 0usize;
         let mut bytes_up = 0u64;
@@ -1756,6 +2047,9 @@ fn cohort_barrier_rounds(
                 continue; // the reference loop's per-device budget skip
             }
             ensure_agent(exp, id);
+            if rec.on() {
+                rec.push(Ev::new("compute_start", base).round(round).client(id));
+            }
             let mut dev = pop.materialize(id, &exp.server.params);
             // The client wakes up in its *current* zone: availability mask,
             // fading params, dynamics and scales applied to the uplink and
@@ -1767,12 +2061,16 @@ fn cohort_barrier_rounds(
                 }
             }
             let (h, plan) = exp.policy.decide(round, &dev, exp.agents[id].as_mut());
+            let train_t0 = rec.phase_start();
             let loss = dev.local_steps_sharded(trainer, pop.shard(id), h, exp.cfg.lr)?;
+            rec.phase_end(Phase::Train, train_t0);
             loss_sum += loss;
             loss_n += 1;
             let (comp_j, comp_s) = dev.compute_cost(h);
             let compressed = !plan.is_silent();
+            let cp_t0 = rec.phase_start();
             let (update, mut wall, costs) = dev.compress_and_upload(&plan);
+            rec.phase_end(Phase::Compress, cp_t0);
             let mut received = false;
             if !update.layers.is_empty() {
                 if pop.midround_offline(id) {
@@ -1781,6 +2079,9 @@ fn cohort_barrier_rounds(
                     // delayed into the error memory, never destroyed).
                     dev.restitute_update(&update);
                     dropped_offline += 1;
+                    if rec.on() {
+                        rec.push(Ev::new("churn_drop", base).round(round).client(id));
+                    }
                 } else {
                     let slot = if streaming { 0 } else { nrecv };
                     if decoded.len() <= slot {
@@ -1815,6 +2116,34 @@ fn cohort_barrier_rounds(
             let (comm_j, comm_money, bytes) = TransferCost::fold_totals(&costs);
             wall += comp_s;
             round_wall = round_wall.max(wall);
+            if rec.on() {
+                let done_ev = Ev::new("compute_done", base + comp_s).round(round).client(id);
+                rec.push(done_ev.dur(comp_s));
+                for (ch, c) in costs.iter().enumerate() {
+                    if c.time_s > 0.0 {
+                        rec.push(
+                            Ev::new("uplink_arrive", base + comp_s + c.time_s)
+                                .round(round)
+                                .client(id)
+                                .channel(ch)
+                                .dur(c.time_s),
+                        );
+                    }
+                }
+            }
+            if wall > crit_wall {
+                crit_wall = wall;
+                crit_comp = comp_s;
+                crit_client = id as i64;
+                crit_ch = -1;
+                for (ch, c) in costs.iter().enumerate() {
+                    if c.time_s > 0.0
+                        && (crit_ch < 0 || c.time_s > costs[crit_ch as usize].time_s)
+                    {
+                        crit_ch = ch as i64;
+                    }
+                }
+            }
             finishes.push(wall);
             dev.meter.record_round(comp_j, comm_j, comm_money, wall);
             if dev.prev_loss.is_nan() {
@@ -1837,6 +2166,7 @@ fn cohort_barrier_rounds(
         stats.dropped_offline += dropped_offline;
         // 4. Aggregation + broadcast: the aggregator seam (batch order ==
         // ascending client id, exactly the reference loop).
+        let ag_t0 = rec.phase_start();
         let applied = if streaming {
             exp.server.stream_apply()
         } else if nrecv > 0 {
@@ -1847,6 +2177,7 @@ fn cohort_barrier_rounds(
         } else {
             false
         };
+        rec.phase_end(Phase::Aggregate, ag_t0);
         if applied {
             // Each contributing zone's partial crossed the backhaul before
             // the cloud could aggregate: the round extends by the slowest
@@ -1857,6 +2188,7 @@ fn cohort_barrier_rounds(
                     bh_wall = bh_wall.max(edge.charge_flush(z));
                 }
                 round_wall += bh_wall;
+                attr_backhaul = bh_wall;
             }
             let mut down_wall = 0.0f64;
             for &k in &received_live {
@@ -1890,6 +2222,7 @@ fn cohort_barrier_rounds(
             // The round now ends when the slowest broadcast completes
             // (the broadcasts start after aggregation, in parallel).
             round_wall += down_wall;
+            attr_downlink = down_wall;
         }
         // 5. Demobilize the cohort: meters/losses persist to the store's
         // columns, the error memory drains into the residual arena, the
@@ -1921,6 +2254,24 @@ fn cohort_barrier_rounds(
         let finish_p95_s = percentile(&mut finishes, 95.0);
         let (backhaul_bytes, backhaul_p95_s, migrated_handoff, edge_rounds_bound) =
             drain_edge_window(exp, finish_p95_s);
+        // Attribution mirrors the barrier engine: slowest upload = critical
+        // path, then the backhaul/downlink extensions added above.
+        let mut attr = Attribution::none();
+        if crit_client >= 0 {
+            attr.compute = crit_comp;
+            attr.uplink = (crit_wall - crit_comp).max(0.0);
+            attr.backhaul = attr_backhaul;
+            attr.downlink = attr_downlink;
+            attr.crit_client = crit_client;
+            attr.crit_channel = crit_ch;
+        }
+        attr.finalize(round_wall);
+        if rec.on() {
+            if applied {
+                rec.push(Ev::new("aggregate", exp.total_time_s).round(round).bytes(bytes_up));
+            }
+            rec.push_round(exp.total_time_s, round, round_wall, &attr);
+        }
         log.push(RoundRecord {
             round,
             train_loss: if loss_n == 0 { f64::NAN } else { loss_sum / loss_n as f64 },
@@ -1954,6 +2305,9 @@ fn cohort_barrier_rounds(
             backhaul_p95_s,
             migrated_handoff,
             edge_rounds_bound,
+            bound_by: attr.bound_by(),
+            crit_client: attr.crit_client,
+            crit_channel: attr.crit_channel,
         });
         stats.records += 1;
     }
@@ -1984,6 +2338,9 @@ struct CohortSlot {
     /// client demobilizes at its `SyncConfirmed`, not at `Broadcast`.
     syncing: bool,
     retired: bool,
+    /// Slowest delivered channel of the in-flight upload (-1 when nothing
+    /// was delivered) — the `crit_channel` attribution column.
+    slow_ch: i64,
 }
 
 impl CohortSlot {
@@ -2003,17 +2360,37 @@ impl CohortSlot {
             waiting: false,
             syncing: false,
             retired: true,
+            slow_ch: -1,
         }
     }
 }
 
-/// Per-aggregation-window counters of the cohort async engine.
-#[derive(Default)]
+/// Per-aggregation-window counters of the cohort async engine, plus the
+/// window's critical-path (longest completed upload) attribution state.
 struct CohortWindow {
     bytes: u64,
     rewards: f64,
     reward_n: usize,
     dropped: u64,
+    crit_dur: f64,
+    crit_comp: f64,
+    crit_client: i64,
+    crit_channel: i64,
+}
+
+impl Default for CohortWindow {
+    fn default() -> Self {
+        CohortWindow {
+            bytes: 0,
+            rewards: 0.0,
+            reward_n: 0,
+            dropped: 0,
+            crit_dur: -1.0,
+            crit_comp: 0.0,
+            crit_client: -1,
+            crit_channel: -1,
+        }
+    }
 }
 
 /// Materialize `client` into `slots[slot_idx]` and start its round: policy
@@ -2030,8 +2407,12 @@ fn begin_cohort_slot(
     now: f64,
     era: usize,
     server_version: u64,
+    rec: &mut Recorder,
 ) -> Result<()> {
     ensure_agent(exp, client);
+    if rec.on() {
+        rec.push(Ev::new("compute_start", now).round(era).client(client));
+    }
     let mut dev = pop.materialize(client, &exp.server.params);
     // Wake the client up in its current scenario zone (uplink and
     // accounting-only downlink bundles).
@@ -2042,7 +2423,9 @@ fn begin_cohort_slot(
         }
     }
     let (h, plan) = exp.policy.decide(era, &dev, exp.agents[client].as_mut());
+    let train_t0 = rec.phase_start();
     let loss = dev.local_steps_sharded(trainer, pop.shard(client), h, exp.cfg.lr)?;
+    rec.phase_end(Phase::Train, train_t0);
     let (comp_j, comp_s) = dev.compute_cost(h);
     let s = &mut slots[slot_idx];
     s.client = client;
@@ -2059,6 +2442,7 @@ fn begin_cohort_slot(
     s.waiting = false;
     s.syncing = false;
     s.retired = false;
+    s.slow_ch = -1;
     queue.push(now + comp_s, Event::ComputeDone { device: slot_idx });
     Ok(())
 }
@@ -2084,7 +2468,9 @@ fn flush_semi_cohort(
     free_bufs: &mut Vec<LgcUpdate>,
     server_version: &mut u64,
     t: f64,
+    rec: &mut Recorder,
 ) -> Result<()> {
+    let ag_t0 = rec.phase_start();
     if streaming {
         exp.server.stream_apply();
     } else {
@@ -2092,6 +2478,7 @@ fn flush_semi_cohort(
         exp.server.set_round_weights(&pending_weights[..]);
         exp.server.aggregate_and_apply(&uploads);
     }
+    rec.phase_end(Phase::Aggregate, ag_t0);
     // Every zone that buffered a contribution this window shipped one
     // partial-aggregate frame over its backhaul (accounting-only).
     if let Some(edge) = exp.edge.as_mut() {
@@ -2106,7 +2493,7 @@ fn flush_semi_cohort(
     free_bufs.append(pending_updates);
     pending_weights.clear();
     push_cohort_record(
-        exp, trainer, pop, slots, log, stats, window, last_record_t, t, &contributions,
+        exp, trainer, pop, slots, log, stats, window, last_record_t, t, &contributions, rec,
     )
 }
 
@@ -2125,6 +2512,7 @@ fn push_cohort_record(
     last_record_t: &mut f64,
     now: f64,
     contributions: &[(f64, f64, u64)],
+    rec: &mut Recorder,
 ) -> Result<()> {
     let round = log.records.len();
     let done = round + 1 >= exp.cfg.rounds;
@@ -2166,14 +2554,24 @@ fn push_cohort_record(
     let finish_p95_s = percentile(&mut finishes, 95.0);
     let (backhaul_bytes, backhaul_p95_s, migrated_handoff, edge_rounds_bound) =
         drain_edge_window(exp, finish_p95_s);
-    let rec = RoundRecord {
+    // Window attribution, mirroring the legacy async engine.
+    let round_time = now - *last_record_t;
+    let mut attr = Attribution::none();
+    if window.crit_client >= 0 {
+        attr.compute = window.crit_comp;
+        attr.uplink = (window.crit_dur - window.crit_comp).max(0.0);
+        attr.crit_client = window.crit_client;
+        attr.crit_channel = window.crit_channel;
+    }
+    attr.finalize(round_time);
+    let record = RoundRecord {
         round,
         train_loss,
         eval_loss,
         eval_acc,
         energy_j: tot_energy,
         money: tot_money,
-        round_time_s: now - *last_record_t,
+        round_time_s: round_time,
         total_time_s: now,
         bytes_up: window.bytes,
         drl_reward: if window.reward_n > 0 {
@@ -2202,11 +2600,18 @@ fn push_cohort_record(
         backhaul_p95_s,
         migrated_handoff,
         edge_rounds_bound,
+        bound_by: attr.bound_by(),
+        crit_client: attr.crit_client,
+        crit_channel: attr.crit_channel,
     };
+    if rec.on() {
+        rec.push(Ev::new("aggregate", now).round(round).bytes(window.bytes));
+        rec.push_round(now, round, round_time, &attr);
+    }
     exp.total_time_s = now;
     *last_record_t = now;
     *window = CohortWindow::default();
-    log.push(rec);
+    log.push(record);
     stats.records += 1;
     Ok(())
 }
@@ -2227,6 +2632,7 @@ fn cohort_async_rounds(
     pop: &mut Population,
     sampler: &mut dyn ClientSampler,
     kind: AsyncKind,
+    rec: &mut Recorder,
 ) -> Result<()> {
     let n_slots = pop.cohort();
     let streaming = exp.cfg.streaming;
@@ -2268,7 +2674,7 @@ fn cohort_async_rounds(
     for (slot_idx, client) in initial.into_iter().enumerate() {
         begin_cohort_slot(
             exp, trainer, pop, &mut slots, &mut queue, slot_idx, client, clock0, 0,
-            server_version,
+            server_version, rec,
         )?;
         busy[client] = true;
         in_flight += 1;
@@ -2326,6 +2732,10 @@ fn cohort_async_rounds(
                             if let Some(dl) = exp.downlink.as_mut() {
                                 sc.configure(s.client, dl.links_mut(s.client));
                             }
+                            if rec.on() {
+                                let zone = sc.zone_of(s.client);
+                                rec.push(Ev::new("handoff", t).client(s.client).zone(zone));
+                            }
                             // Accounting-only migration (nothing is ever
                             // physically held in the cohort engines): a
                             // waiting slot's completed upload logically sat
@@ -2335,6 +2745,7 @@ fn cohort_async_rounds(
                                 let z = sc.zone_of(s.client);
                                 if edge.zone_of(s.client) != z {
                                     edge.migrate(s.client, z);
+                                    rec.push(Ev::new("migrate", t).client(s.client).zone(z));
                                     if s.waiting {
                                         edge.note_migrated(1);
                                     }
@@ -2368,6 +2779,7 @@ fn cohort_async_rounds(
                                 t,
                                 log.records.len(),
                                 server_version,
+                                rec,
                             )?;
                             busy[next] = true;
                             in_flight += 1;
@@ -2413,6 +2825,39 @@ fn cohort_async_rounds(
                     .filter(|tr| tr.delivered)
                     .map(|tr| tr.channel)
                     .collect();
+                // Slowest delivered channel: the slot's critical uplink for
+                // window attribution (-1 when nothing got through).
+                s.slow_ch = -1;
+                for tr in &outcome.transfers {
+                    if tr.delivered
+                        && (s.slow_ch < 0
+                            || outcome.costs[tr.channel].time_s
+                                > outcome.costs[s.slow_ch as usize].time_s)
+                    {
+                        s.slow_ch = tr.channel as i64;
+                    }
+                }
+                if rec.on() {
+                    rec.push(Ev::new("compute_done", t).client(client).dur(comp_s));
+                    for (layer_idx, tr) in outcome.transfers.iter().enumerate() {
+                        if tr.delivered {
+                            rec.push(
+                                Ev::new("uplink_arrive", t + outcome.costs[tr.channel].time_s)
+                                    .client(client)
+                                    .layer(layer_idx)
+                                    .channel(tr.channel)
+                                    .dur(outcome.costs[tr.channel].time_s),
+                            );
+                        } else {
+                            rec.push(
+                                Ev::new("uplink_drop", t)
+                                    .client(client)
+                                    .layer(layer_idx)
+                                    .channel(tr.channel),
+                            );
+                        }
+                    }
+                }
                 let mut update = outcome.update;
                 if !update.layers.is_empty() && pop.midround_offline(client) {
                     // Mid-upload churn: the server never ACKs, so every
@@ -2421,6 +2866,7 @@ fn cohort_async_rounds(
                     update.layers.clear();
                     stats.dropped_offline += 1;
                     window.dropped += 1;
+                    rec.push(Ev::new("churn_drop", t).client(client));
                 }
                 s.update = Some(update);
                 s.layer_channels = layer_channels;
@@ -2433,6 +2879,14 @@ fn cohort_async_rounds(
                 let loss = slots[i].loss;
                 slots[i].waiting = true;
                 in_flight -= 1;
+                // Track the window's critical (longest) upload for round-time
+                // attribution.
+                if duration > window.crit_dur {
+                    window.crit_dur = duration;
+                    window.crit_comp = slots[i].comp_s;
+                    window.crit_client = client as i64;
+                    window.crit_channel = slots[i].slow_ch;
+                }
                 let mut update = slots[i].update.take().expect("upload in flight");
                 // Scenario handoff drop: the slot's radio just went quiet —
                 // any delivered layer whose channel has since vanished from
@@ -2527,6 +2981,7 @@ fn cohort_async_rounds(
                                 &mut last_record_t,
                                 t,
                                 &[(loss, duration, staleness)],
+                                rec,
                             )?;
                             queue.push(t, Event::Broadcast);
                         }
@@ -2554,6 +3009,7 @@ fn cohort_async_rounds(
                             &mut free_bufs,
                             &mut server_version,
                             t,
+                            rec,
                         )?;
                         queue.push(t, Event::Broadcast);
                     } else if in_flight == 0 && syncing_count == 0 {
@@ -2579,6 +3035,7 @@ fn cohort_async_rounds(
                                 &mut free_bufs,
                                 &mut server_version,
                                 t,
+                                rec,
                             )?;
                         }
                         queue.push(t, Event::Broadcast);
@@ -2632,6 +3089,7 @@ fn cohort_async_rounds(
                                 t,
                                 log.records.len(),
                                 server_version,
+                                rec,
                             )?;
                             busy[next] = true;
                             in_flight += 1;
@@ -2650,6 +3108,9 @@ fn cohort_async_rounds(
                 slots[i].syncing = false;
                 syncing_count -= 1;
                 let client = slots[i].client;
+                if rec.on() {
+                    rec.push(Ev::new("sync_confirm", t).client(client));
+                }
                 let dev = slots[i].dev.take().expect("syncing slot has a device");
                 pop.demobilize(dev.into_parts(), true);
                 busy[client] = false;
@@ -2666,6 +3127,7 @@ fn cohort_async_rounds(
                             t,
                             log.records.len(),
                             server_version,
+                            rec,
                         )?;
                         busy[next] = true;
                         in_flight += 1;
@@ -2696,16 +3158,17 @@ fn cohort_async_rounds(
                         &mut free_bufs,
                         &mut server_version,
                         t,
+                        rec,
                     )?;
                     queue.push(t, Event::Broadcast);
                 }
             }
-            Event::LayerArrived { .. }
+            ev @ (Event::LayerArrived { .. }
             | Event::DownlinkLayerArrived { .. }
-            | Event::BackhaulArrived { .. } => {
+            | Event::BackhaulArrived { .. }) => {
                 unreachable!(
-                    "cohort engine completes transfers via UploadDone/SyncConfirmed \
-                     (edge backhaul is accounting-only here)"
+                    "cohort engine got {ev} at t={t}: transfers complete via \
+                     UploadDone/SyncConfirmed (edge backhaul is accounting-only here)"
                 )
             }
         }

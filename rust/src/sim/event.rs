@@ -77,6 +77,41 @@ impl Event {
             Event::FadingTick | Event::Broadcast | Event::BackhaulArrived { .. } => None,
         }
     }
+
+    /// Stable snake_case kind label, matching the trace-schema vocabulary
+    /// — shared by the recorder, debug logging, and engine diagnostics.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Event::FadingTick => "fading_tick",
+            Event::ComputeDone { .. } => "compute_done",
+            Event::LayerArrived { .. } => "layer_arrived",
+            Event::UploadDone { .. } => "upload_done",
+            Event::Broadcast => "broadcast",
+            Event::DownlinkLayerArrived { .. } => "downlink_layer_arrived",
+            Event::BackhaulArrived { .. } => "backhaul_arrived",
+            Event::SyncConfirmed { .. } => "sync_confirmed",
+        }
+    }
+}
+
+impl std::fmt::Display for Event {
+    /// Compact one-token form: the kind label plus the identifying keys
+    /// (`compute_done[dev=3]`, `backhaul_arrived[zone=1,flush=7]`).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            Event::FadingTick | Event::Broadcast => write!(f, "{}", self.label()),
+            Event::ComputeDone { device }
+            | Event::UploadDone { device }
+            | Event::SyncConfirmed { device } => write!(f, "{}[dev={device}]", self.label()),
+            Event::LayerArrived { device, channel, layer }
+            | Event::DownlinkLayerArrived { device, channel, layer } => {
+                write!(f, "{}[dev={device},ch={channel},layer={layer}]", self.label())
+            }
+            Event::BackhaulArrived { zone, flush } => {
+                write!(f, "{}[zone={zone},flush={flush}]", self.label())
+            }
+        }
+    }
 }
 
 /// A heap entry: an [`Event`] at a virtual time, with an insertion sequence
@@ -313,6 +348,21 @@ mod tests {
                 assert_eq!(a.1, b.1, "event at pop {i}, {shards} shards");
             }
         }
+    }
+
+    #[test]
+    fn display_labels_are_compact_and_stable() {
+        assert_eq!(Event::FadingTick.to_string(), "fading_tick");
+        assert_eq!(Event::ComputeDone { device: 3 }.to_string(), "compute_done[dev=3]");
+        assert_eq!(
+            Event::LayerArrived { device: 2, channel: 1, layer: 0 }.to_string(),
+            "layer_arrived[dev=2,ch=1,layer=0]"
+        );
+        assert_eq!(
+            Event::BackhaulArrived { zone: 1, flush: 7 }.to_string(),
+            "backhaul_arrived[zone=1,flush=7]"
+        );
+        assert_eq!(Event::Broadcast.label(), "broadcast");
     }
 
     #[test]

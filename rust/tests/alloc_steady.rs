@@ -132,4 +132,17 @@ fn steady_state_allocations_are_population_independent() {
         "warm eval rounds must not allocate: \
          {small} allocs/round without eval vs {with_eval} with eval every round"
     );
+
+    // Observability seam contract: with the recorder at its default (off),
+    // the trace instrumentation must be allocation-invisible — the warm
+    // per-round count with the `trace`/`profile` config keys explicitly
+    // false is the same measurement as above, so it must match exactly.
+    // (A single stray emission site that formats or buffers when disabled
+    // would show up here as extra allocs on every round.)
+    let trace_off = marginal_allocs_per_round(64, EVAL_OFF);
+    assert_eq!(
+        trace_off, small,
+        "trace-off steady-state rounds must allocate exactly as before the \
+         recorder existed: {small} baseline vs {trace_off} re-measured"
+    );
 }

@@ -1,0 +1,209 @@
+//! Telemetry integration tests: trace determinism (two seeded runs emit
+//! byte-identical JSONL), the attribution-sums property (per-round
+//! components tile the round time exactly), and the trace-off contract
+//! (attribution columns stay live, trace buffer stays empty).
+
+use lgc::config::{ExperimentConfig, Mechanism, Workload};
+use lgc::coordinator::{Experiment, NativeLrTrainer};
+use lgc::obs::{report, Recorder};
+use lgc::population::SamplerKind;
+use lgc::scenario::ScenarioRegistry;
+use lgc::sim::SyncMode;
+
+fn base_cfg(rounds: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        mechanism: Mechanism::LgcStatic,
+        workload: Workload::LrMnist,
+        rounds,
+        devices: 3,
+        samples_per_device: 256,
+        eval_samples: 256,
+        eval_every: 3,
+        lr: 0.05,
+        h_fixed: 2,
+        h_max: 4,
+        use_runtime: false,
+        ..ExperimentConfig::default()
+    }
+}
+
+/// Run with an in-memory trace buffer; return (trace JSONL, run log).
+fn traced_run(cfg: ExperimentConfig) -> (String, lgc::metrics::RunLog) {
+    let mut trainer = NativeLrTrainer::new(&cfg);
+    let mut exp = Experiment::new(cfg, &trainer);
+    exp.recorder = Recorder::to_buffer();
+    let log = exp.run(&mut trainer).unwrap();
+    (exp.recorder.buffer().to_string(), log)
+}
+
+/// Every trace kind an engine may emit — the schema vocabulary, mirrored
+/// by `python/trace_check.py`.
+const KINDS: &[&str] = &[
+    "compute_start",
+    "compute_done",
+    "uplink_arrive",
+    "uplink_drop",
+    "backhaul_enqueue",
+    "backhaul_arrive",
+    "edge_fold",
+    "downlink_arrive",
+    "sync_confirm",
+    "aggregate",
+    "handoff",
+    "migrate",
+    "churn_drop",
+    "client_offline",
+    "round",
+];
+
+fn assert_schema(buf: &str, label: &str) {
+    let recs = report::parse(buf).unwrap_or_else(|e| panic!("{label}: {e}"));
+    assert!(!recs.is_empty(), "{label}: empty trace");
+    for r in &recs {
+        assert!(
+            KINDS.contains(&r.kind.as_str()),
+            "{label}: unknown kind `{}`",
+            r.kind
+        );
+        assert!(r.t.is_finite() && r.t >= 0.0, "{label}: bad t {}", r.t);
+    }
+}
+
+/// Acceptance criterion: a seeded run with tracing on emits a byte-identical
+/// JSONL trace when replayed — across the barrier engine, the legacy
+/// semi-async engine, and a population cohort engine.
+#[test]
+fn seeded_runs_emit_byte_identical_traces() {
+    let configs: Vec<(&str, Box<dyn Fn() -> ExperimentConfig>)> = vec![
+        ("barrier", Box::new(|| base_cfg(8))),
+        (
+            "semi-async",
+            Box::new(|| {
+                let mut cfg = base_cfg(8);
+                cfg.sync_mode = Some(SyncMode::SemiAsync { buffer_k: 2 });
+                cfg
+            }),
+        ),
+        (
+            "cohort-semi-async",
+            Box::new(|| {
+                let mut cfg = base_cfg(8);
+                cfg.population = Some(cfg.devices);
+                cfg.cohort = Some(cfg.devices);
+                cfg.sampler = Some(SamplerKind::Full);
+                cfg.sync_mode = Some(SyncMode::SemiAsync { buffer_k: 2 });
+                cfg
+            }),
+        ),
+    ];
+    for (label, make) in &configs {
+        let (buf1, log1) = traced_run(make());
+        let (buf2, log2) = traced_run(make());
+        assert!(!buf1.is_empty(), "{label}: trace must not be empty");
+        assert_eq!(buf1, buf2, "{label}: traces must be byte-identical");
+        assert_eq!(log1.records.len(), log2.records.len(), "{label}");
+        assert_schema(&buf1, label);
+        // One round record per RunLog record, in round order.
+        let rounds: Vec<_> = report::parse(&buf1)
+            .unwrap()
+            .into_iter()
+            .filter(|r| r.kind == "round")
+            .collect();
+        assert_eq!(rounds.len(), log1.records.len(), "{label}: round records");
+        for (i, r) in rounds.iter().enumerate() {
+            assert_eq!(r.round, i as i64, "{label}: round order");
+        }
+    }
+}
+
+/// Acceptance criterion (the attribution-sums property): on the stadium
+/// flash-crowd and rural-3g presets, every round record's components
+/// (compute + uplink + backhaul + downlink + wait) sum to its round time
+/// within 1e-9 — i.e. the report attributes 100% of simulated time.
+#[test]
+fn attribution_components_sum_to_round_time() {
+    let presets: Vec<(&str, Box<dyn Fn() -> ExperimentConfig>)> = vec![
+        (
+            "stadium-flash-crowd/semi-async",
+            Box::new(|| {
+                let mut cfg = base_cfg(40);
+                cfg.scenario = Some(ScenarioRegistry::resolve("stadium-flash-crowd").unwrap());
+                cfg.sync_mode = Some(SyncMode::SemiAsync { buffer_k: 2 });
+                cfg
+            }),
+        ),
+        (
+            "rural-3g/barrier",
+            Box::new(|| {
+                let mut cfg = base_cfg(14);
+                cfg.scenario = Some(ScenarioRegistry::resolve("rural-3g").unwrap());
+                cfg
+            }),
+        ),
+    ];
+    for (label, make) in &presets {
+        let (buf, log) = traced_run(make());
+        let rounds: Vec<_> = report::parse(&buf)
+            .unwrap()
+            .into_iter()
+            .filter(|r| r.kind == "round")
+            .collect();
+        assert_eq!(rounds.len(), log.records.len(), "{label}");
+        for r in &rounds {
+            let parts = [r.compute, r.uplink, r.backhaul, r.downlink, r.wait];
+            assert!(
+                parts.iter().all(|v| v.is_finite() && *v >= 0.0),
+                "{label} round {}: non-finite/negative component {parts:?}",
+                r.round
+            );
+            let sum: f64 = parts.iter().sum();
+            assert!(
+                (sum - r.dur).abs() <= 1e-9,
+                "{label} round {}: components sum {sum} != round time {}",
+                r.round,
+                r.dur
+            );
+        }
+        // The trace's verdict matches the RunLog columns.
+        for (rec, row) in rounds.iter().zip(&log.records) {
+            assert_eq!(rec.bound, row.bound_by, "{label} round {}", rec.round);
+            assert_eq!(rec.crit_client, row.crit_client, "{label}");
+            assert_eq!(rec.crit_channel, row.crit_channel, "{label}");
+        }
+    }
+}
+
+/// With tracing off (the default), the recorder buffers nothing — but the
+/// in-process attribution columns still fill, so `lgc train` summaries and
+/// CSVs carry bound_by/crit_client without any trace cost.
+#[test]
+fn trace_off_keeps_attribution_columns_live() {
+    let cfg = base_cfg(8);
+    let mut trainer = NativeLrTrainer::new(&cfg);
+    let mut exp = Experiment::new(cfg, &trainer);
+    assert!(!exp.recorder.on(), "trace must default off");
+    let log = exp.run(&mut trainer).unwrap();
+    assert_eq!(exp.recorder.events(), 0);
+    assert!(exp.recorder.buffer().is_empty());
+    for r in &log.records {
+        assert!(!r.bound_by.is_empty(), "round {}: bound_by unset", r.round);
+        assert!(r.crit_client >= 0, "round {}: crit_client unset", r.round);
+    }
+}
+
+/// The report renderer runs end-to-end on a real engine trace and the
+/// Chrome export stays structurally sound.
+#[test]
+fn report_renders_engine_trace_end_to_end() {
+    let mut cfg = base_cfg(10);
+    cfg.sync_mode = Some(SyncMode::SemiAsync { buffer_k: 2 });
+    let (buf, _) = traced_run(cfg);
+    let trace = report::parse(&buf).unwrap();
+    let text = report::render(&trace, 3);
+    assert!(text.contains("round-time attribution"), "{text}");
+    assert!(text.contains("attributed: 100.00%"), "{text}");
+    assert!(text.contains("channel utilization"), "{text}");
+    let chrome = report::chrome_export(&trace);
+    assert!(chrome.starts_with("{\"traceEvents\":[\n"));
+    assert!(chrome.trim_end().ends_with("]}"));
+}
